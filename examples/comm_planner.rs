@@ -1,0 +1,100 @@
+//! Communication-plan analyzer: for a chosen dataset, show what each
+//! strategy would transfer — per-strategy totals, the MWVC statistics per
+//! off-diagonal block, the Fig. 5 pattern taxonomy, and an ASCII heatmap of
+//! the per-rank-pair volumes (Fig. 9 style).
+//!
+//!     cargo run --release --example comm_planner -- --dataset mawi --ranks 16
+
+use shiro::comm::{self, Strategy};
+use shiro::cover::{self, Solver, Weights};
+use shiro::metrics::{reduction_pct, Table};
+use shiro::partition::{split_1d, RowPartition};
+use shiro::sparse::{dataset_by_name, gen};
+use shiro::topology::Topology;
+use shiro::util::{cli::Args, human_bytes};
+
+fn main() {
+    let args = Args::from_env();
+    let name = args.get_or("dataset", "mawi");
+    let ranks = args.get_usize("ranks", 16);
+    let n_dense = args.get_usize("n", 32);
+    let scale = args.get_f64("scale", 0.05);
+
+    // Fig. 5 didactic patterns first.
+    println!("Fig. 5 pattern taxonomy (per off-diagonal block):");
+    let mut t = Table::new(&["pattern", "|Rows|", "|Cols|", "mu", "reduction%"]);
+    for (pname, m) in gen::fig5_patterns() {
+        let sol = cover::solve(&m, Solver::Koenig, &Weights::default());
+        let single = m.nonempty_rows().len().min(m.nonempty_cols().len());
+        t.row(vec![
+            pname.to_string(),
+            m.nonempty_rows().len().to_string(),
+            m.nonempty_cols().len().to_string(),
+            sol.mu().to_string(),
+            format!("{:.0}", reduction_pct(single as u64, sol.mu() as u64)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let spec = dataset_by_name(&name).unwrap_or_else(|| {
+        eprintln!("unknown dataset {name}; try `shiro datasets`");
+        std::process::exit(1);
+    });
+    let a = spec.generate(scale);
+    println!(
+        "dataset {} (analog of {} rows / {} nnz): {}x{} nnz={}",
+        spec.name, spec.paper_rows, spec.paper_nnz, a.nrows, a.ncols, a.nnz()
+    );
+
+    let part = RowPartition::balanced(a.nrows, ranks);
+    let blocks = split_1d(&a, &part);
+
+    let mut t = Table::new(&["strategy", "volume", "vs column", "imbalance", "asymmetry"]);
+    let mut col_vol = 0u64;
+    for strategy in [
+        Strategy::Block,
+        Strategy::Column,
+        Strategy::Row,
+        Strategy::Joint(Solver::Greedy),
+        Strategy::Joint(Solver::Koenig),
+    ] {
+        let plan = comm::plan(&blocks, &part, strategy, None);
+        let vol = plan.total_volume(n_dense);
+        if strategy == Strategy::Column {
+            col_vol = vol;
+        }
+        let m = plan.volume_matrix(n_dense);
+        t.row(vec![
+            strategy.name().to_string(),
+            human_bytes(vol as f64),
+            if col_vol > 0 {
+                format!("{:+.1}%", -reduction_pct(col_vol, vol))
+            } else {
+                "-".into()
+            },
+            format!("{:.2}", m.imbalance()),
+            format!("{:.3}", m.asymmetry()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // Heatmaps before/after (Fig. 9).
+    let col_plan = comm::plan(&blocks, &part, Strategy::Column, None);
+    let joint_plan = comm::plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None);
+    println!("per-pair volume heatmap, column-based (src rows × dst cols):");
+    println!("{}", col_plan.volume_matrix(n_dense).to_ascii());
+    println!("per-pair volume heatmap, joint row-column:");
+    println!("{}", joint_plan.volume_matrix(n_dense).to_ascii());
+
+    // Hierarchical inter-node savings on TSUBAME.
+    let topo = Topology::tsubame4(ranks);
+    let sched = shiro::hierarchy::build(&joint_plan, &topo);
+    let flat = shiro::hierarchy::flat_inter_group_bytes(&joint_plan, &topo, n_dense);
+    let hier = sched.inter_group_bytes(n_dense);
+    println!(
+        "inter-node volume: flat {} → hierarchical {} ({:.1}% reduction)",
+        human_bytes(flat as f64),
+        human_bytes(hier as f64),
+        reduction_pct(flat, hier)
+    );
+}

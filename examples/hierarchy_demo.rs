@@ -1,0 +1,60 @@
+//! Hierarchical-communication demo (paper §6): show the two-stage
+//! complementary overlap on a deep hierarchy (TSUBAME: 72× bandwidth
+//! cliff) vs a shallow one (Aurora: ~0.9×), reproducing the Fig. 12
+//! finding that hierarchy-awareness only pays off past a bandwidth cliff.
+//!
+//!     cargo run --release --example hierarchy_demo -- --ranks 24
+
+use shiro::comm::Strategy;
+use shiro::cover::Solver;
+use shiro::metrics::Table;
+use shiro::sparse::gen;
+use shiro::spmm::DistSpmm;
+use shiro::topology::Topology;
+use shiro::util::{cli::Args, human_bytes, human_secs};
+
+fn main() {
+    let args = Args::from_env();
+    let ranks = args.get_usize("ranks", 24);
+    let n_dense = args.get_usize("n", 64);
+
+    let a = gen::rmat(1 << 13, (1 << 13) * 12, (0.55, 0.2, 0.19), false, 9);
+    println!("matrix: {}x{} nnz={}\n", a.nrows, a.ncols, a.nnz());
+
+    let mut t = Table::new(&[
+        "topology", "cliff", "schedule", "inter bytes", "time/SpMM", "speedup",
+    ]);
+    for topo in [Topology::tsubame4(ranks), Topology::aurora(ranks)] {
+        let mut flat_time = 0.0;
+        for hier in [false, true] {
+            let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), topo.clone(), hier);
+            let rep = d.simulate(n_dense);
+            if !hier {
+                flat_time = rep.total;
+            }
+            t.row(vec![
+                topo.name.clone(),
+                format!("{:.1}x", topo.bandwidth_cliff()),
+                if hier { "hierarchical".into() } else { "flat".into() },
+                human_bytes(rep.inter_bytes as f64),
+                human_secs(rep.total),
+                format!("{:.2}x", flat_time / rep.total),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "Shape check (paper §7.7): hierarchy wins on tsubame4 (deep cliff), \n\
+         and is neutral-to-negative on aurora (shallow cliff) — the flat\n\
+         joint schedule already saturates Aurora's balanced links."
+    );
+
+    // Stage-level breakdown on TSUBAME: the complementary overlap.
+    let topo = Topology::tsubame4(ranks);
+    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), topo, true);
+    let rep = d.simulate(n_dense);
+    println!("TSUBAME stage breakdown (Alg. 1 overlap):");
+    for (name, secs) in &rep.per_stage {
+        println!("  {name:<40} {}", human_secs(*secs));
+    }
+}

@@ -1,0 +1,124 @@
+"""AOT bridge: lower the L2 jax functions to HLO *text* artifacts.
+
+HLO text (NOT `lowered.compile()`/`.serialize()`) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the Rust side's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+
+Emits one .hlo.txt per (function, shape variant) plus manifest.txt mapping
+artifact names to shapes for the Rust runtime's loader.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Shape variants exported for the Rust runtime. Keep in sync with
+# rust/src/runtime/mod.rs (the loader reads manifest.txt, so adding a
+# variant here is enough).
+#
+# spmm_ell variants: (M, KMAX, K, N) — M = padded block rows, K = B rows.
+SPMM_VARIANTS = [
+    (512, 16, 512, 32),
+    (512, 16, 512, 64),
+    (512, 16, 512, 128),
+    (256, 16, 256, 32),
+    (128, 8, 128, 32),
+]
+# gcn dense variants: (M, F, H) — h_agg f32[M,F], w f32[F,H].
+GCN_VARIANTS = [
+    (512, 32, 32),
+    (512, 64, 64),
+]
+# mse variants: (M, H).
+MSE_VARIANTS = [
+    (512, 32),
+    (512, 64),
+]
+# fused GCN layer variants: (M, KMAX, K, N, H).
+FUSED_VARIANTS = [
+    (512, 16, 512, 32, 32),
+]
+
+
+def to_hlo_text(fn, *specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = []
+
+    def emit(name, fn, *specs):
+        text = to_hlo_text(fn, *specs)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        shapes = ";".join(
+            f"{s.dtype}[{','.join(str(d) for d in s.shape)}]" for s in specs
+        )
+        manifest.append(f"{name} {shapes}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for m, kmax, k, n in SPMM_VARIANTS:
+        emit(
+            f"spmm_ell_m{m}_x{kmax}_k{k}_n{n}",
+            model.spmm_block,
+            i32(m, kmax),
+            f32(m, kmax),
+            f32(k, n),
+        )
+    for m, f, h in GCN_VARIANTS:
+        emit(f"gcn_fwd_m{m}_f{f}_h{h}", model.gcn_dense_fwd, f32(m, f), f32(f, h))
+        emit(
+            f"gcn_bwd_m{m}_f{f}_h{h}",
+            model.gcn_dense_bwd,
+            f32(m, f),
+            f32(f, h),
+            f32(m, h),
+            f32(m, h),
+        )
+    for m, h in MSE_VARIANTS:
+        emit(f"mse_m{m}_h{h}", model.mse_loss_grad, f32(m, h), f32(m, h))
+    from compile.kernels.gcn_fused import gcn_fused as fused
+    for m, kmax, k, n, h in FUSED_VARIANTS:
+        emit(
+            f"gcn_fused_m{m}_x{kmax}_k{k}_n{n}_h{h}",
+            lambda idx, val, b, w: fused(idx, val, b, w),
+            i32(m, kmax),
+            f32(m, kmax),
+            f32(k, n),
+            f32(n, h),
+        )
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: tiled dense matmul (the GCN weight multiply).
+
+Unlike the sparse gather in spmm_ell.py, this kernel is MXU-shaped: each
+grid step contracts a (BM, BK) × (BK, BN) pair into a (BM, BN) VMEM
+accumulator — the direct analogue of the paper's cuBLAS/tensor-core path,
+retargeted at the systolic array (DESIGN.md §2 Hardware adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    """Grid (i, j, k): accumulate a[i,k] @ b[k,j] into o[i,j]."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def dense_mm(a, b, bm=128, bk=128, bn=128):
+    """C = A @ B with (bm, bk, bn) tiling. Dimensions must divide evenly;
+    callers pad (the AOT variants are generated pre-padded)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    bm = min(bm, m)
+    bk = min(bk, k)
+    bn = min(bn, n)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

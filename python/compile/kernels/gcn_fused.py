@@ -1,0 +1,70 @@
+"""L1 extension: fused GCN layer kernel — ELL-SpMM + weight matmul + ReLU in
+one Pallas call.
+
+The unfused pipeline (spmm_ell → dense_mm → relu) writes the aggregated
+features (M×N) to HBM and reads them back twice. Fusing keeps the (BM, N)
+aggregation tile in VMEM and feeds it straight into the MXU matmul with W —
+the on-TPU analogue of the kernel fusion CoLa does on GPUs ("computational
+optimizations", paper §7.2). VMEM per grid step (BM=128, KMAX=16, K=512,
+N=32, H=32): panes 16 KiB + B 64 KiB + W 4 KiB + acc/out 32 KiB ≈ 116 KiB.
+
+interpret=True as everywhere (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_kernel(idx_ref, val_ref, b_ref, w_ref, z_ref, h_ref, *, kmax):
+    bm = z_ref.shape[0]
+    n = b_ref.shape[1]
+    agg = jnp.zeros((bm, n), dtype=jnp.float32)
+    for k in range(kmax):
+        rows = idx_ref[:, k]
+        agg = agg + val_ref[:, k][:, None] * b_ref[rows, :]
+    z = jnp.dot(agg, w_ref[...], preferred_element_type=jnp.float32)
+    z_ref[...] = z
+    h_ref[...] = jnp.maximum(z, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def gcn_fused(idx, val, b, w, bm=128):
+    """(z, h) = (ELL(idx,val)·b)·w, relu(z) — one kernel, no HBM round trip
+    for the aggregated features."""
+    m, kmax = idx.shape
+    k_rows, n = b.shape
+    n2, h = w.shape
+    assert n == n2
+    bm = min(bm, m)
+    assert m % bm == 0
+    grid = (m // bm,)
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, kmax=kmax),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kmax), lambda i: (i, 0)),
+            pl.BlockSpec((bm, kmax), lambda i: (i, 0)),
+            pl.BlockSpec((k_rows, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, h), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, h), lambda i: (i, 0)),
+            pl.BlockSpec((bm, h), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, h), jnp.float32),
+            jax.ShapeDtypeStruct((m, h), jnp.float32),
+        ],
+        interpret=True,
+    )(idx, val, b, w)
+
+
+def gcn_fused_ref(idx, val, b, w):
+    """Oracle: unfused composition."""
+    gathered = b[idx]
+    agg = jnp.einsum("mk,mkn->mn", val, gathered)
+    z = agg @ w
+    return z, jnp.maximum(z, 0.0)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness reference).
+
+Every kernel in this package must match its `*_ref` here to float32
+tolerance under pytest (python/tests/) before it is AOT-exported.
+"""
+
+import jax.numpy as jnp
+
+
+def ell_spmm_ref(idx, val, b):
+    """Blocked-ELL SpMM reference: out[m, :] = sum_k val[m, k] * b[idx[m, k], :].
+
+    idx: i32[M, KMAX] column indices into b's rows (padded slots may point
+         anywhere as long as the matching val is 0).
+    val: f32[M, KMAX] values (0 at padded slots).
+    b:   f32[K, N] dense operand.
+    """
+    gathered = b[idx]  # [M, KMAX, N]
+    return jnp.einsum("mk,mkn->mn", val, gathered)
+
+
+def dense_mm_ref(a, b):
+    """Dense matmul reference."""
+    return a @ b
+
+
+def gcn_dense_fwd_ref(h_agg, w):
+    """GCN dense half forward: z = h_agg @ w, h = relu(z)."""
+    z = h_agg @ w
+    return z, jnp.maximum(z, 0.0)
+
+
+def gcn_dense_bwd_ref(h_agg, w, z, dh):
+    """GCN dense half backward.
+
+    Returns (d_h_agg, d_w) where dz = dh * relu'(z).
+    """
+    dz = dh * (z > 0.0).astype(dh.dtype)
+    d_h_agg = dz @ w.T
+    d_w = h_agg.T @ dz
+    return d_h_agg, d_w

@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: blocked-ELL SpMM (the paper's per-GPU compute hot spot).
+
+Hardware adaptation (DESIGN.md §2): the paper's cuSPARSE CSR kernel assigns a
+warp per row and stages B tiles in shared memory. On TPU-style hardware we
+instead tile the *output* into (BM, N) VMEM blocks via BlockSpec; each grid
+step loads a (BM, KMAX) pane of ELL indices/values plus the B operand and
+performs KMAX vectorized rank-1 gather-accumulates on the VPU (the sparse
+gather has no MXU shape, unlike the dense GCN matmul in dense_mm.py).
+
+VMEM working set per grid step (f32):
+    BM*KMAX*(4+4) [idx+val] + BM*N*4 [acc] + K*N*4 [B operand]
+— B dominates; for the exported variants (K<=1024, N<=128) this stays under
+1 MiB, far below the ~16 MiB VMEM budget, leaving room to scale BM.
+
+interpret=True always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is *estimated* in DESIGN.md §6.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step. 128 keeps the idx/val panes register-friendly while
+# amortizing the per-step B load.
+DEFAULT_BM = 128
+
+
+def _ell_kernel(idx_ref, val_ref, b_ref, o_ref, *, kmax):
+    """One (BM, N) output tile: KMAX gather-accumulate steps."""
+    bm = o_ref.shape[0]
+    n = o_ref.shape[1]
+    acc = jnp.zeros((bm, n), dtype=jnp.float32)
+    # KMAX is a compile-time constant: unrolled vector steps, no dynamic
+    # control flow inside the kernel.
+    for k in range(kmax):
+        rows = idx_ref[:, k]            # i32[BM]
+        coeff = val_ref[:, k][:, None]  # f32[BM, 1]
+        acc = acc + coeff * b_ref[rows, :]
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def ell_spmm(idx, val, b, bm=DEFAULT_BM):
+    """Blocked-ELL SpMM via Pallas: out[m] = Σ_k val[m,k] · b[idx[m,k]].
+
+    idx: i32[M, KMAX] (M divisible by bm; pad rows with val=0 slots).
+    val: f32[M, KMAX].
+    b:   f32[K, N].
+    """
+    m, kmax = idx.shape
+    k_rows, n = b.shape
+    bm = min(bm, m)
+    assert m % bm == 0, f"M={m} not divisible by BM={bm}"
+    grid = (m // bm,)
+    return pl.pallas_call(
+        functools.partial(_ell_kernel, kmax=kmax),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kmax), lambda i: (i, 0)),
+            pl.BlockSpec((bm, kmax), lambda i: (i, 0)),
+            # B is resident for every grid step (no blocking): the paper's
+            # "stage B in shared memory" becomes "hold B in VMEM".
+            pl.BlockSpec((k_rows, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(idx, val, b)
+
+
+def csr_to_ell(indptr, indices, data, kmax, m_pad=None):
+    """Host-side helper: pack CSR arrays into (idx, val) ELL panes.
+
+    Rows with more than `kmax` nonzeros spill into additional slabs; the
+    caller sums the slab outputs. Returns a list of (idx, val) pairs.
+    Used by tests; the Rust runtime has its own packer (runtime/ell.rs).
+    """
+    import numpy as np
+
+    m = len(indptr) - 1
+    m_out = m_pad or m
+    slabs = []
+    remaining = [(int(indptr[r]), int(indptr[r + 1])) for r in range(m)]
+    while True:
+        idx = np.zeros((m_out, kmax), dtype=np.int32)
+        val = np.zeros((m_out, kmax), dtype=np.float32)
+        any_left = False
+        for r in range(m):
+            lo, hi = remaining[r]
+            take = min(kmax, hi - lo)
+            if take > 0:
+                idx[r, :take] = indices[lo : lo + take]
+                val[r, :take] = data[lo : lo + take]
+                remaining[r] = (lo + take, hi)
+                if lo + take < hi:
+                    any_left = True
+        slabs.append((idx, val))
+        if not any_left:
+            return slabs

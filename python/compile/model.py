@@ -1,0 +1,51 @@
+"""L2: the JAX compute graphs AOT-exported for the Rust runtime.
+
+Each function here is a pure jax function (calling the L1 Pallas kernels)
+that `aot.py` lowers to HLO text. The Rust coordinator (L3) composes them:
+the distributed SpMM engine invokes `spmm_block` per local block, and the
+GNN case study invokes the GCN dense halves around it.
+
+Python never runs at serving/training time — these graphs are compiled once
+by `make artifacts`.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.dense_mm import dense_mm
+from compile.kernels.spmm_ell import ell_spmm
+
+
+def spmm_block(idx, val, b):
+    """One local SpMM: blocked-ELL sparse block times dense B block.
+
+    Returned as a 1-tuple (the AOT bridge lowers with return_tuple=True).
+    """
+    return (ell_spmm(idx, val, b),)
+
+
+def gcn_dense_fwd(h_agg, w):
+    """GCN layer dense half, forward: z = h_agg @ w (Pallas MXU matmul),
+    h = relu(z). Returns (z, h) — z is cached for the backward pass."""
+    z = dense_mm(h_agg, w)
+    h = jnp.maximum(z, 0.0)
+    return (z, h)
+
+
+def gcn_dense_bwd(h_agg, w, z, dh):
+    """GCN layer dense half, backward: given upstream dh and the cached
+    pre-activation z, produce (d_h_agg, d_w). The surrounding sparse
+    gradient propagation (A^T · d_h_agg) is another distributed SpMM handled
+    by L3 with the same communication-plan machinery."""
+    dz = dh * (z > 0.0).astype(dh.dtype)
+    d_h_agg = dense_mm(dz, w.T)
+    d_w = dense_mm(h_agg.T, dz)
+    return (d_h_agg, d_w)
+
+
+def mse_loss_grad(pred, target):
+    """Mean-squared-error loss and its gradient wrt pred."""
+    diff = pred - target
+    n = jnp.float32(diff.size)
+    loss = jnp.sum(diff * diff) / n
+    grad = 2.0 * diff / n
+    return (jnp.reshape(loss, (1,)), grad)

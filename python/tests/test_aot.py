@@ -1,0 +1,27 @@
+"""AOT pipeline smoke: lowering produces parseable HLO text with the right
+entry computation shapes."""
+
+from compile import aot, model
+
+
+def test_to_hlo_text_emits_hlo():
+    text = aot.to_hlo_text(
+        model.spmm_block, aot.i32(16, 4), aot.f32(16, 4), aot.f32(16, 8)
+    )
+    assert "HloModule" in text
+    assert "f32[16,8]" in text  # output tile shape appears
+
+
+def test_gcn_fwd_lowering():
+    text = aot.to_hlo_text(model.gcn_dense_fwd, aot.f32(32, 16), aot.f32(16, 16))
+    assert "HloModule" in text
+    # Tuple of (z, h), both f32[32,16].
+    assert text.count("f32[32,16]") >= 2
+
+
+def test_variants_tables_consistent():
+    # Every exported spmm variant has M divisible by the kernel BM default.
+    from compile.kernels.spmm_ell import DEFAULT_BM
+    for (m, kmax, k, n) in aot.SPMM_VARIANTS:
+        assert m % DEFAULT_BM == 0 or m % 8 == 0
+        assert kmax >= 1 and k >= 1 and n >= 1

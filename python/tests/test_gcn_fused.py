@@ -1,0 +1,54 @@
+"""Fused GCN kernel vs unfused oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gcn_fused import gcn_fused, gcn_fused_ref
+
+
+def random_case(rng, m, kmax, k, n, h):
+    idx = jnp.asarray(rng.integers(0, k, size=(m, kmax), dtype=np.int32))
+    val = rng.standard_normal((m, kmax), dtype=np.float32)
+    val[rng.random((m, kmax)) < 0.3] = 0.0
+    b = jnp.asarray(rng.standard_normal((k, n), dtype=np.float32))
+    w = jnp.asarray(rng.standard_normal((n, h), dtype=np.float32))
+    return idx, jnp.asarray(val), b, w
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    mb=st.integers(1, 3),
+    kmax=st.integers(1, 8),
+    k=st.integers(1, 64),
+    n=st.integers(1, 24),
+    h=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_matches_ref(mb, kmax, k, n, h, seed):
+    rng = np.random.default_rng(seed)
+    m = mb * 8
+    idx, val, b, w = random_case(rng, m, kmax, k, n, h)
+    z, out = gcn_fused(idx, val, b, w, bm=8)
+    zr, outr = gcn_fused_ref(idx, val, b, w)
+    np.testing.assert_allclose(z, zr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(out, outr, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_aot_variant_shape():
+    rng = np.random.default_rng(1)
+    idx, val, b, w = random_case(rng, 512, 16, 512, 32, 32)
+    z, out = gcn_fused(idx, val, b, w)
+    assert z.shape == (512, 32)
+    assert float(jnp.min(out)) >= 0.0
+
+
+def test_fused_relu_boundary():
+    # All-negative weights: relu output must be exactly zero where z < 0.
+    idx = jnp.zeros((8, 2), dtype=jnp.int32)
+    val = jnp.ones((8, 2), dtype=jnp.float32)
+    b = jnp.ones((4, 3), dtype=jnp.float32)
+    w = -jnp.ones((3, 5), dtype=jnp.float32)
+    z, out = gcn_fused(idx, val, b, w, bm=8)
+    assert float(jnp.max(out)) == 0.0
+    assert float(jnp.max(z)) < 0.0

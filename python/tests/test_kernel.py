@@ -1,0 +1,126 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracle.
+
+This is the CORE correctness signal for the compute layer — hypothesis
+sweeps shapes; fixed cases pin the AOT-exported variants.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.dense_mm import dense_mm
+from compile.kernels.ref import dense_mm_ref, ell_spmm_ref
+from compile.kernels.spmm_ell import csr_to_ell, ell_spmm
+
+
+def random_ell(rng, m, kmax, k):
+    """Random ELL panes with ~30% padded slots (val = 0)."""
+    idx = rng.integers(0, k, size=(m, kmax), dtype=np.int32)
+    val = rng.standard_normal((m, kmax), dtype=np.float32)
+    mask = rng.random((m, kmax)) < 0.3
+    val[mask] = 0.0
+    return jnp.asarray(idx), jnp.asarray(val)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mb=st.integers(1, 4),      # M = mb * bm
+    kmax=st.integers(1, 12),
+    k=st.integers(1, 96),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ell_spmm_matches_ref(mb, kmax, k, n, seed):
+    rng = np.random.default_rng(seed)
+    bm = 8
+    m = mb * bm
+    idx, val = random_ell(rng, m, kmax, k)
+    b = jnp.asarray(rng.standard_normal((k, n), dtype=np.float32))
+    got = ell_spmm(idx, val, b, bm=bm)
+    want = ell_spmm_ref(idx, val, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,kmax,k,n", [(512, 16, 512, 32), (256, 16, 256, 32), (128, 8, 128, 32)])
+def test_ell_spmm_aot_variants(m, kmax, k, n):
+    """The exact shapes exported by aot.py."""
+    rng = np.random.default_rng(7)
+    idx, val = random_ell(rng, m, kmax, k)
+    b = jnp.asarray(rng.standard_normal((k, n), dtype=np.float32))
+    got = ell_spmm(idx, val, b)
+    want = ell_spmm_ref(idx, val, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_ell_spmm_zero_vals_zero_out():
+    idx = jnp.zeros((8, 4), dtype=jnp.int32)
+    val = jnp.zeros((8, 4), dtype=jnp.float32)
+    b = jnp.ones((16, 5), dtype=jnp.float32)
+    out = ell_spmm(idx, val, b, bm=8)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+def test_ell_spmm_duplicate_indices_accumulate():
+    # Two slots pointing at the same B row must sum.
+    idx = jnp.asarray([[3, 3]], dtype=jnp.int32).repeat(8, axis=0)
+    val = jnp.asarray([[2.0, 5.0]], dtype=jnp.float32).repeat(8, axis=0)
+    b = jnp.zeros((8, 3), dtype=jnp.float32).at[3].set(1.0)
+    out = ell_spmm(idx, val, b, bm=8)
+    np.testing.assert_allclose(out, np.full((8, 3), 7.0), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    r=st.integers(1, 24),
+    k=st.integers(1, 48),
+    kmax=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_csr_to_ell_roundtrip(r, k, kmax, seed):
+    """CSR → ELL slabs → sum of slab SpMMs == dense reference."""
+    rng = np.random.default_rng(seed)
+    dense = rng.standard_normal((r, k)).astype(np.float32)
+    dense[rng.random((r, k)) < 0.7] = 0.0
+    # Build CSR.
+    indptr = [0]
+    indices, data = [], []
+    for i in range(r):
+        nz = np.nonzero(dense[i])[0]
+        indices.extend(nz.tolist())
+        data.extend(dense[i, nz].tolist())
+        indptr.append(len(indices))
+    m_pad = ((r + 7) // 8) * 8
+    slabs = csr_to_ell(
+        np.asarray(indptr), np.asarray(indices, dtype=np.int32),
+        np.asarray(data, dtype=np.float32), kmax, m_pad=m_pad,
+    )
+    b = rng.standard_normal((k, 6)).astype(np.float32)
+    out = np.zeros((m_pad, 6), dtype=np.float32)
+    for idx, val in slabs:
+        out += np.asarray(ell_spmm(jnp.asarray(idx), jnp.asarray(val), jnp.asarray(b), bm=8))
+    np.testing.assert_allclose(out[:r], dense @ b, rtol=1e-4, atol=1e-4)
+    assert np.abs(out[r:]).max() == 0.0 if m_pad > r else True
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    mi=st.integers(1, 3),
+    ki=st.integers(1, 3),
+    ni=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_mm_matches_ref(mi, ki, ni, seed):
+    rng = np.random.default_rng(seed)
+    bm = bk = bn = 16
+    a = jnp.asarray(rng.standard_normal((mi * bm, ki * bk), dtype=np.float32))
+    b = jnp.asarray(rng.standard_normal((ki * bk, ni * bn), dtype=np.float32))
+    got = dense_mm(a, b, bm=bm, bk=bk, bn=bn)
+    np.testing.assert_allclose(got, dense_mm_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_dense_mm_identity():
+    eye = jnp.eye(32, dtype=jnp.float32)
+    b = jnp.arange(32 * 32, dtype=jnp.float32).reshape(32, 32)
+    got = dense_mm(eye, b, bm=16, bk=16, bn=16)
+    np.testing.assert_allclose(got, b, rtol=1e-6)

@@ -1,0 +1,66 @@
+//! Ablation (related work §8.1): SHIRO composes with matrix reordering —
+//! partitioning/reordering optimizes *which* nonzeros are remote, SHIRO
+//! optimizes *how* the remaining remote nonzeros are served. We measure
+//! joint-plan volume under natural, random, degree, and RCM orderings.
+//! nGPUs=32, N=64.
+
+use shiro::bench::{write_csv, BENCH_SCALE};
+use shiro::comm::{self, Strategy};
+use shiro::cover::Solver;
+use shiro::metrics::Table;
+use shiro::partition::{split_1d, RowPartition};
+use shiro::sparse::{datasets::spmm_datasets, reorder, Csr};
+
+fn volume(a: &Csr, ranks: usize, n_dense: usize) -> u64 {
+    let part = RowPartition::balanced(a.nrows, ranks);
+    let blocks = split_1d(a, &part);
+    comm::plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None).total_volume(n_dense)
+}
+
+fn main() {
+    let ranks = 32;
+    let n_dense = 64;
+    let mut table = Table::new(&[
+        "dataset", "natural (MiB)", "random (MiB)", "degree (MiB)", "RCM (MiB)",
+    ]);
+    let mut csv = String::from("dataset,natural,random,degree,rcm\n");
+    let mib = |b: u64| format!("{:.2}", b as f64 / (1u64 << 20) as f64);
+    // Representative subset (reordering is O(nnz log n) per variant).
+    for spec in spmm_datasets().into_iter().filter(|s| {
+        ["Pokec", "del24", "mawi", "uk-2002", "GAP-web"].contains(&s.name)
+    }) {
+        let a = spec.generate(BENCH_SCALE);
+        let natural = volume(&a, ranks, n_dense);
+        let rand = volume(
+            &reorder::permute_symmetric(&a, &reorder::random_perm(a.nrows, 1)),
+            ranks,
+            n_dense,
+        );
+        let deg = volume(
+            &reorder::permute_symmetric(&a, &reorder::degree_order(&a)),
+            ranks,
+            n_dense,
+        );
+        let rcm = volume(
+            &reorder::permute_symmetric(&a, &reorder::rcm_order(&a)),
+            ranks,
+            n_dense,
+        );
+        table.row(vec![
+            spec.name.into(),
+            mib(natural),
+            mib(rand),
+            mib(deg),
+            mib(rcm),
+        ]);
+        csv.push_str(&format!("{},{natural},{rand},{deg},{rcm}\n", spec.name));
+    }
+    println!("Ablation — joint-plan volume under matrix reorderings\n");
+    println!("{}", table.render());
+    println!(
+        "Expectation: random ≥ natural (destroys locality); RCM ≤ natural on\n\
+         mesh/road matrices (restores locality) — reordering and SHIRO\n\
+         compose, as §8.1 argues."
+    );
+    write_csv("ablation_reorder.csv", &csv);
+}

@@ -1,0 +1,39 @@
+//! Fig. 11 — sensitivity to the dense column count: every dataset × every
+//! system at N = 64 and N = 128 (paper setting), 32 simulated GPUs.
+
+use shiro::baselines::{simulate, System};
+use shiro::bench::{ms, write_csv, ABLATION_RANKS, BENCH_SCALE};
+use shiro::metrics::Table;
+use shiro::sparse::datasets::spmm_datasets;
+use shiro::topology::Topology;
+
+fn main() {
+    let mut csv = String::from("dataset,system,n,seconds\n");
+    for &n_dense in &[64usize, 128] {
+        println!("\n=== N = {n_dense} (nGPUs = {ABLATION_RANKS}) — simulated SpMM ms ===");
+        let mut table = Table::new(&["dataset", "CAGNET", "SPA", "BCL", "CoLa", "SHIRO"]);
+        for spec in spmm_datasets() {
+            let a = spec.generate(BENCH_SCALE);
+            let topo = Topology::tsubame4(ABLATION_RANKS);
+            let mut cells = vec![spec.name.to_string()];
+            for sys in System::all() {
+                let r = simulate(sys, &a, n_dense, &topo);
+                cells.push(ms(r.total));
+                csv.push_str(&format!(
+                    "{},{},{},{:.9}\n",
+                    spec.name,
+                    sys.name(),
+                    n_dense,
+                    r.total
+                ));
+            }
+            table.row(cells);
+        }
+        println!("{}", table.render());
+    }
+    println!(
+        "Paper shape: SHIRO wins on most datasets at both N; times scale\n\
+         ~linearly with N (communication-throughput-bound)."
+    );
+    write_csv("fig11_density.csv", &csv);
+}

@@ -1,0 +1,70 @@
+//! Fig. 12 — portability: the same step-wise ablation on the Aurora
+//! topology (12 tiles/node, shallow bandwidth cliff: 15 GB/s intra vs
+//! ~17 GB/s inter). nGPUs = 24 (paper setting). Expected shape: the joint
+//! strategy still helps; whole-node hierarchical aggregation does NOT
+//! (flat joint ≥ hierarchical), because there is no bandwidth cliff to
+//! amortize the extra packing/collective stages against.
+
+use shiro::bench::{ms, write_csv, BENCH_SCALE};
+use shiro::comm::Strategy;
+use shiro::cover::Solver;
+use shiro::metrics::Table;
+use shiro::sparse::datasets::spmm_datasets;
+use shiro::spmm::DistSpmm;
+use shiro::topology::Topology;
+
+fn main() {
+    let ranks = 24;
+    let n_dense = 64;
+    let mut table = Table::new(&[
+        "dataset",
+        "column (ms)",
+        "+joint (ms)",
+        "+hier (ms)",
+        "joint speedup",
+        "hier vs joint",
+    ]);
+    let mut csv = String::from("dataset,column_ms,joint_ms,hier_ms\n");
+    let mut hier_wins = 0usize;
+    let mut total = 0usize;
+    for spec in spmm_datasets() {
+        let a = spec.generate(BENCH_SCALE);
+        let topo = || Topology::aurora(ranks);
+        let t_col = DistSpmm::plan(&a, Strategy::Column, topo(), false)
+            .simulate(n_dense)
+            .total;
+        let t_joint = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), topo(), false)
+            .simulate(n_dense)
+            .total;
+        let t_hier = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), topo(), true)
+            .simulate(n_dense)
+            .total;
+        if t_hier < t_joint {
+            hier_wins += 1;
+        }
+        total += 1;
+        table.row(vec![
+            spec.name.into(),
+            ms(t_col),
+            ms(t_joint),
+            ms(t_hier),
+            format!("{:.2}x", t_col / t_joint),
+            format!("{:.2}x", t_joint / t_hier),
+        ]);
+        csv.push_str(&format!(
+            "{},{:.6},{:.6},{:.6}\n",
+            spec.name,
+            t_col * 1e3,
+            t_joint * 1e3,
+            t_hier * 1e3
+        ));
+    }
+    println!("Fig. 12 — Aurora (Intel) portability study (nGPUs=24, N=64)\n");
+    println!("{}", table.render());
+    println!(
+        "hierarchical beat flat-joint on {hier_wins}/{total} datasets — paper shape:\n\
+         on Aurora the flat joint schedule is preferable (shallow cliff),\n\
+         unlike TSUBAME (Fig. 10)."
+    );
+    write_csv("fig12_intel.csv", &csv);
+}

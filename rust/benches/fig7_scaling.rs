@@ -1,0 +1,73 @@
+//! Fig. 7 — runtime comparison and strong scaling: every dataset × every
+//! system (CAGNET, SPA, BCL, CoLa, SHIRO) from 2 to 128 simulated GPUs,
+//! N = 32 (paper setting). Prints per-dataset scaling curves and the §7.2
+//! headline geomean speedups at 128 GPUs.
+
+use shiro::baselines::{simulate, System};
+use shiro::bench::{ms, write_csv, BENCH_SCALE, FIG7_RANKS};
+use shiro::metrics::Table;
+use shiro::sparse::datasets::spmm_datasets;
+use shiro::topology::Topology;
+use shiro::util::geomean;
+
+fn main() {
+    let n_dense = 32;
+    let mut csv = String::from("dataset,system,ranks,seconds\n");
+    // speedup[system] at 128 ranks, per dataset.
+    let mut speedups: std::collections::BTreeMap<&str, Vec<f64>> = Default::default();
+
+    for spec in spmm_datasets() {
+        let a = spec.generate(BENCH_SCALE);
+        println!(
+            "\n=== {} ({}x{}, nnz {}) — simulated SpMM ms per rank count ===",
+            spec.name, a.nrows, a.ncols, a.nnz()
+        );
+        let mut table = Table::new(&[
+            "system", "p=2", "p=4", "p=8", "p=16", "p=32", "p=64", "p=128",
+        ]);
+        let mut at128: std::collections::BTreeMap<&str, f64> = Default::default();
+        for sys in System::all() {
+            let mut cells = vec![sys.name().to_string()];
+            for &ranks in FIG7_RANKS.iter() {
+                let topo = Topology::tsubame4(ranks);
+                let r = simulate(sys, &a, n_dense, &topo);
+                cells.push(ms(r.total));
+                csv.push_str(&format!(
+                    "{},{},{},{:.9}\n",
+                    spec.name,
+                    sys.name(),
+                    ranks,
+                    r.total
+                ));
+                if ranks == 128 {
+                    at128.insert(sys.name(), r.total);
+                }
+            }
+            table.row(cells);
+        }
+        println!("{}", table.render());
+        let shiro = at128["SHIRO"];
+        for sys in [System::Cagnet, System::Spa, System::Bcl, System::Cola] {
+            speedups
+                .entry(sys.name())
+                .or_default()
+                .push(at128[sys.name()] / shiro);
+        }
+    }
+
+    println!("\n=== §7.2 headline: geomean speedup of SHIRO at 128 GPUs ===");
+    let mut t = Table::new(&["baseline", "geomean speedup", "paper reports"]);
+    let paper = [("CAGNET", "221.5x"), ("SPA", "56.0x"), ("BCL", "23.4x"), ("CoLa", "8.8x")];
+    for (name, paper_x) in paper {
+        let g = geomean(&speedups[name]);
+        t.row(vec![name.into(), format!("{g:.1}x"), paper_x.into()]);
+    }
+    println!("{}", t.render());
+    println!(
+        "Shape expectations: ordering CAGNET > SPA > BCL > CoLa > SHIRO at\n\
+         scale; baselines stop scaling past ~8 ranks while SHIRO keeps\n\
+         improving on most datasets; absolute factors differ (simulator, \n\
+         laptop-scale matrices)."
+    );
+    write_csv("fig7_scaling.csv", &csv);
+}

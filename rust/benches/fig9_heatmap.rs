@@ -1,0 +1,57 @@
+//! Fig. 9 — inter-process communication patterns before (column-based) and
+//! after (joint row-column), as normalized volume heatmaps. The paper shows
+//! del24 / mawi / EU: imbalanced patterns that the joint strategy both
+//! shrinks and re-symmetrizes. nGPUs = 32.
+
+use shiro::bench::{write_csv, BENCH_SCALE};
+use shiro::comm::{self, Strategy};
+use shiro::cover::Solver;
+use shiro::metrics::Table;
+use shiro::partition::{split_1d, RowPartition};
+use shiro::sparse::dataset_by_name;
+
+fn main() {
+    let ranks = 32;
+    let n_dense = 64;
+    let mut table = Table::new(&[
+        "dataset",
+        "col max pair (KiB)",
+        "joint max pair (KiB)",
+        "col imbalance",
+        "joint imbalance",
+        "col asym",
+        "joint asym",
+    ]);
+    for name in ["del24", "mawi", "EU"] {
+        let spec = dataset_by_name(name).unwrap();
+        let a = spec.generate(BENCH_SCALE);
+        let part = RowPartition::balanced(a.nrows, ranks);
+        let blocks = split_1d(&a, &part);
+        let col = comm::plan(&blocks, &part, Strategy::Column, None).volume_matrix(n_dense);
+        let joint = comm::plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None)
+            .volume_matrix(n_dense);
+        write_csv(&format!("fig9_{name}_column.csv"), &col.to_csv(true));
+        write_csv(&format!("fig9_{name}_joint.csv"), &joint.to_csv(true));
+        println!("\n=== {name}: column-based (left) vs joint (right) ===");
+        let left: Vec<&str> = Box::leak(col.to_ascii().into_boxed_str()).lines().collect();
+        let right: Vec<&str> = Box::leak(joint.to_ascii().into_boxed_str()).lines().collect();
+        for (l, r) in left.iter().zip(&right) {
+            println!("{l}   |   {r}");
+        }
+        table.row(vec![
+            name.into(),
+            format!("{:.1}", col.max() as f64 / 1024.0),
+            format!("{:.1}", joint.max() as f64 / 1024.0),
+            format!("{:.2}", col.imbalance()),
+            format!("{:.2}", joint.imbalance()),
+            format!("{:.3}", col.asymmetry()),
+            format!("{:.3}", joint.asymmetry()),
+        ]);
+    }
+    println!("\nFig. 9 summary (nGPUs=32):\n{}", table.render());
+    println!(
+        "Paper shape: joint strategy removes the bright hot-spots (lower max\n\
+         pair volume), balances load, and restores symmetry on the symmetric\n\
+         datasets (del24, mawi: asymmetry → ~0)."
+    );
+}

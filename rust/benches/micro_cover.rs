@@ -1,0 +1,45 @@
+//! Microbenchmark: MWVC solver throughput (König vs Dinic vs greedy) on
+//! off-diagonal blocks of increasing size — the §Perf hot path of the
+//! offline planning phase (Tab. 3 preprocessing column).
+
+use shiro::bench::write_csv;
+use shiro::cover::{solve, Solver, Weights};
+use shiro::metrics::Table;
+use shiro::sparse::gen;
+use shiro::util::timer::benchmark;
+
+fn main() {
+    let mut table = Table::new(&[
+        "block", "nnz", "König (ms)", "Dinic (ms)", "greedy (ms)", "μ König", "μ greedy",
+    ]);
+    let mut csv = String::from("n,nnz,koenig_ms,dinic_ms,greedy_ms\n");
+    for &n in &[256usize, 1024, 4096, 16384] {
+        let a = gen::powerlaw(n, n * 8, 1.4, 7);
+        let w = Weights::default();
+        let sk = benchmark(1, 5, || solve(&a, Solver::Koenig, &w));
+        let sd = benchmark(1, 5, || solve(&a, Solver::Dinic, &w));
+        let sg = benchmark(1, 3, || solve(&a, Solver::Greedy, &w));
+        let mu_k = solve(&a, Solver::Koenig, &w).mu();
+        let mu_g = solve(&a, Solver::Greedy, &w).mu();
+        table.row(vec![
+            format!("{n}x{n}"),
+            a.nnz().to_string(),
+            format!("{:.3}", sk.median * 1e3),
+            format!("{:.3}", sd.median * 1e3),
+            format!("{:.3}", sg.median * 1e3),
+            mu_k.to_string(),
+            mu_g.to_string(),
+        ]);
+        csv.push_str(&format!(
+            "{n},{},{:.6},{:.6},{:.6}\n",
+            a.nnz(),
+            sk.median * 1e3,
+            sd.median * 1e3,
+            sg.median * 1e3
+        ));
+    }
+    println!("MWVC solver microbenchmark (powerlaw blocks):\n");
+    println!("{}", table.render());
+    println!("König must dominate Dinic at uniform weights; greedy is never\nbetter than optimal (μ greedy ≥ μ König).");
+    write_csv("micro_cover.csv", &csv);
+}

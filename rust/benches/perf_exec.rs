@@ -1,0 +1,80 @@
+//! §Perf harness: end-to-end executor hot path (the L3 target). Measures
+//! wall time of one distributed SpMM (plan reused) on in-process ranks,
+//! native kernel — the number the EXPERIMENTS.md §Perf iteration log tracks.
+
+use shiro::bench::write_csv;
+use shiro::comm::Strategy;
+use shiro::cover::Solver;
+use shiro::dense::Dense;
+use shiro::exec::kernel::NativeKernel;
+use shiro::metrics::Table;
+use shiro::sparse::gen;
+use shiro::spmm::DistSpmm;
+use shiro::topology::Topology;
+use shiro::util::rng::Rng;
+use shiro::util::timer::benchmark;
+
+fn main() {
+    let mut table = Table::new(&[
+        "scenario", "median (ms)", "mean (ms)", "min (ms)", "runs",
+    ]);
+    let mut csv = String::from("scenario,median_ms,mean_ms,min_ms\n");
+    let scenarios: Vec<(&str, shiro::sparse::Csr, usize, usize, bool)> = vec![
+        (
+            "rmat-16k x8 N32 hier",
+            gen::rmat(1 << 14, (1 << 14) * 12, (0.55, 0.2, 0.19), false, 1),
+            8,
+            32,
+            true,
+        ),
+        (
+            "rmat-16k x8 N32 flat",
+            gen::rmat(1 << 14, (1 << 14) * 12, (0.55, 0.2, 0.19), false, 1),
+            8,
+            32,
+            false,
+        ),
+        (
+            "web-16k x16 N64 hier",
+            gen::powerlaw(1 << 14, (1 << 14) * 10, 1.45, 2),
+            16,
+            64,
+            true,
+        ),
+        (
+            "mesh-16k x8 N32 hier",
+            gen::mesh2d(128, 3),
+            8,
+            32,
+            true,
+        ),
+    ];
+    for (name, a, ranks, n_dense, hier) in scenarios {
+        let d = DistSpmm::plan(
+            &a,
+            Strategy::Joint(Solver::Koenig),
+            Topology::tsubame4(ranks),
+            hier,
+        );
+        let mut rng = Rng::new(7);
+        let b = Dense::random(a.nrows, n_dense, &mut rng);
+        let stats = benchmark(2, 8, || d.execute(&b, &NativeKernel));
+        table.row(vec![
+            name.into(),
+            format!("{:.2}", stats.median * 1e3),
+            format!("{:.2}", stats.mean * 1e3),
+            format!("{:.2}", stats.min * 1e3),
+            stats.n.to_string(),
+        ]);
+        csv.push_str(&format!(
+            "{},{:.4},{:.4},{:.4}\n",
+            name,
+            stats.median * 1e3,
+            stats.mean * 1e3,
+            stats.min * 1e3
+        ));
+    }
+    println!("§Perf — executor end-to-end (native kernel):\n");
+    println!("{}", table.render());
+    write_csv("perf_exec.csv", &csv);
+}

@@ -1,0 +1,101 @@
+//! Tab. 3 — GNN training case study: for the three GNN benchmark analogs
+//! (Papers, Mag240M, IGB260M), measure
+//!   (a) simulated per-SpMM communication/total time at 128 GPUs for
+//!       column-based (PyG-like), BCL, and SHIRO;
+//!   (b) real executed training (small scale) with prep-overhead ratio.
+
+use shiro::baselines::{simulate, System};
+use shiro::bench::{write_csv, BENCH_SCALE};
+use shiro::comm::Strategy;
+use shiro::cover::Solver;
+use shiro::exec::kernel::NativeKernel;
+use shiro::gnn::{Gcn, GcnConfig, NativeDense};
+use shiro::metrics::Table;
+use shiro::sparse::datasets::gnn_datasets;
+use shiro::spmm::DistSpmm;
+use shiro::topology::Topology;
+
+fn main() {
+    let ranks = 128;
+    let mut csv = String::from(
+        "dataset,n_dense,pyg_ms,bcl_ms,shiro_ms,shiro_comm_ms,prep_ratio_pct\n",
+    );
+    let mut table = Table::new(&[
+        "dataset",
+        "N",
+        "PyG-like (ms)",
+        "BCL (ms)",
+        "SHIRO (ms)",
+        "SHIRO comm (ms)",
+        "SpMM speedup vs PyG",
+    ]);
+    let mut prep_table = Table::new(&[
+        "dataset", "epochs", "train (s)", "prep (s)", "prep ratio", "loss first→last",
+    ]);
+    for spec in gnn_datasets() {
+        // Paper: N=128 for Papers/Mag240M, 64 for IGB260M.
+        let n_dense = if spec.name == "IGB260M" { 64 } else { 128 };
+        let a = spec.generate(BENCH_SCALE);
+        let topo = Topology::tsubame4(ranks);
+        // (a) per-SpMM times at 128 simulated GPUs.
+        let pyg = DistSpmm::plan(&a, Strategy::Column, topo.clone(), false).simulate(n_dense);
+        let bcl = simulate(System::Bcl, &a, n_dense, &topo);
+        let shiro =
+            DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), topo.clone(), true)
+                .simulate(n_dense);
+        table.row(vec![
+            spec.name.into(),
+            n_dense.to_string(),
+            format!("{:.3}", pyg.total * 1e3),
+            format!("{:.3}", bcl.total * 1e3),
+            format!("{:.3}", shiro.total * 1e3),
+            format!("{:.3}", shiro.comm_time * 1e3),
+            format!("{:.2}x", pyg.total / shiro.total),
+        ]);
+
+        // (b) real training at executor scale (8 ranks) for prep ratio and
+        // loss curve.
+        let epochs = 20;
+        let mut gcn = Gcn::new(
+            &a,
+            Strategy::Joint(Solver::Koenig),
+            Topology::tsubame4(8),
+            true,
+            GcnConfig { epochs, log_every: epochs - 1, lr: 2.0, ..Default::default() },
+        );
+        let rep = gcn.train(&NativeKernel, &NativeDense);
+        let ratio = 100.0 * rep.prep_secs / (rep.prep_secs + rep.train_secs);
+        prep_table.row(vec![
+            spec.name.into(),
+            epochs.to_string(),
+            format!("{:.2}", rep.train_secs),
+            format!("{:.3}", rep.prep_secs),
+            format!("{ratio:.1}%"),
+            format!(
+                "{:.4} → {:.4}",
+                rep.losses.first().unwrap().1,
+                rep.losses.last().unwrap().1
+            ),
+        ]);
+        csv.push_str(&format!(
+            "{},{},{:.6},{:.6},{:.6},{:.6},{:.2}\n",
+            spec.name,
+            n_dense,
+            pyg.total * 1e3,
+            bcl.total * 1e3,
+            shiro.total * 1e3,
+            shiro.comm_time * 1e3,
+            ratio
+        ));
+    }
+    println!("Tab. 3(a) — per-SpMM time at 128 simulated GPUs:\n");
+    println!("{}", table.render());
+    println!(
+        "Paper shape: SHIRO beats PyG-like column SpMM by 1.2–1.6x and BCL by\n\
+         3–6x; communication dominates SpMM time.\n"
+    );
+    println!("Tab. 3(b) — executed training (8 in-process ranks):\n");
+    println!("{}", prep_table.render());
+    println!("Paper shape: one-time MWVC preprocessing stays ≤ ~13% of training.");
+    write_csv("table3_gnn.csv", &csv);
+}

@@ -1,0 +1,370 @@
+//! The four baselines of the paper's evaluation (§7.1.5), reimplemented on
+//! our simulator substrate so Fig. 7/11 compare *strategies* on identical
+//! hardware assumptions (DESIGN.md §1 explains the approximations):
+//!
+//! - **CAGNET** — 1.5D stationary-A, sparsity-oblivious synchronous
+//!   broadcast rounds (NCCL); suffers process idling and a cuSPARSE
+//!   pathology (grid (1,1,1) launches) modeled as a kernel-efficiency knob.
+//! - **SPA** — 1.5D stationary-A, column-based sparsity-aware alltoallv.
+//! - **BCL** — 2D stationary-C, sparsity-oblivious, asynchronous one-sided
+//!   RDMA (comm/compute overlap).
+//! - **CoLa** — 1D stationary-A, column-based sparsity-aware with
+//!   hierarchical B deduplication and fine-grained overlap.
+
+use crate::comm::{self, Strategy, SZ_DT};
+use crate::cover::Solver;
+use crate::partition::{split_1d, Grid2D, RowPartition};
+use crate::sim::{SimJob, SimMsg, SimReport, Stage};
+use crate::sparse::Csr;
+use crate::spmm::DistSpmm;
+use crate::topology::Topology;
+
+/// Which system to model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum System {
+    Cagnet,
+    Spa,
+    Bcl,
+    Cola,
+    Shiro,
+}
+
+impl System {
+    pub fn name(&self) -> &'static str {
+        match self {
+            System::Cagnet => "CAGNET",
+            System::Spa => "SPA",
+            System::Bcl => "BCL",
+            System::Cola => "CoLa",
+            System::Shiro => "SHIRO",
+        }
+    }
+
+    pub fn all() -> [System; 5] {
+        [System::Cagnet, System::Spa, System::Bcl, System::Cola, System::Shiro]
+    }
+}
+
+/// Replication factor used by the 1.5D baselines (paper sets 4).
+pub const REPLICATION: usize = 4;
+
+/// CAGNET's effective compute slowdown from synchronous scheduling and the
+/// cuSPARSE launch pathology observed in the paper (§7.2: "poor performance
+/// stems from suboptimal cuSPARSE usage and synchronous broadcast-based
+/// communication").
+const CAGNET_KERNEL_PENALTY: f64 = 6.0;
+
+/// Build a simulation job for `system` on matrix `a` with `n_dense` columns.
+pub fn build_job(system: System, a: &Csr, n_dense: usize, topo: &Topology) -> SimJob {
+    match system {
+        System::Cagnet => cagnet_job(a, n_dense, topo),
+        System::Spa => spa_job(a, n_dense, topo),
+        System::Bcl => bcl_job(a, n_dense, topo),
+        System::Cola => cola_job(a, n_dense, topo),
+        System::Shiro => {
+            DistSpmm::plan(a, Strategy::Joint(Solver::Koenig), topo.clone(), true)
+                .sim_job(n_dense)
+        }
+    }
+}
+
+/// Simulate `system` end to end.
+pub fn simulate(system: System, a: &Csr, n_dense: usize, topo: &Topology) -> SimReport {
+    crate::sim::simulate(&build_job(system, a, n_dense, topo), topo)
+}
+
+/// CAGNET: p/c broadcast rounds; in round k the owner of B block k
+/// broadcasts the *entire* block to every rank (sparsity-oblivious, Eq. 1),
+/// synchronously, then all ranks compute against it.
+fn cagnet_job(a: &Csr, n_dense: usize, topo: &Topology) -> SimJob {
+    let p = topo.nranks;
+    let c = REPLICATION.min(p);
+    let rounds = (p / c).max(1);
+    let round_part = RowPartition::balanced(a.nrows, rounds);
+    let flops_per_round: Vec<f64> = {
+        // Each rank computes A(:, round) · B_round for its own rows.
+        let part = RowPartition::balanced(a.nrows, p);
+        let blocks = split_1d(a, &part);
+        (0..rounds)
+            .map(|k| {
+                let (c0, c1) = round_part.range(k);
+                // nnz of global column stripe [c0,c1), max over ranks.
+                let mut max_nnz = 0usize;
+                for b in &blocks {
+                    let (r0, _) = part.range(b.rank);
+                    let _ = r0;
+                    let mut nnz = 0usize;
+                    nnz += count_nnz_in_cols(&b.diag, &part, b.rank, c0, c1);
+                    for (q, blk) in b.off_diag.iter().enumerate() {
+                        nnz += count_nnz_in_cols(blk, &part, q, c0, c1);
+                    }
+                    max_nnz = max_nnz.max(nnz);
+                }
+                2.0 * max_nnz as f64 * n_dense as f64
+            })
+            .collect()
+    };
+    let mut stages = Vec::new();
+    for (k, flops) in flops_per_round.iter().enumerate() {
+        let (c0, c1) = round_part.range(k);
+        let bytes_full = ((c1 - c0) * n_dense) as u64 * SZ_DT;
+        let owner = k % p;
+        // Binomial-tree broadcast: log2(p) sub-stages; every rank receives
+        // the full block once (bytes exact; time ≈ log2(p)·bytes/bw, close
+        // to NCCL's pipelined tree at these message sizes).
+        for (step, msgs) in binomial_tree(owner, p, bytes_full).into_iter().enumerate() {
+            stages.push(Stage::comm(&format!("bcast round {k} step {step}"), msgs));
+        }
+        // Synchronous: compute happens only after the broadcast completes.
+        let mut st = Stage::compute_only(
+            &format!("round {k} spmm"),
+            vec![
+                flops * CAGNET_KERNEL_PENALTY / topo.compute_rate + topo.kernel_launch;
+                p
+            ],
+        );
+        st.overlap = false;
+        stages.push(st);
+    }
+    SimJob { stages }
+}
+
+/// Binomial-tree broadcast from `root` over `p` ranks: returns the message
+/// list of each of the ⌈log2 p⌉ steps.
+fn binomial_tree(root: usize, p: usize, bytes: u64) -> Vec<Vec<SimMsg>> {
+    let mut have: Vec<usize> = vec![root];
+    let mut steps = Vec::new();
+    let mut next = 1usize;
+    while have.len() < p {
+        let mut msgs = Vec::new();
+        let mut new = Vec::new();
+        for &src in &have {
+            if have.len() + new.len() >= p {
+                break;
+            }
+            // Deterministic target assignment: rank (src + next) mod p.
+            let dst = (src + next) % p;
+            if !have.contains(&dst) && !new.contains(&dst) {
+                msgs.push(SimMsg { src, dst, bytes });
+                new.push(dst);
+            }
+        }
+        // Fallback: cover any stragglers the arithmetic pattern missed.
+        if new.is_empty() {
+            let dst = (0..p).find(|d| !have.contains(d)).unwrap();
+            msgs.push(SimMsg { src: have[0], dst, bytes });
+            new.push(dst);
+        }
+        have.extend_from_slice(&new);
+        steps.push(msgs);
+        next *= 2;
+    }
+    steps
+}
+
+fn count_nnz_in_cols(
+    block: &Csr,
+    part: &RowPartition,
+    owner: usize,
+    c0: usize,
+    c1: usize,
+) -> usize {
+    // block columns are owner-local; translate global col range.
+    let (o0, o1) = part.range(owner);
+    let lo = c0.max(o0);
+    let hi = c1.min(o1);
+    if lo >= hi {
+        return 0;
+    }
+    let (l0, l1) = (lo - o0, hi - o0);
+    let mut nnz = 0;
+    for r in 0..block.nrows {
+        let cols = block.row_indices(r);
+        nnz += cols.partition_point(|&c| (c as usize) < l1)
+            - cols.partition_point(|&c| (c as usize) < l0);
+    }
+    nnz
+}
+
+/// SPA: column-based sparsity-aware alltoallv, flat network, with
+/// replication clusters of size c acting as a single memory domain (pairs
+/// inside a cluster are local).
+fn spa_job(a: &Csr, n_dense: usize, topo: &Topology) -> SimJob {
+    let p = topo.nranks;
+    let c = REPLICATION.min(p);
+    let part = RowPartition::balanced(a.nrows, p);
+    let blocks = split_1d(a, &part);
+    let plan = comm::plan(&blocks, &part, Strategy::Column, None);
+    let d = DistSpmm {
+        part,
+        blocks,
+        plan,
+        sched: None,
+        topo: topo.clone(),
+        prep_secs: 0.0,
+    };
+    let (pre, post) = d.compute_profile(n_dense);
+    let mut msgs = Vec::new();
+    for dst in 0..p {
+        for src in 0..p {
+            if src == dst || src / c == dst / c {
+                continue; // same replication cluster: local copy
+            }
+            let bytes = d.plan.volume(dst, src, n_dense);
+            if bytes > 0 {
+                msgs.push(SimMsg { src, dst, bytes });
+            }
+        }
+    }
+    SimJob {
+        stages: vec![
+            Stage::compute_only("local", pre),
+            Stage::comm("alltoallv", msgs),
+            Stage::compute_only("remote", post),
+        ],
+    }
+}
+
+/// BCL: 2D stationary-C on a near-square grid (SUMMA-style k-rounds); in
+/// round k, rank (i,j) pulls A tile (i,k) (sparse; bytes ∝ nnz) and B tile
+/// (k,j) (dense) via one-sided RDMA and accumulates. Async: each round's
+/// compute overlaps its pulls, but rounds serialize (pipeline depth 1),
+/// which is what limits BCL's strong scaling past a couple of nodes.
+fn bcl_job(a: &Csr, n_dense: usize, topo: &Topology) -> SimJob {
+    let p = topo.nranks;
+    let grid = Grid2D::near_square(p);
+    let rpart = RowPartition::balanced(a.nrows, grid.pr);
+    let cpart = RowPartition::balanced(a.ncols, grid.pc);
+    let npart = RowPartition::balanced(n_dense, grid.pc);
+    let mut stages = Vec::new();
+    for k in 0..grid.pc {
+        let mut msgs = Vec::new();
+        let mut compute = vec![0.0; p];
+        let (c0, c1) = cpart.range(k);
+        for i in 0..grid.pr {
+            let (r0, r1) = rpart.range(i);
+            let tile = a.block(r0, r1, c0, c1);
+            let tile_nnz = tile.nnz();
+            for j in 0..grid.pc {
+                let me = grid.rank(i, j);
+                let (nc0, nc1) = npart.range(j);
+                let nj = nc1 - nc0;
+                // A tile (i,k): stored at rank (i,k); fetched unless local.
+                if k != j && tile_nnz > 0 {
+                    let a_bytes = tile_nnz as u64 * (SZ_DT + 4);
+                    msgs.push(SimMsg { src: grid.rank(i, k), dst: me, bytes: a_bytes });
+                }
+                // B tile (k,j): owner approximated as rank (k mod pr, j).
+                let b_owner = grid.rank(k % grid.pr, j);
+                if b_owner != me {
+                    let b_bytes = ((c1 - c0) * nj) as u64 * SZ_DT;
+                    msgs.push(SimMsg { src: b_owner, dst: me, bytes: b_bytes });
+                }
+                compute[me] = 2.0 * tile_nnz as f64 * nj as f64 / topo.compute_rate
+                    + topo.kernel_launch;
+            }
+        }
+        let mut st = Stage::comm(&format!("2D round {k}"), msgs);
+        st.compute = compute;
+        st.overlap = true; // one-sided RDMA hides compute within the round
+        stages.push(st);
+    }
+    SimJob { stages }
+}
+
+/// CoLa: 1D column-based plan + hierarchical B dedup (no row-based path,
+/// no C aggregation), fine-grained RDMA overlap of compute and both stages.
+fn cola_job(a: &Csr, n_dense: usize, topo: &Topology) -> SimJob {
+    let d = DistSpmm::plan(a, Strategy::Column, topo.clone(), true);
+    let (pre, post) = d.compute_profile(n_dense);
+    let [mut s1, mut s2] = crate::sim::hier_comm_stages(d.sched.as_ref().unwrap(), n_dense);
+    // Fine-grained overlap: local compute hides under stage I, remote
+    // compute under stage II.
+    s1.compute = pre;
+    s1.overlap = true;
+    s2.compute = post;
+    s2.overlap = true;
+    SimJob { stages: vec![s1, s2] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    fn matrix() -> Csr {
+        // Large enough that the simulation is bandwidth-dominated (the
+        // paper's regime) rather than latency-dominated.
+        gen::rmat(8192, 130_000, (0.55, 0.2, 0.19), false, 11)
+    }
+
+    #[test]
+    fn all_systems_produce_time() {
+        let a = matrix();
+        let topo = Topology::tsubame4(16);
+        for sys in System::all() {
+            let r = simulate(sys, &a, 32, &topo);
+            assert!(r.total > 0.0, "{}", sys.name());
+            assert!(r.total.is_finite());
+        }
+    }
+
+    #[test]
+    fn shiro_beats_baselines_at_scale() {
+        // The paper's headline shape: at ≥8 ranks (multi-node), SHIRO wins.
+        // Use the traffic-pattern (mawi-like) matrix — a structured sparse
+        // workload where sparsity-aware planning matters (Fig. 7/8's
+        // biggest gap).
+        let a = gen::banded_hub(4096, 4, 8, 96, 11);
+        let topo = Topology::tsubame4(32);
+        let shiro = simulate(System::Shiro, &a, 32, &topo).total;
+        for sys in [System::Cagnet, System::Spa, System::Bcl] {
+            let t = simulate(sys, &a, 32, &topo).total;
+            assert!(
+                shiro < t,
+                "SHIRO {shiro} !< {} {t}",
+                sys.name()
+            );
+        }
+    }
+
+    #[test]
+    fn cagnet_slowest() {
+        // CAGNET's sync broadcast + kernel pathology makes it the slowest
+        // baseline at scale (paper Fig. 7 ordering).
+        let a = matrix();
+        let topo = Topology::tsubame4(32);
+        // N = 128 (Fig. 11's upper point) puts the comparison in the
+        // bandwidth-dominated regime where the paper's ordering holds.
+        let cagnet = simulate(System::Cagnet, &a, 128, &topo).total;
+        for sys in [System::Spa, System::Cola, System::Shiro] {
+            let t = simulate(sys, &a, 128, &topo).total;
+            assert!(cagnet > t, "CAGNET {cagnet} !> {} {t}", sys.name());
+        }
+    }
+
+    #[test]
+    fn cola_competitive_single_node() {
+        // ≤4 GPUs (one NVLink island): CoLa's overlap wins or ties —
+        // paper §7.2: "our method is slower when using 4 or fewer GPUs".
+        let a = matrix();
+        let topo = Topology::tsubame4(4);
+        let cola = simulate(System::Cola, &a, 32, &topo).total;
+        let shiro = simulate(System::Shiro, &a, 32, &topo).total;
+        assert!(
+            cola < shiro * 1.05,
+            "CoLa should be competitive at 4 ranks: cola {cola} shiro {shiro}"
+        );
+    }
+
+    #[test]
+    fn sparsity_aware_beats_oblivious_volume() {
+        let a = matrix();
+        let topo = Topology::tsubame4(16);
+        let spa = simulate(System::Spa, &a, 32, &topo);
+        let cagnet = simulate(System::Cagnet, &a, 32, &topo);
+        let total_bytes =
+            |r: &SimReport| r.inter_bytes + r.intra_bytes;
+        assert!(total_bytes(&spa) < total_bytes(&cagnet));
+    }
+}

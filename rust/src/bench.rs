@@ -1,0 +1,44 @@
+//! Shared helpers for the figure/table bench binaries (`rust/benches/`).
+//!
+//! Each bench regenerates one table or figure from the paper's evaluation
+//! (DESIGN.md §4 maps them); results are printed as tables and also written
+//! as CSV under `bench_results/` for plotting.
+
+use std::path::PathBuf;
+
+/// Output directory for bench CSVs.
+pub fn out_dir() -> PathBuf {
+    let dir = PathBuf::from("bench_results");
+    std::fs::create_dir_all(&dir).expect("create bench_results/");
+    dir
+}
+
+/// Write a CSV artifact and echo its path.
+pub fn write_csv(name: &str, content: &str) {
+    let path = out_dir().join(name);
+    std::fs::write(&path, content).expect("write csv");
+    println!("[csv] {}", path.display());
+}
+
+/// Bench-scale defaults: small enough for minutes-long runs, large enough
+/// to sit in the bandwidth-dominated regime the paper evaluates.
+pub const BENCH_SCALE: f64 = 0.02;
+
+/// The paper's fixed evaluation points.
+pub const FIG7_RANKS: [usize; 7] = [2, 4, 8, 16, 32, 64, 128];
+pub const ABLATION_RANKS: usize = 32;
+
+/// Format seconds as milliseconds with 3 decimals (bench table unit).
+pub fn ms(secs: f64) -> String {
+    format!("{:.3}", secs * 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ms_format() {
+        assert_eq!(ms(0.001234), "1.234");
+    }
+}

@@ -1,0 +1,458 @@
+//! Communication planning (paper §3.1, §5.1): turn per-pair off-diagonal
+//! blocks into a [`CommPlan`] that says exactly which B rows and partial C
+//! rows cross each process pair, under each of the four strategies.
+//!
+//! Planning is the *offline preprocessing* phase (workflow steps 1–2); the
+//! plan is reused across SpMM calls with the same sparsity pattern.
+
+pub mod validate;
+pub mod weighted;
+
+use crate::cover::{self, CoverSolution, Solver, Weights};
+use crate::partition::{LocalBlocks, RowPartition};
+use crate::sparse::Csr;
+
+/// Element size (f32) used in all volume formulas (sz_dt in Tab. 1).
+pub const SZ_DT: u64 = 4;
+
+/// Communication strategy (paper §3.1 taxonomy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Sparsity-oblivious: fetch whole remote row blocks of B (Eq. 1).
+    Block,
+    /// Column-based sparsity-aware: fetch needed B rows (Eq. 2).
+    Column,
+    /// Row-based sparsity-aware: receive partial C rows (Eq. 3).
+    Row,
+    /// SHIRO's joint row-column strategy via MWVC (Eq. 9).
+    Joint(Solver),
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Block => "block",
+            Strategy::Column => "column",
+            Strategy::Row => "row",
+            Strategy::Joint(Solver::Koenig) => "joint",
+            Strategy::Joint(Solver::Dinic) => "joint-weighted",
+            Strategy::Joint(Solver::Greedy) => "joint-greedy",
+            Strategy::Joint(_) => "joint-degenerate",
+        }
+    }
+}
+
+/// Plan for the data flowing from source rank q to destination rank p.
+///
+/// Index spaces: `b_rows` are local to q's B block; `c_rows` are local to
+/// p's C block; `a_row_part` / `a_col_part` keep the off-diagonal block's
+/// local coordinates (rows local to p, cols local to q).
+#[derive(Clone, Debug, Default)]
+pub struct PairPlan {
+    /// B rows (q-local) that q sends to p — column-based portion.
+    pub b_rows: Vec<u32>,
+    /// C rows (p-local) for which q computes and sends partial results —
+    /// row-based portion.
+    pub c_rows: Vec<u32>,
+    /// Nonzeros of `A^(p,q)` served row-based. Shipped to q offline; at
+    /// run time q computes `a_row_part · B^(q,:)` restricted to `c_rows`.
+    pub a_row_part: Csr,
+    /// Nonzeros served column-based; stays at p, multiplied against the
+    /// received `b_rows`.
+    pub a_col_part: Csr,
+    /// Whether the whole remote block is sent (sparsity-oblivious mode);
+    /// volume then follows Eq. 1 regardless of `b_rows`.
+    pub full_block: bool,
+    /// `a_col_part` with columns remapped to *positions in `b_rows`*:
+    /// multiplies directly against the packed received B rows, avoiding a
+    /// zero-buffer scatter on the hot path (§Perf opt-1).
+    pub a_col_compact: Csr,
+    /// `a_row_part` restricted to `c_rows` (rows reindexed to positions in
+    /// `c_rows`): the exact operand of the remote partial SpMM, avoiding a
+    /// per-call `select_rows` (§Perf opt-1).
+    pub a_row_compact: Csr,
+}
+
+impl PairPlan {
+    /// Build a pair plan from the split parts, deriving the packed compact
+    /// operands used by the executor hot path.
+    pub fn from_parts(a_row_part: Csr, a_col_part: Csr, full_block: bool) -> PairPlan {
+        let c_rows = a_row_part.nonempty_rows();
+        let b_rows = if full_block {
+            (0..a_col_part.ncols as u32).collect::<Vec<u32>>()
+        } else {
+            a_col_part.nonempty_cols()
+        };
+        // Column remap: global col -> position in b_rows.
+        let mut pos = vec![u32::MAX; a_col_part.ncols];
+        for (k, &c) in b_rows.iter().enumerate() {
+            pos[c as usize] = k as u32;
+        }
+        let a_col_compact = Csr {
+            nrows: a_col_part.nrows,
+            ncols: b_rows.len(),
+            indptr: a_col_part.indptr.clone(),
+            indices: a_col_part
+                .indices
+                .iter()
+                .map(|&c| pos[c as usize])
+                .collect(),
+            data: a_col_part.data.clone(),
+        };
+        let a_row_compact = a_row_part.select_rows(&c_rows);
+        PairPlan {
+            b_rows,
+            c_rows,
+            a_row_part,
+            a_col_part,
+            full_block,
+            a_col_compact,
+            a_row_compact,
+        }
+    }
+}
+
+impl PairPlan {
+    /// Number of rows crossing the q→p link (B rows + C rows).
+    pub fn rows_transferred(&self, k_src: usize) -> u64 {
+        if self.full_block {
+            k_src as u64
+        } else {
+            (self.b_rows.len() + self.c_rows.len()) as u64
+        }
+    }
+
+    /// Volume in bytes for N dense columns (Eqs. 1–3, 9).
+    pub fn volume_bytes(&self, k_src: usize, n_dense: usize) -> u64 {
+        self.rows_transferred(k_src) * n_dense as u64 * SZ_DT
+    }
+}
+
+/// The complete communication plan for one distributed SpMM.
+#[derive(Clone, Debug)]
+pub struct CommPlan {
+    pub nranks: usize,
+    pub strategy: Strategy,
+    /// `pairs[p][q]` describes flow q → p. Diagonal entries are empty.
+    pub pairs: Vec<Vec<PairPlan>>,
+    /// Rows owned by each rank (B/C block heights), for Eq. 1 volumes.
+    pub block_rows: Vec<usize>,
+}
+
+impl CommPlan {
+    /// Volume in bytes crossing q→p for N dense columns.
+    pub fn volume(&self, p: usize, q: usize, n_dense: usize) -> u64 {
+        self.pairs[p][q].volume_bytes(self.block_rows[q], n_dense)
+    }
+
+    /// Total communication volume across all pairs (Fig. 8a metric).
+    pub fn total_volume(&self, n_dense: usize) -> u64 {
+        let mut v = 0;
+        for p in 0..self.nranks {
+            for q in 0..self.nranks {
+                if p != q {
+                    v += self.volume(p, q, n_dense);
+                }
+            }
+        }
+        v
+    }
+
+    /// Per-pair volume matrix `[dst][src]` (Fig. 9 heatmaps).
+    pub fn volume_matrix(&self, n_dense: usize) -> crate::metrics::VolumeMatrix {
+        let mut m = crate::metrics::VolumeMatrix::zeros(self.nranks);
+        for p in 0..self.nranks {
+            for q in 0..self.nranks {
+                if p != q {
+                    m.set(q, p, self.volume(p, q, n_dense));
+                }
+            }
+        }
+        m
+    }
+}
+
+/// Optional per-rank-pair weight model for the weighted (Dinic) solver:
+/// returns (row_weight, col_weight) unit costs for flow q→p.
+pub type PairWeightFn<'a> = dyn Fn(usize, usize) -> (u64, u64) + 'a;
+
+/// Build the communication plan for all pairs from each rank's local blocks.
+///
+/// `blocks[p].off_diag[q]` must be `A^(p,q)` with q-local column indices
+/// (as produced by [`crate::partition::split_1d`]).
+pub fn plan(
+    blocks: &[LocalBlocks],
+    part: &RowPartition,
+    strategy: Strategy,
+    pair_weights: Option<&PairWeightFn>,
+) -> CommPlan {
+    let nranks = part.nparts;
+    let mut pairs: Vec<Vec<PairPlan>> = Vec::with_capacity(nranks);
+    for p in 0..nranks {
+        let mut row = Vec::with_capacity(nranks);
+        for q in 0..nranks {
+            if p == q {
+                row.push(PairPlan::default());
+                continue;
+            }
+            let block = &blocks[p].off_diag[q];
+            row.push(plan_pair(block, strategy, p, q, pair_weights));
+        }
+        pairs.push(row);
+    }
+    CommPlan {
+        nranks,
+        strategy,
+        pairs,
+        block_rows: (0..nranks).map(|p| part.len(p)).collect(),
+    }
+}
+
+fn plan_pair(
+    block: &Csr,
+    strategy: Strategy,
+    p: usize,
+    q: usize,
+    pair_weights: Option<&PairWeightFn>,
+) -> PairPlan {
+    if block.nnz() == 0 && strategy != Strategy::Block {
+        return PairPlan::default();
+    }
+    match strategy {
+        Strategy::Block => PairPlan::from_parts(
+            Csr::zeros(block.nrows, block.ncols),
+            block.clone(),
+            true,
+        ),
+        Strategy::Column => {
+            let sol = CoverSolution {
+                rows: Vec::new(),
+                cols: block.nonempty_cols(),
+                cost: 0,
+            };
+            from_solution(block, sol)
+        }
+        Strategy::Row => {
+            let sol = CoverSolution {
+                rows: block.nonempty_rows(),
+                cols: Vec::new(),
+                cost: 0,
+            };
+            from_solution(block, sol)
+        }
+        Strategy::Joint(solver) => {
+            let weights = match (solver, pair_weights) {
+                (Solver::Dinic, Some(wf)) => {
+                    let (rw, cw) = wf(p, q);
+                    Weights {
+                        row: Some(vec![rw; block.nrows]),
+                        col: Some(vec![cw; block.ncols]),
+                    }
+                }
+                _ => Weights::default(),
+            };
+            let sol = cover::solve(block, solver, &weights);
+            from_solution(block, sol)
+        }
+    }
+}
+
+fn from_solution(block: &Csr, sol: CoverSolution) -> PairPlan {
+    let (a_row_part, a_col_part) = cover::split_by_cover(block, &sol);
+    // from_parts prunes selected vertices that ended up with no assigned
+    // nonzeros (possible when both endpoints of an edge were selected) by
+    // recomputing the used rows/cols from the split parts.
+    PairPlan::from_parts(a_row_part, a_col_part, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::split_1d;
+    use crate::sparse::gen;
+
+    fn setup(n: usize, ranks: usize, seed: u64) -> (Csr, RowPartition, Vec<LocalBlocks>) {
+        let a = gen::rmat(n, n * 8, (0.55, 0.2, 0.19), false, seed);
+        let part = RowPartition::balanced(n, ranks);
+        let blocks = split_1d(&a, &part);
+        (a, part, blocks)
+    }
+
+    /// Every nonzero of every off-diagonal block must be covered: either its
+    /// row is in c_rows (row-based) or its column is in b_rows (col-based).
+    fn assert_plan_covers(plan: &CommPlan, blocks: &[LocalBlocks]) {
+        for p in 0..plan.nranks {
+            for q in 0..plan.nranks {
+                if p == q {
+                    continue;
+                }
+                let block = &blocks[p].off_diag[q];
+                let pair = &plan.pairs[p][q];
+                assert_eq!(
+                    pair.a_row_part.nnz() + pair.a_col_part.nnz(),
+                    block.nnz(),
+                    "({p},{q}) nnz split"
+                );
+                if pair.full_block {
+                    continue;
+                }
+                let crows: std::collections::HashSet<u32> =
+                    pair.c_rows.iter().copied().collect();
+                let brows: std::collections::HashSet<u32> =
+                    pair.b_rows.iter().copied().collect();
+                for r in 0..block.nrows {
+                    for &c in block.row_indices(r) {
+                        assert!(
+                            crows.contains(&(r as u32)) || brows.contains(&c),
+                            "({p},{q}) nnz ({r},{c}) uncovered"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_strategy_volume_is_eq1() {
+        let (_, part, blocks) = setup(64, 4, 1);
+        let plan = plan(&blocks, &part, Strategy::Block, None);
+        // V = K · N · sz for every pair.
+        let n_dense = 8;
+        for p in 0..4 {
+            for q in 0..4 {
+                if p != q {
+                    assert_eq!(
+                        plan.volume(p, q, n_dense),
+                        part.len(q) as u64 * n_dense as u64 * SZ_DT
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn column_strategy_matches_eq2() {
+        let (_, part, blocks) = setup(64, 4, 2);
+        let cp = plan(&blocks, &part, Strategy::Column, None);
+        for p in 0..4 {
+            for q in 0..4 {
+                if p == q {
+                    continue;
+                }
+                let cols = blocks[p].off_diag[q].nonempty_cols();
+                assert_eq!(cp.pairs[p][q].b_rows, cols);
+                assert!(cp.pairs[p][q].c_rows.is_empty());
+            }
+        }
+        assert_plan_covers(&cp, &blocks);
+    }
+
+    #[test]
+    fn row_strategy_matches_eq3() {
+        let (_, part, blocks) = setup(64, 4, 3);
+        let rp = plan(&blocks, &part, Strategy::Row, None);
+        for p in 0..4 {
+            for q in 0..4 {
+                if p == q {
+                    continue;
+                }
+                let rows = blocks[p].off_diag[q].nonempty_rows();
+                assert_eq!(rp.pairs[p][q].c_rows, rows);
+                assert!(rp.pairs[p][q].b_rows.is_empty());
+            }
+        }
+        assert_plan_covers(&rp, &blocks);
+    }
+
+    #[test]
+    fn joint_dominates_both_single_strategies() {
+        // Dominance (§5.4.1): joint volume ≤ min(column, row) per pair and
+        // in total.
+        let (_, part, blocks) = setup(128, 8, 4);
+        let jp = plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None);
+        let cp = plan(&blocks, &part, Strategy::Column, None);
+        let rp = plan(&blocks, &part, Strategy::Row, None);
+        assert_plan_covers(&jp, &blocks);
+        let n = 32;
+        for p in 0..8 {
+            for q in 0..8 {
+                if p != q {
+                    assert!(jp.volume(p, q, n) <= cp.volume(p, q, n));
+                    assert!(jp.volume(p, q, n) <= rp.volume(p, q, n));
+                }
+            }
+        }
+        assert!(jp.total_volume(n) <= cp.total_volume(n).min(rp.total_volume(n)));
+        assert!(cp.total_volume(n) <= {
+            let bp = plan(&blocks, &part, Strategy::Block, None);
+            bp.total_volume(n)
+        });
+    }
+
+    #[test]
+    fn joint_strictly_better_on_web_pattern() {
+        // Power-law with hubs on both sides: joint must beat column-only
+        // (paper's high-reduction scenario, Fig. 5 Pattern 4).
+        let a = gen::powerlaw(256, 4000, 1.4, 5);
+        let part = RowPartition::balanced(256, 8);
+        let blocks = split_1d(&a, &part);
+        let jp = plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None);
+        let cp = plan(&blocks, &part, Strategy::Column, None);
+        let n = 32;
+        assert!(
+            jp.total_volume(n) < cp.total_volume(n),
+            "joint {} !< column {}",
+            jp.total_volume(n),
+            cp.total_volume(n)
+        );
+    }
+
+    #[test]
+    fn volume_matrix_diag_zero() {
+        let (_, part, blocks) = setup(64, 4, 6);
+        let p = plan(&blocks, &part, Strategy::Column, None);
+        let m = p.volume_matrix(8);
+        for i in 0..4 {
+            assert_eq!(m.get(i, i), 0);
+        }
+        assert_eq!(m.total(), p.total_volume(8));
+    }
+
+    #[test]
+    fn weighted_plan_shifts_to_cheaper_side() {
+        let (_, part, blocks) = setup(64, 4, 7);
+        // Make rows (C transfers) free-ish and columns expensive: plan
+        // should use row-based almost everywhere.
+        let wf = |_p: usize, _q: usize| (1u64, 1000u64);
+        let jp = plan(&blocks, &part, Strategy::Joint(Solver::Dinic), Some(&wf));
+        assert_plan_covers(&jp, &blocks);
+        let total_b: usize = jp
+            .pairs
+            .iter()
+            .flatten()
+            .map(|pp| pp.b_rows.len())
+            .sum();
+        let total_c: usize = jp
+            .pairs
+            .iter()
+            .flatten()
+            .map(|pp| pp.c_rows.len())
+            .sum();
+        assert!(total_c > total_b * 5, "c={total_c} b={total_b}");
+    }
+
+    #[test]
+    fn empty_offdiag_pairs_empty_plan() {
+        // Block-diagonal matrix → zero communication for sparsity-aware.
+        let a = Csr::eye(32);
+        let part = RowPartition::balanced(32, 4);
+        let blocks = split_1d(&a, &part);
+        let jp = plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None);
+        assert_eq!(jp.total_volume(16), 0);
+        let cp = plan(&blocks, &part, Strategy::Column, None);
+        assert_eq!(cp.total_volume(16), 0);
+        // Block strategy still ships everything (sparsity-oblivious).
+        let bp = plan(&blocks, &part, Strategy::Block, None);
+        assert!(bp.total_volume(16) > 0);
+    }
+}

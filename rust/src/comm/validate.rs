@@ -1,0 +1,185 @@
+//! Communication-plan validation: structural invariants checked before a
+//! plan is trusted by the executor. Used by tests (failure injection) and
+//! by `DistSpmm::plan` in debug builds.
+
+use crate::comm::CommPlan;
+use crate::partition::LocalBlocks;
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum PlanError {
+    #[error("pair ({p},{q}): nnz split {got} != block nnz {want}")]
+    NnzMismatch { p: usize, q: usize, got: usize, want: usize },
+    #[error("pair ({p},{q}): column {c} used by a_col_part but missing from b_rows")]
+    UncoveredColumn { p: usize, q: usize, c: u32 },
+    #[error("pair ({p},{q}): row {r} used by a_row_part but missing from c_rows")]
+    UncoveredRow { p: usize, q: usize, r: u32 },
+    #[error("pair ({p},{q}): b_rows not sorted/unique")]
+    UnsortedBRows { p: usize, q: usize },
+    #[error("pair ({p},{q}): c_rows not sorted/unique")]
+    UnsortedCRows { p: usize, q: usize },
+    #[error("pair ({p},{q}): b_row {row} out of range {len}")]
+    BRowOutOfRange { p: usize, q: usize, row: u32, len: usize },
+    #[error("pair ({p},{q}): c_row {row} out of range {len}")]
+    CRowOutOfRange { p: usize, q: usize, row: u32, len: usize },
+    #[error("plan has {got} ranks, blocks have {want}")]
+    RankMismatch { got: usize, want: usize },
+}
+
+fn sorted_unique(v: &[u32]) -> bool {
+    v.windows(2).all(|w| w[0] < w[1])
+}
+
+/// Validate a plan against the blocks it was derived from.
+pub fn validate(plan: &CommPlan, blocks: &[LocalBlocks]) -> Result<(), PlanError> {
+    if plan.nranks != blocks.len() {
+        return Err(PlanError::RankMismatch { got: plan.nranks, want: blocks.len() });
+    }
+    for p in 0..plan.nranks {
+        for q in 0..plan.nranks {
+            if p == q {
+                continue;
+            }
+            let pair = &plan.pairs[p][q];
+            let block = &blocks[p].off_diag[q];
+            if !sorted_unique(&pair.b_rows) {
+                return Err(PlanError::UnsortedBRows { p, q });
+            }
+            if !sorted_unique(&pair.c_rows) {
+                return Err(PlanError::UnsortedCRows { p, q });
+            }
+            let k_src = plan.block_rows[q];
+            if let Some(&row) = pair.b_rows.iter().find(|&&r| r as usize >= k_src) {
+                return Err(PlanError::BRowOutOfRange { p, q, row, len: k_src });
+            }
+            let m_dst = plan.block_rows[p];
+            if let Some(&row) = pair.c_rows.iter().find(|&&r| r as usize >= m_dst) {
+                return Err(PlanError::CRowOutOfRange { p, q, row, len: m_dst });
+            }
+            let got = pair.a_row_part.nnz() + pair.a_col_part.nnz();
+            if got != block.nnz() {
+                return Err(PlanError::NnzMismatch { p, q, got, want: block.nnz() });
+            }
+            if !pair.full_block {
+                for r in 0..pair.a_col_part.nrows {
+                    for &c in pair.a_col_part.row_indices(r) {
+                        if pair.b_rows.binary_search(&c).is_err() {
+                            return Err(PlanError::UncoveredColumn { p, q, c });
+                        }
+                    }
+                }
+                for &r in pair.a_row_part.nonempty_rows().iter() {
+                    if pair.c_rows.binary_search(&r).is_err() {
+                        return Err(PlanError::UncoveredRow { p, q, r });
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{self, Strategy};
+    use crate::cover::Solver;
+    use crate::partition::{split_1d, RowPartition};
+    use crate::sparse::gen;
+
+    fn setup() -> (CommPlan, Vec<LocalBlocks>) {
+        let a = gen::rmat(128, 1500, (0.5, 0.2, 0.2), false, 1);
+        let part = RowPartition::balanced(128, 8);
+        let blocks = split_1d(&a, &part);
+        let plan = comm::plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None);
+        (plan, blocks)
+    }
+
+    #[test]
+    fn valid_plan_passes() {
+        let (plan, blocks) = setup();
+        assert_eq!(validate(&plan, &blocks), Ok(()));
+    }
+
+    #[test]
+    fn injected_missing_b_row_detected() {
+        let (mut plan, blocks) = setup();
+        // Find a pair with b_rows and drop one (failure injection).
+        'outer: for p in 0..8 {
+            for q in 0..8 {
+                if p != q && plan.pairs[p][q].b_rows.len() > 1 {
+                    plan.pairs[p][q].b_rows.remove(0);
+                    break 'outer;
+                }
+            }
+        }
+        assert!(matches!(
+            validate(&plan, &blocks),
+            Err(PlanError::UncoveredColumn { .. })
+        ));
+    }
+
+    #[test]
+    fn injected_unsorted_rows_detected() {
+        let (mut plan, blocks) = setup();
+        'outer: for p in 0..8 {
+            for q in 0..8 {
+                if p != q && plan.pairs[p][q].c_rows.len() > 1 {
+                    plan.pairs[p][q].c_rows.swap(0, 1);
+                    break 'outer;
+                }
+            }
+        }
+        assert!(matches!(
+            validate(&plan, &blocks),
+            Err(PlanError::UnsortedCRows { .. }) | Err(PlanError::UncoveredRow { .. })
+        ));
+    }
+
+    #[test]
+    fn injected_out_of_range_detected() {
+        let (mut plan, blocks) = setup();
+        'outer: for p in 0..8 {
+            for q in 0..8 {
+                if p != q && !plan.pairs[p][q].b_rows.is_empty() {
+                    plan.pairs[p][q].b_rows.push(10_000);
+                    break 'outer;
+                }
+            }
+        }
+        assert!(matches!(
+            validate(&plan, &blocks),
+            Err(PlanError::BRowOutOfRange { .. })
+        ));
+    }
+
+    #[test]
+    fn injected_dropped_nnz_detected() {
+        let (mut plan, blocks) = setup();
+        'outer: for p in 0..8 {
+            for q in 0..8 {
+                if p != q && plan.pairs[p][q].a_col_part.nnz() > 0 {
+                    let pair = &mut plan.pairs[p][q];
+                    pair.a_col_part = crate::sparse::Csr::zeros(
+                        pair.a_col_part.nrows,
+                        pair.a_col_part.ncols,
+                    );
+                    break 'outer;
+                }
+            }
+        }
+        assert!(matches!(
+            validate(&plan, &blocks),
+            Err(PlanError::NnzMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn rank_mismatch_detected() {
+        let (plan, blocks) = setup();
+        assert!(matches!(
+            validate(&plan, &blocks[..4]),
+            Err(PlanError::RankMismatch { .. })
+        ));
+    }
+}

@@ -1,0 +1,208 @@
+//! Hierarchy-aware *weighted* strategy selection — the paper's §5.2 cost
+//! coefficients ("communicating different rows may incur different costs
+//! due to varying data volumes and network paths") instantiated for the
+//! two-tier topology:
+//!
+//! Under the hierarchical schedule (§6), a B row crossing to a destination
+//! group is paid **once** no matter how many group members need it, and a
+//! C row produced by many members of a source group is pre-aggregated into
+//! **one** inter-group row. So the marginal inter-group cost of selecting
+//! column j for block `A^(p,q)` is `1/dup_B(j)` (dup = members of p's
+//! group that would also fetch row j), and of selecting row i is
+//! `1/dup_C(i)`. Feeding these as vertex weights into the Dinic MWVC
+//! yields a plan that *co-optimizes* strategy selection with the
+//! hierarchical dedup — an extension beyond the paper's uniform-cost
+//! evaluation (`make bench-ablation-weighted` quantifies it).
+
+use crate::comm::{CommPlan, PairPlan, Strategy};
+use crate::cover::{self, Solver, Weights};
+use crate::partition::{LocalBlocks, RowPartition};
+use crate::topology::Topology;
+
+/// Integer weight scale: weights are SCALE/dup, so dup factors up to SCALE
+/// are distinguished exactly.
+pub const SCALE: u64 = 64;
+
+/// Build a joint plan whose per-vertex costs reflect hierarchical
+/// deduplication opportunities on `topo`.
+pub fn plan_hier_weighted(
+    blocks: &[LocalBlocks],
+    part: &RowPartition,
+    topo: &Topology,
+) -> CommPlan {
+    let nranks = part.nparts;
+    // dup_b[q][g][j] = how many ranks p in group g have nonzeros in column
+    // j of A^(p,q) (i.e. would fetch B row j of q). Computed lazily per
+    // (q, g) as a dense count vector over q's local rows.
+    let mut pairs: Vec<Vec<PairPlan>> = Vec::with_capacity(nranks);
+    // Precompute column-demand counts per (q, destination group).
+    let ngroups = topo.ngroups();
+    let mut col_demand: Vec<Vec<Vec<u16>>> = vec![Vec::new(); nranks];
+    for (q, demand) in col_demand.iter_mut().enumerate() {
+        *demand = vec![vec![0u16; part.len(q)]; ngroups];
+        for p in 0..nranks {
+            if p == q {
+                continue;
+            }
+            let g = topo.group_of(p);
+            let block = &blocks[p].off_diag[q];
+            for &c in block.nonempty_cols().iter() {
+                demand[g][c as usize] += 1;
+            }
+        }
+    }
+    // Row-production counts per (p, source group): how many ranks q in
+    // group g hold nonzeros in row i of A^(p,q) (would produce partial C
+    // row i for p).
+    let mut row_supply: Vec<Vec<Vec<u16>>> = vec![Vec::new(); nranks];
+    for (p, supply) in row_supply.iter_mut().enumerate() {
+        *supply = vec![vec![0u16; part.len(p)]; ngroups];
+        for q in 0..nranks {
+            if p == q {
+                continue;
+            }
+            let g = topo.group_of(q);
+            let block = &blocks[p].off_diag[q];
+            for &r in block.nonempty_rows().iter() {
+                supply[g][r as usize] += 1;
+            }
+        }
+    }
+
+    for p in 0..nranks {
+        let mut row = Vec::with_capacity(nranks);
+        for q in 0..nranks {
+            if p == q {
+                row.push(PairPlan::default());
+                continue;
+            }
+            let block = &blocks[p].off_diag[q];
+            if block.nnz() == 0 {
+                row.push(PairPlan::default());
+                continue;
+            }
+            let same_group = topo.group_of(p) == topo.group_of(q);
+            let weights = if same_group {
+                // Intra-group transfers are cheap and not deduplicated:
+                // uniform weights recover the plain joint optimum.
+                Weights::default()
+            } else {
+                let gp = topo.group_of(p);
+                let gq = topo.group_of(q);
+                let col_w: Vec<u64> = (0..block.ncols)
+                    .map(|j| {
+                        let dup = col_demand[q][gp][j].max(1) as u64;
+                        (SCALE / dup.min(SCALE)).max(1)
+                    })
+                    .collect();
+                let row_w: Vec<u64> = (0..block.nrows)
+                    .map(|i| {
+                        let dup = row_supply[p][gq][i].max(1) as u64;
+                        (SCALE / dup.min(SCALE)).max(1)
+                    })
+                    .collect();
+                Weights { row: Some(row_w), col: Some(col_w) }
+            };
+            let sol = cover::solve(block, Solver::Dinic, &weights);
+            let (a_row_part, a_col_part) = cover::split_by_cover(block, &sol);
+            row.push(PairPlan::from_parts(a_row_part, a_col_part, false));
+        }
+        pairs.push(row);
+    }
+    CommPlan {
+        nranks,
+        strategy: Strategy::Joint(Solver::Dinic),
+        pairs,
+        block_rows: (0..nranks).map(|p| part.len(p)).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hierarchy;
+    use crate::partition::split_1d;
+    use crate::sparse::gen;
+
+    fn setup(seed: u64) -> (Vec<LocalBlocks>, RowPartition, Topology) {
+        let a = gen::powerlaw(512, 8000, 1.4, seed);
+        let part = RowPartition::balanced(512, 16);
+        let blocks = split_1d(&a, &part);
+        (blocks, part, Topology::tsubame4(16))
+    }
+
+    #[test]
+    fn weighted_plan_covers_all_nonzeros() {
+        let (blocks, part, topo) = setup(1);
+        let plan = plan_hier_weighted(&blocks, &part, &topo);
+        for p in 0..16 {
+            for q in 0..16 {
+                if p == q {
+                    continue;
+                }
+                let block = &blocks[p].off_diag[q];
+                let pair = &plan.pairs[p][q];
+                assert_eq!(
+                    pair.a_row_part.nnz() + pair.a_col_part.nnz(),
+                    block.nnz()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_reduces_inter_bytes_vs_uniform() {
+        // The whole point: inter-group bytes after hierarchy must be ≤ the
+        // uniform-weight joint plan's.
+        for seed in 0..4 {
+            let (blocks, part, topo) = setup(seed);
+            let uniform = crate::comm::plan(
+                &blocks,
+                &part,
+                Strategy::Joint(Solver::Koenig),
+                None,
+            );
+            let weighted = plan_hier_weighted(&blocks, &part, &topo);
+            let n = 32;
+            let u = hierarchy::build(&uniform, &topo).inter_group_bytes(n);
+            let w = hierarchy::build(&weighted, &topo).inter_group_bytes(n);
+            assert!(
+                w <= u + u / 20,
+                "seed {seed}: weighted {w} should not exceed uniform {u} (+5%)"
+            );
+        }
+    }
+
+    #[test]
+    fn weighted_plan_executes_exactly() {
+        let (blocks, part, topo) = setup(2);
+        let plan = plan_hier_weighted(&blocks, &part, &topo);
+        let sched = hierarchy::build(&plan, &topo);
+        let a = gen::powerlaw(512, 8000, 1.4, 2);
+        let mut rng = crate::util::rng::Rng::new(3);
+        let b = crate::dense::Dense::random(512, 8, &mut rng);
+        let (got, _) = crate::exec::run(
+            &part,
+            &plan,
+            &blocks,
+            Some(&sched),
+            &topo,
+            &b,
+            &crate::exec::kernel::NativeKernel,
+        );
+        let want = a.spmm(&b);
+        assert!(want.diff_norm(&got) / (want.max_abs() as f64 + 1e-30) < 1e-3);
+    }
+
+    #[test]
+    fn dup_weights_favor_shared_columns() {
+        // Column needed by all 4 ranks of a group gets weight SCALE/4 and
+        // should be selected over a row needed once.
+        let (blocks, part, topo) = setup(3);
+        let plan = plan_hier_weighted(&blocks, &part, &topo);
+        // Sanity only: plan is non-trivial on both sides.
+        let b_total: usize = plan.pairs.iter().flatten().map(|p| p.b_rows.len()).sum();
+        let c_total: usize = plan.pairs.iter().flatten().map(|p| p.c_rows.len()).sum();
+        assert!(b_total > 0 && c_total > 0);
+    }
+}

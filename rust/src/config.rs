@@ -1,0 +1,133 @@
+//! Experiment configuration: mini-TOML file + CLI overrides, shared by the
+//! `shiro` binary and the bench harness.
+
+use crate::partition::{split_1d, LocalBlocks, RowPartition};
+use crate::sparse::{dataset_by_name, Csr};
+use crate::topology::Topology;
+use crate::util::cli::Args;
+use crate::util::toml_mini::Config;
+
+/// Resolved run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub dataset: String,
+    pub ranks: usize,
+    pub n_dense: usize,
+    pub scale: f64,
+    pub topo: String,
+    pub epochs: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: "Pokec".into(),
+            ranks: 8,
+            n_dense: 32,
+            scale: 0.05,
+            topo: "tsubame4".into(),
+            epochs: 50,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from `--config <file>` (if given) then apply CLI overrides.
+    pub fn from_args(args: &Args) -> RunConfig {
+        let mut cfg = RunConfig::default();
+        if let Some(path) = args.get("config") {
+            match Config::load(std::path::Path::new(path)) {
+                Ok(file) => cfg.apply_file(&file),
+                Err(e) => {
+                    eprintln!("config {path}: {e:#}");
+                    std::process::exit(2);
+                }
+            }
+        }
+        if let Some(d) = args.get("dataset") {
+            cfg.dataset = d.to_string();
+        }
+        cfg.ranks = args.get_usize("ranks", cfg.ranks);
+        cfg.n_dense = args.get_usize("n", cfg.n_dense);
+        cfg.scale = args.get_f64("scale", cfg.scale);
+        if let Some(t) = args.get("topo") {
+            cfg.topo = t.to_string();
+        }
+        cfg.epochs = args.get_usize("epochs", cfg.epochs);
+        cfg
+    }
+
+    fn apply_file(&mut self, file: &Config) {
+        self.dataset = file.str_or("run.dataset", &self.dataset);
+        self.ranks = file.int_or("run.ranks", self.ranks as i64) as usize;
+        self.n_dense = file.int_or("run.n", self.n_dense as i64) as usize;
+        self.scale = file.float_or("run.scale", self.scale);
+        self.topo = file.str_or("run.topo", &self.topo);
+        self.epochs = file.int_or("run.epochs", self.epochs as i64) as usize;
+    }
+
+    /// Generate the configured dataset matrix.
+    pub fn matrix(&self) -> Csr {
+        match dataset_by_name(&self.dataset) {
+            Some(spec) => spec.generate(self.scale),
+            None => {
+                eprintln!("unknown dataset {:?} — see `shiro datasets`", self.dataset);
+                std::process::exit(2);
+            }
+        }
+    }
+
+    pub fn topology(&self) -> Topology {
+        Topology::by_name(&self.topo, self.ranks).unwrap_or_else(|| {
+            eprintln!("unknown topology {:?} (tsubame4 | aurora | flat)", self.topo);
+            std::process::exit(2);
+        })
+    }
+
+    pub fn split(&self, a: &Csr) -> (RowPartition, Vec<LocalBlocks>) {
+        let part = RowPartition::balanced(a.nrows, self.ranks);
+        let blocks = split_1d(a, &part);
+        (part, blocks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let cfg = RunConfig::from_args(&args(&["plan", "--ranks", "16", "--n", "64"]));
+        assert_eq!(cfg.ranks, 16);
+        assert_eq!(cfg.n_dense, 64);
+        assert_eq!(cfg.dataset, "Pokec");
+    }
+
+    #[test]
+    fn config_file_then_cli_override() {
+        let dir = std::env::temp_dir().join("shiro_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("run.toml");
+        std::fs::write(&p, "[run]\ndataset = \"mawi\"\nranks = 32\nn = 128\n").unwrap();
+        let cfg = RunConfig::from_args(&args(&[
+            "plan",
+            "--config",
+            p.to_str().unwrap(),
+            "--ranks",
+            "8",
+        ]));
+        assert_eq!(cfg.dataset, "mawi");
+        assert_eq!(cfg.ranks, 8); // CLI wins
+        assert_eq!(cfg.n_dense, 128); // file value survives
+    }
+
+    #[test]
+    fn topology_resolution() {
+        let cfg = RunConfig { topo: "aurora".into(), ranks: 24, ..Default::default() };
+        assert_eq!(cfg.topology().name, "aurora");
+    }
+}

@@ -1,0 +1,175 @@
+//! Dinic's max-flow algorithm on integer capacities, used to solve the
+//! minimum *weighted* vertex cover via the min-cut reduction (paper §5.3.2).
+
+/// Sentinel "infinite" capacity for bipartite edges (never cut).
+pub const INF: u64 = u64::MAX / 4;
+
+#[derive(Clone, Debug)]
+struct Edge {
+    to: u32,
+    cap: u64,
+    /// Index of the reverse edge in `graph[to]`.
+    rev: u32,
+}
+
+/// Flow network with Dinic's blocking-flow max-flow.
+pub struct Dinic {
+    graph: Vec<Vec<Edge>>,
+    level: Vec<i32>,
+    iter: Vec<usize>,
+}
+
+impl Dinic {
+    pub fn new(n: usize) -> Dinic {
+        Dinic {
+            graph: vec![Vec::new(); n],
+            level: vec![0; n],
+            iter: vec![0; n],
+        }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.graph.len()
+    }
+
+    /// Add a directed edge u→v with capacity `cap`.
+    pub fn add_edge(&mut self, u: usize, v: usize, cap: u64) {
+        let rev_u = self.graph[v].len() as u32;
+        let rev_v = self.graph[u].len() as u32;
+        self.graph[u].push(Edge { to: v as u32, cap, rev: rev_u });
+        self.graph[v].push(Edge { to: u as u32, cap: 0, rev: rev_v });
+    }
+
+    fn bfs(&mut self, s: usize, t: usize) -> bool {
+        self.level.iter_mut().for_each(|l| *l = -1);
+        let mut queue = std::collections::VecDeque::new();
+        self.level[s] = 0;
+        queue.push_back(s);
+        while let Some(u) = queue.pop_front() {
+            for e in &self.graph[u] {
+                if e.cap > 0 && self.level[e.to as usize] < 0 {
+                    self.level[e.to as usize] = self.level[u] + 1;
+                    queue.push_back(e.to as usize);
+                }
+            }
+        }
+        self.level[t] >= 0
+    }
+
+    fn dfs(&mut self, u: usize, t: usize, f: u64) -> u64 {
+        if u == t {
+            return f;
+        }
+        while self.iter[u] < self.graph[u].len() {
+            let i = self.iter[u];
+            let (to, cap, rev) = {
+                let e = &self.graph[u][i];
+                (e.to as usize, e.cap, e.rev as usize)
+            };
+            if cap > 0 && self.level[to] == self.level[u] + 1 {
+                let d = self.dfs(to, t, f.min(cap));
+                if d > 0 {
+                    self.graph[u][i].cap -= d;
+                    self.graph[to][rev].cap += d;
+                    return d;
+                }
+            }
+            self.iter[u] += 1;
+        }
+        0
+    }
+
+    /// Compute max flow s→t. Safe to call once per network.
+    pub fn max_flow(&mut self, s: usize, t: usize) -> u64 {
+        let mut flow = 0u64;
+        while self.bfs(s, t) {
+            self.iter.iter_mut().for_each(|i| *i = 0);
+            loop {
+                let f = self.dfs(s, t, INF);
+                if f == 0 {
+                    break;
+                }
+                flow += f;
+            }
+        }
+        flow
+    }
+
+    /// After max_flow: the set of nodes reachable from `s` in the residual
+    /// graph (the s-side of the min cut).
+    pub fn min_cut_side(&self, s: usize) -> Vec<bool> {
+        let mut seen = vec![false; self.graph.len()];
+        let mut stack = vec![s];
+        seen[s] = true;
+        while let Some(u) = stack.pop() {
+            for e in &self.graph[u] {
+                if e.cap > 0 && !seen[e.to as usize] {
+                    seen[e.to as usize] = true;
+                    stack.push(e.to as usize);
+                }
+            }
+        }
+        seen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_path() {
+        // s -3-> a -2-> t : flow 2.
+        let mut d = Dinic::new(3);
+        d.add_edge(0, 1, 3);
+        d.add_edge(1, 2, 2);
+        assert_eq!(d.max_flow(0, 2), 2);
+    }
+
+    #[test]
+    fn parallel_paths() {
+        let mut d = Dinic::new(4);
+        d.add_edge(0, 1, 5);
+        d.add_edge(0, 2, 3);
+        d.add_edge(1, 3, 4);
+        d.add_edge(2, 3, 4);
+        assert_eq!(d.max_flow(0, 3), 7);
+    }
+
+    #[test]
+    fn classic_textbook() {
+        // CLRS-style example with cross edge.
+        let mut d = Dinic::new(6);
+        d.add_edge(0, 1, 16);
+        d.add_edge(0, 2, 13);
+        d.add_edge(1, 3, 12);
+        d.add_edge(2, 1, 4);
+        d.add_edge(2, 4, 14);
+        d.add_edge(3, 2, 9);
+        d.add_edge(3, 5, 20);
+        d.add_edge(4, 3, 7);
+        d.add_edge(4, 5, 4);
+        assert_eq!(d.max_flow(0, 5), 23);
+    }
+
+    #[test]
+    fn min_cut_side_separates() {
+        let mut d = Dinic::new(4);
+        d.add_edge(0, 1, 1);
+        d.add_edge(1, 2, 100);
+        d.add_edge(2, 3, 100);
+        assert_eq!(d.max_flow(0, 3), 1);
+        let side = d.min_cut_side(0);
+        assert!(side[0]);
+        assert!(!side[1] && !side[2] && !side[3]);
+    }
+
+    #[test]
+    fn disconnected_zero_flow() {
+        let mut d = Dinic::new(3);
+        d.add_edge(0, 1, 10);
+        assert_eq!(d.max_flow(0, 2), 0);
+        let side = d.min_cut_side(0);
+        assert!(side[0] && side[1] && !side[2]);
+    }
+}

@@ -1,0 +1,213 @@
+//! Hopcroft–Karp maximum bipartite matching + König's theorem extraction of
+//! the minimum vertex cover — the fast path for uniform weights
+//! (paper §7.1.4: "a faster C++ implementation based on maximum bipartite
+//! matching and König's theorem").
+
+/// Bipartite graph in adjacency form: `adj[l]` = right-neighbour list of
+/// left vertex `l`. Right vertices are 0..n_right.
+pub struct Bipartite {
+    pub n_left: usize,
+    pub n_right: usize,
+    pub adj: Vec<Vec<u32>>,
+}
+
+const NIL: u32 = u32::MAX;
+
+pub struct MatchResult {
+    /// match_l[l] = matched right vertex or NIL.
+    pub match_l: Vec<u32>,
+    /// match_r[r] = matched left vertex or NIL.
+    pub match_r: Vec<u32>,
+    pub size: usize,
+}
+
+/// Hopcroft–Karp maximum matching, O(E√V).
+pub fn hopcroft_karp(g: &Bipartite) -> MatchResult {
+    let mut match_l = vec![NIL; g.n_left];
+    let mut match_r = vec![NIL; g.n_right];
+    let mut dist = vec![u32::MAX; g.n_left];
+    let mut size = 0usize;
+
+    loop {
+        // BFS from free left vertices; layers alternate non-matching /
+        // matching edges.
+        let mut queue = std::collections::VecDeque::new();
+        for l in 0..g.n_left {
+            if match_l[l] == NIL {
+                dist[l] = 0;
+                queue.push_back(l as u32);
+            } else {
+                dist[l] = u32::MAX;
+            }
+        }
+        let mut found = false;
+        while let Some(l) = queue.pop_front() {
+            for &r in &g.adj[l as usize] {
+                let l2 = match_r[r as usize];
+                if l2 == NIL {
+                    found = true;
+                } else if dist[l2 as usize] == u32::MAX {
+                    dist[l2 as usize] = dist[l as usize] + 1;
+                    queue.push_back(l2);
+                }
+            }
+        }
+        if !found {
+            break;
+        }
+        // DFS augmentation along shortest alternating paths.
+        fn dfs(
+            l: usize,
+            g: &Bipartite,
+            dist: &mut [u32],
+            match_l: &mut [u32],
+            match_r: &mut [u32],
+        ) -> bool {
+            for i in 0..g.adj[l].len() {
+                let r = g.adj[l][i] as usize;
+                let l2 = match_r[r];
+                if l2 == NIL
+                    || (dist[l2 as usize] == dist[l] + 1
+                        && dfs(l2 as usize, g, dist, match_l, match_r))
+                {
+                    match_l[l] = r as u32;
+                    match_r[r] = l as u32;
+                    return true;
+                }
+            }
+            dist[l] = u32::MAX;
+            false
+        }
+        for l in 0..g.n_left {
+            if match_l[l] == NIL && dfs(l, g, &mut dist, &mut match_l, &mut match_r) {
+                size += 1;
+            }
+        }
+    }
+    MatchResult { match_l, match_r, size }
+}
+
+/// König's theorem: from a maximum matching, extract a minimum vertex cover.
+/// Returns (left_in_cover, right_in_cover) boolean masks.
+///
+/// Z = vertices reachable from unmatched left vertices via alternating paths
+/// (non-matching left→right, matching right→left). Cover = (L \ Z) ∪ (R ∩ Z).
+pub fn koenig_cover(g: &Bipartite, m: &MatchResult) -> (Vec<bool>, Vec<bool>) {
+    let mut z_left = vec![false; g.n_left];
+    let mut z_right = vec![false; g.n_right];
+    let mut stack: Vec<u32> = (0..g.n_left as u32)
+        .filter(|&l| m.match_l[l as usize] == NIL)
+        .collect();
+    for &l in &stack {
+        z_left[l as usize] = true;
+    }
+    while let Some(l) = stack.pop() {
+        for &r in &g.adj[l as usize] {
+            if !z_right[r as usize] {
+                z_right[r as usize] = true;
+                let l2 = m.match_r[r as usize];
+                if l2 != NIL && !z_left[l2 as usize] {
+                    z_left[l2 as usize] = true;
+                    stack.push(l2);
+                }
+            }
+        }
+    }
+    let left_cover: Vec<bool> = z_left.iter().map(|&z| !z).collect();
+    // Only left vertices that have edges can be in a *minimum* cover;
+    // isolated left vertices are never reachable and never needed.
+    let left_cover = left_cover
+        .iter()
+        .enumerate()
+        .map(|(l, &c)| c && !g.adj[l].is_empty())
+        .collect();
+    (left_cover, z_right)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn graph(n_left: usize, n_right: usize, edges: &[(u32, u32)]) -> Bipartite {
+        let mut adj = vec![Vec::new(); n_left];
+        for &(l, r) in edges {
+            adj[l as usize].push(r);
+        }
+        Bipartite { n_left, n_right, adj }
+    }
+
+    fn cover_is_valid(g: &Bipartite, lc: &[bool], rc: &[bool]) -> bool {
+        for l in 0..g.n_left {
+            for &r in &g.adj[l] {
+                if !lc[l] && !rc[r as usize] {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    #[test]
+    fn perfect_matching() {
+        let g = graph(3, 3, &[(0, 0), (1, 1), (2, 2)]);
+        let m = hopcroft_karp(&g);
+        assert_eq!(m.size, 3);
+    }
+
+    #[test]
+    fn augmenting_path_needed() {
+        // l0-r0, l0-r1, l1-r0: matching size 2 requires augmentation.
+        let g = graph(2, 2, &[(0, 0), (0, 1), (1, 0)]);
+        let m = hopcroft_karp(&g);
+        assert_eq!(m.size, 2);
+    }
+
+    #[test]
+    fn star_graph_cover_is_center() {
+        // One left hub connected to 4 right vertices.
+        let g = graph(1, 4, &[(0, 0), (0, 1), (0, 2), (0, 3)]);
+        let m = hopcroft_karp(&g);
+        assert_eq!(m.size, 1);
+        let (lc, rc) = koenig_cover(&g, &m);
+        assert!(cover_is_valid(&g, &lc, &rc));
+        let total = lc.iter().filter(|&&x| x).count() + rc.iter().filter(|&&x| x).count();
+        assert_eq!(total, 1);
+        assert!(lc[0]);
+    }
+
+    #[test]
+    fn koenig_equals_matching_size() {
+        // König: |min cover| == |max matching| in bipartite graphs.
+        let g = graph(
+            4,
+            4,
+            &[(0, 0), (0, 1), (1, 1), (1, 2), (2, 2), (3, 3), (3, 0)],
+        );
+        let m = hopcroft_karp(&g);
+        let (lc, rc) = koenig_cover(&g, &m);
+        assert!(cover_is_valid(&g, &lc, &rc));
+        let total = lc.iter().filter(|&&x| x).count() + rc.iter().filter(|&&x| x).count();
+        assert_eq!(total, m.size);
+    }
+
+    #[test]
+    fn isolated_vertices_excluded() {
+        let g = graph(3, 3, &[(0, 0)]);
+        let m = hopcroft_karp(&g);
+        assert_eq!(m.size, 1);
+        let (lc, rc) = koenig_cover(&g, &m);
+        let total = lc.iter().filter(|&&x| x).count() + rc.iter().filter(|&&x| x).count();
+        assert_eq!(total, 1);
+        assert!(!lc[1] && !lc[2], "isolated left vertices must not be covered");
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = graph(2, 2, &[]);
+        let m = hopcroft_karp(&g);
+        assert_eq!(m.size, 0);
+        let (lc, rc) = koenig_cover(&g, &m);
+        assert!(lc.iter().all(|&x| !x));
+        assert!(rc.iter().all(|&x| !x));
+    }
+}

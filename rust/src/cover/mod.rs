@@ -1,0 +1,479 @@
+//! Joint row-column strategy selection (paper §5): for each off-diagonal
+//! block `A^(p,q)`, decide per nonzero whether it is served by row-based
+//! communication (send the corresponding partial C row) or column-based
+//! communication (fetch the corresponding B row), minimizing total
+//! communication cost.
+//!
+//! The optimal assignment is a minimum weighted vertex cover on the
+//! bipartite graph (rows ∪ cols, edge per nonzero) — solved by
+//! Hopcroft–Karp + König for uniform weights and Dinic max-flow min-cut for
+//! weighted costs. A greedy cover is included as the paper's strawman.
+
+pub mod dinic;
+pub mod matching;
+
+use crate::sparse::Csr;
+use dinic::{Dinic, INF};
+use matching::{hopcroft_karp, koenig_cover, Bipartite};
+
+/// Which cover algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Solver {
+    /// Hopcroft–Karp + König (uniform weights, optimal, O(E√V)).
+    Koenig,
+    /// Dinic max-flow min-cut (weighted, optimal, O(V²E) bound).
+    Dinic,
+    /// Degree-descending greedy set cover (suboptimal strawman, §5.2).
+    Greedy,
+    /// Pure column-based strategy (SPA/CoLa baseline, Eq. 2).
+    ColumnOnly,
+    /// Pure row-based strategy (Eq. 3).
+    RowOnly,
+}
+
+/// Per-vertex communication costs. `None` means uniform weight 1 per row.
+#[derive(Clone, Debug, Default)]
+pub struct Weights {
+    /// Cost of selecting row i (sending C row i). Length = block nrows.
+    pub row: Option<Vec<u64>>,
+    /// Cost of selecting column j (fetching B row j). Length = block ncols.
+    pub col: Option<Vec<u64>>,
+}
+
+/// Solution to the covering problem for one off-diagonal block.
+#[derive(Clone, Debug, Default)]
+pub struct CoverSolution {
+    /// Sorted local row indices chosen for row-based communication
+    /// (partial C rows computed at q and sent to p).
+    pub rows: Vec<u32>,
+    /// Sorted local column indices chosen for column-based communication
+    /// (B rows fetched from q).
+    pub cols: Vec<u32>,
+    /// Total weighted cost (== μ for uniform weights).
+    pub cost: u64,
+}
+
+impl CoverSolution {
+    /// μ — total number of selected vertices (Eq. 9).
+    pub fn mu(&self) -> usize {
+        self.rows.len() + self.cols.len()
+    }
+
+    /// Check the covering constraint x_j + y_i ≥ a_ij for every nonzero.
+    pub fn is_valid_for(&self, block: &Csr) -> bool {
+        let rset: Vec<bool> = mask(block.nrows, &self.rows);
+        let cset: Vec<bool> = mask(block.ncols, &self.cols);
+        for r in 0..block.nrows {
+            if rset[r] {
+                continue;
+            }
+            for &c in block.row_indices(r) {
+                if !cset[c as usize] {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+fn mask(n: usize, idx: &[u32]) -> Vec<bool> {
+    let mut m = vec![false; n];
+    for &i in idx {
+        m[i as usize] = true;
+    }
+    m
+}
+
+/// Solve the strategy-selection problem for one off-diagonal block.
+pub fn solve(block: &Csr, solver: Solver, weights: &Weights) -> CoverSolution {
+    if block.nnz() == 0 {
+        return CoverSolution::default();
+    }
+    match solver {
+        Solver::ColumnOnly => {
+            let cols = block.nonempty_cols();
+            let cost = weight_sum(weights.col.as_deref(), &cols);
+            CoverSolution { rows: Vec::new(), cols, cost }
+        }
+        Solver::RowOnly => {
+            let rows = block.nonempty_rows();
+            let cost = weight_sum(weights.row.as_deref(), &rows);
+            CoverSolution { rows, cols: Vec::new(), cost }
+        }
+        Solver::Koenig => solve_koenig(block),
+        Solver::Dinic => solve_dinic(block, weights),
+        Solver::Greedy => solve_greedy(block, weights),
+    }
+}
+
+fn weight_sum(w: Option<&[u64]>, idx: &[u32]) -> u64 {
+    match w {
+        None => idx.len() as u64,
+        Some(w) => idx.iter().map(|&i| w[i as usize]).sum(),
+    }
+}
+
+/// Compressed bipartite graph over the block's nonempty rows/cols.
+struct Compressed {
+    row_ids: Vec<u32>,
+    col_ids: Vec<u32>,
+    /// Map global col → compressed id.
+    col_of: Vec<u32>,
+}
+
+fn compress(block: &Csr) -> (Compressed, Bipartite) {
+    let row_ids = block.nonempty_rows();
+    let col_ids = block.nonempty_cols();
+    let mut col_of = vec![u32::MAX; block.ncols];
+    for (k, &c) in col_ids.iter().enumerate() {
+        col_of[c as usize] = k as u32;
+    }
+    let adj = row_ids
+        .iter()
+        .map(|&r| {
+            block
+                .row_indices(r as usize)
+                .iter()
+                .map(|&c| col_of[c as usize])
+                .collect()
+        })
+        .collect();
+    let g = Bipartite {
+        n_left: row_ids.len(),
+        n_right: col_ids.len(),
+        adj,
+    };
+    (Compressed { row_ids, col_ids, col_of }, g)
+}
+
+fn solve_koenig(block: &Csr) -> CoverSolution {
+    let (cmp, g) = compress(block);
+    let m = hopcroft_karp(&g);
+    let (lc, rc) = koenig_cover(&g, &m);
+    let rows: Vec<u32> = lc
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c)
+        .map(|(l, _)| cmp.row_ids[l])
+        .collect();
+    let cols: Vec<u32> = rc
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c)
+        .map(|(r, _)| cmp.col_ids[r])
+        .collect();
+    let cost = (rows.len() + cols.len()) as u64;
+    CoverSolution { rows, cols, cost }
+}
+
+fn solve_dinic(block: &Csr, weights: &Weights) -> CoverSolution {
+    let (cmp, g) = compress(block);
+    let (nl, nr) = (g.n_left, g.n_right);
+    // Node ids: s = 0, rows 1..=nl, cols nl+1..=nl+nr, t = nl+nr+1.
+    let s = 0usize;
+    let t = nl + nr + 1;
+    let mut net = Dinic::new(t + 1);
+    for l in 0..nl {
+        let w = weights
+            .row
+            .as_ref()
+            .map(|w| w[cmp.row_ids[l] as usize])
+            .unwrap_or(1);
+        net.add_edge(s, 1 + l, w);
+    }
+    for r in 0..nr {
+        let w = weights
+            .col
+            .as_ref()
+            .map(|w| w[cmp.col_ids[r] as usize])
+            .unwrap_or(1);
+        net.add_edge(1 + nl + r, t, w);
+    }
+    for l in 0..nl {
+        for &r in &g.adj[l] {
+            net.add_edge(1 + l, 1 + nl + r as usize, INF);
+        }
+    }
+    let cost = net.max_flow(s, t);
+    let reach = net.min_cut_side(s);
+    // Cut s→row edges (row NOT reachable) ⇒ row selected.
+    let rows: Vec<u32> = (0..nl)
+        .filter(|&l| !reach[1 + l])
+        .map(|l| cmp.row_ids[l])
+        .collect();
+    // Cut col→t edges (col reachable) ⇒ col selected.
+    let cols: Vec<u32> = (0..nr)
+        .filter(|&r| reach[1 + nl + r])
+        .map(|r| cmp.col_ids[r])
+        .collect();
+    CoverSolution { rows, cols, cost }
+}
+
+/// Greedy weighted set cover: repeatedly select the vertex with the best
+/// uncovered-edges-per-cost ratio. The paper's §5.2 strawman — kept for the
+/// ablation benches.
+fn solve_greedy(block: &Csr, weights: &Weights) -> CoverSolution {
+    let (cmp, g) = compress(block);
+    let (nl, nr) = (g.n_left, g.n_right);
+    let mut covered = vec![false; block.nnz()];
+    // Edge lists per compressed vertex, as indices into `covered`.
+    let mut row_edges: Vec<Vec<u32>> = vec![Vec::new(); nl];
+    let mut col_edges: Vec<Vec<u32>> = vec![Vec::new(); nr];
+    {
+        let mut eid = 0u32;
+        let mut row_of_gid = vec![u32::MAX; block.nrows];
+        for (k, &r) in cmp.row_ids.iter().enumerate() {
+            row_of_gid[r as usize] = k as u32;
+        }
+        for gr in 0..block.nrows {
+            for &gc in block.row_indices(gr) {
+                let l = row_of_gid[gr] as usize;
+                let r = cmp.col_of[gc as usize] as usize;
+                row_edges[l].push(eid);
+                col_edges[r].push(eid);
+                eid += 1;
+            }
+        }
+    }
+    let row_w = |l: usize| -> u64 {
+        weights
+            .row
+            .as_ref()
+            .map(|w| w[cmp.row_ids[l] as usize])
+            .unwrap_or(1)
+    };
+    let col_w = |r: usize| -> u64 {
+        weights
+            .col
+            .as_ref()
+            .map(|w| w[cmp.col_ids[r] as usize])
+            .unwrap_or(1)
+    };
+    let mut rows = Vec::new();
+    let mut cols = Vec::new();
+    let mut cost = 0u64;
+    let mut remaining = block.nnz();
+    while remaining > 0 {
+        // Pick best ratio uncovered/weight across all vertices.
+        let mut best: (f64, bool, usize, usize) = (-1.0, false, 0, 0); // (ratio, is_col, idx, gain)
+        for l in 0..nl {
+            let gain = row_edges[l].iter().filter(|&&e| !covered[e as usize]).count();
+            if gain == 0 {
+                continue;
+            }
+            let ratio = gain as f64 / row_w(l) as f64;
+            if ratio > best.0 {
+                best = (ratio, false, l, gain);
+            }
+        }
+        for r in 0..nr {
+            let gain = col_edges[r].iter().filter(|&&e| !covered[e as usize]).count();
+            if gain == 0 {
+                continue;
+            }
+            let ratio = gain as f64 / col_w(r) as f64;
+            if ratio > best.0 {
+                best = (ratio, true, r, gain);
+            }
+        }
+        let (_, is_col, idx, gain) = best;
+        debug_assert!(gain > 0);
+        if is_col {
+            for &e in &col_edges[idx] {
+                covered[e as usize] = true;
+            }
+            cols.push(cmp.col_ids[idx]);
+            cost += col_w(idx);
+        } else {
+            for &e in &row_edges[idx] {
+                covered[e as usize] = true;
+            }
+            rows.push(cmp.row_ids[idx]);
+            cost += row_w(idx);
+        }
+        remaining -= gain;
+    }
+    rows.sort_unstable();
+    cols.sort_unstable();
+    CoverSolution { rows, cols, cost }
+}
+
+/// Split a block's nonzeros by the cover decision (workflow step 2):
+/// `a_row` holds nonzeros served row-based (their row is in the cover;
+/// this portion is *shipped to the owner q* at plan time), `a_col` the
+/// rest (their column is guaranteed covered; stays at p).
+pub fn split_by_cover(block: &Csr, sol: &CoverSolution) -> (Csr, Csr) {
+    let rsel = mask(block.nrows, &sol.rows);
+    let mut row_coo = crate::sparse::Coo::new(block.nrows, block.ncols);
+    let mut col_coo = crate::sparse::Coo::new(block.nrows, block.ncols);
+    for r in 0..block.nrows {
+        let vals = block.row_values(r);
+        for (k, &c) in block.row_indices(r).iter().enumerate() {
+            if rsel[r] {
+                row_coo.push(r, c as usize, vals[k]);
+            } else {
+                col_coo.push(r, c as usize, vals[k]);
+            }
+        }
+    }
+    (row_coo.to_csr(), col_coo.to_csr())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    fn all_solvers() -> [Solver; 3] {
+        [Solver::Koenig, Solver::Dinic, Solver::Greedy]
+    }
+
+    #[test]
+    fn fig5_pattern_mu_values() {
+        // Paper Fig. 5: |Rows|, |Cols|, μ, reduction% table.
+        let expect = [
+            ("row-skewed", 2usize, 4usize, 2usize, 0.0),
+            ("col-skewed", 4, 2, 2, 0.0),
+            ("uniform", 4, 4, 4, 0.0),
+            ("mixed", 4, 4, 2, 50.0),
+        ];
+        for ((name, m), (ename, rows, cols, mu, red)) in
+            gen::fig5_patterns().iter().zip(expect)
+        {
+            assert_eq!(*name, ename);
+            assert_eq!(m.nonempty_rows().len(), rows, "{name} Rows");
+            assert_eq!(m.nonempty_cols().len(), cols, "{name} Cols");
+            let sol = solve(m, Solver::Koenig, &Weights::default());
+            assert!(sol.is_valid_for(m), "{name} invalid cover");
+            assert_eq!(sol.mu(), mu, "{name} μ");
+            let single_best = rows.min(cols) as f64;
+            let reduction = 100.0 * (1.0 - sol.mu() as f64 / single_best);
+            assert!((reduction - red).abs() < 1e-9, "{name} reduction {reduction}");
+        }
+    }
+
+    #[test]
+    fn fig4_example_matrix() {
+        // Paper Fig. 4: nonzeros {b,c,d,f,h}; optimal cover = {row 1, col 7},
+        // μ = 2. Entries (from Fig. 1(d)): row 0: cols 5,6,7; row 1: col 6;
+        // row 2: col 6. Rebased to a 3x3 block with cols {5,6,7}→{0,1,2}:
+        let mut coo = crate::sparse::Coo::new(3, 8);
+        coo.push(0, 5, 1.0);
+        coo.push(0, 6, 1.0);
+        coo.push(0, 7, 1.0);
+        coo.push(1, 6, 1.0);
+        coo.push(2, 6, 1.0);
+        let m = coo.to_csr();
+        let sol = solve(&m, Solver::Koenig, &Weights::default());
+        assert!(sol.is_valid_for(&m));
+        assert_eq!(sol.mu(), 2);
+        // Column-based would need 3 (cols 5,6,7); row-based 3 (rows 0,1,2).
+        assert_eq!(m.nonempty_cols().len(), 3);
+        assert_eq!(m.nonempty_rows().len(), 3);
+    }
+
+    #[test]
+    fn koenig_matches_dinic_uniform() {
+        for seed in 0..10 {
+            let m = gen::erdos_renyi(40, 40, 120, seed);
+            let k = solve(&m, Solver::Koenig, &Weights::default());
+            let d = solve(&m, Solver::Dinic, &Weights::default());
+            assert!(k.is_valid_for(&m));
+            assert!(d.is_valid_for(&m));
+            assert_eq!(k.cost, d.cost, "seed {seed}: König {} vs Dinic {}", k.cost, d.cost);
+        }
+    }
+
+    #[test]
+    fn optimal_never_worse_than_single_strategies() {
+        for seed in 0..8 {
+            let m = gen::powerlaw(64, 400, 1.4, seed);
+            let sol = solve(&m, Solver::Koenig, &Weights::default());
+            assert!(sol.mu() <= m.nonempty_cols().len());
+            assert!(sol.mu() <= m.nonempty_rows().len());
+        }
+    }
+
+    #[test]
+    fn greedy_valid_but_maybe_suboptimal() {
+        for seed in 0..8 {
+            let m = gen::rmat(64, 300, (0.5, 0.2, 0.2), false, seed);
+            let g = solve(&m, Solver::Greedy, &Weights::default());
+            let opt = solve(&m, Solver::Koenig, &Weights::default());
+            assert!(g.is_valid_for(&m), "seed {seed}");
+            assert!(g.cost >= opt.cost, "greedy beat optimal?!");
+        }
+    }
+
+    #[test]
+    fn weighted_dinic_respects_weights() {
+        // Cross pattern: row 0 covers {(0,0),(0,1)}, cols {0,1} also cover
+        // them. With row weight 10 and col weight 1, cols win even though
+        // the uniform optimum would pick the row.
+        let mut coo = crate::sparse::Coo::new(2, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 1, 1.0);
+        let m = coo.to_csr();
+        let w = Weights {
+            row: Some(vec![10, 10]),
+            col: Some(vec![1, 1]),
+        };
+        let sol = solve(&m, Solver::Dinic, &w);
+        assert!(sol.is_valid_for(&m));
+        assert_eq!(sol.cost, 2);
+        assert_eq!(sol.rows.len(), 0);
+        assert_eq!(sol.cols.len(), 2);
+    }
+
+    #[test]
+    fn column_only_and_row_only() {
+        let m = gen::erdos_renyi(30, 30, 90, 3);
+        let c = solve(&m, Solver::ColumnOnly, &Weights::default());
+        assert!(c.is_valid_for(&m));
+        assert_eq!(c.cols, m.nonempty_cols());
+        let r = solve(&m, Solver::RowOnly, &Weights::default());
+        assert!(r.is_valid_for(&m));
+        assert_eq!(r.rows, m.nonempty_rows());
+    }
+
+    #[test]
+    fn empty_block() {
+        let m = Csr::zeros(5, 5);
+        for s in all_solvers() {
+            let sol = solve(&m, s, &Weights::default());
+            assert_eq!(sol.mu(), 0);
+            assert!(sol.is_valid_for(&m));
+        }
+    }
+
+    #[test]
+    fn split_by_cover_partitions_nnz() {
+        let m = gen::powerlaw(64, 500, 1.5, 4);
+        let sol = solve(&m, Solver::Koenig, &Weights::default());
+        let (a_row, a_col) = split_by_cover(&m, &sol);
+        assert_eq!(a_row.nnz() + a_col.nnz(), m.nnz());
+        // a_row's rows ⊆ selected rows.
+        assert!(a_row.nonempty_rows().iter().all(|r| sol.rows.contains(r)));
+        // a_col's cols ⊆ selected cols.
+        assert!(a_col.nonempty_cols().iter().all(|c| sol.cols.contains(c)));
+        // Values preserved: sum check.
+        let total: f32 = m.data.iter().sum();
+        let split: f32 = a_row.data.iter().sum::<f32>() + a_col.data.iter().sum::<f32>();
+        assert!((total - split).abs() < 1e-3);
+    }
+
+    #[test]
+    fn dense_block_cover_small() {
+        // Fully dense k×k block: μ = k (cover one full side).
+        let mut coo = crate::sparse::Coo::new(3, 3);
+        for r in 0..3 {
+            for c in 0..3 {
+                coo.push(r, c, 1.0);
+            }
+        }
+        let m = coo.to_csr();
+        let sol = solve(&m, Solver::Koenig, &Weights::default());
+        assert_eq!(sol.mu(), 3);
+    }
+}

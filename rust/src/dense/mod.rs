@@ -1,0 +1,235 @@
+//! Row-major dense matrix substrate used for B/C blocks and GNN features.
+
+/// Row-major f32 dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dense {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Dense {
+    pub fn zeros(nrows: usize, ncols: usize) -> Dense {
+        Dense {
+            nrows,
+            ncols,
+            data: vec![0.0; nrows * ncols],
+        }
+    }
+
+    pub fn from_elem(nrows: usize, ncols: usize, v: f32) -> Dense {
+        Dense {
+            nrows,
+            ncols,
+            data: vec![v; nrows * ncols],
+        }
+    }
+
+    pub fn from_fn(nrows: usize, ncols: usize, f: impl Fn(usize, usize) -> f32) -> Dense {
+        let mut data = Vec::with_capacity(nrows * ncols);
+        for i in 0..nrows {
+            for j in 0..ncols {
+                data.push(f(i, j));
+            }
+        }
+        Dense { nrows, ncols, data }
+    }
+
+    pub fn from_vec(nrows: usize, ncols: usize, data: Vec<f32>) -> Dense {
+        assert_eq!(data.len(), nrows * ncols);
+        Dense { nrows, ncols, data }
+    }
+
+    /// Deterministic random matrix (for workloads / GNN features).
+    pub fn random(nrows: usize, ncols: usize, rng: &mut crate::util::rng::Rng) -> Dense {
+        let data = (0..nrows * ncols).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        Dense { nrows, ncols, data }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.ncols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.ncols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.ncols..(i + 1) * self.ncols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.ncols..(i + 1) * self.ncols]
+    }
+
+    /// Copy the rows at `rows` (in order) into a new matrix — the "pack B
+    /// rows for sending" primitive of sparsity-aware communication.
+    pub fn gather_rows(&self, rows: &[u32]) -> Dense {
+        let mut out = Dense::zeros(rows.len(), self.ncols);
+        for (i, &r) in rows.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(r as usize));
+        }
+        out
+    }
+
+    /// C[rows[i], :] += src[i, :] — the "unpack received C partials"
+    /// primitive (result aggregation).
+    pub fn scatter_add_rows(&mut self, rows: &[u32], src: &Dense) {
+        assert_eq!(rows.len(), src.nrows);
+        assert_eq!(self.ncols, src.ncols);
+        for (i, &r) in rows.iter().enumerate() {
+            let dst = self.row_mut(r as usize);
+            for (d, s) in dst.iter_mut().zip(src.row(i)) {
+                *d += s;
+            }
+        }
+    }
+
+    /// Elementwise addition: self += other.
+    pub fn add_assign(&mut self, other: &Dense) {
+        assert_eq!(self.nrows, other.nrows);
+        assert_eq!(self.ncols, other.ncols);
+        for (d, s) in self.data.iter_mut().zip(&other.data) {
+            *d += s;
+        }
+    }
+
+    /// Dense GEMM: self (m×k) · other (k×n). Reference implementation.
+    pub fn matmul(&self, other: &Dense) -> Dense {
+        assert_eq!(self.ncols, other.nrows);
+        let (m, k, n) = (self.nrows, self.ncols, other.ncols);
+        let mut out = Dense::zeros(m, n);
+        for i in 0..m {
+            for l in 0..k {
+                let a = self.get(i, l);
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = other.row(l);
+                let orow = out.row_mut(i);
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Transposed GEMM: selfᵀ (k×m becomes m-inner) · other — used in GNN
+    /// backward for weight gradients without materializing the transpose.
+    pub fn t_matmul(&self, other: &Dense) -> Dense {
+        assert_eq!(self.nrows, other.nrows);
+        let (k, m, n) = (self.nrows, self.ncols, other.ncols);
+        let mut out = Dense::zeros(m, n);
+        for l in 0..k {
+            let arow = self.row(l);
+            let brow = other.row(l);
+            for i in 0..m {
+                let a = arow[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = out.row_mut(i);
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Frobenius-norm of the difference, for test tolerances.
+    pub fn diff_norm(&self, other: &Dense) -> f64 {
+        assert_eq!(self.nrows, other.nrows);
+        assert_eq!(self.ncols, other.ncols);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Max absolute element.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn construction() {
+        let d = Dense::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        assert_eq!(d.get(1, 2), 5.0);
+        assert_eq!(d.row(0), &[0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let d = Dense::from_fn(5, 2, |i, _| i as f32);
+        let g = d.gather_rows(&[4, 0, 2]);
+        assert_eq!(g.row(0), &[4.0, 4.0]);
+        assert_eq!(g.row(2), &[2.0, 2.0]);
+        let mut acc = Dense::zeros(5, 2);
+        acc.scatter_add_rows(&[4, 0, 2], &g);
+        assert_eq!(acc.get(4, 0), 4.0);
+        assert_eq!(acc.get(0, 1), 0.0);
+        assert_eq!(acc.get(2, 0), 2.0);
+        assert_eq!(acc.get(1, 0), 0.0);
+    }
+
+    #[test]
+    fn scatter_add_accumulates() {
+        let src = Dense::from_elem(2, 1, 1.0);
+        let mut dst = Dense::zeros(3, 1);
+        dst.scatter_add_rows(&[1, 1], &src);
+        assert_eq!(dst.get(1, 0), 2.0);
+    }
+
+    #[test]
+    fn matmul_reference() {
+        let a = Dense::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Dense::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit_transpose() {
+        let mut rng = Rng::new(1);
+        let a = Dense::random(4, 3, &mut rng);
+        let b = Dense::random(4, 5, &mut rng);
+        let at = Dense::from_fn(3, 4, |i, j| a.get(j, i));
+        let want = at.matmul(&b);
+        let got = a.t_matmul(&b);
+        assert!(want.diff_norm(&got) < 1e-5);
+    }
+
+    #[test]
+    fn diff_norm_zero_for_same() {
+        let d = Dense::from_elem(3, 3, 2.0);
+        assert_eq!(d.diff_norm(&d), 0.0);
+    }
+
+    #[test]
+    fn add_assign_works() {
+        let mut a = Dense::from_elem(2, 2, 1.0);
+        a.add_assign(&Dense::from_elem(2, 2, 2.0));
+        assert_eq!(a.data, vec![3.0; 4]);
+    }
+}

@@ -1,0 +1,64 @@
+//! Local SpMM compute backends for the executor: a native Rust kernel and
+//! (via [`crate::runtime`]) the AOT-compiled Pallas/XLA kernel.
+
+use crate::dense::Dense;
+use crate::sparse::Csr;
+
+/// A local SpMM kernel: computes C = A·B (and the accumulating variant).
+pub trait SpmmKernel: Sync {
+    fn spmm(&self, a: &Csr, b: &Dense) -> Dense;
+
+    fn spmm_acc(&self, a: &Csr, b: &Dense, c: &mut Dense) {
+        let partial = self.spmm(a, b);
+        c.add_assign(&partial);
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust CSR SpMM (the serial reference path).
+pub struct NativeKernel;
+
+impl SpmmKernel for NativeKernel {
+    fn spmm(&self, a: &Csr, b: &Dense) -> Dense {
+        a.spmm(b)
+    }
+
+    fn spmm_acc(&self, a: &Csr, b: &Dense, c: &mut Dense) {
+        a.spmm_acc(b, c);
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn native_matches_reference() {
+        let a = gen::rmat(64, 400, (0.5, 0.2, 0.2), false, 1);
+        let mut rng = Rng::new(2);
+        let b = Dense::random(64, 8, &mut rng);
+        let k = NativeKernel;
+        assert_eq!(k.spmm(&a, &b), a.spmm(&b));
+        assert_eq!(k.name(), "native");
+    }
+
+    #[test]
+    fn default_acc_matches_specialized() {
+        let a = gen::erdos_renyi(32, 32, 100, 3);
+        let mut rng = Rng::new(4);
+        let b = Dense::random(32, 4, &mut rng);
+        let mut c1 = Dense::from_elem(32, 4, 0.5);
+        let mut c2 = c1.clone();
+        NativeKernel.spmm_acc(&a, &b, &mut c1);
+        let partial = NativeKernel.spmm(&a, &b);
+        c2.add_assign(&partial);
+        assert!(c1.diff_norm(&c2) < 1e-5);
+    }
+}

@@ -1,0 +1,628 @@
+//! In-process multi-rank executor: every "GPU" is a thread exchanging real
+//! messages over channels, running the five-stage SHIRO workflow (§5.1) —
+//! exactly the data movement the plan prescribes, so the numerics of every
+//! strategy can be verified bit-for-bit against the serial reference.
+//!
+//! Flat mode delivers the [`crate::comm::CommPlan`] directly; hierarchical
+//! mode routes through the [`crate::hierarchy::HierSchedule`] with
+//! representative forwarding and in-group pre-aggregation (Alg. 1).
+
+pub mod kernel;
+
+use crate::comm::CommPlan;
+use crate::dense::Dense;
+use crate::hierarchy::HierSchedule;
+use crate::partition::RowPartition;
+use crate::topology::{Tier, Topology};
+use kernel::SpmmKernel;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// A message between ranks. Row index spaces: `B.rows` are origin-local B
+/// rows; `C.rows` / `CAgg.rows` are destination-local C rows.
+enum Msg {
+    /// B rows owned by `origin` (column-based payload).
+    B {
+        origin: usize,
+        rows: Vec<u32>,
+        data: Dense,
+    },
+    /// Partial C rows, ready to scatter-add at the destination.
+    C { rows: Vec<u32>, data: Dense },
+    /// Producer → representative partial C rows destined for `final_dst`
+    /// (hierarchical row-based stage I).
+    CAgg {
+        final_dst: usize,
+        rows: Vec<u32>,
+        data: Dense,
+    },
+}
+
+impl Msg {
+    fn bytes(&self) -> u64 {
+        let (rows, data) = match self {
+            Msg::B { rows, data, .. } => (rows, data),
+            Msg::C { rows, data } => (rows, data),
+            Msg::CAgg { rows, data, .. } => (rows, data),
+        };
+        (rows.len() * 4 + data.size_bytes()) as u64
+    }
+}
+
+/// Per-rank execution statistics.
+#[derive(Clone, Debug, Default)]
+pub struct RankStats {
+    pub intra_bytes_sent: u64,
+    pub inter_bytes_sent: u64,
+    pub msgs_sent: u64,
+    pub compute_secs: f64,
+}
+
+/// Aggregated executor output.
+#[derive(Clone, Debug, Default)]
+pub struct ExecStats {
+    pub per_rank: Vec<RankStats>,
+    pub wall_secs: f64,
+}
+
+impl ExecStats {
+    pub fn total_inter_bytes(&self) -> u64 {
+        self.per_rank.iter().map(|r| r.inter_bytes_sent).sum()
+    }
+    pub fn total_intra_bytes(&self) -> u64 {
+        self.per_rank.iter().map(|r| r.intra_bytes_sent).sum()
+    }
+}
+
+/// How messages are routed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Flat,
+    Hierarchical,
+}
+
+struct Ctx<'a> {
+    rank: usize,
+    part: &'a RowPartition,
+    plan: &'a CommPlan,
+    sched: Option<&'a HierSchedule>,
+    topo: &'a Topology,
+    kernel: &'a dyn SpmmKernel,
+    senders: &'a [Sender<Msg>],
+    inbox: Receiver<Msg>,
+    stats: RankStats,
+}
+
+impl<'a> Ctx<'a> {
+    fn send(&mut self, dst: usize, msg: Msg) {
+        let bytes = msg.bytes();
+        match self.topo.tier(self.rank, dst) {
+            Tier::Intra => self.stats.intra_bytes_sent += bytes,
+            Tier::Inter => self.stats.inter_bytes_sent += bytes,
+        }
+        self.stats.msgs_sent += 1;
+        self.senders[dst]
+            .send(msg)
+            .expect("receiver hung up — peer rank panicked");
+    }
+
+    fn spmm(&mut self, a: &crate::sparse::Csr, b: &Dense) -> Dense {
+        let t0 = std::time::Instant::now();
+        let c = self.kernel.spmm(a, b);
+        self.stats.compute_secs += t0.elapsed().as_secs_f64();
+        c
+    }
+
+}
+
+/// Execute distributed SpMM: C = A·B where A was split by `part` into
+/// `plan` (and optionally `sched` for hierarchical routing). `b` is the
+/// full dense input (each rank only reads its own row block, mirroring the
+/// distributed layout); returns the assembled global C.
+pub fn run(
+    part: &RowPartition,
+    plan: &CommPlan,
+    blocks: &[crate::partition::LocalBlocks],
+    sched: Option<&HierSchedule>,
+    topo: &Topology,
+    b: &Dense,
+    kernel: &(dyn SpmmKernel + Sync),
+) -> (Dense, ExecStats) {
+    assert_eq!(part.n, b.nrows);
+    let nranks = part.nparts;
+    assert_eq!(plan.nranks, nranks);
+    let n_dense = b.ncols;
+
+    let mut senders = Vec::with_capacity(nranks);
+    let mut inboxes = Vec::with_capacity(nranks);
+    for _ in 0..nranks {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        inboxes.push(Some(rx));
+    }
+
+    let t0 = std::time::Instant::now();
+    let mut results: Vec<Option<(Dense, RankStats)>> = (0..nranks).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (rank, inbox) in inboxes.iter_mut().enumerate() {
+            let senders = &senders;
+            let inbox = inbox.take().unwrap();
+            let (r0, r1) = part.range(rank);
+            let b_local = Dense::from_vec(
+                r1 - r0,
+                n_dense,
+                b.data[r0 * n_dense..r1 * n_dense].to_vec(),
+            );
+            handles.push(scope.spawn(move || {
+                let mut ctx = Ctx {
+                    rank,
+                    part,
+                    plan,
+                    sched,
+                    topo,
+                    kernel,
+                    senders,
+                    inbox,
+                    stats: RankStats::default(),
+                };
+                let c = rank_main(&mut ctx, &blocks[rank], &b_local);
+                (rank, c, ctx.stats)
+            }));
+        }
+        for h in handles {
+            let (rank, c, stats) = h.join().expect("rank thread panicked");
+            results[rank] = Some((c, stats));
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut c_global = Dense::zeros(part.n, n_dense);
+    let mut per_rank = Vec::with_capacity(nranks);
+    for (rank, slot) in results.into_iter().enumerate() {
+        let (c_local, stats) = slot.unwrap();
+        let (r0, r1) = part.range(rank);
+        assert_eq!(c_local.nrows, r1 - r0);
+        c_global.data[r0 * n_dense..r1 * n_dense].copy_from_slice(&c_local.data);
+        per_rank.push(stats);
+    }
+    (c_global, ExecStats { per_rank, wall_secs: wall })
+}
+
+/// The per-rank program: workflow steps 3–5 of §5.1 (steps 1–2 are the
+/// offline planning already captured in `plan`/`sched`).
+fn rank_main(ctx: &mut Ctx, blocks: &crate::partition::LocalBlocks, b_local: &Dense) -> Dense {
+    // Stage: local computation with the diagonal block.
+    let mut c_local = ctx.spmm(&blocks.diag, b_local);
+
+    match ctx.sched {
+        None => flat_exchange(ctx, b_local, &mut c_local),
+        Some(_) => hier_exchange(ctx, b_local, &mut c_local),
+    }
+    c_local
+}
+
+// ---------------------------------------------------------------- flat ----
+
+fn flat_exchange(ctx: &mut Ctx, b_local: &Dense, c_local: &mut Dense) {
+    let r = ctx.rank;
+    let nranks = ctx.plan.nranks;
+
+    // Remote computation (row-based portions shipped to us offline) + sends.
+    let mut expected_b = 0usize;
+    let mut expected_c = 0usize;
+    for p in 0..nranks {
+        if p == r {
+            continue;
+        }
+        // Column-based: send our B rows that p needs.
+        let pair = &ctx.plan.pairs[p][r];
+        let b_rows: Vec<u32> = if pair.full_block {
+            (0..ctx.part.len(r) as u32).collect()
+        } else {
+            pair.b_rows.clone()
+        };
+        if !b_rows.is_empty() {
+            let data = b_local.gather_rows(&b_rows);
+            ctx.send(p, Msg::B { origin: r, rows: b_rows, data });
+        }
+        // Row-based: compute partial C rows for p and send (operand is the
+        // precomputed row-compact block — §Perf opt-1).
+        if !pair.c_rows.is_empty() {
+            let data = ctx.spmm(&pair.a_row_compact, b_local);
+            ctx.send(p, Msg::C { rows: pair.c_rows.clone(), data });
+        }
+        // What we expect to receive (mirror of the above at peer q=p).
+        let my_pair = &ctx.plan.pairs[r][p];
+        if my_pair.full_block || !my_pair.b_rows.is_empty() {
+            expected_b += 1;
+        }
+        if !my_pair.c_rows.is_empty() {
+            expected_c += 1;
+        }
+    }
+
+    // Receive loop: B rows → remote column-based compute; C partials →
+    // scatter-add (result aggregation).
+    let mut got_b = 0;
+    let mut got_c = 0;
+    while got_b < expected_b || got_c < expected_c {
+        match ctx.inbox.recv().expect("inbox closed") {
+            Msg::B { origin, rows, data } => {
+                apply_b_rows(ctx, origin, &rows, &data, c_local);
+                got_b += 1;
+            }
+            Msg::C { rows, data } => {
+                c_local.scatter_add_rows(&rows, &data);
+                got_c += 1;
+            }
+            Msg::CAgg { .. } => unreachable!("CAgg in flat mode"),
+        }
+    }
+}
+
+/// Remote column-based computation: the received B rows arrive packed in
+/// `b_rows` order, which is exactly the column space of the precomputed
+/// `a_col_compact` operand — multiply directly, no scatter (§Perf opt-1).
+fn apply_b_rows(ctx: &mut Ctx, origin: usize, rows: &[u32], data: &Dense, c_local: &mut Dense) {
+    let pair = &ctx.plan.pairs[ctx.rank][origin];
+    if pair.a_col_compact.nnz() == 0 {
+        return;
+    }
+    debug_assert_eq!(rows.len(), pair.a_col_compact.ncols);
+    debug_assert_eq!(rows, &pair.b_rows[..]);
+    let t0 = std::time::Instant::now();
+    let a_col = &ctx.plan.pairs[ctx.rank][origin].a_col_compact;
+    a_col.spmm_acc(data, c_local);
+    ctx.stats.compute_secs += t0.elapsed().as_secs_f64();
+}
+
+// ---------------------------------------------------------- hierarchical ----
+
+fn hier_exchange(ctx: &mut Ctx, b_local: &Dense, c_local: &mut Dense) {
+    let r = ctx.rank;
+    let sched = ctx.sched.unwrap();
+
+    // ---- Expected-receive bookkeeping (derived from the schedule). ----
+    // Stage I as rep: inter-B flows addressed to us; CAgg from producers.
+    let mut expect_flow_b = 0usize; // Msg::B with origin in another group
+    let mut expect_direct_b = 0usize; // Msg::B same group
+    let mut expect_cagg = 0usize; // Msg::CAgg (we are rep)
+    let mut expect_c = 0usize; // Msg::C (direct row-based or rep→us aggregated)
+    for f in &sched.b_flows {
+        if f.rep == r {
+            expect_flow_b += 1;
+        }
+        for (consumer, rows) in &f.consumers {
+            if *consumer == r && f.rep != r && !rows.is_empty() {
+                expect_direct_b += 1; // arrives as Msg::B from rep
+            }
+        }
+    }
+    for (_, dst, _) in &sched.direct_b {
+        if *dst == r {
+            expect_direct_b += 1;
+        }
+    }
+    for f in &sched.c_flows {
+        if f.rep == r {
+            expect_cagg += f.producers.iter().filter(|(p, _)| *p != r).count();
+        }
+        if f.dst == r {
+            expect_c += 1;
+        }
+    }
+    for (_, dst, _) in &sched.direct_c {
+        if *dst == r {
+            expect_c += 1;
+        }
+    }
+
+    // ---- Stage I sends ----
+    // Column-based ①: inter-group deduplicated B fetch (flows we source).
+    for f in sched.b_flows.iter().filter(|f| f.src == r) {
+        let data = b_local.gather_rows(&f.rows);
+        ctx.send(f.rep, Msg::B { origin: r, rows: f.rows.clone(), data });
+    }
+    // Row-based ①: compute partials; route via rep or direct.
+    // (a) partials destined outside our group → rep (CAgg) or self-keep.
+    let mut self_agg: Vec<(usize, Vec<u32>, Dense)> = Vec::new(); // (final_dst, rows, data) kept at rep == us
+    for f in &sched.c_flows {
+        for (producer, _) in &f.producers {
+            if *producer != r {
+                continue;
+            }
+            let pair = &ctx.plan.pairs[f.dst][r];
+            let data = ctx.spmm(&pair.a_row_compact, b_local);
+            if f.rep == r {
+                self_agg.push((f.dst, pair.c_rows.clone(), data));
+            } else {
+                ctx.send(
+                    f.rep,
+                    Msg::CAgg { final_dst: f.dst, rows: pair.c_rows.clone(), data },
+                );
+            }
+        }
+    }
+    // (b) same-group direct row-based.
+    for (src, dst, rows) in &sched.direct_c {
+        if *src != r {
+            continue;
+        }
+        let pair = &ctx.plan.pairs[*dst][r];
+        debug_assert_eq!(&pair.c_rows, rows);
+        let data = ctx.spmm(&pair.a_row_compact, b_local);
+        ctx.send(*dst, Msg::C { rows: rows.clone(), data });
+    }
+    // Same-group direct column-based (scheduled stage II in the paper, but
+    // independent — send now, receiver applies on arrival).
+    for (src, dst, rows) in &sched.direct_b {
+        if *src != r {
+            continue;
+        }
+        let data = b_local.gather_rows(rows);
+        ctx.send(*dst, Msg::B { origin: r, rows: rows.clone(), data });
+    }
+
+    // ---- Aggregation state for flows where we are rep ----
+    // (final_dst → accumulated rows/data over the union row set).
+    let mut agg: std::collections::BTreeMap<usize, (Vec<u32>, Dense)> =
+        std::collections::BTreeMap::new();
+    for f in sched.c_flows.iter().filter(|f| f.rep == r) {
+        agg.insert(
+            f.dst,
+            (f.rows.clone(), Dense::zeros(f.rows.len(), b_local.ncols)),
+        );
+    }
+    let mut agg_pending: std::collections::BTreeMap<usize, usize> = sched
+        .c_flows
+        .iter()
+        .filter(|f| f.rep == r)
+        .map(|f| (f.dst, f.producers.len()))
+        .collect();
+    // Fold in our own partials (if we are both producer and rep).
+    for (final_dst, rows, data) in self_agg {
+        fold_agg(&mut agg, final_dst, &rows, &data);
+        complete_agg(ctx, &mut agg, &mut agg_pending, final_dst);
+    }
+
+    // ---- Receive loop ----
+    let mut got_flow_b = 0;
+    let mut got_direct_b = 0;
+    let mut got_cagg = 0;
+    let mut got_c = 0;
+    while got_flow_b < expect_flow_b
+        || got_direct_b < expect_direct_b
+        || got_cagg < expect_cagg
+        || got_c < expect_c
+    {
+        match ctx.inbox.recv().expect("inbox closed") {
+            Msg::B { origin, rows, data } => {
+                let flow = sched
+                    .b_flows
+                    .iter()
+                    .find(|f| f.src == origin && f.rep == r)
+                    .filter(|_| ctx.topo.group_of(origin) != ctx.topo.group_of(r));
+                if let Some(f) = flow {
+                    // Stage II ②: distribute to in-group consumers; keep ours.
+                    for (consumer, crows) in &f.consumers {
+                        let sub = gather_subset(&rows, &data, crows);
+                        if *consumer == r {
+                            apply_b_rows(ctx, origin, crows, &sub, c_local);
+                        } else {
+                            ctx.send(
+                                *consumer,
+                                Msg::B { origin, rows: crows.clone(), data: sub },
+                            );
+                        }
+                    }
+                    got_flow_b += 1;
+                } else {
+                    // Direct in-group B or rep→consumer distribution.
+                    apply_b_rows(ctx, origin, &rows, &data, c_local);
+                    got_direct_b += 1;
+                }
+            }
+            Msg::CAgg { final_dst, rows, data } => {
+                fold_agg(&mut agg, final_dst, &rows, &data);
+                got_cagg += 1;
+                complete_agg(ctx, &mut agg, &mut agg_pending, final_dst);
+            }
+            Msg::C { rows, data } => {
+                c_local.scatter_add_rows(&rows, &data);
+                got_c += 1;
+            }
+        }
+    }
+}
+
+/// Add a producer's partial rows into the rep's union-row accumulator.
+fn fold_agg(
+    agg: &mut std::collections::BTreeMap<usize, (Vec<u32>, Dense)>,
+    final_dst: usize,
+    rows: &[u32],
+    data: &Dense,
+) {
+    let (union_rows, acc) = agg.get_mut(&final_dst).expect("unknown agg flow");
+    for (i, row) in rows.iter().enumerate() {
+        let k = union_rows.binary_search(row).expect("row not in union");
+        for (d, s) in acc.row_mut(k).iter_mut().zip(data.row(i)) {
+            *d += s;
+        }
+    }
+}
+
+/// If all producers for `final_dst` have contributed, ship the aggregate
+/// (Stage II ②: inter-group C transmission).
+fn complete_agg(
+    ctx: &mut Ctx,
+    agg: &mut std::collections::BTreeMap<usize, (Vec<u32>, Dense)>,
+    pending: &mut std::collections::BTreeMap<usize, usize>,
+    final_dst: usize,
+) {
+    let left = pending.get_mut(&final_dst).expect("unknown pending flow");
+    *left -= 1;
+    if *left == 0 {
+        let (rows, data) = agg.remove(&final_dst).unwrap();
+        ctx.send(final_dst, Msg::C { rows, data });
+        pending.remove(&final_dst);
+    }
+}
+
+/// Extract `want` rows (a subset of the sorted `have` rows) from `data`.
+fn gather_subset(have: &[u32], data: &Dense, want: &[u32]) -> Dense {
+    let mut out = Dense::zeros(want.len(), data.ncols);
+    for (i, w) in want.iter().enumerate() {
+        let k = have.binary_search(w).expect("subset violation");
+        out.row_mut(i).copy_from_slice(data.row(k));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{self, Strategy};
+    use crate::cover::Solver;
+    use crate::hierarchy;
+    use crate::partition::{split_1d, RowPartition};
+    use crate::sparse::gen;
+    use crate::util::rng::Rng;
+    use kernel::NativeKernel;
+
+    fn verify(
+        a: &crate::sparse::Csr,
+        ranks: usize,
+        strategy: Strategy,
+        mode: Mode,
+    ) -> ExecStats {
+        let part = RowPartition::balanced(a.nrows, ranks);
+        let blocks = split_1d(a, &part);
+        let plan = comm::plan(&blocks, &part, strategy, None);
+        let topo = Topology::tsubame4(ranks);
+        let sched = match mode {
+            Mode::Flat => None,
+            Mode::Hierarchical => Some(hierarchy::build(&plan, &topo)),
+        };
+        let mut rng = Rng::new(42);
+        let b = Dense::random(a.nrows, 16, &mut rng);
+        let want = a.spmm(&b);
+        let (got, stats) = run(
+            &part,
+            &plan,
+            &blocks,
+            sched.as_ref(),
+            &topo,
+            &b,
+            &NativeKernel,
+        );
+        let err = want.diff_norm(&got) / (want.max_abs() as f64 + 1e-30);
+        assert!(err < 1e-3, "{:?}/{mode:?}: rel err {err}", strategy);
+        stats
+    }
+
+    #[test]
+    fn flat_all_strategies_exact() {
+        let a = gen::rmat(128, 1500, (0.55, 0.2, 0.19), false, 1);
+        for strategy in [
+            Strategy::Block,
+            Strategy::Column,
+            Strategy::Row,
+            Strategy::Joint(Solver::Koenig),
+            Strategy::Joint(Solver::Greedy),
+        ] {
+            verify(&a, 8, strategy, Mode::Flat);
+        }
+    }
+
+    #[test]
+    fn hier_all_strategies_exact() {
+        let a = gen::rmat(128, 1500, (0.55, 0.2, 0.19), false, 2);
+        for strategy in [
+            Strategy::Column,
+            Strategy::Row,
+            Strategy::Joint(Solver::Koenig),
+        ] {
+            verify(&a, 8, strategy, Mode::Hierarchical);
+        }
+    }
+
+    #[test]
+    fn hier_across_datasets() {
+        for (gen_fn, name) in [
+            (gen::mesh2d(12, 3), "mesh"),
+            (gen::powerlaw(128, 1200, 1.4, 3), "web"),
+            (gen::banded_hub(128, 3, 4, 40, 3), "traffic"),
+        ] {
+            let _ = name;
+            verify(&gen_fn, 8, Strategy::Joint(Solver::Koenig), Mode::Hierarchical);
+        }
+    }
+
+    #[test]
+    fn hier_reduces_inter_bytes_vs_flat() {
+        // Web pattern with hubs: hierarchical dedup must cut inter-group
+        // bytes actually sent (measured, not planned).
+        let a = gen::powerlaw(256, 4000, 1.3, 4);
+        let flat = verify(&a, 16, Strategy::Joint(Solver::Koenig), Mode::Flat);
+        let hier = verify(&a, 16, Strategy::Joint(Solver::Koenig), Mode::Hierarchical);
+        assert!(
+            hier.total_inter_bytes() < flat.total_inter_bytes(),
+            "hier {} !< flat {}",
+            hier.total_inter_bytes(),
+            flat.total_inter_bytes()
+        );
+    }
+
+    #[test]
+    fn various_rank_counts() {
+        let a = gen::rmat(128, 2000, (0.5, 0.25, 0.15), false, 5);
+        for ranks in [2, 3, 5, 8, 16] {
+            verify(&a, ranks, Strategy::Joint(Solver::Koenig), Mode::Flat);
+            verify(&a, ranks, Strategy::Joint(Solver::Koenig), Mode::Hierarchical);
+        }
+    }
+
+    #[test]
+    fn single_rank_degenerate() {
+        let a = gen::rmat(64, 500, (0.5, 0.2, 0.2), false, 6);
+        verify(&a, 1, Strategy::Joint(Solver::Koenig), Mode::Flat);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let a = crate::sparse::Csr::zeros(32, 32);
+        let part = RowPartition::balanced(32, 4);
+        let blocks = split_1d(&a, &part);
+        let plan = comm::plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None);
+        let topo = Topology::tsubame4(4);
+        let b = Dense::from_elem(32, 4, 1.0);
+        let (got, _) = run(&part, &plan, &blocks, None, &topo, &b, &NativeKernel);
+        assert_eq!(got, Dense::zeros(32, 4));
+    }
+
+    #[test]
+    fn symmetric_matrix_symmetric_traffic() {
+        // Joint strategy on a symmetric matrix should produce symmetric
+        // measured traffic (Fig. 9's observation), unlike column-based.
+        let a = gen::banded_hub(256, 3, 6, 60, 7);
+        let part = RowPartition::balanced(256, 8);
+        let blocks = split_1d(&a, &part);
+        let topo = Topology::tsubame4(8);
+        let b = Dense::from_elem(256, 8, 1.0);
+
+        let jplan = comm::plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None);
+        let jm = jplan.volume_matrix(8);
+        let cplan = comm::plan(&blocks, &part, Strategy::Column, None);
+        let cm = cplan.volume_matrix(8);
+        assert!(
+            jm.asymmetry() <= cm.asymmetry() + 1e-9,
+            "joint {} vs column {}",
+            jm.asymmetry(),
+            cm.asymmetry()
+        );
+        // And both still compute the right answer.
+        let want = a.spmm(&b);
+        let (got, _) = run(&part, &jplan, &blocks, None, &topo, &b, &NativeKernel);
+        assert!(want.diff_norm(&got) < 1e-3);
+    }
+}

@@ -1,0 +1,398 @@
+//! Hierarchical communication strategy (paper §6): map a [`CommPlan`] onto a
+//! two-tier [`Topology`] by deduplicating inter-group B transfers
+//! (3-step column-based scheme, §6.1.2) and pre-aggregating partial C rows
+//! inside source groups (2-stage row-based scheme), then schedule the two
+//! patterns in complementary overlapped stages (§6.2, Alg. 1):
+//!
+//! - **Stage I**: inter-group B fetch (column-based ①) ∥ intra-group C
+//!   pre-aggregation (row-based ①).
+//! - **Stage II**: inter-group aggregated-C transmission (row-based ②) ∥
+//!   intra-group B distribution (column-based ②).
+
+use crate::comm::CommPlan;
+use crate::topology::Topology;
+use std::collections::BTreeMap;
+
+/// Hierarchical column-based flow: source rank `src` serves destination
+/// group `dst_group` through one deduplicated inter-group transfer to `rep`,
+/// which redistributes intra-group.
+#[derive(Clone, Debug)]
+pub struct BFlow {
+    pub src: usize,
+    pub dst_group: usize,
+    /// Representative (first hop) inside `dst_group`.
+    pub rep: usize,
+    /// Deduplicated union of B-row indices (src-local), sorted. This is
+    /// what crosses the inter-group link exactly once.
+    pub rows: Vec<u32>,
+    /// (consumer rank, its required subset of `rows`).
+    pub consumers: Vec<(usize, Vec<u32>)>,
+}
+
+/// Hierarchical row-based flow: the members of `src_group` produce partial C
+/// rows for destination `dst`; `rep` pre-aggregates rows with equal index
+/// and sends the aggregate across the inter-group link once.
+#[derive(Clone, Debug)]
+pub struct CFlow {
+    pub dst: usize,
+    pub src_group: usize,
+    pub rep: usize,
+    /// Union of C-row indices (dst-local), sorted — the aggregated payload.
+    pub rows: Vec<u32>,
+    /// (producer rank, its produced C-row subset).
+    pub producers: Vec<(usize, Vec<u32>)>,
+}
+
+/// The two-stage overlapped hierarchical schedule.
+#[derive(Clone, Debug, Default)]
+pub struct HierSchedule {
+    pub nranks: usize,
+    pub b_flows: Vec<BFlow>,
+    pub c_flows: Vec<CFlow>,
+    /// Same-group column-based transfers (no hierarchy needed): (src, dst,
+    /// src-local B rows). Scheduled in Stage II with B distribution.
+    pub direct_b: Vec<(usize, usize, Vec<u32>)>,
+    /// Same-group row-based transfers: (src, dst, dst-local C rows).
+    /// Scheduled in Stage I with the C-aggregation alltoall.
+    pub direct_c: Vec<(usize, usize, Vec<u32>)>,
+}
+
+fn union_sorted(sets: &[&[u32]]) -> Vec<u32> {
+    let mut all: Vec<u32> = sets.iter().flat_map(|s| s.iter().copied()).collect();
+    all.sort_unstable();
+    all.dedup();
+    all
+}
+
+/// Build the hierarchical schedule from a flat communication plan.
+pub fn build(plan: &CommPlan, topo: &Topology) -> HierSchedule {
+    assert_eq!(plan.nranks, topo.nranks);
+    let n = plan.nranks;
+    let mut b_groups: BTreeMap<(usize, usize), Vec<(usize, Vec<u32>)>> = BTreeMap::new();
+    let mut c_groups: BTreeMap<(usize, usize), Vec<(usize, Vec<u32>)>> = BTreeMap::new();
+    let mut direct_b = Vec::new();
+    let mut direct_c = Vec::new();
+
+    for p in 0..n {
+        for q in 0..n {
+            if p == q {
+                continue;
+            }
+            let pair = &plan.pairs[p][q];
+            // Column-based rows: q → p. Sparsity-oblivious pairs transfer
+            // the whole block.
+            let b_rows: Vec<u32> = if pair.full_block {
+                (0..plan.block_rows[q] as u32).collect()
+            } else {
+                pair.b_rows.clone()
+            };
+            if !b_rows.is_empty() {
+                if topo.group_of(p) == topo.group_of(q) {
+                    direct_b.push((q, p, b_rows));
+                } else {
+                    b_groups
+                        .entry((q, topo.group_of(p)))
+                        .or_default()
+                        .push((p, b_rows));
+                }
+            }
+            // Row-based rows: q computes partials for p.
+            if !pair.c_rows.is_empty() {
+                if topo.group_of(p) == topo.group_of(q) {
+                    direct_c.push((q, p, pair.c_rows.clone()));
+                } else {
+                    c_groups
+                        .entry((p, topo.group_of(q)))
+                        .or_default()
+                        .push((q, pair.c_rows.clone()));
+                }
+            }
+        }
+    }
+
+    let b_flows = b_groups
+        .into_iter()
+        .map(|((src, dst_group), consumers)| {
+            let rows = union_sorted(
+                &consumers.iter().map(|(_, r)| r.as_slice()).collect::<Vec<_>>(),
+            );
+            // Single consumer: skip the extra hop, deliver directly.
+            let rep = if consumers.len() == 1 {
+                consumers[0].0
+            } else {
+                topo.representative(dst_group, src)
+            };
+            BFlow { src, dst_group, rep, rows, consumers }
+        })
+        .collect();
+
+    let c_flows = c_groups
+        .into_iter()
+        .map(|((dst, src_group), producers)| {
+            let rows = union_sorted(
+                &producers.iter().map(|(_, r)| r.as_slice()).collect::<Vec<_>>(),
+            );
+            let rep = if producers.len() == 1 {
+                producers[0].0
+            } else {
+                topo.representative(src_group, dst)
+            };
+            CFlow { dst, src_group, rep, rows, producers }
+        })
+        .collect();
+
+    HierSchedule { nranks: n, b_flows, c_flows, direct_b, direct_c }
+}
+
+/// A point-to-point message with a tier-stage label, consumed by the
+/// simulator and (with payload attached) by the executor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageMsg {
+    pub src: usize,
+    pub dst: usize,
+    /// Number of dense rows carried.
+    pub rows: u64,
+}
+
+/// The four message sets of the overlapped schedule (Fig. 6f).
+#[derive(Clone, Debug, Default)]
+pub struct StagedMessages {
+    /// Stage I, inter-group: deduplicated B fetch (col ①).
+    pub s1_inter_b: Vec<StageMsg>,
+    /// Stage I, intra-group: C pre-aggregation + same-group row-based (row ①).
+    pub s1_intra_c: Vec<StageMsg>,
+    /// Stage II, inter-group: aggregated C transmission (row ②).
+    pub s2_inter_c: Vec<StageMsg>,
+    /// Stage II, intra-group: B distribution + same-group column-based (col ②).
+    pub s2_intra_b: Vec<StageMsg>,
+}
+
+impl HierSchedule {
+    /// Lower the schedule to per-stage message lists.
+    pub fn messages(&self) -> StagedMessages {
+        let mut m = StagedMessages::default();
+        for f in &self.b_flows {
+            m.s1_inter_b.push(StageMsg {
+                src: f.src,
+                dst: f.rep,
+                rows: f.rows.len() as u64,
+            });
+            for (consumer, rows) in &f.consumers {
+                if *consumer != f.rep {
+                    m.s2_intra_b.push(StageMsg {
+                        src: f.rep,
+                        dst: *consumer,
+                        rows: rows.len() as u64,
+                    });
+                }
+            }
+        }
+        for f in &self.c_flows {
+            for (producer, rows) in &f.producers {
+                if *producer != f.rep {
+                    m.s1_intra_c.push(StageMsg {
+                        src: *producer,
+                        dst: f.rep,
+                        rows: rows.len() as u64,
+                    });
+                }
+            }
+            m.s2_inter_c.push(StageMsg {
+                src: f.rep,
+                dst: f.dst,
+                rows: f.rows.len() as u64,
+            });
+        }
+        for (src, dst, rows) in &self.direct_c {
+            m.s1_intra_c.push(StageMsg { src: *src, dst: *dst, rows: rows.len() as u64 });
+        }
+        for (src, dst, rows) in &self.direct_b {
+            m.s2_intra_b.push(StageMsg { src: *src, dst: *dst, rows: rows.len() as u64 });
+        }
+        m
+    }
+
+    /// Total bytes crossing inter-group links (Fig. 8b metric).
+    pub fn inter_group_bytes(&self, n_dense: usize) -> u64 {
+        let m = self.messages();
+        let rows: u64 = m.s1_inter_b.iter().map(|x| x.rows).sum::<u64>()
+            + m.s2_inter_c.iter().map(|x| x.rows).sum::<u64>();
+        rows * n_dense as u64 * crate::comm::SZ_DT
+    }
+
+    /// Total bytes on intra-group links.
+    pub fn intra_group_bytes(&self, n_dense: usize) -> u64 {
+        let m = self.messages();
+        let rows: u64 = m.s1_intra_c.iter().map(|x| x.rows).sum::<u64>()
+            + m.s2_intra_b.iter().map(|x| x.rows).sum::<u64>();
+        rows * n_dense as u64 * crate::comm::SZ_DT
+    }
+}
+
+/// Inter-group bytes of the *flat* plan on the same topology (the baseline
+/// Fig. 8b compares against): every q→p pair crossing a group boundary pays
+/// its own transfer.
+pub fn flat_inter_group_bytes(plan: &CommPlan, topo: &Topology, n_dense: usize) -> u64 {
+    let mut v = 0;
+    for p in 0..plan.nranks {
+        for q in 0..plan.nranks {
+            if p != q && topo.group_of(p) != topo.group_of(q) {
+                v += plan.volume(p, q, n_dense);
+            }
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{self, Strategy};
+    use crate::cover::Solver;
+    use crate::partition::{split_1d, RowPartition};
+    use crate::sparse::gen;
+
+    fn setup(n: usize, ranks: usize, seed: u64) -> (CommPlan, Topology) {
+        let a = gen::rmat(n, n * 10, (0.55, 0.2, 0.19), false, seed);
+        let part = RowPartition::balanced(n, ranks);
+        let blocks = split_1d(&a, &part);
+        let plan = comm::plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None);
+        let topo = Topology::tsubame4(ranks);
+        (plan, topo)
+    }
+
+    #[test]
+    fn hier_never_increases_inter_traffic() {
+        for seed in 0..5 {
+            let (plan, topo) = setup(128, 8, seed);
+            let sched = build(&plan, &topo);
+            let n = 32;
+            assert!(
+                sched.inter_group_bytes(n) <= flat_inter_group_bytes(&plan, &topo, n),
+                "seed {seed}"
+            );
+        }
+    }
+
+    #[test]
+    fn dedup_counts_fig2_example() {
+        // Paper Fig. 2/6: 2 groups of 4; ranks 4..8 each need the same B rows
+        // {0,1,2} from rank 0 ⇒ flat sends 12 rows inter-group, hier sends 3.
+        let mut plan = CommPlan {
+            nranks: 8,
+            strategy: Strategy::Column,
+            pairs: vec![vec![Default::default(); 8]; 8],
+            block_rows: vec![16; 8],
+        };
+        for p in 4..8 {
+            plan.pairs[p][0].b_rows = vec![0, 1, 2];
+        }
+        let topo = Topology::tsubame4(8);
+        let flat = flat_inter_group_bytes(&plan, &topo, 1) / crate::comm::SZ_DT;
+        assert_eq!(flat, 12);
+        let sched = build(&plan, &topo);
+        let hier = sched.inter_group_bytes(1) / crate::comm::SZ_DT;
+        assert_eq!(hier, 3);
+        // And the intra-group distribution delivers each consumer its rows
+        // (3 consumers that are not the rep × 3 rows).
+        assert_eq!(sched.intra_group_bytes(1) / crate::comm::SZ_DT, 9);
+    }
+
+    #[test]
+    fn c_preaggregation_fig6e_example() {
+        // Ranks 0..4 (group 0) each produce partials for the same C rows
+        // {0,1} of rank 5 (group 1): flat = 8 rows inter; hier = 2 rows
+        // inter + intra aggregation traffic (3 producers → rep).
+        let mut plan = CommPlan {
+            nranks: 8,
+            strategy: Strategy::Row,
+            pairs: vec![vec![Default::default(); 8]; 8],
+            block_rows: vec![16; 8],
+        };
+        for q in 0..4 {
+            plan.pairs[5][q].c_rows = vec![0, 1];
+        }
+        let topo = Topology::tsubame4(8);
+        assert_eq!(flat_inter_group_bytes(&plan, &topo, 1) / crate::comm::SZ_DT, 8);
+        let sched = build(&plan, &topo);
+        assert_eq!(sched.inter_group_bytes(1) / crate::comm::SZ_DT, 2);
+        assert_eq!(sched.intra_group_bytes(1) / crate::comm::SZ_DT, 6);
+    }
+
+    #[test]
+    fn consumers_rows_subset_of_union() {
+        let (plan, topo) = setup(128, 8, 3);
+        let sched = build(&plan, &topo);
+        for f in &sched.b_flows {
+            for (_, rows) in &f.consumers {
+                for r in rows {
+                    assert!(f.rows.binary_search(r).is_ok());
+                }
+            }
+            assert!(topo.group_members(f.dst_group).contains(&f.rep));
+            assert_ne!(topo.group_of(f.src), f.dst_group);
+        }
+        for f in &sched.c_flows {
+            for (_, rows) in &f.producers {
+                for r in rows {
+                    assert!(f.rows.binary_search(r).is_ok());
+                }
+            }
+            assert!(topo.group_members(f.src_group).contains(&f.rep));
+            assert_ne!(topo.group_of(f.dst), f.src_group);
+        }
+    }
+
+    #[test]
+    fn direct_transfers_stay_intra() {
+        let (plan, topo) = setup(128, 8, 4);
+        let sched = build(&plan, &topo);
+        for (s, d, _) in &sched.direct_b {
+            assert_eq!(topo.group_of(*s), topo.group_of(*d));
+        }
+        for (s, d, _) in &sched.direct_c {
+            assert_eq!(topo.group_of(*s), topo.group_of(*d));
+        }
+    }
+
+    #[test]
+    fn stage_messages_tier_consistent() {
+        let (plan, topo) = setup(128, 8, 5);
+        let sched = build(&plan, &topo);
+        let m = sched.messages();
+        use crate::topology::Tier;
+        for msg in m.s1_inter_b.iter().chain(&m.s2_inter_c) {
+            assert_eq!(topo.tier(msg.src, msg.dst), Tier::Inter, "{msg:?}");
+        }
+        for msg in m.s1_intra_c.iter().chain(&m.s2_intra_b) {
+            assert_eq!(topo.tier(msg.src, msg.dst), Tier::Intra, "{msg:?}");
+        }
+    }
+
+    #[test]
+    fn single_consumer_skips_rep_hop() {
+        let mut plan = CommPlan {
+            nranks: 8,
+            strategy: Strategy::Column,
+            pairs: vec![vec![Default::default(); 8]; 8],
+            block_rows: vec![16; 8],
+        };
+        plan.pairs[6][1].b_rows = vec![3, 4];
+        let topo = Topology::tsubame4(8);
+        let sched = build(&plan, &topo);
+        assert_eq!(sched.b_flows.len(), 1);
+        assert_eq!(sched.b_flows[0].rep, 6);
+        let m = sched.messages();
+        assert_eq!(m.s2_intra_b.len(), 0, "no second hop for single consumer");
+    }
+
+    #[test]
+    fn flat_topology_all_direct() {
+        let (plan, _) = setup(64, 8, 6);
+        let topo = Topology::flat(8, 25e9);
+        let sched = build(&plan, &topo);
+        assert!(sched.b_flows.is_empty());
+        assert!(sched.c_flows.is_empty());
+        assert_eq!(sched.inter_group_bytes(32), 0);
+    }
+}

@@ -1,0 +1,33 @@
+//! # SHIRO
+//!
+//! Reproduction of *"SHIRO: Near-Optimal Communication Strategies for
+//! Distributed Sparse Matrix Multiplication"* (ICS '26) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! - **L3 (this crate)** — the paper's contribution: sparsity-aware joint
+//!   row-column communication planning ([`cover`], [`comm`]) and
+//!   hierarchical scheduling ([`hierarchy`]) over a simulated two-tier GPU
+//!   cluster ([`topology`], [`sim`]) with a real multi-rank executor
+//!   ([`exec`]) and distributed SpMM engine ([`spmm`]).
+//! - **L2/L1 (python/compile)** — JAX GCN model + Pallas SpMM kernels,
+//!   AOT-lowered to HLO text, loaded at runtime via [`runtime`] (PJRT).
+//!
+//! See DESIGN.md for the system inventory and experiment index.
+
+pub mod baselines;
+pub mod bench;
+pub mod comm;
+pub mod config;
+pub mod cover;
+pub mod dense;
+pub mod exec;
+pub mod gnn;
+pub mod metrics;
+pub mod partition;
+pub mod hierarchy;
+pub mod runtime;
+pub mod sim;
+pub mod topology;
+pub mod sparse;
+pub mod spmm;
+pub mod util;

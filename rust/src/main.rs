@@ -1,0 +1,206 @@
+//! `shiro` — the framework launcher.
+//!
+//! Subcommands:
+//!   datasets                         Tab. 2 registry and generated stats
+//!   plan     --dataset D --ranks R   plan + volume report per strategy
+//!   run      --dataset D --ranks R   execute distributed SpMM, verify
+//!   sim      --dataset D --ranks R   simulate all systems at scale
+//!   gnn      --epochs E --ranks R    GCN training case study
+//!   info                             runtime/artifact status
+//!
+//! Global flags: --n <dense cols> --scale <dataset scale> --topo <name>
+//! --config <file.toml> (CLI overrides config values).
+
+use shiro::comm::Strategy;
+use shiro::config::RunConfig;
+use shiro::cover::Solver;
+use shiro::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let cfg = RunConfig::from_args(&args);
+    match cmd {
+        "datasets" => cmd_datasets(&cfg),
+        "plan" => cmd_plan(&cfg),
+        "run" => cmd_run(&cfg),
+        "sim" => cmd_sim(&cfg),
+        "gnn" => cmd_gnn(&cfg),
+        "trace" => cmd_trace(&cfg),
+        "info" => cmd_info(),
+        _ => {
+            eprintln!(
+                "usage: shiro <datasets|plan|run|sim|gnn|trace|info> \
+                 [--dataset D] [--ranks R] [--n N] [--scale S] [--topo T] [--config F]"
+            );
+            std::process::exit(if cmd == "help" { 0 } else { 2 });
+        }
+    }
+}
+
+fn cmd_datasets(cfg: &RunConfig) {
+    use shiro::metrics::Table;
+    use shiro::sparse::{stats::stats, DATASETS};
+    let mut t = Table::new(&[
+        "name", "paper size", "domain", "rows", "nnz", "density", "row-gini", "sym",
+    ]);
+    for d in DATASETS {
+        let m = d.generate(cfg.scale);
+        let s = stats(&m);
+        t.row(vec![
+            d.name.into(),
+            format!("{} / {}", d.paper_rows, d.paper_nnz),
+            d.domain.into(),
+            s.nrows.to_string(),
+            s.nnz.to_string(),
+            format!("{:.1e}", s.density),
+            format!("{:.2}", s.row_gini),
+            if s.structurally_symmetric { "yes" } else { "no" }.into(),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn cmd_plan(cfg: &RunConfig) {
+    use shiro::metrics::{reduction_pct, Table};
+    let a = cfg.matrix();
+    let (part, blocks) = cfg.split(&a);
+    println!(
+        "{}: {}x{} nnz={} on {} ranks, N={}",
+        cfg.dataset, a.nrows, a.ncols, a.nnz(), cfg.ranks, cfg.n_dense
+    );
+    let mut t = Table::new(&["strategy", "total bytes", "vs column %", "prep ms"]);
+    let mut col = 0u64;
+    for s in [
+        Strategy::Block,
+        Strategy::Column,
+        Strategy::Row,
+        Strategy::Joint(Solver::Greedy),
+        Strategy::Joint(Solver::Koenig),
+    ] {
+        let t0 = std::time::Instant::now();
+        let plan = shiro::comm::plan(&blocks, &part, s, None);
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let v = plan.total_volume(cfg.n_dense);
+        if s == Strategy::Column {
+            col = v;
+        }
+        t.row(vec![
+            s.name().into(),
+            v.to_string(),
+            if col > 0 { format!("{:.1}", reduction_pct(col, v)) } else { "-".into() },
+            format!("{ms:.1}"),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn cmd_run(cfg: &RunConfig) {
+    use shiro::dense::Dense;
+    use shiro::exec::kernel::NativeKernel;
+    use shiro::spmm::DistSpmm;
+    use shiro::util::rng::Rng;
+    let a = cfg.matrix();
+    let topo = cfg.topology();
+    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), topo, true);
+    let mut rng = Rng::new(1);
+    let b = Dense::random(a.nrows, cfg.n_dense, &mut rng);
+    let (c, stats) = d.execute(&b, &NativeKernel);
+    let want = a.spmm(&b);
+    let err = want.diff_norm(&c) / (want.max_abs() as f64 + 1e-30);
+    println!(
+        "executed {} ranks: rel err {err:.2e}, wall {:.1} ms, intra {} B, inter {} B",
+        cfg.ranks,
+        stats.wall_secs * 1e3,
+        stats.total_intra_bytes(),
+        stats.total_inter_bytes()
+    );
+    assert!(err < 1e-3, "verification failed");
+}
+
+fn cmd_sim(cfg: &RunConfig) {
+    use shiro::baselines::{simulate, System};
+    use shiro::metrics::Table;
+    let a = cfg.matrix();
+    let topo = cfg.topology();
+    let mut t = Table::new(&["system", "time/SpMM (ms)", "inter MiB", "intra MiB"]);
+    for sys in System::all() {
+        let r = simulate(sys, &a, cfg.n_dense, &topo);
+        t.row(vec![
+            sys.name().into(),
+            format!("{:.3}", r.total * 1e3),
+            format!("{:.2}", r.inter_bytes as f64 / (1 << 20) as f64),
+            format!("{:.2}", r.intra_bytes as f64 / (1 << 20) as f64),
+        ]);
+    }
+    println!(
+        "{} @ {} ranks on {} (N={}):\n{}",
+        cfg.dataset, cfg.ranks, cfg.topo, cfg.n_dense, t.render()
+    );
+}
+
+fn cmd_gnn(cfg: &RunConfig) {
+    use shiro::exec::kernel::NativeKernel;
+    use shiro::gnn::{Gcn, GcnConfig, NativeDense};
+    use shiro::sparse::gen;
+    let n = (512 * cfg.ranks).next_power_of_two();
+    let adj = gen::rmat(n, n * 10, (0.55, 0.2, 0.19), true, 42);
+    let gcn_cfg = GcnConfig {
+        epochs: cfg.epochs,
+        log_every: (cfg.epochs / 10).max(1),
+        lr: 2.0,
+        ..Default::default()
+    };
+    let mut gcn = Gcn::new(
+        &adj,
+        Strategy::Joint(Solver::Koenig),
+        cfg.topology(),
+        true,
+        gcn_cfg,
+    );
+    let report = gcn.train(&NativeKernel, &NativeDense);
+    for (e, l) in &report.losses {
+        println!("epoch {e:>4} loss {l:.6}");
+    }
+    println!(
+        "train {:.2}s, spmm {:.2}s ({} calls), prep {:.3}s ({:.1}%)",
+        report.train_secs,
+        report.spmm_secs,
+        report.spmm_calls,
+        report.prep_secs,
+        100.0 * report.prep_secs / (report.prep_secs + report.train_secs)
+    );
+}
+
+fn cmd_trace(cfg: &RunConfig) {
+    use shiro::sim::trace::{to_chrome_json, trace};
+    use shiro::spmm::DistSpmm;
+    let a = cfg.matrix();
+    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), cfg.topology(), true);
+    let job = d.sim_job(cfg.n_dense);
+    let timings = trace(&job, &d.topo);
+    let json = to_chrome_json(&timings, &job);
+    let path = format!("trace_{}_{}r.json", cfg.dataset, cfg.ranks);
+    std::fs::write(&path, json).expect("write trace");
+    println!(
+        "wrote {path} ({} messages) — load in chrome://tracing or Perfetto",
+        timings.len()
+    );
+}
+
+fn cmd_info() {
+    use shiro::runtime::Runtime;
+    println!("shiro {}", env!("CARGO_PKG_VERSION"));
+    match Runtime::load(&Runtime::default_dir()) {
+        Ok(rt) => {
+            println!("artifacts: {} loaded from {}", rt.artifact_names().len(), rt.dir().display());
+            println!("platform: {}", rt.platform());
+            let mut names = rt.artifact_names().into_iter().map(String::from).collect::<Vec<_>>();
+            names.sort();
+            for n in names {
+                println!("  {n}");
+            }
+        }
+        Err(e) => println!("artifacts: not available ({e:#}) — run `make artifacts`"),
+    }
+}

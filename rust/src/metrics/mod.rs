@@ -1,0 +1,255 @@
+//! Communication-volume accounting and reporting: per-pair volume matrices
+//! (Fig. 9 heatmaps), totals/reductions (Fig. 8), imbalance and symmetry
+//! measures, and simple table/CSV emitters shared by the benches.
+
+use std::fmt::Write as _;
+
+/// nranks × nranks matrix of bytes sent from src (row) to dst (col).
+#[derive(Clone, Debug, PartialEq)]
+pub struct VolumeMatrix {
+    pub n: usize,
+    pub data: Vec<u64>,
+}
+
+impl VolumeMatrix {
+    pub fn zeros(n: usize) -> VolumeMatrix {
+        VolumeMatrix { n, data: vec![0; n * n] }
+    }
+
+    #[inline]
+    pub fn get(&self, src: usize, dst: usize) -> u64 {
+        self.data[src * self.n + dst]
+    }
+
+    #[inline]
+    pub fn set(&mut self, src: usize, dst: usize, v: u64) {
+        self.data[src * self.n + dst] = v;
+    }
+
+    #[inline]
+    pub fn add(&mut self, src: usize, dst: usize, v: u64) {
+        self.data[src * self.n + dst] += v;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.data.iter().sum()
+    }
+
+    pub fn max(&self) -> u64 {
+        self.data.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Sum of volume crossing group boundaries, given each rank's group id
+    /// (Fig. 8b's inter-node volume metric).
+    pub fn inter_group_total(&self, group_of: &[usize]) -> u64 {
+        assert_eq!(group_of.len(), self.n);
+        let mut v = 0;
+        for s in 0..self.n {
+            for d in 0..self.n {
+                if group_of[s] != group_of[d] {
+                    v += self.get(s, d);
+                }
+            }
+        }
+        v
+    }
+
+    /// Load imbalance: max over ranks of (sent+received) divided by mean.
+    pub fn imbalance(&self) -> f64 {
+        let mut per_rank = vec![0u64; self.n];
+        for s in 0..self.n {
+            for d in 0..self.n {
+                per_rank[s] += self.get(s, d);
+                per_rank[d] += self.get(s, d);
+            }
+        }
+        let max = per_rank.iter().copied().max().unwrap_or(0) as f64;
+        let mean = per_rank.iter().sum::<u64>() as f64 / self.n.max(1) as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Relative asymmetry: ‖V - Vᵀ‖₁ / ‖V‖₁ (0 = perfectly symmetric).
+    /// Fig. 9's observation: the joint strategy restores symmetry on
+    /// symmetric matrices.
+    pub fn asymmetry(&self) -> f64 {
+        let total = self.total() as f64;
+        if total == 0.0 {
+            return 0.0;
+        }
+        let mut diff = 0u64;
+        for s in 0..self.n {
+            for d in 0..self.n {
+                diff += self.get(s, d).abs_diff(self.get(d, s));
+            }
+        }
+        diff as f64 / total
+    }
+
+    /// CSV export (one row per source rank), volumes normalized by the
+    /// matrix max when `normalize` (the Fig. 9 convention).
+    pub fn to_csv(&self, normalize: bool) -> String {
+        let max = self.max().max(1) as f64;
+        let mut out = String::new();
+        for s in 0..self.n {
+            for d in 0..self.n {
+                if d > 0 {
+                    out.push(',');
+                }
+                if normalize {
+                    let _ = write!(out, "{:.4}", self.get(s, d) as f64 / max);
+                } else {
+                    let _ = write!(out, "{}", self.get(s, d));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// ASCII heatmap (for terminal inspection of Fig. 9).
+    pub fn to_ascii(&self) -> String {
+        const SHADES: &[u8] = b" .:-=+*#%@";
+        let max = self.max().max(1) as f64;
+        let mut out = String::new();
+        for s in 0..self.n {
+            for d in 0..self.n {
+                let v = self.get(s, d) as f64 / max;
+                let idx = ((v * (SHADES.len() - 1) as f64).round() as usize)
+                    .min(SHADES.len() - 1);
+                out.push(SHADES[idx] as char);
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Percent reduction from `base` to `opt` (Fig. 8 bars).
+pub fn reduction_pct(base: u64, opt: u64) -> f64 {
+    if base == 0 {
+        return 0.0;
+    }
+    100.0 * (1.0 - opt as f64 / base as f64)
+}
+
+/// Fixed-width table printer used by all benches.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut width = vec![0usize; ncols];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize], out: &mut String| {
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                let _ = write!(out, "{:<w$}", c, w = width[i]);
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.headers, &width, &mut out);
+        let total: usize = width.iter().sum::<usize>() + 2 * (ncols - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(row, &width, &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_and_groups() {
+        let mut m = VolumeMatrix::zeros(4);
+        m.set(0, 1, 10);
+        m.set(0, 2, 20);
+        m.set(2, 3, 5);
+        assert_eq!(m.total(), 35);
+        // Groups {0,1}, {2,3}: only 0→2 crosses.
+        assert_eq!(m.inter_group_total(&[0, 0, 1, 1]), 20);
+    }
+
+    #[test]
+    fn asymmetry_zero_for_symmetric() {
+        let mut m = VolumeMatrix::zeros(3);
+        m.set(0, 1, 7);
+        m.set(1, 0, 7);
+        assert_eq!(m.asymmetry(), 0.0);
+        m.set(2, 0, 4);
+        assert!(m.asymmetry() > 0.0);
+    }
+
+    #[test]
+    fn imbalance_one_when_uniform() {
+        let mut m = VolumeMatrix::zeros(2);
+        m.set(0, 1, 5);
+        m.set(1, 0, 5);
+        assert!((m.imbalance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reduction_pct_basic() {
+        assert!((reduction_pct(100, 4) - 96.0).abs() < 1e-12);
+        assert_eq!(reduction_pct(0, 5), 0.0);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut m = VolumeMatrix::zeros(2);
+        m.set(0, 1, 10);
+        let csv = m.to_csv(true);
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("0.0000,1.0000"));
+    }
+
+    #[test]
+    fn ascii_shape() {
+        let m = VolumeMatrix::zeros(3);
+        let a = m.to_ascii();
+        assert_eq!(a.lines().count(), 3);
+        assert!(a.lines().all(|l| l.len() == 3));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["long-name".into(), "22".into()]);
+        let s = t.render();
+        assert!(s.contains("long-name"));
+        assert_eq!(s.lines().count(), 4);
+    }
+}

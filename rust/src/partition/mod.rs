@@ -1,0 +1,226 @@
+//! Matrix partitioning: 1D row partition (SHIRO's setting, paper §2.2) plus
+//! the 1.5D and 2D layouts needed by the CAGNET/SPA/BCL baselines.
+
+use crate::sparse::Csr;
+
+/// A 1D row partition of an n-row matrix over `nparts` processes:
+/// contiguous, balanced row ranges.
+#[derive(Clone, Debug)]
+pub struct RowPartition {
+    pub n: usize,
+    pub nparts: usize,
+    /// `starts[p]..starts[p+1]` is process p's row range. Length nparts+1.
+    pub starts: Vec<usize>,
+}
+
+impl RowPartition {
+    /// Balanced contiguous partition (remainder spread over leading parts).
+    pub fn balanced(n: usize, nparts: usize) -> RowPartition {
+        assert!(nparts > 0);
+        let base = n / nparts;
+        let rem = n % nparts;
+        let mut starts = Vec::with_capacity(nparts + 1);
+        let mut acc = 0;
+        starts.push(0);
+        for p in 0..nparts {
+            acc += base + usize::from(p < rem);
+            starts.push(acc);
+        }
+        RowPartition { n, nparts, starts }
+    }
+
+    #[inline]
+    pub fn range(&self, p: usize) -> (usize, usize) {
+        (self.starts[p], self.starts[p + 1])
+    }
+
+    #[inline]
+    pub fn len(&self, p: usize) -> usize {
+        self.starts[p + 1] - self.starts[p]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Which process owns global row `r`.
+    pub fn owner(&self, r: usize) -> usize {
+        debug_assert!(r < self.n);
+        // starts is sorted; partition_point gives the first start > r.
+        self.starts.partition_point(|&s| s <= r) - 1
+    }
+
+    /// Convert a global row index to (owner, local index).
+    pub fn to_local(&self, r: usize) -> (usize, usize) {
+        let p = self.owner(r);
+        (p, r - self.starts[p])
+    }
+
+    pub fn to_global(&self, p: usize, local: usize) -> usize {
+        self.starts[p] + local
+    }
+}
+
+/// Process p's view of the 1D-partitioned sparse matrix: its diagonal block
+/// and every off-diagonal block `A^(p,q)` (paper notation), with column
+/// indices re-based to the owner q's local row space of B.
+#[derive(Clone, Debug)]
+pub struct LocalBlocks {
+    pub rank: usize,
+    /// `A^(p,p)` — needs only local `B^(p,:)`.
+    pub diag: Csr,
+    /// `blocks[q]` = `A^(p,q)` for q ≠ p (entry for q == p is an empty
+    /// matrix); column indices are local to q's B rows.
+    pub off_diag: Vec<Csr>,
+}
+
+/// Split the full matrix into per-process local blocks under a 1D row
+/// partition. This is the offline "Matrix Sparsity Analysis" input
+/// (workflow step 1, paper §5.1).
+pub fn split_1d(a: &Csr, part: &RowPartition) -> Vec<LocalBlocks> {
+    assert_eq!(a.nrows, part.n);
+    assert_eq!(a.ncols, part.n, "1D SpMM expects square A");
+    (0..part.nparts)
+        .map(|p| {
+            let (r0, r1) = part.range(p);
+            let off_diag = (0..part.nparts)
+                .map(|q| {
+                    if q == p {
+                        Csr::zeros(r1 - r0, part.len(q))
+                    } else {
+                        let (c0, c1) = part.range(q);
+                        a.block(r0, r1, c0, c1)
+                    }
+                })
+                .collect();
+            let (c0, c1) = part.range(p);
+            LocalBlocks {
+                rank: p,
+                diag: a.block(r0, r1, c0, c1),
+                off_diag,
+            }
+        })
+        .collect()
+}
+
+/// 2D process grid used by the BCL baseline (stationary C): processes are
+/// arranged pr × pc; A is tiled into pr × pc blocks.
+#[derive(Clone, Copy, Debug)]
+pub struct Grid2D {
+    pub pr: usize,
+    pub pc: usize,
+}
+
+impl Grid2D {
+    /// Nearly-square grid for `nparts` processes.
+    pub fn near_square(nparts: usize) -> Grid2D {
+        let mut pr = (nparts as f64).sqrt() as usize;
+        while pr > 1 && nparts % pr != 0 {
+            pr -= 1;
+        }
+        Grid2D {
+            pr: pr.max(1),
+            pc: nparts / pr.max(1),
+        }
+    }
+
+    pub fn coords(&self, rank: usize) -> (usize, usize) {
+        (rank / self.pc, rank % self.pc)
+    }
+
+    pub fn rank(&self, r: usize, c: usize) -> usize {
+        r * self.pc + c
+    }
+
+    pub fn size(&self) -> usize {
+        self.pr * self.pc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::Dense;
+    use crate::sparse::gen;
+
+    #[test]
+    fn balanced_partition_covers() {
+        let p = RowPartition::balanced(10, 3);
+        assert_eq!(p.starts, vec![0, 4, 7, 10]);
+        assert_eq!(p.len(0), 4);
+        assert_eq!(p.len(2), 3);
+        for r in 0..10 {
+            let (owner, local) = p.to_local(r);
+            assert_eq!(p.to_global(owner, local), r);
+        }
+    }
+
+    #[test]
+    fn owner_boundaries() {
+        let p = RowPartition::balanced(8, 4);
+        assert_eq!(p.owner(0), 0);
+        assert_eq!(p.owner(1), 0);
+        assert_eq!(p.owner(2), 1);
+        assert_eq!(p.owner(7), 3);
+    }
+
+    #[test]
+    fn partition_more_parts_than_rows() {
+        let p = RowPartition::balanced(2, 4);
+        assert_eq!(p.len(0), 1);
+        assert_eq!(p.len(1), 1);
+        assert_eq!(p.len(2), 0);
+        assert_eq!(p.len(3), 0);
+    }
+
+    #[test]
+    fn split_1d_blocks_reassemble() {
+        let a = gen::rmat(64, 500, (0.5, 0.2, 0.2), false, 3);
+        let part = RowPartition::balanced(64, 4);
+        let blocks = split_1d(&a, &part);
+        assert_eq!(blocks.len(), 4);
+        // Total nnz across diag + off-diag equals original.
+        let total: usize = blocks
+            .iter()
+            .map(|b| b.diag.nnz() + b.off_diag.iter().map(|m| m.nnz()).sum::<usize>())
+            .sum();
+        assert_eq!(total, a.nnz());
+        // Distributed SpMM the dumb way (every process uses full B)
+        // reproduces serial SpMM.
+        let bmat = Dense::from_fn(64, 8, |i, j| ((i * 13 + j * 7) % 10) as f32);
+        let want = a.spmm(&bmat);
+        for (p, blk) in blocks.iter().enumerate() {
+            let (r0, r1) = part.range(p);
+            let (c0, c1) = part.range(p);
+            let b_local = Dense::from_fn(c1 - c0, 8, |i, j| bmat.get(c0 + i, j));
+            let mut c_local = blk.diag.spmm(&b_local);
+            for (q, off) in blk.off_diag.iter().enumerate() {
+                if q == p {
+                    continue;
+                }
+                let (q0, q1) = part.range(q);
+                let b_q = Dense::from_fn(q1 - q0, 8, |i, j| bmat.get(q0 + i, j));
+                off.spmm_acc(&b_q, &mut c_local);
+            }
+            for i in r0..r1 {
+                for j in 0..8 {
+                    assert!(
+                        (c_local.get(i - r0, j) - want.get(i, j)).abs() < 1e-4,
+                        "mismatch at ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grid2d_near_square() {
+        let g = Grid2D::near_square(12);
+        assert_eq!(g.size(), 12);
+        assert!(g.pr >= 2 && g.pc >= 2, "{g:?}");
+        let g1 = Grid2D::near_square(7);
+        assert_eq!(g1.size(), 7);
+        let (r, c) = g.coords(g.rank(2, 1));
+        assert_eq!((r, c), (2, 1));
+    }
+}

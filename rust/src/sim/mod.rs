@@ -1,0 +1,369 @@
+//! Event-driven α-β network simulator (DESIGN.md §1 substitution for the
+//! 128-GPU testbed): per-rank, per-tier NIC ports with serialization, plus
+//! per-stage compute. The simulator executes a [`SimJob`] — a sequence of
+//! barrier-separated stages, each holding concurrent messages and per-rank
+//! compute — and reports the timing breakdown that drives Figs. 7, 10–12.
+//!
+//! Cost model: a message src→dst of `bytes` on tier T occupies src's T-out
+//! port and dst's T-in port for `lat(T) + bytes/bw(T)` seconds; messages
+//! contending for a port serialize (longest-first list schedule). Intra and
+//! inter tiers use independent ports, which is exactly the property the
+//! overlapped hierarchical schedule exploits (paper §6.2).
+
+pub mod trace;
+
+use crate::topology::{Tier, Topology};
+
+/// A point-to-point transfer inside one stage.
+#[derive(Clone, Debug)]
+pub struct SimMsg {
+    pub src: usize,
+    pub dst: usize,
+    pub bytes: u64,
+}
+
+/// One barrier-separated stage of the job.
+#[derive(Clone, Debug, Default)]
+pub struct Stage {
+    pub name: String,
+    pub msgs: Vec<SimMsg>,
+    /// Per-rank compute seconds in this stage (empty = no compute).
+    pub compute: Vec<f64>,
+    /// If true, compute overlaps communication inside the stage; otherwise
+    /// compute starts after the stage's communication completes.
+    pub overlap: bool,
+}
+
+impl Stage {
+    pub fn comm(name: &str, msgs: Vec<SimMsg>) -> Stage {
+        Stage { name: name.into(), msgs, compute: Vec::new(), overlap: false }
+    }
+
+    pub fn compute_only(name: &str, compute: Vec<f64>) -> Stage {
+        Stage { name: name.into(), msgs: Vec::new(), compute, overlap: false }
+    }
+}
+
+/// A simulation job: stages run sequentially with global barriers.
+#[derive(Clone, Debug, Default)]
+pub struct SimJob {
+    pub stages: Vec<Stage>,
+}
+
+/// Timing report for one simulated run.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    /// End-to-end seconds.
+    pub total: f64,
+    /// (stage name, stage seconds).
+    pub per_stage: Vec<(String, f64)>,
+    /// Seconds spent in stages that move bytes (comm-dominated stages).
+    pub comm_time: f64,
+    /// Seconds spent in pure-compute stages.
+    pub compute_time: f64,
+    pub inter_bytes: u64,
+    pub intra_bytes: u64,
+}
+
+/// Simulate a job on a topology.
+pub fn simulate(job: &SimJob, topo: &Topology) -> SimReport {
+    let mut total = 0.0;
+    let mut per_stage = Vec::new();
+    let mut comm_time = 0.0;
+    let mut compute_time = 0.0;
+    let mut inter_bytes = 0u64;
+    let mut intra_bytes = 0u64;
+
+    for stage in &job.stages {
+        let comm_dur = schedule_messages(&stage.msgs, topo);
+        for m in &stage.msgs {
+            match topo.tier(m.src, m.dst) {
+                Tier::Inter => inter_bytes += m.bytes,
+                Tier::Intra => intra_bytes += m.bytes,
+            }
+        }
+        let max_compute = stage
+            .compute
+            .iter()
+            .copied()
+            .fold(0.0f64, f64::max);
+        let dur = if stage.overlap {
+            comm_dur.max(max_compute)
+        } else {
+            comm_dur + max_compute
+        };
+        if stage.msgs.is_empty() {
+            compute_time += dur;
+        } else {
+            comm_time += dur;
+        }
+        per_stage.push((stage.name.clone(), dur));
+        total += dur;
+    }
+    SimReport { total, per_stage, comm_time, compute_time, inter_bytes, intra_bytes }
+}
+
+/// Longest-processing-time list schedule of one stage's messages over the
+/// per-rank, per-tier NIC ports. Returns the stage's communication makespan.
+fn schedule_messages(msgs: &[SimMsg], topo: &Topology) -> f64 {
+    if msgs.is_empty() {
+        return 0.0;
+    }
+    let n = topo.nranks;
+    // ports[tier][rank]: (out_free_at, in_free_at)
+    let mut out_free = vec![[0.0f64; 2]; n];
+    let mut in_free = vec![[0.0f64; 2]; n];
+    let mut order: Vec<usize> = (0..msgs.len()).collect();
+    order.sort_unstable_by(|&a, &b| msgs[b].bytes.cmp(&msgs[a].bytes));
+    let mut makespan = 0.0f64;
+    for &i in &order {
+        let m = &msgs[i];
+        let tier = topo.tier(m.src, m.dst);
+        let t = tier as usize;
+        let dur = topo.lat(tier) + m.bytes as f64 / topo.bw(tier);
+        let start = out_free[m.src][t].max(in_free[m.dst][t]);
+        let end = start + dur;
+        out_free[m.src][t] = end;
+        in_free[m.dst][t] = end;
+        makespan = makespan.max(end);
+    }
+    makespan
+}
+
+/// Lower a flat [`crate::comm::CommPlan`] into a single all-to-all comm
+/// stage (the topology-oblivious pattern of §3.2).
+pub fn flat_comm_stage(
+    plan: &crate::comm::CommPlan,
+    n_dense: usize,
+) -> Stage {
+    let mut msgs = Vec::new();
+    for p in 0..plan.nranks {
+        for q in 0..plan.nranks {
+            if p == q {
+                continue;
+            }
+            let bytes = plan.volume(p, q, n_dense);
+            if bytes > 0 {
+                msgs.push(SimMsg { src: q, dst: p, bytes });
+            }
+        }
+    }
+    Stage::comm("flat-alltoall", msgs)
+}
+
+/// Lower a [`crate::hierarchy::HierSchedule`] into the two overlapped
+/// stages of Alg. 1. Within each stage, intra and inter messages coexist
+/// and proceed on independent ports (the complementary overlap).
+pub fn hier_comm_stages(
+    sched: &crate::hierarchy::HierSchedule,
+    n_dense: usize,
+) -> [Stage; 2] {
+    let m = sched.messages();
+    let row_bytes = |rows: u64| rows * n_dense as u64 * crate::comm::SZ_DT;
+    let to_msgs = |v: &[crate::hierarchy::StageMsg]| -> Vec<SimMsg> {
+        v.iter()
+            .filter(|x| x.rows > 0)
+            .map(|x| SimMsg { src: x.src, dst: x.dst, bytes: row_bytes(x.rows) })
+            .collect()
+    };
+    let mut s1 = to_msgs(&m.s1_inter_b);
+    s1.extend(to_msgs(&m.s1_intra_c));
+    let mut s2 = to_msgs(&m.s2_inter_c);
+    s2.extend(to_msgs(&m.s2_intra_b));
+    [
+        Stage::comm("stageI: interB ∥ intraC", s1),
+        Stage::comm("stageII: interC ∥ intraB", s2),
+    ]
+}
+
+/// Ablation control for §6.2: the same hierarchical schedule WITHOUT the
+/// complementary overlap — each tier runs in its own barrier-separated
+/// stage (4 stages instead of 2). `make bench-ablation-overlap` compares.
+pub fn hier_comm_stages_sequential(
+    sched: &crate::hierarchy::HierSchedule,
+    n_dense: usize,
+) -> [Stage; 4] {
+    let m = sched.messages();
+    let row_bytes = |rows: u64| rows * n_dense as u64 * crate::comm::SZ_DT;
+    let to_msgs = |v: &[crate::hierarchy::StageMsg]| -> Vec<SimMsg> {
+        v.iter()
+            .filter(|x| x.rows > 0)
+            .map(|x| SimMsg { src: x.src, dst: x.dst, bytes: row_bytes(x.rows) })
+            .collect()
+    };
+    [
+        Stage::comm("seq: inter B fetch", to_msgs(&m.s1_inter_b)),
+        Stage::comm("seq: intra C aggregate", to_msgs(&m.s1_intra_c)),
+        Stage::comm("seq: inter C send", to_msgs(&m.s2_inter_c)),
+        Stage::comm("seq: intra B distribute", to_msgs(&m.s2_intra_b)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{self, Strategy};
+    use crate::cover::Solver;
+    use crate::hierarchy;
+    use crate::partition::{split_1d, RowPartition};
+    use crate::sparse::gen;
+
+    #[test]
+    fn single_message_time() {
+        let topo = Topology::flat(2, 1e9);
+        let job = SimJob {
+            stages: vec![Stage::comm(
+                "one",
+                vec![SimMsg { src: 0, dst: 1, bytes: 1_000_000 }],
+            )],
+        };
+        let r = simulate(&job, &topo);
+        // 1 MB at 1 GB/s = 1 ms (+ 5 µs latency).
+        assert!((r.total - 1.005e-3).abs() < 1e-9, "{}", r.total);
+    }
+
+    #[test]
+    fn same_source_serializes() {
+        let topo = Topology::flat(3, 1e9);
+        let msgs = vec![
+            SimMsg { src: 0, dst: 1, bytes: 1_000_000 },
+            SimMsg { src: 0, dst: 2, bytes: 1_000_000 },
+        ];
+        let r = simulate(&SimJob { stages: vec![Stage::comm("s", msgs)] }, &topo);
+        assert!(r.total > 1.9e-3, "should serialize on src port: {}", r.total);
+    }
+
+    #[test]
+    fn disjoint_pairs_parallel() {
+        let topo = Topology::flat(4, 1e9);
+        let msgs = vec![
+            SimMsg { src: 0, dst: 1, bytes: 1_000_000 },
+            SimMsg { src: 2, dst: 3, bytes: 1_000_000 },
+        ];
+        let r = simulate(&SimJob { stages: vec![Stage::comm("s", msgs)] }, &topo);
+        assert!(r.total < 1.1e-3, "disjoint pairs must run concurrently: {}", r.total);
+    }
+
+    #[test]
+    fn tiers_use_independent_ports() {
+        // One intra + one inter message from the same source overlap.
+        let topo = Topology::tsubame4(8);
+        let intra = SimMsg { src: 0, dst: 1, bytes: 450_000_000 }; // ~1 ms intra
+        let inter = SimMsg { src: 0, dst: 4, bytes: 6_250_000 };   // ~1 ms inter
+        let r = simulate(
+            &SimJob { stages: vec![Stage::comm("s", vec![intra, inter])] },
+            &topo,
+        );
+        assert!(r.total < 1.2e-3, "tiers must overlap: {}", r.total);
+        assert!(r.inter_bytes > 0 && r.intra_bytes > 0);
+    }
+
+    #[test]
+    fn compute_overlap_semantics() {
+        let topo = Topology::flat(2, 1e9);
+        let msg = SimMsg { src: 0, dst: 1, bytes: 2_000_000 }; // 2 ms
+        let mut stage = Stage::comm("s", vec![msg]);
+        stage.compute = vec![1.5e-3, 0.0];
+        stage.overlap = true;
+        let r = simulate(&SimJob { stages: vec![stage.clone()] }, &topo);
+        assert!((r.total - 2.005e-3).abs() < 1e-7, "overlap hides compute: {}", r.total);
+        stage.overlap = false;
+        let r2 = simulate(&SimJob { stages: vec![stage] }, &topo);
+        assert!(r2.total > 3.4e-3, "no overlap adds compute: {}", r2.total);
+    }
+
+    #[test]
+    fn hier_beats_flat_on_dedup_heavy_pattern() {
+        // All 28 remote ranks need the same 1000 B rows from rank 0 on
+        // TSUBAME: flat pushes 28 copies through rank 0's inter NIC; hier
+        // pushes 6 (one per remote group) + intra fanout.
+        let nranks = 32;
+        let mut plan = comm::CommPlan {
+            nranks,
+            strategy: Strategy::Column,
+            pairs: vec![vec![Default::default(); nranks]; nranks],
+            block_rows: vec![2000; nranks],
+        };
+        for p in 1..nranks {
+            plan.pairs[p][0].b_rows = (0..1000).collect();
+        }
+        let topo = Topology::tsubame4(nranks);
+        let n_dense = 64;
+        let flat = simulate(
+            &SimJob { stages: vec![flat_comm_stage(&plan, n_dense)] },
+            &topo,
+        );
+        let sched = hierarchy::build(&plan, &topo);
+        let [s1, s2] = hier_comm_stages(&sched, n_dense);
+        let hier = simulate(&SimJob { stages: vec![s1, s2] }, &topo);
+        assert!(
+            hier.total < flat.total * 0.3,
+            "hier {} !< flat {}",
+            hier.total,
+            flat.total
+        );
+        assert!(hier.inter_bytes < flat.inter_bytes / 3);
+    }
+
+    #[test]
+    fn realistic_plan_hier_reduces_inter_bytes() {
+        let a = gen::rmat(256, 4000, (0.55, 0.2, 0.19), false, 7);
+        let part = RowPartition::balanced(256, 16);
+        let blocks = split_1d(&a, &part);
+        let plan = comm::plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None);
+        let topo = Topology::tsubame4(16);
+        let n_dense = 32;
+        let flat = simulate(&SimJob { stages: vec![flat_comm_stage(&plan, n_dense)] }, &topo);
+        let sched = hierarchy::build(&plan, &topo);
+        let [s1, s2] = hier_comm_stages(&sched, n_dense);
+        let hier = simulate(&SimJob { stages: vec![s1, s2] }, &topo);
+        assert!(hier.inter_bytes <= flat.inter_bytes);
+    }
+
+    #[test]
+    fn overlap_beats_sequential_stages() {
+        // The §6.2 claim: complementary overlap (2 stages) is faster than
+        // tier-serialized execution (4 stages) of the SAME message sets.
+        let a = gen::rmat(512, 8000, (0.55, 0.2, 0.19), false, 9);
+        let part = RowPartition::balanced(512, 16);
+        let blocks = split_1d(&a, &part);
+        let plan = comm::plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None);
+        let topo = Topology::tsubame4(16);
+        let sched = hierarchy::build(&plan, &topo);
+        let n_dense = 64;
+        let [s1, s2] = hier_comm_stages(&sched, n_dense);
+        let overlapped = simulate(&SimJob { stages: vec![s1, s2] }, &topo);
+        let seq = hier_comm_stages_sequential(&sched, n_dense);
+        let sequential = simulate(&SimJob { stages: seq.to_vec() }, &topo);
+        assert!(
+            overlapped.total < sequential.total,
+            "overlap {} !< sequential {}",
+            overlapped.total,
+            sequential.total
+        );
+        assert_eq!(overlapped.inter_bytes, sequential.inter_bytes);
+        assert_eq!(overlapped.intra_bytes, sequential.intra_bytes);
+    }
+
+    #[test]
+    fn empty_job_zero_time() {
+        let topo = Topology::flat(2, 1e9);
+        let r = simulate(&SimJob::default(), &topo);
+        assert_eq!(r.total, 0.0);
+    }
+
+    #[test]
+    fn stage_accounting_sums() {
+        let topo = Topology::flat(2, 1e9);
+        let job = SimJob {
+            stages: vec![
+                Stage::compute_only("c", vec![1e-3, 2e-3]),
+                Stage::comm("m", vec![SimMsg { src: 0, dst: 1, bytes: 1_000_000 }]),
+            ],
+        };
+        let r = simulate(&job, &topo);
+        assert_eq!(r.per_stage.len(), 2);
+        assert!((r.total - (r.comm_time + r.compute_time)).abs() < 1e-12);
+        assert!((r.compute_time - 2e-3).abs() < 1e-12);
+    }
+}

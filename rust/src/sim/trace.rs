@@ -1,0 +1,169 @@
+//! Chrome-trace (chrome://tracing / Perfetto) export of a simulated run:
+//! one track per (rank, tier, direction) port, one slice per message —
+//! the visual counterpart of the paper's Nsight profiling (§7.3).
+
+use crate::sim::{SimJob, SimMsg};
+use crate::topology::{Tier, Topology};
+use std::fmt::Write as _;
+
+/// One scheduled message with its simulated time window.
+#[derive(Clone, Debug)]
+pub struct MsgTiming {
+    pub stage: usize,
+    pub msg: SimMsg,
+    pub tier: Tier,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Re-run the job's schedule, recording per-message timings.
+/// (Mirrors `sim::schedule_messages` exactly; kept separate so the hot
+/// simulation path stays allocation-free.)
+pub fn trace(job: &SimJob, topo: &Topology) -> Vec<MsgTiming> {
+    let n = topo.nranks;
+    let mut timings = Vec::new();
+    let mut clock = 0.0f64;
+    for (stage_idx, stage) in job.stages.iter().enumerate() {
+        let mut out_free = vec![[clock; 2]; n];
+        let mut in_free = vec![[clock; 2]; n];
+        let mut order: Vec<usize> = (0..stage.msgs.len()).collect();
+        order.sort_unstable_by(|&a, &b| stage.msgs[b].bytes.cmp(&stage.msgs[a].bytes));
+        let mut stage_end = clock;
+        for &i in &order {
+            let m = &stage.msgs[i];
+            let tier = topo.tier(m.src, m.dst);
+            let t = tier as usize;
+            let dur = topo.lat(tier) + m.bytes as f64 / topo.bw(tier);
+            let start = out_free[m.src][t].max(in_free[m.dst][t]);
+            let end = start + dur;
+            out_free[m.src][t] = end;
+            in_free[m.dst][t] = end;
+            stage_end = stage_end.max(end);
+            timings.push(MsgTiming {
+                stage: stage_idx,
+                msg: m.clone(),
+                tier,
+                start,
+                end,
+            });
+        }
+        let max_compute = stage.compute.iter().copied().fold(0.0f64, f64::max);
+        clock = if stage.overlap {
+            stage_end.max(clock + max_compute)
+        } else {
+            stage_end + max_compute
+        };
+    }
+    timings
+}
+
+/// Render timings as a Chrome trace-event JSON string (load in
+/// chrome://tracing or Perfetto).
+pub fn to_chrome_json(timings: &[MsgTiming], job: &SimJob) -> String {
+    let mut out = String::from("[\n");
+    for t in timings {
+        let tier = match t.tier {
+            Tier::Intra => "intra",
+            Tier::Inter => "inter",
+        };
+        let stage_name = job
+            .stages
+            .get(t.stage)
+            .map(|s| s.name.as_str())
+            .unwrap_or("?");
+        // One row per (src rank, tier): pid = src, tid = tier.
+        let _ = write!(
+            out,
+            "{{\"name\":\"{}→{} {}B [{}]\",\"cat\":\"{}\",\"ph\":\"X\",\
+             \"ts\":{:.3},\"dur\":{:.3},\"pid\":{},\"tid\":{}}},\n",
+            t.msg.src,
+            t.msg.dst,
+            t.msg.bytes,
+            stage_name,
+            tier,
+            t.start * 1e6,
+            (t.end - t.start) * 1e6,
+            t.msg.src,
+            t.tier as usize,
+        );
+    }
+    if out.ends_with(",\n") {
+        out.truncate(out.len() - 2);
+        out.push('\n');
+    }
+    out.push(']');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{simulate, Stage};
+
+    fn job() -> SimJob {
+        SimJob {
+            stages: vec![Stage::comm(
+                "s",
+                vec![
+                    SimMsg { src: 0, dst: 1, bytes: 1_000_000 },
+                    SimMsg { src: 0, dst: 2, bytes: 500_000 },
+                    SimMsg { src: 2, dst: 3, bytes: 1_000_000 },
+                ],
+            )],
+        }
+    }
+
+    #[test]
+    fn trace_consistent_with_simulate() {
+        let topo = Topology::flat(4, 1e9);
+        let j = job();
+        let timings = trace(&j, &topo);
+        let report = simulate(&j, &topo);
+        let max_end = timings.iter().fold(0.0f64, |m, t| m.max(t.end));
+        assert!((max_end - report.total).abs() < 1e-12);
+        assert_eq!(timings.len(), 3);
+    }
+
+    #[test]
+    fn ports_never_overlap() {
+        let topo = Topology::tsubame4(8);
+        let j = job();
+        let timings = trace(&j, &topo);
+        for a in &timings {
+            for b in &timings {
+                if std::ptr::eq(a, b) || a.tier != b.tier {
+                    continue;
+                }
+                let same_out = a.msg.src == b.msg.src;
+                let same_in = a.msg.dst == b.msg.dst;
+                if same_out || same_in {
+                    let disjoint = a.end <= b.start + 1e-15 || b.end <= a.start + 1e-15;
+                    assert!(disjoint, "port overlap: {a:?} vs {b:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chrome_json_parses_shapewise() {
+        let topo = Topology::flat(4, 1e9);
+        let j = job();
+        let json = to_chrome_json(&trace(&j, &topo), &j);
+        assert!(json.starts_with('['));
+        assert!(json.ends_with(']'));
+        assert_eq!(json.matches("\"ph\":\"X\"").count(), 3);
+    }
+
+    #[test]
+    fn stages_ordered_in_time() {
+        let topo = Topology::flat(2, 1e9);
+        let j = SimJob {
+            stages: vec![
+                Stage::comm("a", vec![SimMsg { src: 0, dst: 1, bytes: 1000 }]),
+                Stage::comm("b", vec![SimMsg { src: 1, dst: 0, bytes: 1000 }]),
+            ],
+        };
+        let t = trace(&j, &topo);
+        assert!(t[0].end <= t[1].start + 1e-15);
+    }
+}

@@ -1,0 +1,425 @@
+//! COO and CSR sparse matrix formats with the operations the communication
+//! planner needs: construction, conversion, transpose, block extraction,
+//! row/column index sets, and SpMM against a dense matrix.
+
+use crate::dense::Dense;
+
+/// Coordinate-format sparse matrix. Entries need not be sorted or unique
+/// until [`Coo::to_csr`] (which sorts and sums duplicates).
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Coo {
+    pub fn new(nrows: usize, ncols: usize) -> Coo {
+        Coo {
+            nrows,
+            ncols,
+            rows: Vec::new(),
+            cols: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.nrows && c < self.ncols, "entry ({r},{c}) out of bounds");
+        self.rows.push(r as u32);
+        self.cols.push(c as u32);
+        self.vals.push(v);
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Convert to CSR, sorting entries and summing duplicate coordinates.
+    pub fn to_csr(&self) -> Csr {
+        let mut order: Vec<usize> = (0..self.nnz()).collect();
+        order.sort_unstable_by_key(|&i| (self.rows[i], self.cols[i]));
+        let mut indptr = vec![0u64; self.nrows + 1];
+        let mut indices = Vec::with_capacity(self.nnz());
+        let mut data = Vec::with_capacity(self.nnz());
+        let mut last: Option<(u32, u32)> = None;
+        for &i in &order {
+            let key = (self.rows[i], self.cols[i]);
+            if last == Some(key) {
+                *data.last_mut().unwrap() += self.vals[i];
+            } else {
+                indices.push(self.cols[i]);
+                data.push(self.vals[i]);
+                indptr[self.rows[i] as usize + 1] += 1;
+                last = Some(key);
+            }
+        }
+        for r in 0..self.nrows {
+            indptr[r + 1] += indptr[r];
+        }
+        Csr {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            indptr,
+            indices,
+            data,
+        }
+    }
+}
+
+/// Compressed sparse row matrix (u32 column indices, f32 values).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Length nrows+1.
+    pub indptr: Vec<u64>,
+    /// Column indices, sorted within each row.
+    pub indices: Vec<u32>,
+    pub data: Vec<f32>,
+}
+
+impl Csr {
+    /// Empty matrix with no nonzeros.
+    pub fn zeros(nrows: usize, ncols: usize) -> Csr {
+        Csr {
+            nrows,
+            ncols,
+            indptr: vec![0; nrows + 1],
+            indices: Vec::new(),
+            data: Vec::new(),
+        }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Csr {
+        Csr {
+            nrows: n,
+            ncols: n,
+            indptr: (0..=n as u64).collect(),
+            indices: (0..n as u32).collect(),
+            data: vec![1.0; n],
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        if self.nrows == 0 || self.ncols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.nrows as f64 * self.ncols as f64)
+    }
+
+    /// Column indices of row `r`.
+    #[inline]
+    pub fn row_indices(&self, r: usize) -> &[u32] {
+        &self.indices[self.indptr[r] as usize..self.indptr[r + 1] as usize]
+    }
+
+    /// Values of row `r`.
+    #[inline]
+    pub fn row_values(&self, r: usize) -> &[f32] {
+        &self.data[self.indptr[r] as usize..self.indptr[r + 1] as usize]
+    }
+
+    #[inline]
+    pub fn row_nnz(&self, r: usize) -> usize {
+        (self.indptr[r + 1] - self.indptr[r]) as usize
+    }
+
+    /// Sorted unique row indices that contain at least one nonzero
+    /// (`Rows(A)` in the paper's notation).
+    pub fn nonempty_rows(&self) -> Vec<u32> {
+        (0..self.nrows)
+            .filter(|&r| self.row_nnz(r) > 0)
+            .map(|r| r as u32)
+            .collect()
+    }
+
+    /// Sorted unique column indices with at least one nonzero
+    /// (`Cols(A)` in the paper's notation).
+    pub fn nonempty_cols(&self) -> Vec<u32> {
+        let mut seen = vec![false; self.ncols];
+        for &c in &self.indices {
+            seen[c as usize] = true;
+        }
+        (0..self.ncols)
+            .filter(|&c| seen[c])
+            .map(|c| c as u32)
+            .collect()
+    }
+
+    /// Extract the sub-block of columns [c0, c1) over rows [r0, r1), with
+    /// column indices re-based to c0.
+    pub fn block(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Csr {
+        assert!(r0 <= r1 && r1 <= self.nrows && c0 <= c1 && c1 <= self.ncols);
+        let mut indptr = vec![0u64; r1 - r0 + 1];
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        for r in r0..r1 {
+            let cols = self.row_indices(r);
+            let vals = self.row_values(r);
+            // Columns are sorted: binary search the window.
+            let lo = cols.partition_point(|&c| (c as usize) < c0);
+            let hi = cols.partition_point(|&c| (c as usize) < c1);
+            for k in lo..hi {
+                indices.push(cols[k] - c0 as u32);
+                data.push(vals[k]);
+            }
+            indptr[r - r0 + 1] = indices.len() as u64;
+        }
+        Csr {
+            nrows: r1 - r0,
+            ncols: c1 - c0,
+            indptr,
+            indices,
+            data,
+        }
+    }
+
+    /// Restrict to a subset of rows (given as sorted indices); returns a
+    /// matrix with `rows.len()` rows in the given order.
+    pub fn select_rows(&self, rows: &[u32]) -> Csr {
+        let mut indptr = vec![0u64; rows.len() + 1];
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        for (i, &r) in rows.iter().enumerate() {
+            indices.extend_from_slice(self.row_indices(r as usize));
+            data.extend_from_slice(self.row_values(r as usize));
+            indptr[i + 1] = indices.len() as u64;
+        }
+        Csr {
+            nrows: rows.len(),
+            ncols: self.ncols,
+            indptr,
+            indices,
+            data,
+        }
+    }
+
+    /// Transpose (also converts CSR→CSC implicitly).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0u64; self.ncols + 1];
+        for &c in &self.indices {
+            counts[c as usize + 1] += 1;
+        }
+        for c in 0..self.ncols {
+            counts[c + 1] += counts[c];
+        }
+        let indptr = counts.clone();
+        let mut cursor = counts;
+        let mut indices = vec![0u32; self.nnz()];
+        let mut data = vec![0f32; self.nnz()];
+        for r in 0..self.nrows {
+            for (k, &c) in self.row_indices(r).iter().enumerate() {
+                let dst = cursor[c as usize] as usize;
+                indices[dst] = r as u32;
+                data[dst] = self.row_values(r)[k];
+                cursor[c as usize] += 1;
+            }
+        }
+        Csr {
+            nrows: self.ncols,
+            ncols: self.nrows,
+            indptr,
+            indices,
+            data,
+        }
+    }
+
+    /// SpMM: C = A · B (dense row-major B with `n` columns). Reference-grade
+    /// serial implementation; the optimized path lives in `runtime`/L1.
+    pub fn spmm(&self, b: &Dense) -> Dense {
+        assert_eq!(self.ncols, b.nrows, "spmm dim mismatch");
+        let mut c = Dense::zeros(self.nrows, b.ncols);
+        self.spmm_acc(b, &mut c);
+        c
+    }
+
+    /// SpMM accumulating into an existing dense matrix: C += A · B.
+    pub fn spmm_acc(&self, b: &Dense, c: &mut Dense) {
+        assert_eq!(self.ncols, b.nrows);
+        assert_eq!(self.nrows, c.nrows);
+        assert_eq!(b.ncols, c.ncols);
+        // Hot path (§Perf opt-2): slice-zip inner loop eliminates bounds
+        // checks so LLVM autovectorizes the axpy.
+        for r in 0..self.nrows {
+            let out = c.row_mut(r);
+            let cols = self.row_indices(r);
+            let vals = self.row_values(r);
+            for (&col, &v) in cols.iter().zip(vals) {
+                let brow = b.row(col as usize);
+                for (o, &bv) in out.iter_mut().zip(brow) {
+                    *o += v * bv;
+                }
+            }
+        }
+    }
+
+    /// Convert to COO.
+    pub fn to_coo(&self) -> Coo {
+        let mut coo = Coo::new(self.nrows, self.ncols);
+        for r in 0..self.nrows {
+            for (k, &c) in self.row_indices(r).iter().enumerate() {
+                coo.push(r, c as usize, self.row_values(r)[k]);
+            }
+        }
+        coo
+    }
+
+    /// Structural check used by tests and after IO.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.indptr.len() == self.nrows + 1, "indptr length");
+        anyhow::ensure!(
+            *self.indptr.last().unwrap() as usize == self.indices.len(),
+            "indptr terminal mismatch"
+        );
+        anyhow::ensure!(self.indices.len() == self.data.len(), "indices/data length");
+        for r in 0..self.nrows {
+            anyhow::ensure!(self.indptr[r] <= self.indptr[r + 1], "indptr monotone");
+            let cols = self.row_indices(r);
+            for w in cols.windows(2) {
+                anyhow::ensure!(w[0] < w[1], "row {r} columns not strictly sorted");
+            }
+            if let Some(&c) = cols.last() {
+                anyhow::ensure!((c as usize) < self.ncols, "column out of bounds");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Csr {
+        // [[1, 0, 2],
+        //  [0, 0, 0],
+        //  [0, 3, 4]]
+        let mut coo = Coo::new(3, 3);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 2, 2.0);
+        coo.push(2, 1, 3.0);
+        coo.push(2, 2, 4.0);
+        coo.to_csr()
+    }
+
+    #[test]
+    fn coo_to_csr_sorted() {
+        let m = small();
+        m.validate().unwrap();
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.row_indices(0), &[0, 2]);
+        assert_eq!(m.row_nnz(1), 0);
+        assert_eq!(m.row_values(2), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn duplicates_summed() {
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 1, 1.0);
+        coo.push(0, 1, 2.5);
+        let m = coo.to_csr();
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.row_values(0), &[3.5]);
+    }
+
+    #[test]
+    fn nonempty_rows_cols() {
+        let m = small();
+        assert_eq!(m.nonempty_rows(), vec![0, 2]);
+        assert_eq!(m.nonempty_cols(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn block_extraction() {
+        let m = small();
+        let b = m.block(0, 2, 1, 3);
+        assert_eq!(b.nrows, 2);
+        assert_eq!(b.ncols, 2);
+        assert_eq!(b.nnz(), 1);
+        assert_eq!(b.row_indices(0), &[1]); // column 2 rebased to 1
+        assert_eq!(b.row_values(0), &[2.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = small();
+        let t = m.transpose();
+        t.validate().unwrap();
+        assert_eq!(t.nrows, 3);
+        assert_eq!(t.row_indices(2), &[0, 2]);
+        let back = t.transpose();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn spmm_identity() {
+        let m = small();
+        let b = Dense::from_fn(3, 4, |i, j| (i * 4 + j) as f32);
+        let c = Csr::eye(3).spmm(&b);
+        assert_eq!(c.data, b.data);
+        let c2 = m.spmm(&b);
+        // Row 0 = 1*B[0,:] + 2*B[2,:]
+        for j in 0..4 {
+            assert_eq!(c2.get(0, j), b.get(0, j) + 2.0 * b.get(2, j));
+            assert_eq!(c2.get(1, j), 0.0);
+            assert_eq!(c2.get(2, j), 3.0 * b.get(1, j) + 4.0 * b.get(2, j));
+        }
+    }
+
+    #[test]
+    fn spmm_acc_accumulates() {
+        let m = Csr::eye(2);
+        let b = Dense::from_fn(2, 2, |i, j| (i + j) as f32);
+        let mut c = Dense::from_elem(2, 2, 1.0);
+        m.spmm_acc(&b, &mut c);
+        assert_eq!(c.get(0, 0), 1.0);
+        assert_eq!(c.get(1, 1), 3.0);
+    }
+
+    #[test]
+    fn select_rows_subset() {
+        let m = small();
+        let s = m.select_rows(&[2, 0]);
+        assert_eq!(s.nrows, 2);
+        assert_eq!(s.row_indices(0), &[1, 2]);
+        assert_eq!(s.row_indices(1), &[0, 2]);
+    }
+
+    #[test]
+    fn zeros_and_eye() {
+        let z = Csr::zeros(4, 5);
+        z.validate().unwrap();
+        assert_eq!(z.nnz(), 0);
+        let e = Csr::eye(3);
+        e.validate().unwrap();
+        assert_eq!(e.nnz(), 3);
+        assert!(e.density() > 0.3);
+    }
+
+    #[test]
+    fn validate_catches_unsorted() {
+        let bad = Csr {
+            nrows: 1,
+            ncols: 3,
+            indptr: vec![0, 2],
+            indices: vec![2, 1],
+            data: vec![1.0, 1.0],
+        };
+        assert!(bad.validate().is_err());
+    }
+}
+
+impl Default for Csr {
+    /// An empty 0×0 matrix (valid: indptr = [0]).
+    fn default() -> Csr {
+        Csr::zeros(0, 0)
+    }
+}

@@ -1,0 +1,154 @@
+//! Dataset registry mirroring the paper's Tab. 2 at laptop scale.
+//!
+//! Each entry maps a paper dataset to a synthetic generator preset whose
+//! *pattern class* (skew, symmetry, locality) matches the original — see
+//! DESIGN.md §1. `scale` multiplies the default row counts; benches use
+//! scale=1, quick tests smaller.
+
+use crate::sparse::{gen, Csr};
+
+/// Pattern class of the original matrix (drives generator choice).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pattern {
+    /// Power-law social graph (R-MAT, symmetric-ish).
+    Social,
+    /// Uniform-degree mesh / road network.
+    Mesh,
+    /// Extremely sparse band + hubs (traffic).
+    Traffic,
+    /// Web graph: hubs on both row and column sides.
+    Web,
+    /// GNN benchmark citation graph.
+    Gnn,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct DatasetSpec {
+    /// Short name used throughout the paper's figures.
+    pub name: &'static str,
+    pub pattern: Pattern,
+    /// Rows at scale = 1.0 (laptop-scale stand-in for the paper's size).
+    pub base_rows: usize,
+    /// Average nonzeros per row (matches the original's nnz/rows ratio).
+    pub avg_nnz_per_row: f64,
+    /// Whether the original is symmetric (undirected graph).
+    pub symmetric: bool,
+    /// Original size, for the Tab. 2 printout.
+    pub paper_rows: &'static str,
+    pub paper_nnz: &'static str,
+    pub domain: &'static str,
+}
+
+/// The 16 datasets of Tab. 2 (13 SpMM + 3 GNN).
+pub const DATASETS: &[DatasetSpec] = &[
+    DatasetSpec { name: "com-YT", pattern: Pattern::Social, base_rows: 1 << 14, avg_nnz_per_row: 5.5, symmetric: true, paper_rows: "1.1M", paper_nnz: "6.0M", domain: "Social" },
+    DatasetSpec { name: "Pokec", pattern: Pattern::Social, base_rows: 1 << 14, avg_nnz_per_row: 19.1, symmetric: false, paper_rows: "1.6M", paper_nnz: "30.6M", domain: "Social" },
+    DatasetSpec { name: "sx-SO", pattern: Pattern::Social, base_rows: 1 << 15, avg_nnz_per_row: 13.9, symmetric: false, paper_rows: "2.6M", paper_nnz: "36.2M", domain: "Q&A" },
+    DatasetSpec { name: "soc-LJ", pattern: Pattern::Social, base_rows: 1 << 15, avg_nnz_per_row: 14.4, symmetric: false, paper_rows: "4.8M", paper_nnz: "69.0M", domain: "Social" },
+    DatasetSpec { name: "com-LJ", pattern: Pattern::Social, base_rows: 1 << 15, avg_nnz_per_row: 17.4, symmetric: true, paper_rows: "4.0M", paper_nnz: "69.4M", domain: "Social" },
+    DatasetSpec { name: "del24", pattern: Pattern::Mesh, base_rows: 1 << 16, avg_nnz_per_row: 6.0, symmetric: true, paper_rows: "16.8M", paper_nnz: "100.7M", domain: "Mesh" },
+    DatasetSpec { name: "EU", pattern: Pattern::Mesh, base_rows: 1 << 16, avg_nnz_per_row: 2.1, symmetric: true, paper_rows: "50.9M", paper_nnz: "108.1M", domain: "Road" },
+    DatasetSpec { name: "mawi", pattern: Pattern::Traffic, base_rows: 1 << 16, avg_nnz_per_row: 2.1, symmetric: true, paper_rows: "68.9M", paper_nnz: "143.4M", domain: "Traffic" },
+    DatasetSpec { name: "Orkut", pattern: Pattern::Social, base_rows: 1 << 14, avg_nnz_per_row: 76.3, symmetric: true, paper_rows: "3.1M", paper_nnz: "234.4M", domain: "Social" },
+    DatasetSpec { name: "uk-2002", pattern: Pattern::Web, base_rows: 1 << 16, avg_nnz_per_row: 16.1, symmetric: false, paper_rows: "18.5M", paper_nnz: "298.1M", domain: "Web" },
+    DatasetSpec { name: "arabic", pattern: Pattern::Web, base_rows: 1 << 16, avg_nnz_per_row: 28.1, symmetric: false, paper_rows: "22.7M", paper_nnz: "640.0M", domain: "Web" },
+    DatasetSpec { name: "webbase", pattern: Pattern::Web, base_rows: 1 << 17, avg_nnz_per_row: 8.6, symmetric: false, paper_rows: "118.1M", paper_nnz: "1.02B", domain: "Web" },
+    DatasetSpec { name: "GAP-web", pattern: Pattern::Web, base_rows: 1 << 17, avg_nnz_per_row: 38.1, symmetric: false, paper_rows: "50.6M", paper_nnz: "1.93B", domain: "Web" },
+    DatasetSpec { name: "Mag240M", pattern: Pattern::Gnn, base_rows: 1 << 17, avg_nnz_per_row: 21.3, symmetric: false, paper_rows: "121.7M", paper_nnz: "2.59B", domain: "GNN" },
+    DatasetSpec { name: "Papers", pattern: Pattern::Gnn, base_rows: 1 << 17, avg_nnz_per_row: 29.1, symmetric: false, paper_rows: "111.1M", paper_nnz: "3.23B", domain: "GNN" },
+    DatasetSpec { name: "IGB260M", pattern: Pattern::Gnn, base_rows: 1 << 17, avg_nnz_per_row: 13.8, symmetric: false, paper_rows: "269.3M", paper_nnz: "3.72B", domain: "GNN" },
+];
+
+/// The 13 datasets used in the SpMM comparison figures (Fig. 7–11).
+pub fn spmm_datasets() -> Vec<&'static DatasetSpec> {
+    DATASETS.iter().filter(|d| d.pattern != Pattern::Gnn).collect()
+}
+
+/// The 3 GNN case-study datasets (Tab. 3).
+pub fn gnn_datasets() -> Vec<&'static DatasetSpec> {
+    DATASETS.iter().filter(|d| d.pattern == Pattern::Gnn).collect()
+}
+
+pub fn dataset_by_name(name: &str) -> Option<&'static DatasetSpec> {
+    DATASETS.iter().find(|d| d.name.eq_ignore_ascii_case(name))
+}
+
+impl DatasetSpec {
+    /// Number of rows at the given scale (rounded to a power of two so the
+    /// R-MAT generator and even partitioning behave).
+    pub fn rows_at(&self, scale: f64) -> usize {
+        let r = (self.base_rows as f64 * scale).max(64.0) as usize;
+        r.next_power_of_two()
+    }
+
+    /// Generate the matrix at `scale` (1.0 = bench default). Deterministic
+    /// per (dataset, scale).
+    pub fn generate(&self, scale: f64) -> Csr {
+        let n = self.rows_at(scale);
+        let nnz = (n as f64 * self.avg_nnz_per_row) as usize;
+        let seed = fxhash(self.name) ^ (scale.to_bits());
+        match self.pattern {
+            Pattern::Social => gen::rmat(n, nnz, (0.57, 0.19, 0.19), self.symmetric, seed),
+            Pattern::Mesh => {
+                // Side chosen so side² ≈ n; mesh ignores nnz target (stencil).
+                let side = (n as f64).sqrt() as usize;
+                gen::mesh2d(side.max(8), seed)
+            }
+            Pattern::Traffic => {
+                let hubs = (n / 4096).max(4);
+                gen::banded_hub(n, 4, hubs, 96, seed)
+            }
+            Pattern::Web => gen::powerlaw(n, nnz, 1.45, seed),
+            Pattern::Gnn => gen::gnn_citation(n, nnz, 32, seed),
+        }
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    s.bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_complete() {
+        assert_eq!(DATASETS.len(), 16);
+        assert_eq!(spmm_datasets().len(), 13);
+        assert_eq!(gnn_datasets().len(), 3);
+    }
+
+    #[test]
+    fn lookup_case_insensitive() {
+        assert!(dataset_by_name("MAWI").is_some());
+        assert!(dataset_by_name("uk-2002").is_some());
+        assert!(dataset_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn generate_small_all() {
+        for d in DATASETS {
+            let m = d.generate(0.01);
+            m.validate().unwrap();
+            assert!(m.nnz() > 0, "{} empty", d.name);
+            assert_eq!(m.nrows, m.ncols, "{} not square", d.name);
+        }
+    }
+
+    #[test]
+    fn generate_deterministic() {
+        let d = dataset_by_name("Pokec").unwrap();
+        assert_eq!(d.generate(0.02), d.generate(0.02));
+    }
+
+    #[test]
+    fn symmetric_datasets_symmetric() {
+        for d in DATASETS.iter().filter(|d| d.symmetric) {
+            let m = d.generate(0.01);
+            let t = m.transpose();
+            assert_eq!(m.indices, t.indices, "{} asymmetric", d.name);
+        }
+    }
+}

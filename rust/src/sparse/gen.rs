@@ -1,0 +1,297 @@
+//! Synthetic sparse-matrix generators reproducing the *pattern classes* of
+//! the paper's Tab. 2 datasets (DESIGN.md §1 explains the substitution).
+//!
+//! Each generator is deterministic given a seed. Values are uniform in
+//! (0, 1] — communication planning only depends on structure.
+
+use crate::sparse::{Coo, Csr};
+use crate::util::rng::Rng;
+
+/// R-MAT / Kronecker-style generator: power-law degree distribution with
+/// community structure — models social networks (com-YT, Pokec, soc-LJ,
+/// com-LJ, Orkut) and Q&A graphs (sx-SO).
+pub fn rmat(
+    n: usize,
+    nnz_target: usize,
+    (a, b, c): (f64, f64, f64),
+    symmetric: bool,
+    seed: u64,
+) -> Csr {
+    assert!(n.is_power_of_two(), "rmat requires power-of-two n");
+    let mut rng = Rng::new(seed);
+    let levels = n.trailing_zeros();
+    let mut coo = Coo::new(n, n);
+    let d = 1.0 - a - b - c;
+    assert!(d >= 0.0, "rmat probabilities sum over 1");
+    let draws = if symmetric { nnz_target / 2 } else { nnz_target };
+    for _ in 0..draws.max(1) {
+        let (mut r, mut col) = (0usize, 0usize);
+        for _ in 0..levels {
+            r <<= 1;
+            col <<= 1;
+            let x = rng.f64();
+            if x < a {
+                // top-left
+            } else if x < a + b {
+                col |= 1;
+            } else if x < a + b + c {
+                r |= 1;
+            } else {
+                r |= 1;
+                col |= 1;
+            }
+        }
+        let v = rng.f32() + 1e-3;
+        coo.push(r, col, v);
+        if symmetric && r != col {
+            coo.push(col, r, v);
+        }
+    }
+    coo.to_csr()
+}
+
+/// Erdős–Rényi uniform random matrix — models uniformly sparse patterns.
+pub fn erdos_renyi(nrows: usize, ncols: usize, nnz_target: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(nrows, ncols);
+    for _ in 0..nnz_target {
+        coo.push(rng.below(nrows), rng.below(ncols), rng.f32() + 1e-3);
+    }
+    coo.to_csr()
+}
+
+/// 2-D grid mesh (5-point stencil) with rows in row-major grid order —
+/// models delaunay_n24 / europe_osm style matrices: symmetric, very sparse,
+/// strong locality, near-uniform degree.
+pub fn mesh2d(side: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let n = side * side;
+    let mut coo = Coo::new(n, n);
+    for y in 0..side {
+        for x in 0..side {
+            let i = y * side + x;
+            coo.push(i, i, 1.0 + rng.f32());
+            if x + 1 < side {
+                let j = i + 1;
+                let v = rng.f32() + 1e-3;
+                coo.push(i, j, v);
+                coo.push(j, i, v);
+            }
+            if y + 1 < side {
+                let j = i + side;
+                let v = rng.f32() + 1e-3;
+                coo.push(i, j, v);
+                coo.push(j, i, v);
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// Power-law web-graph generator: both in- and out-degree skewed, with hub
+/// rows *and* hub columns — models uk-2002 / arabic / webbase / GAP-web.
+/// This is the pattern class where the joint row-column strategy wins big
+/// (paper Fig. 5 Pattern 4): hubs on both sides of the bipartite graph.
+pub fn powerlaw(n: usize, nnz_target: usize, alpha: f64, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(n, n);
+    // Random hub permutations so hub rows and hub columns differ.
+    let mut rperm: Vec<usize> = (0..n).collect();
+    let mut cperm: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut rperm);
+    rng.shuffle(&mut cperm);
+    for _ in 0..nnz_target {
+        let r = rperm[rng.powerlaw(n, alpha)];
+        let c = cperm[rng.powerlaw(n, alpha)];
+        coo.push(r, c, rng.f32() + 1e-3);
+    }
+    coo.to_csr()
+}
+
+/// Banded matrix with sparse hub noise — models the mawi network-traffic
+/// matrices: extremely sparse, near-diagonal band plus a handful of
+/// monitor/hub nodes touching everything. Symmetric (undirected traffic).
+pub fn banded_hub(n: usize, band: usize, hubs: usize, hub_degree: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        coo.push(i, i, 1.0);
+        // A couple of near-diagonal neighbours.
+        for _ in 0..2 {
+            let off = 1 + rng.below(band);
+            if i + off < n {
+                let v = rng.f32() + 1e-3;
+                coo.push(i, i + off, v);
+                coo.push(i + off, i, v);
+            }
+        }
+    }
+    for _ in 0..hubs {
+        let h = rng.below(n);
+        for _ in 0..hub_degree {
+            let t = rng.below(n);
+            let v = rng.f32() + 1e-3;
+            coo.push(h, t, v);
+            coo.push(t, h, v);
+        }
+    }
+    coo.to_csr()
+}
+
+/// Bipartite-ish block pattern for GNN benchmark graphs (Mag240M/IGB):
+/// power-law citation structure with an added block-community overlay.
+pub fn gnn_citation(n: usize, nnz_target: usize, communities: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(n, n);
+    let comm_size = n / communities.max(1);
+    let in_comm = (nnz_target as f64 * 0.6) as usize;
+    for _ in 0..in_comm {
+        let c0 = rng.below(communities.max(1));
+        let base = c0 * comm_size;
+        let r = base + rng.powerlaw(comm_size.max(1), 1.6);
+        let col = base + rng.below(comm_size.max(1));
+        coo.push(r.min(n - 1), col.min(n - 1), rng.f32() + 1e-3);
+    }
+    for _ in 0..nnz_target - in_comm {
+        let r = rng.powerlaw(n, 1.8);
+        let c = rng.below(n);
+        coo.push(r, c, rng.f32() + 1e-3);
+    }
+    coo.to_csr()
+}
+
+/// The four didactic 4×4 patterns of paper Fig. 5 (over an off-diagonal
+/// block). Returns (pattern_name, matrix).
+pub fn fig5_patterns() -> Vec<(&'static str, Csr)> {
+    let build = |entries: &[(usize, usize)]| {
+        let mut coo = Coo::new(4, 4);
+        for &(r, c) in entries {
+            coo.push(r, c, 1.0);
+        }
+        coo.to_csr()
+    };
+    vec![
+        // Pattern 1 (row-skewed): two dense rows.
+        (
+            "row-skewed",
+            build(&[(0, 0), (0, 1), (0, 2), (0, 3), (1, 0), (1, 1), (1, 2), (1, 3)]),
+        ),
+        // Pattern 2 (col-skewed): two dense columns.
+        (
+            "col-skewed",
+            build(&[(0, 0), (1, 0), (2, 0), (3, 0), (0, 1), (1, 1), (2, 1), (3, 1)]),
+        ),
+        // Pattern 3 (uniform): diagonal.
+        ("uniform", build(&[(0, 0), (1, 1), (2, 2), (3, 3)])),
+        // Pattern 4 (mixed): one dense row + one dense column.
+        (
+            "mixed",
+            build(&[(0, 0), (0, 1), (0, 2), (0, 3), (1, 0), (2, 0), (3, 0)]),
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmat_shape_and_determinism() {
+        let a = rmat(256, 2000, (0.57, 0.19, 0.19), false, 1);
+        let b = rmat(256, 2000, (0.57, 0.19, 0.19), false, 1);
+        assert_eq!(a, b);
+        a.validate().unwrap();
+        assert_eq!(a.nrows, 256);
+        assert!(a.nnz() > 1000, "nnz {} (duplicates collapse some)", a.nnz());
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        let a = rmat(512, 8000, (0.57, 0.19, 0.19), false, 2);
+        let mut degs: Vec<usize> = (0..a.nrows).map(|r| a.row_nnz(r)).collect();
+        degs.sort_unstable_by(|x, y| y.cmp(x));
+        let top = degs[..10].iter().sum::<usize>();
+        assert!(
+            top * 10 > a.nnz(),
+            "top-10 rows hold {top} of {} nnz — not skewed",
+            a.nnz()
+        );
+    }
+
+    #[test]
+    fn rmat_symmetric_is_symmetric() {
+        let a = rmat(128, 1500, (0.45, 0.22, 0.22), true, 3);
+        let t = a.transpose();
+        // Structure symmetric: same sparsity pattern.
+        assert_eq!(a.indptr, t.indptr);
+        assert_eq!(a.indices, t.indices);
+    }
+
+    #[test]
+    fn erdos_renyi_uniformish() {
+        let a = erdos_renyi(200, 300, 3000, 4);
+        a.validate().unwrap();
+        assert_eq!(a.nrows, 200);
+        assert_eq!(a.ncols, 300);
+        let max_deg = (0..a.nrows).map(|r| a.row_nnz(r)).max().unwrap();
+        assert!(max_deg < 60, "uniform generator produced hub of degree {max_deg}");
+    }
+
+    #[test]
+    fn mesh2d_symmetric_local() {
+        let a = mesh2d(16, 5);
+        a.validate().unwrap();
+        assert_eq!(a.nrows, 256);
+        let t = a.transpose();
+        assert_eq!(a.indices, t.indices);
+        // Locality: all neighbours within `side` distance.
+        for r in 0..a.nrows {
+            for &c in a.row_indices(r) {
+                let d = (c as i64 - r as i64).unsigned_abs() as usize;
+                assert!(d == 0 || d == 1 || d == 16);
+            }
+        }
+    }
+
+    #[test]
+    fn powerlaw_hubs_on_both_sides() {
+        let a = powerlaw(512, 8000, 1.5, 6);
+        let rt = a.transpose();
+        let max_row = (0..a.nrows).map(|r| a.row_nnz(r)).max().unwrap();
+        let max_col = (0..rt.nrows).map(|r| rt.row_nnz(r)).max().unwrap();
+        assert!(max_row > 50, "row hubs missing: {max_row}");
+        assert!(max_col > 50, "col hubs missing: {max_col}");
+    }
+
+    #[test]
+    fn banded_hub_structure() {
+        let a = banded_hub(1000, 4, 5, 100, 7);
+        a.validate().unwrap();
+        let t = a.transpose();
+        assert_eq!(a.indices, t.indices, "banded_hub must be symmetric");
+        assert!(a.density() < 0.02);
+    }
+
+    #[test]
+    fn fig5_pattern_shapes() {
+        let ps = fig5_patterns();
+        assert_eq!(ps.len(), 4);
+        for (name, m) in &ps {
+            m.validate().unwrap();
+            assert_eq!(m.nrows, 4, "{name}");
+        }
+        // Pattern 1: 2 nonempty rows, 4 nonempty cols.
+        assert_eq!(ps[0].1.nonempty_rows().len(), 2);
+        assert_eq!(ps[0].1.nonempty_cols().len(), 4);
+        // Pattern 4 (mixed): 4 rows, 4 cols, but MWVC = 2.
+        assert_eq!(ps[3].1.nonempty_rows().len(), 4);
+        assert_eq!(ps[3].1.nonempty_cols().len(), 4);
+    }
+
+    #[test]
+    fn gnn_citation_valid() {
+        let a = gnn_citation(1000, 10_000, 8, 8);
+        a.validate().unwrap();
+        assert!(a.nnz() > 5_000);
+    }
+}

@@ -1,0 +1,217 @@
+//! MatrixMarket (.mtx) reader/writer so real SuiteSparse matrices can be
+//! dropped in when available, plus a compact binary cache format.
+
+use crate::sparse::{Coo, Csr};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Read a MatrixMarket coordinate file. Supports `general` and `symmetric`
+/// storage, `real` / `integer` / `pattern` fields.
+pub fn read_matrix_market(path: &Path) -> Result<Csr> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    read_matrix_market_from(BufReader::new(f))
+}
+
+pub fn read_matrix_market_from<R: BufRead>(mut r: R) -> Result<Csr> {
+    let mut header = String::new();
+    r.read_line(&mut header)?;
+    let h = header.trim().to_ascii_lowercase();
+    if !h.starts_with("%%matrixmarket") {
+        bail!("not a MatrixMarket file: {header:?}");
+    }
+    let symmetric = h.contains("symmetric");
+    let pattern = h.contains("pattern");
+    if !h.contains("coordinate") {
+        bail!("only coordinate format supported");
+    }
+
+    let mut sizes = String::new();
+    loop {
+        sizes.clear();
+        if r.read_line(&mut sizes)? == 0 {
+            bail!("unexpected EOF before size line");
+        }
+        if !sizes.trim_start().starts_with('%') && !sizes.trim().is_empty() {
+            break;
+        }
+    }
+    let mut it = sizes.split_whitespace();
+    let nrows: usize = it.next().context("rows")?.parse()?;
+    let ncols: usize = it.next().context("cols")?.parse()?;
+    let nnz: usize = it.next().context("nnz")?.parse()?;
+
+    let mut coo = Coo::new(nrows, ncols);
+    let mut line = String::new();
+    for k in 0..nnz {
+        line.clear();
+        if r.read_line(&mut line)? == 0 {
+            bail!("unexpected EOF at entry {k}");
+        }
+        let mut it = line.split_whitespace();
+        let i: usize = it.next().context("row idx")?.parse::<usize>()? - 1;
+        let j: usize = it.next().context("col idx")?.parse::<usize>()? - 1;
+        let v: f32 = if pattern {
+            1.0
+        } else {
+            it.next().context("value")?.parse()?
+        };
+        if i >= nrows || j >= ncols {
+            bail!("entry ({},{}) out of bounds {}x{}", i + 1, j + 1, nrows, ncols);
+        }
+        coo.push(i, j, v);
+        if symmetric && i != j {
+            coo.push(j, i, v);
+        }
+    }
+    Ok(coo.to_csr())
+}
+
+/// Write a general real MatrixMarket coordinate file.
+pub fn write_matrix_market(m: &Csr, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "{} {} {}", m.nrows, m.ncols, m.nnz())?;
+    for r in 0..m.nrows {
+        for (k, &c) in m.row_indices(r).iter().enumerate() {
+            writeln!(w, "{} {} {}", r + 1, c + 1, m.row_values(r)[k])?;
+        }
+    }
+    Ok(())
+}
+
+const CACHE_MAGIC: &[u8; 8] = b"SHIROCSR";
+
+/// Write the compact binary cache (fast reload of generated datasets).
+pub fn write_binary(m: &Csr, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(CACHE_MAGIC)?;
+    w.write_all(&(m.nrows as u64).to_le_bytes())?;
+    w.write_all(&(m.ncols as u64).to_le_bytes())?;
+    w.write_all(&(m.nnz() as u64).to_le_bytes())?;
+    for v in &m.indptr {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    for v in &m.indices {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    for v in &m.data {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+pub fn read_binary(path: &Path) -> Result<Csr> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != CACHE_MAGIC {
+        bail!("bad cache magic");
+    }
+    let mut u64buf = [0u8; 8];
+    let mut read_u64 = |r: &mut BufReader<std::fs::File>| -> Result<u64> {
+        r.read_exact(&mut u64buf)?;
+        Ok(u64::from_le_bytes(u64buf))
+    };
+    let nrows = read_u64(&mut r)? as usize;
+    let ncols = read_u64(&mut r)? as usize;
+    let nnz = read_u64(&mut r)? as usize;
+    let mut indptr = vec![0u64; nrows + 1];
+    for v in indptr.iter_mut() {
+        let mut b = [0u8; 8];
+        r.read_exact(&mut b)?;
+        *v = u64::from_le_bytes(b);
+    }
+    let mut indices = vec![0u32; nnz];
+    for v in indices.iter_mut() {
+        let mut b = [0u8; 4];
+        r.read_exact(&mut b)?;
+        *v = u32::from_le_bytes(b);
+    }
+    let mut data = vec![0f32; nnz];
+    for v in data.iter_mut() {
+        let mut b = [0u8; 4];
+        r.read_exact(&mut b)?;
+        *v = f32::from_le_bytes(b);
+    }
+    let m = Csr {
+        nrows,
+        ncols,
+        indptr,
+        indices,
+        data,
+    };
+    m.validate()?;
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_general() {
+        let text = "%%MatrixMarket matrix coordinate real general\n\
+                    % comment\n\
+                    3 3 2\n\
+                    1 1 5.0\n\
+                    3 2 -1.5\n";
+        let m = read_matrix_market_from(Cursor::new(text)).unwrap();
+        assert_eq!(m.nrows, 3);
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.row_values(0), &[5.0]);
+        assert_eq!(m.row_indices(2), &[1]);
+    }
+
+    #[test]
+    fn parse_symmetric_expands() {
+        let text = "%%MatrixMarket matrix coordinate real symmetric\n\
+                    2 2 2\n\
+                    1 1 1.0\n\
+                    2 1 3.0\n";
+        let m = read_matrix_market_from(Cursor::new(text)).unwrap();
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.row_indices(0), &[0, 1]);
+    }
+
+    #[test]
+    fn parse_pattern_field() {
+        let text = "%%MatrixMarket matrix coordinate pattern general\n\
+                    2 2 1\n\
+                    1 2\n";
+        let m = read_matrix_market_from(Cursor::new(text)).unwrap();
+        assert_eq!(m.row_values(0), &[1.0]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read_matrix_market_from(Cursor::new("hello\n")).is_err());
+        let oob = "%%MatrixMarket matrix coordinate real general\n1 1 1\n2 1 1.0\n";
+        assert!(read_matrix_market_from(Cursor::new(oob)).is_err());
+    }
+
+    #[test]
+    fn mtx_roundtrip() {
+        let m = gen::erdos_renyi(20, 30, 100, 1);
+        let dir = std::env::temp_dir().join("shiro_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.mtx");
+        write_matrix_market(&m, &p).unwrap();
+        let back = read_matrix_market(&p).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let m = gen::rmat(64, 500, (0.5, 0.2, 0.2), false, 9);
+        let dir = std::env::temp_dir().join("shiro_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        write_binary(&m, &p).unwrap();
+        let back = read_binary(&p).unwrap();
+        assert_eq!(m, back);
+    }
+}

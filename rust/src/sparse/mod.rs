@@ -1,0 +1,12 @@
+//! Sparse matrix substrate: COO/CSR formats, conversions, MatrixMarket IO,
+//! synthetic workload generators, and the Tab. 2 dataset registry.
+
+pub mod csr;
+pub mod datasets;
+pub mod gen;
+pub mod io;
+pub mod reorder;
+pub mod stats;
+
+pub use csr::{Coo, Csr};
+pub use datasets::{dataset_by_name, DatasetSpec, DATASETS};

@@ -1,0 +1,189 @@
+//! Matrix reordering (related-work §8.1: partitioning/reordering is
+//! *orthogonal* to SHIRO's strategy optimization — "our method can be
+//! applied on top of these partitioning schemes"). This module provides
+//! the standard reorderings so the composition can be measured
+//! (`make bench-ablation-reorder`): the paper disables reordering for
+//! baseline fairness (§7.1.5); we quantify what it adds.
+
+use crate::sparse::{Coo, Csr};
+use crate::util::rng::Rng;
+
+/// Apply a symmetric permutation: B = P·A·Pᵀ, i.e. new index
+/// `perm[i]` ← old index i... concretely `b[perm[i]][perm[j]] = a[i][j]`.
+pub fn permute_symmetric(a: &Csr, perm: &[u32]) -> Csr {
+    assert_eq!(a.nrows, a.ncols);
+    assert_eq!(perm.len(), a.nrows);
+    let mut coo = Coo::new(a.nrows, a.ncols);
+    for r in 0..a.nrows {
+        let vals = a.row_values(r);
+        for (k, &c) in a.row_indices(r).iter().enumerate() {
+            coo.push(perm[r] as usize, perm[c as usize] as usize, vals[k]);
+        }
+    }
+    coo.to_csr()
+}
+
+/// Inverse of a permutation.
+pub fn invert(perm: &[u32]) -> Vec<u32> {
+    let mut inv = vec![0u32; perm.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        inv[p as usize] = i as u32;
+    }
+    inv
+}
+
+/// Random symmetric permutation (destroys locality — the adversarial
+/// control).
+pub fn random_perm(n: usize, seed: u64) -> Vec<u32> {
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    Rng::new(seed).shuffle(&mut perm);
+    perm
+}
+
+/// Degree-descending reordering: hubs first. Concentrates high-degree
+/// vertices in the leading row blocks.
+pub fn degree_order(a: &Csr) -> Vec<u32> {
+    let mut order: Vec<u32> = (0..a.nrows as u32).collect();
+    order.sort_by_key(|&r| std::cmp::Reverse(a.row_nnz(r as usize)));
+    invert(&order)
+}
+
+/// Reverse Cuthill–McKee: BFS from a low-degree vertex, neighbours in
+/// degree order, then reverse — the classic bandwidth-reducing ordering
+/// (improves locality, so fewer off-diagonal nonzeros under 1D blocking).
+pub fn rcm_order(a: &Csr) -> Vec<u32> {
+    let n = a.nrows;
+    let mut visited = vec![false; n];
+    let mut order: Vec<u32> = Vec::with_capacity(n);
+    // Structural symmetrization for traversal.
+    let at = a.transpose();
+    let neighbours = |v: usize| -> Vec<u32> {
+        let mut nb: Vec<u32> = a
+            .row_indices(v)
+            .iter()
+            .chain(at.row_indices(v))
+            .copied()
+            .filter(|&c| c as usize != v)
+            .collect();
+        nb.sort_unstable_by_key(|&c| a.row_nnz(c as usize));
+        nb.dedup();
+        nb
+    };
+    let mut starts: Vec<u32> = (0..n as u32).collect();
+    starts.sort_unstable_by_key(|&r| a.row_nnz(r as usize));
+    for &s in &starts {
+        if visited[s as usize] {
+            continue;
+        }
+        let mut queue = std::collections::VecDeque::new();
+        visited[s as usize] = true;
+        queue.push_back(s);
+        while let Some(v) = queue.pop_front() {
+            order.push(v);
+            for c in neighbours(v as usize) {
+                if !visited[c as usize] {
+                    visited[c as usize] = true;
+                    queue.push_back(c);
+                }
+            }
+        }
+    }
+    order.reverse();
+    invert(&order)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::Dense;
+    use crate::sparse::gen;
+    use crate::util::rng::Rng as R;
+
+    #[test]
+    fn permutation_preserves_spectrum_proxy() {
+        // PAPᵀ with x permuted: (PAPᵀ)(Px) = P(Ax) — check via SpMM.
+        let a = gen::rmat(64, 600, (0.5, 0.2, 0.2), false, 1);
+        let perm = random_perm(64, 2);
+        let b = permute_symmetric(&a, &perm);
+        b.validate().unwrap();
+        assert_eq!(b.nnz(), a.nnz());
+        let mut rng = R::new(3);
+        let x = Dense::random(64, 4, &mut rng);
+        // Px
+        let mut px = Dense::zeros(64, 4);
+        for i in 0..64 {
+            px.row_mut(perm[i] as usize).copy_from_slice(x.row(i));
+        }
+        let want = a.spmm(&x); // Ax
+        let got = b.spmm(&px); // PAPᵀ·Px = P(Ax)
+        for i in 0..64 {
+            for j in 0..4 {
+                assert!(
+                    (got.get(perm[i] as usize, j) - want.get(i, j)).abs() < 1e-4
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn invert_roundtrip() {
+        let p = random_perm(100, 5);
+        let inv = invert(&p);
+        for i in 0..100 {
+            assert_eq!(inv[p[i] as usize], i as u32);
+        }
+    }
+
+    #[test]
+    fn rcm_reduces_bandwidth_on_shuffled_mesh() {
+        let mesh = gen::mesh2d(16, 1);
+        let shuffled = permute_symmetric(&mesh, &random_perm(256, 7));
+        let bandwidth = |m: &Csr| -> u64 {
+            let mut bw = 0u64;
+            for r in 0..m.nrows {
+                for &c in m.row_indices(r) {
+                    bw = bw.max((c as i64 - r as i64).unsigned_abs());
+                }
+            }
+            bw
+        };
+        let rcm = permute_symmetric(&shuffled, &rcm_order(&shuffled));
+        assert!(
+            bandwidth(&rcm) < bandwidth(&shuffled) / 2,
+            "rcm {} vs shuffled {}",
+            bandwidth(&rcm),
+            bandwidth(&shuffled)
+        );
+    }
+
+    #[test]
+    fn degree_order_fronts_hubs() {
+        let a = gen::powerlaw(128, 2000, 1.4, 9);
+        let d = permute_symmetric(&a, &degree_order(&a));
+        let head: usize = (0..16).map(|r| d.row_nnz(r)).sum();
+        let tail: usize = (112..128).map(|r| d.row_nnz(r)).sum();
+        assert!(head > tail * 2, "head {head} tail {tail}");
+    }
+
+    #[test]
+    fn rcm_handles_disconnected() {
+        // Two disjoint cliques.
+        let mut coo = Coo::new(8, 8);
+        for g in 0..2 {
+            for i in 0..4 {
+                for j in 0..4 {
+                    if i != j {
+                        coo.push(g * 4 + i, g * 4 + j, 1.0);
+                    }
+                }
+            }
+        }
+        let a = coo.to_csr();
+        let perm = rcm_order(&a);
+        let mut sorted = perm.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..8).collect::<Vec<u32>>());
+    }
+
+    use crate::sparse::Coo;
+}

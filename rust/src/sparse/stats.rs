@@ -1,0 +1,98 @@
+//! Sparsity-pattern statistics used in Tab. 2 printouts and for predicting
+//! the joint strategy's benefit class (paper §5.4).
+
+use crate::sparse::Csr;
+
+#[derive(Clone, Debug)]
+pub struct MatrixStats {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub nnz: usize,
+    pub density: f64,
+    pub avg_row_nnz: f64,
+    pub max_row_nnz: usize,
+    pub max_col_nnz: usize,
+    /// Gini coefficient of row degrees — 0 uniform, →1 fully skewed.
+    pub row_gini: f64,
+    pub col_gini: f64,
+    pub structurally_symmetric: bool,
+}
+
+pub fn stats(m: &Csr) -> MatrixStats {
+    let row_deg: Vec<usize> = (0..m.nrows).map(|r| m.row_nnz(r)).collect();
+    let mut col_deg = vec![0usize; m.ncols];
+    for &c in &m.indices {
+        col_deg[c as usize] += 1;
+    }
+    let t = m.transpose();
+    let structurally_symmetric =
+        m.nrows == m.ncols && m.indptr == t.indptr && m.indices == t.indices;
+    MatrixStats {
+        nrows: m.nrows,
+        ncols: m.ncols,
+        nnz: m.nnz(),
+        density: m.density(),
+        avg_row_nnz: m.nnz() as f64 / m.nrows.max(1) as f64,
+        max_row_nnz: row_deg.iter().copied().max().unwrap_or(0),
+        max_col_nnz: col_deg.iter().copied().max().unwrap_or(0),
+        row_gini: gini(&row_deg),
+        col_gini: gini(&col_deg),
+        structurally_symmetric,
+    }
+}
+
+/// Gini coefficient of a degree sequence.
+pub fn gini(degrees: &[usize]) -> f64 {
+    if degrees.is_empty() {
+        return 0.0;
+    }
+    let mut d: Vec<f64> = degrees.iter().map(|&x| x as f64).collect();
+    d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = d.len() as f64;
+    let total: f64 = d.iter().sum();
+    if total == 0.0 {
+        return 0.0;
+    }
+    let weighted: f64 = d
+        .iter()
+        .enumerate()
+        .map(|(i, x)| (i as f64 + 1.0) * x)
+        .sum();
+    (2.0 * weighted) / (n * total) - (n + 1.0) / n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn gini_uniform_zero() {
+        assert!(gini(&[5, 5, 5, 5]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gini_skewed_high() {
+        let g = gini(&[0, 0, 0, 0, 0, 0, 0, 100]);
+        assert!(g > 0.8, "gini {g}");
+    }
+
+    #[test]
+    fn stats_on_mesh_vs_rmat() {
+        let mesh = gen::mesh2d(20, 1);
+        let rmat = gen::rmat(512, 6000, (0.57, 0.19, 0.19), false, 1);
+        let sm = stats(&mesh);
+        let sr = stats(&rmat);
+        assert!(sm.structurally_symmetric);
+        assert!(sm.row_gini < 0.2, "mesh gini {}", sm.row_gini);
+        assert!(sr.row_gini > 0.4, "rmat gini {}", sr.row_gini);
+    }
+
+    #[test]
+    fn stats_counts() {
+        let m = gen::erdos_renyi(100, 100, 500, 2);
+        let s = stats(&m);
+        assert_eq!(s.nnz, m.nnz());
+        assert!((s.avg_row_nnz - m.nnz() as f64 / 100.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,173 @@
+//! Distributed SpMM engine: ties partitioning, cover-based planning,
+//! hierarchical scheduling, the executor, and the simulator into one
+//! object — the SHIRO framework's user-facing entry point.
+
+use crate::comm::{self, CommPlan, Strategy};
+use crate::dense::Dense;
+use crate::exec::{self, kernel::SpmmKernel, ExecStats};
+use crate::hierarchy::{self, HierSchedule};
+use crate::partition::{split_1d, LocalBlocks, RowPartition};
+use crate::sim::{self, SimJob, SimReport, Stage};
+use crate::sparse::Csr;
+use crate::topology::Topology;
+
+/// A fully planned distributed SpMM instance. Planning (steps 1–2 of the
+/// §5.1 workflow) happens once in [`DistSpmm::plan`] and is reused across
+/// executions with the same sparsity pattern — `prep_secs` records the
+/// one-time MWVC cost reported in Tab. 3.
+pub struct DistSpmm {
+    pub part: RowPartition,
+    pub blocks: Vec<LocalBlocks>,
+    pub plan: CommPlan,
+    pub sched: Option<HierSchedule>,
+    pub topo: Topology,
+    /// One-time preprocessing (cover solve + schedule build) seconds.
+    pub prep_secs: f64,
+}
+
+impl DistSpmm {
+    /// Plan a distributed SpMM of `a` over `topo.nranks` ranks.
+    /// `hierarchical` enables the §6 two-stage schedule.
+    pub fn plan(a: &Csr, strategy: Strategy, topo: Topology, hierarchical: bool) -> DistSpmm {
+        let part = RowPartition::balanced(a.nrows, topo.nranks);
+        let blocks = split_1d(a, &part);
+        let t0 = std::time::Instant::now();
+        let plan = comm::plan(&blocks, &part, strategy, None);
+        let sched = hierarchical.then(|| hierarchy::build(&plan, &topo));
+        let prep_secs = t0.elapsed().as_secs_f64();
+        DistSpmm { part, blocks, plan, sched, topo, prep_secs }
+    }
+
+    /// Execute for real on in-process ranks; returns global C and measured
+    /// traffic stats.
+    pub fn execute(&self, b: &Dense, kernel: &(dyn SpmmKernel + Sync)) -> (Dense, ExecStats) {
+        exec::run(
+            &self.part,
+            &self.plan,
+            &self.blocks,
+            self.sched.as_ref(),
+            &self.topo,
+            b,
+            kernel,
+        )
+    }
+
+    /// Per-rank compute seconds for the pre-communication stage (local
+    /// diagonal SpMM + row-based remote partials) and the
+    /// post-communication stage (column-based remote SpMM + aggregation).
+    pub fn compute_profile(&self, n_dense: usize) -> (Vec<f64>, Vec<f64>) {
+        let n = self.part.nparts;
+        let rate = self.topo.compute_rate;
+        let launch = self.topo.kernel_launch;
+        let flops = |nnz: usize| 2.0 * nnz as f64 * n_dense as f64;
+        let mut pre = vec![0.0; n];
+        let mut post = vec![0.0; n];
+        // Launch accounting: the row-partial SpMMs for all destinations are
+        // packed into one batched kernel (§5.1 step 3 "Both results are
+        // packed"), as are the column-based remote SpMMs — so each stage
+        // pays a constant number of launches, not one per peer.
+        for r in 0..n {
+            let mut f = flops(self.blocks[r].diag.nnz());
+            let mut any_row = false;
+            for p in 0..n {
+                if p != r && self.plan.pairs[p][r].a_row_part.nnz() > 0 {
+                    f += flops(self.plan.pairs[p][r].a_row_part.nnz());
+                    any_row = true;
+                }
+            }
+            pre[r] = f / rate + (1 + usize::from(any_row)) as f64 * launch;
+            let mut f = 0.0;
+            let mut any_col = false;
+            for q in 0..n {
+                if q != r && self.plan.pairs[r][q].a_col_part.nnz() > 0 {
+                    f += flops(self.plan.pairs[r][q].a_col_part.nnz());
+                    any_col = true;
+                }
+            }
+            post[r] = f / rate + usize::from(any_col) as f64 * launch;
+        }
+        (pre, post)
+    }
+
+    /// Build the simulation job (used by the figure benches at 128 ranks).
+    pub fn sim_job(&self, n_dense: usize) -> SimJob {
+        let (pre, post) = self.compute_profile(n_dense);
+        let mut stages = vec![Stage::compute_only("compute: local + row-partials", pre)];
+        match &self.sched {
+            None => stages.push(sim::flat_comm_stage(&self.plan, n_dense)),
+            Some(s) => {
+                let [s1, s2] = sim::hier_comm_stages(s, n_dense);
+                stages.push(s1);
+                stages.push(s2);
+            }
+        }
+        stages.push(Stage::compute_only("compute: col-remote + aggregate", post));
+        SimJob { stages }
+    }
+
+    /// Simulate one SpMM on the planned topology.
+    pub fn simulate(&self, n_dense: usize) -> SimReport {
+        sim::simulate(&self.sim_job(n_dense), &self.topo)
+    }
+}
+
+/// Serial reference: C = A·B on one rank (the oracle for all tests).
+pub fn serial_reference(a: &Csr, b: &Dense) -> Dense {
+    a.spmm(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cover::Solver;
+    use crate::exec::kernel::NativeKernel;
+    use crate::sparse::gen;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn plan_execute_simulate_roundtrip() {
+        let a = gen::rmat(128, 1500, (0.55, 0.2, 0.19), false, 1);
+        let topo = Topology::tsubame4(8);
+        let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), topo, true);
+        assert!(d.prep_secs >= 0.0);
+        let mut rng = Rng::new(1);
+        let b = Dense::random(128, 16, &mut rng);
+        let (c, stats) = d.execute(&b, &NativeKernel);
+        assert!(serial_reference(&a, &b).diff_norm(&c) < 1e-3);
+        assert!(stats.wall_secs > 0.0);
+        let rep = d.simulate(16);
+        assert!(rep.total > 0.0);
+        assert_eq!(rep.per_stage.len(), 4); // pre, stage I, stage II, post
+    }
+
+    #[test]
+    fn flat_sim_has_three_stages() {
+        let a = gen::erdos_renyi(64, 64, 600, 2);
+        let d = DistSpmm::plan(&a, Strategy::Column, Topology::tsubame4(4), false);
+        let rep = d.simulate(32);
+        assert_eq!(rep.per_stage.len(), 3);
+    }
+
+    #[test]
+    fn joint_sim_no_slower_than_column_inter_bytes() {
+        let a = gen::powerlaw(256, 4000, 1.4, 3);
+        let topo = Topology::tsubame4(16);
+        let joint = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), topo.clone(), true);
+        let col = DistSpmm::plan(&a, Strategy::Column, topo, true);
+        let jr = joint.simulate(32);
+        let cr = col.simulate(32);
+        assert!(jr.inter_bytes <= cr.inter_bytes);
+    }
+
+    #[test]
+    fn compute_profile_nonnegative_and_scaled() {
+        let a = gen::rmat(128, 2000, (0.5, 0.2, 0.2), false, 4);
+        let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(8), false);
+        let (pre32, _) = d.compute_profile(32);
+        let (pre64, _) = d.compute_profile(64);
+        for (a32, a64) in pre32.iter().zip(&pre64) {
+            assert!(*a32 > 0.0);
+            assert!(a64 > a32, "compute must grow with N");
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! Two-tier cluster topology model (paper §3.2, §7.1.2): groups of ranks
+//! joined by fast intra-group links (NVLink / Xe Link) and slower
+//! inter-group links (InfiniBand / Slingshot).
+
+/// Link tier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    Intra,
+    Inter,
+}
+
+/// A two-tier hierarchical topology. All bandwidths are bytes/second per
+/// rank (NIC share), latencies in seconds.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub name: String,
+    pub nranks: usize,
+    /// Ranks per group (node). nranks need not be a multiple; the last
+    /// group may be smaller.
+    pub group_size: usize,
+    pub intra_bw: f64,
+    pub inter_bw: f64,
+    pub intra_lat: f64,
+    pub inter_lat: f64,
+    /// Effective per-rank SpMM compute throughput (flops/s) — calibrated so
+    /// the comm/compute *ratio* matches the paper's strong-scaling regime.
+    pub compute_rate: f64,
+    /// Per-kernel launch floor (s), models launch latency + cuSPARSE setup.
+    pub kernel_launch: f64,
+}
+
+impl Topology {
+    /// TSUBAME4.0 (paper §7.1.2): 4× H100 per node, NVLink 4.0 450 GB/s,
+    /// InfiniBand NDR200 25 GB/s per node ⇒ ~6.25 GB/s per GPU (the paper's
+    /// §7.7 quotes ~6 GB/s per GPU).
+    pub fn tsubame4(nranks: usize) -> Topology {
+        Topology {
+            name: "tsubame4".into(),
+            nranks,
+            group_size: 4,
+            intra_bw: 450e9,
+            inter_bw: 6.25e9,
+            intra_lat: 3e-6,
+            inter_lat: 3e-6,
+            compute_rate: 2.0e12, // effective sparse flops/s on H100
+            kernel_launch: 20e-6,
+        }
+    }
+
+    /// Aurora (paper §7.7): 12 PVC tiles per node via Xe Link at 15 GB/s,
+    /// Slingshot-11 at 200 GB/s per node ⇒ ~17 GB/s per tile. The shallow
+    /// bandwidth cliff (15 vs 17) makes hierarchy-aware scheduling
+    /// unprofitable — Fig. 12's finding.
+    pub fn aurora(nranks: usize) -> Topology {
+        Topology {
+            name: "aurora".into(),
+            nranks,
+            group_size: 12,
+            intra_bw: 15e9,
+            inter_bw: 17e9,
+            intra_lat: 3e-6,
+            inter_lat: 8e-6,
+            compute_rate: 1.2e12,
+            kernel_launch: 25e-6,
+        }
+    }
+
+    /// Flat network: a single tier (group_size = nranks); used for unit
+    /// tests and as the "no hierarchy" ablation control.
+    pub fn flat(nranks: usize, bw: f64) -> Topology {
+        Topology {
+            name: "flat".into(),
+            nranks,
+            group_size: nranks.max(1),
+            intra_bw: bw,
+            inter_bw: bw,
+            intra_lat: 5e-6,
+            inter_lat: 5e-6,
+            compute_rate: 2.0e12,
+            kernel_launch: 20e-6,
+        }
+    }
+
+    pub fn by_name(name: &str, nranks: usize) -> Option<Topology> {
+        match name {
+            "tsubame4" => Some(Topology::tsubame4(nranks)),
+            "aurora" => Some(Topology::aurora(nranks)),
+            "flat" => Some(Topology::flat(nranks, 25e9)),
+            _ => None,
+        }
+    }
+
+    #[inline]
+    pub fn group_of(&self, rank: usize) -> usize {
+        rank / self.group_size
+    }
+
+    pub fn ngroups(&self) -> usize {
+        self.nranks.div_ceil(self.group_size)
+    }
+
+    /// Ranks in group g.
+    pub fn group_members(&self, g: usize) -> std::ops::Range<usize> {
+        let lo = g * self.group_size;
+        lo..((g + 1) * self.group_size).min(self.nranks)
+    }
+
+    /// Vector of each rank's group id (for metrics).
+    pub fn group_vec(&self) -> Vec<usize> {
+        (0..self.nranks).map(|r| self.group_of(r)).collect()
+    }
+
+    #[inline]
+    pub fn tier(&self, a: usize, b: usize) -> Tier {
+        if self.group_of(a) == self.group_of(b) {
+            Tier::Intra
+        } else {
+            Tier::Inter
+        }
+    }
+
+    pub fn bw(&self, tier: Tier) -> f64 {
+        match tier {
+            Tier::Intra => self.intra_bw,
+            Tier::Inter => self.inter_bw,
+        }
+    }
+
+    pub fn lat(&self, tier: Tier) -> f64 {
+        match tier {
+            Tier::Intra => self.intra_lat,
+            Tier::Inter => self.inter_lat,
+        }
+    }
+
+    /// Bandwidth cliff ratio intra/inter — the hierarchy-aware strategy
+    /// pays off when this is large (paper: TSUBAME 72×, Aurora ~0.9×).
+    pub fn bandwidth_cliff(&self) -> f64 {
+        self.intra_bw / self.inter_bw
+    }
+
+    /// Representative rank in destination group `g` for traffic sourced at
+    /// rank `src`: spread by source to balance NIC load across the group.
+    pub fn representative(&self, g: usize, src: usize) -> usize {
+        let members = self.group_members(g);
+        let len = members.len();
+        members.start + src % len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tsubame_groups() {
+        let t = Topology::tsubame4(32);
+        assert_eq!(t.ngroups(), 8);
+        assert_eq!(t.group_of(0), 0);
+        assert_eq!(t.group_of(7), 1);
+        assert_eq!(t.group_members(1), 4..8);
+        assert_eq!(t.tier(0, 3), Tier::Intra);
+        assert_eq!(t.tier(0, 4), Tier::Inter);
+        assert!(t.bandwidth_cliff() > 10.0);
+    }
+
+    #[test]
+    fn aurora_shallow_cliff() {
+        let t = Topology::aurora(24);
+        assert_eq!(t.ngroups(), 2);
+        assert!(t.bandwidth_cliff() < 1.5);
+    }
+
+    #[test]
+    fn flat_single_group() {
+        let t = Topology::flat(16, 25e9);
+        assert_eq!(t.ngroups(), 1);
+        assert_eq!(t.tier(0, 15), Tier::Intra);
+    }
+
+    #[test]
+    fn ragged_last_group() {
+        let t = Topology::tsubame4(10);
+        assert_eq!(t.ngroups(), 3);
+        assert_eq!(t.group_members(2), 8..10);
+        let rep = t.representative(2, 5);
+        assert!(t.group_members(2).contains(&rep));
+    }
+
+    #[test]
+    fn representative_balances() {
+        let t = Topology::tsubame4(8);
+        let reps: std::collections::HashSet<usize> =
+            (0..4).map(|src| t.representative(1, src)).collect();
+        assert_eq!(reps.len(), 4, "all members should serve as reps");
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(Topology::by_name("tsubame4", 8).is_some());
+        assert!(Topology::by_name("aurora", 24).is_some());
+        assert!(Topology::by_name("unknown", 8).is_none());
+    }
+}

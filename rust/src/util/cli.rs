@@ -1,0 +1,108 @@
+//! Tiny CLI argument parser (clap is unavailable offline — DESIGN.md §1).
+//!
+//! Supports `--key value`, `--key=value`, `--flag`, and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a float, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["run", "--ranks", "32", "--dataset=mawi", "--verbose"]);
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get("ranks"), Some("32"));
+        assert_eq!(a.get("dataset"), Some("mawi"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["--n", "64", "--alpha", "1.5"]);
+        assert_eq!(a.get_usize("n", 0), 64);
+        assert_eq!(a.get_usize("missing", 7), 7);
+        assert!((a.get_f64("alpha", 0.0) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--check"]);
+        assert!(a.has_flag("check"));
+        assert!(a.get("check").is_none());
+    }
+
+    #[test]
+    fn flag_before_option() {
+        let a = parse(&["--fast", "--n", "3"]);
+        assert!(a.has_flag("fast") || a.get("fast") == Some("--n"));
+        assert!(a.has_flag("fast"));
+        assert_eq!(a.get_usize("n", 0), 3);
+    }
+}

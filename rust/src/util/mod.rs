@@ -1,0 +1,75 @@
+//! Small self-contained utilities: deterministic RNG, timers, a
+//! quickcheck-style property-testing harness, and a mini-TOML parser.
+//!
+//! These replace crates (rand, criterion, proptest, serde/toml) that are not
+//! available in the offline build image — see DESIGN.md §1.
+
+pub mod cli;
+pub mod proptest;
+pub mod rng;
+pub mod timer;
+pub mod toml_mini;
+
+/// Geometric mean of a slice of positive values; returns 0.0 for empty input.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|x| x.ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+/// Human-readable byte count (binary prefixes).
+pub fn human_bytes(b: f64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = b;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{:.0} {}", v, UNITS[u])
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Human-readable duration given seconds.
+pub fn human_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 100.0]) - 10.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+        assert!((geomean(&[7.0]) - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512.0), "512 B");
+        assert_eq!(human_bytes(2048.0), "2.00 KiB");
+        assert_eq!(human_bytes(3.0 * 1024.0 * 1024.0), "3.00 MiB");
+    }
+
+    #[test]
+    fn human_secs_units() {
+        assert_eq!(human_secs(2.0), "2.000 s");
+        assert_eq!(human_secs(0.5e-3), "500.00 µs");
+        assert_eq!(human_secs(0.25), "250.00 ms");
+    }
+}

@@ -1,0 +1,144 @@
+//! Minimal quickcheck-style property-testing harness (proptest is not
+//! available in the offline image — see DESIGN.md §1).
+//!
+//! Usage (`no_run`: doctest binaries don't get the xla rpath):
+//! ```no_run
+//! use shiro::util::proptest::{forall, Gen};
+//! forall("sum is commutative", 100, |g: &mut Gen| {
+//!     let a = g.usize_in(0, 1000);
+//!     let b = g.usize_in(0, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! On failure the harness re-runs the failing case with its seed printed so
+//! it can be reproduced exactly.
+
+use crate::util::rng::Rng;
+
+/// Value generator handed to each property-test case.
+pub struct Gen {
+    rng: Rng,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen {
+            rng: Rng::new(seed),
+            case_seed: seed,
+        }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        if lo >= hi {
+            return lo;
+        }
+        self.rng.range(lo, hi)
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Size parameter biased toward small values (exercises edge cases more).
+    pub fn small_size(&mut self, max: usize) -> usize {
+        if max == 0 {
+            return 0;
+        }
+        // ~50% of draws land below max/8.
+        if self.rng.chance(0.5) {
+            self.rng.below(max / 8 + 1)
+        } else {
+            self.rng.below(max + 1)
+        }
+    }
+
+    pub fn vec_usize(&mut self, len: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..len).map(|_| self.usize_in(lo, hi)).collect()
+    }
+
+    pub fn vec_f32(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.rng.f32() * 2.0 - 1.0).collect()
+    }
+}
+
+/// Run `cases` randomized cases of `prop`. Panics (with the failing seed)
+/// if any case panics.
+pub fn forall(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    // Base seed derived from the property name so distinct properties explore
+    // distinct streams but remain fully deterministic.
+    let base: u64 = name
+        .bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3));
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+        });
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        forall("add-commutes", 50, |g| {
+            let a = g.usize_in(0, 100);
+            let b = g.usize_in(0, 100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports_seed() {
+        forall("always-fails", 10, |g| {
+            let x = g.usize_in(0, 10);
+            assert!(x > 100, "x was {x}");
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        use std::sync::Mutex;
+        let first = Mutex::new(Vec::new());
+        forall("det", 5, |g| {
+            first.lock().unwrap().push(g.usize_in(0, 1_000_000));
+        });
+        let second = Mutex::new(Vec::new());
+        forall("det", 5, |g| {
+            second.lock().unwrap().push(g.usize_in(0, 1_000_000));
+        });
+        assert_eq!(*first.lock().unwrap(), *second.lock().unwrap());
+    }
+
+    #[test]
+    fn small_size_in_bounds() {
+        forall("small-size", 100, |g| {
+            let s = g.small_size(64);
+            assert!(s <= 64);
+        });
+    }
+}

@@ -1,0 +1,262 @@
+//! Minimal TOML-subset parser for experiment configs (serde/toml crates are
+//! unavailable offline — DESIGN.md §1).
+//!
+//! Supported: `[table]` headers, `key = value` with string / integer / float /
+//! boolean / homogeneous array values, `#` comments. Nested tables are
+//! flattened as `table.key` lookups.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Parsed config: keys are `section.key` (or bare `key` for the root table).
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, ParseError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(ParseError {
+                        line: lineno,
+                        msg: format!("malformed table header {line:?}"),
+                    });
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| ParseError {
+                line: lineno,
+                msg: format!("expected key = value, got {line:?}"),
+            })?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{}.{}", section, k.trim())
+            };
+            let value = parse_value(v.trim()).map_err(|msg| ParseError { line: lineno, msg })?;
+            entries.insert(key, value);
+        }
+        Ok(Config { entries })
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Config::parse(&text)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_int()).unwrap_or(default)
+    }
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_float()).unwrap_or(default)
+    }
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            return Err(format!("unterminated string {s:?}"));
+        }
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err(format!("unterminated array {s:?}"));
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+/// Split a comma-separated list, respecting nested brackets and strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        let c = Config::parse(
+            r#"
+            name = "mawi"  # dataset
+            rows = 1000
+            density = 3.0e-8
+            symmetric = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.str_or("name", ""), "mawi");
+        assert_eq!(c.int_or("rows", 0), 1000);
+        assert!((c.float_or("density", 0.0) - 3.0e-8).abs() < 1e-20);
+        assert!(c.bool_or("symmetric", false));
+    }
+
+    #[test]
+    fn parse_sections() {
+        let c = Config::parse(
+            "[topology]\ngroups = 8\n[run]\nranks = 32\n",
+        )
+        .unwrap();
+        assert_eq!(c.int_or("topology.groups", 0), 8);
+        assert_eq!(c.int_or("run.ranks", 0), 32);
+    }
+
+    #[test]
+    fn parse_arrays() {
+        let c = Config::parse("ns = [32, 64, 128]\nnames = [\"a\", \"b\"]\n").unwrap();
+        let ns = c.get("ns").unwrap().as_array().unwrap();
+        assert_eq!(ns.len(), 3);
+        assert_eq!(ns[2].as_int(), Some(128));
+        let names = c.get("names").unwrap().as_array().unwrap();
+        assert_eq!(names[1].as_str(), Some("b"));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let c = Config::parse("tag = \"a#b\"\n").unwrap();
+        assert_eq!(c.str_or("tag", ""), "a#b");
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let err = Config::parse("ok = 1\nbad line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn empty_array() {
+        let c = Config::parse("xs = []\n").unwrap();
+        assert_eq!(c.get("xs").unwrap().as_array().unwrap().len(), 0);
+    }
+}

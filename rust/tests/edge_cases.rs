@@ -1,0 +1,118 @@
+//! Edge-case integration tests: degenerate topologies, extreme shapes,
+//! and config-file round trips.
+
+use shiro::comm::Strategy;
+use shiro::cover::Solver;
+use shiro::dense::Dense;
+use shiro::exec::kernel::NativeKernel;
+use shiro::sparse::gen;
+use shiro::spmm::DistSpmm;
+use shiro::topology::Topology;
+use shiro::util::rng::Rng;
+
+fn verify(d: &DistSpmm, a: &shiro::sparse::Csr, n_dense: usize) {
+    let mut rng = Rng::new(5);
+    let b = Dense::random(a.nrows, n_dense, &mut rng);
+    let (got, _) = d.execute(&b, &NativeKernel);
+    let want = a.spmm(&b);
+    assert!(want.diff_norm(&got) / (want.max_abs() as f64 + 1e-30) < 1e-3);
+}
+
+#[test]
+fn single_group_hierarchy_degenerates_to_direct() {
+    // 4 ranks on tsubame (one node): hierarchy must produce only direct
+    // transfers and still be exact.
+    let a = gen::rmat(256, 3000, (0.5, 0.2, 0.2), false, 1);
+    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(4), true);
+    let sched = d.sched.as_ref().unwrap();
+    assert!(sched.b_flows.is_empty());
+    assert!(sched.c_flows.is_empty());
+    assert_eq!(sched.inter_group_bytes(32), 0);
+    verify(&d, &a, 32);
+}
+
+#[test]
+fn group_size_one_all_inter() {
+    // group_size 1: every pair is inter-group; dedup can't help B (one
+    // consumer per flow) and aggregation can't help C (one producer) —
+    // schedule must collapse to single-hop transfers and stay exact.
+    let a = gen::powerlaw(256, 3000, 1.4, 2);
+    let mut topo = Topology::tsubame4(8);
+    topo.group_size = 1;
+    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), topo, true);
+    let sched = d.sched.as_ref().unwrap();
+    for f in &sched.b_flows {
+        assert_eq!(f.consumers.len(), 1);
+        assert_eq!(f.rep, f.consumers[0].0, "single consumer must be its own rep");
+    }
+    for f in &sched.c_flows {
+        assert_eq!(f.producers.len(), 1);
+    }
+    verify(&d, &a, 8);
+}
+
+#[test]
+fn huge_rank_count_tiny_matrix() {
+    // More ranks than meaningful work: 64 ranks on 128 rows (2 rows each).
+    let a = gen::erdos_renyi(128, 128, 700, 3);
+    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(64), true);
+    verify(&d, &a, 4);
+}
+
+#[test]
+fn wide_dense_matrix() {
+    // N = 256 (wider than any artifact; native path).
+    let a = gen::rmat(128, 1200, (0.5, 0.2, 0.2), false, 4);
+    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(8), true);
+    verify(&d, &a, 256);
+}
+
+#[test]
+fn fully_dense_block_matrix() {
+    // Dense A: covers degenerate "everything needed everywhere".
+    let mut coo = shiro::sparse::Coo::new(64, 64);
+    let mut rng = Rng::new(6);
+    for r in 0..64 {
+        for c in 0..64 {
+            coo.push(r, c, rng.f32() + 0.01);
+        }
+    }
+    let a = coo.to_csr();
+    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(8), true);
+    // Joint volume can't beat min(rows, cols) per block here; exactness is
+    // the point.
+    verify(&d, &a, 8);
+}
+
+#[test]
+fn config_file_roundtrip_drives_run() {
+    // The shipped sample config parses and resolves.
+    let cfg = shiro::util::toml_mini::Config::load(std::path::Path::new("run.toml")).unwrap();
+    assert_eq!(cfg.str_or("run.dataset", ""), "GAP-web");
+    assert_eq!(cfg.int_or("run.ranks", 0), 32);
+    assert_eq!(cfg.str_or("run.topo", ""), "tsubame4");
+}
+
+#[test]
+fn simulate_zero_byte_stage() {
+    use shiro::sim::{simulate, SimJob, SimMsg, Stage};
+    let topo = Topology::flat(2, 1e9);
+    let job = SimJob {
+        stages: vec![Stage::comm("z", vec![SimMsg { src: 0, dst: 1, bytes: 0 }])],
+    };
+    let r = simulate(&job, &topo);
+    // Latency-only message.
+    assert!(r.total > 0.0 && r.total < 1e-4);
+}
+
+#[test]
+fn sim_trace_on_real_plan() {
+    use shiro::sim::trace::{to_chrome_json, trace};
+    let a = gen::rmat(256, 3000, (0.5, 0.2, 0.2), false, 7);
+    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(16), true);
+    let job = d.sim_job(32);
+    let t = trace(&job, &d.topo);
+    assert!(!t.is_empty());
+    let json = to_chrome_json(&t, &job);
+    assert!(json.contains("stageI"));
+}

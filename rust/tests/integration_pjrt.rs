@@ -1,0 +1,161 @@
+//! Integration: AOT artifacts (JAX/Pallas → HLO text) loaded and executed
+//! through PJRT from the Rust side, composed with the distributed executor.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use shiro::comm::Strategy;
+use shiro::cover::Solver;
+use shiro::dense::Dense;
+use shiro::exec::kernel::{NativeKernel, SpmmKernel};
+use shiro::gnn::{DenseOps, NativeDense, PjrtDense};
+use shiro::runtime::{PjrtKernel, Runtime};
+use shiro::sparse::gen;
+use shiro::spmm::DistSpmm;
+use shiro::topology::Topology;
+use shiro::util::rng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = Runtime::default_dir();
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn runtime_loads_manifest() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).expect("load artifacts");
+    assert_eq!(rt.platform(), "cpu");
+    let names = rt.artifact_names();
+    assert!(names.iter().any(|n| n.starts_with("spmm_ell")), "{names:?}");
+    assert!(names.iter().any(|n| n.starts_with("gcn_fwd")), "{names:?}");
+}
+
+#[test]
+fn pjrt_spmm_matches_native() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).unwrap();
+    // Shape matching the exported variant (K=512, N=32; rows ≤ 512).
+    let a = gen::rmat(512, 6000, (0.55, 0.2, 0.19), false, 3);
+    let mut rng = Rng::new(4);
+    let b = Dense::random(512, 32, &mut rng);
+    let got = rt.spmm(&a, &b).expect("pjrt spmm");
+    let want = a.spmm(&b);
+    let err = want.diff_norm(&got) / (want.max_abs() as f64 + 1e-30);
+    assert!(err < 1e-3, "rel err {err}");
+}
+
+#[test]
+fn pjrt_spmm_dense_rows_spill_slabs() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).unwrap();
+    // A row with ~60 nnz forces multiple KMAX=16 slabs.
+    let mut coo = shiro::sparse::Coo::new(512, 512);
+    for c in 0..60 {
+        coo.push(0, c * 8, 0.5 + c as f32 * 0.01);
+    }
+    for r in 1..512 {
+        coo.push(r, (r * 7) % 512, 1.0);
+    }
+    let a = coo.to_csr();
+    let mut rng = Rng::new(5);
+    let b = Dense::random(512, 32, &mut rng);
+    let got = rt.spmm(&a, &b).unwrap();
+    let want = a.spmm(&b);
+    assert!(want.diff_norm(&got) < 1e-2, "{}", want.diff_norm(&got));
+}
+
+#[test]
+fn distributed_spmm_with_pjrt_kernel() {
+    let dir = require_artifacts!();
+    let kernel = PjrtKernel::load(&dir).unwrap();
+    // 4096 rows over 8 ranks → every local block is 512×512, N=32:
+    // all executor SpMM calls hit the AOT kernel (rows ≤ 512, K = 512).
+    let a = gen::rmat(4096, 40_000, (0.55, 0.2, 0.19), true, 6);
+    let topo = Topology::tsubame4(8);
+    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), topo, true);
+    let mut rng = Rng::new(7);
+    let b = Dense::random(4096, 32, &mut rng);
+    let (got, _) = d.execute(&b, &kernel);
+    let want = a.spmm(&b);
+    let err = want.diff_norm(&got) / (want.max_abs() as f64 + 1e-30);
+    assert!(err < 1e-3, "rel err {err}");
+    assert_eq!(
+        kernel.fallbacks.load(std::sync::atomic::Ordering::Relaxed),
+        0,
+        "all local SpMMs must go through the AOT kernel"
+    );
+}
+
+#[test]
+fn gcn_dense_artifacts_match_native() {
+    let dir = require_artifacts!();
+    let kernel = PjrtKernel::load(&dir).unwrap();
+    let pjrt = PjrtDense { kernel: &kernel, chunk: 512 };
+    let mut rng = Rng::new(8);
+    let h_agg = Dense::random(1024, 32, &mut rng);
+    let w = Dense::random(32, 32, &mut rng);
+    let (z_p, h_p) = pjrt.fwd(&h_agg, &w);
+    let (z_n, h_n) = NativeDense.fwd(&h_agg, &w);
+    assert!(z_n.diff_norm(&z_p) < 1e-2);
+    assert!(h_n.diff_norm(&h_p) < 1e-2);
+
+    let dh = Dense::random(1024, 32, &mut rng);
+    let (da_p, dw_p) = pjrt.bwd(&h_agg, &w, &z_p, &dh);
+    let (da_n, dw_n) = NativeDense.bwd(&h_agg, &w, &z_n, &dh);
+    assert!(da_n.diff_norm(&da_p) < 1e-2);
+    assert!(dw_n.diff_norm(&dw_p) < 1e-2);
+
+    let target = Dense::random(1024, 32, &mut rng);
+    let (l_p, g_p) = pjrt.mse(&h_p, &target);
+    let (l_n, g_n) = NativeDense.mse(&h_n, &target);
+    assert!((l_p - l_n).abs() < 1e-4, "{l_p} vs {l_n}");
+    assert!(g_n.diff_norm(&g_p) < 1e-4);
+}
+
+#[test]
+fn fused_gcn_kernel_matches_composition() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).unwrap();
+    // Sparse block with ≤16 nnz per row (one ELL slab).
+    let a = gen::erdos_renyi(512, 512, 3000, 11);
+    let mut rng = Rng::new(12);
+    let b = Dense::random(512, 32, &mut rng);
+    let w = Dense::random(32, 32, &mut rng);
+    let (z, h) = rt.gcn_fused(&a, &b, &w).expect("fused artifact");
+    // Oracle: spmm then matmul then relu.
+    let agg = a.spmm(&b);
+    let z_ref = agg.matmul(&w);
+    let mut h_ref = z_ref.clone();
+    for v in h_ref.data.iter_mut() {
+        *v = v.max(0.0);
+    }
+    assert!(z_ref.diff_norm(&z) < 1e-2, "{}", z_ref.diff_norm(&z));
+    assert!(h_ref.diff_norm(&h) < 1e-2);
+}
+
+#[test]
+fn native_kernel_used_as_fallback_for_odd_shapes() {
+    let dir = require_artifacts!();
+    let kernel = PjrtKernel::load(&dir).unwrap();
+    // 100×100, N=7: no artifact — must silently fall back and stay correct.
+    let a = gen::erdos_renyi(100, 100, 500, 9);
+    let mut rng = Rng::new(10);
+    let b = Dense::random(100, 7, &mut rng);
+    let got = kernel.spmm(&a, &b);
+    assert!(a.spmm(&b).diff_norm(&got) < 1e-4);
+    assert!(kernel.fallbacks.load(std::sync::atomic::Ordering::Relaxed) > 0);
+    // And the native kernel trait object names stay distinct.
+    assert_eq!(NativeKernel.name(), "native");
+    assert_eq!(kernel.name(), "pjrt");
+}

@@ -1,0 +1,239 @@
+//! Property-based tests on coordinator invariants (in-tree harness,
+//! DESIGN.md §1): routing correctness, cover optimality bounds, schedule
+//! conservation laws, and end-to-end numerics over randomized matrices,
+//! partitions, and topologies.
+
+use shiro::comm::{self, Strategy};
+use shiro::cover::{self, Solver, Weights};
+use shiro::dense::Dense;
+use shiro::exec::{self, kernel::NativeKernel};
+use shiro::hierarchy;
+use shiro::partition::{split_1d, RowPartition};
+use shiro::sparse::{gen, Csr};
+use shiro::topology::Topology;
+use shiro::util::proptest::{forall, Gen};
+
+/// Random sparse matrix drawn from one of the generator families.
+fn random_matrix(g: &mut Gen) -> Csr {
+    let n = 1 << g.usize_in(5, 9); // 32..256
+    let family = g.usize_in(0, 4);
+    let nnz = n * g.usize_in(2, 12);
+    let seed = g.rng().next_u64();
+    match family {
+        0 => gen::rmat(n, nnz, (0.5, 0.22, 0.18), g.bool(), seed),
+        1 => gen::erdos_renyi(n, n, nnz, seed),
+        2 => gen::powerlaw(n, nnz, 1.3 + g.f64_unit(), seed),
+        _ => gen::banded_hub(n, 1 + g.usize_in(0, 4), 2 + g.usize_in(0, 4), 16, seed),
+    }
+}
+
+#[test]
+fn prop_cover_always_valid_and_optimal_order() {
+    forall("cover-valid", 60, |g| {
+        let a = random_matrix(g);
+        let k = cover::solve(&a, Solver::Koenig, &Weights::default());
+        let d = cover::solve(&a, Solver::Dinic, &Weights::default());
+        let gr = cover::solve(&a, Solver::Greedy, &Weights::default());
+        assert!(k.is_valid_for(&a), "König invalid");
+        assert!(d.is_valid_for(&a), "Dinic invalid");
+        assert!(gr.is_valid_for(&a), "greedy invalid");
+        // Optimality: both exact solvers agree; greedy never better.
+        assert_eq!(k.cost, d.cost, "exact solvers disagree");
+        assert!(gr.cost >= k.cost, "greedy beat optimal");
+        // Dominance (Eq. 10 denominators).
+        assert!(k.mu() <= a.nonempty_rows().len());
+        assert!(k.mu() <= a.nonempty_cols().len());
+        // König bound: cover size == max matching ≤ min(|R|,|C|).
+        assert!(k.mu() <= a.nonempty_rows().len().min(a.nonempty_cols().len()));
+    });
+}
+
+#[test]
+fn prop_weighted_cover_never_exceeds_single_strategies() {
+    forall("weighted-cover-bound", 40, |g| {
+        let a = random_matrix(g);
+        let rw = 1 + g.usize_in(0, 8) as u64;
+        let cw = 1 + g.usize_in(0, 8) as u64;
+        let w = Weights {
+            row: Some(vec![rw; a.nrows]),
+            col: Some(vec![cw; a.ncols]),
+        };
+        let sol = cover::solve(&a, Solver::Dinic, &w);
+        assert!(sol.is_valid_for(&a));
+        let col_cost = a.nonempty_cols().len() as u64 * cw;
+        let row_cost = a.nonempty_rows().len() as u64 * rw;
+        assert!(
+            sol.cost <= col_cost.min(row_cost),
+            "weighted cover {} worse than single-strategy {} / {}",
+            sol.cost,
+            row_cost,
+            col_cost
+        );
+    });
+}
+
+#[test]
+fn prop_plan_conserves_nnz_and_covers() {
+    forall("plan-conserves", 30, |g| {
+        let a = random_matrix(g);
+        let ranks = g.usize_in(2, 9);
+        let part = RowPartition::balanced(a.nrows, ranks);
+        let blocks = split_1d(&a, &part);
+        let strategy = match g.usize_in(0, 4) {
+            0 => Strategy::Column,
+            1 => Strategy::Row,
+            2 => Strategy::Joint(Solver::Koenig),
+            _ => Strategy::Joint(Solver::Greedy),
+        };
+        let plan = comm::plan(&blocks, &part, strategy, None);
+        let mut off_diag_nnz = 0;
+        let mut plan_nnz = 0;
+        for p in 0..ranks {
+            for q in 0..ranks {
+                if p == q {
+                    continue;
+                }
+                off_diag_nnz += blocks[p].off_diag[q].nnz();
+                let pair = &plan.pairs[p][q];
+                plan_nnz += pair.a_row_part.nnz() + pair.a_col_part.nnz();
+                // Every col-part nonzero's column must be in b_rows; every
+                // row-part nonzero's row must be in c_rows.
+                for r in 0..pair.a_col_part.nrows {
+                    for &c in pair.a_col_part.row_indices(r) {
+                        assert!(pair.b_rows.binary_search(&c).is_ok());
+                    }
+                }
+                for &r in &pair.a_row_part.nonempty_rows() {
+                    assert!(pair.c_rows.binary_search(&r).is_ok());
+                }
+            }
+        }
+        assert_eq!(off_diag_nnz, plan_nnz, "nonzeros lost in planning");
+    });
+}
+
+#[test]
+fn prop_hier_schedule_conserves_rows() {
+    forall("hier-conserves", 25, |g| {
+        let a = random_matrix(g);
+        let ranks = 4 * g.usize_in(2, 5); // multiples of group size 4
+        let part = RowPartition::balanced(a.nrows, ranks);
+        let blocks = split_1d(&a, &part);
+        let plan = comm::plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None);
+        let topo = Topology::tsubame4(ranks);
+        let sched = hierarchy::build(&plan, &topo);
+
+        // (1) Dedup can only reduce inter-group rows.
+        let n_dense = 8;
+        assert!(
+            sched.inter_group_bytes(n_dense)
+                <= hierarchy::flat_inter_group_bytes(&plan, &topo, n_dense)
+        );
+        // (2) Every planned inter-group pair transfer is represented:
+        // b_rows of pair (p,q) across groups ⊆ the (q, group(p)) flow union.
+        for p in 0..ranks {
+            for q in 0..ranks {
+                if p == q || topo.group_of(p) == topo.group_of(q) {
+                    continue;
+                }
+                let pair = &plan.pairs[p][q];
+                if !pair.b_rows.is_empty() {
+                    let flow = sched
+                        .b_flows
+                        .iter()
+                        .find(|f| f.src == q && f.dst_group == topo.group_of(p))
+                        .expect("missing B flow");
+                    for r in &pair.b_rows {
+                        assert!(flow.rows.binary_search(r).is_ok());
+                    }
+                }
+                if !pair.c_rows.is_empty() {
+                    let flow = sched
+                        .c_flows
+                        .iter()
+                        .find(|f| f.dst == p && f.src_group == topo.group_of(q))
+                        .expect("missing C flow");
+                    for r in &pair.c_rows {
+                        assert!(flow.rows.binary_search(r).is_ok());
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_executor_exact_for_random_configs() {
+    forall("exec-exact", 12, |g| {
+        let a = random_matrix(g);
+        let ranks = g.usize_in(2, 9);
+        let n_dense = 1 + g.usize_in(0, 16);
+        let part = RowPartition::balanced(a.nrows, ranks);
+        let blocks = split_1d(&a, &part);
+        let strategy = match g.usize_in(0, 3) {
+            0 => Strategy::Column,
+            1 => Strategy::Row,
+            _ => Strategy::Joint(Solver::Koenig),
+        };
+        let plan = comm::plan(&blocks, &part, strategy, None);
+        let topo = Topology::tsubame4(ranks);
+        let hier = g.bool();
+        let sched = hier.then(|| hierarchy::build(&plan, &topo));
+        let b = Dense::from_vec(
+            a.nrows,
+            n_dense,
+            g.vec_f32(a.nrows * n_dense),
+        );
+        let (got, _) = exec::run(
+            &part,
+            &plan,
+            &blocks,
+            sched.as_ref(),
+            &topo,
+            &b,
+            &NativeKernel,
+        );
+        let want = a.spmm(&b);
+        let err = want.diff_norm(&got) / (want.max_abs() as f64 + 1e-30);
+        assert!(err < 1e-3, "rel err {err} (ranks={ranks} hier={hier})");
+    });
+}
+
+#[test]
+fn prop_volume_matrix_consistency() {
+    forall("volume-consistency", 30, |g| {
+        let a = random_matrix(g);
+        let ranks = g.usize_in(2, 12);
+        let part = RowPartition::balanced(a.nrows, ranks);
+        let blocks = split_1d(&a, &part);
+        let plan = comm::plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None);
+        let n1 = 1 + g.usize_in(0, 8);
+        let n2 = n1 * 2;
+        // Volume scales exactly linearly in N (Eqs. 1-3, 9).
+        assert_eq!(plan.total_volume(n2), 2 * plan.total_volume(n1));
+        let m = plan.volume_matrix(n1);
+        assert_eq!(m.total(), plan.total_volume(n1));
+    });
+}
+
+#[test]
+fn prop_partition_owner_roundtrip() {
+    forall("partition-roundtrip", 60, |g| {
+        let n = 1 + g.usize_in(0, 5000);
+        let parts = 1 + g.usize_in(0, 64);
+        let part = RowPartition::balanced(n, parts);
+        assert_eq!(part.starts[parts], n);
+        // Spot-check random rows.
+        for _ in 0..20 {
+            if n == 0 {
+                break;
+            }
+            let r = g.usize_in(0, n);
+            let (p, local) = part.to_local(r);
+            assert!(p < parts);
+            assert_eq!(part.to_global(p, local), r);
+            let (lo, hi) = part.range(p);
+            assert!((lo..hi).contains(&r));
+        }
+    });
+}
