@@ -18,10 +18,12 @@ fn main() {
         "column (ms)",
         "+joint (ms)",
         "+hier (ms)",
+        "+adaptive (ms)",
         "joint speedup",
         "hier speedup",
+        "adaptive speedup",
     ]);
-    let mut csv = String::from("dataset,column_ms,joint_ms,hier_ms\n");
+    let mut csv = String::from("dataset,column_ms,joint_ms,hier_ms,adaptive_ms\n");
     for spec in spmm_datasets() {
         let a = spec.generate(BENCH_SCALE);
         let t_col = DistSpmm::plan(&a, Strategy::Column, Topology::tsubame4(ranks), false)
@@ -43,20 +45,32 @@ fn main() {
         )
         .simulate(n_dense)
         .total;
+        let t_adaptive = DistSpmm::plan_with_params(
+            &a,
+            Strategy::Adaptive,
+            Topology::tsubame4(ranks),
+            true,
+            &shiro::plan::PlanParams { n_dense, ..Default::default() },
+        )
+        .simulate(n_dense)
+        .total;
         table.row(vec![
             spec.name.into(),
             ms(t_col),
             ms(t_joint),
             ms(t_hier),
+            ms(t_adaptive),
             format!("{:.2}x", t_col / t_joint),
             format!("{:.2}x", t_col / t_hier),
+            format!("{:.2}x", t_col / t_adaptive),
         ]);
         csv.push_str(&format!(
-            "{},{:.6},{:.6},{:.6}\n",
+            "{},{:.6},{:.6},{:.6},{:.6}\n",
             spec.name,
             t_col * 1e3,
             t_joint * 1e3,
-            t_hier * 1e3
+            t_hier * 1e3,
+            t_adaptive * 1e3
         ));
     }
     println!("Fig. 10 — step-wise ablation (nGPUs=32, N=64)\n");

@@ -11,7 +11,8 @@ fn main() {
     let mut csv = String::from("dataset,system,n,seconds\n");
     for &n_dense in &[64usize, 128] {
         println!("\n=== N = {n_dense} (nGPUs = {ABLATION_RANKS}) — simulated SpMM ms ===");
-        let mut table = Table::new(&["dataset", "CAGNET", "SPA", "BCL", "CoLa", "SHIRO"]);
+        let mut table =
+            Table::new(&["dataset", "CAGNET", "SPA", "BCL", "CoLa", "SHIRO", "SHIRO-A"]);
         for spec in spmm_datasets() {
             let a = spec.generate(BENCH_SCALE);
             let topo = Topology::tsubame4(ABLATION_RANKS);

@@ -27,6 +27,9 @@ pub enum System {
     Bcl,
     Cola,
     Shiro,
+    /// SHIRO with the adaptive per-pair plan compiler ([`crate::plan`])
+    /// instead of the global joint strategy.
+    ShiroAdaptive,
 }
 
 impl System {
@@ -37,11 +40,19 @@ impl System {
             System::Bcl => "BCL",
             System::Cola => "CoLa",
             System::Shiro => "SHIRO",
+            System::ShiroAdaptive => "SHIRO-A",
         }
     }
 
-    pub fn all() -> [System; 5] {
-        [System::Cagnet, System::Spa, System::Bcl, System::Cola, System::Shiro]
+    pub fn all() -> [System; 6] {
+        [
+            System::Cagnet,
+            System::Spa,
+            System::Bcl,
+            System::Cola,
+            System::Shiro,
+            System::ShiroAdaptive,
+        ]
     }
 }
 
@@ -65,6 +76,14 @@ pub fn build_job(system: System, a: &Csr, n_dense: usize, topo: &Topology) -> Si
             DistSpmm::plan(a, Strategy::Joint(Solver::Koenig), topo.clone(), true)
                 .sim_job(n_dense)
         }
+        System::ShiroAdaptive => DistSpmm::plan_with_params(
+            a,
+            Strategy::Adaptive,
+            topo.clone(),
+            true,
+            &crate::plan::PlanParams { n_dense, ..Default::default() },
+        )
+        .sim_job(n_dense),
     }
 }
 

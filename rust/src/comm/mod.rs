@@ -26,6 +26,10 @@ pub enum Strategy {
     Row,
     /// SHIRO's joint row-column strategy via MWVC (Eq. 9).
     Joint(Solver),
+    /// Per-pair cost-model-driven selection among the four shapes above
+    /// ([`crate::plan`]): each (q→p) pair gets the cheapest candidate under
+    /// the topology's α-β(+compute) model.
+    Adaptive,
 }
 
 impl Strategy {
@@ -38,6 +42,21 @@ impl Strategy {
             Strategy::Joint(Solver::Dinic) => "joint-weighted",
             Strategy::Joint(Solver::Greedy) => "joint-greedy",
             Strategy::Joint(_) => "joint-degenerate",
+            Strategy::Adaptive => "adaptive",
+        }
+    }
+
+    /// Inverse of [`Strategy::name`] for config/CLI parsing.
+    pub fn by_name(name: &str) -> Option<Strategy> {
+        match name {
+            "block" => Some(Strategy::Block),
+            "column" => Some(Strategy::Column),
+            "row" => Some(Strategy::Row),
+            "joint" | "joint-koenig" => Some(Strategy::Joint(Solver::Koenig)),
+            "joint-weighted" | "joint-dinic" => Some(Strategy::Joint(Solver::Dinic)),
+            "joint-greedy" => Some(Strategy::Joint(Solver::Greedy)),
+            "adaptive" => Some(Strategy::Adaptive),
+            _ => None,
         }
     }
 }
@@ -187,6 +206,20 @@ pub fn plan(
     pair_weights: Option<&PairWeightFn>,
 ) -> CommPlan {
     let nranks = part.nparts;
+    if strategy == Strategy::Adaptive {
+        // Without an explicit topology the adaptive compiler assumes a flat
+        // network (uniform link costs) and the default planning width.
+        // Callers that know the real topology or N should use
+        // `plan::compile` (or `DistSpmm::plan_with_params`) instead; custom
+        // pair weights only apply to the weighted Dinic solver.
+        assert!(
+            pair_weights.is_none(),
+            "pair_weights are not consumed by Strategy::Adaptive — use plan::compile"
+        );
+        let topo = crate::topology::Topology::flat(nranks, 25e9);
+        return crate::plan::compile(blocks, part, &topo, &crate::plan::PlanParams::default())
+            .plan;
+    }
     let mut pairs: Vec<Vec<PairPlan>> = Vec::with_capacity(nranks);
     for p in 0..nranks {
         let mut row = Vec::with_capacity(nranks);
@@ -208,7 +241,10 @@ pub fn plan(
     }
 }
 
-fn plan_pair(
+/// Build the plan for one (q→p) off-diagonal block under a fixed strategy.
+/// Public so the adaptive compiler ([`crate::plan`]) evaluates candidates
+/// through the exact same construction path as the fixed-strategy planner.
+pub fn plan_pair(
     block: &Csr,
     strategy: Strategy,
     p: usize,
@@ -254,6 +290,7 @@ fn plan_pair(
             let sol = cover::solve(block, solver, &weights);
             from_solution(block, sol)
         }
+        Strategy::Adaptive => unreachable!("Adaptive is expanded in plan()/plan::compile"),
     }
 }
 

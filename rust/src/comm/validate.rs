@@ -4,27 +4,52 @@
 
 use crate::comm::CommPlan;
 use crate::partition::LocalBlocks;
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum PlanError {
-    #[error("pair ({p},{q}): nnz split {got} != block nnz {want}")]
     NnzMismatch { p: usize, q: usize, got: usize, want: usize },
-    #[error("pair ({p},{q}): column {c} used by a_col_part but missing from b_rows")]
     UncoveredColumn { p: usize, q: usize, c: u32 },
-    #[error("pair ({p},{q}): row {r} used by a_row_part but missing from c_rows")]
     UncoveredRow { p: usize, q: usize, r: u32 },
-    #[error("pair ({p},{q}): b_rows not sorted/unique")]
     UnsortedBRows { p: usize, q: usize },
-    #[error("pair ({p},{q}): c_rows not sorted/unique")]
     UnsortedCRows { p: usize, q: usize },
-    #[error("pair ({p},{q}): b_row {row} out of range {len}")]
     BRowOutOfRange { p: usize, q: usize, row: u32, len: usize },
-    #[error("pair ({p},{q}): c_row {row} out of range {len}")]
     CRowOutOfRange { p: usize, q: usize, row: u32, len: usize },
-    #[error("plan has {got} ranks, blocks have {want}")]
     RankMismatch { got: usize, want: usize },
 }
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanError::NnzMismatch { p, q, got, want } => {
+                write!(f, "pair ({p},{q}): nnz split {got} != block nnz {want}")
+            }
+            PlanError::UncoveredColumn { p, q, c } => {
+                write!(f, "pair ({p},{q}): column {c} used by a_col_part but missing from b_rows")
+            }
+            PlanError::UncoveredRow { p, q, r } => {
+                write!(f, "pair ({p},{q}): row {r} used by a_row_part but missing from c_rows")
+            }
+            PlanError::UnsortedBRows { p, q } => {
+                write!(f, "pair ({p},{q}): b_rows not sorted/unique")
+            }
+            PlanError::UnsortedCRows { p, q } => {
+                write!(f, "pair ({p},{q}): c_rows not sorted/unique")
+            }
+            PlanError::BRowOutOfRange { p, q, row, len } => {
+                write!(f, "pair ({p},{q}): b_row {row} out of range {len}")
+            }
+            PlanError::CRowOutOfRange { p, q, row, len } => {
+                write!(f, "pair ({p},{q}): c_row {row} out of range {len}")
+            }
+            PlanError::RankMismatch { got, want } => {
+                write!(f, "plan has {got} ranks, blocks have {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
 
 fn sorted_unique(v: &[u32]) -> bool {
     v.windows(2).all(|w| w[0] < w[1])

@@ -1,6 +1,7 @@
 //! Experiment configuration: mini-TOML file + CLI overrides, shared by the
 //! `shiro` binary and the bench harness.
 
+use crate::comm::Strategy;
 use crate::partition::{split_1d, LocalBlocks, RowPartition};
 use crate::sparse::{dataset_by_name, Csr};
 use crate::topology::Topology;
@@ -16,6 +17,9 @@ pub struct RunConfig {
     pub scale: f64,
     pub topo: String,
     pub epochs: usize,
+    /// Communication strategy name (see [`Strategy::by_name`]):
+    /// block | column | row | joint | joint-weighted | joint-greedy | adaptive.
+    pub strategy: String,
 }
 
 impl Default for RunConfig {
@@ -27,6 +31,7 @@ impl Default for RunConfig {
             scale: 0.05,
             topo: "tsubame4".into(),
             epochs: 50,
+            strategy: "joint".into(),
         }
     }
 }
@@ -54,6 +59,9 @@ impl RunConfig {
             cfg.topo = t.to_string();
         }
         cfg.epochs = args.get_usize("epochs", cfg.epochs);
+        if let Some(s) = args.get("strategy") {
+            cfg.strategy = s.to_string();
+        }
         cfg
     }
 
@@ -64,6 +72,19 @@ impl RunConfig {
         self.scale = file.float_or("run.scale", self.scale);
         self.topo = file.str_or("run.topo", &self.topo);
         self.epochs = file.int_or("run.epochs", self.epochs as i64) as usize;
+        self.strategy = file.str_or("run.strategy", &self.strategy);
+    }
+
+    /// Resolve the configured strategy name.
+    pub fn strategy(&self) -> Strategy {
+        Strategy::by_name(&self.strategy).unwrap_or_else(|| {
+            eprintln!(
+                "unknown strategy {:?} (block | column | row | joint | joint-weighted | \
+                 joint-greedy | adaptive)",
+                self.strategy
+            );
+            std::process::exit(2);
+        })
     }
 
     /// Generate the configured dataset matrix.
@@ -129,5 +150,17 @@ mod tests {
     fn topology_resolution() {
         let cfg = RunConfig { topo: "aurora".into(), ranks: 24, ..Default::default() };
         assert_eq!(cfg.topology().name, "aurora");
+    }
+
+    #[test]
+    fn strategy_resolution() {
+        use crate::comm::Strategy;
+        use crate::cover::Solver;
+        let cfg = RunConfig::from_args(&args(&["run", "--strategy", "adaptive"]));
+        assert_eq!(cfg.strategy(), Strategy::Adaptive);
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.strategy(), Strategy::Joint(Solver::Koenig));
+        assert_eq!(Strategy::by_name("nope"), None);
+        assert_eq!(Strategy::by_name("row"), Some(Strategy::Row));
     }
 }

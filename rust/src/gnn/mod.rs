@@ -402,6 +402,7 @@ mod tests {
             (Strategy::Column, false),
             (Strategy::Joint(Solver::Koenig), false),
             (Strategy::Joint(Solver::Koenig), true),
+            (Strategy::Adaptive, true),
         ] {
             let mut gcn = Gcn::new(&adj, strategy, Topology::tsubame4(4), hier, cfg.clone());
             let r = gcn.train(&NativeKernel, &NativeDense);

@@ -5,14 +5,17 @@
 //! Rust + JAX + Pallas stack.
 //!
 //! - **L3 (this crate)** — the paper's contribution: sparsity-aware joint
-//!   row-column communication planning ([`cover`], [`comm`]) and
-//!   hierarchical scheduling ([`hierarchy`]) over a simulated two-tier GPU
-//!   cluster ([`topology`], [`sim`]) with a real multi-rank executor
-//!   ([`exec`]) and distributed SpMM engine ([`spmm`]).
+//!   row-column communication planning ([`cover`], [`comm`]), the adaptive
+//!   per-pair plan compiler ([`plan`]), and hierarchical scheduling
+//!   ([`hierarchy`]) over a simulated two-tier GPU cluster ([`topology`],
+//!   [`sim`]) with a real multi-rank executor ([`exec`]) and distributed
+//!   SpMM engine ([`spmm`]).
 //! - **L2/L1 (python/compile)** — JAX GCN model + Pallas SpMM kernels,
-//!   AOT-lowered to HLO text, loaded at runtime via [`runtime`] (PJRT).
+//!   AOT-lowered to HLO text, loaded at runtime via [`runtime`] (PJRT;
+//!   stubbed unless the `pjrt` feature is enabled).
 //!
-//! See DESIGN.md for the system inventory and experiment index.
+//! See `DESIGN.md` at the repository root for the system inventory, the
+//! five-stage workflow, and the experiment → bench mapping.
 
 pub mod baselines;
 pub mod bench;
@@ -25,6 +28,7 @@ pub mod gnn;
 pub mod metrics;
 pub mod partition;
 pub mod hierarchy;
+pub mod plan;
 pub mod runtime;
 pub mod sim;
 pub mod topology;

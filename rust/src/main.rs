@@ -9,6 +9,7 @@
 //!   info                             runtime/artifact status
 //!
 //! Global flags: --n <dense cols> --scale <dataset scale> --topo <name>
+//! --strategy <block|column|row|joint|joint-weighted|joint-greedy|adaptive>
 //! --config <file.toml> (CLI overrides config values).
 
 use shiro::comm::Strategy;
@@ -31,7 +32,8 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: shiro <datasets|plan|run|sim|gnn|trace|info> \
-                 [--dataset D] [--ranks R] [--n N] [--scale S] [--topo T] [--config F]"
+                 [--dataset D] [--ranks R] [--n N] [--scale S] [--topo T] \
+                 [--strategy S] [--config F]"
             );
             std::process::exit(if cmd == "help" { 0 } else { 2 });
         }
@@ -92,7 +94,32 @@ fn cmd_plan(cfg: &RunConfig) {
             format!("{ms:.1}"),
         ]);
     }
-    println!("{}", t.render());
+    // Adaptive uses the actual topology's cost model (the fixed strategies
+    // above are topology-oblivious volume counts).
+    {
+        let topo = cfg.topology();
+        let params = shiro::plan::PlanParams { n_dense: cfg.n_dense, ..Default::default() };
+        let t0 = std::time::Instant::now();
+        let compiled = shiro::plan::compile(&blocks, &part, &topo, &params);
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let v = compiled.plan.total_volume(cfg.n_dense);
+        t.row(vec![
+            format!("adaptive ({})", cfg.topo),
+            v.to_string(),
+            if col > 0 { format!("{:.1}", reduction_pct(col, v)) } else { "-".into() },
+            format!("{ms:.1}"),
+        ]);
+        println!("{}", t.render());
+        let counts = compiled.shape_counts();
+        println!(
+            "adaptive per-pair choices: block={} column={} row={} joint={} (modeled cost {:.3} ms)",
+            counts[0],
+            counts[1],
+            counts[2],
+            counts[3],
+            compiled.modeled_cost * 1e3
+        );
+    }
 }
 
 fn cmd_run(cfg: &RunConfig) {
@@ -102,15 +129,17 @@ fn cmd_run(cfg: &RunConfig) {
     use shiro::util::rng::Rng;
     let a = cfg.matrix();
     let topo = cfg.topology();
-    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), topo, true);
+    let params = shiro::plan::PlanParams { n_dense: cfg.n_dense, ..Default::default() };
+    let d = DistSpmm::plan_with_params(&a, cfg.strategy(), topo, true, &params);
     let mut rng = Rng::new(1);
     let b = Dense::random(a.nrows, cfg.n_dense, &mut rng);
     let (c, stats) = d.execute(&b, &NativeKernel);
     let want = a.spmm(&b);
     let err = want.diff_norm(&c) / (want.max_abs() as f64 + 1e-30);
     println!(
-        "executed {} ranks: rel err {err:.2e}, wall {:.1} ms, intra {} B, inter {} B",
+        "executed {} ranks [{}]: rel err {err:.2e}, wall {:.1} ms, intra {} B, inter {} B",
         cfg.ranks,
+        d.plan.strategy.name(),
         stats.wall_secs * 1e3,
         stats.total_intra_bytes(),
         stats.total_inter_bytes()

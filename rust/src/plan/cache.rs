@@ -1,0 +1,459 @@
+//! Pattern-keyed plan cache with a compact binary on-disk form (same style
+//! as the [`crate::sparse::io`] CSR cache).
+//!
+//! Planning is the expensive offline step (MWVC per pair); workloads that
+//! re-plan the same operator — GNN layers sharing one Â, repeated epochs,
+//! repeated benchmark runs — can key the compiled [`CommPlan`] by a
+//! fingerprint of the partitioned blocks plus the planning inputs and skip
+//! the solve entirely. The fingerprint covers the blocks' structure *and*
+//! values because a plan embeds the numeric sub-blocks (`a_row_part` /
+//! `a_col_part`) that the executor multiplies against.
+
+use crate::comm::{CommPlan, PairPlan, Strategy};
+use crate::cover::Solver;
+use crate::partition::{LocalBlocks, RowPartition};
+use crate::plan::{compile, CompiledPlan, PlanParams};
+use crate::sparse::Csr;
+use crate::topology::Topology;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+const PLAN_MAGIC: &[u8; 8] = b"SHIROPLN";
+const PLAN_VERSION: u32 = 1;
+
+// ---------------------------------------------------------------- keying ----
+
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf29ce484222325)
+    }
+    fn bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+    }
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+}
+
+fn hash_csr(h: &mut Fnv, m: &Csr) {
+    h.u64(m.nrows as u64);
+    h.u64(m.ncols as u64);
+    h.u64(m.nnz() as u64);
+    for &v in &m.indptr {
+        h.u64(v);
+    }
+    for &c in &m.indices {
+        h.bytes(&c.to_le_bytes());
+    }
+    for &v in &m.data {
+        h.bytes(&v.to_bits().to_le_bytes());
+    }
+}
+
+/// Fingerprint of everything the adaptive compiler reads: the partitioned
+/// off-diagonal blocks, the partition boundaries, the topology's cost
+/// parameters, and the planning N.
+pub fn pattern_key(
+    blocks: &[LocalBlocks],
+    part: &RowPartition,
+    topo: &Topology,
+    params: &PlanParams,
+) -> u64 {
+    let mut h = Fnv::new();
+    h.u64(part.nparts as u64);
+    for &s in &part.starts {
+        h.u64(s as u64);
+    }
+    h.u64(topo.group_size as u64);
+    h.u64(topo.intra_bw.to_bits());
+    h.u64(topo.inter_bw.to_bits());
+    h.u64(topo.intra_lat.to_bits());
+    h.u64(topo.inter_lat.to_bits());
+    h.u64(topo.compute_rate.to_bits());
+    h.u64(topo.kernel_launch.to_bits());
+    h.u64(params.n_dense as u64);
+    for b in blocks {
+        h.u64(b.rank as u64);
+        for (q, blk) in b.off_diag.iter().enumerate() {
+            if q != b.rank {
+                hash_csr(&mut h, blk);
+            }
+        }
+    }
+    h.0
+}
+
+// --------------------------------------------------------- serialization ----
+
+fn w_u64<W: Write>(w: &mut W, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn r_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn w_csr<W: Write>(w: &mut W, m: &Csr) -> Result<()> {
+    w_u64(w, m.nrows as u64)?;
+    w_u64(w, m.ncols as u64)?;
+    w_u64(w, m.nnz() as u64)?;
+    for &v in &m.indptr {
+        w_u64(w, v)?;
+    }
+    for &c in &m.indices {
+        w.write_all(&c.to_le_bytes())?;
+    }
+    for &v in &m.data {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// `max_elems` bounds every length field against the file's actual size
+/// (each element occupies ≥ 4 bytes on disk), so a truncated or corrupt
+/// file fails with a clean error instead of attempting a huge allocation.
+fn r_csr<R: Read>(r: &mut R, max_elems: usize) -> Result<Csr> {
+    let nrows = r_u64(r)? as usize;
+    let ncols = r_u64(r)? as usize;
+    let nnz = r_u64(r)? as usize;
+    if nrows > max_elems || nnz > max_elems {
+        bail!("plan cache entry corrupt: csr dims {nrows}x{ncols} nnz {nnz} exceed file size");
+    }
+    let mut indptr = vec![0u64; nrows + 1];
+    for v in indptr.iter_mut() {
+        *v = r_u64(r)?;
+    }
+    let mut indices = vec![0u32; nnz];
+    for v in indices.iter_mut() {
+        let mut b = [0u8; 4];
+        r.read_exact(&mut b)?;
+        *v = u32::from_le_bytes(b);
+    }
+    let mut data = vec![0f32; nnz];
+    for v in data.iter_mut() {
+        let mut b = [0u8; 4];
+        r.read_exact(&mut b)?;
+        *v = f32::from_le_bytes(b);
+    }
+    let m = Csr { nrows, ncols, indptr, indices, data };
+    m.validate()?;
+    Ok(m)
+}
+
+fn encode_strategy(s: Strategy) -> u8 {
+    match s {
+        Strategy::Block => 0,
+        Strategy::Column => 1,
+        Strategy::Row => 2,
+        Strategy::Joint(Solver::Koenig) => 3,
+        Strategy::Joint(Solver::Dinic) => 4,
+        Strategy::Joint(Solver::Greedy) => 5,
+        Strategy::Joint(Solver::ColumnOnly) => 6,
+        Strategy::Joint(Solver::RowOnly) => 7,
+        Strategy::Adaptive => 8,
+    }
+}
+
+fn decode_strategy(tag: u8) -> Result<Strategy> {
+    Ok(match tag {
+        0 => Strategy::Block,
+        1 => Strategy::Column,
+        2 => Strategy::Row,
+        3 => Strategy::Joint(Solver::Koenig),
+        4 => Strategy::Joint(Solver::Dinic),
+        5 => Strategy::Joint(Solver::Greedy),
+        6 => Strategy::Joint(Solver::ColumnOnly),
+        7 => Strategy::Joint(Solver::RowOnly),
+        8 => Strategy::Adaptive,
+        _ => bail!("unknown strategy tag {tag}"),
+    })
+}
+
+/// Serialize a plan (with its pattern key) to a compact binary file. Only
+/// the split parts and flags are stored; the packed compact operands and
+/// index lists are derived on load via [`PairPlan::from_parts`].
+pub fn save_plan(plan: &CommPlan, key: u64, path: &Path) -> Result<()> {
+    // Write to a temp file and rename so a killed process never leaves a
+    // half-written entry at the final path.
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    let f = std::fs::File::create(&tmp)
+        .with_context(|| format!("create {}", tmp.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(PLAN_MAGIC)?;
+    w_u64(&mut w, PLAN_VERSION as u64)?;
+    w_u64(&mut w, key)?;
+    w_u64(&mut w, plan.nranks as u64)?;
+    w.write_all(&[encode_strategy(plan.strategy)])?;
+    for &rows in &plan.block_rows {
+        w_u64(&mut w, rows as u64)?;
+    }
+    for p in 0..plan.nranks {
+        for q in 0..plan.nranks {
+            if p == q {
+                continue;
+            }
+            let pair = &plan.pairs[p][q];
+            w.write_all(&[u8::from(pair.full_block)])?;
+            w_csr(&mut w, &pair.a_row_part)?;
+            w_csr(&mut w, &pair.a_col_part)?;
+        }
+    }
+    w.into_inner().map_err(|e| anyhow::anyhow!("flush {}: {}", tmp.display(), e))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))?;
+    Ok(())
+}
+
+/// Load a plan saved by [`save_plan`], verifying magic, version, and (when
+/// `expect_key` is `Some`) the pattern key.
+pub fn load_plan(path: &Path, expect_key: Option<u64>) -> Result<CommPlan> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    // Every serialized element occupies at least 4 bytes, so no valid
+    // length field can exceed this bound; see r_csr.
+    let max_elems = (f.metadata()?.len() / 4) as usize;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != PLAN_MAGIC {
+        bail!("bad plan magic");
+    }
+    let version = r_u64(&mut r)?;
+    if version != PLAN_VERSION as u64 {
+        bail!("plan cache version {version} != {PLAN_VERSION}");
+    }
+    let key = r_u64(&mut r)?;
+    if let Some(want) = expect_key {
+        if key != want {
+            bail!("plan cache key mismatch: file {key:#x}, expected {want:#x}");
+        }
+    }
+    let nranks = r_u64(&mut r)? as usize;
+    if nranks > max_elems {
+        bail!("plan cache entry corrupt: nranks {nranks} exceeds file size");
+    }
+    let mut tag = [0u8; 1];
+    r.read_exact(&mut tag)?;
+    let strategy = decode_strategy(tag[0])?;
+    let mut block_rows = Vec::with_capacity(nranks);
+    for _ in 0..nranks {
+        block_rows.push(r_u64(&mut r)? as usize);
+    }
+    let mut pairs = Vec::with_capacity(nranks);
+    for p in 0..nranks {
+        let mut row = Vec::with_capacity(nranks);
+        for q in 0..nranks {
+            if p == q {
+                row.push(PairPlan::default());
+                continue;
+            }
+            let mut fb = [0u8; 1];
+            r.read_exact(&mut fb)?;
+            let a_row_part = r_csr(&mut r, max_elems)?;
+            let a_col_part = r_csr(&mut r, max_elems)?;
+            row.push(PairPlan::from_parts(a_row_part, a_col_part, fb[0] != 0));
+        }
+        pairs.push(row);
+    }
+    Ok(CommPlan { nranks, strategy, pairs, block_rows })
+}
+
+// ----------------------------------------------------------------- cache ----
+
+/// In-memory (optionally disk-backed) cache of compiled adaptive plans.
+pub struct PlanCache {
+    dir: Option<PathBuf>,
+    mem: HashMap<u64, CommPlan>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl PlanCache {
+    /// Session-local cache (no persistence).
+    pub fn in_memory() -> PlanCache {
+        PlanCache { dir: None, mem: HashMap::new(), hits: 0, misses: 0 }
+    }
+
+    /// Disk-backed cache: entries persist as `plan_<key>.bin` under `dir`
+    /// (created on first save), surviving process restarts.
+    pub fn with_dir(dir: &Path) -> PlanCache {
+        PlanCache {
+            dir: Some(dir.to_path_buf()),
+            mem: HashMap::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    fn entry_path(&self, key: u64) -> Option<PathBuf> {
+        self.dir.as_ref().map(|d| d.join(format!("plan_{key:016x}.bin")))
+    }
+
+    /// Return the cached plan for this (blocks, partition, topology, params)
+    /// fingerprint, compiling on miss. The bool is `true` on a cache hit.
+    pub fn get_or_compile(
+        &mut self,
+        blocks: &[LocalBlocks],
+        part: &RowPartition,
+        topo: &Topology,
+        params: &PlanParams,
+    ) -> (CommPlan, bool) {
+        let key = pattern_key(blocks, part, topo, params);
+        if let Some(plan) = self.mem.get(&key) {
+            self.hits += 1;
+            return (plan.clone(), true);
+        }
+        if let Some(path) = self.entry_path(key) {
+            if path.exists() {
+                if let Ok(plan) = load_plan(&path, Some(key)) {
+                    self.hits += 1;
+                    self.mem.insert(key, plan.clone());
+                    return (plan, true);
+                }
+            }
+        }
+        self.misses += 1;
+        let CompiledPlan { plan, .. } = compile(blocks, part, topo, params);
+        if let Some(path) = self.entry_path(key) {
+            if let Some(parent) = path.parent() {
+                let _ = std::fs::create_dir_all(parent);
+            }
+            // Best-effort persistence: a failed write only costs re-planning.
+            let _ = save_plan(&plan, key, &path);
+        }
+        self.mem.insert(key, plan.clone());
+        (plan, false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::split_1d;
+    use crate::sparse::gen;
+
+    fn setup(seed: u64) -> (RowPartition, Vec<LocalBlocks>, Topology) {
+        let a = gen::rmat(128, 1200, (0.55, 0.2, 0.19), false, seed);
+        let part = RowPartition::balanced(128, 8);
+        let blocks = split_1d(&a, &part);
+        (part, blocks, Topology::tsubame4(8))
+    }
+
+    fn assert_plans_equal(a: &CommPlan, b: &CommPlan) {
+        assert_eq!(a.nranks, b.nranks);
+        assert_eq!(a.strategy, b.strategy);
+        assert_eq!(a.block_rows, b.block_rows);
+        for p in 0..a.nranks {
+            for q in 0..a.nranks {
+                let (x, y) = (&a.pairs[p][q], &b.pairs[p][q]);
+                assert_eq!(x.full_block, y.full_block, "({p},{q})");
+                assert_eq!(x.b_rows, y.b_rows, "({p},{q})");
+                assert_eq!(x.c_rows, y.c_rows, "({p},{q})");
+                assert_eq!(x.a_row_part, y.a_row_part, "({p},{q})");
+                assert_eq!(x.a_col_part, y.a_col_part, "({p},{q})");
+                assert_eq!(x.a_row_compact, y.a_row_compact, "({p},{q})");
+                assert_eq!(x.a_col_compact, y.a_col_compact, "({p},{q})");
+            }
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let (part, blocks, topo) = setup(1);
+        let compiled = compile(&blocks, &part, &topo, &PlanParams::default());
+        let key = pattern_key(&blocks, &part, &topo, &PlanParams::default());
+        let dir = std::env::temp_dir().join("shiro_plan_cache_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.bin");
+        save_plan(&compiled.plan, key, &path).unwrap();
+        let back = load_plan(&path, Some(key)).unwrap();
+        assert_plans_equal(&compiled.plan, &back);
+        // Wrong key is rejected.
+        assert!(load_plan(&path, Some(key ^ 1)).is_err());
+    }
+
+    #[test]
+    fn cache_hits_and_misses() {
+        let (part, blocks, topo) = setup(2);
+        let mut cache = PlanCache::in_memory();
+        let params = PlanParams::default();
+        let (first, hit1) = cache.get_or_compile(&blocks, &part, &topo, &params);
+        assert!(!hit1);
+        let (second, hit2) = cache.get_or_compile(&blocks, &part, &topo, &params);
+        assert!(hit2);
+        assert_plans_equal(&first, &second);
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+        // A different pattern misses.
+        let (part3, blocks3, _) = setup(3);
+        let (_, hit3) = cache.get_or_compile(&blocks3, &part3, &topo, &params);
+        assert!(!hit3);
+        assert_eq!(cache.misses, 2);
+    }
+
+    #[test]
+    fn disk_cache_survives_new_instance() {
+        let (part, blocks, topo) = setup(4);
+        let dir = std::env::temp_dir().join("shiro_plan_cache_disk_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let params = PlanParams::default();
+        let mut c1 = PlanCache::with_dir(&dir);
+        let (plan1, hit) = c1.get_or_compile(&blocks, &part, &topo, &params);
+        assert!(!hit);
+        // Fresh instance (no shared memory): must hit from disk.
+        let mut c2 = PlanCache::with_dir(&dir);
+        let (plan2, hit) = c2.get_or_compile(&blocks, &part, &topo, &params);
+        assert!(hit, "expected disk hit");
+        assert_plans_equal(&plan1, &plan2);
+    }
+
+    #[test]
+    fn corrupt_disk_entry_recompiles_and_heals() {
+        let (part, blocks, topo) = setup(6);
+        let dir = std::env::temp_dir().join("shiro_plan_cache_corrupt_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let params = PlanParams::default();
+        let key = pattern_key(&blocks, &part, &topo, &params);
+        let path = dir.join(format!("plan_{key:016x}.bin"));
+        // Valid magic/version/key, then an absurd nranks: must error out
+        // cleanly (no huge allocation attempt).
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(PLAN_MAGIC);
+        bytes.extend_from_slice(&(PLAN_VERSION as u64).to_le_bytes());
+        bytes.extend_from_slice(&key.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_plan(&path, Some(key)).is_err());
+        let mut cache = PlanCache::with_dir(&dir);
+        let (_, hit) = cache.get_or_compile(&blocks, &part, &topo, &params);
+        assert!(!hit, "corrupt entry must not count as a hit");
+        // The recompiled plan atomically replaced the corrupt file.
+        assert!(load_plan(&path, Some(key)).is_ok());
+    }
+
+    #[test]
+    fn key_sensitive_to_inputs() {
+        let (part, blocks, topo) = setup(5);
+        let params = PlanParams::default();
+        let k1 = pattern_key(&blocks, &part, &topo, &params);
+        assert_eq!(k1, pattern_key(&blocks, &part, &topo, &params));
+        let k2 = pattern_key(
+            &blocks,
+            &part,
+            &topo,
+            &PlanParams { n_dense: 64, ..Default::default() },
+        );
+        assert_ne!(k1, k2);
+        let k3 = pattern_key(&blocks, &part, &Topology::aurora(8), &params);
+        assert_ne!(k1, k3);
+    }
+}

@@ -1,0 +1,425 @@
+//! Adaptive per-pair plan compiler (the `Strategy::Adaptive` backend).
+//!
+//! SHIRO's near-optimality argument is per process pair: the cheapest
+//! communication *shape* for the flow q→p depends on the off-diagonal
+//! block's sparsity pattern **and** on the link the pair crosses. The seed
+//! planner applied one fixed [`Strategy`] globally; this module instead
+//! evaluates all four candidate shapes — Block, Column, Row, Joint — for
+//! every pair under the α-β(+compute) cost model already used by
+//! [`crate::sim`] and [`crate::topology`], and emits a mixed-strategy
+//! [`CommPlan`] that `exec`, `hierarchy`, and `spmm` consume unchanged.
+//!
+//! Cost model per pair (DESIGN.md §5): one aggregate message of
+//! `volume_bytes` on the pair's tier costs `lat + bytes/bw`; candidates
+//! with a row-based portion additionally pay the source-side partial-SpMM
+//! compute `2·nnz_row·N / compute_rate` plus one kernel launch. Ties are
+//! broken toward the hierarchy-friendlier shape when the pair crosses the
+//! slow inter-group tier (row-based partials pre-aggregate inside the
+//! source group, Joint first), and toward the sparsity-aware shapes intra
+//! group.
+//!
+//! Planning is offline preprocessing (workflow steps 1–2), so candidate
+//! evaluation is parallelized across pairs with scoped threads; the result
+//! is deterministic regardless of thread count. A pattern-keyed
+//! [`cache::PlanCache`] with a compact on-disk form lets repeated GNN
+//! layers/epochs (and repeated runs) skip re-planning entirely.
+
+pub mod cache;
+
+use crate::comm::{self, CommPlan, PairPlan, Strategy};
+use crate::cover::Solver;
+use crate::partition::{LocalBlocks, RowPartition};
+use crate::sparse::Csr;
+use crate::topology::{Tier, Topology};
+
+/// The four candidate communication shapes evaluated per (q→p) pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Shape {
+    Block,
+    Column,
+    Row,
+    Joint,
+}
+
+impl Shape {
+    pub const ALL: [Shape; 4] = [Shape::Block, Shape::Column, Shape::Row, Shape::Joint];
+
+    /// The fixed strategy this candidate is planned with.
+    pub fn strategy(self) -> Strategy {
+        match self {
+            Shape::Block => Strategy::Block,
+            Shape::Column => Strategy::Column,
+            Shape::Row => Strategy::Row,
+            Shape::Joint => Strategy::Joint(Solver::Koenig),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Shape::Block => "block",
+            Shape::Column => "column",
+            Shape::Row => "row",
+            Shape::Joint => "joint",
+        }
+    }
+}
+
+/// Planner knobs.
+#[derive(Clone, Debug)]
+pub struct PlanParams {
+    /// Dense column count N the α-β cost is evaluated at. Volume scales
+    /// linearly in N, so N only shifts the balance between the latency and
+    /// compute terms; 32 matches the paper's default SpMM width.
+    pub n_dense: usize,
+    /// Planner thread cap; 0 = one thread per available core.
+    pub threads: usize,
+}
+
+impl Default for PlanParams {
+    fn default() -> Self {
+        PlanParams { n_dense: 32, threads: 0 }
+    }
+}
+
+/// A compiled mixed-strategy plan plus the per-pair decisions that produced
+/// it (for reporting and the ablation benches).
+pub struct CompiledPlan {
+    /// The mixed plan, tagged `Strategy::Adaptive`. Structurally a normal
+    /// [`CommPlan`]: downstream consumers need no changes.
+    pub plan: CommPlan,
+    /// `choices[p][q]` = shape selected for flow q→p (`None` on the
+    /// diagonal and for empty blocks).
+    pub choices: Vec<Vec<Option<Shape>>>,
+    /// Σ per-pair modeled cost of the selected candidates (seconds).
+    pub modeled_cost: f64,
+}
+
+impl CompiledPlan {
+    /// Count of non-empty pairs that selected each shape, in
+    /// [`Shape::ALL`] order.
+    pub fn shape_counts(&self) -> [usize; 4] {
+        let mut counts = [0usize; 4];
+        for row in &self.choices {
+            for choice in row.iter().flatten() {
+                let k = Shape::ALL.iter().position(|s| s == choice).unwrap();
+                counts[k] += 1;
+            }
+        }
+        counts
+    }
+}
+
+/// Modeled α-β(+compute) cost of one pair plan on the given tier
+/// (seconds). `k_src` is the source rank's B-block height (for Eq. 1
+/// volumes of sparsity-oblivious pairs).
+pub fn pair_cost(
+    pair: &PairPlan,
+    k_src: usize,
+    tier: Tier,
+    topo: &Topology,
+    n_dense: usize,
+) -> f64 {
+    let bytes = pair.volume_bytes(k_src, n_dense);
+    let mut cost = 0.0;
+    if bytes > 0 {
+        cost += topo.lat(tier) + bytes as f64 / topo.bw(tier);
+    }
+    let row_nnz = pair.a_row_part.nnz();
+    if row_nnz > 0 {
+        // Row-based portions are computed at the source before sending:
+        // marginal flops plus one (batched) kernel launch.
+        cost += 2.0 * row_nnz as f64 * n_dense as f64 / topo.compute_rate + topo.kernel_launch;
+    }
+    cost
+}
+
+/// Σ [`pair_cost`] over all off-diagonal pairs of a plan — the objective
+/// the adaptive compiler minimizes (per-pair independently, so the
+/// adaptive total is ≤ any fixed strategy's total by construction).
+pub fn modeled_cost(plan: &CommPlan, topo: &Topology, n_dense: usize) -> f64 {
+    let mut total = 0.0;
+    for p in 0..plan.nranks {
+        for q in 0..plan.nranks {
+            if p != q {
+                total += pair_cost(
+                    &plan.pairs[p][q],
+                    plan.block_rows[q],
+                    topo.tier(p, q),
+                    topo,
+                    n_dense,
+                );
+            }
+        }
+    }
+    total
+}
+
+/// Candidate evaluation order; earlier entries win cost ties. Crossing the
+/// slow tier, row-based shapes rank above column-based ones because the
+/// hierarchical schedule pre-aggregates partial C rows inside the source
+/// group (one inter-group transfer per group instead of one per producer);
+/// intra group the classic sparsity-aware order applies. Block is last on
+/// both tiers — it is never strictly cheaper than Column.
+fn preference(tier: Tier) -> [Shape; 4] {
+    match tier {
+        Tier::Inter => [Shape::Joint, Shape::Row, Shape::Column, Shape::Block],
+        Tier::Intra => [Shape::Joint, Shape::Column, Shape::Row, Shape::Block],
+    }
+}
+
+/// Evaluate all candidates for one off-diagonal block and keep the
+/// cheapest (ties resolved by [`preference`] order).
+fn plan_one(
+    block: &Csr,
+    p: usize,
+    q: usize,
+    k_src: usize,
+    topo: &Topology,
+    params: &PlanParams,
+) -> (PairPlan, Option<Shape>, f64) {
+    if block.nnz() == 0 {
+        return (PairPlan::default(), None, 0.0);
+    }
+    let tier = topo.tier(p, q);
+    let mut best: Option<(PairPlan, Shape, f64)> = None;
+    for shape in preference(tier) {
+        let cand = comm::plan_pair(block, shape.strategy(), p, q, None);
+        let cost = pair_cost(&cand, k_src, tier, topo, params.n_dense);
+        let better = match &best {
+            None => true,
+            Some((_, _, best_cost)) => cost < *best_cost,
+        };
+        if better {
+            best = Some((cand, shape, cost));
+        }
+    }
+    let (pair, shape, cost) = best.expect("at least one candidate");
+    (pair, Some(shape), cost)
+}
+
+/// Compile an adaptive mixed-strategy plan: per-pair minimum over the four
+/// candidate shapes under `topo`'s cost model, parallelized across pairs
+/// with scoped threads.
+pub fn compile(
+    blocks: &[LocalBlocks],
+    part: &RowPartition,
+    topo: &Topology,
+    params: &PlanParams,
+) -> CompiledPlan {
+    let n = part.nparts;
+    assert_eq!(blocks.len(), n, "blocks/partition rank mismatch");
+    let mut slots: Vec<Option<(PairPlan, Option<Shape>, f64)>> =
+        (0..n * n).map(|_| None).collect();
+    let nthreads = if params.threads == 0 {
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+    } else {
+        params.threads
+    };
+    let chunk = (n * n).div_ceil(nthreads.max(1)).max(1);
+    std::thread::scope(|scope| {
+        for (ci, chunk_slots) in slots.chunks_mut(chunk).enumerate() {
+            let base = ci * chunk;
+            scope.spawn(move || {
+                for (off, slot) in chunk_slots.iter_mut().enumerate() {
+                    let idx = base + off;
+                    let (p, q) = (idx / n, idx % n);
+                    if p == q {
+                        continue;
+                    }
+                    *slot = Some(plan_one(
+                        &blocks[p].off_diag[q],
+                        p,
+                        q,
+                        part.len(q),
+                        topo,
+                        params,
+                    ));
+                }
+            });
+        }
+    });
+
+    let mut pairs: Vec<Vec<PairPlan>> = Vec::with_capacity(n);
+    let mut choices: Vec<Vec<Option<Shape>>> = Vec::with_capacity(n);
+    let mut modeled = 0.0;
+    let mut slot_iter = slots.into_iter();
+    for _p in 0..n {
+        let mut pair_row = Vec::with_capacity(n);
+        let mut choice_row = Vec::with_capacity(n);
+        for _q in 0..n {
+            match slot_iter.next().expect("slot count") {
+                None => {
+                    pair_row.push(PairPlan::default());
+                    choice_row.push(None);
+                }
+                Some((pair, shape, cost)) => {
+                    modeled += cost;
+                    pair_row.push(pair);
+                    choice_row.push(shape);
+                }
+            }
+        }
+        pairs.push(pair_row);
+        choices.push(choice_row);
+    }
+    CompiledPlan {
+        plan: CommPlan {
+            nranks: n,
+            strategy: Strategy::Adaptive,
+            pairs,
+            block_rows: (0..n).map(|p| part.len(p)).collect(),
+        },
+        choices,
+        modeled_cost: modeled,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::split_1d;
+    use crate::sparse::gen;
+
+    fn setup(n: usize, ranks: usize, seed: u64) -> (RowPartition, Vec<LocalBlocks>) {
+        let a = gen::rmat(n, n * 8, (0.55, 0.2, 0.19), false, seed);
+        let part = RowPartition::balanced(n, ranks);
+        let blocks = split_1d(&a, &part);
+        (part, blocks)
+    }
+
+    #[test]
+    fn per_pair_never_worse_than_any_fixed_shape() {
+        let (part, blocks) = setup(128, 8, 1);
+        let topo = Topology::tsubame4(8);
+        let params = PlanParams::default();
+        let compiled = compile(&blocks, &part, &topo, &params);
+        for p in 0..8 {
+            for q in 0..8 {
+                if p == q {
+                    continue;
+                }
+                let tier = topo.tier(p, q);
+                let k_src = part.len(q);
+                let chosen = pair_cost(
+                    &compiled.plan.pairs[p][q],
+                    k_src,
+                    tier,
+                    &topo,
+                    params.n_dense,
+                );
+                for shape in Shape::ALL {
+                    let block = &blocks[p].off_diag[q];
+                    if block.nnz() == 0 {
+                        continue;
+                    }
+                    let cand = comm::plan_pair(block, shape.strategy(), p, q, None);
+                    let c = pair_cost(&cand, k_src, tier, &topo, params.n_dense);
+                    assert!(
+                        chosen <= c,
+                        "({p},{q}): adaptive {chosen} > {} {c}",
+                        shape.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn total_cost_not_above_any_fixed_strategy() {
+        for (ranks, seed) in [(4usize, 2u64), (8, 3), (12, 4)] {
+            let (part, blocks) = setup(256, ranks, seed);
+            for topo in [
+                Topology::tsubame4(ranks),
+                Topology::aurora(ranks),
+                Topology::flat(ranks, 25e9),
+            ] {
+                let params = PlanParams::default();
+                let compiled = compile(&blocks, &part, &topo, &params);
+                assert!(
+                    (compiled.modeled_cost
+                        - modeled_cost(&compiled.plan, &topo, params.n_dense))
+                    .abs()
+                        < 1e-9
+                );
+                for shape in Shape::ALL {
+                    let fixed = comm::plan(&blocks, &part, shape.strategy(), None);
+                    let fc = modeled_cost(&fixed, &topo, params.n_dense);
+                    assert!(
+                        compiled.modeled_cost <= fc + 1e-12,
+                        "{} on {}: adaptive {} > {} {}",
+                        ranks,
+                        topo.name,
+                        compiled.modeled_cost,
+                        shape.name(),
+                        fc
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let (part, blocks) = setup(128, 8, 5);
+        let topo = Topology::tsubame4(8);
+        let serial = compile(
+            &blocks,
+            &part,
+            &topo,
+            &PlanParams { threads: 1, ..Default::default() },
+        );
+        let parallel = compile(
+            &blocks,
+            &part,
+            &topo,
+            &PlanParams { threads: 0, ..Default::default() },
+        );
+        assert_eq!(serial.choices, parallel.choices);
+        assert_eq!(serial.modeled_cost, parallel.modeled_cost);
+        for p in 0..8 {
+            for q in 0..8 {
+                let a = &serial.plan.pairs[p][q];
+                let b = &parallel.plan.pairs[p][q];
+                assert_eq!(a.b_rows, b.b_rows);
+                assert_eq!(a.c_rows, b.c_rows);
+                assert_eq!(a.a_row_part, b.a_row_part);
+                assert_eq!(a.a_col_part, b.a_col_part);
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_plan_covers_all_nonzeros() {
+        let (part, blocks) = setup(128, 8, 6);
+        let topo = Topology::tsubame4(8);
+        let compiled = compile(&blocks, &part, &topo, &PlanParams::default());
+        assert_eq!(
+            crate::comm::validate::validate(&compiled.plan, &blocks),
+            Ok(())
+        );
+        assert_eq!(compiled.plan.strategy, Strategy::Adaptive);
+    }
+
+    #[test]
+    fn block_shape_never_selected() {
+        // Block is dominated by Column in bytes and compute, and Column
+        // precedes it in both preference orders.
+        let (part, blocks) = setup(256, 8, 7);
+        for topo in [Topology::tsubame4(8), Topology::aurora(8)] {
+            let compiled = compile(&blocks, &part, &topo, &PlanParams::default());
+            assert_eq!(compiled.shape_counts()[0], 0, "block chosen on {}", topo.name);
+        }
+    }
+
+    #[test]
+    fn empty_matrix_compiles_to_empty_plan() {
+        let a = Csr::eye(32);
+        let part = RowPartition::balanced(32, 4);
+        let blocks = split_1d(&a, &part);
+        let topo = Topology::tsubame4(4);
+        let compiled = compile(&blocks, &part, &topo, &PlanParams::default());
+        assert_eq!(compiled.plan.total_volume(16), 0);
+        assert_eq!(compiled.modeled_cost, 0.0);
+        assert_eq!(compiled.shape_counts(), [0, 0, 0, 0]);
+    }
+}

@@ -28,11 +28,56 @@ pub struct DistSpmm {
 impl DistSpmm {
     /// Plan a distributed SpMM of `a` over `topo.nranks` ranks.
     /// `hierarchical` enables the §6 two-stage schedule.
+    /// [`Strategy::Adaptive`] routes through the per-pair plan compiler
+    /// ([`crate::plan`]) with this topology's cost model at the default
+    /// planning width (N = 32); callers that execute/simulate at a
+    /// different N should use [`DistSpmm::plan_with_params`] so the
+    /// adaptive cost trade-off matches the actual run.
     pub fn plan(a: &Csr, strategy: Strategy, topo: Topology, hierarchical: bool) -> DistSpmm {
+        Self::plan_with_params(
+            a,
+            strategy,
+            topo,
+            hierarchical,
+            &crate::plan::PlanParams::default(),
+        )
+    }
+
+    /// [`DistSpmm::plan`] with explicit planner knobs (adaptive planning
+    /// N, thread cap). `params` only affects [`Strategy::Adaptive`].
+    pub fn plan_with_params(
+        a: &Csr,
+        strategy: Strategy,
+        topo: Topology,
+        hierarchical: bool,
+        params: &crate::plan::PlanParams,
+    ) -> DistSpmm {
         let part = RowPartition::balanced(a.nrows, topo.nranks);
         let blocks = split_1d(a, &part);
         let t0 = std::time::Instant::now();
-        let plan = comm::plan(&blocks, &part, strategy, None);
+        let plan = match strategy {
+            Strategy::Adaptive => crate::plan::compile(&blocks, &part, &topo, params).plan,
+            _ => comm::plan(&blocks, &part, strategy, None),
+        };
+        let sched = hierarchical.then(|| hierarchy::build(&plan, &topo));
+        let prep_secs = t0.elapsed().as_secs_f64();
+        DistSpmm { part, blocks, plan, sched, topo, prep_secs }
+    }
+
+    /// Like [`DistSpmm::plan_with_params`] with [`Strategy::Adaptive`], but
+    /// consulting a [`crate::plan::cache::PlanCache`] first so repeated
+    /// layers/epochs with the same sparsity pattern skip re-planning.
+    pub fn plan_adaptive_cached(
+        a: &Csr,
+        topo: Topology,
+        hierarchical: bool,
+        params: &crate::plan::PlanParams,
+        cache: &mut crate::plan::cache::PlanCache,
+    ) -> DistSpmm {
+        let part = RowPartition::balanced(a.nrows, topo.nranks);
+        let blocks = split_1d(a, &part);
+        let t0 = std::time::Instant::now();
+        let (plan, _hit) = cache.get_or_compile(&blocks, &part, &topo, params);
         let sched = hierarchical.then(|| hierarchy::build(&plan, &topo));
         let prep_secs = t0.elapsed().as_secs_f64();
         DistSpmm { part, blocks, plan, sched, topo, prep_secs }
@@ -157,6 +202,37 @@ mod tests {
         let jr = joint.simulate(32);
         let cr = col.simulate(32);
         assert!(jr.inter_bytes <= cr.inter_bytes);
+    }
+
+    #[test]
+    fn adaptive_plan_executes_and_simulates() {
+        let a = gen::rmat(128, 1500, (0.55, 0.2, 0.19), false, 9);
+        let topo = Topology::tsubame4(8);
+        let d = DistSpmm::plan(&a, Strategy::Adaptive, topo, true);
+        assert_eq!(d.plan.strategy, Strategy::Adaptive);
+        let mut rng = Rng::new(3);
+        let b = Dense::random(128, 16, &mut rng);
+        let (c, _) = d.execute(&b, &NativeKernel);
+        assert!(serial_reference(&a, &b).diff_norm(&c) < 1e-3);
+        assert!(d.simulate(16).total > 0.0);
+    }
+
+    #[test]
+    fn adaptive_cached_matches_uncached() {
+        let a = gen::rmat(128, 1500, (0.55, 0.2, 0.19), false, 10);
+        let mut cache = crate::plan::cache::PlanCache::in_memory();
+        let params = crate::plan::PlanParams::default();
+        let d1 =
+            DistSpmm::plan_adaptive_cached(&a, Topology::tsubame4(8), true, &params, &mut cache);
+        let d2 =
+            DistSpmm::plan_adaptive_cached(&a, Topology::tsubame4(8), true, &params, &mut cache);
+        assert_eq!(cache.hits, 1);
+        assert_eq!(cache.misses, 1);
+        assert_eq!(d1.plan.total_volume(32), d2.plan.total_volume(32));
+        let mut rng = Rng::new(4);
+        let b = Dense::random(128, 8, &mut rng);
+        let (c, _) = d2.execute(&b, &NativeKernel);
+        assert!(serial_reference(&a, &b).diff_norm(&c) < 1e-3);
     }
 
     #[test]

@@ -1,0 +1,221 @@
+//! Tentpole test coverage: the adaptive per-pair plan compiler.
+//!
+//! - Strategy-equivalence: every `Strategy` × routing mode — including
+//!   `Adaptive` — produces **bit-identical** C against the serial
+//!   reference. Matrices and dense inputs are integer-valued and bounded
+//!   well inside f32's exact range (|C| < 2^24), so every summation order
+//!   yields the same bits and exact equality is a sound assertion.
+//! - Cost guarantees: the adaptive picker's per-pair choice never costs
+//!   more than any fixed shape, and the plan's modeled α-β total is ≤ the
+//!   minimum across the four fixed strategies on every registry dataset.
+//! - Cache: a cached adaptive plan is the plan that would have been
+//!   compiled, and executes exactly.
+
+use shiro::comm::Strategy;
+use shiro::cover::Solver;
+use shiro::dense::Dense;
+use shiro::exec::kernel::NativeKernel;
+use shiro::partition::{split_1d, RowPartition};
+use shiro::plan::{self, PlanParams, Shape};
+use shiro::sparse::{Coo, Csr, DATASETS};
+use shiro::spmm::DistSpmm;
+use shiro::topology::Topology;
+use shiro::util::proptest::{forall, Gen};
+
+/// Random sparse matrix with small integer values (exact in f32).
+fn int_matrix(g: &mut Gen, n: usize, nnz: usize) -> Csr {
+    let mut coo = Coo::new(n, n);
+    for _ in 0..nnz {
+        let r = g.rng().below(n);
+        let c = g.rng().below(n);
+        let v = (1 + g.rng().below(4)) as f32;
+        coo.push(r, c, v);
+    }
+    coo.to_csr()
+}
+
+/// Integer-valued dense input in [-4, 4].
+fn int_dense(n: usize, nd: usize) -> Dense {
+    Dense::from_fn(n, nd, |i, j| ((i * 7 + j * 13) % 9) as f32 - 4.0)
+}
+
+fn all_strategies() -> [Strategy; 7] {
+    [
+        Strategy::Block,
+        Strategy::Column,
+        Strategy::Row,
+        Strategy::Joint(Solver::Koenig),
+        Strategy::Joint(Solver::Dinic),
+        Strategy::Joint(Solver::Greedy),
+        Strategy::Adaptive,
+    ]
+}
+
+#[test]
+fn prop_all_strategies_bit_identical_to_serial() {
+    forall("strategy-equivalence", 6, |g| {
+        let n = 64 + 32 * g.usize_in(0, 5);
+        let a = int_matrix(g, n, n * (2 + g.usize_in(0, 5)));
+        let ranks = g.usize_in(2, 9);
+        let nd = 1 + g.usize_in(0, 12);
+        let b = int_dense(n, nd);
+        let want = a.spmm(&b);
+        for strategy in all_strategies() {
+            for hier in [false, true] {
+                if hier && strategy == Strategy::Block {
+                    continue; // block mode is defined flat-only in the paper
+                }
+                let d = DistSpmm::plan(&a, strategy, Topology::tsubame4(ranks), hier);
+                let (got, _) = d.execute(&b, &NativeKernel);
+                assert_eq!(
+                    got.data, want.data,
+                    "{strategy:?} hier={hier} ranks={ranks} not bit-identical"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_adaptive_pair_choice_never_costlier_than_fixed() {
+    forall("adaptive-pair-optimal", 10, |g| {
+        let n = 64 + 32 * g.usize_in(0, 5);
+        let a = int_matrix(g, n, n * (2 + g.usize_in(0, 6)));
+        let ranks = g.usize_in(2, 10);
+        let part = RowPartition::balanced(n, ranks);
+        let blocks = split_1d(&a, &part);
+        let topo = if g.bool() {
+            Topology::tsubame4(ranks)
+        } else {
+            Topology::aurora(ranks)
+        };
+        let params = PlanParams::default();
+        let compiled = plan::compile(&blocks, &part, &topo, &params);
+        for p in 0..ranks {
+            for q in 0..ranks {
+                if p == q || blocks[p].off_diag[q].nnz() == 0 {
+                    continue;
+                }
+                let tier = topo.tier(p, q);
+                let chosen = plan::pair_cost(
+                    &compiled.plan.pairs[p][q],
+                    part.len(q),
+                    tier,
+                    &topo,
+                    params.n_dense,
+                );
+                for shape in Shape::ALL {
+                    let cand = shiro::comm::plan_pair(
+                        &blocks[p].off_diag[q],
+                        shape.strategy(),
+                        p,
+                        q,
+                        None,
+                    );
+                    let cost =
+                        plan::pair_cost(&cand, part.len(q), tier, &topo, params.n_dense);
+                    assert!(
+                        chosen <= cost,
+                        "({p},{q}) on {}: adaptive {chosen} > {} {cost}",
+                        topo.name,
+                        shape.name()
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// Acceptance criterion: on every generated registry matrix, the adaptive
+/// plan's modeled α-β total is ≤ the minimum across the four fixed
+/// strategies.
+#[test]
+fn adaptive_total_cost_le_best_fixed_on_all_datasets() {
+    let ranks = 8;
+    let topo = Topology::tsubame4(ranks);
+    let params = PlanParams::default();
+    for spec in DATASETS {
+        let a = spec.generate(0.005);
+        let part = RowPartition::balanced(a.nrows, ranks);
+        let blocks = split_1d(&a, &part);
+        let compiled = plan::compile(&blocks, &part, &topo, &params);
+        let mut best_fixed = f64::INFINITY;
+        for shape in Shape::ALL {
+            let fixed = shiro::comm::plan(&blocks, &part, shape.strategy(), None);
+            best_fixed = best_fixed.min(plan::modeled_cost(&fixed, &topo, params.n_dense));
+        }
+        assert!(
+            compiled.modeled_cost <= best_fixed + 1e-12,
+            "{}: adaptive {} > best fixed {}",
+            spec.name,
+            compiled.modeled_cost,
+            best_fixed
+        );
+        // And the adaptive plan is never worse than joint (the per-pair
+        // dominant shape) on plain volume either.
+        let joint = shiro::comm::plan(
+            &blocks,
+            &part,
+            Strategy::Joint(Solver::Koenig),
+            None,
+        );
+        let adaptive_cost = plan::modeled_cost(&compiled.plan, &topo, params.n_dense);
+        let joint_cost = plan::modeled_cost(&joint, &topo, params.n_dense);
+        assert!(adaptive_cost <= joint_cost + 1e-12, "{}", spec.name);
+    }
+}
+
+#[test]
+fn adaptive_selectable_from_config() {
+    use shiro::config::RunConfig;
+    let cfg = RunConfig { strategy: "adaptive".into(), ..Default::default() };
+    assert_eq!(cfg.strategy(), Strategy::Adaptive);
+    // A config-selected adaptive strategy drives the engine end to end.
+    let mut g = Gen::new(42);
+    let a = int_matrix(&mut g, 96, 700);
+    let d = DistSpmm::plan(&a, cfg.strategy(), Topology::tsubame4(4), true);
+    let b = int_dense(96, 8);
+    let (got, _) = d.execute(&b, &NativeKernel);
+    assert_eq!(got.data, a.spmm(&b).data);
+}
+
+#[test]
+fn cached_plan_executes_bit_identically() {
+    let mut g = Gen::new(7);
+    let a = int_matrix(&mut g, 128, 1000);
+    let topo = Topology::tsubame4(8);
+    let mut cache = shiro::plan::cache::PlanCache::in_memory();
+    let params = PlanParams::default();
+    let d_cold = DistSpmm::plan_adaptive_cached(&a, topo.clone(), true, &params, &mut cache);
+    let d_warm = DistSpmm::plan_adaptive_cached(&a, topo.clone(), true, &params, &mut cache);
+    assert_eq!((cache.hits, cache.misses), (1, 1));
+    let b = int_dense(128, 16);
+    let want = a.spmm(&b);
+    let (c1, _) = d_cold.execute(&b, &NativeKernel);
+    let (c2, _) = d_warm.execute(&b, &NativeKernel);
+    assert_eq!(c1.data, want.data);
+    assert_eq!(c2.data, want.data);
+}
+
+#[test]
+fn adaptive_beats_or_ties_fixed_strategies_in_simulated_time_shape() {
+    // Not a makespan guarantee (list scheduling is not monotone), but the
+    // compiler's own objective must dominate: check it on a skewed web
+    // pattern across both evaluation topologies.
+    let a = shiro::sparse::gen::powerlaw(512, 8000, 1.4, 3);
+    for ranks in [8usize, 16] {
+        for topo in [Topology::tsubame4(ranks), Topology::aurora(ranks)] {
+            let part = RowPartition::balanced(a.nrows, ranks);
+            let blocks = split_1d(&a, &part);
+            let params = PlanParams::default();
+            let compiled = plan::compile(&blocks, &part, &topo, &params);
+            for shape in Shape::ALL {
+                let fixed = shiro::comm::plan(&blocks, &part, shape.strategy(), None);
+                assert!(
+                    compiled.modeled_cost
+                        <= plan::modeled_cost(&fixed, &topo, params.n_dense) + 1e-12
+                );
+            }
+        }
+    }
+}

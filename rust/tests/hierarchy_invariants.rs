@@ -1,0 +1,183 @@
+//! Hierarchy invariants (paper §6, Alg. 1):
+//!
+//! - every deduplicated B-flow row set crosses the inter-group link
+//!   **exactly once** (one stage-I message per (src, dst-group) flow, rows
+//!   equal to the deduplicated union);
+//! - C-flow pre-aggregation sums equal the flat plan's partials (checked
+//!   with integer-exact arithmetic so equality is bitwise);
+//! - representative assignment is deterministic.
+
+use shiro::comm::{self, Strategy};
+use shiro::cover::Solver;
+use shiro::dense::Dense;
+use shiro::hierarchy;
+use shiro::partition::{split_1d, RowPartition};
+use shiro::sparse::{Coo, Csr};
+use shiro::topology::Topology;
+use shiro::util::rng::Rng;
+
+/// Integer-valued random matrix (exact in f32).
+fn int_matrix(n: usize, nnz: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(n, n);
+    for _ in 0..nnz {
+        let r = rng.below(n);
+        let c = rng.below(n);
+        coo.push(r, c, (1 + rng.below(4)) as f32);
+    }
+    coo.to_csr()
+}
+
+fn setup(
+    n: usize,
+    ranks: usize,
+    seed: u64,
+) -> (Csr, RowPartition, comm::CommPlan, Topology) {
+    let a = int_matrix(n, n * 8, seed);
+    let part = RowPartition::balanced(n, ranks);
+    let blocks = split_1d(&a, &part);
+    let plan = comm::plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None);
+    let topo = Topology::tsubame4(ranks);
+    (a, part, plan, topo)
+}
+
+#[test]
+fn each_b_flow_crosses_inter_link_exactly_once() {
+    for seed in 0..4 {
+        let (_, _, plan, topo) = setup(256, 16, seed);
+        let sched = hierarchy::build(&plan, &topo);
+        // Flow keys are unique per (src, dst_group).
+        let mut keys: Vec<(usize, usize)> =
+            sched.b_flows.iter().map(|f| (f.src, f.dst_group)).collect();
+        keys.sort_unstable();
+        let before = keys.len();
+        keys.dedup();
+        assert_eq!(before, keys.len(), "duplicate B flow (seed {seed})");
+
+        let m = sched.messages();
+        // Exactly one inter-group stage-I message per flow, carrying the
+        // full deduplicated union — and nothing else crosses for B.
+        assert_eq!(m.s1_inter_b.len(), sched.b_flows.len(), "seed {seed}");
+        for (flow, msg) in sched.b_flows.iter().zip(&m.s1_inter_b) {
+            assert_eq!(msg.src, flow.src);
+            assert_eq!(msg.dst, flow.rep);
+            assert_eq!(msg.rows, flow.rows.len() as u64);
+            assert_ne!(
+                topo.group_of(flow.src),
+                flow.dst_group,
+                "B flow must cross groups"
+            );
+            // The union is exactly the dedup of its consumers' needs.
+            let mut union: Vec<u32> = flow
+                .consumers
+                .iter()
+                .flat_map(|(_, rows)| rows.iter().copied())
+                .collect();
+            union.sort_unstable();
+            union.dedup();
+            assert_eq!(union, flow.rows, "seed {seed}: union mismatch");
+        }
+        // Second-hop B distribution stays intra-group.
+        for msg in &m.s2_intra_b {
+            assert_eq!(
+                topo.group_of(msg.src),
+                topo.group_of(msg.dst),
+                "stage-II B must not cross groups"
+            );
+        }
+    }
+}
+
+#[test]
+fn c_flow_preaggregation_sums_equal_flat_partials() {
+    let n = 256;
+    let ranks = 16;
+    let nd = 8;
+    // Row strategy guarantees every nonzero cross-group pair contributes a
+    // C flow, so the pre-aggregation path is exercised densely.
+    let a = int_matrix(n, n * 8, 9);
+    let part = RowPartition::balanced(n, ranks);
+    let blocks = split_1d(&a, &part);
+    let plan = comm::plan(&blocks, &part, Strategy::Row, None);
+    let topo = Topology::tsubame4(ranks);
+    let sched = hierarchy::build(&plan, &topo);
+    let bmat = Dense::from_fn(n, nd, |i, j| ((i * 5 + j * 11) % 9) as f32 - 4.0);
+    let b_local = |rank: usize| -> Dense {
+        let (r0, r1) = part.range(rank);
+        Dense::from_vec(r1 - r0, nd, bmat.data[r0 * nd..r1 * nd].to_vec())
+    };
+    assert!(!sched.c_flows.is_empty(), "test needs inter-group C flows");
+    for flow in &sched.c_flows {
+        // Hierarchical path: fold each producer's partial rows into the
+        // union-row accumulator (exactly what the rep does in exec).
+        let mut agg = Dense::zeros(flow.rows.len(), nd);
+        // Flat path: scatter the same partials into a dst-local block.
+        let mut flat = Dense::zeros(part.len(flow.dst), nd);
+        for (producer, prows) in &flow.producers {
+            let pair = &plan.pairs[flow.dst][*producer];
+            assert_eq!(&pair.c_rows, prows, "schedule rows drifted from plan");
+            let data = pair.a_row_compact.spmm(&b_local(*producer));
+            for (i, r) in prows.iter().enumerate() {
+                let k = flow.rows.binary_search(r).expect("row in union");
+                for (d, s) in agg.row_mut(k).iter_mut().zip(data.row(i)) {
+                    *d += s;
+                }
+            }
+            flat.scatter_add_rows(prows, &data);
+        }
+        for (k, r) in flow.rows.iter().enumerate() {
+            assert_eq!(
+                agg.row(k),
+                flat.row(*r as usize),
+                "pre-aggregated row {r} != flat partial sum (dst {})",
+                flow.dst
+            );
+        }
+    }
+}
+
+#[test]
+fn representative_assignment_is_deterministic() {
+    for seed in [3u64, 4, 5] {
+        let (_, _, plan, topo) = setup(192, 12, seed);
+        let s1 = hierarchy::build(&plan, &topo);
+        let s2 = hierarchy::build(&plan, &Topology::tsubame4(12));
+        let reps_b =
+            |s: &hierarchy::HierSchedule| s.b_flows.iter().map(|f| f.rep).collect::<Vec<_>>();
+        let reps_c =
+            |s: &hierarchy::HierSchedule| s.c_flows.iter().map(|f| f.rep).collect::<Vec<_>>();
+        assert_eq!(reps_b(&s1), reps_b(&s2), "seed {seed}");
+        assert_eq!(reps_c(&s1), reps_c(&s2), "seed {seed}");
+        // Reps live in the group they represent.
+        for f in &s1.b_flows {
+            assert!(topo.group_members(f.dst_group).contains(&f.rep));
+        }
+        for f in &s1.c_flows {
+            assert!(topo.group_members(f.src_group).contains(&f.rep));
+        }
+    }
+}
+
+#[test]
+fn adaptive_plans_respect_the_same_invariants() {
+    // The mixed-strategy plan feeds the identical hierarchy machinery.
+    let a = int_matrix(256, 2500, 13);
+    let part = RowPartition::balanced(256, 16);
+    let blocks = split_1d(&a, &part);
+    let topo = Topology::tsubame4(16);
+    let compiled = shiro::plan::compile(
+        &blocks,
+        &part,
+        &topo,
+        &shiro::plan::PlanParams::default(),
+    );
+    let sched = hierarchy::build(&compiled.plan, &topo);
+    let n_dense = 16;
+    assert!(
+        sched.inter_group_bytes(n_dense)
+            <= hierarchy::flat_inter_group_bytes(&compiled.plan, &topo, n_dense)
+    );
+    let m = sched.messages();
+    assert_eq!(m.s1_inter_b.len(), sched.b_flows.len());
+    assert_eq!(m.s2_inter_c.len(), sched.c_flows.len());
+}

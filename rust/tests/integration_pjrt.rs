@@ -1,7 +1,11 @@
 //! Integration: AOT artifacts (JAX/Pallas → HLO text) loaded and executed
 //! through PJRT from the Rust side, composed with the distributed executor.
 //!
-//! Requires `make artifacts` (skipped with a clear message otherwise).
+//! Requires `make artifacts` (skipped with a clear message otherwise) and a
+//! build with the `pjrt` feature (the offline image has no xla bindings, so
+//! the whole suite is compiled out by default).
+
+#![cfg(feature = "pjrt")]
 
 use shiro::comm::Strategy;
 use shiro::cover::Solver;

@@ -79,10 +79,11 @@ fn prop_plan_conserves_nnz_and_covers() {
         let ranks = g.usize_in(2, 9);
         let part = RowPartition::balanced(a.nrows, ranks);
         let blocks = split_1d(&a, &part);
-        let strategy = match g.usize_in(0, 4) {
+        let strategy = match g.usize_in(0, 5) {
             0 => Strategy::Column,
             1 => Strategy::Row,
             2 => Strategy::Joint(Solver::Koenig),
+            3 => Strategy::Adaptive,
             _ => Strategy::Joint(Solver::Greedy),
         };
         let plan = comm::plan(&blocks, &part, strategy, None);
@@ -170,9 +171,10 @@ fn prop_executor_exact_for_random_configs() {
         let n_dense = 1 + g.usize_in(0, 16);
         let part = RowPartition::balanced(a.nrows, ranks);
         let blocks = split_1d(&a, &part);
-        let strategy = match g.usize_in(0, 3) {
+        let strategy = match g.usize_in(0, 4) {
             0 => Strategy::Column,
             1 => Strategy::Row,
+            2 => Strategy::Adaptive,
             _ => Strategy::Joint(Solver::Koenig),
         };
         let plan = comm::plan(&blocks, &part, strategy, None);
