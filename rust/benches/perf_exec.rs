@@ -1,80 +1,204 @@
 //! §Perf harness: end-to-end executor hot path (the L3 target). Measures
 //! wall time of one distributed SpMM (plan reused) on in-process ranks,
-//! native kernel — the number the EXPERIMENTS.md §Perf iteration log tracks.
+//! native kernel, with the overlapped pipeline ON vs OFF — the number the
+//! EXPERIMENTS.md §Perf iteration log tracks and the CI perf-smoke job
+//! gates.
+//!
+//! Flags (after `--`):
+//!   --preset ci|full          smaller matrices + fewer runs for CI
+//!   --check <baseline.json>   enforce committed min-speedup floors
+//!                             (exit 1 on regression) — see
+//!                             bench_results/baseline.json
 
-use shiro::bench::write_csv;
+use shiro::bench::{load_baseline, write_artifact, write_csv, Preset};
 use shiro::comm::Strategy;
 use shiro::cover::Solver;
 use shiro::dense::Dense;
 use shiro::exec::kernel::NativeKernel;
+use shiro::exec::ExecOpts;
 use shiro::metrics::Table;
+use shiro::sim::trace::exec_to_chrome_json;
 use shiro::sparse::gen;
 use shiro::spmm::DistSpmm;
 use shiro::topology::Topology;
+use shiro::util::cli::Args;
 use shiro::util::rng::Rng;
 use shiro::util::timer::benchmark;
 
+struct Scenario {
+    name: &'static str,
+    a: shiro::sparse::Csr,
+    ranks: usize,
+    n_dense: usize,
+}
+
+fn scenarios(preset: Preset) -> Vec<Scenario> {
+    // Skewed patterns (powerlaw, banded-hub) carry the overlap win: eager
+    // posts let light ranks run their remote compute while the heavy rank
+    // is still producing, which phase-ordered execution serializes.
+    match preset {
+        Preset::Full => vec![
+            Scenario {
+                name: "rmat-16k x8 N32",
+                a: gen::rmat(1 << 14, (1 << 14) * 12, (0.55, 0.2, 0.19), false, 1),
+                ranks: 8,
+                n_dense: 32,
+            },
+            Scenario {
+                name: "web-16k x16 N64",
+                a: gen::powerlaw(1 << 14, (1 << 14) * 10, 1.45, 2),
+                ranks: 16,
+                n_dense: 64,
+            },
+            Scenario {
+                name: "traffic-16k x8 N32",
+                a: gen::banded_hub(1 << 14, 3, 6, 400, 3),
+                ranks: 8,
+                n_dense: 32,
+            },
+            Scenario {
+                name: "mesh-16k x8 N32",
+                a: gen::mesh2d(128, 3),
+                ranks: 8,
+                n_dense: 32,
+            },
+        ],
+        Preset::Ci => vec![
+            Scenario {
+                name: "rmat-4k x8 N16",
+                a: gen::rmat(1 << 12, (1 << 12) * 12, (0.55, 0.2, 0.19), false, 1),
+                ranks: 8,
+                n_dense: 16,
+            },
+            Scenario {
+                name: "web-4k x8 N32",
+                a: gen::powerlaw(1 << 12, (1 << 12) * 10, 1.45, 2),
+                ranks: 8,
+                n_dense: 32,
+            },
+        ],
+    }
+}
+
 fn main() {
+    let args = Args::from_env();
+    let preset = Preset::from_args(&args);
+    // CI runs on small, oversubscribed shared runners, so the ci preset
+    // takes more samples per median to damp scheduler noise.
+    let (warmup, runs) = match preset {
+        Preset::Full => (2, 8),
+        Preset::Ci => (2, 9),
+    };
+    let on = ExecOpts::default();
+    let off = ExecOpts::sequential();
+
     let mut table = Table::new(&[
-        "scenario", "median (ms)", "mean (ms)", "min (ms)", "runs",
+        "scenario", "overlap (ms)", "sequential (ms)", "speedup", "overlap frac", "runs",
     ]);
-    let mut csv = String::from("scenario,median_ms,mean_ms,min_ms\n");
-    let scenarios: Vec<(&str, shiro::sparse::Csr, usize, usize, bool)> = vec![
-        (
-            "rmat-16k x8 N32 hier",
-            gen::rmat(1 << 14, (1 << 14) * 12, (0.55, 0.2, 0.19), false, 1),
-            8,
-            32,
-            true,
-        ),
-        (
-            "rmat-16k x8 N32 flat",
-            gen::rmat(1 << 14, (1 << 14) * 12, (0.55, 0.2, 0.19), false, 1),
-            8,
-            32,
-            false,
-        ),
-        (
-            "web-16k x16 N64 hier",
-            gen::powerlaw(1 << 14, (1 << 14) * 10, 1.45, 2),
-            16,
-            64,
-            true,
-        ),
-        (
-            "mesh-16k x8 N32 hier",
-            gen::mesh2d(128, 3),
-            8,
-            32,
-            true,
-        ),
-    ];
-    for (name, a, ranks, n_dense, hier) in scenarios {
+    let mut csv = String::from(
+        "scenario,overlap_ms,sequential_ms,speedup,overlapped_fraction\n",
+    );
+    let mut speedups: Vec<(String, f64)> = Vec::new();
+    let mut trace_written = false;
+
+    for sc in scenarios(preset) {
         let d = DistSpmm::plan(
-            &a,
+            &sc.a,
             Strategy::Joint(Solver::Koenig),
-            Topology::tsubame4(ranks),
-            hier,
+            Topology::tsubame4(sc.ranks),
+            true,
         );
         let mut rng = Rng::new(7);
-        let b = Dense::random(a.nrows, n_dense, &mut rng);
-        let stats = benchmark(2, 8, || d.execute(&b, &NativeKernel));
+        let b = Dense::random(sc.a.nrows, sc.n_dense, &mut rng);
+
+        // Correctness gate: the two schedules must produce the same bits.
+        let (c_on, stats_on) = d.execute_with(&b, &NativeKernel, &on);
+        let (c_off, _) = d.execute_with(&b, &NativeKernel, &off);
+        assert_eq!(c_on.data, c_off.data, "{}: overlap on/off results differ", sc.name);
+        if !trace_written {
+            write_artifact("perf_exec_trace.json", &exec_to_chrome_json(&stats_on));
+            trace_written = true;
+        }
+        let frac = stats_on.overlap_window().overlapped_fraction();
+
+        let t_on = benchmark(warmup, runs, || d.execute_with(&b, &NativeKernel, &on));
+        let t_off = benchmark(warmup, runs, || d.execute_with(&b, &NativeKernel, &off));
+        let speedup = t_off.median / t_on.median;
         table.row(vec![
-            name.into(),
-            format!("{:.2}", stats.median * 1e3),
-            format!("{:.2}", stats.mean * 1e3),
-            format!("{:.2}", stats.min * 1e3),
-            stats.n.to_string(),
+            sc.name.into(),
+            format!("{:.2}", t_on.median * 1e3),
+            format!("{:.2}", t_off.median * 1e3),
+            format!("{speedup:.2}x"),
+            format!("{:.0}%", frac * 100.0),
+            t_on.n.to_string(),
         ]);
         csv.push_str(&format!(
-            "{},{:.4},{:.4},{:.4}\n",
-            name,
-            stats.median * 1e3,
-            stats.mean * 1e3,
-            stats.min * 1e3
+            "{},{:.4},{:.4},{:.4},{:.4}\n",
+            sc.name,
+            t_on.median * 1e3,
+            t_off.median * 1e3,
+            speedup,
+            frac
         ));
+        speedups.push((sc.name.to_string(), speedup));
     }
-    println!("§Perf — executor end-to-end (native kernel):\n");
+
+    println!("§Perf — executor end-to-end, overlapped pipeline vs phase-ordered:\n");
     println!("{}", table.render());
     write_csv("perf_exec.csv", &csv);
+
+    if let Some(path) = args.get("check") {
+        check_baseline(std::path::Path::new(path), &speedups);
+    }
+}
+
+/// Enforce the committed perf-smoke floors: for every
+/// `min_speedup/<scenario>` key in the baseline, the measured
+/// overlap-vs-sequential speedup must stay within `tolerance` of it
+/// (machine-independent ratios, not absolute milliseconds).
+fn check_baseline(path: &std::path::Path, measured: &[(String, f64)]) {
+    let baseline = match load_baseline(path) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("perf-smoke: cannot read baseline {}: {e}", path.display());
+            std::process::exit(1);
+        }
+    };
+    let tolerance = baseline.get("tolerance").copied().unwrap_or(0.10);
+    let mut failures = Vec::new();
+    let mut checked = 0;
+    for (key, &floor) in &baseline {
+        let Some(scenario) = key.strip_prefix("min_speedup/") else {
+            continue;
+        };
+        checked += 1;
+        match measured.iter().find(|(n, _)| n == scenario) {
+            None => failures.push(format!(
+                "baseline scenario {scenario:?} was not measured — preset drift?"
+            )),
+            Some((_, speedup)) => {
+                let need = floor * (1.0 - tolerance);
+                if *speedup < need {
+                    failures.push(format!(
+                        "{scenario}: speedup {speedup:.3} < floor {floor} \
+                         (tolerance {tolerance}, effective {need:.3})"
+                    ));
+                } else {
+                    println!(
+                        "perf-smoke OK: {scenario} speedup {speedup:.3} >= {need:.3}"
+                    );
+                }
+            }
+        }
+    }
+    if checked == 0 {
+        failures.push("baseline has no min_speedup/ keys".to_string());
+    }
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("perf-smoke FAIL: {f}");
+        }
+        std::process::exit(1);
+    }
+    println!("perf-smoke: all {checked} baseline floors hold");
 }

@@ -20,6 +20,83 @@ pub fn write_csv(name: &str, content: &str) {
     println!("[csv] {}", path.display());
 }
 
+/// Write a non-CSV artifact (chrome trace, report) under `bench_results/`.
+pub fn write_artifact(name: &str, content: &str) {
+    let path = out_dir().join(name);
+    std::fs::write(&path, content).expect("write artifact");
+    println!("[artifact] {}", path.display());
+}
+
+/// Bench size preset, selected with `--preset=ci|full` (default full).
+/// `ci` shrinks datasets and repeat counts so the perf-smoke CI job
+/// finishes in minutes while still exercising the measured pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Preset {
+    Ci,
+    Full,
+}
+
+impl Preset {
+    pub fn from_args(args: &crate::util::cli::Args) -> Preset {
+        match args.get("preset") {
+            Some("ci") => Preset::Ci,
+            Some("full") | None => Preset::Full,
+            Some(other) => {
+                eprintln!("--preset expects ci|full, got {other:?}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+/// Minimal flat-JSON reader for the committed perf-smoke baseline
+/// (`bench_results/baseline.json`): a single object mapping string keys to
+/// numbers. Keys may contain any character except `"`; nesting, arrays,
+/// and string values are out of scope (serde is unavailable offline —
+/// DESIGN.md §1). Returns key → value.
+pub fn load_baseline(
+    path: &std::path::Path,
+) -> std::io::Result<std::collections::BTreeMap<String, f64>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut map = std::collections::BTreeMap::new();
+    let mut chars = text.chars().peekable();
+    while let Some(c) = chars.next() {
+        if c != '"' {
+            continue;
+        }
+        let mut key = String::new();
+        for k in chars.by_ref() {
+            if k == '"' {
+                break;
+            }
+            key.push(k);
+        }
+        // Skip to the separating colon, then over whitespace.
+        for s in chars.by_ref() {
+            if s == ':' {
+                break;
+            }
+        }
+        while chars.peek().is_some_and(|n| n.is_whitespace()) {
+            chars.next();
+        }
+        // Read the numeric value up to , } or whitespace.
+        let mut num = String::new();
+        while let Some(&n) = chars.peek() {
+            if n.is_ascii_digit() || n == '.' || n == '-' || n == '+' || n == 'e' || n == 'E' {
+                num.push(n);
+                chars.next();
+            } else {
+                break;
+            }
+        }
+        if let Ok(v) = num.parse::<f64>() {
+            map.insert(key, v);
+        }
+    }
+    Ok(map)
+}
+
 /// Bench-scale defaults: small enough for minutes-long runs, large enough
 /// to sit in the bandwidth-dominated regime the paper evaluates.
 pub const BENCH_SCALE: f64 = 0.02;
@@ -40,5 +117,40 @@ mod tests {
     #[test]
     fn ms_format() {
         assert_eq!(ms(0.001234), "1.234");
+    }
+
+    #[test]
+    fn preset_parses() {
+        let parse = |v: &[&str]| {
+            Preset::from_args(&crate::util::cli::Args::parse(
+                v.iter().map(|s| s.to_string()),
+            ))
+        };
+        assert_eq!(parse(&[]), Preset::Full);
+        assert_eq!(parse(&["--preset=ci"]), Preset::Ci);
+        assert_eq!(parse(&["--preset", "full"]), Preset::Full);
+    }
+
+    #[test]
+    fn baseline_roundtrip() {
+        let dir = std::env::temp_dir().join("shiro_baseline_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("baseline.json");
+        std::fs::write(
+            &p,
+            "{\n  \"tolerance\": 0.15,\n  \"min_speedup/web x16 N64\": 1.0,\n  \
+             \"note_ms\": -2.5e-1\n}\n",
+        )
+        .unwrap();
+        let m = load_baseline(&p).unwrap();
+        assert_eq!(m.len(), 3);
+        assert!((m["tolerance"] - 0.15).abs() < 1e-12);
+        assert!((m["min_speedup/web x16 N64"] - 1.0).abs() < 1e-12);
+        assert!((m["note_ms"] + 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn baseline_missing_file_errors() {
+        assert!(load_baseline(std::path::Path::new("/nonexistent/b.json")).is_err());
     }
 }

@@ -20,6 +20,9 @@ pub struct RunConfig {
     /// Communication strategy name (see [`Strategy::by_name`]):
     /// block | column | row | joint | joint-weighted | joint-greedy | adaptive.
     pub strategy: String,
+    /// Executor scheduling: `true` = overlapped pipeline (Alg. 1, the
+    /// default), `false` = strictly phase-ordered (`--overlap off`).
+    pub overlap: bool,
 }
 
 impl Default for RunConfig {
@@ -32,6 +35,19 @@ impl Default for RunConfig {
             topo: "tsubame4".into(),
             epochs: 50,
             strategy: "joint".into(),
+            overlap: true,
+        }
+    }
+}
+
+/// Parse an `--overlap` value: on|off (plus true/false, 1/0).
+fn parse_overlap(v: &str) -> bool {
+    match v {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => {
+            eprintln!("--overlap expects on|off, got {other:?}");
+            std::process::exit(2);
         }
     }
 }
@@ -62,6 +78,9 @@ impl RunConfig {
         if let Some(s) = args.get("strategy") {
             cfg.strategy = s.to_string();
         }
+        if let Some(o) = args.get("overlap") {
+            cfg.overlap = parse_overlap(o);
+        }
         cfg
     }
 
@@ -73,6 +92,18 @@ impl RunConfig {
         self.topo = file.str_or("run.topo", &self.topo);
         self.epochs = file.int_or("run.epochs", self.epochs as i64) as usize;
         self.strategy = file.str_or("run.strategy", &self.strategy);
+        // `run.overlap` accepts both the idiomatic TOML bool and the CLI's
+        // "on"/"off" string form.
+        if let Some(v) = file.get("run.overlap") {
+            self.overlap = match (v.as_bool(), v.as_str()) {
+                (Some(b), _) => b,
+                (None, Some(s)) => parse_overlap(s),
+                (None, None) => {
+                    eprintln!("run.overlap expects a bool or \"on\"/\"off\"");
+                    std::process::exit(2);
+                }
+            };
+        }
     }
 
     /// Resolve the configured strategy name.
@@ -110,6 +141,15 @@ impl RunConfig {
         let blocks = split_1d(a, &part);
         (part, blocks)
     }
+
+    /// Executor options implied by this configuration.
+    pub fn exec_opts(&self) -> crate::exec::ExecOpts {
+        if self.overlap {
+            crate::exec::ExecOpts::default()
+        } else {
+            crate::exec::ExecOpts::sequential()
+        }
+    }
 }
 
 #[cfg(test)]
@@ -126,6 +166,44 @@ mod tests {
         assert_eq!(cfg.ranks, 16);
         assert_eq!(cfg.n_dense, 64);
         assert_eq!(cfg.dataset, "Pokec");
+        assert!(cfg.overlap, "overlapped pipeline is the default");
+    }
+
+    #[test]
+    fn overlap_flag_parses() {
+        let cfg = RunConfig::from_args(&args(&["run", "--overlap", "off"]));
+        assert!(!cfg.overlap);
+        assert!(!cfg.exec_opts().overlap);
+        let cfg = RunConfig::from_args(&args(&["run", "--overlap", "on"]));
+        assert!(cfg.overlap);
+        assert!(cfg.exec_opts().overlap);
+    }
+
+    #[test]
+    fn overlap_from_config_file_bool_and_string() {
+        let dir = std::env::temp_dir().join("shiro_cfg_overlap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        for (contents, want) in [
+            ("[run]\noverlap = false\n", false),
+            ("[run]\noverlap = true\n", true),
+            ("[run]\noverlap = \"off\"\n", false),
+        ] {
+            let p = dir.join("run.toml");
+            std::fs::write(&p, contents).unwrap();
+            let cfg = RunConfig::from_args(&args(&["run", "--config", p.to_str().unwrap()]));
+            assert_eq!(cfg.overlap, want, "{contents:?}");
+        }
+        // CLI still wins over the file.
+        let p = dir.join("run.toml");
+        std::fs::write(&p, "[run]\noverlap = false\n").unwrap();
+        let cfg = RunConfig::from_args(&args(&[
+            "run",
+            "--config",
+            p.to_str().unwrap(),
+            "--overlap",
+            "on",
+        ]));
+        assert!(cfg.overlap);
     }
 
     #[test]

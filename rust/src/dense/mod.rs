@@ -70,10 +70,19 @@ impl Dense {
     /// rows for sending" primitive of sparsity-aware communication.
     pub fn gather_rows(&self, rows: &[u32]) -> Dense {
         let mut out = Dense::zeros(rows.len(), self.ncols);
+        self.gather_rows_into(rows, &mut out);
+        out
+    }
+
+    /// [`Dense::gather_rows`] into a caller-provided (pooled) buffer of
+    /// shape `rows.len() × self.ncols` — the executor pipeline's
+    /// allocation-free pack primitive.
+    pub fn gather_rows_into(&self, rows: &[u32], out: &mut Dense) {
+        assert_eq!(out.nrows, rows.len());
+        assert_eq!(out.ncols, self.ncols);
         for (i, &r) in rows.iter().enumerate() {
             out.row_mut(i).copy_from_slice(self.row(r as usize));
         }
-        out
     }
 
     /// C[rows[i], :] += src[i, :] — the "unpack received C partials"

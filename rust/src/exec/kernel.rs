@@ -13,6 +13,26 @@ pub trait SpmmKernel: Sync {
         c.add_assign(&partial);
     }
 
+    /// Row-tile SpMM for the overlapped executor pipeline: accumulate rows
+    /// `r0..r1` of A·B into the same rows of `c`. The default runs the
+    /// native CSR row loop, which is bitwise-identical to `Csr::spmm_acc`
+    /// restricted to those rows — backends whose full-matrix path differs
+    /// numerically from the native loop should return `false` from
+    /// [`SpmmKernel::prefers_tiles`] so the executor hands them whole
+    /// blocks through `spmm_acc` instead.
+    fn spmm_rows(&self, a: &Csr, b: &Dense, c: &mut Dense, r0: usize, r1: usize) {
+        a.spmm_rows_acc(b, c, r0, r1);
+    }
+
+    /// Whether the executor may split this kernel's diagonal SpMM into row
+    /// tiles. Backends with whole-matrix entry points (AOT/XLA artifacts
+    /// compiled for fixed shapes) return `false`; the pipeline then runs
+    /// the diagonal as one `spmm_acc` call so every local SpMM still goes
+    /// through the backend.
+    fn prefers_tiles(&self) -> bool {
+        true
+    }
+
     fn name(&self) -> &'static str;
 }
 

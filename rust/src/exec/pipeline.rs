@@ -1,0 +1,261 @@
+//! Building blocks of the overlapped executor pipeline (Alg. 1 §6.2 made
+//! real): execution options, a reusable buffer pool (generalized double
+//! buffering — gathers, partials, and message payloads recycle instead of
+//! allocating per transfer), a canonical-order fold that makes the result
+//! independent of message arrival order, and a worker gate that caps how
+//! many ranks compute concurrently (the determinism suite's lever for
+//! forcing adversarial interleavings).
+
+use crate::dense::Dense;
+use std::collections::BTreeMap;
+use std::sync::{Condvar, Mutex};
+
+/// Default diagonal-SpMM tile height between inbox drains.
+pub const DEFAULT_TILE_ROWS: usize = 256;
+
+/// Executor options: how the per-rank program is scheduled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecOpts {
+    /// `true` (default): the overlapped pipeline — outgoing B posts before
+    /// local compute, SpMM tiles interleaved with draining the inbox,
+    /// representatives folding pre-aggregation incrementally as partials
+    /// arrive. `false`: strictly phase-ordered execution (all local
+    /// compute, then a blocking exchange, then aggregation) — the ablation
+    /// control. Results are bit-identical either way: every scatter-add is
+    /// applied in canonical (origin, row) order, not arrival order.
+    pub overlap: bool,
+    /// Diagonal-block SpMM tile height (rows) between inbox drains;
+    /// 0 = [`DEFAULT_TILE_ROWS`].
+    pub tile_rows: usize,
+    /// Maximum number of ranks computing concurrently (worker-thread cap);
+    /// 0 = one worker per rank (no cap). Any value must produce
+    /// bit-identical results — the determinism tests sweep 1/2/4/8.
+    pub workers: usize,
+}
+
+impl Default for ExecOpts {
+    fn default() -> ExecOpts {
+        ExecOpts { overlap: true, tile_rows: 0, workers: 0 }
+    }
+}
+
+impl ExecOpts {
+    /// The phase-ordered ablation control (`--overlap off`).
+    pub fn sequential() -> ExecOpts {
+        ExecOpts { overlap: false, ..ExecOpts::default() }
+    }
+
+    pub(crate) fn tile(&self) -> usize {
+        if self.tile_rows == 0 {
+            DEFAULT_TILE_ROWS
+        } else {
+            self.tile_rows
+        }
+    }
+}
+
+/// Per-rank pool of reusable f32 buffers. Outgoing payloads are acquired
+/// here and released into the *destination's* pool on arrival, so steady
+/// state runs allocation-free regardless of which rank produced a buffer.
+#[derive(Default)]
+pub(crate) struct BufferPool {
+    free: Vec<Vec<f32>>,
+}
+
+/// Bound on retained buffers — enough for deep pipelines, small enough not
+/// to hoard a whole matrix per rank.
+const POOL_CAP: usize = 64;
+
+impl BufferPool {
+    pub fn new() -> BufferPool {
+        BufferPool::default()
+    }
+
+    /// A zeroed `nrows × ncols` matrix, recycling a retained allocation
+    /// when one exists.
+    pub fn acquire(&mut self, nrows: usize, ncols: usize) -> Dense {
+        let n = nrows * ncols;
+        let mut data = match self.free.pop() {
+            Some(v) => v,
+            None => Vec::with_capacity(n),
+        };
+        data.clear();
+        data.resize(n, 0.0);
+        Dense { nrows, ncols, data }
+    }
+
+    pub fn release(&mut self, d: Dense) {
+        if self.free.len() < POOL_CAP && d.data.capacity() > 0 {
+            self.free.push(d.data);
+        }
+    }
+}
+
+/// Canonical contribution key: `DIAG_KEY` sorts first (the diagonal block
+/// is every element's base value), then column-based (B) contributions by
+/// origin, then row-based (C) contributions by sending peer.
+pub(crate) const DIAG_KEY: u64 = 0;
+pub(crate) const KIND_B: u8 = 0;
+pub(crate) const KIND_C: u8 = 1;
+
+pub(crate) fn ckey(kind: u8, peer: usize) -> u64 {
+    ((kind as u64 + 1) << 32) | peer as u64
+}
+
+/// Applies contributions in a fixed canonical key order regardless of
+/// arrival order: an out-of-order contribution is parked until every
+/// earlier key has been applied. This is the determinism contract of the
+/// pipeline — float addition is not associative, so the *sequence* of
+/// scatter-adds into any accumulator must not depend on thread timing.
+pub(crate) struct OrderedFold<T> {
+    keys: Vec<u64>,
+    next: usize,
+    parked: BTreeMap<u64, T>,
+}
+
+impl<T> OrderedFold<T> {
+    pub fn new(mut keys: Vec<u64>) -> OrderedFold<T> {
+        keys.sort_unstable();
+        debug_assert!(keys.windows(2).all(|w| w[0] < w[1]), "duplicate fold key");
+        OrderedFold { keys, next: 0, parked: BTreeMap::new() }
+    }
+
+    /// Park `item` under `key`, then apply every contribution that is now
+    /// at the head of the canonical order (possibly including this one).
+    pub fn offer(&mut self, key: u64, item: T, mut apply: impl FnMut(T)) {
+        debug_assert!(self.keys.binary_search(&key).is_ok(), "unknown fold key {key:#x}");
+        let prev = self.parked.insert(key, item);
+        debug_assert!(prev.is_none(), "duplicate contribution for key {key:#x}");
+        while self.next < self.keys.len() {
+            match self.parked.remove(&self.keys[self.next]) {
+                Some(ready) => {
+                    apply(ready);
+                    self.next += 1;
+                }
+                None => break,
+            }
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.next == self.keys.len()
+    }
+}
+
+/// Counting gate bounding how many ranks run compute simultaneously. Only
+/// compute sections acquire a permit — never a blocking receive — so the
+/// gate can not deadlock the exchange: every rank holding a permit is
+/// making progress and releases it before waiting on the network.
+pub(crate) struct ComputeGate {
+    permits: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl ComputeGate {
+    pub fn new(workers: usize) -> ComputeGate {
+        assert!(workers > 0);
+        ComputeGate { permits: Mutex::new(workers), cv: Condvar::new() }
+    }
+
+    /// Run `f` while holding one permit. The permit is restored by a drop
+    /// guard, so a panicking kernel unwinds the rank thread (and cascades
+    /// through the channel expects) instead of starving the other ranks
+    /// into a hang.
+    pub fn run<R>(&self, f: impl FnOnce() -> R) -> R {
+        let mut n = self.permits.lock().unwrap();
+        while *n == 0 {
+            n = self.cv.wait(n).unwrap();
+        }
+        *n -= 1;
+        drop(n);
+        struct Release<'a>(&'a ComputeGate);
+        impl Drop for Release<'_> {
+            fn drop(&mut self) {
+                *self.0.permits.lock().unwrap() += 1;
+                self.0.cv.notify_one();
+            }
+        }
+        let _permit = Release(self);
+        f()
+    }
+}
+
+/// Run `f` under the gate when one is configured.
+pub(crate) fn gated<R>(gate: Option<&ComputeGate>, f: impl FnOnce() -> R) -> R {
+    match gate {
+        Some(g) => g.run(f),
+        None => f(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_recycles_allocations() {
+        let mut pool = BufferPool::new();
+        let a = pool.acquire(4, 8);
+        let ptr = a.data.as_ptr();
+        pool.release(a);
+        let b = pool.acquire(2, 8); // smaller fits the same allocation
+        assert_eq!(b.data.as_ptr(), ptr);
+        assert_eq!(b.nrows, 2);
+        assert!(b.data.iter().all(|&x| x == 0.0), "acquire must zero");
+        // Growing reuses the vec (realloc allowed) and still zeroes.
+        pool.release(b);
+        let c = pool.acquire(16, 16);
+        assert_eq!(c.data.len(), 256);
+        assert!(c.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn ordered_fold_applies_in_key_order() {
+        let keys = vec![DIAG_KEY, ckey(KIND_B, 3), ckey(KIND_B, 1), ckey(KIND_C, 0)];
+        let mut fold = OrderedFold::new(keys);
+        let mut applied = Vec::new();
+        // Arrivals in adversarial order: everything parks until DIAG_KEY.
+        fold.offer(ckey(KIND_C, 0), "c0", |x| applied.push(x));
+        fold.offer(ckey(KIND_B, 3), "b3", |x| applied.push(x));
+        assert!(applied.is_empty());
+        fold.offer(DIAG_KEY, "diag", |x| applied.push(x));
+        assert_eq!(applied, vec!["diag"]);
+        fold.offer(ckey(KIND_B, 1), "b1", |x| applied.push(x));
+        assert_eq!(applied, vec!["diag", "b1", "b3", "c0"]);
+        assert!(fold.is_done());
+    }
+
+    #[test]
+    fn ordered_fold_empty_is_done() {
+        let fold: OrderedFold<()> = OrderedFold::new(Vec::new());
+        assert!(fold.is_done());
+    }
+
+    #[test]
+    fn diag_key_sorts_before_contributions() {
+        assert!(DIAG_KEY < ckey(KIND_B, 0));
+        assert!(ckey(KIND_B, usize::MAX as u32 as usize) < ckey(KIND_C, 0));
+        assert!(ckey(KIND_B, 3) < ckey(KIND_B, 4));
+    }
+
+    #[test]
+    fn gate_bounds_concurrency() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let gate = ComputeGate::new(2);
+        let live = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    gate.run(|| {
+                        let n = live.fetch_add(1, Ordering::SeqCst) + 1;
+                        peak.fetch_max(n, Ordering::SeqCst);
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                        live.fetch_sub(1, Ordering::SeqCst);
+                    });
+                });
+            }
+        });
+        assert!(peak.load(Ordering::SeqCst) <= 2);
+    }
+}

@@ -13,6 +13,26 @@ use crate::comm::CommPlan;
 use crate::topology::Topology;
 use std::collections::BTreeMap;
 
+/// Canonical Alg. 1 phase labels, shared by the simulator's stage names,
+/// the executor's per-rank phase log, and both chrome-trace exporters —
+/// traces from `sim::trace` and from the executed pipeline line up by name.
+pub mod phase {
+    /// Stage I, inter-group: deduplicated B fetch (col ①).
+    pub const S1_INTER_B: &str = "stageI: interB";
+    /// Stage I, intra-group: C pre-aggregation + same-group row-based (row ①).
+    pub const S1_INTRA_C: &str = "stageI: intraC";
+    /// Stage II, inter-group: aggregated C transmission (row ②).
+    pub const S2_INTER_C: &str = "stageII: interC";
+    /// Stage II, intra-group: B distribution + same-group column-based (col ②).
+    pub const S2_INTRA_B: &str = "stageII: intraB";
+    /// Local diagonal-block SpMM (workflow step 3, overlappable compute).
+    pub const COMPUTE_LOCAL: &str = "compute: local";
+    /// Remote column-based SpMM + result aggregation (workflow step 5).
+    pub const COMPUTE_REMOTE: &str = "compute: remote";
+    /// Executor only: blocked in `recv` with no compute left to overlap.
+    pub const IDLE: &str = "idle: waiting";
+}
+
 /// Hierarchical column-based flow: source rank `src` serves destination
 /// group `dst_group` through one deduplicated inter-group transfer to `rep`,
 /// which redistributes intra-group.
@@ -167,47 +187,141 @@ pub struct StagedMessages {
     pub s2_intra_b: Vec<StageMsg>,
 }
 
+/// One send-side step of a rank's overlapped program (Alg. 1). Indices
+/// point into the owning [`HierSchedule`]'s vectors, so both the executor
+/// (which needs the payload row lists) and the simulator lowering (which
+/// only needs sizes) resolve the *same* schedule entries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Step {
+    /// Stage I ①: ship the deduplicated B union to `b_flows[i].rep` (inter).
+    InterB(usize),
+    /// Stage I ① row-based: compute this rank's partial C rows for
+    /// `c_flows[i]` and route them to the rep (or keep, when rep == self).
+    ProduceC(usize),
+    /// Stage I intra: same-group direct row-based transfer `direct_c[i]`.
+    DirectC(usize),
+    /// Stage II intra: same-group direct column-based transfer `direct_b[i]`.
+    DirectB(usize),
+}
+
 impl HierSchedule {
-    /// Lower the schedule to per-stage message lists.
-    pub fn messages(&self) -> StagedMessages {
-        let mut m = StagedMessages::default();
+    /// The ordered send program of `rank` under Alg. 1: inter-group B flows
+    /// first (they unblock remote groups), then row-based partial
+    /// production, then the same-group direct transfers. The executor's
+    /// pipeline runs exactly this sequence, and [`HierSchedule::messages`]
+    /// is folded from the union of all ranks' programs — the simulated and
+    /// executed orderings are provably the same object.
+    pub fn rank_steps(&self, rank: usize) -> Vec<Step> {
+        let mut steps = Vec::new();
+        for (i, f) in self.b_flows.iter().enumerate() {
+            if f.src == rank {
+                steps.push(Step::InterB(i));
+            }
+        }
+        for (i, f) in self.c_flows.iter().enumerate() {
+            if f.producers.iter().any(|(p, _)| *p == rank) {
+                steps.push(Step::ProduceC(i));
+            }
+        }
+        for (i, (src, _, _)) in self.direct_c.iter().enumerate() {
+            if *src == rank {
+                steps.push(Step::DirectC(i));
+            }
+        }
+        for (i, (src, _, _)) in self.direct_b.iter().enumerate() {
+            if *src == rank {
+                steps.push(Step::DirectB(i));
+            }
+        }
+        steps
+    }
+
+    /// Canonical (phase, message) stream: every rank's [`Step`] program in
+    /// rank order, followed by the reactive second hops that the reps emit
+    /// on arrival (stage-II B distribution and aggregated-C transmission).
+    /// Both the sim lowering ([`HierSchedule::messages`]) and the executor
+    /// consume this stream — one through byte counts, one with payloads.
+    pub fn phase_messages(&self) -> Vec<(&'static str, StageMsg)> {
+        let mut out = Vec::new();
+        for rank in 0..self.nranks {
+            for step in self.rank_steps(rank) {
+                match step {
+                    Step::InterB(i) => {
+                        let f = &self.b_flows[i];
+                        out.push((
+                            phase::S1_INTER_B,
+                            StageMsg { src: f.src, dst: f.rep, rows: f.rows.len() as u64 },
+                        ));
+                    }
+                    Step::ProduceC(i) => {
+                        let f = &self.c_flows[i];
+                        // Only the rep→self keep is silent; producers that
+                        // are not the rep send their partials intra-group.
+                        if f.rep != rank {
+                            let rows = f
+                                .producers
+                                .iter()
+                                .find(|(p, _)| *p == rank)
+                                .map(|(_, r)| r.len() as u64)
+                                .unwrap_or(0);
+                            out.push((
+                                phase::S1_INTRA_C,
+                                StageMsg { src: rank, dst: f.rep, rows },
+                            ));
+                        }
+                    }
+                    Step::DirectC(i) => {
+                        let (src, dst, rows) = &self.direct_c[i];
+                        out.push((
+                            phase::S1_INTRA_C,
+                            StageMsg { src: *src, dst: *dst, rows: rows.len() as u64 },
+                        ));
+                    }
+                    Step::DirectB(i) => {
+                        let (src, dst, rows) = &self.direct_b[i];
+                        out.push((
+                            phase::S2_INTRA_B,
+                            StageMsg { src: *src, dst: *dst, rows: rows.len() as u64 },
+                        ));
+                    }
+                }
+            }
+        }
+        // Reactive hops, in schedule order (deterministic): the rep
+        // redistributes each arrived B flow to its in-group consumers, and
+        // ships each completed C aggregate across the inter-group link.
         for f in &self.b_flows {
-            m.s1_inter_b.push(StageMsg {
-                src: f.src,
-                dst: f.rep,
-                rows: f.rows.len() as u64,
-            });
             for (consumer, rows) in &f.consumers {
                 if *consumer != f.rep {
-                    m.s2_intra_b.push(StageMsg {
-                        src: f.rep,
-                        dst: *consumer,
-                        rows: rows.len() as u64,
-                    });
+                    out.push((
+                        phase::S2_INTRA_B,
+                        StageMsg { src: f.rep, dst: *consumer, rows: rows.len() as u64 },
+                    ));
                 }
             }
         }
         for f in &self.c_flows {
-            for (producer, rows) in &f.producers {
-                if *producer != f.rep {
-                    m.s1_intra_c.push(StageMsg {
-                        src: *producer,
-                        dst: f.rep,
-                        rows: rows.len() as u64,
-                    });
-                }
+            out.push((
+                phase::S2_INTER_C,
+                StageMsg { src: f.rep, dst: f.dst, rows: f.rows.len() as u64 },
+            ));
+        }
+        out
+    }
+
+    /// Lower the schedule to per-stage message lists — a fold of
+    /// [`HierSchedule::phase_messages`] by phase, so the simulator sees
+    /// exactly the messages the executor's rank programs emit.
+    pub fn messages(&self) -> StagedMessages {
+        let mut m = StagedMessages::default();
+        for (ph, msg) in self.phase_messages() {
+            match ph {
+                phase::S1_INTER_B => m.s1_inter_b.push(msg),
+                phase::S1_INTRA_C => m.s1_intra_c.push(msg),
+                phase::S2_INTER_C => m.s2_inter_c.push(msg),
+                phase::S2_INTRA_B => m.s2_intra_b.push(msg),
+                _ => unreachable!("non-message phase {ph}"),
             }
-            m.s2_inter_c.push(StageMsg {
-                src: f.rep,
-                dst: f.dst,
-                rows: f.rows.len() as u64,
-            });
-        }
-        for (src, dst, rows) in &self.direct_c {
-            m.s1_intra_c.push(StageMsg { src: *src, dst: *dst, rows: rows.len() as u64 });
-        }
-        for (src, dst, rows) in &self.direct_b {
-            m.s2_intra_b.push(StageMsg { src: *src, dst: *dst, rows: rows.len() as u64 });
         }
         m
     }
@@ -384,6 +498,52 @@ mod tests {
         assert_eq!(sched.b_flows[0].rep, 6);
         let m = sched.messages();
         assert_eq!(m.s2_intra_b.len(), 0, "no second hop for single consumer");
+    }
+
+    #[test]
+    fn rank_programs_and_sim_lowering_are_one_object() {
+        let (plan, topo) = setup(128, 8, 7);
+        let sched = build(&plan, &topo);
+        // Every schedule entry appears in exactly one rank's send program.
+        let (mut inter_b, mut produce_c, mut direct_b, mut direct_c) = (0, 0, 0, 0);
+        for r in 0..sched.nranks {
+            for s in sched.rank_steps(r) {
+                match s {
+                    Step::InterB(i) => {
+                        assert_eq!(sched.b_flows[i].src, r);
+                        inter_b += 1;
+                    }
+                    Step::ProduceC(i) => {
+                        assert!(sched.c_flows[i].producers.iter().any(|(p, _)| *p == r));
+                        produce_c += 1;
+                    }
+                    Step::DirectC(i) => {
+                        assert_eq!(sched.direct_c[i].0, r);
+                        direct_c += 1;
+                    }
+                    Step::DirectB(i) => {
+                        assert_eq!(sched.direct_b[i].0, r);
+                        direct_b += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(inter_b, sched.b_flows.len());
+        assert_eq!(
+            produce_c,
+            sched.c_flows.iter().map(|f| f.producers.len()).sum::<usize>()
+        );
+        assert_eq!(direct_b, sched.direct_b.len());
+        assert_eq!(direct_c, sched.direct_c.len());
+        // The sim lowering is a fold of the same canonical stream.
+        let m = sched.messages();
+        let stream = sched.phase_messages();
+        let count = |ph: &str| stream.iter().filter(|(p, _)| *p == ph).count();
+        assert_eq!(count(phase::S1_INTER_B), m.s1_inter_b.len());
+        assert_eq!(count(phase::S1_INTRA_C), m.s1_intra_c.len());
+        assert_eq!(count(phase::S2_INTER_C), m.s2_inter_c.len());
+        assert_eq!(count(phase::S2_INTRA_B), m.s2_intra_b.len());
+        assert!(!stream.is_empty());
     }
 
     #[test]

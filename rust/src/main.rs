@@ -10,7 +10,10 @@
 //!
 //! Global flags: --n <dense cols> --scale <dataset scale> --topo <name>
 //! --strategy <block|column|row|joint|joint-weighted|joint-greedy|adaptive>
+//! --overlap <on|off> (overlapped executor pipeline vs phase-ordered)
 //! --config <file.toml> (CLI overrides config values).
+//! `trace` accepts --exec to emit the executed pipeline's chrome trace
+//! alongside the simulated one (same phase names, comparable in Perfetto).
 
 use shiro::comm::Strategy;
 use shiro::config::RunConfig;
@@ -27,13 +30,13 @@ fn main() {
         "run" => cmd_run(&cfg),
         "sim" => cmd_sim(&cfg),
         "gnn" => cmd_gnn(&cfg),
-        "trace" => cmd_trace(&cfg),
+        "trace" => cmd_trace(&cfg, &args),
         "info" => cmd_info(),
         _ => {
             eprintln!(
                 "usage: shiro <datasets|plan|run|sim|gnn|trace|info> \
                  [--dataset D] [--ranks R] [--n N] [--scale S] [--topo T] \
-                 [--strategy S] [--config F]"
+                 [--strategy S] [--overlap on|off] [--config F]"
             );
             std::process::exit(if cmd == "help" { 0 } else { 2 });
         }
@@ -133,16 +136,28 @@ fn cmd_run(cfg: &RunConfig) {
     let d = DistSpmm::plan_with_params(&a, cfg.strategy(), topo, true, &params);
     let mut rng = Rng::new(1);
     let b = Dense::random(a.nrows, cfg.n_dense, &mut rng);
-    let (c, stats) = d.execute(&b, &NativeKernel);
+    let (c, stats) = d.execute_with(&b, &NativeKernel, &cfg.exec_opts());
     let want = a.spmm(&b);
     let err = want.diff_norm(&c) / (want.max_abs() as f64 + 1e-30);
+    let w = stats.overlap_window();
     println!(
-        "executed {} ranks [{}]: rel err {err:.2e}, wall {:.1} ms, intra {} B, inter {} B",
+        "executed {} ranks [{}] overlap={}: rel err {err:.2e}, wall {:.1} ms, \
+         intra {} B, inter {} B",
         cfg.ranks,
         d.plan.strategy.name(),
+        if cfg.overlap { "on" } else { "off" },
         stats.wall_secs * 1e3,
         stats.total_intra_bytes(),
         stats.total_inter_bytes()
+    );
+    println!(
+        "overlap window: {:.1}% of received bytes in flight during compute \
+         ({} of {} B), idle {:.2} ms, compute {:.2} ms",
+        100.0 * w.overlapped_fraction(),
+        w.overlapped_bytes,
+        w.total_bytes(),
+        w.idle_secs * 1e3,
+        w.compute_secs * 1e3
     );
     assert!(err < 1e-3, "verification failed");
 }
@@ -201,8 +216,8 @@ fn cmd_gnn(cfg: &RunConfig) {
     );
 }
 
-fn cmd_trace(cfg: &RunConfig) {
-    use shiro::sim::trace::{to_chrome_json, trace};
+fn cmd_trace(cfg: &RunConfig, args: &Args) {
+    use shiro::sim::trace::{exec_to_chrome_json, to_chrome_json, trace};
     use shiro::spmm::DistSpmm;
     let a = cfg.matrix();
     let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), cfg.topology(), true);
@@ -215,6 +230,19 @@ fn cmd_trace(cfg: &RunConfig) {
         "wrote {path} ({} messages) — load in chrome://tracing or Perfetto",
         timings.len()
     );
+    if args.has_flag("exec") {
+        // The executed pipeline's trace, with the same phase names as the
+        // simulated stages, for side-by-side comparison.
+        use shiro::dense::Dense;
+        use shiro::exec::kernel::NativeKernel;
+        use shiro::util::rng::Rng;
+        let mut rng = Rng::new(1);
+        let b = Dense::random(a.nrows, cfg.n_dense, &mut rng);
+        let (_, stats) = d.execute_with(&b, &NativeKernel, &cfg.exec_opts());
+        let path = format!("trace_{}_{}r_exec.json", cfg.dataset, cfg.ranks);
+        std::fs::write(&path, exec_to_chrome_json(&stats)).expect("write exec trace");
+        println!("wrote {path} (executed pipeline, same phase names)");
+    }
 }
 
 fn cmd_info() {

@@ -128,6 +128,40 @@ impl VolumeMatrix {
     }
 }
 
+/// Overlap-window accounting for an executed pipeline run (§6.2): how much
+/// of the received traffic landed while the rank still had compute to hide
+/// it behind, versus while idling in the drain tail. Filled per rank by the
+/// executor ([`crate::exec::ExecStats::overlap_window`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct OverlapWindow {
+    /// Bytes drained from inboxes while compute items remained (in flight
+    /// during compute — hidden communication).
+    pub overlapped_bytes: u64,
+    /// Bytes received in the idle drain tail (exposed communication).
+    pub idle_bytes: u64,
+    /// Seconds blocked in `recv` with nothing left to compute (over ranks).
+    pub idle_secs: f64,
+    /// Seconds of local SpMM compute (over ranks).
+    pub compute_secs: f64,
+}
+
+impl OverlapWindow {
+    pub fn total_bytes(&self) -> u64 {
+        self.overlapped_bytes + self.idle_bytes
+    }
+
+    /// Fraction of received bytes that arrived inside the overlap window
+    /// (1.0 = all communication hidden behind compute).
+    pub fn overlapped_fraction(&self) -> f64 {
+        let total = self.total_bytes();
+        if total == 0 {
+            0.0
+        } else {
+            self.overlapped_bytes as f64 / total as f64
+        }
+    }
+}
+
 /// Percent reduction from `base` to `opt` (Fig. 8 bars).
 pub fn reduction_pct(base: u64, opt: u64) -> f64 {
     if base == 0 {
@@ -218,6 +252,14 @@ mod tests {
         m.set(0, 1, 5);
         m.set(1, 0, 5);
         assert!((m.imbalance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_window_fraction() {
+        let w = OverlapWindow { overlapped_bytes: 75, idle_bytes: 25, ..Default::default() };
+        assert_eq!(w.total_bytes(), 100);
+        assert!((w.overlapped_fraction() - 0.75).abs() < 1e-12);
+        assert_eq!(OverlapWindow::default().overlapped_fraction(), 0.0);
     }
 
     #[test]

@@ -296,6 +296,13 @@ mod imp {
             }
         }
 
+        /// AOT artifacts are compiled for whole-block shapes: tell the
+        /// executor pipeline to hand us the full diagonal via `spmm_acc`
+        /// instead of native row tiles.
+        fn prefers_tiles(&self) -> bool {
+            false
+        }
+
         fn name(&self) -> &'static str {
             "pjrt"
         }
@@ -414,6 +421,13 @@ mod imp {
             self.fallbacks
                 .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             a.spmm(b)
+        }
+
+        /// Mirror the real backend's contract (whole blocks, no tiles) so
+        /// executor behavior is identical with and without `--features
+        /// pjrt`.
+        fn prefers_tiles(&self) -> bool {
+            false
         }
 
         fn name(&self) -> &'static str {

@@ -130,6 +130,10 @@ fn schedule_messages(msgs: &[SimMsg], topo: &Topology) -> f64 {
     makespan
 }
 
+/// Stage label of the flat all-to-all exchange — shared with the executor's
+/// phase log so flat traces line up by name too.
+pub const FLAT_STAGE: &str = "flat-alltoall";
+
 /// Lower a flat [`crate::comm::CommPlan`] into a single all-to-all comm
 /// stage (the topology-oblivious pattern of §3.2).
 pub fn flat_comm_stage(
@@ -148,16 +152,20 @@ pub fn flat_comm_stage(
             }
         }
     }
-    Stage::comm("flat-alltoall", msgs)
+    Stage::comm(FLAT_STAGE, msgs)
 }
 
 /// Lower a [`crate::hierarchy::HierSchedule`] into the two overlapped
 /// stages of Alg. 1. Within each stage, intra and inter messages coexist
-/// and proceed on independent ports (the complementary overlap).
+/// and proceed on independent ports (the complementary overlap). Stage
+/// names are composed from the canonical [`crate::hierarchy::phase`]
+/// labels — the same names the executor's pipeline logs — so simulated and
+/// executed chrome traces are comparable.
 pub fn hier_comm_stages(
     sched: &crate::hierarchy::HierSchedule,
     n_dense: usize,
 ) -> [Stage; 2] {
+    use crate::hierarchy::phase;
     let m = sched.messages();
     let row_bytes = |rows: u64| rows * n_dense as u64 * crate::comm::SZ_DT;
     let to_msgs = |v: &[crate::hierarchy::StageMsg]| -> Vec<SimMsg> {
@@ -171,18 +179,19 @@ pub fn hier_comm_stages(
     let mut s2 = to_msgs(&m.s2_inter_c);
     s2.extend(to_msgs(&m.s2_intra_b));
     [
-        Stage::comm("stageI: interB ∥ intraC", s1),
-        Stage::comm("stageII: interC ∥ intraB", s2),
+        Stage::comm(&format!("{} ∥ {}", phase::S1_INTER_B, phase::S1_INTRA_C), s1),
+        Stage::comm(&format!("{} ∥ {}", phase::S2_INTER_C, phase::S2_INTRA_B), s2),
     ]
 }
 
 /// Ablation control for §6.2: the same hierarchical schedule WITHOUT the
 /// complementary overlap — each tier runs in its own barrier-separated
-/// stage (4 stages instead of 2). `make bench-ablation-overlap` compares.
+/// stage (4 stages instead of 2), named by the same phase labels.
 pub fn hier_comm_stages_sequential(
     sched: &crate::hierarchy::HierSchedule,
     n_dense: usize,
 ) -> [Stage; 4] {
+    use crate::hierarchy::phase;
     let m = sched.messages();
     let row_bytes = |rows: u64| rows * n_dense as u64 * crate::comm::SZ_DT;
     let to_msgs = |v: &[crate::hierarchy::StageMsg]| -> Vec<SimMsg> {
@@ -192,10 +201,10 @@ pub fn hier_comm_stages_sequential(
             .collect()
     };
     [
-        Stage::comm("seq: inter B fetch", to_msgs(&m.s1_inter_b)),
-        Stage::comm("seq: intra C aggregate", to_msgs(&m.s1_intra_c)),
-        Stage::comm("seq: inter C send", to_msgs(&m.s2_inter_c)),
-        Stage::comm("seq: intra B distribute", to_msgs(&m.s2_intra_b)),
+        Stage::comm(phase::S1_INTER_B, to_msgs(&m.s1_inter_b)),
+        Stage::comm(phase::S1_INTRA_C, to_msgs(&m.s1_intra_c)),
+        Stage::comm(phase::S2_INTER_C, to_msgs(&m.s2_inter_c)),
+        Stage::comm(phase::S2_INTRA_B, to_msgs(&m.s2_intra_b)),
     ]
 }
 

@@ -95,6 +95,34 @@ pub fn to_chrome_json(timings: &[MsgTiming], job: &SimJob) -> String {
     out
 }
 
+/// Render an executed pipeline run's per-rank phase log as chrome trace
+/// events. Phase names come from [`crate::hierarchy::phase`] — the same
+/// labels the simulated stages carry — so an executed trace and a
+/// simulated trace of the same schedule line up side by side in Perfetto.
+/// One row per rank: pid = rank, tid = 0.
+pub fn exec_to_chrome_json(stats: &crate::exec::ExecStats) -> String {
+    let mut out = String::from("[\n");
+    for (rank, r) in stats.per_rank.iter().enumerate() {
+        for p in &r.phases {
+            let _ = write!(
+                out,
+                "{{\"name\":\"{}\",\"cat\":\"exec\",\"ph\":\"X\",\
+                 \"ts\":{:.3},\"dur\":{:.3},\"pid\":{},\"tid\":0}},\n",
+                p.name,
+                p.start * 1e6,
+                (p.end - p.start) * 1e6,
+                rank,
+            );
+        }
+    }
+    if out.ends_with(",\n") {
+        out.truncate(out.len() - 2);
+        out.push('\n');
+    }
+    out.push(']');
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -152,6 +180,53 @@ mod tests {
         assert!(json.starts_with('['));
         assert!(json.ends_with(']'));
         assert_eq!(json.matches("\"ph\":\"X\"").count(), 3);
+    }
+
+    #[test]
+    fn exec_trace_shares_phase_names_with_sim() {
+        use crate::comm::{self, Strategy};
+        use crate::cover::Solver;
+        use crate::dense::Dense;
+        use crate::exec::kernel::NativeKernel;
+        use crate::partition::{split_1d, RowPartition};
+        use crate::sparse::gen;
+        use crate::util::rng::Rng;
+
+        let a = gen::rmat(128, 1800, (0.55, 0.2, 0.19), false, 21);
+        let part = RowPartition::balanced(128, 8);
+        let blocks = split_1d(&a, &part);
+        let plan = comm::plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None);
+        let topo = Topology::tsubame4(8);
+        let sched = crate::hierarchy::build(&plan, &topo);
+        let mut rng = Rng::new(9);
+        let b = Dense::random(128, 8, &mut rng);
+        let (_, stats) = crate::exec::run(
+            &part,
+            &plan,
+            &blocks,
+            Some(&sched),
+            &topo,
+            &b,
+            &NativeKernel,
+        );
+        let exec_json = exec_to_chrome_json(&stats);
+        assert!(exec_json.starts_with('[') && exec_json.ends_with(']'));
+        // The simulated stage names are composed from the same labels the
+        // executor logged — every executed Alg. 1 phase name must appear in
+        // one of the simulated stage titles.
+        let [s1, s2] = crate::sim::hier_comm_stages(&sched, 8);
+        let sim_names = format!("{} / {}", s1.name, s2.name);
+        use crate::hierarchy::phase;
+        for ph in [
+            phase::S1_INTER_B,
+            phase::S1_INTRA_C,
+            phase::S2_INTER_C,
+            phase::S2_INTRA_B,
+        ] {
+            if exec_json.contains(ph) {
+                assert!(sim_names.contains(ph), "{ph} missing from sim stages");
+            }
+        }
     }
 
     #[test]

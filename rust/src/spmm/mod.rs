@@ -83,10 +83,22 @@ impl DistSpmm {
         DistSpmm { part, blocks, plan, sched, topo, prep_secs }
     }
 
-    /// Execute for real on in-process ranks; returns global C and measured
-    /// traffic stats.
+    /// Execute for real on in-process ranks with the default overlapped
+    /// pipeline; returns global C and measured traffic stats.
     pub fn execute(&self, b: &Dense, kernel: &(dyn SpmmKernel + Sync)) -> (Dense, ExecStats) {
-        exec::run(
+        self.execute_with(b, kernel, &exec::ExecOpts::default())
+    }
+
+    /// [`DistSpmm::execute`] with explicit executor options (`--overlap
+    /// on|off`, tile height, worker cap). Results are bit-identical across
+    /// every option combination — only the schedule changes.
+    pub fn execute_with(
+        &self,
+        b: &Dense,
+        kernel: &(dyn SpmmKernel + Sync),
+        opts: &exec::ExecOpts,
+    ) -> (Dense, ExecStats) {
+        exec::run_with(
             &self.part,
             &self.plan,
             &self.blocks,
@@ -94,6 +106,7 @@ impl DistSpmm {
             &self.topo,
             b,
             kernel,
+            opts,
         )
     }
 
@@ -135,9 +148,14 @@ impl DistSpmm {
     }
 
     /// Build the simulation job (used by the figure benches at 128 ranks).
+    /// Stage names use the canonical [`crate::hierarchy::phase`] labels,
+    /// matching the executor's phase log ("compute: local" covers the
+    /// diagonal block plus the row-based remote partials; "compute:
+    /// remote" the column-based remote SpMMs plus aggregation).
     pub fn sim_job(&self, n_dense: usize) -> SimJob {
+        use crate::hierarchy::phase;
         let (pre, post) = self.compute_profile(n_dense);
-        let mut stages = vec![Stage::compute_only("compute: local + row-partials", pre)];
+        let mut stages = vec![Stage::compute_only(phase::COMPUTE_LOCAL, pre)];
         match &self.sched {
             None => stages.push(sim::flat_comm_stage(&self.plan, n_dense)),
             Some(s) => {
@@ -146,7 +164,7 @@ impl DistSpmm {
                 stages.push(s2);
             }
         }
-        stages.push(Stage::compute_only("compute: col-remote + aggregate", post));
+        stages.push(Stage::compute_only(phase::COMPUTE_REMOTE, post));
         SimJob { stages }
     }
 
@@ -233,6 +251,24 @@ mod tests {
         let b = Dense::random(128, 8, &mut rng);
         let (c, _) = d2.execute(&b, &NativeKernel);
         assert!(serial_reference(&a, &b).diff_norm(&c) < 1e-3);
+    }
+
+    #[test]
+    fn execute_with_options_bit_identical() {
+        let a = gen::rmat(128, 1500, (0.55, 0.2, 0.19), false, 15);
+        let d = DistSpmm::plan(
+            &a,
+            Strategy::Joint(Solver::Koenig),
+            Topology::tsubame4(8),
+            true,
+        );
+        let mut rng = Rng::new(7);
+        let b = Dense::random(128, 8, &mut rng);
+        let (c_on, _) = d.execute(&b, &NativeKernel);
+        let (c_off, off_stats) =
+            d.execute_with(&b, &NativeKernel, &crate::exec::ExecOpts::sequential());
+        assert_eq!(c_on.data, c_off.data, "overlap option changed the bits");
+        assert_eq!(off_stats.overlap_window().overlapped_bytes, 0);
     }
 
     #[test]

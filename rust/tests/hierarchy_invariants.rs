@@ -159,6 +159,63 @@ fn representative_assignment_is_deterministic() {
 }
 
 #[test]
+fn executed_pipeline_consumes_the_simulated_schedule() {
+    // The executor's per-rank programs and the simulator's staged message
+    // lists are folds of the same `phase_messages` stream: the message
+    // *count* and per-tier byte totals the executor measures must match
+    // what the schedule prescribes.
+    let (a, part, plan, topo) = setup(256, 16, 2);
+    let sched = hierarchy::build(&plan, &topo);
+    let n_dense = 8;
+    let bmat = Dense::from_fn(256, n_dense, |i, j| ((i * 3 + j * 5) % 7) as f32 - 3.0);
+    let blocks = split_1d(&a, &part);
+    let (_, stats) = shiro::exec::run(
+        &part,
+        &plan,
+        &blocks,
+        Some(&sched),
+        &topo,
+        &bmat,
+        &shiro::exec::kernel::NativeKernel,
+    );
+    // Sender- and receiver-side accounting agree per tier (the satellite
+    // fix: bytes used to be counted on the sender only, so rep forwarding
+    // could drift from the volume accounting).
+    assert_eq!(stats.total_inter_bytes(), stats.total_inter_recv_bytes());
+    assert_eq!(stats.total_intra_bytes(), stats.total_intra_recv_bytes());
+    // The measured volume matrix tells the same per-tier story.
+    let mv = stats.measured_volume();
+    assert_eq!(mv.inter_group_total(&topo.group_vec()), stats.total_inter_bytes());
+    assert_eq!(
+        mv.total(),
+        stats.total_inter_bytes() + stats.total_intra_bytes()
+    );
+    // Executed message count == schedule message count (every StageMsg is
+    // one real message; nothing extra crosses the wire).
+    let m = sched.messages();
+    let sched_msgs = (m.s1_inter_b.len() + m.s1_intra_c.len() + m.s2_inter_c.len()
+        + m.s2_intra_b.len()) as u64;
+    let sent: u64 = stats.per_rank.iter().map(|r| r.msgs_sent).sum();
+    let recv: u64 = stats.per_rank.iter().map(|r| r.msgs_recv).sum();
+    assert_eq!(sent, recv);
+    assert_eq!(sent, sched_msgs, "executor sent messages the schedule does not know");
+    // Payload rows dominate message bytes: dense payload bytes must equal
+    // the schedule's row accounting exactly (rows × N × sizeof(f32)); the
+    // wire adds 4 bytes per carried row index on top.
+    let sched_rows: u64 = [&m.s1_inter_b, &m.s1_intra_c, &m.s2_inter_c, &m.s2_intra_b]
+        .iter()
+        .flat_map(|v| v.iter())
+        .map(|x| x.rows)
+        .sum();
+    let measured = stats.total_inter_bytes() + stats.total_intra_bytes();
+    assert_eq!(
+        measured,
+        sched_rows * (n_dense as u64 * shiro::comm::SZ_DT + 4),
+        "measured bytes drifted from the schedule's volume accounting"
+    );
+}
+
+#[test]
 fn adaptive_plans_respect_the_same_invariants() {
     // The mixed-strategy plan feeds the identical hierarchy machinery.
     let a = int_matrix(256, 2500, 13);

@@ -7,7 +7,8 @@ use shiro::comm::Strategy;
 use shiro::cover::Solver;
 use shiro::dense::Dense;
 use shiro::exec::kernel::NativeKernel;
-use shiro::sparse::{datasets::DATASETS, gen, Coo};
+use shiro::exec::ExecOpts;
+use shiro::sparse::{datasets::DATASETS, gen, Coo, Csr};
 use shiro::spmm::DistSpmm;
 use shiro::topology::Topology;
 use shiro::util::rng::Rng;
@@ -125,6 +126,80 @@ fn hot_row_and_hot_column() {
     let vol = d.plan.total_volume(1) / 4;
     assert!(vol <= 4 * 8 * 8, "cover should collapse hot cross: {vol} rows");
     check(&d, &a, 8, "hot-cross");
+}
+
+/// Integer-valued random matrix: every product and partial sum stays well
+/// inside f32's exact-integer range, so float addition is associative on
+/// this input and the distributed result must match the serial reference
+/// *bitwise* for any schedule or interleaving.
+fn int_matrix(n: usize, nnz: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(n, n);
+    for _ in 0..nnz {
+        let r = rng.below(n);
+        let c = rng.below(n);
+        coo.push(r, c, (1 + rng.below(4)) as f32);
+    }
+    coo.to_csr()
+}
+
+#[test]
+fn pipeline_determinism_across_worker_threads() {
+    // Satellite: run the overlapped executor 8× across 1/2/4/8 worker
+    // threads — every run must be bit-identical to the serial reference
+    // (exact-integer input makes that a legitimate bitwise oracle).
+    let a = int_matrix(256, 2048, 42);
+    let b = Dense::from_fn(256, 8, |i, j| ((i * 7 + j * 3) % 9) as f32 - 4.0);
+    let want = a.spmm(&b);
+    for hier in [true, false] {
+        let d = DistSpmm::plan(
+            &a,
+            Strategy::Joint(Solver::Koenig),
+            Topology::tsubame4(8),
+            hier,
+        );
+        for workers in [1usize, 2, 4, 8] {
+            for rep in 0..2 {
+                let opts = ExecOpts { workers, ..ExecOpts::default() };
+                let (got, _) = d.execute_with(&b, &NativeKernel, &opts);
+                assert_eq!(
+                    got.data, want.data,
+                    "hier={hier} workers={workers} rep={rep}: bits differ from serial"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pipeline_determinism_on_arbitrary_floats() {
+    // On arbitrary float inputs the serial reference is not a bitwise
+    // oracle (different summation order), but the executor must agree with
+    // *itself*: any worker count, overlap mode, or tile height — same bits.
+    let a = gen::powerlaw(512, 6000, 1.4, 23);
+    let d = DistSpmm::plan(
+        &a,
+        Strategy::Joint(Solver::Koenig),
+        Topology::tsubame4(8),
+        true,
+    );
+    let mut rng = Rng::new(31);
+    let b = Dense::random(512, 16, &mut rng);
+    let (reference, _) = d.execute_with(&b, &NativeKernel, &ExecOpts::sequential());
+    for workers in [1usize, 2, 4, 8] {
+        for tile_rows in [0usize, 13] {
+            let opts = ExecOpts { overlap: true, workers, tile_rows };
+            let (got, _) = d.execute_with(&b, &NativeKernel, &opts);
+            assert_eq!(
+                got.data, reference.data,
+                "workers={workers} tile={tile_rows}: nondeterministic bits"
+            );
+        }
+    }
+    // And the answer is still right.
+    let want = a.spmm(&b);
+    let err = want.diff_norm(&reference) / (want.max_abs() as f64 + 1e-30);
+    assert!(err < 1e-3);
 }
 
 #[test]
