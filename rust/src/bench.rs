@@ -97,6 +97,22 @@ pub fn load_baseline(
     Ok(map)
 }
 
+/// Integer-exact random matrix (values 1..=4): every product and partial
+/// sum stays well inside f32's exact-integer range, so float addition is
+/// associative on it and the serial reference is a legitimate *bitwise*
+/// oracle. Shared by the determinism test suites and the bitwise bench
+/// gates — one definition, one validity argument.
+pub fn int_matrix(n: usize, nnz: usize, seed: u64) -> crate::sparse::Csr {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let mut coo = crate::sparse::Coo::new(n, n);
+    for _ in 0..nnz {
+        let r = rng.below(n);
+        let c = rng.below(n);
+        coo.push(r, c, (1 + rng.below(4)) as f32);
+    }
+    coo.to_csr()
+}
+
 /// Bench-scale defaults: small enough for minutes-long runs, large enough
 /// to sit in the bandwidth-dominated regime the paper evaluates.
 pub const BENCH_SCALE: f64 = 0.02;

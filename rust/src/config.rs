@@ -2,7 +2,7 @@
 //! `shiro` binary and the bench harness.
 
 use crate::comm::Strategy;
-use crate::partition::{split_1d, LocalBlocks, RowPartition};
+use crate::partition::{split_1d, LocalBlocks, Partitioner, RowPartition};
 use crate::sparse::{dataset_by_name, Csr};
 use crate::topology::Topology;
 use crate::util::cli::Args;
@@ -20,6 +20,9 @@ pub struct RunConfig {
     /// Communication strategy name (see [`Strategy::by_name`]):
     /// block | column | row | joint | joint-weighted | joint-greedy | adaptive.
     pub strategy: String,
+    /// Row-partitioner name (see [`Partitioner::by_name`]):
+    /// balanced | nnz-balanced | cost-refined.
+    pub partitioner: String,
     /// Executor scheduling: `true` = overlapped pipeline (Alg. 1, the
     /// default), `false` = strictly phase-ordered (`--overlap off`).
     pub overlap: bool,
@@ -35,6 +38,7 @@ impl Default for RunConfig {
             topo: "tsubame4".into(),
             epochs: 50,
             strategy: "joint".into(),
+            partitioner: "balanced".into(),
             overlap: true,
         }
     }
@@ -78,6 +82,9 @@ impl RunConfig {
         if let Some(s) = args.get("strategy") {
             cfg.strategy = s.to_string();
         }
+        if let Some(p) = args.get("partitioner") {
+            cfg.partitioner = p.to_string();
+        }
         if let Some(o) = args.get("overlap") {
             cfg.overlap = parse_overlap(o);
         }
@@ -92,6 +99,7 @@ impl RunConfig {
         self.topo = file.str_or("run.topo", &self.topo);
         self.epochs = file.int_or("run.epochs", self.epochs as i64) as usize;
         self.strategy = file.str_or("run.strategy", &self.strategy);
+        self.partitioner = file.str_or("run.partitioner", &self.partitioner);
         // `run.overlap` accepts both the idiomatic TOML bool and the CLI's
         // "on"/"off" string form.
         if let Some(v) = file.get("run.overlap") {
@@ -118,6 +126,17 @@ impl RunConfig {
         })
     }
 
+    /// Resolve the configured partitioner name.
+    pub fn partitioner(&self) -> Partitioner {
+        Partitioner::by_name(&self.partitioner).unwrap_or_else(|| {
+            eprintln!(
+                "unknown partitioner {:?} (balanced | nnz-balanced | cost-refined)",
+                self.partitioner
+            );
+            std::process::exit(2);
+        })
+    }
+
     /// Generate the configured dataset matrix.
     pub fn matrix(&self) -> Csr {
         match dataset_by_name(&self.dataset) {
@@ -136,8 +155,12 @@ impl RunConfig {
         })
     }
 
+    /// Partition `a` with the configured [`Partitioner`] and split it into
+    /// per-rank blocks.
     pub fn split(&self, a: &Csr) -> (RowPartition, Vec<LocalBlocks>) {
-        let part = RowPartition::balanced(a.nrows, self.ranks);
+        let part = self
+            .partitioner()
+            .partition(a, self.ranks, &self.topology(), self.n_dense);
         let blocks = split_1d(a, &part);
         (part, blocks)
     }
@@ -228,6 +251,48 @@ mod tests {
     fn topology_resolution() {
         let cfg = RunConfig { topo: "aurora".into(), ranks: 24, ..Default::default() };
         assert_eq!(cfg.topology().name, "aurora");
+    }
+
+    #[test]
+    fn partitioner_flag_and_file() {
+        let cfg = RunConfig::from_args(&args(&["run", "--partitioner", "nnz-balanced"]));
+        assert_eq!(cfg.partitioner(), Partitioner::NnzBalanced);
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.partitioner(), Partitioner::Balanced);
+
+        let dir = std::env::temp_dir().join("shiro_cfg_partitioner_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("run.toml");
+        std::fs::write(&p, "[run]\npartitioner = \"cost-refined\"\n").unwrap();
+        let cfg = RunConfig::from_args(&args(&["run", "--config", p.to_str().unwrap()]));
+        assert_eq!(cfg.partitioner(), Partitioner::CostRefined);
+        // CLI wins over the file.
+        let cfg = RunConfig::from_args(&args(&[
+            "run",
+            "--config",
+            p.to_str().unwrap(),
+            "--partitioner",
+            "balanced",
+        ]));
+        assert_eq!(cfg.partitioner(), Partitioner::Balanced);
+    }
+
+    #[test]
+    fn split_respects_partitioner() {
+        use crate::sparse::gen;
+        let a = gen::rmat(256, 4000, (0.6, 0.18, 0.18), false, 5);
+        let mut bal_cfg = RunConfig { ranks: 8, scale: 0.01, ..Default::default() };
+        let (bal, blocks) = bal_cfg.split(&a);
+        assert_eq!(blocks.len(), 8);
+        assert_eq!(bal.starts, RowPartition::balanced(256, 8).starts);
+        bal_cfg.partitioner = "nnz-balanced".into();
+        let (nnz, blocks) = bal_cfg.split(&a);
+        assert_eq!(blocks.len(), 8);
+        assert_ne!(nnz.starts, bal.starts);
+        assert!(
+            crate::partition::max_rank_nnz(&a, &nnz)
+                <= crate::partition::max_rank_nnz(&a, &bal)
+        );
     }
 
     #[test]

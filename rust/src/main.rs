@@ -10,6 +10,7 @@
 //!
 //! Global flags: --n <dense cols> --scale <dataset scale> --topo <name>
 //! --strategy <block|column|row|joint|joint-weighted|joint-greedy|adaptive>
+//! --partitioner <balanced|nnz-balanced|cost-refined> (row-boundary choice)
 //! --overlap <on|off> (overlapped executor pipeline vs phase-ordered)
 //! --config <file.toml> (CLI overrides config values).
 //! `trace` accepts --exec to emit the executed pipeline's chrome trace
@@ -36,7 +37,7 @@ fn main() {
             eprintln!(
                 "usage: shiro <datasets|plan|run|sim|gnn|trace|info> \
                  [--dataset D] [--ranks R] [--n N] [--scale S] [--topo T] \
-                 [--strategy S] [--overlap on|off] [--config F]"
+                 [--strategy S] [--partitioner P] [--overlap on|off] [--config F]"
             );
             std::process::exit(if cmd == "help" { 0 } else { 2 });
         }
@@ -73,6 +74,13 @@ fn cmd_plan(cfg: &RunConfig) {
     println!(
         "{}: {}x{} nnz={} on {} ranks, N={}",
         cfg.dataset, a.nrows, a.ncols, a.nnz(), cfg.ranks, cfg.n_dense
+    );
+    let loads = shiro::partition::rank_nnz(&a, &part);
+    println!(
+        "partition [{}]: max-rank nnz {}, load imbalance {:.2}x",
+        cfg.partitioner().name(),
+        loads.iter().copied().max().unwrap_or(0),
+        shiro::metrics::load_imbalance(&loads)
     );
     let mut t = Table::new(&["strategy", "total bytes", "vs column %", "prep ms"]);
     let mut col = 0u64;
@@ -133,7 +141,15 @@ fn cmd_run(cfg: &RunConfig) {
     let a = cfg.matrix();
     let topo = cfg.topology();
     let params = shiro::plan::PlanParams { n_dense: cfg.n_dense, ..Default::default() };
-    let d = DistSpmm::plan_with_params(&a, cfg.strategy(), topo, true, &params);
+    let d =
+        DistSpmm::plan_partitioned(&a, cfg.strategy(), topo, true, &params, cfg.partitioner());
+    let loads = shiro::partition::rank_nnz(&a, &d.part);
+    println!(
+        "partition [{}]: max-rank nnz {}, load imbalance {:.2}x",
+        cfg.partitioner().name(),
+        loads.iter().copied().max().unwrap_or(0),
+        shiro::metrics::load_imbalance(&loads)
+    );
     let mut rng = Rng::new(1);
     let b = Dense::random(a.nrows, cfg.n_dense, &mut rng);
     let (c, stats) = d.execute_with(&b, &NativeKernel, &cfg.exec_opts());
@@ -220,7 +236,17 @@ fn cmd_trace(cfg: &RunConfig, args: &Args) {
     use shiro::sim::trace::{exec_to_chrome_json, to_chrome_json, trace};
     use shiro::spmm::DistSpmm;
     let a = cfg.matrix();
-    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), cfg.topology(), true);
+    // Same partitioner as `shiro run` so the simulated/executed traces
+    // describe the boundaries the configured run actually uses.
+    let params = shiro::plan::PlanParams { n_dense: cfg.n_dense, ..Default::default() };
+    let d = DistSpmm::plan_partitioned(
+        &a,
+        Strategy::Joint(Solver::Koenig),
+        cfg.topology(),
+        true,
+        &params,
+        cfg.partitioner(),
+    );
     let job = d.sim_job(cfg.n_dense);
     let timings = trace(&job, &d.topo);
     let json = to_chrome_json(&timings, &job);

@@ -162,6 +162,23 @@ impl OverlapWindow {
     }
 }
 
+/// Load-imbalance factor of a per-rank load vector: max/mean (1.0 =
+/// perfectly balanced). Used with [`crate::partition::rank_nnz`] to score
+/// partitioners — the overlapped executor's wall clock tracks the max,
+/// throughput the mean, so this factor is the straggler overhead.
+pub fn load_imbalance(loads: &[u64]) -> f64 {
+    if loads.is_empty() {
+        return 1.0;
+    }
+    let max = loads.iter().copied().max().unwrap_or(0) as f64;
+    let mean = loads.iter().sum::<u64>() as f64 / loads.len() as f64;
+    if mean == 0.0 {
+        1.0
+    } else {
+        max / mean
+    }
+}
+
 /// Percent reduction from `base` to `opt` (Fig. 8 bars).
 pub fn reduction_pct(base: u64, opt: u64) -> f64 {
     if base == 0 {
@@ -260,6 +277,15 @@ mod tests {
         assert_eq!(w.total_bytes(), 100);
         assert!((w.overlapped_fraction() - 0.75).abs() < 1e-12);
         assert_eq!(OverlapWindow::default().overlapped_fraction(), 0.0);
+    }
+
+    #[test]
+    fn load_imbalance_factor() {
+        assert_eq!(load_imbalance(&[]), 1.0);
+        assert_eq!(load_imbalance(&[0, 0, 0]), 1.0);
+        assert!((load_imbalance(&[5, 5, 5, 5]) - 1.0).abs() < 1e-12);
+        // One rank with everything over 4 ranks: max/mean = 4.
+        assert!((load_imbalance(&[12, 0, 0, 0]) - 4.0).abs() < 1e-12);
     }
 
     #[test]

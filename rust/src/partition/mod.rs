@@ -1,11 +1,18 @@
 //! Matrix partitioning: 1D row partition (SHIRO's setting, paper §2.2) plus
-//! the 1.5D and 2D layouts needed by the CAGNET/SPA/BCL baselines.
+//! the 1.5D and 2D layouts needed by the CAGNET/SPA/BCL baselines, and the
+//! load-aware [`Partitioner`] subsystem that chooses *where* the row
+//! boundaries fall before the cover/plan machinery decides *how* the
+//! resulting remote nonzeros are served (DESIGN.md §7).
 
 use crate::sparse::Csr;
+use crate::topology::Topology;
 
 /// A 1D row partition of an n-row matrix over `nparts` processes:
-/// contiguous, balanced row ranges.
-#[derive(Clone, Debug)]
+/// contiguous row ranges. Ranges need **not** be uniform — every consumer
+/// (`comm`, `plan`, `hierarchy`, `exec`, `sim`) indexes through
+/// [`RowPartition::range`]/[`RowPartition::len`], so arbitrary boundaries
+/// (including empty ranks) flow through the whole stack unchanged.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct RowPartition {
     pub n: usize,
     pub nparts: usize,
@@ -27,6 +34,57 @@ impl RowPartition {
             starts.push(acc);
         }
         RowPartition { n, nparts, starts }
+    }
+
+    /// Arbitrary contiguous partition from explicit boundaries:
+    /// `starts[p]..starts[p+1]` is rank p's row range, `starts[0]` must be
+    /// 0 and the sequence non-decreasing (equal consecutive entries are
+    /// zero-row ranks). The final entry defines `n`.
+    pub fn from_starts(starts: Vec<usize>) -> RowPartition {
+        assert!(starts.len() >= 2, "need at least one part");
+        assert_eq!(starts[0], 0, "starts must begin at 0");
+        assert!(
+            starts.windows(2).all(|w| w[0] <= w[1]),
+            "starts must be non-decreasing: {starts:?}"
+        );
+        let n = *starts.last().unwrap();
+        RowPartition { n, nparts: starts.len() - 1, starts }
+    }
+
+    /// Load-aware contiguous partition: split on the prefix sum of row
+    /// nonzero counts (`a.indptr`) so every rank owns ≈ nnz/nparts
+    /// nonzeros, whatever the row-count skew. Each boundary is the row
+    /// whose prefix is closest to the ideal target `p·nnz/nparts`
+    /// (never crossing the previous boundary), so a single huge row ends
+    /// up alone on a rank and the tail ranks may be empty. Falls back to
+    /// [`RowPartition::balanced`] on an all-zero matrix.
+    pub fn nnz_balanced(a: &Csr, nparts: usize) -> RowPartition {
+        assert!(nparts > 0);
+        let n = a.nrows;
+        let total = a.nnz() as u64;
+        if total == 0 {
+            return RowPartition::balanced(n, nparts);
+        }
+        let mut starts = Vec::with_capacity(nparts + 1);
+        starts.push(0usize);
+        for p in 1..nparts {
+            let target = p as u64 * total / nparts as u64;
+            // First row boundary whose prefix reaches the target…
+            let hi = a.indptr.partition_point(|&x| x < target).min(n);
+            // …or the one just before it, whichever lands closer.
+            let prev = *starts.last().unwrap();
+            let lo = hi.saturating_sub(1);
+            let pick = if lo >= prev
+                && target - a.indptr[lo].min(target) < a.indptr[hi] - target
+            {
+                lo
+            } else {
+                hi
+            };
+            starts.push(pick.max(prev));
+        }
+        starts.push(n);
+        RowPartition::from_starts(starts)
     }
 
     #[inline]
@@ -59,6 +117,140 @@ impl RowPartition {
     pub fn to_global(&self, p: usize, local: usize) -> usize {
         self.starts[p] + local
     }
+}
+
+/// Per-rank nonzero loads under a partition (straight off `a.indptr`).
+/// The max/mean of this vector is the load-imbalance factor reported by
+/// [`crate::metrics::load_imbalance`] and the `ablation_partition` bench.
+pub fn rank_nnz(a: &Csr, part: &RowPartition) -> Vec<u64> {
+    assert_eq!(a.nrows, part.n);
+    (0..part.nparts)
+        .map(|p| a.indptr[part.starts[p + 1]] - a.indptr[part.starts[p]])
+        .collect()
+}
+
+/// Maximum nonzeros owned by any single rank — the straggler bound the
+/// load-aware partitioners minimize (the overlapped executor finishes no
+/// earlier than its heaviest rank's compute).
+pub fn max_rank_nnz(a: &Csr, part: &RowPartition) -> u64 {
+    rank_nnz(a, part).into_iter().max().unwrap_or(0)
+}
+
+/// How the 1D row boundaries are chosen. Partitioning decides *which*
+/// nonzeros are remote; the cover/plan machinery then decides *how* the
+/// remote ones are served — the two compose (§8.1's reordering argument).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Partitioner {
+    /// Equal row counts per rank (the seed behavior).
+    Balanced,
+    /// Prefix-sum splitting on row nnz: equal nonzeros per rank.
+    NnzBalanced,
+    /// Start from [`Partitioner::NnzBalanced`], then greedily shift
+    /// boundaries to minimize the α-β cost of the resulting joint plan
+    /// plus a max-rank compute term (see [`refine_objective`]).
+    CostRefined,
+}
+
+impl Partitioner {
+    pub const ALL: [Partitioner; 3] =
+        [Partitioner::Balanced, Partitioner::NnzBalanced, Partitioner::CostRefined];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Partitioner::Balanced => "balanced",
+            Partitioner::NnzBalanced => "nnz-balanced",
+            Partitioner::CostRefined => "cost-refined",
+        }
+    }
+
+    /// Inverse of [`Partitioner::name`] for config/CLI parsing.
+    pub fn by_name(name: &str) -> Option<Partitioner> {
+        match name {
+            "balanced" => Some(Partitioner::Balanced),
+            "nnz-balanced" | "nnz" => Some(Partitioner::NnzBalanced),
+            "cost-refined" | "cost" => Some(Partitioner::CostRefined),
+            _ => None,
+        }
+    }
+
+    /// Compute the row partition of `a` over `nparts` ranks. `topo` and
+    /// `n_dense` parameterize the cost model and are only read by
+    /// [`Partitioner::CostRefined`].
+    pub fn partition(
+        &self,
+        a: &Csr,
+        nparts: usize,
+        topo: &Topology,
+        n_dense: usize,
+    ) -> RowPartition {
+        match self {
+            Partitioner::Balanced => RowPartition::balanced(a.nrows, nparts),
+            Partitioner::NnzBalanced => RowPartition::nnz_balanced(a, nparts),
+            Partitioner::CostRefined => cost_refined(a, nparts, topo, n_dense),
+        }
+    }
+}
+
+/// The objective [`Partitioner::CostRefined`] minimizes: the modeled α-β
+/// cost of the joint (König) plan induced by the partition, plus the
+/// heaviest rank's local-SpMM compute time (`2·max_nnz·N / compute_rate`)
+/// — the straggler term the pipeline stalls on.
+pub fn refine_objective(
+    a: &Csr,
+    part: &RowPartition,
+    topo: &Topology,
+    n_dense: usize,
+) -> f64 {
+    let blocks = split_1d(a, part);
+    let plan = crate::comm::plan(
+        &blocks,
+        part,
+        crate::comm::Strategy::Joint(crate::cover::Solver::Koenig),
+        None,
+    );
+    let comm = crate::plan::modeled_cost(&plan, topo, n_dense);
+    let max_nnz = max_rank_nnz(a, part) as f64;
+    comm + 2.0 * max_nnz * n_dense as f64 / topo.compute_rate
+}
+
+/// Greedy boundary refinement: starting from the nnz-balanced split, try
+/// shifting each interior boundary by ±step rows (step halves every pass),
+/// accepting a move only when [`refine_objective`] strictly decreases —
+/// deterministic, and by construction never worse than nnz-balanced under
+/// the objective.
+fn cost_refined(a: &Csr, nparts: usize, topo: &Topology, n_dense: usize) -> RowPartition {
+    let mut part = RowPartition::nnz_balanced(a, nparts);
+    if nparts < 2 || a.nrows == 0 {
+        return part;
+    }
+    let mut best = refine_objective(a, &part, topo, n_dense);
+    let mut step = (a.nrows / (8 * nparts)).max(1);
+    for _pass in 0..3 {
+        for b in 1..nparts {
+            for dir in [-1i64, 1] {
+                let cur = part.starts[b] as i64;
+                let lo = part.starts[b - 1] as i64;
+                let hi = part.starts[b + 1] as i64;
+                let cand = (cur + dir * step as i64).clamp(lo, hi);
+                if cand == cur {
+                    continue;
+                }
+                let mut starts = part.starts.clone();
+                starts[b] = cand as usize;
+                let cand_part = RowPartition::from_starts(starts);
+                let obj = refine_objective(a, &cand_part, topo, n_dense);
+                if obj < best {
+                    best = obj;
+                    part = cand_part;
+                }
+            }
+        }
+        if step == 1 {
+            break;
+        }
+        step /= 2;
+    }
+    part
 }
 
 /// Process p's view of the 1D-partitioned sparse matrix: its diagonal block
@@ -211,6 +403,107 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn from_starts_roundtrip_with_empty_parts() {
+        let p = RowPartition::from_starts(vec![0, 0, 4, 4, 8]);
+        assert_eq!(p.n, 8);
+        assert_eq!(p.nparts, 4);
+        assert_eq!(p.len(0), 0);
+        assert_eq!(p.len(1), 4);
+        assert_eq!(p.len(2), 0);
+        assert_eq!(p.len(3), 4);
+        for r in 0..8 {
+            let (owner, local) = p.to_local(r);
+            assert!(p.len(owner) > 0, "row {r} assigned to empty part {owner}");
+            assert_eq!(p.to_global(owner, local), r);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-decreasing")]
+    fn from_starts_rejects_decreasing() {
+        let _ = RowPartition::from_starts(vec![0, 5, 3, 8]);
+    }
+
+    #[test]
+    fn nnz_balanced_conserves_and_reduces_straggler() {
+        // rmat with a strong top-left bias concentrates nnz in low row
+        // indices — equal row counts are maximally unfair here.
+        let a = gen::rmat(256, 4000, (0.6, 0.18, 0.18), false, 11);
+        for nparts in [2usize, 4, 8, 16] {
+            let bal = RowPartition::balanced(a.nrows, nparts);
+            let nnz = RowPartition::nnz_balanced(&a, nparts);
+            assert_eq!(*nnz.starts.last().unwrap(), a.nrows);
+            assert_eq!(rank_nnz(&a, &nnz).iter().sum::<u64>(), a.nnz() as u64);
+            assert!(
+                max_rank_nnz(&a, &nnz) <= max_rank_nnz(&a, &bal),
+                "nparts={nparts}: nnz-balanced {} > balanced {}",
+                max_rank_nnz(&a, &nnz),
+                max_rank_nnz(&a, &bal)
+            );
+        }
+        // And the skew is actually large enough for a strict win at 8.
+        let bal = RowPartition::balanced(a.nrows, 8);
+        let nnz = RowPartition::nnz_balanced(&a, 8);
+        assert!(max_rank_nnz(&a, &nnz) < max_rank_nnz(&a, &bal));
+    }
+
+    #[test]
+    fn nnz_balanced_handles_degenerate_inputs() {
+        // All-zero matrix falls back to balanced.
+        let z = Csr::zeros(16, 16);
+        assert_eq!(
+            RowPartition::nnz_balanced(&z, 4).starts,
+            RowPartition::balanced(16, 4).starts
+        );
+        // One hot row owning every nonzero: some ranks must be empty and
+        // nothing is lost.
+        let mut coo = crate::sparse::Coo::new(32, 32);
+        for c in 0..32 {
+            coo.push(5, c, 1.0);
+        }
+        let a = coo.to_csr();
+        let p = RowPartition::nnz_balanced(&a, 4);
+        assert_eq!(rank_nnz(&a, &p).iter().sum::<u64>(), 32);
+        assert_eq!(max_rank_nnz(&a, &p), 32, "one row cannot be split");
+        // More parts than rows.
+        let small = gen::erdos_renyi(4, 4, 8, 1);
+        let p = RowPartition::nnz_balanced(&small, 9);
+        assert_eq!(p.nparts, 9);
+        assert_eq!(*p.starts.last().unwrap(), 4);
+        assert_eq!(rank_nnz(&small, &p).iter().sum::<u64>(), small.nnz() as u64);
+    }
+
+    #[test]
+    fn cost_refined_never_worse_than_nnz_balanced_objective() {
+        let a = gen::powerlaw(128, 1500, 1.4, 7);
+        let topo = crate::topology::Topology::tsubame4(8);
+        let nnz = RowPartition::nnz_balanced(&a, 8);
+        let refined = Partitioner::CostRefined.partition(&a, 8, &topo, 32);
+        assert_eq!(*refined.starts.last().unwrap(), a.nrows);
+        assert!(
+            refine_objective(&a, &refined, &topo, 32)
+                <= refine_objective(&a, &nnz, &topo, 32) + 1e-15
+        );
+    }
+
+    #[test]
+    fn partitioner_names_roundtrip() {
+        for p in Partitioner::ALL {
+            assert_eq!(Partitioner::by_name(p.name()), Some(p));
+        }
+        assert_eq!(Partitioner::by_name("nnz"), Some(Partitioner::NnzBalanced));
+        assert_eq!(Partitioner::by_name("cost"), Some(Partitioner::CostRefined));
+        assert_eq!(Partitioner::by_name("nope"), None);
+        // Balanced partitioner reproduces the seed constructor exactly.
+        let a = gen::rmat(64, 600, (0.5, 0.2, 0.2), false, 2);
+        let topo = crate::topology::Topology::tsubame4(4);
+        assert_eq!(
+            Partitioner::Balanced.partition(&a, 4, &topo, 32).starts,
+            RowPartition::balanced(64, 4).starts
+        );
     }
 
     #[test]

@@ -58,7 +58,12 @@ fn hash_csr(h: &mut Fnv, m: &Csr) {
 
 /// Fingerprint of everything the adaptive compiler reads: the partitioned
 /// off-diagonal blocks, the partition boundaries, the topology's cost
-/// parameters, and the planning N.
+/// parameters, and the planning N. The boundaries (`part.starts`) are
+/// hashed explicitly: two partitioners can induce structurally similar
+/// blocks over different row ranges, and a plan compiled for one set of
+/// boundaries embeds block heights the executor trusts — returning it for
+/// another partition would be stale (regression-tested in
+/// `partition_boundaries_key_the_cache`).
 pub fn pattern_key(
     blocks: &[LocalBlocks],
     part: &RowPartition,
@@ -438,6 +443,35 @@ mod tests {
         assert!(!hit, "corrupt entry must not count as a hit");
         // The recompiled plan atomically replaced the corrupt file.
         assert!(load_plan(&path, Some(key)).is_ok());
+    }
+
+    #[test]
+    fn partition_boundaries_key_the_cache() {
+        // Satellite regression (PR 3): switching partitioners on the same
+        // matrix must miss the cache, never return the stale Balanced plan.
+        let a = gen::rmat(256, 4000, (0.6, 0.18, 0.18), false, 9);
+        let topo = Topology::tsubame4(8);
+        let params = PlanParams::default();
+        let bal = RowPartition::balanced(256, 8);
+        let nnz = RowPartition::nnz_balanced(&a, 8);
+        assert_ne!(bal.starts, nnz.starts, "partitions must differ for this test");
+        let bal_blocks = split_1d(&a, &bal);
+        let nnz_blocks = split_1d(&a, &nnz);
+        assert_ne!(
+            pattern_key(&bal_blocks, &bal, &topo, &params),
+            pattern_key(&nnz_blocks, &nnz, &topo, &params),
+            "boundary change must change the fingerprint"
+        );
+        let mut cache = PlanCache::in_memory();
+        let (bal_plan, hit) = cache.get_or_compile(&bal_blocks, &bal, &topo, &params);
+        assert!(!hit);
+        let (nnz_plan, hit) = cache.get_or_compile(&nnz_blocks, &nnz, &topo, &params);
+        assert!(!hit, "NnzBalanced lookup must miss a Balanced-keyed cache");
+        assert_eq!((cache.hits, cache.misses), (0, 2));
+        // Each cached plan carries its own partition's block heights.
+        let rows = |p: &RowPartition| (0..p.nparts).map(|i| p.len(i)).collect::<Vec<_>>();
+        assert_eq!(bal_plan.block_rows, rows(&bal));
+        assert_eq!(nnz_plan.block_rows, rows(&nnz));
     }
 
     #[test]

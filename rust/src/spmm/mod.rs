@@ -6,7 +6,7 @@ use crate::comm::{self, CommPlan, Strategy};
 use crate::dense::Dense;
 use crate::exec::{self, kernel::SpmmKernel, ExecStats};
 use crate::hierarchy::{self, HierSchedule};
-use crate::partition::{split_1d, LocalBlocks, RowPartition};
+use crate::partition::{split_1d, LocalBlocks, Partitioner, RowPartition};
 use crate::sim::{self, SimJob, SimReport, Stage};
 use crate::sparse::Csr;
 use crate::topology::Topology;
@@ -45,6 +45,8 @@ impl DistSpmm {
 
     /// [`DistSpmm::plan`] with explicit planner knobs (adaptive planning
     /// N, thread cap). `params` only affects [`Strategy::Adaptive`].
+    /// Rows are split with the seed's equal-row-count partitioner; use
+    /// [`DistSpmm::plan_partitioned`] for load-aware boundaries.
     pub fn plan_with_params(
         a: &Csr,
         strategy: Strategy,
@@ -52,9 +54,25 @@ impl DistSpmm {
         hierarchical: bool,
         params: &crate::plan::PlanParams,
     ) -> DistSpmm {
-        let part = RowPartition::balanced(a.nrows, topo.nranks);
-        let blocks = split_1d(a, &part);
+        Self::plan_partitioned(a, strategy, topo, hierarchical, params, Partitioner::Balanced)
+    }
+
+    /// [`DistSpmm::plan_with_params`] with an explicit [`Partitioner`]:
+    /// the partitioner chooses the row boundaries (which nonzeros are
+    /// remote), then the strategy plans how the remote ones are served.
+    /// `prep_secs` covers both steps — partition search is part of the
+    /// one-time offline preprocessing.
+    pub fn plan_partitioned(
+        a: &Csr,
+        strategy: Strategy,
+        topo: Topology,
+        hierarchical: bool,
+        params: &crate::plan::PlanParams,
+        partitioner: Partitioner,
+    ) -> DistSpmm {
         let t0 = std::time::Instant::now();
+        let part = partitioner.partition(a, topo.nranks, &topo, params.n_dense);
+        let blocks = split_1d(a, &part);
         let plan = match strategy {
             Strategy::Adaptive => crate::plan::compile(&blocks, &part, &topo, params).plan,
             _ => comm::plan(&blocks, &part, strategy, None),
@@ -269,6 +287,57 @@ mod tests {
             d.execute_with(&b, &NativeKernel, &crate::exec::ExecOpts::sequential());
         assert_eq!(c_on.data, c_off.data, "overlap option changed the bits");
         assert_eq!(off_stats.overlap_window().overlapped_bytes, 0);
+    }
+
+    #[test]
+    fn plan_partitioned_exact_for_every_partitioner() {
+        // rmat's top-left bias makes equal-row partitions unfair; every
+        // partitioner must still produce the exact answer through the
+        // whole plan → hierarchy → exec → sim stack.
+        let a = gen::rmat(256, 3000, (0.6, 0.18, 0.18), false, 21);
+        let mut rng = Rng::new(9);
+        let b = Dense::random(256, 8, &mut rng);
+        let want = serial_reference(&a, &b);
+        for partitioner in crate::partition::Partitioner::ALL {
+            let d = DistSpmm::plan_partitioned(
+                &a,
+                Strategy::Joint(Solver::Koenig),
+                Topology::tsubame4(8),
+                true,
+                &crate::plan::PlanParams::default(),
+                partitioner,
+            );
+            assert_eq!(d.part.nparts, 8);
+            let (c, _) = d.execute(&b, &NativeKernel);
+            assert!(
+                want.diff_norm(&c) < 1e-3,
+                "{} produced a wrong result",
+                partitioner.name()
+            );
+            assert!(d.simulate(8).total > 0.0, "{} sim failed", partitioner.name());
+        }
+        // The load-aware splits actually change the boundaries here.
+        let bal = DistSpmm::plan_partitioned(
+            &a,
+            Strategy::Joint(Solver::Koenig),
+            Topology::tsubame4(8),
+            false,
+            &crate::plan::PlanParams::default(),
+            crate::partition::Partitioner::Balanced,
+        );
+        let nnz = DistSpmm::plan_partitioned(
+            &a,
+            Strategy::Joint(Solver::Koenig),
+            Topology::tsubame4(8),
+            false,
+            &crate::plan::PlanParams::default(),
+            crate::partition::Partitioner::NnzBalanced,
+        );
+        assert_ne!(bal.part.starts, nnz.part.starts);
+        assert!(
+            crate::partition::max_rank_nnz(&a, &nnz.part)
+                <= crate::partition::max_rank_nnz(&a, &bal.part)
+        );
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! Edge-case integration tests: degenerate topologies, extreme shapes,
 //! and config-file round trips.
 
-use shiro::comm::Strategy;
+use shiro::comm::{self, Strategy};
 use shiro::cover::Solver;
 use shiro::dense::Dense;
-use shiro::exec::kernel::NativeKernel;
+use shiro::exec::{self, kernel::NativeKernel};
+use shiro::hierarchy;
+use shiro::partition::{split_1d, Partitioner, RowPartition};
 use shiro::sparse::gen;
 use shiro::spmm::DistSpmm;
 use shiro::topology::Topology;
@@ -84,6 +86,80 @@ fn fully_dense_block_matrix() {
     verify(&d, &a, 8);
 }
 
+/// Run a plan end-to-end on an explicit (possibly degenerate) partition,
+/// flat and hierarchical, and verify against the serial reference.
+fn verify_partition(a: &shiro::sparse::Csr, part: &RowPartition, ranks: usize) {
+    let blocks = split_1d(a, part);
+    let plan = comm::plan(&blocks, part, Strategy::Joint(Solver::Koenig), None);
+    let topo = Topology::tsubame4(ranks);
+    let mut rng = Rng::new(13);
+    let b = Dense::random(a.nrows, 4, &mut rng);
+    let want = a.spmm(&b);
+    for sched in [None, Some(hierarchy::build(&plan, &topo))] {
+        let (got, _) = exec::run(part, &plan, &blocks, sched.as_ref(), &topo, &b, &NativeKernel);
+        let err = want.diff_norm(&got) / (want.max_abs() as f64 + 1e-30);
+        assert!(err < 1e-3, "starts {:?}: rel err {err}", part.starts);
+    }
+}
+
+#[test]
+fn partition_with_zero_row_ranks() {
+    // Explicit empty ranks (including rank 0 and the last rank): the
+    // executor must neither hang waiting on them nor panic on zero-height
+    // blocks.
+    let a = gen::rmat(64, 800, (0.55, 0.2, 0.19), false, 17);
+    let part = RowPartition::from_starts(vec![0, 0, 20, 20, 20, 45, 64, 64, 64]);
+    assert_eq!(part.nparts, 8);
+    verify_partition(&a, &part, 8);
+}
+
+#[test]
+fn partition_more_ranks_than_rows() {
+    // 12 ranks over an 8-row matrix: every partitioner must yield a valid
+    // 12-part split (with empty ranks) that executes exactly.
+    let a = gen::erdos_renyi(8, 8, 40, 19);
+    let topo = Topology::tsubame4(12);
+    for partitioner in Partitioner::ALL {
+        let part = partitioner.partition(&a, 12, &topo, 4);
+        assert_eq!(part.nparts, 12);
+        verify_partition(&a, &part, 12);
+    }
+}
+
+#[test]
+fn partition_single_row_blocks() {
+    // One row per rank — the minimum non-empty block height everywhere.
+    let a = gen::erdos_renyi(8, 8, 30, 23);
+    let part = RowPartition::from_starts((0..=8).collect());
+    assert_eq!(part.nparts, 8);
+    assert!((0..8).all(|p| part.len(p) == 1));
+    verify_partition(&a, &part, 8);
+}
+
+#[test]
+fn all_nnz_in_one_rank() {
+    // Every nonzero is concentrated in four hot rows, so one rank owns all
+    // the compute: the others only serve B rows (or nothing at all) and
+    // the executor must still terminate without hanging on ranks that
+    // neither send nor receive.
+    let mut coo = shiro::sparse::Coo::new(32, 32);
+    for r in 8..12 {
+        for c in 0..32 {
+            coo.push(r, c, ((r + c) % 5) as f32 + 1.0);
+        }
+    }
+    let a = coo.to_csr();
+    let topo = Topology::tsubame4(8);
+    for partitioner in Partitioner::ALL {
+        let part = partitioner.partition(&a, 8, &topo, 4);
+        assert_eq!(
+            shiro::partition::rank_nnz(&a, &part).iter().sum::<u64>(),
+            a.nnz() as u64
+        );
+        verify_partition(&a, &part, 8);
+    }
+}
+
 #[test]
 fn config_file_roundtrip_drives_run() {
     // The shipped sample config parses and resolves.
@@ -91,6 +167,7 @@ fn config_file_roundtrip_drives_run() {
     assert_eq!(cfg.str_or("run.dataset", ""), "GAP-web");
     assert_eq!(cfg.int_or("run.ranks", 0), 32);
     assert_eq!(cfg.str_or("run.topo", ""), "tsubame4");
+    assert_eq!(cfg.str_or("run.partitioner", ""), "nnz-balanced");
 }
 
 #[test]

@@ -7,26 +7,14 @@
 //!   with integer-exact arithmetic so equality is bitwise);
 //! - representative assignment is deterministic.
 
+use shiro::bench::int_matrix;
 use shiro::comm::{self, Strategy};
 use shiro::cover::Solver;
 use shiro::dense::Dense;
 use shiro::hierarchy;
 use shiro::partition::{split_1d, RowPartition};
-use shiro::sparse::{Coo, Csr};
+use shiro::sparse::Csr;
 use shiro::topology::Topology;
-use shiro::util::rng::Rng;
-
-/// Integer-valued random matrix (exact in f32).
-fn int_matrix(n: usize, nnz: usize, seed: u64) -> Csr {
-    let mut rng = Rng::new(seed);
-    let mut coo = Coo::new(n, n);
-    for _ in 0..nnz {
-        let r = rng.below(n);
-        let c = rng.below(n);
-        coo.push(r, c, (1 + rng.below(4)) as f32);
-    }
-    coo.to_csr()
-}
 
 fn setup(
     n: usize,

@@ -3,12 +3,14 @@
 //! and verified against the serial reference; plus failure-injection tests
 //! for the planning edge cases.
 
+use shiro::bench::int_matrix;
 use shiro::comm::Strategy;
 use shiro::cover::Solver;
 use shiro::dense::Dense;
 use shiro::exec::kernel::NativeKernel;
 use shiro::exec::ExecOpts;
-use shiro::sparse::{datasets::DATASETS, gen, Coo, Csr};
+use shiro::partition::Partitioner;
+use shiro::sparse::{datasets::DATASETS, gen, Coo};
 use shiro::spmm::DistSpmm;
 use shiro::topology::Topology;
 use shiro::util::rng::Rng;
@@ -128,21 +130,6 @@ fn hot_row_and_hot_column() {
     check(&d, &a, 8, "hot-cross");
 }
 
-/// Integer-valued random matrix: every product and partial sum stays well
-/// inside f32's exact-integer range, so float addition is associative on
-/// this input and the distributed result must match the serial reference
-/// *bitwise* for any schedule or interleaving.
-fn int_matrix(n: usize, nnz: usize, seed: u64) -> Csr {
-    let mut rng = Rng::new(seed);
-    let mut coo = Coo::new(n, n);
-    for _ in 0..nnz {
-        let r = rng.below(n);
-        let c = rng.below(n);
-        coo.push(r, c, (1 + rng.below(4)) as f32);
-    }
-    coo.to_csr()
-}
-
 #[test]
 fn pipeline_determinism_across_worker_threads() {
     // Satellite: run the overlapped executor 8× across 1/2/4/8 worker
@@ -200,6 +187,40 @@ fn pipeline_determinism_on_arbitrary_floats() {
     let want = a.spmm(&b);
     let err = want.diff_norm(&reference) / (want.max_abs() as f64 + 1e-30);
     assert!(err < 1e-3);
+}
+
+#[test]
+fn determinism_across_partitioners() {
+    // Satellite: on integer-exact inputs the executed result must be
+    // bit-identical to the serial reference for all three partitioners ×
+    // overlap on/off × 1/2/4/8 worker threads — load-aware boundaries must
+    // not change what is computed, only where.
+    let a = int_matrix(256, 2048, 77);
+    let b = Dense::from_fn(256, 8, |i, j| ((i * 5 + j * 11) % 7) as f32 - 3.0);
+    let want = a.spmm(&b);
+    for partitioner in Partitioner::ALL {
+        let d = DistSpmm::plan_partitioned(
+            &a,
+            Strategy::Joint(Solver::Koenig),
+            Topology::tsubame4(8),
+            true,
+            &shiro::plan::PlanParams::default(),
+            partitioner,
+        );
+        for overlap in [true, false] {
+            for workers in [1usize, 2, 4, 8] {
+                let base = if overlap { ExecOpts::default() } else { ExecOpts::sequential() };
+                let opts = ExecOpts { workers, ..base };
+                let (got, _) = d.execute_with(&b, &NativeKernel, &opts);
+                assert_eq!(
+                    got.data,
+                    want.data,
+                    "{} overlap={overlap} workers={workers}: bits differ from serial",
+                    partitioner.name()
+                );
+            }
+        }
+    }
 }
 
 #[test]

@@ -1,0 +1,204 @@
+//! Partition-hardened suite (PR 3): the load-aware [`Partitioner`]
+//! subsystem end-to-end — straggler reduction on skewed inputs, cost-model
+//! coupling, and non-uniform partitions flowing through
+//! plan → hierarchy → exec → sim with the same invariants the balanced
+//! seed enjoyed.
+
+use shiro::comm::{self, Strategy};
+use shiro::cover::Solver;
+use shiro::dense::Dense;
+use shiro::exec::{self, kernel::NativeKernel, ExecOpts};
+use shiro::hierarchy;
+use shiro::metrics::load_imbalance;
+use shiro::partition::{
+    max_rank_nnz, rank_nnz, refine_objective, split_1d, Partitioner, RowPartition,
+};
+use shiro::sparse::gen;
+use shiro::spmm::DistSpmm;
+use shiro::topology::Topology;
+use shiro::util::rng::Rng;
+
+/// The skewed pattern class the load-aware partitioners exist for: rmat
+/// with a strong top-left bias concentrates nonzeros in low row indices,
+/// so equal-row-count splitting is maximally unfair.
+fn skewed(seed: u64) -> shiro::sparse::Csr {
+    gen::rmat(512, 8000, (0.6, 0.18, 0.18), false, seed)
+}
+
+#[test]
+fn nnz_balanced_reduces_straggler_on_skew() {
+    for seed in [1u64, 2, 3] {
+        let a = skewed(seed);
+        let bal = RowPartition::balanced(a.nrows, 8);
+        let nnz = RowPartition::nnz_balanced(&a, 8);
+        let bal_max = max_rank_nnz(&a, &bal);
+        let nnz_max = max_rank_nnz(&a, &nnz);
+        assert!(
+            nnz_max < bal_max,
+            "seed {seed}: nnz-balanced {nnz_max} !< balanced {bal_max}"
+        );
+        assert!(
+            load_imbalance(&rank_nnz(&a, &nnz)) <= load_imbalance(&rank_nnz(&a, &bal)),
+            "seed {seed}: imbalance factor did not shrink"
+        );
+    }
+}
+
+#[test]
+fn cost_refined_couples_to_the_plan_cost_model() {
+    let a = skewed(4);
+    let topo = Topology::tsubame4(8);
+    let n_dense = 32;
+    let nnz = RowPartition::nnz_balanced(&a, 8);
+    let refined = Partitioner::CostRefined.partition(&a, 8, &topo, n_dense);
+    // The greedy search only accepts strictly improving moves, so the
+    // refined partition's objective never exceeds its starting point.
+    assert!(
+        refine_objective(&a, &refined, &topo, n_dense)
+            <= refine_objective(&a, &nnz, &topo, n_dense) + 1e-15
+    );
+    // And the objective it optimizes is exactly comm cost + straggler
+    // compute, so its max-rank nnz stays well under the balanced split's.
+    let bal = RowPartition::balanced(a.nrows, 8);
+    assert!(max_rank_nnz(&a, &refined) <= max_rank_nnz(&a, &bal));
+}
+
+#[test]
+fn every_partitioner_every_strategy_exact() {
+    let a = skewed(5);
+    let mut rng = Rng::new(2);
+    let b = Dense::random(a.nrows, 8, &mut rng);
+    let want = a.spmm(&b);
+    for partitioner in Partitioner::ALL {
+        for strategy in [
+            Strategy::Column,
+            Strategy::Row,
+            Strategy::Joint(Solver::Koenig),
+            Strategy::Adaptive,
+        ] {
+            let d = DistSpmm::plan_partitioned(
+                &a,
+                strategy,
+                Topology::tsubame4(8),
+                true,
+                &shiro::plan::PlanParams::default(),
+                partitioner,
+            );
+            let (got, _) = d.execute(&b, &NativeKernel);
+            let err = want.diff_norm(&got) / (want.max_abs() as f64 + 1e-30);
+            assert!(
+                err < 1e-3,
+                "{} × {:?}: rel err {err}",
+                partitioner.name(),
+                strategy
+            );
+        }
+    }
+}
+
+#[test]
+fn hierarchy_invariants_hold_on_nonuniform_partition() {
+    let a = skewed(6);
+    let part = RowPartition::nnz_balanced(&a, 16);
+    let blocks = split_1d(&a, &part);
+    let plan = comm::plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None);
+    let topo = Topology::tsubame4(16);
+    let sched = hierarchy::build(&plan, &topo);
+    let n_dense = 16;
+    // Dedup still only reduces inter-group traffic under uneven blocks.
+    assert!(
+        sched.inter_group_bytes(n_dense)
+            <= hierarchy::flat_inter_group_bytes(&plan, &topo, n_dense)
+    );
+    // Consumer row lists remain subsets of each flow's union.
+    for f in &sched.b_flows {
+        for (_, rows) in &f.consumers {
+            for r in rows {
+                assert!(f.rows.binary_search(r).is_ok());
+            }
+        }
+    }
+    for f in &sched.c_flows {
+        for (_, rows) in &f.producers {
+            for r in rows {
+                assert!(f.rows.binary_search(r).is_ok());
+            }
+        }
+    }
+}
+
+#[test]
+fn byte_accounting_agrees_on_nonuniform_partition() {
+    // Sender- and receiver-side per-tier totals must still match when
+    // block heights differ per rank (the accounting never assumed uniform
+    // widths, and this pins that down).
+    let a = skewed(7);
+    let part = RowPartition::nnz_balanced(&a, 8);
+    let blocks = split_1d(&a, &part);
+    let plan = comm::plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None);
+    let topo = Topology::tsubame4(8);
+    let sched = hierarchy::build(&plan, &topo);
+    let mut rng = Rng::new(3);
+    let b = Dense::random(a.nrows, 8, &mut rng);
+    for opts in [ExecOpts::default(), ExecOpts::sequential()] {
+        let (_, stats) = exec::run_with(
+            &part,
+            &plan,
+            &blocks,
+            Some(&sched),
+            &topo,
+            &b,
+            &NativeKernel,
+            &opts,
+        );
+        assert_eq!(stats.total_inter_bytes(), stats.total_inter_recv_bytes());
+        assert_eq!(stats.total_intra_bytes(), stats.total_intra_recv_bytes());
+    }
+}
+
+#[test]
+fn simulation_consumes_nonuniform_partitions() {
+    let a = skewed(8);
+    for partitioner in Partitioner::ALL {
+        let d = DistSpmm::plan_partitioned(
+            &a,
+            Strategy::Joint(Solver::Koenig),
+            Topology::tsubame4(8),
+            true,
+            &shiro::plan::PlanParams::default(),
+            partitioner,
+        );
+        let rep = d.simulate(16);
+        assert!(rep.total > 0.0, "{}", partitioner.name());
+        assert_eq!(rep.per_stage.len(), 4);
+        // Flat sim path too.
+        let flat = DistSpmm::plan_partitioned(
+            &a,
+            Strategy::Joint(Solver::Koenig),
+            Topology::tsubame4(8),
+            false,
+            &shiro::plan::PlanParams::default(),
+            partitioner,
+        );
+        assert_eq!(flat.simulate(16).per_stage.len(), 3);
+    }
+}
+
+#[test]
+fn partitioned_plans_share_the_cache_correctly() {
+    // End-to-end companion of the plan-cache key regression: one cache,
+    // two partitioners — two distinct entries, each hit on re-lookup.
+    let a = skewed(9);
+    let topo = Topology::tsubame4(8);
+    let params = shiro::plan::PlanParams::default();
+    let mut cache = shiro::plan::cache::PlanCache::in_memory();
+    for partitioner in [Partitioner::Balanced, Partitioner::NnzBalanced] {
+        let part = partitioner.partition(&a, 8, &topo, params.n_dense);
+        let blocks = split_1d(&a, &part);
+        let (_, hit) = cache.get_or_compile(&blocks, &part, &topo, &params);
+        assert!(!hit, "{} first lookup must miss", partitioner.name());
+        let (_, hit) = cache.get_or_compile(&blocks, &part, &topo, &params);
+        assert!(hit, "{} second lookup must hit", partitioner.name());
+    }
+    assert_eq!((cache.hits, cache.misses), (2, 2));
+}

@@ -8,7 +8,7 @@ use shiro::cover::{self, Solver, Weights};
 use shiro::dense::Dense;
 use shiro::exec::{self, kernel::NativeKernel};
 use shiro::hierarchy;
-use shiro::partition::{split_1d, RowPartition};
+use shiro::partition::{rank_nnz, split_1d, Partitioner, RowPartition};
 use shiro::sparse::{gen, Csr};
 use shiro::topology::Topology;
 use shiro::util::proptest::{forall, Gen};
@@ -25,6 +25,142 @@ fn random_matrix(g: &mut Gen) -> Csr {
         2 => gen::powerlaw(n, nnz, 1.3 + g.f64_unit(), seed),
         _ => gen::banded_hub(n, 1 + g.usize_in(0, 4), 2 + g.usize_in(0, 4), 16, seed),
     }
+}
+
+/// Random contiguous 1D partition: balanced, nnz-balanced, or arbitrary
+/// sorted boundaries (which may include zero-row ranks) — strictly more
+/// general than anything a [`Partitioner`] emits.
+fn random_partition(g: &mut Gen, a: &Csr, ranks: usize) -> RowPartition {
+    match g.usize_in(0, 3) {
+        0 => RowPartition::balanced(a.nrows, ranks),
+        1 => RowPartition::nnz_balanced(a, ranks),
+        _ => {
+            let mut cuts: Vec<usize> =
+                (1..ranks).map(|_| g.usize_in(0, a.nrows + 1)).collect();
+            cuts.sort_unstable();
+            let mut starts = Vec::with_capacity(ranks + 1);
+            starts.push(0);
+            starts.extend(cuts);
+            starts.push(a.nrows);
+            RowPartition::from_starts(starts)
+        }
+    }
+}
+
+#[test]
+fn prop_cover_ordering_and_validate_on_nonuniform_partitions() {
+    forall("nonuniform-plan", 25, |g| {
+        let a = random_matrix(g);
+        let ranks = g.usize_in(2, 9);
+        let part = random_partition(g, &a, ranks);
+        let blocks = split_1d(&a, &part);
+        let koenig = comm::plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None);
+        let greedy = comm::plan(&blocks, &part, Strategy::Joint(Solver::Greedy), None);
+        let col = comm::plan(&blocks, &part, Strategy::Column, None);
+        let row = comm::plan(&blocks, &part, Strategy::Row, None);
+        let adaptive = comm::plan(&blocks, &part, Strategy::Adaptive, None);
+        // Structural invariants hold for every strategy on any partition.
+        for plan in [&koenig, &greedy, &col, &row, &adaptive] {
+            assert_eq!(
+                comm::validate::validate(plan, &blocks),
+                Ok(()),
+                "{:?} invalid on starts {:?}",
+                plan.strategy,
+                part.starts
+            );
+        }
+        // Cover-solver volume ordering per pair: the optimal joint cover
+        // never exceeds the greedy cover or either single-sided cover, and
+        // greedy never exceeds selecting every nonempty row AND column.
+        // (Greedy vs a *single* side is deliberately not asserted — greedy
+        // set cover carries a log-factor worst case against it.)
+        let n = 16;
+        for p in 0..ranks {
+            for q in 0..ranks {
+                if p == q {
+                    continue;
+                }
+                let k = koenig.volume(p, q, n);
+                assert!(k <= greedy.volume(p, q, n), "({p},{q}) koenig > greedy");
+                assert!(k <= col.volume(p, q, n), "({p},{q}) koenig > column");
+                assert!(k <= row.volume(p, q, n), "({p},{q}) koenig > row");
+                assert!(
+                    greedy.volume(p, q, n) <= col.volume(p, q, n) + row.volume(p, q, n),
+                    "({p},{q}) greedy exceeds rows+cols bound"
+                );
+            }
+        }
+        assert!(koenig.total_volume(n) <= greedy.total_volume(n));
+        assert!(koenig.total_volume(n) <= col.total_volume(n).min(row.total_volume(n)));
+    });
+}
+
+#[test]
+fn prop_partitioner_invariants() {
+    forall("partitioner-invariants", 12, |g| {
+        let a = random_matrix(g);
+        let ranks = g.usize_in(2, 7);
+        let topo = Topology::tsubame4(ranks);
+        for partitioner in Partitioner::ALL {
+            let part = partitioner.partition(&a, ranks, &topo, 8);
+            assert_eq!(part.nparts, ranks, "{}", partitioner.name());
+            assert_eq!(part.starts[0], 0);
+            assert_eq!(*part.starts.last().unwrap(), a.nrows);
+            assert!(part.starts.windows(2).all(|w| w[0] <= w[1]));
+            assert_eq!(
+                rank_nnz(&a, &part).iter().sum::<u64>(),
+                a.nnz() as u64,
+                "{} lost nonzeros",
+                partitioner.name()
+            );
+            let blocks = split_1d(&a, &part);
+            let plan = comm::plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None);
+            assert_eq!(
+                comm::validate::validate(&plan, &blocks),
+                Ok(()),
+                "{} plan invalid",
+                partitioner.name()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_executor_exact_on_nonuniform_partitions() {
+    forall("exec-nonuniform", 10, |g| {
+        let a = random_matrix(g);
+        let ranks = g.usize_in(2, 9);
+        let n_dense = 1 + g.usize_in(0, 8);
+        let part = random_partition(g, &a, ranks);
+        let blocks = split_1d(&a, &part);
+        let strategy = match g.usize_in(0, 4) {
+            0 => Strategy::Column,
+            1 => Strategy::Row,
+            2 => Strategy::Adaptive,
+            _ => Strategy::Joint(Solver::Koenig),
+        };
+        let plan = comm::plan(&blocks, &part, strategy, None);
+        let topo = Topology::tsubame4(ranks);
+        let hier = g.bool();
+        let sched = hier.then(|| hierarchy::build(&plan, &topo));
+        let b = Dense::from_vec(a.nrows, n_dense, g.vec_f32(a.nrows * n_dense));
+        let (got, _) = exec::run(
+            &part,
+            &plan,
+            &blocks,
+            sched.as_ref(),
+            &topo,
+            &b,
+            &NativeKernel,
+        );
+        let want = a.spmm(&b);
+        let err = want.diff_norm(&got) / (want.max_abs() as f64 + 1e-30);
+        assert!(
+            err < 1e-3,
+            "rel err {err} (starts {:?} hier={hier})",
+            part.starts
+        );
+    });
 }
 
 #[test]
