@@ -51,7 +51,10 @@ fn main() {
         topo.group_size
     );
     let mut gcn = Gcn::new(&adj, Strategy::Joint(Solver::Koenig), topo, true, cfg);
-    println!("one-time preprocessing (MWVC plan): {}", human_secs(gcn.dist.prep_secs));
+    println!(
+        "one-time preprocessing (MWVC plan + Âᵀ mirror + session warm-up): {}",
+        human_secs(gcn.prep_secs())
+    );
 
     let pjrt = if use_native {
         None
@@ -109,5 +112,12 @@ fn main() {
         let fb = k.fallbacks.load(std::sync::atomic::Ordering::Relaxed);
         println!("  PJRT kernel fallbacks: {fb}");
     }
+    let (fa, ba) = (gcn.fwd.amortization(), gcn.bwd.amortization());
+    println!(
+        "  epoch reuse         {} session executes, {} fresh allocs after warm-up (steady: {})",
+        fa.calls() + ba.calls(),
+        fa.total_allocs() + ba.total_allocs(),
+        fa.steady_state() && ba.steady_state()
+    );
     println!("\ngnn_training OK (loss {first:.4} → {last:.4})");
 }

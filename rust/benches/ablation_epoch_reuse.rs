@@ -1,0 +1,156 @@
+//! Ablation (PR 4): epoch-persistent training sessions × transpose-aware
+//! plan mirroring. The GNN loop multiplies the same Â (and Âᵀ) every epoch;
+//! this bench contrasts [`Gcn::train`] — frozen plans, persistent exchange
+//! buffers, mirrored backward plan — against [`Gcn::train_cold`], which
+//! re-enters `DistSpmm` cold every epoch, and gates the session contract.
+//!
+//! Flags (after `--`):
+//!   --preset ci|full   ci = smaller graph / fewer epochs (perf-smoke job)
+//!   --check            assert the epoch-reuse guarantees (CI gate, all
+//!                      deterministic — no wall-clock thresholds):
+//!                      (1) from the second execute call onward both
+//!                          sessions report zero plan seconds and zero
+//!                          fresh exchange-buffer allocations;
+//!                      (2) the full training loss trajectory is bitwise
+//!                          identical between session and cold execution;
+//!                      (3) on an integer-exact asymmetric matrix, the
+//!                          mirrored transpose plan's output is bitwise
+//!                          identical to planning Aᵀ from scratch.
+
+use shiro::bench::{int_matrix, write_csv, Preset};
+use shiro::comm::Strategy;
+use shiro::cover::Solver;
+use shiro::dense::Dense;
+use shiro::exec::kernel::NativeKernel;
+use shiro::gnn::{Gcn, GcnConfig, NativeDense};
+use shiro::metrics::Table;
+use shiro::sparse::gen;
+use shiro::spmm::DistSpmm;
+use shiro::topology::Topology;
+use shiro::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let preset = Preset::from_args(&args);
+    let check = args.has_flag("check");
+    let (n, epochs, ranks) = match preset {
+        Preset::Full => (4096usize, 30usize, 8usize),
+        Preset::Ci => (512, 10, 8),
+    };
+    let adj = gen::rmat(n, n * 8, (0.55, 0.2, 0.19), true, 42);
+    let topo = Topology::tsubame4(ranks);
+    let cfg = GcnConfig { epochs, log_every: 1, lr: 2.0, ..Default::default() };
+
+    let mut session_gcn = Gcn::new(
+        &adj,
+        Strategy::Joint(Solver::Koenig),
+        topo.clone(),
+        true,
+        cfg.clone(),
+    );
+    let warm = session_gcn.train(&NativeKernel, &NativeDense);
+
+    let mut cold_gcn = Gcn::new(
+        &adj,
+        Strategy::Joint(Solver::Koenig),
+        topo.clone(),
+        true,
+        cfg.clone(),
+    );
+    let cold = cold_gcn.train_cold(&NativeKernel, &NativeDense);
+
+    let mut table = Table::new(&[
+        "mode",
+        "epochs",
+        "prep (ms)",
+        "spmm (ms)",
+        "train (ms)",
+        "plan calls amortized",
+    ]);
+    let fa = session_gcn.fwd.amortization();
+    let ba = session_gcn.bwd.amortization();
+    table.row(vec![
+        "session (reuse)".into(),
+        epochs.to_string(),
+        format!("{:.1}", warm.prep_secs * 1e3),
+        format!("{:.1}", warm.spmm_secs * 1e3),
+        format!("{:.1}", warm.train_secs * 1e3),
+        format!("1 plan + mirror, {} executes", fa.calls() + ba.calls()),
+    ]);
+    table.row(vec![
+        "cold (per-epoch)".into(),
+        epochs.to_string(),
+        format!("{:.1}", cold.prep_secs * 1e3),
+        format!("{:.1}", cold.spmm_secs * 1e3),
+        format!("{:.1}", cold.train_secs * 1e3),
+        format!("{epochs} plans"),
+    ]);
+    println!(
+        "Ablation — epoch-reuse sessions vs cold per-epoch execution \
+         ({n} nodes, {ranks} ranks, {epochs} epochs, 3 SpMM/epoch)\n"
+    );
+    println!("{}", table.render());
+    println!(
+        "Expectation: session prep is one plan + one O(plan) transpose mirror;\n\
+         cold prep grows linearly with epochs. SpMM wall time favors sessions\n\
+         (no per-call buffer churn); numerics are bitwise identical.\n"
+    );
+    let csv = format!(
+        "mode,epochs,prep_secs,spmm_secs,train_secs\n\
+         session,{epochs},{:.6},{:.6},{:.6}\ncold,{epochs},{:.6},{:.6},{:.6}\n",
+        warm.prep_secs, warm.spmm_secs, warm.train_secs, cold.prep_secs, cold.spmm_secs,
+        cold.train_secs
+    );
+    write_csv("ablation_epoch_reuse.csv", &csv);
+
+    if check {
+        // (1) Steady state: zero plan time, zero fresh allocations from the
+        // second call onward — and, because Gcn warms at build time, zero
+        // allocations in *every* call.
+        for (name, a) in [("fwd", fa), ("bwd", ba)] {
+            assert!(
+                a.steady_state(),
+                "{name} session left steady state: plan {:?} allocs {:?}",
+                a.plan_secs,
+                a.alloc_events
+            );
+            assert_eq!(a.total_allocs(), 0, "{name} session allocated after warm-up");
+            assert!(
+                a.plan_secs.iter().all(|&t| t == 0.0),
+                "{name} session re-planned inside execute"
+            );
+            assert_eq!(a.calls(), epochs * if name == "fwd" { 2 } else { 1 });
+        }
+
+        // (2) Bitwise-equal training trajectories, session vs cold.
+        assert_eq!(warm.losses.len(), cold.losses.len());
+        for ((e1, l1), (e2, l2)) in warm.losses.iter().zip(&cold.losses) {
+            assert_eq!(e1, e2);
+            assert_eq!(
+                l1.to_bits(),
+                l2.to_bits(),
+                "epoch {e1}: session loss {l1} != cold loss {l2}"
+            );
+        }
+
+        // (3) Transpose mirror gate on an integer-exact *asymmetric*
+        // matrix: mirrored-plan output must match a from-scratch plan of
+        // Aᵀ bit for bit (float addition is associative on these inputs,
+        // so different cover splits cannot hide behind rounding).
+        let a = int_matrix(256, 256 * 8, 77);
+        let b = Dense::from_fn(256, 8, |i, j| ((i * 5 + j * 3) % 7) as f32 - 3.0);
+        let fwd = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), topo.clone(), true);
+        let mirrored = fwd.plan_transpose();
+        let scratch =
+            DistSpmm::plan(&a.transpose(), Strategy::Joint(Solver::Koenig), topo, true);
+        let (got_m, _) = mirrored.execute(&b, &NativeKernel);
+        let (got_s, _) = scratch.execute(&b, &NativeKernel);
+        assert_eq!(got_m.data, got_s.data, "mirrored Aᵀ plan bits differ from scratch plan");
+        assert_eq!(got_m.data, a.transpose().spmm(&b).data, "Aᵀ·B oracle mismatch");
+
+        println!(
+            "[check] OK: steady-state sessions (0 plan ms, 0 allocs from epoch 2), \
+             bitwise-equal trajectories over {epochs} epochs, bitwise transpose mirror"
+        );
+    }
+}

@@ -30,7 +30,13 @@ fn main() {
         "SpMM speedup vs PyG",
     ]);
     let mut prep_table = Table::new(&[
-        "dataset", "epochs", "train (s)", "prep (s)", "prep ratio", "loss first→last",
+        "dataset",
+        "epochs",
+        "train (s)",
+        "prep (s)",
+        "prep ratio",
+        "loss first→last",
+        "steady allocs",
     ]);
     for spec in gnn_datasets() {
         // Paper: N=128 for Papers/Mag240M, 64 for IGB260M.
@@ -65,6 +71,11 @@ fn main() {
         );
         let rep = gcn.train(&NativeKernel, &NativeDense);
         let ratio = 100.0 * rep.prep_secs / (rep.prep_secs + rep.train_secs);
+        // Training runs on epoch-persistent sessions: all planning is in
+        // the prep column, and the steady-state allocation count must be
+        // zero (asserted hard by ablation_epoch_reuse --check).
+        let steady_allocs =
+            gcn.fwd.amortization().total_allocs() + gcn.bwd.amortization().total_allocs();
         prep_table.row(vec![
             spec.name.into(),
             epochs.to_string(),
@@ -76,6 +87,7 @@ fn main() {
                 rep.losses.first().unwrap().1,
                 rep.losses.last().unwrap().1
             ),
+            steady_allocs.to_string(),
         ]);
         csv.push_str(&format!(
             "{},{},{:.6},{:.6},{:.6},{:.6},{:.2}\n",

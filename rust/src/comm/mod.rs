@@ -132,6 +132,33 @@ impl PairPlan {
 }
 
 impl PairPlan {
+    /// Mirror this pair plan for the transposed matrix: the (q→p) plan for
+    /// A becomes the (p→q) plan for Aᵀ. Transposing an off-diagonal block
+    /// swaps its row and column index spaces, so a cover of the block maps
+    /// to a cover of the transposed block with the roles exchanged —
+    /// `a_row_part ↔ a_col_partᵀ`, and therefore `c_rows ↔ b_rows`. The
+    /// MWVC solution (and its optimality) carries over verbatim, and
+    /// per-pair volume is preserved exactly. Sparsity-oblivious
+    /// (`full_block`) pairs stay sparsity-oblivious — the whole transposed
+    /// block ships column-based, matching Eq. 1 on the transposed operand;
+    /// their volume swaps ends (`len(q) ↔ len(p)`), preserving the total.
+    pub fn transpose(&self) -> PairPlan {
+        if self.full_block {
+            let t = self.a_col_part.transpose();
+            return PairPlan::from_parts(Csr::zeros(t.nrows, t.ncols), t, true);
+        }
+        if self.a_row_part.nnz() == 0 && self.a_col_part.nnz() == 0 {
+            // Empty pairs mirror to the canonical empty plan (the planner
+            // emits `PairPlan::default()` for them, not shaped zeros).
+            return PairPlan::default();
+        }
+        PairPlan::from_parts(
+            self.a_col_part.transpose(),
+            self.a_row_part.transpose(),
+            false,
+        )
+    }
+
     /// Number of rows crossing the q→p link (B rows + C rows).
     pub fn rows_transferred(&self, k_src: usize) -> u64 {
         if self.full_block {
@@ -175,6 +202,35 @@ impl CommPlan {
             }
         }
         v
+    }
+
+    /// Mirror the whole plan for Aᵀ: `pairs_t[p][q] = pairs[q][p].transpose()`
+    /// ([`PairPlan::transpose`]). No cover is re-solved and no cost model is
+    /// re-evaluated — the mirrored plan inherits the forward plan's covers
+    /// with row/column roles exchanged, and its total volume is identical.
+    /// Only meaningful in the 1D square-SpMM setting, where one partition
+    /// serves both the rows and the columns (enforced by `split_1d`), so
+    /// `block_rows` carries over unchanged.
+    pub fn transpose(&self) -> CommPlan {
+        let pairs = (0..self.nranks)
+            .map(|p| {
+                (0..self.nranks)
+                    .map(|q| {
+                        if p == q {
+                            PairPlan::default()
+                        } else {
+                            self.pairs[q][p].transpose()
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        CommPlan {
+            nranks: self.nranks,
+            strategy: self.strategy,
+            pairs,
+            block_rows: self.block_rows.clone(),
+        }
     }
 
     /// Per-pair volume matrix `[dst][src]` (Fig. 9 heatmaps).
@@ -476,6 +532,69 @@ mod tests {
             .map(|pp| pp.c_rows.len())
             .sum();
         assert!(total_c > total_b * 5, "c={total_c} b={total_b}");
+    }
+
+    #[test]
+    fn transposed_plan_covers_transposed_blocks_and_preserves_volume() {
+        // The mirror must be a *valid* plan for Aᵀ under the same partition
+        // — every strategy, including the sparsity-oblivious one — and the
+        // per-pair volume must carry over exactly (the cover is reused, not
+        // re-solved).
+        let a = gen::rmat(96, 1100, (0.6, 0.18, 0.18), false, 11);
+        let part = RowPartition::balanced(96, 6);
+        let blocks = split_1d(&a, &part);
+        let at = a.transpose();
+        let blocks_t = split_1d(&at, &part);
+        let n = 16;
+        for strategy in [
+            Strategy::Block,
+            Strategy::Column,
+            Strategy::Row,
+            Strategy::Joint(Solver::Koenig),
+        ] {
+            let fwd = plan(&blocks, &part, strategy, None);
+            let bwd = fwd.transpose();
+            assert_eq!(
+                crate::comm::validate::validate(&bwd, &blocks_t),
+                Ok(()),
+                "{strategy:?}: mirrored plan invalid for Aᵀ"
+            );
+            assert_plan_covers(&bwd, &blocks_t);
+            assert_eq!(
+                fwd.total_volume(n),
+                bwd.total_volume(n),
+                "{strategy:?}: mirroring changed the volume"
+            );
+            for p in 0..6 {
+                for q in 0..6 {
+                    if p == q || fwd.pairs[q][p].full_block {
+                        // Sparsity-oblivious pairs stay column-based
+                        // whole-block sends in both directions — no role
+                        // exchange to assert.
+                        continue;
+                    }
+                    // Roles swap: the mirrored pair serves row-based what
+                    // the forward pair served column-based, and vice versa.
+                    assert_eq!(bwd.pairs[p][q].c_rows, fwd.pairs[q][p].b_rows);
+                    assert_eq!(bwd.pairs[p][q].b_rows, fwd.pairs[q][p].c_rows);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn double_transpose_is_identity_on_roles() {
+        let (_, part, blocks) = setup(64, 4, 9);
+        let fwd = plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None);
+        let back = fwd.transpose().transpose();
+        for p in 0..4 {
+            for q in 0..4 {
+                assert_eq!(back.pairs[p][q].b_rows, fwd.pairs[p][q].b_rows);
+                assert_eq!(back.pairs[p][q].c_rows, fwd.pairs[p][q].c_rows);
+                assert_eq!(back.pairs[p][q].a_row_part, fwd.pairs[p][q].a_row_part);
+                assert_eq!(back.pairs[p][q].a_col_part, fwd.pairs[p][q].a_col_part);
+            }
+        }
     }
 
     #[test]

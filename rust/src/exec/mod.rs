@@ -23,8 +23,10 @@
 
 pub mod kernel;
 pub mod pipeline;
+pub mod session;
 
 pub use pipeline::ExecOpts;
+pub use session::SpmmSession;
 
 use crate::comm::CommPlan;
 use crate::dense::Dense;
@@ -33,7 +35,9 @@ use crate::metrics::{OverlapWindow, VolumeMatrix};
 use crate::partition::{LocalBlocks, RowPartition};
 use crate::topology::{Tier, Topology};
 use kernel::SpmmKernel;
-use pipeline::{ckey, gated, BufferPool, ComputeGate, OrderedFold, DIAG_KEY, KIND_B, KIND_C};
+use pipeline::{
+    ckey, gated, BufferPool, ComputeGate, OrderedFold, PoolRef, DIAG_KEY, KIND_B, KIND_C,
+};
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Instant;
@@ -188,7 +192,7 @@ struct Ctx<'a> {
     opts: ExecOpts,
     gate: Option<&'a ComputeGate>,
     t0: Instant,
-    pool: BufferPool,
+    pool: PoolRef<'a>,
 }
 
 impl<'a> Ctx<'a> {
@@ -311,10 +315,13 @@ pub fn run_with(
                     opts: *opts,
                     gate,
                     t0,
-                    pool: BufferPool::new(),
+                    pool: PoolRef::Own(BufferPool::new()),
                 };
-                let c = rank_main(&mut ctx, &blocks[rank], &b_local);
-                (rank, c, ctx.stats)
+                let prog =
+                    build_program(rank, part, plan, sched, opts, kernel.prefers_tiles());
+                let mut c_local = Dense::zeros(part.len(rank), n_dense);
+                rank_main(&mut ctx, &blocks[rank], &b_local, &mut c_local, &prog);
+                (rank, c_local, ctx.stats)
             }));
         }
         for h in handles {
@@ -382,19 +389,27 @@ struct Deferred {
     self_aggs: Vec<(usize, Vec<u32>, Dense)>,
 }
 
-fn build_program(ctx: &Ctx, blocks: &LocalBlocks) -> Program {
-    let r = ctx.rank;
-    let mut p = match ctx.sched {
-        None => flat_program(ctx),
-        Some(s) => hier_program(ctx, s),
+/// Derive rank `rank`'s full program from the plan/schedule. A pure
+/// function of (plan, schedule, options, kernel tiling preference) — the
+/// session layer precomputes these once and replays them every epoch.
+fn build_program(
+    rank: usize,
+    part: &RowPartition,
+    plan: &CommPlan,
+    sched: Option<&HierSchedule>,
+    opts: &ExecOpts,
+    prefers_tiles: bool,
+) -> Program {
+    let mut p = match sched {
+        None => flat_program(rank, part, plan),
+        Some(s) => hier_program(rank, plan, s),
     };
     p.fold_keys.push(DIAG_KEY);
     // Diagonal tiles go last: partial production unblocks other ranks, the
     // diagonal only feeds this one. Kernels with whole-matrix entry points
     // (PJRT) get a single full-range tile, dispatched via `spmm_acc`.
-    let my_rows = ctx.part.len(r);
-    debug_assert_eq!(blocks.diag.nrows, my_rows);
-    let tile = if ctx.kernel.prefers_tiles() { ctx.opts.tile() } else { usize::MAX };
+    let my_rows = part.len(rank);
+    let tile = if prefers_tiles { opts.tile() } else { usize::MAX };
     let mut r0 = 0;
     while r0 < my_rows {
         let r1 = r0.saturating_add(tile).min(my_rows);
@@ -408,10 +423,7 @@ fn build_program(ctx: &Ctx, blocks: &LocalBlocks) -> Program {
 /// expected-receive side. (A pair is expected iff its sender would emit it
 /// — in particular a `full_block` pair over an empty source block sends
 /// nothing and must not be awaited.)
-fn flat_program(ctx: &Ctx) -> Program {
-    let r = ctx.rank;
-    let plan = ctx.plan;
-    let part = ctx.part;
+fn flat_program(r: usize, part: &RowPartition, plan: &CommPlan) -> Program {
     let mut p = Program::default();
     for q in 0..plan.nranks {
         if q == r {
@@ -448,9 +460,7 @@ fn flat_program(ctx: &Ctx) -> Program {
 
 /// Hierarchical program: this rank's slice of the schedule's step stream
 /// ([`HierSchedule::rank_steps`]) plus the mirrored receive expectations.
-fn hier_program(ctx: &Ctx, sched: &HierSchedule) -> Program {
-    let r = ctx.rank;
-    let plan = ctx.plan;
+fn hier_program(r: usize, plan: &CommPlan, sched: &HierSchedule) -> Program {
     let mut p = Program::default();
     for step in sched.rank_steps(r) {
         match step {
@@ -531,11 +541,11 @@ struct AggFlow {
 }
 
 impl AggFlow {
-    fn new(f: &crate::hierarchy::CFlow, n_dense: usize) -> AggFlow {
+    fn new(f: &crate::hierarchy::CFlow, n_dense: usize, pool: &mut PoolRef) -> AggFlow {
         AggFlow {
             dst: f.dst,
             rows: f.rows.clone(),
-            acc: Dense::zeros(f.rows.len(), n_dense),
+            acc: pool.acquire(f.rows.len(), n_dense),
             fold: OrderedFold::new(
                 f.producers.iter().map(|(q, _)| ckey(KIND_C, *q)).collect(),
             ),
@@ -549,7 +559,7 @@ impl AggFlow {
         producer: usize,
         prows: Vec<u32>,
         data: Dense,
-        pool: &mut BufferPool,
+        pool: &mut PoolRef,
     ) -> bool {
         let AggFlow { rows, acc, fold, .. } = self;
         fold.offer(ckey(KIND_C, producer), (prows, data), |(pr, d)| {
@@ -595,7 +605,7 @@ enum Contribution {
     Empty,
 }
 
-fn apply_contribution(c_local: &mut Dense, pool: &mut BufferPool, contrib: Contribution) {
+fn apply_contribution(c_local: &mut Dense, pool: &mut PoolRef, contrib: Contribution) {
     match contrib {
         Contribution::DiagDone | Contribution::Empty => {}
         Contribution::AddFull(d) => {
@@ -607,6 +617,15 @@ fn apply_contribution(c_local: &mut Dense, pool: &mut BufferPool, contrib: Contr
             pool.release(d);
         }
     }
+}
+
+/// Whether a column-based remote partial applies as a compact row set
+/// (sparse: few touched output rows) or as a full-block add. Shared by the
+/// executor hot path and the session payload layout
+/// ([`session`]) — the two must branch identically or the session pool
+/// under-seeds and the zero-alloc guarantee silently breaks.
+pub(crate) fn col_contribution_is_compact(touched: usize, block_rows: usize) -> bool {
+    touched * 2 < block_rows.max(1)
 }
 
 /// Remote column-based computation for B rows arriving from `origin`: the
@@ -649,13 +668,13 @@ fn offer_col_contribution(
         // The branch is a pure function of the pair's structure, so it is
         // identical across modes/runs and determinism is preserved.
         let touched = pair.a_col_compact.nonempty_rows();
-        if touched.len() * 2 >= c_local.nrows.max(1) {
-            Contribution::AddFull(partial)
-        } else {
+        if col_contribution_is_compact(touched.len(), c_local.nrows) {
             let mut compact = ctx.pool.acquire(touched.len(), partial.ncols);
             partial.gather_rows_into(&touched, &mut compact);
             ctx.pool.release(partial);
             Contribution::AddRows(touched, compact)
+        } else {
+            Contribution::AddFull(partial)
         }
     };
     fold.offer(ckey(KIND_B, origin), contrib, |c| {
@@ -665,7 +684,7 @@ fn offer_col_contribution(
 
 /// Extract `want` rows (a subset of the sorted `have` rows) from `data`
 /// into a pooled buffer.
-fn gather_subset(pool: &mut BufferPool, have: &[u32], data: &Dense, want: &[u32]) -> Dense {
+fn gather_subset(pool: &mut PoolRef, have: &[u32], data: &Dense, want: &[u32]) -> Dense {
     let mut out = pool.acquire(want.len(), data.ncols);
     for (i, w) in want.iter().enumerate() {
         let k = have.binary_search(w).expect("subset violation");
@@ -677,21 +696,29 @@ fn gather_subset(pool: &mut BufferPool, have: &[u32], data: &Dense, want: &[u32]
 // ------------------------------------------------------------ driver ----
 
 /// The per-rank program: workflow steps 3–5 of §5.1 (steps 1–2 are the
-/// offline planning already captured in `plan`/`sched`), scheduled either
-/// as the overlapped pipeline or strictly phase-ordered.
-fn rank_main(ctx: &mut Ctx, blocks: &LocalBlocks, b_local: &Dense) -> Dense {
+/// offline planning already captured in `plan`/`sched`, and the program
+/// derivation in `prog`), scheduled either as the overlapped pipeline or
+/// strictly phase-ordered. `c_local` must arrive zeroed and shaped to this
+/// rank's block; sessions pass persistent buffers here.
+fn rank_main(
+    ctx: &mut Ctx,
+    blocks: &LocalBlocks,
+    b_local: &Dense,
+    c_local: &mut Dense,
+    prog: &Program,
+) {
     let n_dense = b_local.ncols;
-    let my_rows = ctx.part.len(ctx.rank);
-    let mut c_local = Dense::zeros(my_rows, n_dense);
+    debug_assert_eq!(blocks.diag.nrows, ctx.part.len(ctx.rank));
+    debug_assert_eq!(c_local.nrows, ctx.part.len(ctx.rank));
+    let c_local = &mut *c_local;
 
-    let prog = build_program(ctx, blocks);
     let mut fold = OrderedFold::new(prog.fold_keys.clone());
     let mut aggs: BTreeMap<usize, AggFlow> = prog
         .agg_flows
         .iter()
         .map(|&i| {
             let f = &ctx.sched.expect("agg flows imply a schedule").c_flows[i];
-            (f.dst, AggFlow::new(f, n_dense))
+            (f.dst, AggFlow::new(f, n_dense, &mut ctx.pool))
         })
         .collect();
     let mut diag_left = prog
@@ -702,7 +729,7 @@ fn rank_main(ctx: &mut Ctx, blocks: &LocalBlocks, b_local: &Dense) -> Dense {
     if diag_left == 0 {
         // Zero-row block: the base "contribution" is trivially complete.
         fold.offer(DIAG_KEY, Contribution::DiagDone, |c| {
-            apply_contribution(&mut c_local, &mut ctx.pool, c)
+            apply_contribution(c_local, &mut ctx.pool, c)
         });
     }
     let mut got = 0usize;
@@ -710,18 +737,18 @@ fn rank_main(ctx: &mut Ctx, blocks: &LocalBlocks, b_local: &Dense) -> Dense {
     if ctx.opts.overlap {
         // Overlapped pipeline: eager posts, then compute interleaved with
         // non-blocking drains of whatever has already arrived.
-        post_b(ctx, &prog, b_local);
+        post_b(ctx, prog, b_local);
         for item in &prog.items {
             while let Ok(msg) = ctx.inbox.try_recv() {
                 got += 1;
-                on_msg(ctx, &prog, msg, &mut c_local, &mut fold, &mut aggs, true);
+                on_msg(ctx, prog, msg, c_local, &mut fold, &mut aggs, true);
             }
             run_item(
                 ctx,
                 item,
                 blocks,
                 b_local,
-                &mut c_local,
+                c_local,
                 &mut fold,
                 &mut aggs,
                 &mut diag_left,
@@ -738,14 +765,14 @@ fn rank_main(ctx: &mut Ctx, blocks: &LocalBlocks, b_local: &Dense) -> Dense {
                 item,
                 blocks,
                 b_local,
-                &mut c_local,
+                c_local,
                 &mut fold,
                 &mut aggs,
                 &mut diag_left,
                 Some(&mut deferred),
             );
         }
-        post_b(ctx, &prog, b_local);
+        post_b(ctx, prog, b_local);
         for (dst, msg) in deferred.msgs.drain(..) {
             ctx.send(dst, msg);
         }
@@ -765,11 +792,10 @@ fn rank_main(ctx: &mut Ctx, blocks: &LocalBlocks, b_local: &Dense) -> Dense {
         ctx.stats.idle_secs += ctx.now() - t_idle;
         ctx.span(phase::IDLE, t_idle);
         got += 1;
-        on_msg(ctx, &prog, msg, &mut c_local, &mut fold, &mut aggs, false);
+        on_msg(ctx, prog, msg, c_local, &mut fold, &mut aggs, false);
     }
     debug_assert!(fold.is_done(), "rank {}: fold incomplete", ctx.rank);
     debug_assert!(aggs.is_empty(), "rank {}: unshipped aggregates", ctx.rank);
-    c_local
 }
 
 /// Gather and send every outgoing B payload (cheap packs — no SpMM), in

@@ -10,6 +10,17 @@ use crate::dense::Dense;
 use std::collections::BTreeMap;
 use std::sync::{Condvar, Mutex};
 
+/// Decode a contribution key built by [`ckey`] back into (kind, peer);
+/// `None` for [`DIAG_KEY`]. Used by the session layer to enumerate the
+/// posted-payload layout from a program's fold keys.
+pub(crate) fn ckey_decode(key: u64) -> Option<(u8, usize)> {
+    if key == DIAG_KEY {
+        None
+    } else {
+        Some((((key >> 32) - 1) as u8, (key & 0xffff_ffff) as usize))
+    }
+}
+
 /// Default diagonal-SpMM tile height between inbox drains.
 pub const DEFAULT_TILE_ROWS: usize = 256;
 
@@ -54,30 +65,62 @@ impl ExecOpts {
     }
 }
 
-/// Per-rank pool of reusable f32 buffers. Outgoing payloads are acquired
-/// here and released into the *destination's* pool on arrival, so steady
-/// state runs allocation-free regardless of which rank produced a buffer.
-#[derive(Default)]
+/// Pool of reusable f32 buffers. Outgoing payloads are acquired here and
+/// released into the receiving side's pool on arrival, so steady state runs
+/// allocation-free regardless of which rank produced a buffer.
+///
+/// Reuse is **best-fit**: the free list is kept sorted by capacity and
+/// `acquire` takes the smallest buffer that already fits (a miss allocates
+/// fresh and bumps [`BufferPool::allocs`] — the amortization metric the
+/// session layer asserts on). Best-fit matters for the session guarantee:
+/// once the pool holds one buffer per payload-layout slot, *no* later
+/// acquire sequence over those slots can miss, whatever the arrival order.
 pub(crate) struct BufferPool {
+    /// Free buffers sorted by capacity (ascending).
     free: Vec<Vec<f32>>,
+    /// Bound on retained buffers.
+    cap: usize,
+    /// Fresh-allocation events (pool misses and explicit seeds).
+    pub allocs: u64,
 }
 
-/// Bound on retained buffers — enough for deep pipelines, small enough not
-/// to hoard a whole matrix per rank.
+/// Default bound on retained buffers — enough for deep pipelines, small
+/// enough not to hoard a whole matrix per rank.
 const POOL_CAP: usize = 64;
+
+impl Default for BufferPool {
+    fn default() -> BufferPool {
+        BufferPool::new()
+    }
+}
 
 impl BufferPool {
     pub fn new() -> BufferPool {
-        BufferPool::default()
+        BufferPool::with_cap(POOL_CAP)
     }
 
-    /// A zeroed `nrows × ncols` matrix, recycling a retained allocation
-    /// when one exists.
+    /// A pool retaining up to `cap` buffers (sessions size this to their
+    /// full payload layout so nothing is ever dropped).
+    pub fn with_cap(cap: usize) -> BufferPool {
+        BufferPool { free: Vec::new(), cap, allocs: 0 }
+    }
+
+    /// A zeroed `nrows × ncols` matrix, recycling the smallest retained
+    /// allocation that fits; allocates (and counts) on a miss. Zero-sized
+    /// requests (empty ranks / zero-width operands) bypass the pool
+    /// entirely — they need no storage, must not steal a slot from a real
+    /// payload, and must not count as allocation events.
     pub fn acquire(&mut self, nrows: usize, ncols: usize) -> Dense {
         let n = nrows * ncols;
-        let mut data = match self.free.pop() {
-            Some(v) => v,
-            None => Vec::with_capacity(n),
+        if n == 0 {
+            return Dense { nrows, ncols, data: Vec::new() };
+        }
+        let i = self.free.partition_point(|v| v.capacity() < n);
+        let mut data = if i < self.free.len() {
+            self.free.remove(i)
+        } else {
+            self.allocs += 1;
+            Vec::with_capacity(n)
         };
         data.clear();
         data.resize(n, 0.0);
@@ -85,8 +128,48 @@ impl BufferPool {
     }
 
     pub fn release(&mut self, d: Dense) {
-        if self.free.len() < POOL_CAP && d.data.capacity() > 0 {
-            self.free.push(d.data);
+        if self.free.len() < self.cap && d.data.capacity() > 0 {
+            let i = self
+                .free
+                .partition_point(|v| v.capacity() <= d.data.capacity());
+            self.free.insert(i, d.data);
+        }
+    }
+
+    /// Pre-seed one free buffer of `n` floats (a posted-payload slot).
+    /// Counted in [`BufferPool::allocs`] like any other fresh allocation.
+    pub fn seed(&mut self, n: usize) {
+        if n == 0 {
+            return;
+        }
+        self.allocs += 1;
+        let v: Vec<f32> = Vec::with_capacity(n);
+        let i = self.free.partition_point(|b| b.capacity() <= v.capacity());
+        self.free.insert(i, v);
+    }
+}
+
+/// How a rank reaches its buffer pool: one-shot executions own a private
+/// per-rank pool (the seed behavior); sessions share a single pool across
+/// ranks behind a mutex so payloads released at the receiver are available
+/// to their producer again next epoch.
+pub(crate) enum PoolRef<'a> {
+    Own(BufferPool),
+    Shared(&'a Mutex<BufferPool>),
+}
+
+impl PoolRef<'_> {
+    pub fn acquire(&mut self, nrows: usize, ncols: usize) -> Dense {
+        match self {
+            PoolRef::Own(p) => p.acquire(nrows, ncols),
+            PoolRef::Shared(m) => m.lock().unwrap().acquire(nrows, ncols),
+        }
+    }
+
+    pub fn release(&mut self, d: Dense) {
+        match self {
+            PoolRef::Own(p) => p.release(d),
+            PoolRef::Shared(m) => m.lock().unwrap().release(d),
         }
     }
 }
@@ -196,17 +279,64 @@ mod tests {
     fn pool_recycles_allocations() {
         let mut pool = BufferPool::new();
         let a = pool.acquire(4, 8);
+        assert_eq!(pool.allocs, 1);
         let ptr = a.data.as_ptr();
         pool.release(a);
         let b = pool.acquire(2, 8); // smaller fits the same allocation
         assert_eq!(b.data.as_ptr(), ptr);
         assert_eq!(b.nrows, 2);
+        assert_eq!(pool.allocs, 1, "reuse must not count as an allocation");
         assert!(b.data.iter().all(|&x| x == 0.0), "acquire must zero");
-        // Growing reuses the vec (realloc allowed) and still zeroes.
+        // A request that fits no retained buffer allocates fresh (and
+        // counts) instead of growing a smaller one.
         pool.release(b);
         let c = pool.acquire(16, 16);
         assert_eq!(c.data.len(), 256);
+        assert_eq!(pool.allocs, 2);
         assert!(c.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn pool_best_fit_prefers_smallest_sufficient() {
+        let mut pool = BufferPool::new();
+        let big = pool.acquire(10, 10);
+        let small = pool.acquire(2, 2);
+        let (big_ptr, small_ptr) = (big.data.as_ptr(), small.data.as_ptr());
+        pool.release(big);
+        pool.release(small);
+        // A 4-float request must take the 4-capacity buffer, keeping the
+        // 100-capacity one free for a large request.
+        let got = pool.acquire(2, 2);
+        assert_eq!(got.data.as_ptr(), small_ptr);
+        let got_big = pool.acquire(5, 10);
+        assert_eq!(got_big.data.as_ptr(), big_ptr);
+        assert_eq!(pool.allocs, 2, "both requests were served from the pool");
+    }
+
+    #[test]
+    fn pool_seed_covers_later_acquires() {
+        let mut pool = BufferPool::with_cap(usize::MAX);
+        for n in [32, 8, 64] {
+            pool.seed(n);
+        }
+        assert_eq!(pool.allocs, 3);
+        // Any acquire sequence over the seeded sizes hits the pool.
+        let a = pool.acquire(2, 4);
+        let b = pool.acquire(4, 8);
+        let c = pool.acquire(8, 8);
+        assert_eq!(pool.allocs, 3, "seeded slots must absorb every acquire");
+        pool.release(a);
+        pool.release(b);
+        pool.release(c);
+        pool.seed(0); // no-op
+        assert_eq!(pool.allocs, 3);
+    }
+
+    #[test]
+    fn ckey_roundtrip() {
+        assert_eq!(ckey_decode(DIAG_KEY), None);
+        assert_eq!(ckey_decode(ckey(KIND_B, 7)), Some((KIND_B, 7)));
+        assert_eq!(ckey_decode(ckey(KIND_C, 0)), Some((KIND_C, 0)));
     }
 
     #[test]

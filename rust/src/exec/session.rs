@@ -1,0 +1,468 @@
+//! Epoch-persistent execution sessions (DESIGN.md §8): the GNN training
+//! loop multiplies the same Â every layer of every epoch, so everything
+//! that is a pure function of the *plan* — per-rank step programs, fold
+//! orders, posted-send payload layouts, exchange buffers — is derived once
+//! and replayed across `execute` calls instead of being rebuilt per call.
+//!
+//! The session owns one shared [`BufferPool`] for all ranks (payloads are
+//! released at the *receiver*, so per-rank pools would drain toward the
+//! receive-heavy ranks and re-allocate at the send-heavy ones every epoch)
+//! and pre-seeds it with the **payload layout**: one slot per buffer role
+//! the programs can ever hold live at once — every outgoing message, every
+//! remote partial, every pre-aggregation accumulator. Because reuse is
+//! best-fit and the layout is a strict upper bound on concurrent liveness,
+//! *no* execute call after warm-up can miss the pool, whatever the thread
+//! interleaving. That is the amortization contract asserted through
+//! [`crate::metrics::Amortization`]: plan time and fresh-allocation counts
+//! are exactly zero from the second epoch onward, and results stay
+//! bit-identical to cold per-epoch execution (same programs, same
+//! canonical fold order).
+
+use super::kernel::SpmmKernel;
+use super::pipeline::{ckey_decode, BufferPool, ExecOpts, PoolRef, KIND_B};
+use super::{build_program, rank_main, Ctx, ExecStats, Item, Msg, Program, RankStats};
+use crate::dense::Dense;
+use crate::metrics::Amortization;
+use crate::spmm::DistSpmm;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// A frozen plan + partition with persistent executor state, reusable
+/// across arbitrarily many `execute` calls. Build one with
+/// [`SpmmSession::new`] (or [`DistSpmm::into_session`]), optionally
+/// [`SpmmSession::warm`] it for a dense width, then call
+/// [`SpmmSession::execute`] once per product.
+pub struct SpmmSession {
+    dist: DistSpmm,
+    opts: ExecOpts,
+    prefers_tiles: bool,
+    /// Per-rank step programs, derived once from (plan, sched, opts).
+    programs: Vec<Program>,
+    /// Shared exchange-buffer pool (see module docs for why it is shared).
+    pool: Mutex<BufferPool>,
+    /// Persistent per-rank input blocks, refilled (not reallocated) per call.
+    b_locals: Vec<Dense>,
+    /// Persistent per-rank output blocks, zeroed (not reallocated) per call.
+    c_locals: Vec<Dense>,
+    /// Largest dense width the payload layout has been seeded for.
+    seeded_n: usize,
+    amort: Amortization,
+}
+
+impl SpmmSession {
+    /// Freeze `dist` into a session. `prefers_tiles` must match the kernel
+    /// the session will execute with ([`SpmmKernel::prefers_tiles`]) — a
+    /// mismatched kernel at execute time retargets the programs and the
+    /// retargeting cost shows up in that call's amortization record.
+    pub fn new(dist: DistSpmm, opts: ExecOpts, prefers_tiles: bool) -> SpmmSession {
+        let t0 = Instant::now();
+        let programs = build_all(&dist, &opts, prefers_tiles);
+        let nranks = dist.part.nparts;
+        let mut s = SpmmSession {
+            programs,
+            pool: Mutex::new(BufferPool::with_cap(usize::MAX)),
+            b_locals: (0..nranks).map(|_| Dense::zeros(0, 0)).collect(),
+            c_locals: (0..nranks).map(|_| Dense::zeros(0, 0)).collect(),
+            seeded_n: 0,
+            amort: Amortization::default(),
+            dist,
+            opts,
+            prefers_tiles,
+        };
+        s.amort.build_secs = t0.elapsed().as_secs_f64();
+        s
+    }
+
+    /// The frozen plan this session executes.
+    pub fn dist(&self) -> &DistSpmm {
+        &self.dist
+    }
+
+    pub fn opts(&self) -> ExecOpts {
+        self.opts
+    }
+
+    /// Change scheduling options. Only the diagonal tile height affects the
+    /// derived programs; overlap/worker changes are free.
+    pub fn set_opts(&mut self, opts: ExecOpts) {
+        let rebuild = opts.tile() != self.opts.tile();
+        self.opts = opts;
+        if rebuild {
+            let t0 = Instant::now();
+            self.programs = build_all(&self.dist, &self.opts, self.prefers_tiles);
+            self.amort.build_secs += t0.elapsed().as_secs_f64();
+        }
+    }
+
+    /// Amortization record: build cost plus per-call plan seconds and
+    /// fresh-allocation events. [`Amortization::steady_state`] is the
+    /// epoch-reuse guarantee.
+    pub fn amortization(&self) -> &Amortization {
+        &self.amort
+    }
+
+    /// Rebuild the programs for a kernel with a different tiling
+    /// preference, counted as build time. Calling this before the first
+    /// `execute` (as [`crate::gnn::Gcn::train`] does) keeps execute-time
+    /// plan seconds at zero even when the kernel changes; an unretargeted
+    /// mismatch is healed inside `execute` instead, at that call's cost.
+    pub fn retarget(&mut self, prefers_tiles: bool) {
+        if prefers_tiles == self.prefers_tiles {
+            return;
+        }
+        let t0 = Instant::now();
+        self.prefers_tiles = prefers_tiles;
+        self.programs = build_all(&self.dist, &self.opts, prefers_tiles);
+        self.amort.build_secs += t0.elapsed().as_secs_f64();
+    }
+
+    /// Eagerly seed the payload layout and persistent blocks for dense
+    /// width `n_dense` (counted as build time, not per-call plan time).
+    /// Calls with `b.ncols <= n_dense` then do zero planning work and zero
+    /// allocations from the very first epoch.
+    pub fn warm(&mut self, n_dense: usize) {
+        let t0 = Instant::now();
+        if self.seed_layout(n_dense) {
+            self.amort.build_secs += t0.elapsed().as_secs_f64();
+        }
+    }
+
+    /// Execute C = A·B, allocating the assembled global output. The
+    /// exchange path is fully persistent; only the returned matrix is
+    /// fresh. Use [`SpmmSession::execute_into`] to reuse an output buffer.
+    pub fn execute(
+        &mut self,
+        b: &Dense,
+        kernel: &(dyn SpmmKernel + Sync),
+    ) -> (Dense, ExecStats) {
+        let mut out = Dense::zeros(0, 0);
+        let stats = self.execute_into(b, kernel, &mut out);
+        (out, stats)
+    }
+
+    /// Execute C = A·B into `out` (reshaped as needed; a caller-held
+    /// buffer of the right capacity makes the whole call allocation-free).
+    /// Bit-identical to [`DistSpmm::execute_with`] on the same plan and
+    /// options — the session changes *when* state is built, never what the
+    /// ranks compute.
+    pub fn execute_into(
+        &mut self,
+        b: &Dense,
+        kernel: &(dyn SpmmKernel + Sync),
+        out: &mut Dense,
+    ) -> ExecStats {
+        let nranks = self.dist.part.nparts;
+        let n_dense = b.ncols;
+        assert_eq!(self.dist.part.n, b.nrows, "B height != planned matrix");
+
+        // Per-call baseline for the allocation record: lazy work below is
+        // attributed to *this* call (the steady-state assertion is on
+        // later calls, which must find everything already in place).
+        let allocs_before = self.pool.lock().unwrap().allocs;
+        let t_plan = Instant::now();
+        let mut planned = false;
+        if kernel.prefers_tiles() != self.prefers_tiles {
+            self.prefers_tiles = kernel.prefers_tiles();
+            self.programs = build_all(&self.dist, &self.opts, self.prefers_tiles);
+            planned = true;
+        }
+        planned |= self.seed_layout(n_dense);
+        // Exact zero when nothing was (re)planned — the steady-state gate.
+        let plan_secs = if planned { t_plan.elapsed().as_secs_f64() } else { 0.0 };
+
+        // Refill the persistent per-rank blocks (copies, no allocation:
+        // capacities were sized by seed_layout).
+        for p in 0..nranks {
+            let (r0, r1) = self.dist.part.range(p);
+            let bl = &mut self.b_locals[p];
+            bl.nrows = r1 - r0;
+            bl.ncols = n_dense;
+            bl.data.clear();
+            bl.data
+                .extend_from_slice(&b.data[r0 * n_dense..r1 * n_dense]);
+            let cl = &mut self.c_locals[p];
+            cl.nrows = r1 - r0;
+            cl.ncols = n_dense;
+            cl.data.clear();
+            cl.data.resize((r1 - r0) * n_dense, 0.0);
+        }
+
+        let dist = &self.dist;
+        let programs = &self.programs;
+        let pool = &self.pool;
+        let opts = self.opts;
+        let c_locals = &mut self.c_locals;
+        let b_locals = &self.b_locals;
+
+        let mut senders: Vec<Sender<Msg>> = Vec::with_capacity(nranks);
+        let mut inboxes: Vec<Option<Receiver<Msg>>> = Vec::with_capacity(nranks);
+        for _ in 0..nranks {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            inboxes.push(Some(rx));
+        }
+        let gate = (opts.workers > 0).then(|| super::ComputeGate::new(opts.workers));
+
+        let t0 = Instant::now();
+        let mut per_rank: Vec<Option<RankStats>> = (0..nranks).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            let rank_iter = inboxes
+                .iter_mut()
+                .zip(b_locals.iter())
+                .zip(c_locals.iter_mut())
+                .enumerate();
+            for (rank, ((inbox, b_local), c_local)) in rank_iter {
+                let senders = &senders;
+                let gate = gate.as_ref();
+                let inbox = inbox.take().unwrap();
+                handles.push(scope.spawn(move || {
+                    let mut ctx = Ctx {
+                        rank,
+                        part: &dist.part,
+                        plan: &dist.plan,
+                        sched: dist.sched.as_ref(),
+                        topo: &dist.topo,
+                        kernel,
+                        senders,
+                        inbox,
+                        stats: RankStats {
+                            sent_to: vec![0; nranks],
+                            ..RankStats::default()
+                        },
+                        opts,
+                        gate,
+                        t0,
+                        pool: PoolRef::Shared(pool),
+                    };
+                    rank_main(&mut ctx, &dist.blocks[rank], b_local, c_local, &programs[rank]);
+                    (rank, ctx.stats)
+                }));
+            }
+            for h in handles {
+                let (rank, stats) = h.join().expect("rank thread panicked");
+                per_rank[rank] = Some(stats);
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+
+        // Assemble: the contiguous ascending row ranges cover 0..n, so the
+        // global C is the concatenation of the per-rank blocks.
+        out.nrows = self.dist.part.n;
+        out.ncols = n_dense;
+        out.data.clear();
+        for cl in self.c_locals.iter() {
+            out.data.extend_from_slice(&cl.data);
+        }
+
+        let allocs = self.pool.lock().unwrap().allocs - allocs_before;
+        self.amort.record(plan_secs, allocs);
+        ExecStats {
+            per_rank: per_rank.into_iter().map(Option::unwrap).collect(),
+            wall_secs: wall,
+        }
+    }
+
+    /// Seed the pool with the payload layout at width `n` and size the
+    /// persistent blocks; no-op when already seeded at least this wide.
+    fn seed_layout(&mut self, n: usize) -> bool {
+        if n <= self.seeded_n {
+            return false;
+        }
+        let layout = payload_layout(&self.dist, &self.programs);
+        {
+            let mut pool = self.pool.lock().unwrap();
+            for rows in layout {
+                pool.seed(rows * n);
+            }
+        }
+        for p in 0..self.dist.part.nparts {
+            let len = self.dist.part.len(p);
+            self.b_locals[p] = Dense::zeros(len, n);
+            self.c_locals[p] = Dense::zeros(len, n);
+        }
+        self.seeded_n = n;
+        true
+    }
+}
+
+fn build_all(dist: &DistSpmm, opts: &ExecOpts, prefers_tiles: bool) -> Vec<Program> {
+    (0..dist.part.nparts)
+        .map(|rank| {
+            build_program(
+                rank,
+                &dist.part,
+                &dist.plan,
+                dist.sched.as_ref(),
+                opts,
+                prefers_tiles,
+            )
+        })
+        .collect()
+}
+
+/// Enumerate the posted-payload layout: the dense-row height of every
+/// buffer role the programs can hold live simultaneously — outgoing B
+/// posts, produced C partials, representative redistribution subsets,
+/// pre-aggregation accumulators, and the remote-partial scratch acquired
+/// while folding each incoming column-based contribution. One pool slot
+/// per role is a strict upper bound on concurrent liveness: each role
+/// acquires at most once per call and everything is back in the pool by
+/// the end of the call.
+fn payload_layout(dist: &DistSpmm, programs: &[Program]) -> Vec<usize> {
+    let part = &dist.part;
+    let plan = &dist.plan;
+    let sched = dist.sched.as_ref();
+    let mut rows = Vec::new();
+    for (r, prog) in programs.iter().enumerate() {
+        for post in &prog.b_posts {
+            rows.push(post.rows.len());
+        }
+        for item in &prog.items {
+            match item {
+                Item::ProduceDirectC { dst } => {
+                    rows.push(plan.pairs[*dst][r].a_row_compact.nrows);
+                }
+                Item::ProduceFlowC { flow } => {
+                    let f = &sched.expect("flow item implies a schedule").c_flows[*flow];
+                    rows.push(plan.pairs[f.dst][r].a_row_compact.nrows);
+                }
+                Item::DiagTile { .. } => {}
+            }
+        }
+        for &fi in prog.rep_b.values() {
+            let f = &sched.expect("rep duty implies a schedule").b_flows[fi];
+            for (_, crows) in &f.consumers {
+                rows.push(crows.len());
+            }
+        }
+        for &i in &prog.agg_flows {
+            rows.push(sched.expect("agg flow implies a schedule").c_flows[i].rows.len());
+        }
+        for &key in &prog.fold_keys {
+            if let Some((KIND_B, origin)) = ckey_decode(key) {
+                let pair = &plan.pairs[r][origin];
+                if pair.a_col_compact.nnz() > 0 {
+                    // The full-height partial, plus the compact row set the
+                    // sparse apply path gathers into — the branch predicate
+                    // is shared with `offer_col_contribution` so the two
+                    // cannot drift apart.
+                    rows.push(part.len(r));
+                    let touched = pair.a_col_compact.nonempty_rows().len();
+                    if super::col_contribution_is_compact(touched, part.len(r)) {
+                        rows.push(touched);
+                    }
+                }
+            }
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Strategy;
+    use crate::cover::Solver;
+    use crate::exec::kernel::NativeKernel;
+    use crate::sparse::gen;
+    use crate::topology::Topology;
+    use crate::util::rng::Rng;
+
+    fn planned(seed: u64, hier: bool) -> DistSpmm {
+        let a = gen::rmat(192, 2500, (0.55, 0.2, 0.19), false, seed);
+        DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(8), hier)
+    }
+
+    #[test]
+    fn session_matches_cold_execution_bitwise() {
+        for hier in [false, true] {
+            let d_cold = planned(21, hier);
+            let d_sess = planned(21, hier);
+            let mut rng = Rng::new(5);
+            let b = Dense::random(192, 16, &mut rng);
+            let (want, _) = d_cold.execute(&b, &NativeKernel);
+            let mut s = SpmmSession::new(d_sess, ExecOpts::default(), true);
+            for _ in 0..3 {
+                let (got, _) = s.execute(&b, &NativeKernel);
+                assert_eq!(got.data, want.data, "hier={hier}");
+            }
+        }
+    }
+
+    #[test]
+    fn session_steady_state_after_first_call() {
+        let mut s = SpmmSession::new(planned(22, true), ExecOpts::default(), true);
+        let mut rng = Rng::new(6);
+        let b = Dense::random(192, 8, &mut rng);
+        let mut out = Dense::zeros(0, 0);
+        for _ in 0..4 {
+            s.execute_into(&b, &NativeKernel, &mut out);
+        }
+        let a = s.amortization();
+        assert_eq!(a.calls(), 4);
+        assert!(a.alloc_events[0] > 0, "first call seeds the layout");
+        assert!(a.plan_secs[0] > 0.0);
+        for i in 1..4 {
+            assert_eq!(a.alloc_events[i], 0, "call {i} allocated");
+            assert_eq!(a.plan_secs[i], 0.0, "call {i} planned");
+        }
+        assert!(a.steady_state());
+    }
+
+    #[test]
+    fn warm_session_is_clean_from_the_first_call() {
+        let mut s = SpmmSession::new(planned(23, true), ExecOpts::default(), true);
+        s.warm(16);
+        assert!(s.amortization().build_secs > 0.0);
+        let mut rng = Rng::new(7);
+        // Narrower widths than the warmed one stay allocation-free too.
+        for n in [16usize, 4] {
+            let b = Dense::random(192, n, &mut rng);
+            let (_, _) = s.execute(&b, &NativeKernel);
+        }
+        let a = s.amortization();
+        assert_eq!(a.total_allocs(), 0, "warmed session must never allocate");
+        assert!(a.plan_secs.iter().all(|&t| t == 0.0));
+    }
+
+    #[test]
+    fn session_handles_width_growth_then_stabilizes() {
+        let mut s = SpmmSession::new(planned(24, false), ExecOpts::default(), true);
+        let mut rng = Rng::new(8);
+        let small = Dense::random(192, 4, &mut rng);
+        let big = Dense::random(192, 12, &mut rng);
+        s.execute(&small, &NativeKernel);
+        s.execute(&big, &NativeKernel); // grows: re-seeds at the new width
+        let a = s.amortization();
+        assert!(a.alloc_events[1] > 0, "growth call must re-seed");
+        assert!(a.plan_secs[1] > 0.0, "growth is planning work");
+        for _ in 0..3 {
+            s.execute(&big, &NativeKernel);
+            s.execute(&small, &NativeKernel);
+        }
+        // Every call after the growth one is clean, whatever the width mix.
+        let a = s.amortization();
+        assert_eq!(a.calls(), 8);
+        assert!(a.alloc_events[2..].iter().all(|&x| x == 0), "{:?}", a.alloc_events);
+        assert!(a.plan_secs[2..].iter().all(|&t| t == 0.0));
+    }
+
+    #[test]
+    fn session_opts_variants_bit_identical() {
+        let mut rng = Rng::new(9);
+        let b = Dense::random(192, 8, &mut rng);
+        let (want, _) = planned(25, true).execute(&b, &NativeKernel);
+        for opts in [
+            ExecOpts::sequential(),
+            ExecOpts { workers: 2, ..ExecOpts::default() },
+            ExecOpts { tile_rows: 7, ..ExecOpts::default() },
+        ] {
+            let mut s = SpmmSession::new(planned(25, true), ExecOpts::default(), true);
+            s.set_opts(opts);
+            let (got, _) = s.execute(&b, &NativeKernel);
+            assert_eq!(got.data, want.data, "{opts:?}");
+        }
+    }
+}

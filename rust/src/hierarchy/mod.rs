@@ -36,7 +36,7 @@ pub mod phase {
 /// Hierarchical column-based flow: source rank `src` serves destination
 /// group `dst_group` through one deduplicated inter-group transfer to `rep`,
 /// which redistributes intra-group.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct BFlow {
     pub src: usize,
     pub dst_group: usize,
@@ -52,7 +52,7 @@ pub struct BFlow {
 /// Hierarchical row-based flow: the members of `src_group` produce partial C
 /// rows for destination `dst`; `rep` pre-aggregates rows with equal index
 /// and sends the aggregate across the inter-group link once.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct CFlow {
     pub dst: usize,
     pub src_group: usize,
@@ -64,7 +64,7 @@ pub struct CFlow {
 }
 
 /// The two-stage overlapped hierarchical schedule.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct HierSchedule {
     pub nranks: usize,
     pub b_flows: Vec<BFlow>,
@@ -162,6 +162,54 @@ pub fn build(plan: &CommPlan, topo: &Topology) -> HierSchedule {
         .collect();
 
     HierSchedule { nranks: n, b_flows, c_flows, direct_b, direct_c }
+}
+
+/// Mirror a schedule for the transposed plan ([`crate::comm::CommPlan::
+/// transpose`]): transposing the matrix exchanges the two hierarchical
+/// patterns wholesale. A deduplicated inter-group B fetch (src → group)
+/// becomes a pre-aggregated C transmission (group → dst) with the *same*
+/// union rows, representative, and per-rank subsets — and vice versa;
+/// same-group direct transfers swap kind with src/dst reversed. No plan
+/// re-scan, no union recomputation: `mirror(build(P)) == build(Pᵀ)`
+/// (pinned by test), so the backward schedule is derived in O(schedule).
+pub fn mirror(sched: &HierSchedule) -> HierSchedule {
+    let b_flows = sched
+        .c_flows
+        .iter()
+        .map(|f| BFlow {
+            src: f.dst,
+            dst_group: f.src_group,
+            rep: f.rep,
+            rows: f.rows.clone(),
+            consumers: f.producers.clone(),
+        })
+        .collect();
+    let c_flows = sched
+        .b_flows
+        .iter()
+        .map(|f| CFlow {
+            dst: f.src,
+            src_group: f.dst_group,
+            rep: f.rep,
+            rows: f.rows.clone(),
+            producers: f.consumers.clone(),
+        })
+        .collect();
+    // Direct transfers swap kind and direction. `build` emits them in
+    // (dst, src) scan order; restore it after the swap.
+    let mut direct_b: Vec<(usize, usize, Vec<u32>)> = sched
+        .direct_c
+        .iter()
+        .map(|(src, dst, rows)| (*dst, *src, rows.clone()))
+        .collect();
+    direct_b.sort_by(|a, b| (a.1, a.0).cmp(&(b.1, b.0)));
+    let mut direct_c: Vec<(usize, usize, Vec<u32>)> = sched
+        .direct_b
+        .iter()
+        .map(|(src, dst, rows)| (*dst, *src, rows.clone()))
+        .collect();
+    direct_c.sort_by(|a, b| (a.1, a.0).cmp(&(b.1, b.0)));
+    HierSchedule { nranks: sched.nranks, b_flows, c_flows, direct_b, direct_c }
 }
 
 /// A point-to-point message with a tier-stage label, consumed by the
@@ -544,6 +592,32 @@ mod tests {
         assert_eq!(count(phase::S2_INTER_C), m.s2_inter_c.len());
         assert_eq!(count(phase::S2_INTRA_B), m.s2_intra_b.len());
         assert!(!stream.is_empty());
+    }
+
+    #[test]
+    fn mirror_equals_build_on_transposed_plan() {
+        // The O(schedule) mirror must produce exactly the schedule a full
+        // rebuild on the mirrored plan would: same flows, same reps, same
+        // unions, same ordering. Exercise several seeds and both a plan
+        // with and without row-based flows.
+        for (seed, strategy) in [
+            (3u64, Strategy::Joint(Solver::Koenig)),
+            (8, Strategy::Joint(Solver::Koenig)),
+            (5, Strategy::Column),
+            (6, Strategy::Row),
+        ] {
+            let a = gen::rmat(128, 1300, (0.55, 0.2, 0.19), false, seed);
+            let part = RowPartition::balanced(128, 8);
+            let blocks = split_1d(&a, &part);
+            let plan = comm::plan(&blocks, &part, strategy, None);
+            let topo = Topology::tsubame4(8);
+            let sched = build(&plan, &topo);
+            let mirrored = mirror(&sched);
+            let rebuilt = build(&plan.transpose(), &topo);
+            assert_eq!(mirrored, rebuilt, "seed {seed} {strategy:?}");
+            // Mirroring twice is the identity.
+            assert_eq!(mirror(&mirrored), sched, "seed {seed} double mirror");
+        }
     }
 
     #[test]

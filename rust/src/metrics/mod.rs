@@ -162,6 +162,51 @@ impl OverlapWindow {
     }
 }
 
+/// Amortization accounting for an epoch-persistent execution session
+/// ([`crate::exec::SpmmSession`]): how much planning work and how many
+/// fresh buffer allocations each `execute` call paid. The session contract
+/// is that everything is front-loaded — from the second call onward both
+/// series must be exactly zero ([`Amortization::steady_state`], the CI
+/// gate in `ablation_epoch_reuse --check`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Amortization {
+    /// One-time session construction seconds (program derivation, payload
+    /// layout, pool seeding done eagerly at build/warm time).
+    pub build_secs: f64,
+    /// Per-`execute`-call planning seconds (lazy program/layout work that
+    /// had not been warmed before the call).
+    pub plan_secs: Vec<f64>,
+    /// Per-`execute`-call fresh exchange-buffer allocation events
+    /// (pool misses + lazy seeds attributed to that call).
+    pub alloc_events: Vec<u64>,
+}
+
+impl Amortization {
+    /// Record one `execute` call's planning time and allocation events.
+    pub fn record(&mut self, plan_secs: f64, alloc_events: u64) {
+        self.plan_secs.push(plan_secs);
+        self.alloc_events.push(alloc_events);
+    }
+
+    /// Number of `execute` calls recorded.
+    pub fn calls(&self) -> usize {
+        self.plan_secs.len()
+    }
+
+    /// True when every call after the first did zero planning work and
+    /// zero fresh allocations (the epoch-reuse guarantee).
+    pub fn steady_state(&self) -> bool {
+        self.plan_secs.iter().skip(1).all(|&s| s == 0.0)
+            && self.alloc_events.iter().skip(1).all(|&a| a == 0)
+    }
+
+    /// Total allocation events across all calls (excluding `build_secs`-era
+    /// warm-up, which is not per-call).
+    pub fn total_allocs(&self) -> u64 {
+        self.alloc_events.iter().sum()
+    }
+}
+
 /// Load-imbalance factor of a per-rank load vector: max/mean (1.0 =
 /// perfectly balanced). Used with [`crate::partition::rank_nnz`] to score
 /// partitioners — the overlapped executor's wall clock tracks the max,
@@ -286,6 +331,21 @@ mod tests {
         assert!((load_imbalance(&[5, 5, 5, 5]) - 1.0).abs() < 1e-12);
         // One rank with everything over 4 ranks: max/mean = 4.
         assert!((load_imbalance(&[12, 0, 0, 0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn amortization_steady_state() {
+        let mut a = Amortization::default();
+        assert!(a.steady_state(), "empty series is trivially steady");
+        a.record(0.2, 17);
+        assert!(a.steady_state(), "first call may plan and allocate");
+        a.record(0.0, 0);
+        a.record(0.0, 0);
+        assert!(a.steady_state());
+        assert_eq!(a.calls(), 3);
+        assert_eq!(a.total_allocs(), 17);
+        a.record(0.0, 1);
+        assert!(!a.steady_state(), "late allocation must break steady state");
     }
 
     #[test]

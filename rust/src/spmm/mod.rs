@@ -11,6 +11,8 @@ use crate::sim::{self, SimJob, SimReport, Stage};
 use crate::sparse::Csr;
 use crate::topology::Topology;
 
+pub use crate::exec::session::SpmmSession;
+
 /// A fully planned distributed SpMM instance. Planning (steps 1–2 of the
 /// §5.1 workflow) happens once in [`DistSpmm::plan`] and is reused across
 /// executions with the same sparsity pattern — `prep_secs` records the
@@ -99,6 +101,64 @@ impl DistSpmm {
         let sched = hierarchical.then(|| hierarchy::build(&plan, &topo));
         let prep_secs = t0.elapsed().as_secs_f64();
         DistSpmm { part, blocks, plan, sched, topo, prep_secs }
+    }
+
+    /// Derive the plan for Aᵀ by **mirroring** this plan — no partition
+    /// search, no cover re-solve, no cost-model re-evaluation. Transposing
+    /// the matrix transposes each off-diagonal block, which exchanges the
+    /// row/column roles of its cover: pair (q→p) of A becomes pair (p→q)
+    /// of Aᵀ with `b_rows ↔ c_rows` ([`CommPlan::transpose`]), and the
+    /// hierarchical schedule mirrors flow-for-flow
+    /// ([`hierarchy::mirror`]). Covered (non-`full_block`) pairs keep
+    /// their exact per-pair volume — and hence MWVC optimality;
+    /// sparsity-oblivious `full_block` pairs swap ends
+    /// (`len(q) ↔ len(p)`), preserving the total. This is what makes
+    /// asymmetric operands cheap in iterative workloads: the backward Âᵀ
+    /// products of GNN training reuse the forward plan's preprocessing
+    /// verbatim.
+    ///
+    /// Requires the 1D square-SpMM setting (`split_1d` enforces a square
+    /// matrix, so rows and columns share `self.part`). `prep_secs` records
+    /// only the mirroring time, which is linear in the plan.
+    pub fn plan_transpose(&self) -> DistSpmm {
+        let t0 = std::time::Instant::now();
+        let n = self.part.nparts;
+        let plan = self.plan.transpose();
+        let blocks: Vec<LocalBlocks> = (0..n)
+            .map(|p| LocalBlocks {
+                rank: p,
+                diag: self.blocks[p].diag.transpose(),
+                off_diag: (0..n)
+                    .map(|q| {
+                        if q == p {
+                            Csr::zeros(self.part.len(p), self.part.len(q))
+                        } else {
+                            // Aᵀ^(p,q) = (A^(q,p))ᵀ, already in local coords.
+                            self.blocks[q].off_diag[p].transpose()
+                        }
+                    })
+                    .collect(),
+            })
+            .collect();
+        debug_assert_eq!(comm::validate::validate(&plan, &blocks), Ok(()));
+        let sched = self.sched.as_ref().map(hierarchy::mirror);
+        let prep_secs = t0.elapsed().as_secs_f64();
+        DistSpmm {
+            part: self.part.clone(),
+            blocks,
+            plan,
+            sched,
+            topo: self.topo.clone(),
+            prep_secs,
+        }
+    }
+
+    /// Freeze this plan into an epoch-persistent [`SpmmSession`] (per-rank
+    /// step programs, posted-payload layouts, and exchange buffers built
+    /// once, reused across every `execute`). `prefers_tiles` must match
+    /// the kernel the session will run with.
+    pub fn into_session(self, opts: exec::ExecOpts, prefers_tiles: bool) -> SpmmSession {
+        SpmmSession::new(self, opts, prefers_tiles)
     }
 
     /// Execute for real on in-process ranks with the default overlapped
@@ -338,6 +398,54 @@ mod tests {
             crate::partition::max_rank_nnz(&a, &nnz.part)
                 <= crate::partition::max_rank_nnz(&a, &bal.part)
         );
+    }
+
+    #[test]
+    fn plan_transpose_executes_a_transpose_times_b() {
+        // Asymmetric matrix: the mirrored plan must compute Aᵀ·B (not
+        // A·B), through both flat and hierarchical routing, and preserve
+        // the forward plan's total volume exactly.
+        let a = gen::rmat(128, 1500, (0.6, 0.22, 0.12), false, 31);
+        let at = a.transpose();
+        let mut rng = Rng::new(11);
+        let b = Dense::random(128, 16, &mut rng);
+        let want = at.spmm(&b);
+        for hier in [false, true] {
+            let fwd = DistSpmm::plan(
+                &a,
+                Strategy::Joint(Solver::Koenig),
+                Topology::tsubame4(8),
+                hier,
+            );
+            let bwd = fwd.plan_transpose();
+            assert_eq!(bwd.plan.total_volume(16), fwd.plan.total_volume(16));
+            assert_eq!(bwd.sched.is_some(), hier);
+            let (got, _) = bwd.execute(&b, &NativeKernel);
+            assert!(
+                want.diff_norm(&got) < 1e-3,
+                "hier={hier}: mirrored plan computed the wrong product"
+            );
+            // And the forward plan still computes A·B.
+            let (fgot, _) = fwd.execute(&b, &NativeKernel);
+            assert!(a.spmm(&b).diff_norm(&fgot) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn plan_transpose_simulates_and_sessions() {
+        let a = gen::powerlaw(256, 4000, 1.4, 32);
+        let fwd = DistSpmm::plan(&a, Strategy::Adaptive, Topology::tsubame4(8), true);
+        let bwd = fwd.plan_transpose();
+        assert!(bwd.simulate(16).total > 0.0);
+        let mut rng = Rng::new(12);
+        let b = Dense::random(256, 8, &mut rng);
+        let want = a.transpose().spmm(&b);
+        let mut session = bwd.into_session(crate::exec::ExecOpts::default(), true);
+        for _ in 0..2 {
+            let (got, _) = session.execute(&b, &NativeKernel);
+            assert!(want.diff_norm(&got) < 1e-3);
+        }
+        assert!(session.amortization().steady_state());
     }
 
     #[test]

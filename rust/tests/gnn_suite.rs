@@ -1,0 +1,323 @@
+//! GNN training engine test suite (PR 4): finite-difference gradient
+//! checks through the full distributed pipeline (forward Â sessions and
+//! mirrored Âᵀ backward sessions), strict loss decrease on a learnable
+//! toy target, bit-exact training determinism across every executor
+//! configuration and session-reuse mode, the epoch-reuse amortization
+//! contract, and the pinned `normalize_adj` edge-case behavior.
+
+use shiro::comm::Strategy;
+use shiro::cover::Solver;
+use shiro::dense::Dense;
+use shiro::exec::kernel::NativeKernel;
+use shiro::exec::ExecOpts;
+use shiro::gnn::{normalize_adj, Gcn, GcnConfig, NativeDense};
+use shiro::sparse::{gen, Coo, Csr};
+use shiro::topology::Topology;
+
+fn tiny_cfg() -> GcnConfig {
+    GcnConfig {
+        feature_dim: 6,
+        hidden_dim: 4,
+        epochs: 1,
+        lr: 0.0,
+        log_every: 1,
+        seed: 9,
+    }
+}
+
+/// Central finite differences on the training loss vs the analytic
+/// gradients from one forward+backward pass. Every product in the loss
+/// runs through the distributed sessions, so this check fails if the
+/// backward Âᵀ products are wrong — e.g. if an asymmetric adjacency were
+/// backpropagated through Â instead of the mirrored transpose plan.
+fn fd_gradient_check(adj: &Csr, label: &str) {
+    let mut gcn = Gcn::new(
+        adj,
+        Strategy::Joint(Solver::Koenig),
+        Topology::tsubame4(4),
+        true,
+        tiny_cfg(),
+    );
+    let (_, dw0, dw1) = gcn.loss_and_grads(&NativeKernel, &NativeDense);
+    let eps = 1e-2f32;
+    for which in 0..2 {
+        let grads = if which == 0 { dw0.clone() } else { dw1.clone() };
+        // Probe the largest-magnitude gradient entries: they carry the
+        // signal and sit furthest from relu kinks and f32 noise floors.
+        let mut idx: Vec<usize> = (0..grads.data.len()).collect();
+        idx.sort_by(|&i, &j| {
+            grads.data[j].abs().partial_cmp(&grads.data[i].abs()).unwrap()
+        });
+        let sample = &idx[..6.min(idx.len())];
+        let mut bad = 0usize;
+        for &i in sample {
+            let orig = if which == 0 { gcn.w0.data[i] } else { gcn.w1.data[i] };
+            let mut loss_at = |v: f32, gcn: &mut Gcn| -> f32 {
+                if which == 0 {
+                    gcn.w0.data[i] = v;
+                } else {
+                    gcn.w1.data[i] = v;
+                }
+                let (l, _, _) = gcn.loss_and_grads(&NativeKernel, &NativeDense);
+                l
+            };
+            let lp = loss_at(orig + eps, &mut gcn);
+            let lm = loss_at(orig - eps, &mut gcn);
+            loss_at(orig, &mut gcn);
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = grads.data[i];
+            let tol = 1e-3 + 0.25 * an.abs().max(fd.abs());
+            if (fd - an).abs() > tol {
+                eprintln!("{label} w{which}[{i}]: fd {fd} vs analytic {an}");
+                bad += 1;
+            }
+        }
+        // Allow one relu-kink outlier per matrix; more means the chain
+        // rule through the distributed products is broken.
+        assert!(
+            bad <= 1,
+            "{label} w{which}: {bad}/{} finite-difference mismatches",
+            sample.len()
+        );
+    }
+}
+
+#[test]
+fn gradients_match_finite_differences_symmetric() {
+    let adj = gen::rmat(32, 180, (0.5, 0.2, 0.2), true, 4);
+    fd_gradient_check(&adj, "symmetric");
+}
+
+#[test]
+fn gradients_match_finite_differences_asymmetric() {
+    // Directed graph: Âᵀ ≠ Â. The backward products run through the
+    // mirrored transpose plan; a plan that silently reused Â would shift
+    // every gradient and fail here.
+    let adj = gen::rmat(32, 180, (0.6, 0.25, 0.1), false, 6);
+    let a_hat = normalize_adj(&adj);
+    assert_ne!(
+        a_hat.transpose().indices,
+        a_hat.indices,
+        "test graph must be asymmetric"
+    );
+    fd_gradient_check(&adj, "asymmetric");
+}
+
+#[test]
+fn loss_strictly_decreasing_on_learnable_target() {
+    // The synthetic target is one propagation of a random signal — squarely
+    // learnable by a 2-layer GCN. Some learning rate in the sweep must give
+    // a *strictly* decreasing full loss trajectory.
+    let adj = gen::rmat(64, 500, (0.5, 0.2, 0.2), true, 11);
+    let mut tried = Vec::new();
+    for lr in [1.0f32, 0.5, 0.25, 0.1] {
+        let cfg = GcnConfig { epochs: 15, log_every: 1, lr, ..Default::default() };
+        let mut gcn = Gcn::new(
+            &adj,
+            Strategy::Joint(Solver::Koenig),
+            Topology::tsubame4(4),
+            true,
+            cfg,
+        );
+        let r = gcn.train(&NativeKernel, &NativeDense);
+        let ls: Vec<f32> = r.losses.iter().map(|(_, l)| *l).collect();
+        assert_eq!(ls.len(), 15, "log_every=1 must record every epoch");
+        let strictly_down = ls.windows(2).all(|w| w[1] < w[0]);
+        let learned = ls[ls.len() - 1] < ls[0] * 0.9;
+        if strictly_down && learned {
+            return;
+        }
+        tried.push((lr, ls[0], ls[ls.len() - 1], strictly_down));
+    }
+    panic!("no learning rate gave a strictly decreasing loss: {tried:?}");
+}
+
+#[test]
+fn training_trajectory_bit_identical_across_executor_configs() {
+    // The full loss trajectory — 3 distributed products per epoch, every
+    // epoch — must be bit-identical across overlap on/off, worker caps
+    // 1/2/4/8, and session-reuse vs cold per-epoch execution. This is the
+    // training-level face of the executor's canonical fold order.
+    let adj = gen::rmat(96, 900, (0.55, 0.2, 0.19), true, 13);
+    let cfg = GcnConfig { epochs: 4, log_every: 1, lr: 1.5, ..Default::default() };
+    let new_gcn = || {
+        Gcn::new(
+            &adj,
+            Strategy::Joint(Solver::Koenig),
+            Topology::tsubame4(8),
+            true,
+            cfg.clone(),
+        )
+    };
+    let bits = |losses: &[(usize, f32)]| -> Vec<(usize, u32)> {
+        losses.iter().map(|(e, l)| (*e, l.to_bits())).collect()
+    };
+    let want = bits(&new_gcn().train(&NativeKernel, &NativeDense).losses);
+    assert_eq!(want.len(), 4);
+    // Overlap off and worker caps.
+    let variants = [
+        ExecOpts::sequential(),
+        ExecOpts { workers: 1, ..ExecOpts::default() },
+        ExecOpts { workers: 2, ..ExecOpts::default() },
+        ExecOpts { workers: 4, ..ExecOpts::default() },
+        ExecOpts { workers: 8, ..ExecOpts::default() },
+    ];
+    for opts in variants {
+        let mut gcn = new_gcn();
+        gcn.set_exec_opts(opts);
+        let got = bits(&gcn.train(&NativeKernel, &NativeDense).losses);
+        assert_eq!(got, want, "trajectory diverged under {opts:?}");
+    }
+    // Session reuse vs cold per-epoch execution (fresh plans every epoch).
+    let got = bits(&new_gcn().train_cold(&NativeKernel, &NativeDense).losses);
+    assert_eq!(got, want, "cold per-epoch execution diverged from sessions");
+}
+
+#[test]
+fn session_reuse_contract_on_asymmetric_adjacency() {
+    // The PR's acceptance gate: from the second epoch onward zero planning
+    // work and zero new buffer allocations; outputs bit-identical to cold
+    // execution; backward Âᵀ products run through the mirrored plan —
+    // b_rows/c_rows roles exchanged pair-for-pair, volume preserved, no
+    // re-covering — including on an asymmetric adjacency.
+    let adj = gen::rmat(96, 900, (0.6, 0.25, 0.1), false, 17);
+    let cfg = GcnConfig { epochs: 3, log_every: 1, lr: 1.0, ..Default::default() };
+    let mut gcn = Gcn::new(
+        &adj,
+        Strategy::Joint(Solver::Koenig),
+        Topology::tsubame4(8),
+        true,
+        cfg.clone(),
+    );
+    let warm = gcn.train(&NativeKernel, &NativeDense);
+    for (name, a) in [
+        ("fwd", gcn.fwd.amortization()),
+        ("bwd", gcn.bwd.amortization()),
+    ] {
+        assert!(a.steady_state(), "{name}: {a:?}");
+        assert_eq!(a.total_allocs(), 0, "{name} allocated after plan-time warm-up");
+        assert!(
+            a.plan_secs.iter().all(|&t| t == 0.0),
+            "{name} planned inside execute: {:?}",
+            a.plan_secs
+        );
+    }
+    // fwd executes 2 products/epoch, bwd 1.
+    assert_eq!(gcn.fwd.amortization().calls(), 3 * 2);
+    assert_eq!(gcn.bwd.amortization().calls(), 3);
+    // Mirror structure: the backward pair (p→q flow) serves row-based
+    // exactly what the forward (q→p flow) served column-based. No cover
+    // was re-solved — the role exchange preserves per-pair volume.
+    let (fwd, bwd) = (&gcn.fwd.dist().plan, &gcn.bwd.dist().plan);
+    assert_eq!(fwd.total_volume(32), bwd.total_volume(32));
+    for p in 0..8 {
+        for q in 0..8 {
+            if p == q {
+                continue;
+            }
+            assert_eq!(bwd.pairs[p][q].c_rows, fwd.pairs[q][p].b_rows, "({p},{q})");
+            assert_eq!(bwd.pairs[p][q].b_rows, fwd.pairs[q][p].c_rows, "({p},{q})");
+        }
+    }
+    // Bit-identical to cold per-epoch execution on the same graph.
+    let mut cold_gcn = Gcn::new(
+        &adj,
+        Strategy::Joint(Solver::Koenig),
+        Topology::tsubame4(8),
+        true,
+        cfg,
+    );
+    let cold = cold_gcn.train_cold(&NativeKernel, &NativeDense);
+    assert_eq!(warm.losses.len(), cold.losses.len());
+    for ((e1, l1), (e2, l2)) in warm.losses.iter().zip(&cold.losses) {
+        assert_eq!((e1, l1.to_bits()), (e2, l2.to_bits()));
+    }
+}
+
+// ---------------------------------------------- normalize_adj edge cases ----
+
+/// 6-vertex graph exercising every pinned edge case: an isolated vertex,
+/// a duplicate diagonal entry, a negative edge, and an explicit zero.
+fn edge_case_graph() -> Csr {
+    let mut coo = Coo::new(6, 6);
+    coo.push(1, 1, 2.0); // duplicate diagonal mass (summed with the +1 loop)
+    coo.push(1, 1, 3.0);
+    coo.push(2, 3, -4.0); // negative edge: magnitude is used
+    coo.push(3, 2, -4.0);
+    coo.push(4, 5, 0.0); // explicit zero: stays a structural entry, weight 0
+    coo.push(5, 4, 1.0);
+    // Vertex 0 is isolated.
+    coo.to_csr()
+}
+
+#[test]
+fn normalize_adj_isolated_vertex_gets_unit_self_loop() {
+    let a_hat = normalize_adj(&edge_case_graph());
+    a_hat.validate().unwrap();
+    // Isolated vertex: exactly one entry, the diagonal, exactly 1.0 — not
+    // a huge clamped weight.
+    assert_eq!(a_hat.row_indices(0), &[0]);
+    assert_eq!(a_hat.row_values(0), &[1.0f32]);
+    // Every entry is finite and within [0, 1].
+    for r in 0..a_hat.nrows {
+        for &v in a_hat.row_values(r) {
+            assert!(v.is_finite(), "row {r}: non-finite weight {v}");
+            assert!((0.0..=1.0).contains(&v), "row {r}: weight {v} outside [0,1]");
+        }
+    }
+}
+
+#[test]
+fn normalize_adj_duplicate_diagonal_is_summed_once() {
+    let a_hat = normalize_adj(&edge_case_graph());
+    // Vertex 1: unscaled diagonal = 1 (loop) + |2| + |3| = 6 and it is the
+    // row's only entry, so deg = 6 and the normalized value is exactly 1.
+    assert_eq!(a_hat.row_indices(1), &[1], "duplicates must collapse to one entry");
+    assert_eq!(a_hat.row_values(1), &[1.0f32]);
+}
+
+#[test]
+fn normalize_adj_negative_and_zero_entries() {
+    let a_hat = normalize_adj(&edge_case_graph());
+    // Negative edge 2↔3: |−4| = 4, deg_2 = deg_3 = 5 ⇒ weight 4/5.
+    let k = a_hat.row_indices(2).iter().position(|&c| c == 3).unwrap();
+    assert!((a_hat.row_values(2)[k] - 0.8).abs() < 1e-6);
+    // Explicit zero 4→5 survives structurally with weight exactly 0.
+    let k = a_hat.row_indices(4).iter().position(|&c| c == 5).unwrap();
+    assert_eq!(a_hat.row_values(4)[k], 0.0);
+}
+
+#[test]
+fn training_survives_isolated_vertices() {
+    // End-to-end: a graph where a fifth of the vertices are isolated still
+    // plans, mirrors, and trains without NaNs.
+    let base = gen::rmat(48, 300, (0.5, 0.2, 0.2), true, 19);
+    let mut coo = Coo::new(64, 64); // vertices 48..64 isolated
+    for r in 0..48 {
+        for (k, &c) in base.row_indices(r).iter().enumerate() {
+            coo.push(r, c as usize, base.row_values(r)[k]);
+        }
+    }
+    let adj = coo.to_csr();
+    let cfg = GcnConfig { epochs: 10, log_every: 1, lr: 1.0, ..Default::default() };
+    let mut gcn = Gcn::new(
+        &adj,
+        Strategy::Joint(Solver::Koenig),
+        Topology::tsubame4(4),
+        true,
+        cfg,
+    );
+    let r = gcn.train(&NativeKernel, &NativeDense);
+    let first = r.losses.first().unwrap().1;
+    let last = r.losses.last().unwrap().1;
+    assert!(first.is_finite() && last.is_finite());
+    assert!(last < first, "isolated vertices broke training: {first} → {last}");
+    // The serial oracle agrees that Â rows for isolated vertices are pure
+    // self-loops: aggregation leaves their features untouched.
+    let a_hat = normalize_adj(&adj);
+    let probe = Dense::from_fn(64, 3, |i, j| (i * 3 + j) as f32);
+    let agg = a_hat.spmm(&probe);
+    for r in 48..64 {
+        assert_eq!(agg.row(r), probe.row(r), "isolated row {r} must pass through");
+    }
+}

@@ -10,6 +10,7 @@ use shiro::exec::{self, kernel::NativeKernel};
 use shiro::hierarchy;
 use shiro::partition::{rank_nnz, split_1d, Partitioner, RowPartition};
 use shiro::sparse::{gen, Csr};
+use shiro::spmm::DistSpmm;
 use shiro::topology::Topology;
 use shiro::util::proptest::{forall, Gen};
 
@@ -334,6 +335,104 @@ fn prop_executor_exact_for_random_configs() {
         let want = a.spmm(&b);
         let err = want.diff_norm(&got) / (want.max_abs() as f64 + 1e-30);
         assert!(err < 1e-3, "rel err {err} (ranks={ranks} hier={hier})");
+    });
+}
+
+#[test]
+fn prop_plan_transpose_mirror_valid_and_bitwise() {
+    // `plan_transpose` must produce a *validated* plan whose executed
+    // output is bit-identical to planning Aᵀ from scratch, across
+    // strategies × partitioners × random sparsity patterns. Inputs are
+    // integer-exact (shiro::bench::int_matrix's argument), so float
+    // addition is associative and bitwise equality is meaningful even
+    // though the mirrored and from-scratch plans split nonzeros
+    // differently.
+    forall("plan-transpose-mirror", 14, |g| {
+        let n = 1 << g.usize_in(5, 9); // 32..256
+        let a = shiro::bench::int_matrix(n, n * (3 + g.usize_in(0, 6)), g.rng().next_u64());
+        let ranks = g.usize_in(2, 9);
+        let n_dense = 1 + g.usize_in(0, 8);
+        let strategy = match g.usize_in(0, 6) {
+            0 => Strategy::Block,
+            1 => Strategy::Column,
+            2 => Strategy::Row,
+            3 => Strategy::Adaptive,
+            4 => Strategy::Joint(Solver::Greedy),
+            _ => Strategy::Joint(Solver::Koenig),
+        };
+        let partitioner = Partitioner::ALL[g.usize_in(0, Partitioner::ALL.len())];
+        let hier = g.bool();
+        let topo = Topology::tsubame4(ranks);
+        let params = shiro::plan::PlanParams::default();
+        let fwd =
+            DistSpmm::plan_partitioned(&a, strategy, topo.clone(), hier, &params, partitioner);
+        let bwd = fwd.plan_transpose();
+        // Structurally valid against the transposed blocks, role-swapped,
+        // and volume-preserving (the cover is reused, not re-solved).
+        assert_eq!(
+            comm::validate::validate(&bwd.plan, &bwd.blocks),
+            Ok(()),
+            "{strategy:?}/{} mirrored plan invalid",
+            partitioner.name()
+        );
+        assert_eq!(fwd.plan.total_volume(n_dense), bwd.plan.total_volume(n_dense));
+        for p in 0..ranks {
+            for q in 0..ranks {
+                // Sparsity-oblivious (full_block) pairs mirror to
+                // full_block — whole-block column sends both ways, no
+                // role exchange.
+                if p != q && !fwd.plan.pairs[q][p].full_block {
+                    assert_eq!(bwd.plan.pairs[p][q].c_rows, fwd.plan.pairs[q][p].b_rows);
+                    assert_eq!(bwd.plan.pairs[p][q].b_rows, fwd.plan.pairs[q][p].c_rows);
+                }
+            }
+        }
+        // Executed output: mirrored plan == from-scratch plan of Aᵀ ==
+        // serial oracle, bit for bit.
+        let at = a.transpose();
+        let scratch =
+            DistSpmm::plan_partitioned(&at, strategy, topo, hier, &params, partitioner);
+        let b = Dense::from_fn(n, n_dense, |i, j| ((i * 7 + j * 5) % 9) as f32 - 4.0);
+        let want = at.spmm(&b);
+        let (got_mirror, _) = bwd.execute(&b, &NativeKernel);
+        let (got_scratch, _) = scratch.execute(&b, &NativeKernel);
+        assert_eq!(
+            got_mirror.data, want.data,
+            "{strategy:?}/{}/hier={hier}: mirrored bits",
+            partitioner.name()
+        );
+        assert_eq!(
+            got_scratch.data, want.data,
+            "{strategy:?}/{}/hier={hier}: scratch bits",
+            partitioner.name()
+        );
+    });
+}
+
+#[test]
+fn prop_hier_mirror_matches_rebuild() {
+    // hierarchy::mirror(build(P)) == build(Pᵀ) on random plans — the
+    // backward schedule really is the forward schedule with the two
+    // patterns exchanged, at O(schedule) cost.
+    forall("hier-mirror", 20, |g| {
+        let a = random_matrix(g);
+        let ranks = 4 * g.usize_in(1, 5);
+        let part = random_partition(g, &a, ranks);
+        let blocks = split_1d(&a, &part);
+        let strategy = match g.usize_in(0, 3) {
+            0 => Strategy::Column,
+            1 => Strategy::Row,
+            _ => Strategy::Joint(Solver::Koenig),
+        };
+        let plan = comm::plan(&blocks, &part, strategy, None);
+        let topo = Topology::tsubame4(ranks);
+        let sched = hierarchy::build(&plan, &topo);
+        assert_eq!(
+            hierarchy::mirror(&sched),
+            hierarchy::build(&plan.transpose(), &topo),
+            "{strategy:?} ranks={ranks}"
+        );
+        assert_eq!(hierarchy::mirror(&hierarchy::mirror(&sched)), sched);
     });
 }
 
