@@ -1,10 +1,53 @@
-//! Local SpMM compute backends for the executor: a native Rust kernel and
-//! (via [`crate::runtime`]) the AOT-compiled Pallas/XLA kernel.
+//! Kernel abstraction for the distributed executor: the *distributed* op a
+//! plan executes ([`KernelOp`]) and the *local* compute backend that op
+//! dispatches to ([`SpmmKernel`] — native Rust here, the AOT-compiled
+//! Pallas/XLA kernel via [`crate::runtime`]).
+//!
+//! One communication plan serves all three distributed kernels (DESIGN.md
+//! §9): SpMM moves B rows in and partial C rows out; SDDMM moves dense
+//! rows *to the sparse pattern's owners* (the plan's B covers as-is plus
+//! its C covers reversed) and computes each edge value exactly once; the
+//! fused SDDMM→SpMM kernel computes edge values and immediately consumes
+//! them as the SpMM operand — no second exchange. The local trait below
+//! therefore covers all three: plain SpMM, SDDMM value computation, and
+//! SpMM with an override values buffer (the fused primitive). Every new
+//! method has a native default, so whole-matrix backends (PJRT) keep
+//! working unchanged and fall back to the native loops for the new ops.
 
 use crate::dense::Dense;
 use crate::sparse::Csr;
 
-/// A local SpMM kernel: computes C = A·B (and the accumulating variant).
+/// Which distributed kernel a plan executes — the kernel parameter on
+/// sessions ([`crate::exec::SpmmSession`]) and the one-shot entry points.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum KernelOp {
+    /// C = A·B: B rows in (column-based), partial C rows out (row-based).
+    #[default]
+    Spmm,
+    /// E = A ⊙ (X·Yᵀ) on A's pattern: dense rows ship to wherever the
+    /// plan placed each nonzero (B covers forward, C covers reversed);
+    /// the output stays plan-distributed and is assembled outside the
+    /// exchange. Stage-I-only dataflow — no aggregation.
+    Sddmm,
+    /// C = (A ⊙ (X·Yᵀ))·Y: SDDMM whose edge values feed the SpMM in
+    /// place (GAT-style attention). One exchange of X and Y rows in,
+    /// aggregated partial C rows out.
+    FusedSddmmSpmm,
+}
+
+impl KernelOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelOp::Spmm => "spmm",
+            KernelOp::Sddmm => "sddmm",
+            KernelOp::FusedSddmmSpmm => "fused-sddmm-spmm",
+        }
+    }
+}
+
+/// A local compute kernel: SpMM (C = A·B and variants), SDDMM value
+/// computation, and values-override SpMM — everything the distributed
+/// executor dispatches per rank.
 pub trait SpmmKernel: Sync {
     fn spmm(&self, a: &Csr, b: &Dense) -> Dense;
 
@@ -24,6 +67,40 @@ pub trait SpmmKernel: Sync {
         a.spmm_rows_acc(b, c, r0, r1);
     }
 
+    /// Row-tile SDDMM: write `vals[k] = a.data[k]·⟨x_row, y_col⟩` for
+    /// every stored entry of rows `r0..r1` (entry-order buffer). Entries
+    /// are independent, so tiling cannot change the bits; any backend
+    /// override must keep the ascending-feature dot order to stay
+    /// bitwise-compatible with the serial [`Csr::sddmm`] oracle.
+    fn sddmm_rows(&self, a: &Csr, x: &Dense, y: &Dense, vals: &mut [f32], r0: usize, r1: usize) {
+        a.sddmm_rows_into(x, y, vals, r0, r1);
+    }
+
+    /// Whole-pattern SDDMM (the non-tiled entry point).
+    fn sddmm_vals(&self, a: &Csr, x: &Dense, y: &Dense, vals: &mut [f32]) {
+        self.sddmm_rows(a, x, y, vals, 0, a.nrows);
+    }
+
+    /// Row-tile SpMM with an override values buffer (fused SDDMM→SpMM
+    /// consumption: the freshly computed edge values multiply B without
+    /// materializing a value-swapped matrix).
+    fn spmm_vals_rows(
+        &self,
+        a: &Csr,
+        vals: &[f32],
+        b: &Dense,
+        c: &mut Dense,
+        r0: usize,
+        r1: usize,
+    ) {
+        a.spmm_vals_rows_acc(vals, b, c, r0, r1);
+    }
+
+    /// Whole-pattern values-override SpMM accumulation.
+    fn spmm_vals_acc(&self, a: &Csr, vals: &[f32], b: &Dense, c: &mut Dense) {
+        self.spmm_vals_rows(a, vals, b, c, 0, a.nrows);
+    }
+
     /// Whether the executor may split this kernel's diagonal SpMM into row
     /// tiles. Backends with whole-matrix entry points (AOT/XLA artifacts
     /// compiled for fixed shapes) return `false`; the pipeline then runs
@@ -36,7 +113,7 @@ pub trait SpmmKernel: Sync {
     fn name(&self) -> &'static str;
 }
 
-/// Pure-Rust CSR SpMM (the serial reference path).
+/// Pure-Rust CSR kernels (the serial reference path for every op).
 pub struct NativeKernel;
 
 impl SpmmKernel for NativeKernel {
@@ -80,5 +157,46 @@ mod tests {
         let partial = NativeKernel.spmm(&a, &b);
         c2.add_assign(&partial);
         assert!(c1.diff_norm(&c2) < 1e-5);
+    }
+
+    #[test]
+    fn sddmm_defaults_match_oracle_bitwise() {
+        let a = gen::powerlaw(64, 500, 1.4, 5);
+        let mut rng = Rng::new(8);
+        let x = Dense::random(64, 6, &mut rng);
+        let y = Dense::random(64, 6, &mut rng);
+        let want = a.sddmm(&x, &y);
+        let mut vals = vec![0.0f32; a.nnz()];
+        NativeKernel.sddmm_vals(&a, &x, &y, &mut vals);
+        assert_eq!(vals, want.data);
+        // Tiled path, adversarial order.
+        let mut vals2 = vec![0.0f32; a.nnz()];
+        for r0 in (0..64).rev().step_by(5) {
+            let lo = r0.saturating_sub(4);
+            NativeKernel.sddmm_rows(&a, &x, &y, &mut vals2, lo, r0 + 1);
+        }
+        NativeKernel.sddmm_rows(&a, &x, &y, &mut vals2, 0, 64);
+        assert_eq!(vals2, want.data);
+    }
+
+    #[test]
+    fn fused_vals_spmm_matches_materialized() {
+        let a = gen::rmat(48, 400, (0.5, 0.2, 0.2), false, 9);
+        let mut rng = Rng::new(10);
+        let x = Dense::random(48, 4, &mut rng);
+        let y = Dense::random(48, 4, &mut rng);
+        let e = a.sddmm(&x, &y);
+        let want = e.spmm(&y);
+        let mut got = Dense::zeros(48, 4);
+        NativeKernel.spmm_vals_acc(&a, &e.data, &y, &mut got);
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn kernel_op_names() {
+        assert_eq!(KernelOp::Spmm.name(), "spmm");
+        assert_eq!(KernelOp::Sddmm.name(), "sddmm");
+        assert_eq!(KernelOp::FusedSddmmSpmm.name(), "fused-sddmm-spmm");
+        assert_eq!(KernelOp::default(), KernelOp::Spmm);
     }
 }

@@ -20,19 +20,30 @@
 //! step programs ([`crate::hierarchy::HierSchedule::rank_steps`]) — the
 //! same object the simulator lowers, so simulated and executed orderings
 //! cannot drift apart.
+//!
+//! The executor is **kernel-generic** (DESIGN.md §9): one plan executes
+//! any [`kernel::KernelOp`]. SpMM runs the full B-in / partial-C-out
+//! dataflow; SDDMM reuses the same B covers and *reverses* the C covers
+//! into X-row fetches ([`crate::hierarchy::sddmm_fetch`] — stage-I-only,
+//! no aggregation), computing each edge value exactly once at the rank the
+//! plan assigned its nonzero to; the fused SDDMM→SpMM kernel consumes the
+//! freshly computed edge values as the SpMM operand in place, so the only
+//! addition over SDDMM is the plan's ordinary aggregated C flow back.
 
 pub mod kernel;
 pub mod pipeline;
 pub mod session;
 
+pub use kernel::KernelOp;
 pub use pipeline::ExecOpts;
 pub use session::SpmmSession;
 
 use crate::comm::CommPlan;
 use crate::dense::Dense;
-use crate::hierarchy::{phase, HierSchedule, Step};
+use crate::hierarchy::{self, phase, HierSchedule, Step};
 use crate::metrics::{OverlapWindow, VolumeMatrix};
 use crate::partition::{LocalBlocks, RowPartition};
+use crate::sparse::Csr;
 use crate::topology::{Tier, Topology};
 use kernel::SpmmKernel;
 use pipeline::{
@@ -43,13 +54,23 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Instant;
 
 /// A message between ranks. `from` is the link-level sender (used for
-/// receiver-side tier accounting); `origin` on B payloads is the rank that
-/// owns the rows (differs from `from` when a representative forwards).
-/// Row index spaces: `B.rows` are origin-local B rows; `C.rows` /
-/// `CAgg.rows` are destination-local C rows.
+/// receiver-side tier accounting); `origin` on B/X payloads is the rank
+/// that owns the rows (differs from `from` when a representative
+/// forwards). Row index spaces: `B.rows` are origin-local B rows; `X.rows`
+/// are origin-local X rows (the origin's C rows of the reversed flow);
+/// `C.rows` / `CAgg.rows` are destination-local C rows.
 enum Msg {
     /// B rows owned by `origin` (column-based payload).
     B {
+        from: usize,
+        origin: usize,
+        rows: Vec<u32>,
+        data: Dense,
+    },
+    /// X rows owned by `origin`, fetched by a row-serving rank so it can
+    /// compute SDDMM edge values for `origin`'s pattern rows (the plan's
+    /// C covers reversed — SDDMM/fused kernels only).
+    X {
         from: usize,
         origin: usize,
         rows: Vec<u32>,
@@ -75,6 +96,7 @@ impl Msg {
     fn bytes(&self) -> u64 {
         let (rows, data) = match self {
             Msg::B { rows, data, .. } => (rows, data),
+            Msg::X { rows, data, .. } => (rows, data),
             Msg::C { rows, data, .. } => (rows, data),
             Msg::CAgg { rows, data, .. } => (rows, data),
         };
@@ -83,7 +105,10 @@ impl Msg {
 
     fn from_rank(&self) -> usize {
         match self {
-            Msg::B { from, .. } | Msg::C { from, .. } | Msg::CAgg { from, .. } => *from,
+            Msg::B { from, .. }
+            | Msg::X { from, .. }
+            | Msg::C { from, .. }
+            | Msg::CAgg { from, .. } => *from,
         }
     }
 }
@@ -111,6 +136,12 @@ pub struct RankStats {
     pub msgs_recv: u64,
     /// Measured bytes sent to each destination rank (volume-matrix row).
     pub sent_to: Vec<u64>,
+    /// The B-side subset of `sent_to`: bytes of B-row payloads only
+    /// (column-based covers, including representative forwarding). The
+    /// plan-sharing contract is that this matrix is *identical* between
+    /// SpMM and SDDMM executions of one frozen plan — the same dense rows
+    /// move on the same links either way.
+    pub sent_b_to: Vec<u64>,
     pub compute_secs: f64,
     /// Seconds blocked in `recv` with no compute left to hide it behind.
     pub idle_secs: f64,
@@ -159,6 +190,20 @@ impl ExecStats {
         m
     }
 
+    /// Measured per-pair B-row traffic only (the column-based covers):
+    /// the shared-plan invariant is `spmm.measured_b_volume() ==
+    /// sddmm.measured_b_volume()` for any two kernels run off one plan.
+    pub fn measured_b_volume(&self) -> VolumeMatrix {
+        let n = self.per_rank.len();
+        let mut m = VolumeMatrix::zeros(n);
+        for (src, r) in self.per_rank.iter().enumerate() {
+            for (dst, &b) in r.sent_b_to.iter().enumerate() {
+                m.add(src, dst, b);
+            }
+        }
+        m
+    }
+
     /// Overlap-window accounting across all ranks.
     pub fn overlap_window(&self) -> OverlapWindow {
         let mut w = OverlapWindow::default();
@@ -184,6 +229,9 @@ struct Ctx<'a> {
     part: &'a RowPartition,
     plan: &'a CommPlan,
     sched: Option<&'a HierSchedule>,
+    /// Stage-I-only X fetch schedule ([`crate::hierarchy::sddmm_fetch`]);
+    /// present only for hierarchical SDDMM/fused execution.
+    xsched: Option<&'a HierSchedule>,
     topo: &'a Topology,
     kernel: &'a dyn SpmmKernel,
     senders: &'a [Sender<Msg>],
@@ -221,6 +269,9 @@ impl<'a> Ctx<'a> {
         }
         self.stats.msgs_sent += 1;
         self.stats.sent_to[dst] += bytes;
+        if matches!(msg, Msg::B { .. }) {
+            self.stats.sent_b_to[dst] += bytes;
+        }
         self.senders[dst]
             .send(msg)
             .expect("receiver hung up — peer rank panicked");
@@ -273,10 +324,113 @@ pub fn run_with(
     kernel: &(dyn SpmmKernel + Sync),
     opts: &ExecOpts,
 ) -> (Dense, ExecStats) {
+    let (c, _, stats) =
+        run_kernel_with(KernelOp::Spmm, part, plan, blocks, sched, topo, None, b, kernel, opts);
+    (c, stats)
+}
+
+/// Execute distributed SDDMM on the *same* plan the SpMM engine uses:
+/// E = A ⊙ (X·Yᵀ) over A's pattern. Y rows move along the plan's B covers
+/// unchanged; X rows move along the plan's C covers reversed
+/// ([`crate::hierarchy::sddmm_fetch`]) so every rank can compute exactly
+/// the edge values of the nonzeros the plan assigned to it. The output is
+/// assembled from the plan-distributed per-rank values — each entry has
+/// exactly one producer, so the result is bitwise-identical to the serial
+/// [`Csr::sddmm`] oracle on any input.
+#[allow(clippy::too_many_arguments)]
+pub fn run_sddmm_with(
+    part: &RowPartition,
+    plan: &CommPlan,
+    blocks: &[LocalBlocks],
+    sched: Option<&HierSchedule>,
+    topo: &Topology,
+    x: &Dense,
+    y: &Dense,
+    kernel: &(dyn SpmmKernel + Sync),
+    opts: &ExecOpts,
+) -> (Csr, ExecStats) {
+    let (_, vals, stats) = run_kernel_with(
+        KernelOp::Sddmm,
+        part,
+        plan,
+        blocks,
+        sched,
+        topo,
+        Some(x),
+        y,
+        kernel,
+        opts,
+    );
+    (assemble_sddmm(part, blocks, plan, &vals), stats)
+}
+
+/// Execute the fused SDDMM→SpMM kernel: C = (A ⊙ (X·Yᵀ))·Y in one
+/// exchange. The SDDMM stage runs exactly as [`run_sddmm_with`]; the edge
+/// values are then consumed in place — column-served values multiply the
+/// already-received Y rows, row-served values multiply the server's local
+/// Y block — so the only traffic beyond SDDMM's is the plan's ordinary
+/// aggregated partial-C flow. No second B exchange, no edge-value gather:
+/// that is the fused kernel's strict byte saving over running SDDMM and
+/// SpMM as two passes (`ablation_fused`).
+#[allow(clippy::too_many_arguments)]
+pub fn run_fused_with(
+    part: &RowPartition,
+    plan: &CommPlan,
+    blocks: &[LocalBlocks],
+    sched: Option<&HierSchedule>,
+    topo: &Topology,
+    x: &Dense,
+    y: &Dense,
+    kernel: &(dyn SpmmKernel + Sync),
+    opts: &ExecOpts,
+) -> (Dense, ExecStats) {
+    let (c, _, stats) = run_kernel_with(
+        KernelOp::FusedSddmmSpmm,
+        part,
+        plan,
+        blocks,
+        sched,
+        topo,
+        Some(x),
+        y,
+        kernel,
+        opts,
+    );
+    (c, stats)
+}
+
+/// The kernel-generic driver behind every one-shot entry point: spawn one
+/// thread per rank, derive the per-rank program for `op`, run the
+/// overlapped (or phase-ordered) pipeline, and return the assembled dense
+/// output plus the per-rank SDDMM values (empty for SpMM).
+#[allow(clippy::too_many_arguments)]
+fn run_kernel_with(
+    op: KernelOp,
+    part: &RowPartition,
+    plan: &CommPlan,
+    blocks: &[LocalBlocks],
+    sched: Option<&HierSchedule>,
+    topo: &Topology,
+    x: Option<&Dense>,
+    b: &Dense,
+    kernel: &(dyn SpmmKernel + Sync),
+    opts: &ExecOpts,
+) -> (Dense, Vec<SddmmVals>, ExecStats) {
     assert_eq!(part.n, b.nrows);
     let nranks = part.nparts;
     assert_eq!(plan.nranks, nranks);
     let n_dense = b.ncols;
+    if op != KernelOp::Spmm {
+        let x = x.expect("SDDMM kernels require an X operand");
+        assert_eq!(x.nrows, part.n, "X height != planned matrix");
+        assert_eq!(x.ncols, n_dense, "SDDMM requires matching X/Y widths");
+    }
+    // The X fetch schedule is derived from the plan's schedule, not stored
+    // in it: the same frozen `sched` serves every kernel.
+    let xsched_owned = (op != KernelOp::Spmm)
+        .then(|| sched.map(hierarchy::sddmm_fetch))
+        .flatten();
+    let xsched = xsched_owned.as_ref();
 
     let mut senders = Vec::with_capacity(nranks);
     let mut inboxes = Vec::with_capacity(nranks);
@@ -288,7 +442,8 @@ pub fn run_with(
     let gate = (opts.workers > 0).then(|| ComputeGate::new(opts.workers));
 
     let t0 = Instant::now();
-    let mut results: Vec<Option<(Dense, RankStats)>> = (0..nranks).map(|_| None).collect();
+    let mut results: Vec<Option<(Dense, SddmmVals, RankStats)>> =
+        (0..nranks).map(|_| None).collect();
     std::thread::scope(|scope| {
         let mut handles = Vec::new();
         for (rank, inbox) in inboxes.iter_mut().enumerate() {
@@ -301,51 +456,185 @@ pub fn run_with(
                 n_dense,
                 b.data[r0 * n_dense..r1 * n_dense].to_vec(),
             );
+            let x_local = x.map(|x| {
+                Dense::from_vec(r1 - r0, n_dense, x.data[r0 * n_dense..r1 * n_dense].to_vec())
+            });
             handles.push(scope.spawn(move || {
                 let mut ctx = Ctx {
                     rank,
                     part,
                     plan,
                     sched,
+                    xsched,
                     topo,
                     kernel,
                     senders,
                     inbox,
-                    stats: RankStats { sent_to: vec![0; nranks], ..RankStats::default() },
+                    stats: RankStats {
+                        sent_to: vec![0; nranks],
+                        sent_b_to: vec![0; nranks],
+                        ..RankStats::default()
+                    },
                     opts: *opts,
                     gate,
                     t0,
                     pool: PoolRef::Own(BufferPool::new()),
                 };
-                let prog =
-                    build_program(rank, part, plan, sched, opts, kernel.prefers_tiles());
-                let mut c_local = Dense::zeros(part.len(rank), n_dense);
-                rank_main(&mut ctx, &blocks[rank], &b_local, &mut c_local, &prog);
-                (rank, c_local, ctx.stats)
+                let prog = build_program(
+                    rank,
+                    part,
+                    plan,
+                    sched,
+                    xsched,
+                    opts,
+                    kernel.prefers_tiles(),
+                    op,
+                );
+                // SDDMM has no dense output block; a zero-width C keeps the
+                // driver uniform without allocating.
+                let c_width = if op == KernelOp::Sddmm { 0 } else { n_dense };
+                let mut c_local = Dense::zeros(part.len(rank), c_width);
+                let mut vals = SddmmVals::default();
+                rank_main(
+                    &mut ctx,
+                    &blocks[rank],
+                    x_local.as_ref(),
+                    &b_local,
+                    &mut c_local,
+                    &mut vals,
+                    &prog,
+                );
+                (rank, c_local, vals, ctx.stats)
             }));
         }
         for h in handles {
-            let (rank, c, stats) = h.join().expect("rank thread panicked");
-            results[rank] = Some((c, stats));
+            let (rank, c, vals, stats) = h.join().expect("rank thread panicked");
+            results[rank] = Some((c, vals, stats));
         }
     });
     let wall = t0.elapsed().as_secs_f64();
 
-    let mut c_global = Dense::zeros(part.n, n_dense);
+    let c_width = if op == KernelOp::Sddmm { 0 } else { n_dense };
+    let mut c_global = Dense::zeros(part.n, c_width);
     let mut per_rank = Vec::with_capacity(nranks);
+    let mut all_vals = Vec::with_capacity(nranks);
     for (rank, slot) in results.into_iter().enumerate() {
-        let (c_local, stats) = slot.unwrap();
+        let (c_local, vals, stats) = slot.unwrap();
         let (r0, r1) = part.range(rank);
         assert_eq!(c_local.nrows, r1 - r0);
-        c_global.data[r0 * n_dense..r1 * n_dense].copy_from_slice(&c_local.data);
+        c_global.data[r0 * c_width..r1 * c_width].copy_from_slice(&c_local.data);
         per_rank.push(stats);
+        all_vals.push(vals);
     }
-    (c_global, ExecStats { per_rank, wall_secs: wall })
+    (c_global, all_vals, ExecStats { per_rank, wall_secs: wall })
+}
+
+/// Plan-distributed SDDMM output of one rank: the edge values it computed,
+/// laid out in entry order of the pattern operand that produced them.
+/// Buffers come from the executor's pool so sessions stay allocation-free
+/// in steady state; [`assemble_sddmm`] copies them into the global result.
+#[derive(Default)]
+pub(crate) struct SddmmVals {
+    /// Diagonal-block values (1 × nnz, entry order).
+    pub diag: Dense,
+    /// origin rank q → values for `pairs[self][q].a_col_compact`
+    /// (column-served entries, computed here from received Y rows).
+    pub col: BTreeMap<usize, Dense>,
+    /// destination rank p → values for `pairs[p][self].a_row_compact`
+    /// (row-served entries this rank computed for p from received X rows).
+    pub row: BTreeMap<usize, Dense>,
+}
+
+impl SddmmVals {
+    /// Release every buffer back into `pool` (the session steady-state
+    /// path: values are copied out by assembly, buffers recycle).
+    pub(crate) fn release_into(self, pool: &mut PoolRef) {
+        pool.release(self.diag);
+        for (_, d) in self.col {
+            pool.release(d);
+        }
+        for (_, d) in self.row {
+            pool.release(d);
+        }
+    }
+}
+
+/// Assemble the plan-distributed SDDMM values into the global sparse
+/// result. Each stored entry of A was computed by exactly one rank — the
+/// diagonal and column-served entries at the pattern owner p, the
+/// row-served entries at their server q — so assembly is a deterministic
+/// merge: per global row, the per-block runs are concatenated in block
+/// order and the column/row-served runs inside one block are interleaved
+/// by column index. The result's structure equals A's exactly.
+pub(crate) fn assemble_sddmm(
+    part: &RowPartition,
+    blocks: &[LocalBlocks],
+    plan: &CommPlan,
+    vals: &[SddmmVals],
+) -> Csr {
+    let n = part.n;
+    let nranks = part.nparts;
+    let total: usize = blocks
+        .iter()
+        .map(|b| b.diag.nnz() + b.off_diag.iter().map(Csr::nnz).sum::<usize>())
+        .sum();
+    let mut indptr = vec![0u64; n + 1];
+    let mut indices = Vec::with_capacity(total);
+    let mut data = Vec::with_capacity(total);
+    for p in 0..nranks {
+        let (r0, r1) = part.range(p);
+        for r in 0..(r1 - r0) {
+            for q in 0..nranks {
+                let c0 = part.range(q).0 as u32;
+                if q == p {
+                    let diag = &blocks[p].diag;
+                    let (lo, hi) = (diag.indptr[r] as usize, diag.indptr[r + 1] as usize);
+                    for k in lo..hi {
+                        indices.push(diag.indices[k] + c0);
+                        data.push(vals[p].diag.data[k]);
+                    }
+                } else {
+                    // `a_col_part` and `a_row_part` split this block's
+                    // entries disjointly, and each keeps entry order, so
+                    // the two per-row runs merge by (strictly distinct)
+                    // column index.
+                    let pair = &plan.pairs[p][q];
+                    let cp = &pair.a_col_part;
+                    let rp = &pair.a_row_part;
+                    let cvals = vals[p].col.get(&q);
+                    let rvals = vals[q].row.get(&p);
+                    let (mut ci, chi) = (cp.indptr[r] as usize, cp.indptr[r + 1] as usize);
+                    let (mut ri, rhi) = (rp.indptr[r] as usize, rp.indptr[r + 1] as usize);
+                    while ci < chi || ri < rhi {
+                        let take_col = if ri >= rhi {
+                            true
+                        } else if ci >= chi {
+                            false
+                        } else {
+                            cp.indices[ci] < rp.indices[ri]
+                        };
+                        if take_col {
+                            indices.push(cp.indices[ci] + c0);
+                            data.push(cvals.expect("missing column-served values").data[ci]);
+                            ci += 1;
+                        } else {
+                            indices.push(rp.indices[ri] + c0);
+                            data.push(rvals.expect("missing row-served values").data[ri]);
+                            ri += 1;
+                        }
+                    }
+                }
+            }
+            indptr[r0 + r + 1] = indices.len() as u64;
+        }
+    }
+    Csr { nrows: n, ncols: n, indptr, indices, data }
 }
 
 // ------------------------------------------------------- rank program ----
 
-/// An eager outgoing B payload (gather + send; no SpMM on this side).
+/// An eager outgoing dense-row payload (gather + send; no compute on this
+/// side). Used for both B posts and — in SDDMM/fused programs — X posts.
 struct BPost {
     dst: usize,
     rows: Vec<u32>,
@@ -361,24 +650,49 @@ enum Item {
     /// Hierarchical partial production for `c_flows[flow]`: SpMM then
     /// route to the flow's rep (or fold locally when rep == self).
     ProduceFlowC { flow: usize },
-    /// One diagonal-block SpMM tile.
+    /// One diagonal-block tile: SpMM, SDDMM values, or both (fused),
+    /// depending on the program's kernel op.
     DiagTile { r0: usize, r1: usize },
 }
 
-/// The fully derived per-rank program: what to send, what to compute, what
-/// to expect, and in which canonical order contributions fold.
+/// How a fused row-served partial reaches its destination once the X rows
+/// that unlock it have arrived: the same two routes SpMM's proactive
+/// `Produce*` items use, looked up reactively by origin.
+#[derive(Clone, Copy)]
+enum RowRoute {
+    /// Send `Msg::C` straight to the destination (flat pair or same-group
+    /// direct transfer).
+    Direct,
+    /// Route through `c_flows[i]`'s representative (or fold locally when
+    /// this rank is the rep).
+    Flow(usize),
+}
+
+/// The fully derived per-rank program: which kernel op, what to send, what
+/// to compute, what to expect, and in which canonical order contributions
+/// fold.
 #[derive(Default)]
 struct Program {
+    /// The distributed kernel this program executes.
+    op: KernelOp,
     b_posts: Vec<BPost>,
+    /// X-row posts (SDDMM/fused): the plan's C covers reversed.
+    x_posts: Vec<BPost>,
     items: Vec<Item>,
     /// Total incoming messages (of any kind) this rank must consume.
     expect_msgs: usize,
-    /// Canonical contribution keys for the local C fold.
+    /// Canonical contribution keys for the local C fold (empty for SDDMM,
+    /// which accumulates nothing — every edge value has one producer).
     fold_keys: Vec<u64>,
     /// Flow indices for which this rank is the pre-aggregation rep.
     agg_flows: Vec<usize>,
     /// origin → b_flow index for flows this rank redistributes as rep.
     rep_b: BTreeMap<usize, usize>,
+    /// origin → X-schedule b_flow index for X flows this rank reps.
+    rep_x: BTreeMap<usize, usize>,
+    /// Fused only: destination → route for the row-served partial this
+    /// rank produces when that destination's X rows arrive.
+    row_route: BTreeMap<usize, RowRoute>,
 }
 
 /// Sends deferred by the phase-ordered (`overlap: false`) schedule.
@@ -389,22 +703,56 @@ struct Deferred {
     self_aggs: Vec<(usize, Vec<u32>, Dense)>,
 }
 
-/// Derive rank `rank`'s full program from the plan/schedule. A pure
-/// function of (plan, schedule, options, kernel tiling preference) — the
-/// session layer precomputes these once and replays them every epoch.
+/// Derive rank `rank`'s full program for kernel `op` from the plan and
+/// schedules. A pure function of (plan, schedules, options, kernel tiling
+/// preference, op) — the session layer precomputes these once per op and
+/// replays them every call. `xsched` must be
+/// [`crate::hierarchy::sddmm_fetch`] of `sched` (present iff `sched` is
+/// and `op` is not SpMM).
+#[allow(clippy::too_many_arguments)]
 fn build_program(
     rank: usize,
     part: &RowPartition,
     plan: &CommPlan,
     sched: Option<&HierSchedule>,
+    xsched: Option<&HierSchedule>,
     opts: &ExecOpts,
     prefers_tiles: bool,
+    op: KernelOp,
 ) -> Program {
-    let mut p = match sched {
-        None => flat_program(rank, part, plan),
-        Some(s) => hier_program(rank, plan, s),
-    };
-    p.fold_keys.push(DIAG_KEY);
+    let mut p = Program { op, ..Program::default() };
+    // SDDMM folds nothing: each edge value has exactly one producer, so B
+    // arrivals fill disjoint value buffers instead of accumulating.
+    let with_fold = op != KernelOp::Sddmm;
+    match sched {
+        None => flat_b_side(&mut p, rank, part, plan, with_fold),
+        Some(s) => hier_b_side(&mut p, rank, s, with_fold),
+    }
+    match op {
+        KernelOp::Spmm => match sched {
+            None => flat_c_side(&mut p, rank, plan, true),
+            Some(s) => hier_c_side(&mut p, rank, plan, s, true),
+        },
+        KernelOp::Sddmm => match xsched {
+            None => flat_x_side(&mut p, rank, plan),
+            Some(xs) => hier_x_side(&mut p, rank, xs),
+        },
+        KernelOp::FusedSddmmSpmm => {
+            match xsched {
+                None => flat_x_side(&mut p, rank, plan),
+                Some(xs) => hier_x_side(&mut p, rank, xs),
+            }
+            // The C flow back is the plan's ordinary one — produced
+            // reactively (on X arrival) instead of as local items.
+            match sched {
+                None => flat_c_side(&mut p, rank, plan, false),
+                Some(s) => hier_c_side(&mut p, rank, plan, s, false),
+            }
+        }
+    }
+    if with_fold {
+        p.fold_keys.push(DIAG_KEY);
+    }
     // Diagonal tiles go last: partial production unblocks other ranks, the
     // diagonal only feeds this one. Kernels with whole-matrix entry points
     // (PJRT) get a single full-range tile, dispatched via `spmm_acc`.
@@ -419,12 +767,11 @@ fn build_program(
     p
 }
 
-/// Flat all-to-all program: the [`CommPlan`] pairs, mirrored for the
-/// expected-receive side. (A pair is expected iff its sender would emit it
-/// — in particular a `full_block` pair over an empty source block sends
-/// nothing and must not be awaited.)
-fn flat_program(r: usize, part: &RowPartition, plan: &CommPlan) -> Program {
-    let mut p = Program::default();
+/// Flat B side: outgoing B posts plus the mirrored receive expectations.
+/// (A pair is expected iff its sender would emit it — in particular a
+/// `full_block` pair over an empty source block sends nothing and must not
+/// be awaited.)
+fn flat_b_side(p: &mut Program, r: usize, part: &RowPartition, plan: &CommPlan, with_fold: bool) {
     for q in 0..plan.nranks {
         if q == r {
             continue;
@@ -439,29 +786,69 @@ fn flat_program(r: usize, part: &RowPartition, plan: &CommPlan) -> Program {
         if !rows.is_empty() {
             p.b_posts.push(BPost { dst: q, rows, phase: crate::sim::FLAT_STAGE });
         }
-        // Row-based: partial C rows we compute for q.
-        if !pair.c_rows.is_empty() {
-            p.items.push(Item::ProduceDirectC { dst: q });
-        }
-        // Mirror of the above at peer q: what we expect to receive.
+        // Mirror at peer q: what we expect to receive.
         let my = &plan.pairs[r][q];
         let in_rows = if my.full_block { part.len(q) } else { my.b_rows.len() };
         if in_rows > 0 {
             p.expect_msgs += 1;
-            p.fold_keys.push(ckey(KIND_B, q));
+            if with_fold {
+                p.fold_keys.push(ckey(KIND_B, q));
+            }
         }
-        if !my.c_rows.is_empty() {
+    }
+}
+
+/// Flat C side: partial-production duties (as proactive items for SpMM,
+/// as reactive row routes for the fused kernel) plus the mirrored receive
+/// expectations and fold keys.
+fn flat_c_side(p: &mut Program, r: usize, plan: &CommPlan, produce: bool) {
+    for q in 0..plan.nranks {
+        if q == r {
+            continue;
+        }
+        // Row-based: partial C rows we compute for q.
+        if !plan.pairs[q][r].c_rows.is_empty() {
+            if produce {
+                p.items.push(Item::ProduceDirectC { dst: q });
+            } else {
+                p.row_route.insert(q, RowRoute::Direct);
+            }
+        }
+        if !plan.pairs[r][q].c_rows.is_empty() {
             p.expect_msgs += 1;
             p.fold_keys.push(ckey(KIND_C, q));
         }
     }
-    p
 }
 
-/// Hierarchical program: this rank's slice of the schedule's step stream
-/// ([`HierSchedule::rank_steps`]) plus the mirrored receive expectations.
-fn hier_program(r: usize, plan: &CommPlan, sched: &HierSchedule) -> Program {
-    let mut p = Program::default();
+/// Flat X side (SDDMM/fused): the plan's C covers reversed — we post our X
+/// rows to every rank that row-serves us, and expect X rows from every
+/// rank we row-serve.
+fn flat_x_side(p: &mut Program, r: usize, plan: &CommPlan) {
+    for q in 0..plan.nranks {
+        if q == r {
+            continue;
+        }
+        // q computes edge values for our pattern rows c_rows[r][q]; it
+        // needs exactly those X rows of ours.
+        let pair = &plan.pairs[r][q];
+        if !pair.c_rows.is_empty() {
+            p.x_posts.push(BPost {
+                dst: q,
+                rows: pair.c_rows.clone(),
+                phase: phase::S1_FETCH_X,
+            });
+        }
+        // Mirror: the X rows we need from q to serve its pattern rows.
+        if !plan.pairs[q][r].c_rows.is_empty() {
+            p.expect_msgs += 1;
+        }
+    }
+}
+
+/// Hierarchical B side of `sched` (its stage-I fetch pattern): posts in
+/// [`HierSchedule::rank_steps`] order plus mirrored expectations.
+fn hier_b_side(p: &mut Program, r: usize, sched: &HierSchedule, with_fold: bool) {
     for step in sched.rank_steps(r) {
         match step {
             Step::InterB(i) => {
@@ -472,12 +859,6 @@ fn hier_program(r: usize, plan: &CommPlan, sched: &HierSchedule) -> Program {
                     phase: phase::S1_INTER_B,
                 });
             }
-            Step::ProduceC(i) => p.items.push(Item::ProduceFlowC { flow: i }),
-            Step::DirectC(i) => {
-                let (_, dst, rows) = &sched.direct_c[i];
-                debug_assert_eq!(&plan.pairs[*dst][r].c_rows, rows);
-                p.items.push(Item::ProduceDirectC { dst: *dst });
-            }
             Step::DirectB(i) => {
                 let (_, dst, rows) = &sched.direct_b[i];
                 p.b_posts.push(BPost {
@@ -486,9 +867,9 @@ fn hier_program(r: usize, plan: &CommPlan, sched: &HierSchedule) -> Program {
                     phase: phase::S2_INTRA_B,
                 });
             }
+            Step::ProduceC(_) | Step::DirectC(_) => {}
         }
     }
-    // Expected receives + canonical fold keys, mirrored from the schedule.
     for (i, f) in sched.b_flows.iter().enumerate() {
         if f.rep == r {
             p.expect_msgs += 1; // the stage-I inter-group arrival
@@ -496,7 +877,9 @@ fn hier_program(r: usize, plan: &CommPlan, sched: &HierSchedule) -> Program {
         }
         if let Some((_, rows)) = f.consumers.iter().find(|(c, _)| *c == r) {
             if !rows.is_empty() {
-                p.fold_keys.push(ckey(KIND_B, f.src));
+                if with_fold {
+                    p.fold_keys.push(ckey(KIND_B, f.src));
+                }
                 if f.rep != r {
                     p.expect_msgs += 1; // forwarded to us as Msg::B
                 }
@@ -506,7 +889,35 @@ fn hier_program(r: usize, plan: &CommPlan, sched: &HierSchedule) -> Program {
     for (src, dst, rows) in &sched.direct_b {
         if *dst == r && !rows.is_empty() {
             p.expect_msgs += 1;
-            p.fold_keys.push(ckey(KIND_B, *src));
+            if with_fold {
+                p.fold_keys.push(ckey(KIND_B, *src));
+            }
+        }
+    }
+}
+
+/// Hierarchical C side of `sched`: production duties (items or reactive
+/// routes) plus rep/aggregation and receive expectations.
+fn hier_c_side(p: &mut Program, r: usize, plan: &CommPlan, sched: &HierSchedule, produce: bool) {
+    for step in sched.rank_steps(r) {
+        match step {
+            Step::ProduceC(i) => {
+                if produce {
+                    p.items.push(Item::ProduceFlowC { flow: i });
+                } else {
+                    p.row_route.insert(sched.c_flows[i].dst, RowRoute::Flow(i));
+                }
+            }
+            Step::DirectC(i) => {
+                let (_, dst, rows) = &sched.direct_c[i];
+                debug_assert_eq!(&plan.pairs[*dst][r].c_rows, rows);
+                if produce {
+                    p.items.push(Item::ProduceDirectC { dst: *dst });
+                } else {
+                    p.row_route.insert(*dst, RowRoute::Direct);
+                }
+            }
+            Step::InterB(_) | Step::DirectB(_) => {}
         }
     }
     for (i, f) in sched.c_flows.iter().enumerate() {
@@ -525,7 +936,57 @@ fn hier_program(r: usize, plan: &CommPlan, sched: &HierSchedule) -> Program {
             p.fold_keys.push(ckey(KIND_C, *src));
         }
     }
-    p
+}
+
+/// Hierarchical X side (SDDMM/fused): the stage-I-only fetch schedule
+/// produced by [`crate::hierarchy::sddmm_fetch`], consumed with exactly
+/// the B-side mechanics — union posts to reps, rep redistribution, direct
+/// same-group transfers — but tracked separately (`x_posts`/`rep_x`) so
+/// arrivals dispatch to the row-serving compute path.
+fn hier_x_side(p: &mut Program, r: usize, xsched: &HierSchedule) {
+    debug_assert!(
+        xsched.c_flows.is_empty() && xsched.direct_c.is_empty(),
+        "X schedule must be stage-I-only (hierarchy::sddmm_fetch)"
+    );
+    for step in xsched.rank_steps(r) {
+        match step {
+            Step::InterB(i) => {
+                let f = &xsched.b_flows[i];
+                p.x_posts.push(BPost {
+                    dst: f.rep,
+                    rows: f.rows.clone(),
+                    phase: phase::S1_FETCH_X,
+                });
+            }
+            Step::DirectB(i) => {
+                let (_, dst, rows) = &xsched.direct_b[i];
+                p.x_posts.push(BPost {
+                    dst: *dst,
+                    rows: rows.clone(),
+                    phase: phase::S1_FETCH_X,
+                });
+            }
+            Step::ProduceC(_) | Step::DirectC(_) => {
+                unreachable!("stage-I-only schedule has no C steps")
+            }
+        }
+    }
+    for (i, f) in xsched.b_flows.iter().enumerate() {
+        if f.rep == r {
+            p.expect_msgs += 1;
+            p.rep_x.insert(f.src, i);
+        }
+        if let Some((_, rows)) = f.consumers.iter().find(|(c, _)| *c == r) {
+            if !rows.is_empty() && f.rep != r {
+                p.expect_msgs += 1; // forwarded to us as Msg::X
+            }
+        }
+    }
+    for (_, dst, rows) in &xsched.direct_b {
+        if *dst == r && !rows.is_empty() {
+            p.expect_msgs += 1;
+        }
+    }
 }
 
 // -------------------------------------------------- aggregation state ----
@@ -628,17 +1089,29 @@ pub(crate) fn col_contribution_is_compact(touched: usize, block_rows: usize) -> 
     touched * 2 < block_rows.max(1)
 }
 
-/// Remote column-based computation for B rows arriving from `origin`: the
-/// received rows are packed in `pair.b_rows` order, the column space of
-/// the precomputed `a_col_compact` operand — multiply directly, then fold
-/// the partial in canonical order (§Perf opt-1 + determinism contract).
-/// Sparse partials (few touched output rows) park and apply as compact
-/// row sets so neither the parked memory nor the apply-time add pays for
-/// the whole block; dense partials add the full block in one pass.
-fn offer_col_contribution(
+/// Consume B rows arriving from `origin` (packed in `pair.b_rows` order,
+/// the column space of the precomputed `a_col_compact` operand), per
+/// kernel op:
+///
+/// - **SpMM**: multiply directly, then fold the partial in canonical order
+///   (§Perf opt-1 + determinism contract). Sparse partials (few touched
+///   output rows) park and apply as compact row sets so neither the parked
+///   memory nor the apply-time add pays for the whole block; dense
+///   partials add the full block in one pass.
+/// - **SDDMM**: the received rows are the Y operand of the column-served
+///   entries — compute their edge values into this rank's value buffer.
+///   Nothing folds: each entry has exactly one producer.
+/// - **Fused**: SDDMM as above, then the fresh values immediately multiply
+///   the *same received Y rows* ([`SpmmKernel::spmm_vals_acc`]) and the
+///   partial folds exactly like SpMM's — no second exchange.
+#[allow(clippy::too_many_arguments)]
+fn consume_b(
     ctx: &mut Ctx,
+    op: KernelOp,
     fold: &mut OrderedFold<Contribution>,
     c_local: &mut Dense,
+    x_local: Option<&Dense>,
+    vals_out: &mut SddmmVals,
     origin: usize,
     rows: &[u32],
     data: Dense,
@@ -647,6 +1120,27 @@ fn offer_col_contribution(
     let kernel = ctx.kernel;
     let gate = ctx.gate;
     let pair = &plan.pairs[ctx.rank][origin];
+    if op == KernelOp::Sddmm {
+        let mut v = ctx.pool.acquire(1, pair.a_col_compact.nnz());
+        if pair.a_col_compact.nnz() > 0 {
+            debug_assert_eq!(rows.len(), pair.a_col_compact.ncols);
+            if !pair.full_block {
+                debug_assert_eq!(rows, &pair.b_rows[..]);
+            }
+            let x = x_local.expect("SDDMM consumes B with an X operand");
+            let t = ctx.now();
+            let dt = gated(gate, || {
+                let t0 = Instant::now();
+                kernel.sddmm_vals(&pair.a_col_compact, x, &data, &mut v.data);
+                t0.elapsed().as_secs_f64()
+            });
+            ctx.stats.compute_secs += dt;
+            ctx.span(phase::COMPUTE_REMOTE, t);
+        }
+        ctx.pool.release(data);
+        vals_out.col.insert(origin, v);
+        return;
+    }
     let contrib = if pair.a_col_compact.nnz() == 0 {
         ctx.pool.release(data);
         Contribution::Empty
@@ -659,7 +1153,17 @@ fn offer_col_contribution(
         let mut partial = ctx.pool.acquire(c_local.nrows, data.ncols);
         let dt = gated(gate, || {
             let t0 = Instant::now();
-            kernel.spmm_acc(&pair.a_col_compact, &data, &mut partial);
+            match op {
+                KernelOp::Spmm => kernel.spmm_acc(&pair.a_col_compact, &data, &mut partial),
+                KernelOp::FusedSddmmSpmm => {
+                    let x = x_local.expect("fused kernel consumes B with an X operand");
+                    let mut v = ctx.pool.acquire(1, pair.a_col_compact.nnz());
+                    kernel.sddmm_vals(&pair.a_col_compact, x, &data, &mut v.data);
+                    kernel.spmm_vals_acc(&pair.a_col_compact, &v.data, &data, &mut partial);
+                    ctx.pool.release(v);
+                }
+                KernelOp::Sddmm => unreachable!("handled above"),
+            }
             t0.elapsed().as_secs_f64()
         });
         ctx.stats.compute_secs += dt;
@@ -682,6 +1186,94 @@ fn offer_col_contribution(
     });
 }
 
+/// Consume X rows arriving from `origin` (packed in `pair.c_rows` order —
+/// the row space of the precomputed `a_row_compact` operand): compute the
+/// row-served edge values this rank owes `origin`. For standalone SDDMM
+/// the values stay here, plan-distributed, for assembly. For the fused
+/// kernel they immediately multiply the local Y block and the partial C
+/// rows take the plan's ordinary row-based route back ([`RowRoute`]) —
+/// direct, via the flow rep, or folded locally when this rank is the rep.
+#[allow(clippy::too_many_arguments)]
+fn consume_x(
+    ctx: &mut Ctx,
+    prog: &Program,
+    aggs: &mut BTreeMap<usize, AggFlow>,
+    b_local: &Dense,
+    vals_out: &mut SddmmVals,
+    origin: usize,
+    rows: &[u32],
+    data: Dense,
+) {
+    let plan = ctx.plan;
+    let kernel = ctx.kernel;
+    let gate = ctx.gate;
+    let pair = &plan.pairs[origin][ctx.rank];
+    debug_assert_eq!(rows, &pair.c_rows[..]);
+    debug_assert_eq!(pair.a_row_compact.nrows, rows.len());
+    let mut v = ctx.pool.acquire(1, pair.a_row_compact.nnz());
+    match prog.op {
+        KernelOp::Sddmm => {
+            let t = ctx.now();
+            let dt = gated(gate, || {
+                let t0 = Instant::now();
+                kernel.sddmm_vals(&pair.a_row_compact, &data, b_local, &mut v.data);
+                t0.elapsed().as_secs_f64()
+            });
+            ctx.stats.compute_secs += dt;
+            ctx.span(phase::COMPUTE_REMOTE, t);
+            ctx.pool.release(data);
+            vals_out.row.insert(origin, v);
+        }
+        KernelOp::FusedSddmmSpmm => {
+            let t = ctx.now();
+            let mut partial = ctx.pool.acquire(pair.a_row_compact.nrows, b_local.ncols);
+            let dt = gated(gate, || {
+                let t0 = Instant::now();
+                kernel.sddmm_vals(&pair.a_row_compact, &data, b_local, &mut v.data);
+                kernel.spmm_vals_acc(&pair.a_row_compact, &v.data, b_local, &mut partial);
+                t0.elapsed().as_secs_f64()
+            });
+            ctx.stats.compute_secs += dt;
+            ctx.span(phase::S1_INTRA_C, t);
+            ctx.pool.release(data);
+            ctx.pool.release(v);
+            let route = prog
+                .row_route
+                .get(&origin)
+                .copied()
+                .expect("X arrival without a row route");
+            match route {
+                RowRoute::Direct => ctx.send(
+                    origin,
+                    Msg::C { from: ctx.rank, rows: pair.c_rows.clone(), data: partial },
+                ),
+                RowRoute::Flow(i) => {
+                    let f = &ctx.sched.expect("flow route implies a schedule").c_flows[i];
+                    debug_assert_eq!(f.dst, origin);
+                    if f.rep == ctx.rank {
+                        let rank = ctx.rank;
+                        let agg = aggs.get_mut(&origin).expect("unknown agg flow");
+                        if agg.offer(rank, pair.c_rows.clone(), partial, &mut ctx.pool) {
+                            complete_agg(ctx, aggs, origin);
+                        }
+                    } else {
+                        ctx.send(
+                            f.rep,
+                            Msg::CAgg {
+                                from: ctx.rank,
+                                final_dst: origin,
+                                rows: pair.c_rows.clone(),
+                                data: partial,
+                            },
+                        );
+                    }
+                }
+            }
+        }
+        KernelOp::Spmm => unreachable!("SpMM programs expect no X messages"),
+    }
+}
+
 /// Extract `want` rows (a subset of the sorted `have` rows) from `data`
 /// into a pooled buffer.
 fn gather_subset(pool: &mut PoolRef, have: &[u32], data: &Dense, want: &[u32]) -> Dense {
@@ -699,18 +1291,27 @@ fn gather_subset(pool: &mut PoolRef, have: &[u32], data: &Dense, want: &[u32]) -
 /// offline planning already captured in `plan`/`sched`, and the program
 /// derivation in `prog`), scheduled either as the overlapped pipeline or
 /// strictly phase-ordered. `c_local` must arrive zeroed and shaped to this
-/// rank's block; sessions pass persistent buffers here.
+/// rank's block (zero-width for SDDMM); sessions pass persistent buffers
+/// here. `x_local` is the X operand block (SDDMM/fused only); `vals`
+/// collects this rank's plan-distributed edge values.
 fn rank_main(
     ctx: &mut Ctx,
     blocks: &LocalBlocks,
+    x_local: Option<&Dense>,
     b_local: &Dense,
     c_local: &mut Dense,
+    vals: &mut SddmmVals,
     prog: &Program,
 ) {
     let n_dense = b_local.ncols;
     debug_assert_eq!(blocks.diag.nrows, ctx.part.len(ctx.rank));
     debug_assert_eq!(c_local.nrows, ctx.part.len(ctx.rank));
     let c_local = &mut *c_local;
+    if prog.op != KernelOp::Spmm {
+        // One entry-order buffer for the whole diagonal pattern, filled
+        // tile by tile.
+        vals.diag = ctx.pool.acquire(1, blocks.diag.nnz());
+    }
 
     let mut fold = OrderedFold::new(prog.fold_keys.clone());
     let mut aggs: BTreeMap<usize, AggFlow> = prog
@@ -726,7 +1327,7 @@ fn rank_main(
         .iter()
         .filter(|i| matches!(i, Item::DiagTile { .. }))
         .count();
-    if diag_left == 0 {
+    if diag_left == 0 && prog.op != KernelOp::Sddmm {
         // Zero-row block: the base "contribution" is trivially complete.
         fold.offer(DIAG_KEY, Contribution::DiagDone, |c| {
             apply_contribution(c_local, &mut ctx.pool, c)
@@ -737,42 +1338,50 @@ fn rank_main(
     if ctx.opts.overlap {
         // Overlapped pipeline: eager posts, then compute interleaved with
         // non-blocking drains of whatever has already arrived.
-        post_b(ctx, prog, b_local);
+        post_b(ctx, prog, b_local, x_local);
         for item in &prog.items {
             while let Ok(msg) = ctx.inbox.try_recv() {
                 got += 1;
-                on_msg(ctx, prog, msg, c_local, &mut fold, &mut aggs, true);
+                on_msg(ctx, prog, msg, x_local, b_local, c_local, vals, &mut fold, &mut aggs, true);
             }
             run_item(
                 ctx,
                 item,
                 blocks,
+                x_local,
                 b_local,
                 c_local,
+                vals,
                 &mut fold,
                 &mut aggs,
                 &mut diag_left,
                 None,
+                prog.op,
             );
         }
     } else {
         // Phase-ordered control: all local compute with sends deferred,
-        // then one blocking exchange + aggregation.
+        // then one blocking exchange + aggregation. (For SDDMM/fused the
+        // local phase is the diagonal only; remote compute is reactive and
+        // happens in the drain below, after every post is out.)
         let mut deferred = Deferred::default();
         for item in &prog.items {
             run_item(
                 ctx,
                 item,
                 blocks,
+                x_local,
                 b_local,
                 c_local,
+                vals,
                 &mut fold,
                 &mut aggs,
                 &mut diag_left,
                 Some(&mut deferred),
+                prog.op,
             );
         }
-        post_b(ctx, prog, b_local);
+        post_b(ctx, prog, b_local, x_local);
         for (dst, msg) in deferred.msgs.drain(..) {
             ctx.send(dst, msg);
         }
@@ -792,15 +1401,16 @@ fn rank_main(
         ctx.stats.idle_secs += ctx.now() - t_idle;
         ctx.span(phase::IDLE, t_idle);
         got += 1;
-        on_msg(ctx, prog, msg, c_local, &mut fold, &mut aggs, false);
+        on_msg(ctx, prog, msg, x_local, b_local, c_local, vals, &mut fold, &mut aggs, false);
     }
     debug_assert!(fold.is_done(), "rank {}: fold incomplete", ctx.rank);
     debug_assert!(aggs.is_empty(), "rank {}: unshipped aggregates", ctx.rank);
 }
 
-/// Gather and send every outgoing B payload (cheap packs — no SpMM), in
-/// program order: inter-group flows first, then same-group directs.
-fn post_b(ctx: &mut Ctx, prog: &Program, b_local: &Dense) {
+/// Gather and send every outgoing dense-row payload (cheap packs — no
+/// compute), in program order: B posts (inter-group flows first, then
+/// same-group directs), then X posts for the SDDMM-family kernels.
+fn post_b(ctx: &mut Ctx, prog: &Program, b_local: &Dense, x_local: Option<&Dense>) {
     for post in &prog.b_posts {
         let t = ctx.now();
         let mut data = ctx.pool.acquire(post.rows.len(), b_local.ncols);
@@ -811,6 +1421,17 @@ fn post_b(ctx: &mut Ctx, prog: &Program, b_local: &Dense) {
         );
         ctx.span(post.phase, t);
     }
+    for post in &prog.x_posts {
+        let x = x_local.expect("X posts require an X operand");
+        let t = ctx.now();
+        let mut data = ctx.pool.acquire(post.rows.len(), x.ncols);
+        x.gather_rows_into(&post.rows, &mut data);
+        ctx.send(
+            post.dst,
+            Msg::X { from: ctx.rank, origin: ctx.rank, rows: post.rows.clone(), data },
+        );
+        ctx.span(post.phase, t);
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -818,12 +1439,15 @@ fn run_item(
     ctx: &mut Ctx,
     item: &Item,
     blocks: &LocalBlocks,
+    x_local: Option<&Dense>,
     b_local: &Dense,
     c_local: &mut Dense,
+    vals: &mut SddmmVals,
     fold: &mut OrderedFold<Contribution>,
     aggs: &mut BTreeMap<usize, AggFlow>,
     diag_left: &mut usize,
     mut defer: Option<&mut Deferred>,
+    op: KernelOp,
 ) {
     let plan = ctx.plan;
     let kernel = ctx.kernel;
@@ -834,21 +1458,45 @@ fn run_item(
             let t = ctx.now();
             let dt = gated(gate, || {
                 let t0 = Instant::now();
-                if *r0 == 0 && *r1 == c_local.nrows {
-                    // Whole block: dispatch through the backend's full
-                    // spmm_acc (bitwise-identical for the native kernel;
-                    // the AOT path for PJRT). Partial tiles use the native
-                    // row loop.
-                    kernel.spmm_acc(&blocks.diag, b_local, c_local);
-                } else {
-                    kernel.spmm_rows(&blocks.diag, b_local, c_local, *r0, *r1);
+                match op {
+                    KernelOp::Spmm => {
+                        if *r0 == 0 && *r1 == c_local.nrows {
+                            // Whole block: dispatch through the backend's
+                            // full spmm_acc (bitwise-identical for the
+                            // native kernel; the AOT path for PJRT).
+                            // Partial tiles use the native row loop.
+                            kernel.spmm_acc(&blocks.diag, b_local, c_local);
+                        } else {
+                            kernel.spmm_rows(&blocks.diag, b_local, c_local, *r0, *r1);
+                        }
+                    }
+                    KernelOp::Sddmm => {
+                        let x = x_local.expect("SDDMM diagonal needs an X operand");
+                        let vd = &mut vals.diag.data;
+                        kernel.sddmm_rows(&blocks.diag, x, b_local, vd, *r0, *r1);
+                    }
+                    KernelOp::FusedSddmmSpmm => {
+                        // Edge values for this tile, then immediately
+                        // consumed as the tile's SpMM operand.
+                        let x = x_local.expect("fused diagonal needs an X operand");
+                        let vd = &mut vals.diag.data;
+                        kernel.sddmm_rows(&blocks.diag, x, b_local, vd, *r0, *r1);
+                        kernel.spmm_vals_rows(
+                            &blocks.diag,
+                            &vals.diag.data,
+                            b_local,
+                            c_local,
+                            *r0,
+                            *r1,
+                        );
+                    }
                 }
                 t0.elapsed().as_secs_f64()
             });
             ctx.stats.compute_secs += dt;
             ctx.span(phase::COMPUTE_LOCAL, t);
             *diag_left -= 1;
-            if *diag_left == 0 {
+            if *diag_left == 0 && op != KernelOp::Sddmm {
                 fold.offer(DIAG_KEY, Contribution::DiagDone, |c| {
                     apply_contribution(c_local, &mut ctx.pool, c)
                 });
@@ -912,12 +1560,17 @@ fn run_item(
 }
 
 /// Handle one arrived message: account it, route it (rep redistribution /
-/// pre-aggregation), and fold its contribution in canonical order.
+/// pre-aggregation), and consume it per the program's kernel op — folding
+/// in canonical order where the op accumulates.
+#[allow(clippy::too_many_arguments)]
 fn on_msg(
     ctx: &mut Ctx,
     prog: &Program,
     msg: Msg,
+    x_local: Option<&Dense>,
+    b_local: &Dense,
     c_local: &mut Dense,
+    vals: &mut SddmmVals,
     fold: &mut OrderedFold<Contribution>,
     aggs: &mut BTreeMap<usize, AggFlow>,
     overlapped: bool,
@@ -951,13 +1604,43 @@ fn on_msg(
                 }
                 ctx.span(phase::S2_INTRA_B, t);
                 ctx.pool.release(data);
-                // ...then compute and fold our own subset.
+                // ...then compute and consume our own subset.
                 if let Some((crows, sub)) = own {
-                    offer_col_contribution(ctx, fold, c_local, origin, crows, sub);
+                    consume_b(ctx, prog.op, fold, c_local, x_local, vals, origin, crows, sub);
                 }
             } else {
                 // Direct in-group B or rep→consumer distribution.
-                offer_col_contribution(ctx, fold, c_local, origin, &rows, data);
+                consume_b(ctx, prog.op, fold, c_local, x_local, vals, origin, &rows, data);
+            }
+        }
+        Msg::X { from, origin, rows, data } => {
+            if let Some(&fi) = prog.rep_x.get(&origin) {
+                // Stage-I X flow arrival: we rep the reversed fetch —
+                // identical mechanics to the B rep above, dispatching to
+                // the row-serving compute path instead of the fold.
+                debug_assert_eq!(from, origin);
+                let xsched = ctx.xsched.expect("rep_x implies an X schedule");
+                let f = &xsched.b_flows[fi];
+                let t = ctx.now();
+                let mut own: Option<(&[u32], Dense)> = None;
+                for (consumer, crows) in &f.consumers {
+                    let sub = gather_subset(&mut ctx.pool, &rows, &data, crows);
+                    if *consumer == ctx.rank {
+                        own = Some((crows.as_slice(), sub));
+                    } else {
+                        ctx.send(
+                            *consumer,
+                            Msg::X { from: ctx.rank, origin, rows: crows.clone(), data: sub },
+                        );
+                    }
+                }
+                ctx.span(phase::S2_INTRA_X, t);
+                ctx.pool.release(data);
+                if let Some((crows, sub)) = own {
+                    consume_x(ctx, prog, aggs, b_local, vals, origin, crows, sub);
+                }
+            } else {
+                consume_x(ctx, prog, aggs, b_local, vals, origin, &rows, data);
             }
         }
         Msg::C { from, rows, data } => {
@@ -1273,6 +1956,171 @@ mod tests {
             for p in &r.phases {
                 assert!(p.end >= p.start);
             }
+        }
+    }
+
+    #[test]
+    fn sddmm_matches_oracle_bitwise_every_mode() {
+        // Distributed SDDMM is bitwise-identical to the serial oracle on
+        // *arbitrary float* inputs: each edge value has exactly one
+        // producer and the dot order is fixed, so no accumulation-order
+        // freedom exists anywhere.
+        let a = gen::powerlaw(192, 2600, 1.4, 31);
+        let part = RowPartition::balanced(192, 8);
+        let blocks = split_1d(&a, &part);
+        let topo = Topology::tsubame4(8);
+        let mut rng = Rng::new(41);
+        let x = Dense::random(192, 8, &mut rng);
+        let y = Dense::random(192, 8, &mut rng);
+        let want = a.sddmm(&x, &y);
+        for strategy in [
+            Strategy::Block,
+            Strategy::Column,
+            Strategy::Row,
+            Strategy::Joint(Solver::Koenig),
+        ] {
+            let plan = comm::plan(&blocks, &part, strategy, None);
+            for hier in [false, true] {
+                if hier && strategy == Strategy::Block {
+                    continue; // block mode is defined flat-only
+                }
+                let sched = hier.then(|| hierarchy::build(&plan, &topo));
+                for opts in [ExecOpts::default(), ExecOpts::sequential()] {
+                    let (got, stats) = run_sddmm_with(
+                        &part,
+                        &plan,
+                        &blocks,
+                        sched.as_ref(),
+                        &topo,
+                        &x,
+                        &y,
+                        &NativeKernel,
+                        &opts,
+                    );
+                    assert_eq!(got, want, "{strategy:?} hier={hier} {opts:?}");
+                    // Both sides of every link agree on the new message
+                    // kinds too.
+                    assert_eq!(stats.total_inter_bytes(), stats.total_inter_recv_bytes());
+                    assert_eq!(stats.total_intra_bytes(), stats.total_intra_recv_bytes());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sddmm_b_side_volume_identical_to_spmm() {
+        // The plan-sharing contract: the same B rows cross the same links
+        // whichever kernel consumes them.
+        let a = gen::powerlaw(256, 4000, 1.35, 33);
+        let part = RowPartition::balanced(256, 8);
+        let blocks = split_1d(&a, &part);
+        let plan = comm::plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None);
+        let topo = Topology::tsubame4(8);
+        let mut rng = Rng::new(42);
+        let x = Dense::random(256, 8, &mut rng);
+        let y = Dense::random(256, 8, &mut rng);
+        for hier in [false, true] {
+            let sched = hier.then(|| hierarchy::build(&plan, &topo));
+            let (_, spmm_stats) = run_with(
+                &part,
+                &plan,
+                &blocks,
+                sched.as_ref(),
+                &topo,
+                &y,
+                &NativeKernel,
+                &ExecOpts::default(),
+            );
+            let (_, sddmm_stats) = run_sddmm_with(
+                &part,
+                &plan,
+                &blocks,
+                sched.as_ref(),
+                &topo,
+                &x,
+                &y,
+                &NativeKernel,
+                &ExecOpts::default(),
+            );
+            assert!(spmm_stats.measured_b_volume().total() > 0, "hier={hier}");
+            assert_eq!(
+                spmm_stats.measured_b_volume(),
+                sddmm_stats.measured_b_volume(),
+                "hier={hier}: B-side volume differs between kernels"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_matches_two_pass_bitwise_on_exact_inputs() {
+        // Fused SDDMM→SpMM must equal SDDMM-then-SpMM bit for bit on
+        // integer-exact inputs (float addition is associative there), for
+        // every routing mode and schedule knob.
+        let a = crate::bench::int_matrix(192, 1800, 51);
+        let part = RowPartition::balanced(192, 8);
+        let blocks = split_1d(&a, &part);
+        let plan = comm::plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None);
+        let topo = Topology::tsubame4(8);
+        let x = Dense::from_fn(192, 4, |i, j| ((i * 3 + j) % 5) as f32 - 2.0);
+        let y = Dense::from_fn(192, 4, |i, j| ((i * 7 + j * 2) % 5) as f32 - 2.0);
+        let want = a.sddmm(&x, &y).spmm(&y);
+        for hier in [false, true] {
+            let sched = hier.then(|| hierarchy::build(&plan, &topo));
+            for opts in [
+                ExecOpts::default(),
+                ExecOpts::sequential(),
+                ExecOpts { workers: 2, tile_rows: 7, ..ExecOpts::default() },
+            ] {
+                let (got, _) = run_fused_with(
+                    &part,
+                    &plan,
+                    &blocks,
+                    sched.as_ref(),
+                    &topo,
+                    &x,
+                    &y,
+                    &NativeKernel,
+                    &opts,
+                );
+                assert_eq!(got.data, want.data, "hier={hier} {opts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_cuts_bytes_vs_two_pass() {
+        // The fused kernel ships X+Y once and the partials back; two-pass
+        // re-ships the B side for the SpMM pass. Measured, not modeled —
+        // and not even counting the edge-value gather two-pass would need.
+        let a = gen::powerlaw(256, 4000, 1.4, 61);
+        let part = RowPartition::balanced(256, 8);
+        let blocks = split_1d(&a, &part);
+        let plan = comm::plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None);
+        let topo = Topology::tsubame4(8);
+        let mut rng = Rng::new(62);
+        let x = Dense::random(256, 8, &mut rng);
+        let y = Dense::random(256, 8, &mut rng);
+        for hier in [false, true] {
+            let sched = hier.then(|| hierarchy::build(&plan, &topo));
+            let total = |s: &ExecStats| s.total_inter_bytes() + s.total_intra_bytes();
+            let (_, fused) = run_fused_with(
+                &part, &plan, &blocks, sched.as_ref(), &topo, &x, &y, &NativeKernel,
+                &ExecOpts::default(),
+            );
+            let (_, sd) = run_sddmm_with(
+                &part, &plan, &blocks, sched.as_ref(), &topo, &x, &y, &NativeKernel,
+                &ExecOpts::default(),
+            );
+            let (_, sp) = run_with(
+                &part, &plan, &blocks, sched.as_ref(), &topo, &y, &NativeKernel,
+                &ExecOpts::default(),
+            );
+            assert!(
+                total(&fused) < total(&sd) + total(&sp),
+                "hier={hier}: fused {} !< two-pass {}",
+                total(&fused),
+                total(&sd) + total(&sp)
+            );
         }
     }
 

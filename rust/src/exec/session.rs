@@ -1,53 +1,94 @@
-//! Epoch-persistent execution sessions (DESIGN.md §8): the GNN training
-//! loop multiplies the same Â every layer of every epoch, so everything
-//! that is a pure function of the *plan* — per-rank step programs, fold
-//! orders, posted-send payload layouts, exchange buffers — is derived once
-//! and replayed across `execute` calls instead of being rebuilt per call.
+//! Epoch-persistent execution sessions (DESIGN.md §8, kernel-generic per
+//! §9): iterative workloads multiply (or SDDMM) against the same sparsity
+//! pattern every layer of every epoch, so everything that is a pure
+//! function of the *plan* — per-rank step programs, fold orders,
+//! posted-send payload layouts, exchange buffers — is derived once and
+//! replayed across `execute` calls instead of being rebuilt per call.
+//!
+//! One session now serves **all three kernels** off one frozen plan:
+//! [`SpmmSession::execute`] (SpMM), [`SpmmSession::execute_sddmm`], and
+//! [`SpmmSession::execute_fused`]. Each kernel op owns its program set and
+//! its [`Amortization`] record, lazily built on first use (or eagerly via
+//! [`SpmmSession::warm_kernel`]); the exchange-buffer pool, the X fetch
+//! schedule, and the persistent dense blocks are shared. The plan-sharing
+//! contract (asserted in `property_suite`): a session executing SpMM then
+//! SDDMM reports *identical* B-side measured volume — the same dense rows
+//! move on the same links — and each kernel reaches its zero-plan,
+//! zero-allocation steady state from its second call.
 //!
 //! The session owns one shared [`BufferPool`] for all ranks (payloads are
 //! released at the *receiver*, so per-rank pools would drain toward the
 //! receive-heavy ranks and re-allocate at the send-heavy ones every epoch)
 //! and pre-seeds it with the **payload layout**: one slot per buffer role
 //! the programs can ever hold live at once — every outgoing message, every
-//! remote partial, every pre-aggregation accumulator. Because reuse is
-//! best-fit and the layout is a strict upper bound on concurrent liveness,
-//! *no* execute call after warm-up can miss the pool, whatever the thread
-//! interleaving. That is the amortization contract asserted through
-//! [`crate::metrics::Amortization`]: plan time and fresh-allocation counts
-//! are exactly zero from the second epoch onward, and results stay
-//! bit-identical to cold per-epoch execution (same programs, same
-//! canonical fold order).
+//! remote partial, every pre-aggregation accumulator, every SDDMM value
+//! buffer. Because reuse is best-fit and the layout is a strict upper
+//! bound on concurrent liveness, *no* execute call after warm-up can miss
+//! the pool, whatever the thread interleaving. That is the amortization
+//! contract asserted through [`crate::metrics::Amortization`]: plan time
+//! and fresh-allocation counts are exactly zero from the second call
+//! onward (per kernel op), and results stay bit-identical to cold
+//! execution (same programs, same canonical fold order).
 
-use super::kernel::SpmmKernel;
+use super::kernel::{KernelOp, SpmmKernel};
 use super::pipeline::{ckey_decode, BufferPool, ExecOpts, PoolRef, KIND_B};
-use super::{build_program, rank_main, Ctx, ExecStats, Item, Msg, Program, RankStats};
+use super::{
+    assemble_sddmm, build_program, col_contribution_is_compact, rank_main, Ctx, ExecStats, Item,
+    Msg, Program, RankStats, SddmmVals,
+};
 use crate::dense::Dense;
+use crate::hierarchy::{self, HierSchedule};
 use crate::metrics::Amortization;
+use crate::sparse::Csr;
 use crate::spmm::DistSpmm;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Mutex;
 use std::time::Instant;
 
+/// Program set + seeding state for one of the SDDMM-family kernel ops.
+struct KernelPrograms {
+    programs: Vec<Program>,
+    /// Largest dense width this op's payload layout has been seeded for.
+    seeded_n: usize,
+}
+
 /// A frozen plan + partition with persistent executor state, reusable
-/// across arbitrarily many `execute` calls. Build one with
-/// [`SpmmSession::new`] (or [`DistSpmm::into_session`]), optionally
-/// [`SpmmSession::warm`] it for a dense width, then call
-/// [`SpmmSession::execute`] once per product.
+/// across arbitrarily many `execute` calls and across kernel ops. Build
+/// one with [`SpmmSession::new`] (or [`DistSpmm::into_session`]),
+/// optionally [`SpmmSession::warm`] / [`SpmmSession::warm_kernel`] it for
+/// a dense width, then call the per-op execute methods once per product.
 pub struct SpmmSession {
     dist: DistSpmm,
     opts: ExecOpts,
     prefers_tiles: bool,
-    /// Per-rank step programs, derived once from (plan, sched, opts).
+    /// Per-rank SpMM step programs, derived once from (plan, sched, opts).
     programs: Vec<Program>,
+    /// Lazily built SDDMM / fused program sets (kernel parameter).
+    sddmm: Option<KernelPrograms>,
+    fused: Option<KernelPrograms>,
+    /// X fetch schedule shared by the SDDMM-family programs
+    /// ([`hierarchy::sddmm_fetch`] of the frozen schedule); built with the
+    /// first non-SpMM program set, `None` for flat plans.
+    xsched: Option<HierSchedule>,
+    xsched_built: bool,
     /// Shared exchange-buffer pool (see module docs for why it is shared).
     pool: Mutex<BufferPool>,
     /// Persistent per-rank input blocks, refilled (not reallocated) per call.
     b_locals: Vec<Dense>,
+    /// Persistent per-rank X blocks (SDDMM-family calls only).
+    x_locals: Vec<Dense>,
     /// Persistent per-rank output blocks, zeroed (not reallocated) per call.
     c_locals: Vec<Dense>,
-    /// Largest dense width the payload layout has been seeded for.
+    /// Largest dense width the SpMM payload layout has been seeded for.
     seeded_n: usize,
+    /// Element sizes of every slot ever seeded into the pool, descending —
+    /// the dominance ledger [`SpmmSession::seed_missing`] matches new
+    /// layouts against so roles shared across kernel ops (and across
+    /// width growth) are seeded once, not once per op.
+    seeded_slots: Vec<usize>,
     amort: Amortization,
+    amort_sddmm: Amortization,
+    amort_fused: Amortization,
 }
 
 impl SpmmSession {
@@ -61,11 +102,19 @@ impl SpmmSession {
         let nranks = dist.part.nparts;
         let mut s = SpmmSession {
             programs,
+            sddmm: None,
+            fused: None,
+            xsched: None,
+            xsched_built: false,
             pool: Mutex::new(BufferPool::with_cap(usize::MAX)),
             b_locals: (0..nranks).map(|_| Dense::zeros(0, 0)).collect(),
+            x_locals: (0..nranks).map(|_| Dense::zeros(0, 0)).collect(),
             c_locals: (0..nranks).map(|_| Dense::zeros(0, 0)).collect(),
             seeded_n: 0,
+            seeded_slots: Vec::new(),
             amort: Amortization::default(),
+            amort_sddmm: Amortization::default(),
+            amort_fused: Amortization::default(),
             dist,
             opts,
             prefers_tiles,
@@ -90,16 +139,27 @@ impl SpmmSession {
         self.opts = opts;
         if rebuild {
             let t0 = Instant::now();
-            self.programs = build_all(&self.dist, &self.opts, self.prefers_tiles);
+            self.rebuild_programs();
             self.amort.build_secs += t0.elapsed().as_secs_f64();
         }
     }
 
-    /// Amortization record: build cost plus per-call plan seconds and
-    /// fresh-allocation events. [`Amortization::steady_state`] is the
-    /// epoch-reuse guarantee.
+    /// Amortization record of the SpMM kernel: build cost plus per-call
+    /// plan seconds and fresh-allocation events.
+    /// [`Amortization::steady_state`] is the epoch-reuse guarantee.
     pub fn amortization(&self) -> &Amortization {
         &self.amort
+    }
+
+    /// Amortization record of one kernel op (the SDDMM-family ops record
+    /// separately so each op's own steady state is observable even when
+    /// calls interleave across ops).
+    pub fn amortization_for(&self, op: KernelOp) -> &Amortization {
+        match op {
+            KernelOp::Spmm => &self.amort,
+            KernelOp::Sddmm => &self.amort_sddmm,
+            KernelOp::FusedSddmmSpmm => &self.amort_fused,
+        }
     }
 
     /// Rebuild the programs for a kernel with a different tiling
@@ -113,18 +173,67 @@ impl SpmmSession {
         }
         let t0 = Instant::now();
         self.prefers_tiles = prefers_tiles;
-        self.programs = build_all(&self.dist, &self.opts, prefers_tiles);
+        self.rebuild_programs();
         self.amort.build_secs += t0.elapsed().as_secs_f64();
     }
 
-    /// Eagerly seed the payload layout and persistent blocks for dense
-    /// width `n_dense` (counted as build time, not per-call plan time).
-    /// Calls with `b.ncols <= n_dense` then do zero planning work and zero
-    /// allocations from the very first epoch.
+    /// The lazily-built program-set slot for one SDDMM-family op.
+    fn kernel_slot(&mut self, op: KernelOp) -> &mut Option<KernelPrograms> {
+        match op {
+            KernelOp::Sddmm => &mut self.sddmm,
+            KernelOp::FusedSddmmSpmm => &mut self.fused,
+            KernelOp::Spmm => unreachable!("SpMM programs are built eagerly"),
+        }
+    }
+
+    /// Rebuild every program set that exists for the current
+    /// (opts, prefers_tiles) — the SpMM set always, the SDDMM-family sets
+    /// only if already built.
+    fn rebuild_programs(&mut self) {
+        self.programs = build_all(&self.dist, &self.opts, self.prefers_tiles);
+        for op in [KernelOp::Sddmm, KernelOp::FusedSddmmSpmm] {
+            if self.kernel_slot(op).is_some() {
+                let programs = build_all_op(
+                    &self.dist,
+                    self.xsched.as_ref(),
+                    &self.opts,
+                    self.prefers_tiles,
+                    op,
+                );
+                self.kernel_slot(op).as_mut().unwrap().programs = programs;
+            }
+        }
+    }
+
+    /// Eagerly seed the SpMM payload layout and persistent blocks for
+    /// dense width `n_dense` (counted as build time, not per-call plan
+    /// time). Calls with `b.ncols <= n_dense` then do zero planning work
+    /// and zero allocations from the very first epoch.
     pub fn warm(&mut self, n_dense: usize) {
         let t0 = Instant::now();
         if self.seed_layout(n_dense) {
             self.amort.build_secs += t0.elapsed().as_secs_f64();
+        }
+    }
+
+    /// [`SpmmSession::warm`] for a specific kernel op: build its program
+    /// set (and the shared X fetch schedule) and seed its payload layout
+    /// at width `n_dense`, all counted as that op's build time.
+    pub fn warm_kernel(&mut self, op: KernelOp, n_dense: usize) {
+        if op == KernelOp::Spmm {
+            self.warm(n_dense);
+            return;
+        }
+        let t0 = Instant::now();
+        let mut did = self.ensure_kernel_state(op);
+        did |= self.seed_kernel_layout(op, n_dense);
+        if did {
+            let dt = t0.elapsed().as_secs_f64();
+            match op {
+                KernelOp::Sddmm => self.amort_sddmm.build_secs += dt,
+                KernelOp::FusedSddmmSpmm => self.amort_fused.build_secs += dt,
+                KernelOp::Spmm => unreachable!(),
+            }
         }
     }
 
@@ -164,7 +273,7 @@ impl SpmmSession {
         let mut planned = false;
         if kernel.prefers_tiles() != self.prefers_tiles {
             self.prefers_tiles = kernel.prefers_tiles();
-            self.programs = build_all(&self.dist, &self.opts, self.prefers_tiles);
+            self.rebuild_programs();
             planned = true;
         }
         planned |= self.seed_layout(n_dense);
@@ -223,12 +332,14 @@ impl SpmmSession {
                         part: &dist.part,
                         plan: &dist.plan,
                         sched: dist.sched.as_ref(),
+                        xsched: None,
                         topo: &dist.topo,
                         kernel,
                         senders,
                         inbox,
                         stats: RankStats {
                             sent_to: vec![0; nranks],
+                            sent_b_to: vec![0; nranks],
                             ..RankStats::default()
                         },
                         opts,
@@ -236,7 +347,16 @@ impl SpmmSession {
                         t0,
                         pool: PoolRef::Shared(pool),
                     };
-                    rank_main(&mut ctx, &dist.blocks[rank], b_local, c_local, &programs[rank]);
+                    let mut vals = SddmmVals::default();
+                    rank_main(
+                        &mut ctx,
+                        &dist.blocks[rank],
+                        None,
+                        b_local,
+                        c_local,
+                        &mut vals,
+                        &programs[rank],
+                    );
                     (rank, ctx.stats)
                 }));
             }
@@ -264,30 +384,337 @@ impl SpmmSession {
         }
     }
 
-    /// Seed the pool with the payload layout at width `n` and size the
-    /// persistent blocks; no-op when already seeded at least this wide.
+    /// Execute distributed SDDMM E = A ⊙ (X·Yᵀ) off this session's frozen
+    /// plan: Y rows move along the very B covers [`SpmmSession::execute`]
+    /// uses (identical B-side measured volume), X rows along the C covers
+    /// reversed. Bitwise-identical to the serial [`Csr::sddmm`] oracle on
+    /// any input. The first call builds this op's programs and seeds its
+    /// slice of the shared pool (that call's plan time / alloc events);
+    /// later calls keep the *exchange path* plan-free and allocation-free
+    /// ([`SpmmSession::amortization_for`]) — only the returned sparse
+    /// matrix is fresh: assembly copies the pool-held value buffers into a
+    /// newly allocated O(nnz) [`Csr`] each call.
+    pub fn execute_sddmm(
+        &mut self,
+        x: &Dense,
+        y: &Dense,
+        kernel: &(dyn SpmmKernel + Sync),
+    ) -> (Csr, ExecStats) {
+        let (vals, stats) = self.execute_kernel(KernelOp::Sddmm, x, y, kernel);
+        let out = assemble_sddmm(&self.dist.part, &self.dist.blocks, &self.dist.plan, &vals);
+        let mut pref = PoolRef::Shared(&self.pool);
+        for v in vals {
+            v.release_into(&mut pref);
+        }
+        (out, stats)
+    }
+
+    /// Execute the fused SDDMM→SpMM kernel C = (A ⊙ (X·Yᵀ))·Y off this
+    /// session's frozen plan — one exchange, no edge-value materialization
+    /// (GAT-style attention propagation).
+    pub fn execute_fused(
+        &mut self,
+        x: &Dense,
+        y: &Dense,
+        kernel: &(dyn SpmmKernel + Sync),
+    ) -> (Dense, ExecStats) {
+        let mut out = Dense::zeros(0, 0);
+        let stats = self.execute_fused_into(x, y, kernel, &mut out);
+        (out, stats)
+    }
+
+    /// [`SpmmSession::execute_fused`] into a caller-held output buffer.
+    pub fn execute_fused_into(
+        &mut self,
+        x: &Dense,
+        y: &Dense,
+        kernel: &(dyn SpmmKernel + Sync),
+        out: &mut Dense,
+    ) -> ExecStats {
+        let n_dense = y.ncols;
+        let (vals, stats) = self.execute_kernel(KernelOp::FusedSddmmSpmm, x, y, kernel);
+        let mut pref = PoolRef::Shared(&self.pool);
+        for v in vals {
+            v.release_into(&mut pref);
+        }
+        out.nrows = self.dist.part.n;
+        out.ncols = n_dense;
+        out.data.clear();
+        for cl in self.c_locals.iter() {
+            out.data.extend_from_slice(&cl.data);
+        }
+        stats
+    }
+
+    /// The shared driver for the SDDMM-family ops: heal/plan lazily,
+    /// refill the persistent blocks, run the rank threads against this
+    /// op's programs, and record amortization. Returns the per-rank value
+    /// buffers (still pool-owned — callers release or assemble them).
+    fn execute_kernel(
+        &mut self,
+        op: KernelOp,
+        x: &Dense,
+        y: &Dense,
+        kernel: &(dyn SpmmKernel + Sync),
+    ) -> (Vec<SddmmVals>, ExecStats) {
+        debug_assert_ne!(op, KernelOp::Spmm);
+        let nranks = self.dist.part.nparts;
+        let n_dense = y.ncols;
+        assert_eq!(self.dist.part.n, y.nrows, "Y height != planned matrix");
+        assert_eq!(self.dist.part.n, x.nrows, "X height != planned matrix");
+        assert_eq!(x.ncols, n_dense, "SDDMM requires matching X/Y widths");
+
+        let allocs_before = self.pool.lock().unwrap().allocs;
+        let t_plan = Instant::now();
+        let mut planned = false;
+        if kernel.prefers_tiles() != self.prefers_tiles {
+            self.prefers_tiles = kernel.prefers_tiles();
+            self.rebuild_programs();
+            planned = true;
+        }
+        planned |= self.ensure_kernel_state(op);
+        planned |= self.seed_kernel_layout(op, n_dense);
+        let plan_secs = if planned { t_plan.elapsed().as_secs_f64() } else { 0.0 };
+
+        let is_fused = op == KernelOp::FusedSddmmSpmm;
+        for p in 0..nranks {
+            let (r0, r1) = self.dist.part.range(p);
+            let bl = &mut self.b_locals[p];
+            bl.nrows = r1 - r0;
+            bl.ncols = n_dense;
+            bl.data.clear();
+            bl.data.extend_from_slice(&y.data[r0 * n_dense..r1 * n_dense]);
+            let xl = &mut self.x_locals[p];
+            xl.nrows = r1 - r0;
+            xl.ncols = n_dense;
+            xl.data.clear();
+            xl.data.extend_from_slice(&x.data[r0 * n_dense..r1 * n_dense]);
+            let cl = &mut self.c_locals[p];
+            cl.nrows = r1 - r0;
+            cl.ncols = if is_fused { n_dense } else { 0 };
+            cl.data.clear();
+            if is_fused {
+                cl.data.resize((r1 - r0) * n_dense, 0.0);
+            }
+        }
+
+        let dist = &self.dist;
+        let programs: &Vec<Program> = match op {
+            KernelOp::Sddmm => &self.sddmm.as_ref().unwrap().programs,
+            KernelOp::FusedSddmmSpmm => &self.fused.as_ref().unwrap().programs,
+            KernelOp::Spmm => unreachable!(),
+        };
+        let xsched = self.xsched.as_ref();
+        let pool = &self.pool;
+        let opts = self.opts;
+        let c_locals = &mut self.c_locals;
+        let b_locals = &self.b_locals;
+        let x_locals = &self.x_locals;
+
+        let mut senders: Vec<Sender<Msg>> = Vec::with_capacity(nranks);
+        let mut inboxes: Vec<Option<Receiver<Msg>>> = Vec::with_capacity(nranks);
+        for _ in 0..nranks {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            inboxes.push(Some(rx));
+        }
+        let gate = (opts.workers > 0).then(|| super::ComputeGate::new(opts.workers));
+
+        let t0 = Instant::now();
+        let mut per_rank: Vec<Option<(SddmmVals, RankStats)>> =
+            (0..nranks).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            let rank_iter = inboxes
+                .iter_mut()
+                .zip(b_locals.iter())
+                .zip(x_locals.iter())
+                .zip(c_locals.iter_mut())
+                .enumerate();
+            for (rank, (((inbox, b_local), x_local), c_local)) in rank_iter {
+                let senders = &senders;
+                let gate = gate.as_ref();
+                let inbox = inbox.take().unwrap();
+                handles.push(scope.spawn(move || {
+                    let mut ctx = Ctx {
+                        rank,
+                        part: &dist.part,
+                        plan: &dist.plan,
+                        sched: dist.sched.as_ref(),
+                        xsched,
+                        topo: &dist.topo,
+                        kernel,
+                        senders,
+                        inbox,
+                        stats: RankStats {
+                            sent_to: vec![0; nranks],
+                            sent_b_to: vec![0; nranks],
+                            ..RankStats::default()
+                        },
+                        opts,
+                        gate,
+                        t0,
+                        pool: PoolRef::Shared(pool),
+                    };
+                    let mut vals = SddmmVals::default();
+                    rank_main(
+                        &mut ctx,
+                        &dist.blocks[rank],
+                        Some(x_local),
+                        b_local,
+                        c_local,
+                        &mut vals,
+                        &programs[rank],
+                    );
+                    (rank, vals, ctx.stats)
+                }));
+            }
+            for h in handles {
+                let (rank, vals, stats) = h.join().expect("rank thread panicked");
+                per_rank[rank] = Some((vals, stats));
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+
+        let allocs = self.pool.lock().unwrap().allocs - allocs_before;
+        match op {
+            KernelOp::Sddmm => self.amort_sddmm.record(plan_secs, allocs),
+            KernelOp::FusedSddmmSpmm => self.amort_fused.record(plan_secs, allocs),
+            KernelOp::Spmm => unreachable!(),
+        }
+        let mut all_vals = Vec::with_capacity(nranks);
+        let mut stats = Vec::with_capacity(nranks);
+        for slot in per_rank {
+            let (vals, s) = slot.unwrap();
+            all_vals.push(vals);
+            stats.push(s);
+        }
+        (all_vals, ExecStats { per_rank: stats, wall_secs: wall })
+    }
+
+    /// Build the X fetch schedule and `op`'s program set if missing.
+    /// Returns true when anything was built (planning work).
+    fn ensure_kernel_state(&mut self, op: KernelOp) -> bool {
+        let mut did = false;
+        if !self.xsched_built {
+            self.xsched = self.dist.sched.as_ref().map(hierarchy::sddmm_fetch);
+            self.xsched_built = true;
+            did = true;
+        }
+        if self.kernel_slot(op).is_none() {
+            let programs = build_all_op(
+                &self.dist,
+                self.xsched.as_ref(),
+                &self.opts,
+                self.prefers_tiles,
+                op,
+            );
+            *self.kernel_slot(op) = Some(KernelPrograms { programs, seeded_n: 0 });
+            did = true;
+        }
+        did
+    }
+
+    /// Seed the pool with the SpMM payload layout at width `n` and size
+    /// the persistent blocks; no-op when already seeded at least this wide.
     fn seed_layout(&mut self, n: usize) -> bool {
         if n <= self.seeded_n {
             return false;
         }
-        let layout = payload_layout(&self.dist, &self.programs);
-        {
-            let mut pool = self.pool.lock().unwrap();
-            for rows in layout {
-                pool.seed(rows * n);
-            }
-        }
+        let elems = payload_elems(&self.dist, &self.programs, None, n);
+        self.seed_missing(elems);
         for p in 0..self.dist.part.nparts {
             let len = self.dist.part.len(p);
-            self.b_locals[p] = Dense::zeros(len, n);
-            self.c_locals[p] = Dense::zeros(len, n);
+            ensure_capacity(&mut self.b_locals[p], len, n);
+            ensure_capacity(&mut self.c_locals[p], len, n);
         }
         self.seeded_n = n;
         true
     }
+
+    /// Seed the pool with `op`'s payload layout at width `n` and size the
+    /// persistent blocks (including X); no-op when already seeded.
+    fn seed_kernel_layout(&mut self, op: KernelOp, n: usize) -> bool {
+        let state = self.kernel_slot(op).as_mut().expect("state built before seeding");
+        if n <= state.seeded_n {
+            return false;
+        }
+        state.seeded_n = n;
+        // Field-precise re-borrow: payload_elems needs the programs (held
+        // in self.sddmm/self.fused) together with &self.dist/&self.xsched.
+        let programs = match op {
+            KernelOp::Sddmm => &self.sddmm.as_ref().unwrap().programs,
+            KernelOp::FusedSddmmSpmm => &self.fused.as_ref().unwrap().programs,
+            KernelOp::Spmm => unreachable!(),
+        };
+        let elems = payload_elems(&self.dist, programs, self.xsched.as_ref(), n);
+        self.seed_missing(elems);
+        for p in 0..self.dist.part.nparts {
+            let len = self.dist.part.len(p);
+            ensure_capacity(&mut self.b_locals[p], len, n);
+            ensure_capacity(&mut self.x_locals[p], len, n);
+            if op == KernelOp::FusedSddmmSpmm {
+                ensure_capacity(&mut self.c_locals[p], len, n);
+            }
+        }
+        true
+    }
+
+    /// Seed only the slots of `layout` not already dominated by the
+    /// session's seeded multiset. Kernel ops share most buffer roles (the
+    /// B posts, rep subsets, fold partials), and only one op executes at a
+    /// time, so one pool slot can serve a role in every op's layout — the
+    /// per-call zero-miss argument only needs, per op, an injective
+    /// mapping from that op's roles onto free slots of at least the same
+    /// size, which dominance of the union-max multiset provides. Greedy
+    /// largest-first matching is exact here (exchange argument), so no
+    /// duplicate slots are ever seeded — across ops or across width
+    /// growth.
+    fn seed_missing(&mut self, mut layout: Vec<usize>) {
+        layout.retain(|&e| e > 0);
+        layout.sort_unstable_by(|a, b| b.cmp(a)); // descending
+        let mut avail = 0usize; // cursor into seeded_slots (descending)
+        let mut added = Vec::new();
+        for &need in &layout {
+            if avail < self.seeded_slots.len() && self.seeded_slots[avail] >= need {
+                avail += 1;
+            } else {
+                added.push(need);
+            }
+        }
+        if added.is_empty() {
+            return;
+        }
+        {
+            let mut pool = self.pool.lock().unwrap();
+            for &e in &added {
+                pool.seed(e);
+            }
+        }
+        self.seeded_slots.extend(added);
+        self.seeded_slots.sort_unstable_by(|a, b| b.cmp(a));
+    }
+}
+
+/// Grow a persistent block's backing storage to hold `len × n` floats
+/// without ever shrinking it (other kernel ops may have seeded wider).
+fn ensure_capacity(d: &mut Dense, len: usize, n: usize) {
+    if d.data.capacity() < len * n {
+        *d = Dense::zeros(len, n);
+    }
 }
 
 fn build_all(dist: &DistSpmm, opts: &ExecOpts, prefers_tiles: bool) -> Vec<Program> {
+    build_all_op(dist, None, opts, prefers_tiles, KernelOp::Spmm)
+}
+
+fn build_all_op(
+    dist: &DistSpmm,
+    xsched: Option<&HierSchedule>,
+    opts: &ExecOpts,
+    prefers_tiles: bool,
+    op: KernelOp,
+) -> Vec<Program> {
     (0..dist.part.nparts)
         .map(|rank| {
             build_program(
@@ -295,38 +722,49 @@ fn build_all(dist: &DistSpmm, opts: &ExecOpts, prefers_tiles: bool) -> Vec<Progr
                 &dist.part,
                 &dist.plan,
                 dist.sched.as_ref(),
+                xsched,
                 opts,
                 prefers_tiles,
+                op,
             )
         })
         .collect()
 }
 
-/// Enumerate the posted-payload layout: the dense-row height of every
-/// buffer role the programs can hold live simultaneously — outgoing B
-/// posts, produced C partials, representative redistribution subsets,
-/// pre-aggregation accumulators, and the remote-partial scratch acquired
-/// while folding each incoming column-based contribution. One pool slot
-/// per role is a strict upper bound on concurrent liveness: each role
-/// acquires at most once per call and everything is back in the pool by
-/// the end of the call.
-fn payload_layout(dist: &DistSpmm, programs: &[Program]) -> Vec<usize> {
+/// Enumerate the posted-payload layout as element counts at dense width
+/// `n`: one pool slot per buffer role the programs can ever hold live at
+/// once — every outgoing B/X message, every produced C partial,
+/// representative redistribution subsets, pre-aggregation accumulators,
+/// the remote-partial scratch acquired while folding each incoming
+/// column-based contribution, and (SDDMM-family) every edge-value buffer.
+/// One slot per role is a strict upper bound on concurrent liveness: each
+/// role acquires at most once per call and everything is back in the pool
+/// by the end of the call.
+fn payload_elems(
+    dist: &DistSpmm,
+    programs: &[Program],
+    xsched: Option<&HierSchedule>,
+    n: usize,
+) -> Vec<usize> {
     let part = &dist.part;
     let plan = &dist.plan;
     let sched = dist.sched.as_ref();
-    let mut rows = Vec::new();
+    let mut elems = Vec::new();
     for (r, prog) in programs.iter().enumerate() {
         for post in &prog.b_posts {
-            rows.push(post.rows.len());
+            elems.push(post.rows.len() * n);
+        }
+        for post in &prog.x_posts {
+            elems.push(post.rows.len() * n);
         }
         for item in &prog.items {
             match item {
                 Item::ProduceDirectC { dst } => {
-                    rows.push(plan.pairs[*dst][r].a_row_compact.nrows);
+                    elems.push(plan.pairs[*dst][r].a_row_compact.nrows * n);
                 }
                 Item::ProduceFlowC { flow } => {
                     let f = &sched.expect("flow item implies a schedule").c_flows[*flow];
-                    rows.push(plan.pairs[f.dst][r].a_row_compact.nrows);
+                    elems.push(plan.pairs[f.dst][r].a_row_compact.nrows * n);
                 }
                 Item::DiagTile { .. } => {}
             }
@@ -334,11 +772,17 @@ fn payload_layout(dist: &DistSpmm, programs: &[Program]) -> Vec<usize> {
         for &fi in prog.rep_b.values() {
             let f = &sched.expect("rep duty implies a schedule").b_flows[fi];
             for (_, crows) in &f.consumers {
-                rows.push(crows.len());
+                elems.push(crows.len() * n);
+            }
+        }
+        for &fi in prog.rep_x.values() {
+            let f = &xsched.expect("X rep duty implies an X schedule").b_flows[fi];
+            for (_, crows) in &f.consumers {
+                elems.push(crows.len() * n);
             }
         }
         for &i in &prog.agg_flows {
-            rows.push(sched.expect("agg flow implies a schedule").c_flows[i].rows.len());
+            elems.push(sched.expect("agg flow implies a schedule").c_flows[i].rows.len() * n);
         }
         for &key in &prog.fold_keys {
             if let Some((KIND_B, origin)) = ckey_decode(key) {
@@ -346,18 +790,37 @@ fn payload_layout(dist: &DistSpmm, programs: &[Program]) -> Vec<usize> {
                 if pair.a_col_compact.nnz() > 0 {
                     // The full-height partial, plus the compact row set the
                     // sparse apply path gathers into — the branch predicate
-                    // is shared with `offer_col_contribution` so the two
-                    // cannot drift apart.
-                    rows.push(part.len(r));
+                    // is shared with `consume_b` so the two cannot drift
+                    // apart.
+                    elems.push(part.len(r) * n);
                     let touched = pair.a_col_compact.nonempty_rows().len();
-                    if super::col_contribution_is_compact(touched, part.len(r)) {
-                        rows.push(touched);
+                    if col_contribution_is_compact(touched, part.len(r)) {
+                        elems.push(touched * n);
                     }
                 }
             }
         }
+        if prog.op != super::KernelOp::Spmm {
+            // Edge-value buffers (width-independent): the diagonal block's,
+            // one per incoming column-served origin, one per row-served
+            // destination — plus, for the fused kernel, the reactive row
+            // partials its X arrivals produce.
+            elems.push(dist.blocks[r].diag.nnz());
+            for q in 0..part.nparts {
+                if q == r {
+                    continue;
+                }
+                elems.push(plan.pairs[r][q].a_col_compact.nnz());
+                elems.push(plan.pairs[q][r].a_row_compact.nnz());
+            }
+            if prog.op == super::KernelOp::FusedSddmmSpmm {
+                for dst in prog.row_route.keys() {
+                    elems.push(plan.pairs[*dst][r].a_row_compact.nrows * n);
+                }
+            }
+        }
     }
-    rows
+    elems
 }
 
 #[cfg(test)]
@@ -463,6 +926,82 @@ mod tests {
             s.set_opts(opts);
             let (got, _) = s.execute(&b, &NativeKernel);
             assert_eq!(got.data, want.data, "{opts:?}");
+        }
+    }
+
+    #[test]
+    fn session_sddmm_matches_oracle_and_reaches_steady_state() {
+        for hier in [false, true] {
+            let mut s = SpmmSession::new(planned(26, hier), ExecOpts::default(), true);
+            let a_hat = {
+                // Rebuild the same matrix the plan froze (planned() is
+                // deterministic) to get the oracle.
+                gen::rmat(192, 2500, (0.55, 0.2, 0.19), false, 26)
+            };
+            let mut rng = Rng::new(10);
+            let x = Dense::random(192, 8, &mut rng);
+            let y = Dense::random(192, 8, &mut rng);
+            let want = a_hat.sddmm(&x, &y);
+            for _ in 0..3 {
+                let (got, _) = s.execute_sddmm(&x, &y, &NativeKernel);
+                assert_eq!(got, want, "hier={hier}");
+            }
+            let am = s.amortization_for(KernelOp::Sddmm);
+            assert_eq!(am.calls(), 3);
+            assert!(am.alloc_events[0] > 0 && am.plan_secs[0] > 0.0);
+            assert!(am.steady_state(), "hier={hier}: {:?}", am.alloc_events);
+        }
+    }
+
+    #[test]
+    fn session_shared_plan_spmm_then_sddmm_identical_b_side() {
+        // The plan-sharing session contract: SpMM then SDDMM off one
+        // frozen plan move identical B-side bytes, and the second call of
+        // each kernel does zero planning and zero fresh allocations.
+        let mut s = SpmmSession::new(planned(27, true), ExecOpts::default(), true);
+        let mut rng = Rng::new(11);
+        let x = Dense::random(192, 8, &mut rng);
+        let y = Dense::random(192, 8, &mut rng);
+        let (_, spmm_stats) = s.execute(&y, &NativeKernel);
+        let (_, sddmm_stats) = s.execute_sddmm(&x, &y, &NativeKernel);
+        assert!(spmm_stats.measured_b_volume().total() > 0);
+        assert_eq!(
+            spmm_stats.measured_b_volume(),
+            sddmm_stats.measured_b_volume(),
+            "kernels moved different B-side bytes off one plan"
+        );
+        // Second calls of both kernels are clean.
+        let (_, _) = s.execute(&y, &NativeKernel);
+        let (_, _) = s.execute_sddmm(&x, &y, &NativeKernel);
+        assert_eq!(s.amortization().alloc_events[1], 0);
+        assert_eq!(s.amortization().plan_secs[1], 0.0);
+        assert_eq!(s.amortization_for(KernelOp::Sddmm).alloc_events[1], 0);
+        assert_eq!(s.amortization_for(KernelOp::Sddmm).plan_secs[1], 0.0);
+    }
+
+    #[test]
+    fn session_fused_matches_one_shot_and_steady_state() {
+        let a = crate::bench::int_matrix(192, 1800, 28);
+        let x = Dense::from_fn(192, 4, |i, j| ((i * 3 + j) % 5) as f32 - 2.0);
+        let y = Dense::from_fn(192, 4, |i, j| ((i + j * 5) % 5) as f32 - 2.0);
+        let want = a.sddmm(&x, &y).spmm(&y);
+        for hier in [false, true] {
+            let d = DistSpmm::plan(
+                &a,
+                Strategy::Joint(Solver::Koenig),
+                Topology::tsubame4(8),
+                hier,
+            );
+            let mut s = d.into_session(ExecOpts::default(), true);
+            s.warm_kernel(KernelOp::FusedSddmmSpmm, 4);
+            for _ in 0..3 {
+                let (got, _) = s.execute_fused(&x, &y, &NativeKernel);
+                assert_eq!(got.data, want.data, "hier={hier}");
+            }
+            let am = s.amortization_for(KernelOp::FusedSddmmSpmm);
+            assert!(am.steady_state(), "hier={hier}");
+            assert_eq!(am.total_allocs(), 0, "hier={hier}: warmed fused allocated");
+            assert!(am.plan_secs.iter().all(|&t| t == 0.0), "hier={hier}");
         }
     }
 }

@@ -17,7 +17,7 @@
 
 use crate::comm::Strategy;
 use crate::dense::Dense;
-use crate::exec::kernel::SpmmKernel;
+use crate::exec::kernel::{KernelOp, SpmmKernel};
 use crate::exec::{ExecOpts, ExecStats};
 use crate::sparse::{Coo, Csr};
 use crate::spmm::{DistSpmm, SpmmSession};
@@ -571,6 +571,101 @@ impl Gcn {
     }
 }
 
+/// GAT-style attention propagation layer (softmax-free linear attention):
+/// one round of Z = X·W, E = Â ⊙ (Z·Zᵀ) (edge scores on the adjacency
+/// pattern), H = relu(E·Z) — the SDDMM→SpMM composition attention GNN
+/// message passing reduces to. Both sparse kernels run through **one
+/// kernel-generic [`SpmmSession`]** frozen from the Â plan, exactly
+/// [`Gcn`]'s session machinery: the plan is built once, the fused forward
+/// ([`Gat::forward`]) computes scores and aggregates them in a single
+/// exchange, and [`Gat::forward_two_pass`] is the ablation control that
+/// materializes E first (the path `ablation_fused` charges for the extra
+/// B-side re-shipment plus the edge-value gather).
+pub struct Gat {
+    /// Kernel-generic session over the frozen Â plan (serves
+    /// `execute_sddmm` and `execute_fused`).
+    pub session: SpmmSession,
+    /// Normalized adjacency, kept for oracle checks and the two-pass
+    /// control's SpMM half.
+    pub a_hat: Csr,
+    /// Projection weights: scores and aggregation both use Z = X·W (the
+    /// single-operand form that makes the fused kernel exchange-free
+    /// beyond SDDMM's own traffic).
+    pub w: Dense,
+}
+
+impl Gat {
+    /// Plan the layer: normalize the adjacency, freeze one SHIRO plan into
+    /// a session, warm it for the fused kernel at `out_dim`, and
+    /// initialize the projection.
+    pub fn new(
+        adj: &Csr,
+        strategy: Strategy,
+        topo: Topology,
+        hierarchical: bool,
+        feature_dim: usize,
+        out_dim: usize,
+        seed: u64,
+    ) -> Gat {
+        let a_hat = normalize_adj(adj);
+        let dist = DistSpmm::plan(&a_hat, strategy, topo, hierarchical);
+        let mut session = dist.into_session(ExecOpts::default(), true);
+        session.warm_kernel(KernelOp::FusedSddmmSpmm, out_dim);
+        let scale = (1.0 / feature_dim as f32).sqrt();
+        let mut rng = Rng::new(seed ^ xw0w1());
+        let data = (0..feature_dim * out_dim)
+            .map(|_| (rng.f32() * 2.0 - 1.0) * scale)
+            .collect();
+        Gat { session, a_hat, w: Dense::from_vec(feature_dim, out_dim, data) }
+    }
+
+    fn project(&self, x: &Dense) -> Dense {
+        assert_eq!(x.ncols, self.w.nrows, "feature dim mismatch");
+        x.matmul(&self.w)
+    }
+
+    fn relu(mut h: Dense) -> Dense {
+        for v in h.data.iter_mut() {
+            *v = v.max(0.0);
+        }
+        h
+    }
+
+    /// Fused forward pass: one distributed exchange computes the edge
+    /// scores *and* aggregates with them.
+    pub fn forward(
+        &mut self,
+        x: &Dense,
+        kernel: &(dyn SpmmKernel + Sync),
+    ) -> (Dense, ExecStats) {
+        let z = self.project(x);
+        let (h, stats) = self.session.execute_fused(&z, &z, kernel);
+        (Self::relu(h), stats)
+    }
+
+    /// Two-pass ablation control: distributed SDDMM materializes E through
+    /// the same session, then the aggregation E·Z runs serially here. The
+    /// returned stats cover the SDDMM exchange only — in a distributed
+    /// two-pass deployment the SpMM pass would additionally re-ship the
+    /// plan's whole B side and gather the row-served edge values home,
+    /// which is exactly the traffic `ablation_fused` charges against it.
+    pub fn forward_two_pass(
+        &mut self,
+        x: &Dense,
+        kernel: &(dyn SpmmKernel + Sync),
+    ) -> (Dense, ExecStats) {
+        let z = self.project(x);
+        let (e, stats) = self.session.execute_sddmm(&z, &z, kernel);
+        (Self::relu(e.spmm(&z)), stats)
+    }
+
+    /// Serial oracle for the whole layer.
+    pub fn forward_serial(&self, x: &Dense) -> Dense {
+        let z = self.project(x);
+        Self::relu(self.a_hat.sddmm(&z, &z).spmm(&z))
+    }
+}
+
 // Small seed-mixing helper (avoids a magic literal at the use site).
 #[allow(non_snake_case)]
 fn xw0w1() -> u64 {
@@ -657,6 +752,67 @@ mod tests {
                 "strategies disagree: {reports:?}"
             );
         }
+    }
+
+    #[test]
+    fn gat_fused_matches_serial_and_two_pass() {
+        let adj = gen::rmat(128, 1200, (0.5, 0.2, 0.2), true, 9);
+        let mut rng = Rng::new(15);
+        let x = Dense::random(128, 16, &mut rng);
+        for hier in [false, true] {
+            let mut gat = Gat::new(
+                &adj,
+                Strategy::Joint(Solver::Koenig),
+                Topology::tsubame4(4),
+                hier,
+                16,
+                8,
+                7,
+            );
+            let want = gat.forward_serial(&x);
+            // The two-pass control is bitwise-serial: distributed SDDMM is
+            // bitwise-exact and its SpMM half runs serially here.
+            let (two_pass, _) = gat.forward_two_pass(&x, &NativeKernel);
+            assert_eq!(two_pass.data, want.data, "hier={hier}");
+            // Fused agrees numerically (distributed fold order differs).
+            let (fused, _) = gat.forward(&x, &NativeKernel);
+            let err = want.diff_norm(&fused) / (want.max_abs() as f64 + 1e-30);
+            assert!(err < 1e-3, "hier={hier}: fused rel err {err}");
+        }
+    }
+
+    #[test]
+    fn gat_fused_deterministic_and_steady_state() {
+        use crate::exec::ExecOpts;
+        let adj = gen::rmat(128, 1100, (0.55, 0.2, 0.19), false, 11);
+        let mut gat = Gat::new(
+            &adj,
+            Strategy::Joint(Solver::Koenig),
+            Topology::tsubame4(4),
+            true,
+            8,
+            8,
+            3,
+        );
+        let mut rng = Rng::new(16);
+        let x = Dense::random(128, 8, &mut rng);
+        let (h0, _) = gat.forward(&x, &NativeKernel);
+        // Overlap off and worker caps must not change the bits.
+        for opts in [ExecOpts::sequential(), ExecOpts { workers: 2, ..ExecOpts::default() }] {
+            gat.session.set_opts(opts);
+            let (h, _) = gat.forward(&x, &NativeKernel);
+            assert_eq!(h.data, h0.data, "{opts:?}");
+        }
+        gat.session.set_opts(ExecOpts::default());
+        for _ in 0..2 {
+            gat.forward(&x, &NativeKernel);
+        }
+        // Warmed at construction: the fused kernel never allocates and
+        // never plans inside forward.
+        let am = gat.session.amortization_for(KernelOp::FusedSddmmSpmm);
+        assert!(am.steady_state());
+        assert_eq!(am.total_allocs(), 0, "warmed GAT session allocated");
+        assert!(am.plan_secs.iter().all(|&t| t == 0.0));
     }
 
     #[test]

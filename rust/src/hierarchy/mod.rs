@@ -31,6 +31,12 @@ pub mod phase {
     pub const COMPUTE_REMOTE: &str = "compute: remote";
     /// Executor only: blocked in `recv` with no compute left to overlap.
     pub const IDLE: &str = "idle: waiting";
+    /// SDDMM/fused: dense X rows fetched by the row-serving side (the
+    /// plan's C covers reversed into stage-I fetches — DESIGN.md §9).
+    pub const S1_FETCH_X: &str = "stageI: fetchX";
+    /// SDDMM/fused: representative redistribution of a fetched X union to
+    /// its in-group row-servers (mirror of stage-II B distribution).
+    pub const S2_INTRA_X: &str = "stageII: intraX";
 }
 
 /// Hierarchical column-based flow: source rank `src` serves destination
@@ -210,6 +216,42 @@ pub fn mirror(sched: &HierSchedule) -> HierSchedule {
         .collect();
     direct_c.sort_by(|a, b| (a.1, a.0).cmp(&(b.1, b.0)));
     HierSchedule { nranks: sched.nranks, b_flows, c_flows, direct_b, direct_c }
+}
+
+impl HierSchedule {
+    /// Stage-I-only degeneration of this schedule: the B-side flows
+    /// (deduplicated inter-group fetches plus same-group direct transfers)
+    /// with the row-based C side dropped entirely. This is the schedule a
+    /// pure dense-row-fetch kernel consumes: SDDMM's output is sparse at
+    /// A's pattern, so there is no partial-C aggregation and no stage-II
+    /// inter-group transmission — the hierarchy *itself* degenerates,
+    /// rather than the executor special-casing empty aggregation
+    /// (DESIGN.md §9). The kept flows still perform their stage-II
+    /// intra-group rep redistribution — that second hop is part of the
+    /// fetch pattern, not of the dropped C side.
+    pub fn stage1_fetch(&self) -> HierSchedule {
+        HierSchedule {
+            nranks: self.nranks,
+            b_flows: self.b_flows.clone(),
+            c_flows: Vec::new(),
+            direct_b: self.direct_b.clone(),
+            direct_c: Vec::new(),
+        }
+    }
+}
+
+/// The X-side fetch schedule for SDDMM and the fused kernel: every
+/// row-based C flow of `sched` reversed into a dense-row fetch. In SpMM,
+/// `sched`'s C flows carry *computed partials* q→p with in-group
+/// pre-aggregation; in SDDMM those same covers describe which X rows of p
+/// the row-serving ranks q need — the identical union crosses the
+/// inter-group link once (p → rep of q's group), and the rep redistributes
+/// per-consumer subsets, exactly a B flow in the reverse direction. That
+/// is [`mirror`]'s B side, so the X schedule is
+/// `mirror(sched).stage1_fetch()`: volume-preserving (same unions, same
+/// subsets, direction reversed) and aggregation-free.
+pub fn sddmm_fetch(sched: &HierSchedule) -> HierSchedule {
+    mirror(sched).stage1_fetch()
 }
 
 /// A point-to-point message with a tier-stage label, consumed by the
@@ -618,6 +660,63 @@ mod tests {
             // Mirroring twice is the identity.
             assert_eq!(mirror(&mirrored), sched, "seed {seed} double mirror");
         }
+    }
+
+    #[test]
+    fn stage1_fetch_drops_exactly_the_c_side() {
+        let (plan, topo) = setup(128, 8, 9);
+        let sched = build(&plan, &topo);
+        assert!(!sched.c_flows.is_empty(), "test needs a real C side");
+        let fetch = sched.stage1_fetch();
+        assert_eq!(fetch.b_flows, sched.b_flows);
+        assert_eq!(fetch.direct_b, sched.direct_b);
+        assert!(fetch.c_flows.is_empty());
+        assert!(fetch.direct_c.is_empty());
+        // No stage-II inter-group transmissions remain; the B fetch volume
+        // is untouched.
+        let m = fetch.messages();
+        assert!(m.s2_inter_c.is_empty());
+        assert!(m.s1_intra_c.is_empty());
+        assert_eq!(m.s1_inter_b, sched.messages().s1_inter_b);
+    }
+
+    #[test]
+    fn sddmm_fetch_is_the_reversed_c_side() {
+        let (plan, topo) = setup(128, 8, 10);
+        let sched = build(&plan, &topo);
+        let xs = sddmm_fetch(&sched);
+        assert!(xs.c_flows.is_empty() && xs.direct_c.is_empty());
+        assert_eq!(xs.b_flows.len(), sched.c_flows.len());
+        for (xf, cf) in xs.b_flows.iter().zip(&sched.c_flows) {
+            // Same union rows, same rep, direction reversed: the X fetch
+            // is volume-identical to the SpMM C flow it replaces.
+            assert_eq!(xf.src, cf.dst);
+            assert_eq!(xf.dst_group, cf.src_group);
+            assert_eq!(xf.rep, cf.rep);
+            assert_eq!(xf.rows, cf.rows);
+            assert_eq!(xf.consumers, cf.producers);
+        }
+        // Reversed direct transfers carry the same rows (order follows
+        // mirror's canonical (dst, src) re-sort, so compare as sets).
+        assert_eq!(xs.direct_b.len(), sched.direct_c.len());
+        let mut want: Vec<(usize, usize, Vec<u32>)> = sched
+            .direct_c
+            .iter()
+            .map(|(s, d, rows)| (*d, *s, rows.clone()))
+            .collect();
+        want.sort();
+        let mut got = xs.direct_b.clone();
+        got.sort();
+        assert_eq!(got, want);
+        // Reversal preserves total fetch volume: X inter bytes equal the
+        // C flows' aggregated inter transmissions.
+        let n = 16;
+        assert_eq!(
+            xs.inter_group_bytes(n),
+            sched.messages().s2_inter_c.iter().map(|m| m.rows).sum::<u64>()
+                * n as u64
+                * crate::comm::SZ_DT
+        );
     }
 
     #[test]

@@ -4,6 +4,8 @@
 //!   datasets                         Tab. 2 registry and generated stats
 //!   plan     --dataset D --ranks R   plan + volume report per strategy
 //!   run      --dataset D --ranks R   execute distributed SpMM, verify
+//!   sddmm    --dataset D --ranks R   SDDMM + fused SDDMM→SpMM on the
+//!                                    shared SpMM plan, verify + byte report
 //!   sim      --dataset D --ranks R   simulate all systems at scale
 //!   gnn      --epochs E --ranks R    GCN training case study
 //!   info                             runtime/artifact status
@@ -29,13 +31,14 @@ fn main() {
         "datasets" => cmd_datasets(&cfg),
         "plan" => cmd_plan(&cfg),
         "run" => cmd_run(&cfg),
+        "sddmm" => cmd_sddmm(&cfg),
         "sim" => cmd_sim(&cfg),
         "gnn" => cmd_gnn(&cfg),
         "trace" => cmd_trace(&cfg, &args),
         "info" => cmd_info(),
         _ => {
             eprintln!(
-                "usage: shiro <datasets|plan|run|sim|gnn|trace|info> \
+                "usage: shiro <datasets|plan|run|sddmm|sim|gnn|trace|info> \
                  [--dataset D] [--ranks R] [--n N] [--scale S] [--topo T] \
                  [--strategy S] [--partitioner P] [--overlap on|off] [--config F]"
             );
@@ -176,6 +179,64 @@ fn cmd_run(cfg: &RunConfig) {
         w.compute_secs * 1e3
     );
     assert!(err < 1e-3, "verification failed");
+}
+
+fn cmd_sddmm(cfg: &RunConfig) {
+    use shiro::dense::Dense;
+    use shiro::exec::kernel::NativeKernel;
+    use shiro::spmm::DistSpmm;
+    use shiro::util::rng::Rng;
+    let a = cfg.matrix();
+    let topo = cfg.topology();
+    let params = shiro::plan::PlanParams { n_dense: cfg.n_dense, ..Default::default() };
+    let d =
+        DistSpmm::plan_partitioned(&a, cfg.strategy(), topo, true, &params, cfg.partitioner());
+    let mut rng = Rng::new(1);
+    let x = Dense::random(a.nrows, cfg.n_dense, &mut rng);
+    let y = Dense::random(a.nrows, cfg.n_dense, &mut rng);
+    let opts = cfg.exec_opts();
+
+    // Standalone SDDMM: bitwise-exact vs the serial oracle (each edge
+    // value has one producer and a fixed dot order — no tolerance needed).
+    let (e, sddmm_stats) = d.execute_sddmm_with(&x, &y, &NativeKernel, &opts);
+    let want = a.sddmm(&x, &y);
+    assert_eq!(e, want, "distributed SDDMM != serial oracle");
+    println!(
+        "sddmm on {} ranks [{}] overlap={}: {} edge values bitwise-exact, \
+         wall {:.1} ms, intra {} B, inter {} B",
+        cfg.ranks,
+        d.plan.strategy.name(),
+        if cfg.overlap { "on" } else { "off" },
+        e.nnz(),
+        sddmm_stats.wall_secs * 1e3,
+        sddmm_stats.total_intra_bytes(),
+        sddmm_stats.total_inter_bytes()
+    );
+
+    // Plan sharing: the same frozen plan serves SpMM with identical B-side
+    // traffic.
+    let (_, spmm_stats) = d.execute_with(&y, &NativeKernel, &opts);
+    let (bs, bd) = (
+        spmm_stats.measured_b_volume().total(),
+        sddmm_stats.measured_b_volume().total(),
+    );
+    println!("plan sharing: B-side bytes spmm={bs} sddmm={bd} (identical: {})", bs == bd);
+    assert_eq!(bs, bd, "B-side volume differs between kernels on one plan");
+
+    // Fused SDDMM→SpMM vs the two-pass alternative, byte-for-byte.
+    let (c, fused_stats) = d.execute_fused_with(&x, &y, &NativeKernel, &opts);
+    let want_c = want.spmm(&y);
+    let err = want_c.diff_norm(&c) / (want_c.max_abs() as f64 + 1e-30);
+    assert!(err < 1e-3, "fused verification failed: rel err {err}");
+    let total = |s: &shiro::exec::ExecStats| s.total_intra_bytes() + s.total_inter_bytes();
+    let two_pass = total(&sddmm_stats) + total(&spmm_stats);
+    println!(
+        "fused sddmm→spmm: rel err {err:.2e}, {} B exchanged vs {} B two-pass \
+         ({:.1}% saved, not counting the edge-value gather two-pass also needs)",
+        total(&fused_stats),
+        two_pass,
+        shiro::metrics::reduction_pct(two_pass, total(&fused_stats))
+    );
 }
 
 fn cmd_sim(cfg: &RunConfig) {

@@ -274,6 +274,82 @@ impl Csr {
         }
     }
 
+    /// SDDMM: sampled dense-dense matrix multiplication. Returns a matrix
+    /// with this pattern and values `out[k] = data[k] · ⟨x_i, y_j⟩` for the
+    /// k-th stored entry (i, j). This is the serial oracle for the
+    /// distributed SDDMM engine: every entry is a single dot product with a
+    /// fixed accumulation order ([`Csr::sddmm_rows_into`]), so the
+    /// distributed kernel — which computes each entry exactly once, at
+    /// whichever rank the communication plan assigns it to — is
+    /// bitwise-identical to this, even on arbitrary float inputs.
+    pub fn sddmm(&self, x: &Dense, y: &Dense) -> Csr {
+        let mut out = self.clone();
+        self.sddmm_rows_into(x, y, &mut out.data, 0, self.nrows);
+        out
+    }
+
+    /// Row-range SDDMM tile into a values buffer laid out in entry order
+    /// (same indexing as `self.data`): for each stored entry (r, c) with
+    /// r0 ≤ r < r1, `vals[k] = data[k] · Σ_d x[r,d]·y[c,d]`, the inner sum
+    /// accumulated in ascending-d order. `x` rows are indexed by this
+    /// pattern's *rows*, `y` rows by its *columns* — the executor passes
+    /// compact operands whose index spaces already match the packed
+    /// received payloads. Entries are written independently (no
+    /// accumulation across entries), so any tiling in any order produces
+    /// the same bits.
+    pub fn sddmm_rows_into(&self, x: &Dense, y: &Dense, vals: &mut [f32], r0: usize, r1: usize) {
+        assert_eq!(x.ncols, y.ncols, "sddmm feature-dim mismatch");
+        assert!(x.nrows >= self.nrows, "sddmm x height");
+        assert!(y.nrows >= self.ncols, "sddmm y height");
+        assert_eq!(vals.len(), self.nnz());
+        assert!(r0 <= r1 && r1 <= self.nrows);
+        for r in r0..r1 {
+            let xr = x.row(r);
+            let (lo, hi) = (self.indptr[r] as usize, self.indptr[r + 1] as usize);
+            for k in lo..hi {
+                let yr = y.row(self.indices[k] as usize);
+                let mut dot = 0.0f32;
+                for (a, b) in xr.iter().zip(yr) {
+                    dot += a * b;
+                }
+                vals[k] = self.data[k] * dot;
+            }
+        }
+    }
+
+    /// Row-range SpMM tile using an override values buffer in entry order:
+    /// `c[r,:] += Σ_k vals[k]·b[col_k,:]` for rows r0..r1. Visits each
+    /// row's entries in the same order as [`Csr::spmm_rows_acc`], so the
+    /// two are interchangeable bit-for-bit when `vals == self.data`. This
+    /// is the fused SDDMM→SpMM primitive: freshly computed edge values are
+    /// used as the SpMM operand without materializing a value-swapped
+    /// matrix.
+    pub fn spmm_vals_rows_acc(
+        &self,
+        vals: &[f32],
+        b: &Dense,
+        c: &mut Dense,
+        r0: usize,
+        r1: usize,
+    ) {
+        assert_eq!(self.ncols, b.nrows);
+        assert_eq!(self.nrows, c.nrows);
+        assert_eq!(b.ncols, c.ncols);
+        assert_eq!(vals.len(), self.nnz());
+        assert!(r0 <= r1 && r1 <= self.nrows);
+        for r in r0..r1 {
+            let out = c.row_mut(r);
+            let (lo, hi) = (self.indptr[r] as usize, self.indptr[r + 1] as usize);
+            for k in lo..hi {
+                let v = vals[k];
+                let brow = b.row(self.indices[k] as usize);
+                for (o, &bv) in out.iter_mut().zip(brow) {
+                    *o += v * bv;
+                }
+            }
+        }
+    }
+
     /// Convert to COO.
     pub fn to_coo(&self) -> Coo {
         let mut coo = Coo::new(self.nrows, self.ncols);
@@ -433,6 +509,71 @@ mod tests {
             }
             assert_eq!(c.data, want.data, "tile {tile}");
         }
+    }
+
+    #[test]
+    fn sddmm_matches_by_hand() {
+        let m = small();
+        let x = Dense::from_fn(3, 2, |i, j| (i * 2 + j) as f32 + 1.0);
+        let y = Dense::from_fn(3, 2, |i, j| (i + j) as f32);
+        let e = m.sddmm(&x, &y);
+        // Structure is preserved exactly.
+        assert_eq!(e.indptr, m.indptr);
+        assert_eq!(e.indices, m.indices);
+        // (0,0): 1·⟨x0,y0⟩ = 1·(1·0 + 2·1) = 2; (0,2): 2·⟨x0,y2⟩ = 2·(1·2+2·3) = 16
+        assert_eq!(e.row_values(0), &[2.0, 16.0]);
+        // (2,1): 3·⟨x2,y1⟩ = 3·(5·1+6·2) = 51; (2,2): 4·⟨x2,y2⟩ = 4·(5·2+6·3) = 112
+        assert_eq!(e.row_values(2), &[51.0, 112.0]);
+    }
+
+    #[test]
+    fn sddmm_tiled_bitwise_matches_full() {
+        let a = crate::sparse::gen::rmat(64, 600, (0.5, 0.2, 0.2), false, 12);
+        let mut rng = crate::util::rng::Rng::new(6);
+        let x = Dense::random(64, 7, &mut rng);
+        let y = Dense::random(64, 7, &mut rng);
+        let want = a.sddmm(&x, &y);
+        for tile in [1usize, 9, 64] {
+            let mut vals = vec![0.0f32; a.nnz()];
+            let mut starts: Vec<usize> = (0..64).step_by(tile).collect();
+            starts.reverse();
+            for r0 in starts {
+                a.sddmm_rows_into(&x, &y, &mut vals, r0, (r0 + tile).min(64));
+            }
+            assert_eq!(vals, want.data, "tile {tile}");
+        }
+    }
+
+    #[test]
+    fn spmm_vals_matches_value_swapped_matrix() {
+        // Using an override values buffer must be bitwise-identical to
+        // materializing a matrix with those values and running plain SpMM —
+        // the fused kernel's correctness anchor.
+        let a = crate::sparse::gen::powerlaw(48, 400, 1.3, 13);
+        let mut rng = crate::util::rng::Rng::new(7);
+        let x = Dense::random(48, 5, &mut rng);
+        let y = Dense::random(48, 5, &mut rng);
+        let e = a.sddmm(&x, &y);
+        let want = e.spmm(&y);
+        let mut got = Dense::zeros(48, 5);
+        for r0 in (0..48).step_by(11) {
+            a.spmm_vals_rows_acc(&e.data, &y, &mut got, r0, (r0 + 11).min(48));
+        }
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn sddmm_empty_rows_and_empty_pattern() {
+        // Rows with no stored entries contribute nothing; an all-empty
+        // pattern yields an all-empty result.
+        let z = Csr::zeros(4, 4);
+        let x = Dense::from_elem(4, 3, 1.0);
+        let e = z.sddmm(&x, &x);
+        assert_eq!(e.nnz(), 0);
+        let m = small(); // row 1 is structurally empty
+        let e = m.sddmm(&x, &x);
+        assert_eq!(e.row_nnz(1), 0);
+        assert_eq!(e.row_values(0), &[3.0, 6.0]); // data · ⟨1,1⟩·3
     }
 
     #[test]

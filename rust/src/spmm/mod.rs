@@ -11,6 +11,7 @@ use crate::sim::{self, SimJob, SimReport, Stage};
 use crate::sparse::Csr;
 use crate::topology::Topology;
 
+pub use crate::exec::kernel::KernelOp;
 pub use crate::exec::session::SpmmSession;
 
 /// A fully planned distributed SpMM instance. Planning (steps 1–2 of the
@@ -188,6 +189,76 @@ impl DistSpmm {
         )
     }
 
+    /// Execute distributed SDDMM E = A ⊙ (X·Yᵀ) on **this SpMM plan** —
+    /// the cross-kernel reuse at the heart of DESIGN.md §9: the same B-row
+    /// covers that feed SpMM carry the Y operand, the C covers reversed
+    /// carry X, and every edge value is computed exactly once at the rank
+    /// the plan assigned its nonzero to. Bitwise-identical to
+    /// [`Csr::sddmm`] on any input.
+    pub fn execute_sddmm(
+        &self,
+        x: &Dense,
+        y: &Dense,
+        kernel: &(dyn SpmmKernel + Sync),
+    ) -> (Csr, ExecStats) {
+        self.execute_sddmm_with(x, y, kernel, &exec::ExecOpts::default())
+    }
+
+    /// [`DistSpmm::execute_sddmm`] with explicit executor options.
+    pub fn execute_sddmm_with(
+        &self,
+        x: &Dense,
+        y: &Dense,
+        kernel: &(dyn SpmmKernel + Sync),
+        opts: &exec::ExecOpts,
+    ) -> (Csr, ExecStats) {
+        exec::run_sddmm_with(
+            &self.part,
+            &self.plan,
+            &self.blocks,
+            self.sched.as_ref(),
+            &self.topo,
+            x,
+            y,
+            kernel,
+            opts,
+        )
+    }
+
+    /// Execute the fused SDDMM→SpMM kernel C = (A ⊙ (X·Yᵀ))·Y on this
+    /// plan: edge values are computed and immediately consumed as the SpMM
+    /// operand, GAT-style — one exchange, no second B shipment, no
+    /// edge-value gather (the strict byte saving `ablation_fused` gates).
+    pub fn execute_fused(
+        &self,
+        x: &Dense,
+        y: &Dense,
+        kernel: &(dyn SpmmKernel + Sync),
+    ) -> (Dense, ExecStats) {
+        self.execute_fused_with(x, y, kernel, &exec::ExecOpts::default())
+    }
+
+    /// [`DistSpmm::execute_fused`] with explicit executor options.
+    pub fn execute_fused_with(
+        &self,
+        x: &Dense,
+        y: &Dense,
+        kernel: &(dyn SpmmKernel + Sync),
+        opts: &exec::ExecOpts,
+    ) -> (Dense, ExecStats) {
+        exec::run_fused_with(
+            &self.part,
+            &self.plan,
+            &self.blocks,
+            self.sched.as_ref(),
+            &self.topo,
+            x,
+            y,
+            kernel,
+            opts,
+        )
+    }
+
     /// Per-rank compute seconds for the pre-communication stage (local
     /// diagonal SpMM + row-based remote partials) and the
     /// post-communication stage (column-based remote SpMM + aggregation).
@@ -249,6 +320,72 @@ impl DistSpmm {
     /// Simulate one SpMM on the planned topology.
     pub fn simulate(&self, n_dense: usize) -> SimReport {
         sim::simulate(&self.sim_job(n_dense), &self.topo)
+    }
+}
+
+/// Distributed SDDMM engine sharing the SpMM plan machinery wholesale: a
+/// thin newtype over [`DistSpmm`] whose primary `execute` is the SDDMM
+/// kernel. Build one from scratch with [`DistSddmm::plan`] or wrap an
+/// existing plan with [`DistSddmm::from_spmm`] — either way the covers,
+/// hierarchy schedule, and session state are the same objects SpMM uses,
+/// so a workload can interleave both kernels (and the fused one) on one
+/// preprocessing pass.
+pub struct DistSddmm(pub DistSpmm);
+
+impl DistSddmm {
+    /// Plan a distributed SDDMM of `a`'s pattern over `topo.nranks` ranks
+    /// (identical planning path to [`DistSpmm::plan`] — the plan *is* an
+    /// SpMM plan).
+    pub fn plan(a: &Csr, strategy: Strategy, topo: Topology, hierarchical: bool) -> DistSddmm {
+        DistSddmm(DistSpmm::plan(a, strategy, topo, hierarchical))
+    }
+
+    /// Reuse an existing SpMM plan for SDDMM — zero additional
+    /// preprocessing.
+    pub fn from_spmm(dist: DistSpmm) -> DistSddmm {
+        DistSddmm(dist)
+    }
+
+    /// The underlying shared plan.
+    pub fn dist(&self) -> &DistSpmm {
+        &self.0
+    }
+
+    /// Execute E = A ⊙ (X·Yᵀ); bitwise-identical to [`Csr::sddmm`].
+    pub fn execute(
+        &self,
+        x: &Dense,
+        y: &Dense,
+        kernel: &(dyn SpmmKernel + Sync),
+    ) -> (Csr, ExecStats) {
+        self.0.execute_sddmm(x, y, kernel)
+    }
+
+    /// [`DistSddmm::execute`] with explicit executor options.
+    pub fn execute_with(
+        &self,
+        x: &Dense,
+        y: &Dense,
+        kernel: &(dyn SpmmKernel + Sync),
+        opts: &exec::ExecOpts,
+    ) -> (Csr, ExecStats) {
+        self.0.execute_sddmm_with(x, y, kernel, opts)
+    }
+
+    /// Execute the fused SDDMM→SpMM kernel on the shared plan.
+    pub fn execute_fused(
+        &self,
+        x: &Dense,
+        y: &Dense,
+        kernel: &(dyn SpmmKernel + Sync),
+    ) -> (Dense, ExecStats) {
+        self.0.execute_fused(x, y, kernel)
+    }
+
+    /// Freeze into a kernel-generic [`SpmmSession`] (use
+    /// [`SpmmSession::execute_sddmm`] / [`SpmmSession::execute_fused`]).
+    pub fn into_session(self, opts: exec::ExecOpts, prefers_tiles: bool) -> SpmmSession {
+        self.0.into_session(opts, prefers_tiles)
     }
 }
 
@@ -446,6 +583,49 @@ mod tests {
             assert!(want.diff_norm(&got) < 1e-3);
         }
         assert!(session.amortization().steady_state());
+    }
+
+    #[test]
+    fn dist_sddmm_shares_the_plan_end_to_end() {
+        let a = gen::powerlaw(256, 3500, 1.4, 41);
+        let mut rng = Rng::new(13);
+        let x = Dense::random(256, 8, &mut rng);
+        let y = Dense::random(256, 8, &mut rng);
+        let want = a.sddmm(&x, &y);
+        for hier in [false, true] {
+            let d = DistSddmm::plan(
+                &a,
+                Strategy::Joint(Solver::Koenig),
+                Topology::tsubame4(8),
+                hier,
+            );
+            let (e, sddmm_stats) = d.execute(&x, &y, &NativeKernel);
+            assert_eq!(e, want, "hier={hier}: distributed SDDMM != oracle");
+            // One plan, two kernels, identical B-side traffic.
+            let (_, spmm_stats) = d.dist().execute(&y, &NativeKernel);
+            assert_eq!(
+                spmm_stats.measured_b_volume(),
+                sddmm_stats.measured_b_volume(),
+                "hier={hier}"
+            );
+            // Fused output equals SDDMM-then-serial-SpMM numerically.
+            let (c, _) = d.execute_fused(&x, &y, &NativeKernel);
+            let ref_c = want.spmm(&y);
+            assert!(ref_c.diff_norm(&c) / (ref_c.max_abs() as f64 + 1e-30) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn adaptive_plan_serves_sddmm_too() {
+        // The kernel abstraction must compose with the per-pair adaptive
+        // compiler: whatever shape each pair chose, SDDMM reuses it.
+        let a = gen::rmat(128, 1500, (0.55, 0.2, 0.19), false, 43);
+        let d = DistSpmm::plan(&a, Strategy::Adaptive, Topology::tsubame4(8), true);
+        let mut rng = Rng::new(14);
+        let x = Dense::random(128, 8, &mut rng);
+        let y = Dense::random(128, 8, &mut rng);
+        let (e, _) = d.execute_sddmm(&x, &y, &NativeKernel);
+        assert_eq!(e, a.sddmm(&x, &y));
     }
 
     #[test]

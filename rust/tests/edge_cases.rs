@@ -160,6 +160,122 @@ fn all_nnz_in_one_rank() {
     }
 }
 
+/// Run distributed SDDMM end-to-end on an explicit (possibly degenerate)
+/// partition, flat and hierarchical, and require **bitwise** equality with
+/// the serial oracle (legitimate on any input: one producer per entry).
+fn verify_sddmm_partition(a: &shiro::sparse::Csr, part: &RowPartition, ranks: usize) {
+    let blocks = split_1d(a, part);
+    let plan = comm::plan(&blocks, part, Strategy::Joint(Solver::Koenig), None);
+    let topo = Topology::tsubame4(ranks);
+    let mut rng = Rng::new(29);
+    let x = Dense::random(a.nrows, 4, &mut rng);
+    let y = Dense::random(a.nrows, 4, &mut rng);
+    let want = a.sddmm(&x, &y);
+    for sched in [None, Some(hierarchy::build(&plan, &topo))] {
+        let (got, _) = exec::run_sddmm_with(
+            part,
+            &plan,
+            &blocks,
+            sched.as_ref(),
+            &topo,
+            &x,
+            &y,
+            &NativeKernel,
+            &shiro::exec::ExecOpts::default(),
+        );
+        assert_eq!(got, want, "starts {:?}", part.starts);
+    }
+}
+
+#[test]
+fn sddmm_partition_with_zero_row_ranks() {
+    // Empty ranks (including rank 0 and the last): no hangs on ranks that
+    // neither post B/X rows nor expect any, and exact assembly around the
+    // holes.
+    let a = gen::rmat(64, 800, (0.55, 0.2, 0.19), false, 17);
+    let part = RowPartition::from_starts(vec![0, 0, 20, 20, 20, 45, 64, 64, 64]);
+    assert_eq!(part.nparts, 8);
+    verify_sddmm_partition(&a, &part, 8);
+}
+
+#[test]
+fn sddmm_more_ranks_than_rows() {
+    let a = gen::erdos_renyi(8, 8, 40, 19);
+    let topo = Topology::tsubame4(12);
+    for partitioner in Partitioner::ALL {
+        let part = partitioner.partition(&a, 12, &topo, 4);
+        verify_sddmm_partition(&a, &part, 12);
+    }
+}
+
+#[test]
+fn sddmm_all_nnz_in_one_rank() {
+    // One rank owns every nonzero: the others only ship dense rows (or
+    // nothing), and row-serving collapses onto one side.
+    let mut coo = shiro::sparse::Coo::new(32, 32);
+    for r in 8..12 {
+        for c in 0..32 {
+            coo.push(r, c, ((r + c) % 5) as f32 + 1.0);
+        }
+    }
+    let a = coo.to_csr();
+    let topo = Topology::tsubame4(8);
+    for partitioner in Partitioner::ALL {
+        let part = partitioner.partition(&a, 8, &topo, 4);
+        verify_sddmm_partition(&a, &part, 8);
+    }
+}
+
+#[test]
+fn sddmm_empty_pattern_rows_and_empty_matrix() {
+    // Structurally empty rows contribute no entries anywhere in the
+    // pipeline; the all-empty matrix exchanges nothing and assembles an
+    // all-empty result.
+    let mut coo = shiro::sparse::Coo::new(48, 48);
+    for r in (0..48).step_by(3) {
+        coo.push(r, (r * 11) % 48, 1.5);
+    }
+    let a = coo.to_csr(); // two of every three rows empty
+    let part = RowPartition::balanced(48, 6);
+    verify_sddmm_partition(&a, &part, 6);
+
+    let z = shiro::sparse::Csr::zeros(32, 32);
+    let part = RowPartition::balanced(32, 4);
+    verify_sddmm_partition(&z, &part, 4);
+}
+
+#[test]
+fn coo_duplicate_summing_feeds_sddmm_deterministically() {
+    // Pin the contract: Coo::to_csr sums duplicate coordinates FIRST, and
+    // SDDMM scales the summed value — the distributed engine sees exactly
+    // one entry per coordinate and stays bitwise-equal to the oracle.
+    let mut coo = shiro::sparse::Coo::new(16, 16);
+    for i in 0..16usize {
+        coo.push(i, (i * 5) % 16, 1.25);
+        coo.push(i, (i * 5) % 16, 2.5); // duplicate, summed to 3.75
+        coo.push((i * 3) % 16, i, -0.5);
+    }
+    let a = coo.to_csr();
+    // Duplicates collapsed before any kernel sees them.
+    assert!(a.nnz() < 48);
+    let mut rng = Rng::new(31);
+    let x = Dense::random(16, 3, &mut rng);
+    let y = Dense::random(16, 3, &mut rng);
+    let want = a.sddmm(&x, &y);
+    let d = shiro::spmm::DistSddmm::plan(
+        &a,
+        Strategy::Joint(Solver::Koenig),
+        Topology::tsubame4(4),
+        true,
+    );
+    let (got, _) = d.execute(&x, &y, &NativeKernel);
+    assert_eq!(got, want);
+    // A purely-duplicate coordinate really carries the summed value
+    // (row 1 col 5 collects only the two pushes from i = 1).
+    let k = a.row_indices(1).iter().position(|&c| c == 5).unwrap();
+    assert_eq!(a.row_values(1)[k], 3.75);
+}
+
 #[test]
 fn config_file_roundtrip_drives_run() {
     // The shipped sample config parses and resolves.

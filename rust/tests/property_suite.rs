@@ -165,6 +165,104 @@ fn prop_executor_exact_on_nonuniform_partitions() {
 }
 
 #[test]
+fn prop_sddmm_bitwise_on_nonuniform_partitions() {
+    // Kernel-generic engine property: through ANY contiguous partition
+    // (including zero-row ranks) and any strategy/routing, distributed
+    // SDDMM is bitwise the serial oracle — stronger than the SpMM
+    // tolerance property above, because every edge value has exactly one
+    // producer.
+    forall("sddmm-nonuniform", 10, |g| {
+        let a = random_matrix(g);
+        let ranks = g.usize_in(2, 9);
+        let n_dense = 1 + g.usize_in(0, 8);
+        let part = random_partition(g, &a, ranks);
+        let blocks = split_1d(&a, &part);
+        let strategy = match g.usize_in(0, 4) {
+            0 => Strategy::Column,
+            1 => Strategy::Row,
+            2 => Strategy::Adaptive,
+            _ => Strategy::Joint(Solver::Koenig),
+        };
+        let plan = comm::plan(&blocks, &part, strategy, None);
+        let topo = Topology::tsubame4(ranks);
+        let hier = g.bool();
+        let sched = hier.then(|| hierarchy::build(&plan, &topo));
+        let x = Dense::from_vec(a.nrows, n_dense, g.vec_f32(a.nrows * n_dense));
+        let y = Dense::from_vec(a.nrows, n_dense, g.vec_f32(a.nrows * n_dense));
+        let (got, _) = exec::run_sddmm_with(
+            &part,
+            &plan,
+            &blocks,
+            sched.as_ref(),
+            &topo,
+            &x,
+            &y,
+            &NativeKernel,
+            &shiro::exec::ExecOpts::default(),
+        );
+        assert_eq!(
+            got,
+            a.sddmm(&x, &y),
+            "starts {:?} hier={hier} {strategy:?}",
+            part.starts
+        );
+    });
+}
+
+#[test]
+fn prop_shared_plan_session_b_side_and_amortization() {
+    // The plan-sharing satellite: a session executing SpMM then SDDMM from
+    // one frozen plan reports identical B-side measured volume, and the
+    // second call of each kernel does zero planning work and zero fresh
+    // allocations (Amortization extended to the new kernels).
+    forall("kernel-plan-sharing", 8, |g| {
+        let a = random_matrix(g);
+        let ranks = g.usize_in(2, 7);
+        let n_dense = 1 + g.usize_in(0, 8);
+        let partitioner = Partitioner::ALL[g.usize_in(0, Partitioner::ALL.len())];
+        let strategy = match g.usize_in(0, 2) {
+            0 => Strategy::Column,
+            _ => Strategy::Joint(Solver::Koenig),
+        };
+        let hier = g.bool();
+        let d = DistSpmm::plan_partitioned(
+            &a,
+            strategy,
+            Topology::tsubame4(ranks),
+            hier,
+            &shiro::plan::PlanParams::default(),
+            partitioner,
+        );
+        let mut s = d.into_session(shiro::exec::ExecOpts::default(), true);
+        let x = Dense::from_vec(a.nrows, n_dense, g.vec_f32(a.nrows * n_dense));
+        let y = Dense::from_vec(a.nrows, n_dense, g.vec_f32(a.nrows * n_dense));
+        let (_, spmm_stats) = s.execute(&y, &NativeKernel);
+        let (e1, sddmm_stats) = s.execute_sddmm(&x, &y, &NativeKernel);
+        assert_eq!(
+            spmm_stats.measured_b_volume(),
+            sddmm_stats.measured_b_volume(),
+            "B-side volume differs across kernels ({strategy:?} hier={hier})"
+        );
+        assert_eq!(e1, a.sddmm(&x, &y));
+        // Second calls of both kernels: zero plan, zero fresh allocations.
+        let (_, _) = s.execute(&y, &NativeKernel);
+        let (e2, sddmm2_stats) = s.execute_sddmm(&x, &y, &NativeKernel);
+        assert_eq!(e1, e2, "session SDDMM unstable across calls");
+        assert_eq!(
+            sddmm_stats.measured_b_volume(),
+            sddmm2_stats.measured_b_volume()
+        );
+        use shiro::exec::KernelOp;
+        for op in [KernelOp::Spmm, KernelOp::Sddmm] {
+            let am = s.amortization_for(op);
+            assert_eq!(am.calls(), 2, "{op:?}");
+            assert_eq!(am.alloc_events[1], 0, "{op:?}: second call allocated");
+            assert_eq!(am.plan_secs[1], 0.0, "{op:?}: second call planned");
+        }
+    });
+}
+
+#[test]
 fn prop_cover_always_valid_and_optimal_order() {
     forall("cover-valid", 60, |g| {
         let a = random_matrix(g);

@@ -1,0 +1,207 @@
+//! Differential SDDMM suite: the kernel-generic engine pinned against the
+//! serial [`Csr::sddmm`] oracle, **bitwise**, across the full
+//! configuration matrix — strategies × partitioners × flat/hierarchical
+//! routing × overlap on/off × 1/2/4/8 worker threads — mirroring
+//! `integration_spmm`'s determinism matrix via the shared
+//! `bench::int_matrix` oracle. SDDMM is actually stronger than SpMM here:
+//! every edge value has exactly one producer and a fixed dot order, so
+//! bitwise equality holds on *arbitrary float* inputs too (pinned below),
+//! not just integer-exact ones. The fused SDDMM→SpMM kernel accumulates,
+//! so its bitwise gate runs on integer-exact inputs like SpMM's.
+
+use shiro::bench::int_matrix;
+use shiro::comm::Strategy;
+use shiro::cover::Solver;
+use shiro::dense::Dense;
+use shiro::exec::kernel::{KernelOp, NativeKernel};
+use shiro::exec::ExecOpts;
+use shiro::partition::Partitioner;
+use shiro::sparse::gen;
+use shiro::spmm::{DistSddmm, DistSpmm};
+use shiro::topology::Topology;
+use shiro::util::rng::Rng;
+
+fn int_xy(n: usize, k: usize) -> (Dense, Dense) {
+    // Distinct small-integer operands: products and partial sums stay well
+    // inside f32's exact range, and X ≠ Y exercises the asymmetric case.
+    let x = Dense::from_fn(n, k, |i, j| ((i * 5 + j * 3) % 7) as f32 - 3.0);
+    let y = Dense::from_fn(n, k, |i, j| ((i * 3 + j * 11) % 7) as f32 - 3.0);
+    (x, y)
+}
+
+fn opts_matrix() -> Vec<ExecOpts> {
+    let mut v = Vec::new();
+    for overlap in [true, false] {
+        for workers in [1usize, 2, 4, 8] {
+            let base = if overlap { ExecOpts::default() } else { ExecOpts::sequential() };
+            v.push(ExecOpts { workers, ..base });
+        }
+    }
+    v
+}
+
+#[test]
+fn sddmm_bitwise_full_configuration_matrix() {
+    // The satellite matrix: strategies × partitioners × routing × overlap
+    // × workers, every cell bitwise-equal to the serial oracle.
+    let a = int_matrix(256, 2048, 42);
+    let (x, y) = int_xy(256, 8);
+    let want = a.sddmm(&x, &y);
+    for strategy in [
+        Strategy::Block,
+        Strategy::Column,
+        Strategy::Row,
+        Strategy::Joint(Solver::Koenig),
+        Strategy::Joint(Solver::Greedy),
+        Strategy::Adaptive,
+    ] {
+        for partitioner in Partitioner::ALL {
+            for hier in [false, true] {
+                if hier && strategy == Strategy::Block {
+                    continue; // block mode is defined flat-only in the paper
+                }
+                let d = DistSpmm::plan_partitioned(
+                    &a,
+                    strategy,
+                    Topology::tsubame4(8),
+                    hier,
+                    &shiro::plan::PlanParams::default(),
+                    partitioner,
+                );
+                for opts in opts_matrix() {
+                    let (got, _) = d.execute_sddmm_with(&x, &y, &NativeKernel, &opts);
+                    assert_eq!(
+                        got,
+                        want,
+                        "{strategy:?}/{}/hier={hier}/{opts:?}: bits differ from oracle",
+                        partitioner.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sddmm_bitwise_even_on_arbitrary_floats() {
+    // No integer-exactness crutch: single-producer entries + fixed dot
+    // order make the oracle a bitwise oracle on any input.
+    let a = gen::powerlaw(512, 6000, 1.4, 23);
+    let mut rng = Rng::new(31);
+    let x = Dense::random(512, 16, &mut rng);
+    let y = Dense::random(512, 16, &mut rng);
+    let want = a.sddmm(&x, &y);
+    for hier in [false, true] {
+        let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(8), hier);
+        for opts in [ExecOpts::default(), ExecOpts::sequential()] {
+            let (got, _) = d.execute_sddmm_with(&x, &y, &NativeKernel, &opts);
+            assert_eq!(got, want, "hier={hier}/{opts:?}");
+        }
+    }
+}
+
+#[test]
+fn fused_bitwise_across_partitioners_overlap_workers() {
+    let a = int_matrix(256, 2048, 77);
+    let (x, y) = int_xy(256, 4);
+    let want = a.sddmm(&x, &y).spmm(&y);
+    for partitioner in Partitioner::ALL {
+        for hier in [false, true] {
+            let d = DistSpmm::plan_partitioned(
+                &a,
+                Strategy::Joint(Solver::Koenig),
+                Topology::tsubame4(8),
+                hier,
+                &shiro::plan::PlanParams::default(),
+                partitioner,
+            );
+            for opts in opts_matrix() {
+                let (got, _) = d.execute_fused_with(&x, &y, &NativeKernel, &opts);
+                assert_eq!(
+                    got.data,
+                    want.data,
+                    "{}/hier={hier}/{opts:?}: fused bits differ from oracle chain",
+                    partitioner.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sddmm_across_rank_counts_and_tile_heights() {
+    let a = int_matrix(192, 1600, 9);
+    let (x, y) = int_xy(192, 8);
+    let want = a.sddmm(&x, &y);
+    let want_fused = want.spmm(&y);
+    for ranks in [1usize, 2, 3, 5, 8, 16] {
+        let d = DistSddmm::plan(
+            &a,
+            Strategy::Joint(Solver::Koenig),
+            Topology::tsubame4(ranks),
+            ranks > 2,
+        );
+        for tile_rows in [0usize, 7] {
+            let opts = ExecOpts { tile_rows, ..ExecOpts::default() };
+            let (got, _) = d.execute_with(&x, &y, &NativeKernel, &opts);
+            assert_eq!(got, want, "ranks={ranks} tile={tile_rows}");
+        }
+        let (c, _) = d.0.execute_fused(&x, &y, &NativeKernel);
+        assert_eq!(c.data, want_fused.data, "ranks={ranks} fused");
+    }
+}
+
+#[test]
+fn shared_plan_session_serves_all_three_kernels() {
+    // One frozen plan, one session: SpMM, SDDMM, and fused interleaved.
+    // B-side volume identical across kernels; each op steady from its
+    // second call; results stable across calls.
+    let a = int_matrix(256, 2400, 55);
+    let (x, y) = int_xy(256, 8);
+    let e_want = a.sddmm(&x, &y);
+    let c_want = a.spmm(&y);
+    let f_want = e_want.spmm(&y);
+    for hier in [false, true] {
+        let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(8), hier);
+        let mut s = d.into_session(ExecOpts::default(), true);
+        let mut b_volumes = Vec::new();
+        for _ in 0..2 {
+            let (c, spmm_stats) = s.execute(&y, &NativeKernel);
+            assert_eq!(c.data, c_want.data, "hier={hier}");
+            let (e, sddmm_stats) = s.execute_sddmm(&x, &y, &NativeKernel);
+            assert_eq!(e, e_want, "hier={hier}");
+            let (f, _) = s.execute_fused(&x, &y, &NativeKernel);
+            assert_eq!(f.data, f_want.data, "hier={hier}");
+            b_volumes.push((spmm_stats.measured_b_volume(), sddmm_stats.measured_b_volume()));
+        }
+        for (sp, sd) in &b_volumes {
+            assert!(sp.total() > 0, "hier={hier}: degenerate B side");
+            assert_eq!(sp, sd, "hier={hier}: B-side volume differs across kernels");
+        }
+        for op in [KernelOp::Spmm, KernelOp::Sddmm, KernelOp::FusedSddmmSpmm] {
+            let am = s.amortization_for(op);
+            assert_eq!(am.calls(), 2, "{op:?}");
+            assert!(am.steady_state(), "{op:?} hier={hier}: not steady");
+            assert_eq!(am.alloc_events[1], 0, "{op:?} hier={hier}: second call allocated");
+            assert_eq!(am.plan_secs[1], 0.0, "{op:?} hier={hier}: second call planned");
+        }
+    }
+}
+
+#[test]
+fn sddmm_respects_pattern_values_and_structure() {
+    // The sampled product scales by A's stored values — including explicit
+    // zeros, which must stay (structurally) and produce zero values.
+    let mut coo = shiro::sparse::Coo::new(64, 64);
+    for i in 0..64usize {
+        coo.push(i, (i * 7) % 64, 2.0);
+        coo.push(i, (i * 13) % 64, 0.0); // explicit structural zero
+    }
+    let a = coo.to_csr();
+    let (x, y) = int_xy(64, 4);
+    let want = a.sddmm(&x, &y);
+    let d = DistSddmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(4), true);
+    let (got, _) = d.execute(&x, &y, &NativeKernel);
+    assert_eq!(got, want);
+    assert_eq!(got.nnz(), a.nnz(), "structure must be preserved exactly");
+}
