@@ -26,6 +26,10 @@ pub struct RunConfig {
     /// Executor scheduling: `true` = overlapped pipeline (Alg. 1, the
     /// default), `false` = strictly phase-ordered (`--overlap off`).
     pub overlap: bool,
+    /// Executor backend: "thread" (in-process ranks, the default and the
+    /// differential oracle) or "proc" (one OS process per rank over the
+    /// socket control plane, [`crate::runtime::multiproc`]).
+    pub backend: String,
 }
 
 impl Default for RunConfig {
@@ -40,6 +44,7 @@ impl Default for RunConfig {
             strategy: "joint".into(),
             partitioner: "balanced".into(),
             overlap: true,
+            backend: "thread".into(),
         }
     }
 }
@@ -51,6 +56,17 @@ fn parse_overlap(v: &str) -> bool {
         "off" | "false" | "0" => false,
         other => {
             eprintln!("--overlap expects on|off, got {other:?}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Parse a `--backend` value: thread|proc.
+fn parse_backend(v: &str) -> String {
+    match v {
+        "thread" | "proc" => v.to_string(),
+        other => {
+            eprintln!("--backend expects thread|proc, got {other:?}");
             std::process::exit(2);
         }
     }
@@ -88,6 +104,9 @@ impl RunConfig {
         if let Some(o) = args.get("overlap") {
             cfg.overlap = parse_overlap(o);
         }
+        if let Some(b) = args.get("backend") {
+            cfg.backend = parse_backend(b);
+        }
         cfg
     }
 
@@ -108,6 +127,15 @@ impl RunConfig {
                 (None, Some(s)) => parse_overlap(s),
                 (None, None) => {
                     eprintln!("run.overlap expects a bool or \"on\"/\"off\"");
+                    std::process::exit(2);
+                }
+            };
+        }
+        if let Some(v) = file.get("run.backend") {
+            self.backend = match v.as_str() {
+                Some(s) => parse_backend(s),
+                None => {
+                    eprintln!("run.backend expects \"thread\" or \"proc\"");
                     std::process::exit(2);
                 }
             };
@@ -245,6 +273,30 @@ mod tests {
         assert_eq!(cfg.dataset, "mawi");
         assert_eq!(cfg.ranks, 8); // CLI wins
         assert_eq!(cfg.n_dense, 128); // file value survives
+    }
+
+    #[test]
+    fn backend_flag_and_file() {
+        let cfg = RunConfig::from_args(&args(&["run"]));
+        assert_eq!(cfg.backend, "thread", "thread backend is the default");
+        let cfg = RunConfig::from_args(&args(&["run", "--backend", "proc"]));
+        assert_eq!(cfg.backend, "proc");
+
+        let dir = std::env::temp_dir().join("shiro_cfg_backend_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("run.toml");
+        std::fs::write(&p, "[run]\nbackend = \"proc\"\n").unwrap();
+        let cfg = RunConfig::from_args(&args(&["run", "--config", p.to_str().unwrap()]));
+        assert_eq!(cfg.backend, "proc");
+        // CLI wins over the file.
+        let cfg = RunConfig::from_args(&args(&[
+            "run",
+            "--config",
+            p.to_str().unwrap(),
+            "--backend",
+            "thread",
+        ]));
+        assert_eq!(cfg.backend, "thread");
     }
 
     #[test]

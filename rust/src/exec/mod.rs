@@ -33,6 +33,7 @@
 pub mod kernel;
 pub mod pipeline;
 pub mod session;
+pub(crate) mod wire;
 
 pub use kernel::KernelOp;
 pub use pipeline::ExecOpts;
@@ -59,7 +60,7 @@ use std::time::Instant;
 /// forwards). Row index spaces: `B.rows` are origin-local B rows; `X.rows`
 /// are origin-local X rows (the origin's C rows of the reversed flow);
 /// `C.rows` / `CAgg.rows` are destination-local C rows.
-enum Msg {
+pub(crate) enum Msg {
     /// B rows owned by `origin` (column-based payload).
     B {
         from: usize,
@@ -224,6 +225,27 @@ pub enum Mode {
     Hierarchical,
 }
 
+/// Where a rank's outgoing messages go: in-process channels (the thread
+/// backend) or the parent control plane's socket (the multi-process
+/// backend, [`wire`]). `rank_main` and everything below it is transport-
+/// agnostic — the same program drives both, which is what makes the thread
+/// executor a bitwise differential oracle for the proc backend.
+pub(crate) enum Outbox<'a> {
+    Local(&'a [Sender<Msg>]),
+    Socket(&'a wire::SocketTx),
+}
+
+impl Outbox<'_> {
+    fn send(&self, dst: usize, msg: Msg) {
+        match self {
+            Outbox::Local(senders) => senders[dst]
+                .send(msg)
+                .expect("receiver hung up — peer rank panicked"),
+            Outbox::Socket(tx) => tx.send(dst, &msg),
+        }
+    }
+}
+
 struct Ctx<'a> {
     rank: usize,
     part: &'a RowPartition,
@@ -234,7 +256,7 @@ struct Ctx<'a> {
     xsched: Option<&'a HierSchedule>,
     topo: &'a Topology,
     kernel: &'a dyn SpmmKernel,
-    senders: &'a [Sender<Msg>],
+    outbox: Outbox<'a>,
     inbox: Receiver<Msg>,
     stats: RankStats,
     opts: ExecOpts,
@@ -272,9 +294,7 @@ impl<'a> Ctx<'a> {
         if matches!(msg, Msg::B { .. }) {
             self.stats.sent_b_to[dst] += bytes;
         }
-        self.senders[dst]
-            .send(msg)
-            .expect("receiver hung up — peer rank panicked");
+        self.outbox.send(dst, msg);
     }
 
     /// Receiver-side accounting: the mirror of [`Ctx::send`], keyed by the
@@ -468,7 +488,7 @@ fn run_kernel_with(
                     xsched,
                     topo,
                     kernel,
-                    senders,
+                    outbox: Outbox::Local(senders),
                     inbox,
                     stats: RankStats {
                         sent_to: vec![0; nranks],

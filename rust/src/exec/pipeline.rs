@@ -127,17 +127,40 @@ impl BufferPool {
         Dense { nrows, ncols, data }
     }
 
+    /// Return a buffer to the pool. The cap is enforced with
+    /// **largest-first eviction**: at capacity, whichever of {incoming,
+    /// largest retained} has the bigger footprint is dropped, so a session
+    /// serving varied widths converges on the smallest working set instead
+    /// of hoarding every historical size forever. Seeded layouts are never
+    /// evicted: [`BufferPool::seed`] grows the cap to cover every slot it
+    /// plants, and a session holds at most its seeded count in the free
+    /// list, so releases under a seeded layout always retain — preserving
+    /// the steady-state zero-miss guarantee at the default cap.
     pub fn release(&mut self, d: Dense) {
-        if self.free.len() < self.cap && d.data.capacity() > 0 {
-            let i = self
-                .free
-                .partition_point(|v| v.capacity() <= d.data.capacity());
-            self.free.insert(i, d.data);
+        if d.data.capacity() == 0 {
+            return;
         }
+        if self.free.len() >= self.cap {
+            match self.free.last() {
+                // The free list is sorted ascending, so the last entry is
+                // the largest retained buffer; evict it only if the
+                // incoming one is smaller.
+                Some(big) if big.capacity() > d.data.capacity() => {
+                    self.free.pop();
+                }
+                _ => return,
+            }
+        }
+        let i = self
+            .free
+            .partition_point(|v| v.capacity() <= d.data.capacity());
+        self.free.insert(i, d.data);
     }
 
     /// Pre-seed one free buffer of `n` floats (a posted-payload slot).
     /// Counted in [`BufferPool::allocs`] like any other fresh allocation.
+    /// Seeding grows the cap when the seeded layout outgrows it, so a
+    /// session's full payload layout always fits and is never evicted.
     pub fn seed(&mut self, n: usize) {
         if n == 0 {
             return;
@@ -146,6 +169,7 @@ impl BufferPool {
         let v: Vec<f32> = Vec::with_capacity(n);
         let i = self.free.partition_point(|b| b.capacity() <= v.capacity());
         self.free.insert(i, v);
+        self.cap = self.cap.max(self.free.len());
     }
 }
 
@@ -315,7 +339,7 @@ mod tests {
 
     #[test]
     fn pool_seed_covers_later_acquires() {
-        let mut pool = BufferPool::with_cap(usize::MAX);
+        let mut pool = BufferPool::new();
         for n in [32, 8, 64] {
             pool.seed(n);
         }
@@ -330,6 +354,54 @@ mod tests {
         pool.release(c);
         pool.seed(0); // no-op
         assert_eq!(pool.allocs, 3);
+    }
+
+    #[test]
+    fn pool_cap_evicts_largest_first() {
+        // Satellite regression (PR 6): pools were built with
+        // `with_cap(usize::MAX)`, retaining every historical buffer size
+        // forever. The cap is real now, and eviction drops the largest
+        // footprint first.
+        let mut pool = BufferPool::with_cap(2);
+        pool.release(Dense::zeros(2, 8)); // 16 floats
+        pool.release(Dense::zeros(8, 8)); // 64 floats — pool full
+        // Releasing a smaller buffer evicts the 64-float one.
+        pool.release(Dense::zeros(1, 4)); // 4 floats
+        let before = pool.allocs;
+        let big = pool.acquire(8, 8);
+        assert_eq!(pool.allocs, before + 1, "largest buffer must be gone");
+        // Releasing a larger buffer while full drops the incoming one.
+        pool.release(big); // free = [4, 16] → 64 is the largest, dropped
+        let before = pool.allocs;
+        let small = pool.acquire(1, 4);
+        let mid = pool.acquire(2, 8);
+        assert_eq!(pool.allocs, before, "small buffers were retained");
+        drop((small, mid));
+    }
+
+    #[test]
+    fn pool_seed_grows_cap_beyond_default() {
+        // A session layout larger than the configured cap must still be
+        // fully retained: seed() grows the cap to cover every slot it
+        // plants, keeping the zero-miss guarantee.
+        let mut pool = BufferPool::with_cap(2);
+        for n in [8, 16, 32, 64] {
+            pool.seed(n);
+        }
+        assert_eq!(pool.allocs, 4);
+        let bufs: Vec<Dense> =
+            [(1, 8), (2, 8), (4, 8), (8, 8)].map(|(r, c)| pool.acquire(r, c)).into();
+        assert_eq!(pool.allocs, 4, "seeded slots absorb every acquire");
+        for b in bufs {
+            pool.release(b);
+        }
+        // Every release was retained (cap grew to the seeded count), so a
+        // second pass over the same sizes is still allocation-free.
+        for (r, c) in [(1, 8), (2, 8), (4, 8), (8, 8)] {
+            let b = pool.acquire(r, c);
+            pool.release(b);
+        }
+        assert_eq!(pool.allocs, 4, "steady state stays zero-miss");
     }
 
     #[test]

@@ -34,7 +34,7 @@ use super::kernel::{KernelOp, SpmmKernel};
 use super::pipeline::{ckey_decode, BufferPool, ExecOpts, PoolRef, KIND_B};
 use super::{
     assemble_sddmm, build_program, col_contribution_is_compact, rank_main, Ctx, ExecStats, Item,
-    Msg, Program, RankStats, SddmmVals,
+    Msg, Outbox, Program, RankStats, SddmmVals,
 };
 use crate::dense::Dense;
 use crate::hierarchy::{self, HierSchedule};
@@ -106,7 +106,10 @@ impl SpmmSession {
             fused: None,
             xsched: None,
             xsched_built: false,
-            pool: Mutex::new(BufferPool::with_cap(usize::MAX)),
+            // Default cap: seed_layout grows it to cover every seeded slot,
+            // so the session's zero-miss layout is never evicted while
+            // buffers outside the layout (stale widths) stay bounded.
+            pool: Mutex::new(BufferPool::new()),
             b_locals: (0..nranks).map(|_| Dense::zeros(0, 0)).collect(),
             x_locals: (0..nranks).map(|_| Dense::zeros(0, 0)).collect(),
             c_locals: (0..nranks).map(|_| Dense::zeros(0, 0)).collect(),
@@ -335,7 +338,7 @@ impl SpmmSession {
                         xsched: None,
                         topo: &dist.topo,
                         kernel,
-                        senders,
+                        outbox: Outbox::Local(senders),
                         inbox,
                         stats: RankStats {
                             sent_to: vec![0; nranks],
@@ -544,7 +547,7 @@ impl SpmmSession {
                         xsched,
                         topo: &dist.topo,
                         kernel,
-                        senders,
+                        outbox: Outbox::Local(senders),
                         inbox,
                         stats: RankStats {
                             sent_to: vec![0; nranks],

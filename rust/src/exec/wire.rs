@@ -1,0 +1,1184 @@
+//! Wire format and worker half of the multi-process backend
+//! ([`crate::runtime::multiproc`]).
+//!
+//! The control plane serializes each rank's *entire* job — partition,
+//! topology, plan, schedule, the frozen [`Program`] that
+//! [`super::build_program`] derived, local A blocks and dense operands —
+//! into one versioned blob, and every runtime `Msg` into a framed DATA
+//! payload. Workers run the exact same `rank_main` as the thread
+//! executor, with [`super::Outbox::Socket`] swapped in for the channel
+//! senders; since every scatter-add folds in canonical (origin, row)
+//! order regardless of arrival order, the proc backend's C is
+//! bitwise-identical to the thread backend's — the property
+//! `tests/multiproc_suite.rs` pins.
+//!
+//! Framing: `len: u32 LE | kind: u8 | payload`, where `len` counts the
+//! kind byte plus payload. All integers little-endian, floats as raw
+//! IEEE-754 bits ([`crate::util::bin`]), every length field bounded by
+//! the enclosing buffer so corrupt input fails cleanly.
+
+use super::kernel::{KernelOp, NativeKernel};
+use super::pipeline::{BufferPool, ExecOpts, PoolRef};
+use super::{
+    rank_main, BPost, Ctx, Item, Msg, Outbox, Program, RankStats, RowRoute, SddmmVals,
+};
+use crate::comm::{CommPlan, PairPlan};
+use crate::dense::Dense;
+use crate::hierarchy::{self, phase, BFlow, CFlow, HierSchedule};
+use crate::partition::{LocalBlocks, RowPartition};
+use crate::plan::cache::{decode_strategy, encode_strategy};
+use crate::topology::Topology;
+use crate::util::bin::{
+    r_csr, r_dense, r_f64, r_str, r_u32, r_u32s, r_u64, r_u64s, r_u8, w_csr, w_dense, w_f64,
+    w_str, w_u32, w_u32s, w_u64, w_u64s, w_u8,
+};
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{BufReader, Read, Write};
+use std::net::TcpStream;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Magic + version prefix of every JOB blob. Bump [`WIRE_VERSION`] on any
+/// layout change: parent and workers are always the same binary, so a
+/// mismatch means a stale `--worker-exe` override, not rolling upgrade.
+pub(crate) const WIRE_MAGIC: &[u8; 8] = b"SHIROWIR";
+pub(crate) const WIRE_VERSION: u32 = 1;
+
+/// Hard ceiling on one frame (1 GiB): no legitimate payload approaches
+/// this; a larger claim means a corrupt or hostile length field.
+pub(crate) const MAX_FRAME: usize = 1 << 30;
+
+/// Worker heartbeat interval. The control plane declares a rank dead when
+/// nothing (BEAT or otherwise) arrives within its failure timeout — many
+/// intervals, so scheduler jitter can't false-positive.
+pub(crate) const BEAT_MILLIS: u64 = 100;
+
+/// Env vars the parent sets when spawning a worker; their presence is what
+/// [`crate::runtime::multiproc::maybe_run_worker`] keys on.
+pub(crate) const ENV_PORT: &str = "SHIRO_WORKER_PORT";
+pub(crate) const ENV_RANK: &str = "SHIRO_WORKER_RANK";
+/// Fault-injection hook: a worker with this set aborts instead of running
+/// its job, standing in for a segfaulted or OOM-killed rank.
+pub(crate) const ENV_CRASH: &str = "SHIRO_WORKER_CRASH";
+
+/// Frame kinds. Namespaced so they cannot be confused with the fold-key
+/// kinds in [`super::pipeline`].
+pub(crate) mod kind {
+    /// Worker → parent, first frame: `version u32 | rank u64`.
+    pub const HELLO: u8 = 1;
+    /// Parent → worker, second frame: the serialized job blob.
+    pub const JOB: u8 = 2;
+    /// Either direction: `dst u64 | encoded Msg` — routed verbatim by the
+    /// parent to `dst`'s stream.
+    pub const DATA: u8 = 3;
+    /// Worker → parent on success: `rank u64 | C block | RankStats`.
+    pub const DONE: u8 = 4;
+    /// Worker → parent liveness: `rank u64`, every [`super::BEAT_MILLIS`].
+    pub const BEAT: u8 = 5;
+    /// Worker → parent on failure: `rank u64 | message`.
+    pub const ERROR: u8 = 6;
+}
+
+// ------------------------------------------------------------- framing ----
+
+pub(crate) fn write_frame<W: Write>(w: &mut W, kind: u8, payload: &[u8]) -> Result<()> {
+    let len = payload.len() + 1;
+    if len > MAX_FRAME {
+        bail!("frame payload of {} bytes exceeds MAX_FRAME", payload.len());
+    }
+    w.write_all(&(len as u32).to_le_bytes())?;
+    w.write_all(&[kind])?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+pub(crate) fn read_frame<R: Read>(r: &mut R) -> Result<(u8, Vec<u8>)> {
+    let mut lenb = [0u8; 4];
+    r.read_exact(&mut lenb)?;
+    let len = u32::from_le_bytes(lenb) as usize;
+    if len == 0 || len > MAX_FRAME {
+        bail!("frame length {len} out of range");
+    }
+    let mut kb = [0u8; 1];
+    r.read_exact(&mut kb)?;
+    let mut payload = vec![0u8; len - 1];
+    r.read_exact(&mut payload)?;
+    Ok((kb[0], payload))
+}
+
+/// Shared write half of a worker's control-plane socket: the pipeline
+/// ([`Outbox::Socket`]) and the heartbeat thread interleave whole frames
+/// under one lock.
+pub(crate) struct SocketTx {
+    stream: Mutex<TcpStream>,
+}
+
+impl SocketTx {
+    pub(crate) fn new(stream: TcpStream) -> SocketTx {
+        SocketTx { stream: Mutex::new(stream) }
+    }
+
+    pub(crate) fn frame(&self, kind: u8, payload: &[u8]) -> Result<()> {
+        let mut s = self.stream.lock().unwrap();
+        write_frame(&mut *s, kind, payload)
+    }
+
+    /// Encode and send one rank→rank message. Panics on socket failure:
+    /// the parent is gone, no progress is possible, and the pipeline's
+    /// send path is infallible by contract (mirroring the thread
+    /// backend's channel `send().expect(..)`).
+    pub(crate) fn send(&self, dst: usize, msg: &Msg) {
+        let mut payload = Vec::new();
+        w_u64(&mut payload, dst as u64).expect("vec write");
+        encode_msg(&mut payload, msg).expect("vec write");
+        self.frame(kind::DATA, &payload)
+            .expect("control-plane socket write failed — parent gone");
+    }
+}
+
+// ------------------------------------------------------ message codec ----
+
+fn encode_msg(out: &mut Vec<u8>, msg: &Msg) -> Result<()> {
+    match msg {
+        Msg::B { from, origin, rows, data } => {
+            w_u8(out, 0)?;
+            w_u64(out, *from as u64)?;
+            w_u64(out, *origin as u64)?;
+            w_u32s(out, rows)?;
+            w_dense(out, data)?;
+        }
+        Msg::X { from, origin, rows, data } => {
+            w_u8(out, 1)?;
+            w_u64(out, *from as u64)?;
+            w_u64(out, *origin as u64)?;
+            w_u32s(out, rows)?;
+            w_dense(out, data)?;
+        }
+        Msg::C { from, rows, data } => {
+            w_u8(out, 2)?;
+            w_u64(out, *from as u64)?;
+            w_u32s(out, rows)?;
+            w_dense(out, data)?;
+        }
+        Msg::CAgg { from, final_dst, rows, data } => {
+            w_u8(out, 3)?;
+            w_u64(out, *from as u64)?;
+            w_u64(out, *final_dst as u64)?;
+            w_u32s(out, rows)?;
+            w_dense(out, data)?;
+        }
+    }
+    Ok(())
+}
+
+fn decode_msg<R: Read>(r: &mut R, max: usize) -> Result<Msg> {
+    let tag = r_u8(r)?;
+    let from = r_u64(r)? as usize;
+    Ok(match tag {
+        0 | 1 => {
+            let origin = r_u64(r)? as usize;
+            let rows = r_u32s(r, max)?;
+            let data = r_dense(r, max)?;
+            if tag == 0 {
+                Msg::B { from, origin, rows, data }
+            } else {
+                Msg::X { from, origin, rows, data }
+            }
+        }
+        2 => Msg::C { from, rows: r_u32s(r, max)?, data: r_dense(r, max)? },
+        3 => {
+            let final_dst = r_u64(r)? as usize;
+            Msg::CAgg { from, final_dst, rows: r_u32s(r, max)?, data: r_dense(r, max)? }
+        }
+        t => bail!("unknown message tag {t}"),
+    })
+}
+
+// ------------------------------------------------------ program codec ----
+
+/// Every `&'static str` phase label a [`BPost`] can carry; the wire tag is
+/// the table index. Unknown labels are an encode-time error, so adding a
+/// phase without extending this table fails loudly in tests, not silently
+/// on a worker.
+const PHASES: [&str; 10] = [
+    crate::sim::FLAT_STAGE,
+    phase::S1_INTER_B,
+    phase::S1_INTRA_C,
+    phase::S2_INTER_C,
+    phase::S2_INTRA_B,
+    phase::COMPUTE_LOCAL,
+    phase::COMPUTE_REMOTE,
+    phase::IDLE,
+    phase::S1_FETCH_X,
+    phase::S2_INTRA_X,
+];
+
+fn phase_tag(name: &str) -> Result<u8> {
+    PHASES
+        .iter()
+        .position(|&p| p == name)
+        .map(|i| i as u8)
+        .ok_or_else(|| anyhow!("phase label {name:?} missing from wire table"))
+}
+
+fn phase_name(tag: u8) -> Result<&'static str> {
+    PHASES
+        .get(tag as usize)
+        .copied()
+        .ok_or_else(|| anyhow!("unknown phase tag {tag}"))
+}
+
+fn op_tag(op: KernelOp) -> u8 {
+    match op {
+        KernelOp::Spmm => 0,
+        KernelOp::Sddmm => 1,
+        KernelOp::FusedSddmmSpmm => 2,
+    }
+}
+
+fn op_from_tag(tag: u8) -> Result<KernelOp> {
+    Ok(match tag {
+        0 => KernelOp::Spmm,
+        1 => KernelOp::Sddmm,
+        2 => KernelOp::FusedSddmmSpmm,
+        t => bail!("unknown kernel-op tag {t}"),
+    })
+}
+
+fn w_usizes<W: Write>(w: &mut W, xs: &[usize]) -> Result<()> {
+    w_u64(w, xs.len() as u64)?;
+    for &x in xs {
+        w_u64(w, x as u64)?;
+    }
+    Ok(())
+}
+
+fn r_usizes<R: Read>(r: &mut R, max: usize) -> Result<Vec<usize>> {
+    Ok(r_u64s(r, max)?.into_iter().map(|x| x as usize).collect())
+}
+
+fn encode_posts(out: &mut Vec<u8>, posts: &[BPost]) -> Result<()> {
+    w_u64(out, posts.len() as u64)?;
+    for p in posts {
+        w_u64(out, p.dst as u64)?;
+        w_u8(out, phase_tag(p.phase)?)?;
+        w_u32s(out, &p.rows)?;
+    }
+    Ok(())
+}
+
+fn decode_posts<R: Read>(r: &mut R, max: usize) -> Result<Vec<BPost>> {
+    let n = r_u64(r)? as usize;
+    if n > max {
+        bail!("corrupt program: {n} posts exceed available bytes");
+    }
+    let mut posts = Vec::with_capacity(n);
+    for _ in 0..n {
+        let dst = r_u64(r)? as usize;
+        let phase = phase_name(r_u8(r)?)?;
+        posts.push(BPost { dst, rows: r_u32s(r, max)?, phase });
+    }
+    Ok(posts)
+}
+
+fn encode_map(out: &mut Vec<u8>, m: &std::collections::BTreeMap<usize, usize>) -> Result<()> {
+    w_u64(out, m.len() as u64)?;
+    for (&k, &v) in m {
+        w_u64(out, k as u64)?;
+        w_u64(out, v as u64)?;
+    }
+    Ok(())
+}
+
+fn decode_map<R: Read>(
+    r: &mut R,
+    max: usize,
+) -> Result<std::collections::BTreeMap<usize, usize>> {
+    let n = r_u64(r)? as usize;
+    if n > max {
+        bail!("corrupt program: map of {n} entries exceeds available bytes");
+    }
+    let mut m = std::collections::BTreeMap::new();
+    for _ in 0..n {
+        let k = r_u64(r)? as usize;
+        m.insert(k, r_u64(r)? as usize);
+    }
+    Ok(m)
+}
+
+fn encode_program(out: &mut Vec<u8>, p: &Program) -> Result<()> {
+    w_u8(out, op_tag(p.op))?;
+    encode_posts(out, &p.b_posts)?;
+    encode_posts(out, &p.x_posts)?;
+    w_u64(out, p.items.len() as u64)?;
+    for it in &p.items {
+        match it {
+            Item::ProduceDirectC { dst } => {
+                w_u8(out, 0)?;
+                w_u64(out, *dst as u64)?;
+            }
+            Item::ProduceFlowC { flow } => {
+                w_u8(out, 1)?;
+                w_u64(out, *flow as u64)?;
+            }
+            Item::DiagTile { r0, r1 } => {
+                w_u8(out, 2)?;
+                w_u64(out, *r0 as u64)?;
+                w_u64(out, *r1 as u64)?;
+            }
+        }
+    }
+    w_u64(out, p.expect_msgs as u64)?;
+    w_u64s(out, &p.fold_keys)?;
+    w_usizes(out, &p.agg_flows)?;
+    encode_map(out, &p.rep_b)?;
+    encode_map(out, &p.rep_x)?;
+    w_u64(out, p.row_route.len() as u64)?;
+    for (&dst, route) in &p.row_route {
+        w_u64(out, dst as u64)?;
+        match route {
+            RowRoute::Direct => w_u8(out, 0)?,
+            RowRoute::Flow(i) => {
+                w_u8(out, 1)?;
+                w_u64(out, *i as u64)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn decode_program<R: Read>(r: &mut R, max: usize) -> Result<Program> {
+    let op = op_from_tag(r_u8(r)?)?;
+    let b_posts = decode_posts(r, max)?;
+    let x_posts = decode_posts(r, max)?;
+    let n_items = r_u64(r)? as usize;
+    if n_items > max {
+        bail!("corrupt program: {n_items} items exceed available bytes");
+    }
+    let mut items = Vec::with_capacity(n_items);
+    for _ in 0..n_items {
+        items.push(match r_u8(r)? {
+            0 => Item::ProduceDirectC { dst: r_u64(r)? as usize },
+            1 => Item::ProduceFlowC { flow: r_u64(r)? as usize },
+            2 => Item::DiagTile { r0: r_u64(r)? as usize, r1: r_u64(r)? as usize },
+            t => bail!("unknown program item tag {t}"),
+        });
+    }
+    let expect_msgs = r_u64(r)? as usize;
+    let fold_keys = r_u64s(r, max)?;
+    let agg_flows = r_usizes(r, max)?;
+    let rep_b = decode_map(r, max)?;
+    let rep_x = decode_map(r, max)?;
+    let n_routes = r_u64(r)? as usize;
+    if n_routes > max {
+        bail!("corrupt program: {n_routes} row routes exceed available bytes");
+    }
+    let mut row_route = std::collections::BTreeMap::new();
+    for _ in 0..n_routes {
+        let dst = r_u64(r)? as usize;
+        let route = match r_u8(r)? {
+            0 => RowRoute::Direct,
+            1 => RowRoute::Flow(r_u64(r)? as usize),
+            t => bail!("unknown row-route tag {t}"),
+        };
+        row_route.insert(dst, route);
+    }
+    Ok(Program {
+        op,
+        b_posts,
+        x_posts,
+        items,
+        expect_msgs,
+        fold_keys,
+        agg_flows,
+        rep_b,
+        rep_x,
+        row_route,
+    })
+}
+
+// ------------------------------------------- plan / schedule / operand ----
+
+fn encode_topo(out: &mut Vec<u8>, t: &Topology) -> Result<()> {
+    w_str(out, &t.name)?;
+    w_u64(out, t.nranks as u64)?;
+    w_u64(out, t.group_size as u64)?;
+    for v in [t.intra_bw, t.inter_bw, t.intra_lat, t.inter_lat, t.compute_rate, t.kernel_launch]
+    {
+        w_f64(out, v)?;
+    }
+    Ok(())
+}
+
+fn decode_topo<R: Read>(r: &mut R, max: usize) -> Result<Topology> {
+    Ok(Topology {
+        name: r_str(r, max)?,
+        nranks: r_u64(r)? as usize,
+        group_size: r_u64(r)? as usize,
+        intra_bw: r_f64(r)?,
+        inter_bw: r_f64(r)?,
+        intra_lat: r_f64(r)?,
+        inter_lat: r_f64(r)?,
+        compute_rate: r_f64(r)?,
+        kernel_launch: r_f64(r)?,
+    })
+}
+
+/// Same layout as the plan cache's body ([`crate::plan::cache`]): split
+/// parts + flags only, compact operands re-derived via
+/// [`PairPlan::from_parts`] — the reconstruction the cache's roundtrip
+/// test proves exact.
+fn encode_plan(out: &mut Vec<u8>, plan: &CommPlan) -> Result<()> {
+    w_u64(out, plan.nranks as u64)?;
+    w_u8(out, encode_strategy(plan.strategy))?;
+    w_usizes(out, &plan.block_rows)?;
+    for p in 0..plan.nranks {
+        for q in 0..plan.nranks {
+            if p == q {
+                continue;
+            }
+            let pair = &plan.pairs[p][q];
+            w_u8(out, u8::from(pair.full_block))?;
+            w_csr(out, &pair.a_row_part)?;
+            w_csr(out, &pair.a_col_part)?;
+        }
+    }
+    Ok(())
+}
+
+fn decode_plan<R: Read>(r: &mut R, max: usize) -> Result<CommPlan> {
+    let nranks = r_u64(r)? as usize;
+    if nranks > max {
+        bail!("corrupt plan: nranks {nranks} exceeds available bytes");
+    }
+    let strategy = decode_strategy(r_u8(r)?)?;
+    let block_rows = r_usizes(r, max)?;
+    if block_rows.len() != nranks {
+        bail!("corrupt plan: {} block heights for {nranks} ranks", block_rows.len());
+    }
+    let mut pairs = Vec::with_capacity(nranks);
+    for p in 0..nranks {
+        let mut row = Vec::with_capacity(nranks);
+        for q in 0..nranks {
+            if p == q {
+                row.push(PairPlan::default());
+                continue;
+            }
+            let full_block = r_u8(r)? != 0;
+            let a_row_part = r_csr(r, max)?;
+            let a_col_part = r_csr(r, max)?;
+            row.push(PairPlan::from_parts(a_row_part, a_col_part, full_block));
+        }
+        pairs.push(row);
+    }
+    Ok(CommPlan { nranks, strategy, pairs, block_rows })
+}
+
+fn encode_rowsets(out: &mut Vec<u8>, sets: &[(usize, Vec<u32>)]) -> Result<()> {
+    w_u64(out, sets.len() as u64)?;
+    for (rank, rows) in sets {
+        w_u64(out, *rank as u64)?;
+        w_u32s(out, rows)?;
+    }
+    Ok(())
+}
+
+fn decode_rowsets<R: Read>(r: &mut R, max: usize) -> Result<Vec<(usize, Vec<u32>)>> {
+    let n = r_u64(r)? as usize;
+    if n > max {
+        bail!("corrupt schedule: {n} row sets exceed available bytes");
+    }
+    let mut sets = Vec::with_capacity(n);
+    for _ in 0..n {
+        let rank = r_u64(r)? as usize;
+        sets.push((rank, r_u32s(r, max)?));
+    }
+    Ok(sets)
+}
+
+fn encode_directs(out: &mut Vec<u8>, ds: &[(usize, usize, Vec<u32>)]) -> Result<()> {
+    w_u64(out, ds.len() as u64)?;
+    for (a, b, rows) in ds {
+        w_u64(out, *a as u64)?;
+        w_u64(out, *b as u64)?;
+        w_u32s(out, rows)?;
+    }
+    Ok(())
+}
+
+fn decode_directs<R: Read>(r: &mut R, max: usize) -> Result<Vec<(usize, usize, Vec<u32>)>> {
+    let n = r_u64(r)? as usize;
+    if n > max {
+        bail!("corrupt schedule: {n} direct transfers exceed available bytes");
+    }
+    let mut ds = Vec::with_capacity(n);
+    for _ in 0..n {
+        let a = r_u64(r)? as usize;
+        let b = r_u64(r)? as usize;
+        ds.push((a, b, r_u32s(r, max)?));
+    }
+    Ok(ds)
+}
+
+fn encode_sched(out: &mut Vec<u8>, s: &HierSchedule) -> Result<()> {
+    w_u64(out, s.nranks as u64)?;
+    w_u64(out, s.b_flows.len() as u64)?;
+    for f in &s.b_flows {
+        w_u64(out, f.src as u64)?;
+        w_u64(out, f.dst_group as u64)?;
+        w_u64(out, f.rep as u64)?;
+        w_u32s(out, &f.rows)?;
+        encode_rowsets(out, &f.consumers)?;
+    }
+    w_u64(out, s.c_flows.len() as u64)?;
+    for f in &s.c_flows {
+        w_u64(out, f.dst as u64)?;
+        w_u64(out, f.src_group as u64)?;
+        w_u64(out, f.rep as u64)?;
+        w_u32s(out, &f.rows)?;
+        encode_rowsets(out, &f.producers)?;
+    }
+    encode_directs(out, &s.direct_b)?;
+    encode_directs(out, &s.direct_c)?;
+    Ok(())
+}
+
+fn decode_sched<R: Read>(r: &mut R, max: usize) -> Result<HierSchedule> {
+    let nranks = r_u64(r)? as usize;
+    let nb = r_u64(r)? as usize;
+    if nb > max {
+        bail!("corrupt schedule: {nb} B flows exceed available bytes");
+    }
+    let mut b_flows = Vec::with_capacity(nb);
+    for _ in 0..nb {
+        b_flows.push(BFlow {
+            src: r_u64(r)? as usize,
+            dst_group: r_u64(r)? as usize,
+            rep: r_u64(r)? as usize,
+            rows: r_u32s(r, max)?,
+            consumers: decode_rowsets(r, max)?,
+        });
+    }
+    let nc = r_u64(r)? as usize;
+    if nc > max {
+        bail!("corrupt schedule: {nc} C flows exceed available bytes");
+    }
+    let mut c_flows = Vec::with_capacity(nc);
+    for _ in 0..nc {
+        c_flows.push(CFlow {
+            dst: r_u64(r)? as usize,
+            src_group: r_u64(r)? as usize,
+            rep: r_u64(r)? as usize,
+            rows: r_u32s(r, max)?,
+            producers: decode_rowsets(r, max)?,
+        });
+    }
+    let direct_b = decode_directs(r, max)?;
+    let direct_c = decode_directs(r, max)?;
+    Ok(HierSchedule { nranks, b_flows, c_flows, direct_b, direct_c })
+}
+
+// ----------------------------------------------------------- job codec ----
+
+/// One worker's fully decoded assignment.
+struct Job {
+    rank: usize,
+    nranks: usize,
+    op: KernelOp,
+    opts: ExecOpts,
+    part: RowPartition,
+    topo: Topology,
+    plan: CommPlan,
+    sched: Option<HierSchedule>,
+    prog: Program,
+    blocks: LocalBlocks,
+    b_local: Dense,
+    x_local: Option<Dense>,
+}
+
+/// Serialize rank `rank`'s job. The program is derived here with the
+/// *same* `build_program` call the thread executor makes (NativeKernel
+/// prefers tiles), so both backends run literally the same step list.
+/// `xsched` must be [`hierarchy::sddmm_fetch`] of `sched` exactly as in
+/// [`super::run_kernel_with`] — present iff `sched` is and `op` needs X.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn encode_job(
+    rank: usize,
+    op: KernelOp,
+    opts: &ExecOpts,
+    part: &RowPartition,
+    topo: &Topology,
+    plan: &CommPlan,
+    sched: Option<&HierSchedule>,
+    xsched: Option<&HierSchedule>,
+    blocks: &LocalBlocks,
+    b_local: &Dense,
+    x_local: Option<&Dense>,
+) -> Result<Vec<u8>> {
+    let prog = super::build_program(rank, part, plan, sched, xsched, opts, true, op);
+    encode_job_parts(
+        rank, plan.nranks, op, opts, part, topo, plan, sched, &prog, blocks, b_local, x_local,
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn encode_job_parts(
+    rank: usize,
+    nranks: usize,
+    op: KernelOp,
+    opts: &ExecOpts,
+    part: &RowPartition,
+    topo: &Topology,
+    plan: &CommPlan,
+    sched: Option<&HierSchedule>,
+    prog: &Program,
+    blocks: &LocalBlocks,
+    b_local: &Dense,
+    x_local: Option<&Dense>,
+) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    out.extend_from_slice(WIRE_MAGIC);
+    w_u32(&mut out, WIRE_VERSION)?;
+    w_u64(&mut out, rank as u64)?;
+    w_u64(&mut out, nranks as u64)?;
+    w_u8(&mut out, op_tag(op))?;
+    w_u8(&mut out, u8::from(opts.overlap))?;
+    w_u64(&mut out, opts.tile_rows as u64)?;
+    w_u64(&mut out, opts.workers as u64)?;
+    w_usizes(&mut out, &part.starts)?;
+    encode_topo(&mut out, topo)?;
+    encode_plan(&mut out, plan)?;
+    match sched {
+        None => w_u8(&mut out, 0)?,
+        Some(s) => {
+            w_u8(&mut out, 1)?;
+            encode_sched(&mut out, s)?;
+        }
+    }
+    encode_program(&mut out, prog)?;
+    w_u64(&mut out, blocks.rank as u64)?;
+    w_csr(&mut out, &blocks.diag)?;
+    w_u64(&mut out, blocks.off_diag.len() as u64)?;
+    for m in &blocks.off_diag {
+        w_csr(&mut out, m)?;
+    }
+    w_dense(&mut out, b_local)?;
+    match x_local {
+        None => w_u8(&mut out, 0)?,
+        Some(x) => {
+            w_u8(&mut out, 1)?;
+            w_dense(&mut out, x)?;
+        }
+    }
+    Ok(out)
+}
+
+fn decode_job(buf: &[u8]) -> Result<Job> {
+    // Every serialized element occupies ≥ 4 bytes, so no honest length
+    // field can exceed this bound (the +1 admits empty lists in a tiny
+    // buffer).
+    let max = buf.len() / 4 + 1;
+    let r = &mut &buf[..];
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != WIRE_MAGIC {
+        bail!("bad job magic");
+    }
+    let version = r_u32(r)?;
+    if version != WIRE_VERSION {
+        bail!("wire version {version} != {WIRE_VERSION} (mismatched worker binary?)");
+    }
+    let rank = r_u64(r)? as usize;
+    let nranks = r_u64(r)? as usize;
+    let op = op_from_tag(r_u8(r)?)?;
+    let opts = ExecOpts {
+        overlap: r_u8(r)? != 0,
+        tile_rows: r_u64(r)? as usize,
+        workers: r_u64(r)? as usize,
+    };
+    let starts = r_usizes(r, max)?;
+    if starts.len() < 2 || starts[0] != 0 || starts.windows(2).any(|w| w[0] > w[1]) {
+        bail!("corrupt job: bad partition starts {starts:?}");
+    }
+    let part = RowPartition::from_starts(starts);
+    let topo = decode_topo(r, max)?;
+    let plan = decode_plan(r, max)?;
+    let sched = match r_u8(r)? {
+        0 => None,
+        1 => Some(decode_sched(r, max)?),
+        t => bail!("bad schedule option tag {t}"),
+    };
+    let prog = decode_program(r, max)?;
+    let blocks_rank = r_u64(r)? as usize;
+    let diag = r_csr(r, max)?;
+    let n_off = r_u64(r)? as usize;
+    if n_off > max {
+        bail!("corrupt job: {n_off} off-diagonal blocks exceed available bytes");
+    }
+    let mut off_diag = Vec::with_capacity(n_off);
+    for _ in 0..n_off {
+        off_diag.push(r_csr(r, max)?);
+    }
+    let blocks = LocalBlocks { rank: blocks_rank, diag, off_diag };
+    let b_local = r_dense(r, max)?;
+    let x_local = match r_u8(r)? {
+        0 => None,
+        1 => Some(r_dense(r, max)?),
+        t => bail!("bad X option tag {t}"),
+    };
+    if rank >= nranks || part.nparts != nranks || plan.nranks != nranks || blocks_rank != rank {
+        bail!("inconsistent job: rank {rank}, nranks {nranks}, part {}", part.nparts);
+    }
+    Ok(Job { rank, nranks, op, opts, part, topo, plan, sched, prog, blocks, b_local, x_local })
+}
+
+// --------------------------------------------------- control messages ----
+
+fn rank_payload(rank: usize) -> Vec<u8> {
+    let mut out = Vec::new();
+    w_u64(&mut out, rank as u64).expect("vec write");
+    out
+}
+
+fn encode_hello(rank: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    w_u32(&mut out, WIRE_VERSION)?;
+    w_u64(&mut out, rank as u64)?;
+    Ok(out)
+}
+
+pub(crate) fn decode_hello(buf: &[u8]) -> Result<(u32, usize)> {
+    let r = &mut &buf[..];
+    Ok((r_u32(r)?, r_u64(r)? as usize))
+}
+
+fn encode_done(rank: usize, c: &Dense, st: &RankStats) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    w_u64(&mut out, rank as u64)?;
+    w_dense(&mut out, c)?;
+    for v in [
+        st.intra_bytes_sent,
+        st.inter_bytes_sent,
+        st.intra_bytes_recv,
+        st.inter_bytes_recv,
+        st.msgs_sent,
+        st.msgs_recv,
+    ] {
+        w_u64(&mut out, v)?;
+    }
+    w_u64s(&mut out, &st.sent_to)?;
+    w_u64s(&mut out, &st.sent_b_to)?;
+    w_f64(&mut out, st.compute_secs)?;
+    w_f64(&mut out, st.idle_secs)?;
+    w_u64(&mut out, st.overlapped_recv_bytes)?;
+    w_u64(&mut out, st.idle_recv_bytes)?;
+    // Phase spans stay worker-local: their labels are `&'static str`s and
+    // the chrome-trace export is a thread-backend diagnostic.
+    Ok(out)
+}
+
+pub(crate) fn decode_done(buf: &[u8]) -> Result<(usize, Dense, RankStats)> {
+    let max = buf.len() / 4 + 1;
+    let r = &mut &buf[..];
+    let rank = r_u64(r)? as usize;
+    let c = r_dense(r, max)?;
+    let st = RankStats {
+        intra_bytes_sent: r_u64(r)?,
+        inter_bytes_sent: r_u64(r)?,
+        intra_bytes_recv: r_u64(r)?,
+        inter_bytes_recv: r_u64(r)?,
+        msgs_sent: r_u64(r)?,
+        msgs_recv: r_u64(r)?,
+        sent_to: r_u64s(r, max)?,
+        sent_b_to: r_u64s(r, max)?,
+        compute_secs: r_f64(r)?,
+        idle_secs: r_f64(r)?,
+        overlapped_recv_bytes: r_u64(r)?,
+        idle_recv_bytes: r_u64(r)?,
+        phases: Vec::new(),
+    };
+    Ok((rank, c, st))
+}
+
+fn encode_error(rank: usize, msg: &str) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    w_u64(&mut out, rank as u64)?;
+    w_str(&mut out, msg)?;
+    Ok(out)
+}
+
+pub(crate) fn decode_error(buf: &[u8]) -> Result<(usize, String)> {
+    let r = &mut &buf[..];
+    let rank = r_u64(r)? as usize;
+    let msg = r_str(r, buf.len())?;
+    Ok((rank, msg))
+}
+
+// --------------------------------------------------------- worker side ----
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "rank panicked (non-string payload)".to_string()
+    }
+}
+
+/// Worker-process entry point: connect, HELLO, receive the job, run the
+/// shared `rank_main`, report DONE or ERROR, exit. Never returns.
+pub(crate) fn worker_main(port: u16, rank: usize) -> ! {
+    let code = match worker_run(port, rank) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("shiro worker rank {rank}: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn worker_run(port: u16, rank: usize) -> Result<()> {
+    let stream =
+        TcpStream::connect(("127.0.0.1", port)).context("connect to control plane")?;
+    stream.set_nodelay(true).ok();
+    let tx = Arc::new(SocketTx::new(stream.try_clone().context("clone control socket")?));
+    tx.frame(kind::HELLO, &encode_hello(rank)?)?;
+
+    // One buffered reader serves both the JOB read and the data pump —
+    // a second reader over the raw stream would lose whatever bytes this
+    // BufReader has already pulled past the JOB frame.
+    let mut reader = BufReader::new(stream);
+    let (k, payload) = read_frame(&mut reader)?;
+    if k != kind::JOB {
+        bail!("expected JOB frame, got kind {k}");
+    }
+    let job = match decode_job(&payload) {
+        Ok(j) => j,
+        Err(e) => {
+            let _ = tx.frame(kind::ERROR, &encode_error(rank, &format!("bad job: {e:#}"))?);
+            return Err(e);
+        }
+    };
+    if job.rank != rank {
+        let msg = format!("job addressed to rank {}, I am {rank}", job.rank);
+        let _ = tx.frame(kind::ERROR, &encode_error(rank, &msg)?);
+        bail!("{msg}");
+    }
+
+    // Fault injection (`ProcOpts::crash_rank`): die silently after the
+    // handshake, standing in for a segfaulted or OOM-killed rank. The
+    // suite asserts the control plane reports this as a structured
+    // failure instead of hanging.
+    if std::env::var_os(ENV_CRASH).is_some() {
+        std::process::abort();
+    }
+
+    // Data pump: routed DATA frames → the pipeline's inbox. On socket
+    // error or EOF the sender is dropped, so a `recv` blocked in
+    // `rank_main` panics ("inbox closed") instead of hanging forever —
+    // the panic is caught below and reported as ERROR.
+    let (msg_tx, msg_rx) = mpsc::channel::<Msg>();
+    std::thread::spawn(move || {
+        loop {
+            let (k, payload) = match read_frame(&mut reader) {
+                Ok(f) => f,
+                Err(_) => break,
+            };
+            if k != kind::DATA {
+                continue;
+            }
+            let r = &mut &payload[..];
+            if r_u64(r).is_err() {
+                break; // dst prefix, consumed by routing
+            }
+            match decode_msg(r, payload.len() / 4 + 1) {
+                Ok(m) => {
+                    if msg_tx.send(m).is_err() {
+                        break;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+    });
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let beat = {
+        let tx = Arc::clone(&tx);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let payload = rank_payload(rank);
+            while !stop.load(Ordering::Relaxed) {
+                if tx.frame(kind::BEAT, &payload).is_err() {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(BEAT_MILLIS));
+            }
+        })
+    };
+
+    let nranks = job.nranks;
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        // Re-derive the X fetch schedule exactly as `run_kernel_with`
+        // does — it is a pure function of the shipped schedule.
+        let xsched = (job.op != KernelOp::Spmm)
+            .then(|| job.sched.as_ref().map(hierarchy::sddmm_fetch))
+            .flatten();
+        let kernel = NativeKernel;
+        let mut ctx = Ctx {
+            rank,
+            part: &job.part,
+            plan: &job.plan,
+            sched: job.sched.as_ref(),
+            xsched: xsched.as_ref(),
+            topo: &job.topo,
+            kernel: &kernel,
+            outbox: Outbox::Socket(tx.as_ref()),
+            inbox: msg_rx,
+            stats: RankStats {
+                sent_to: vec![0; nranks],
+                sent_b_to: vec![0; nranks],
+                ..RankStats::default()
+            },
+            opts: job.opts,
+            gate: None,
+            t0: Instant::now(),
+            pool: PoolRef::Own(BufferPool::new()),
+        };
+        let c_width = if job.op == KernelOp::Sddmm { 0 } else { job.b_local.ncols };
+        let mut c_local = Dense::zeros(job.part.len(rank), c_width);
+        let mut vals = SddmmVals::default();
+        rank_main(
+            &mut ctx,
+            &job.blocks,
+            job.x_local.as_ref(),
+            &job.b_local,
+            &mut c_local,
+            &mut vals,
+            &job.prog,
+        );
+        (c_local, ctx.stats)
+    }));
+    stop.store(true, Ordering::Relaxed);
+
+    match result {
+        Ok((c_local, stats)) => {
+            tx.frame(kind::DONE, &encode_done(rank, &c_local, &stats)?)?;
+            let _ = beat.join();
+            // The pump thread is parked in `read_frame`; it dies with the
+            // process once `worker_main` exits.
+            Ok(())
+        }
+        Err(p) => {
+            let msg = panic_message(p.as_ref());
+            let _ = tx.frame(kind::ERROR, &encode_error(rank, &msg)?);
+            bail!("rank panicked: {msg}");
+        }
+    }
+}
+
+// --------------------------------------------------------------- tests ----
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{self, Strategy};
+    use crate::cover::Solver;
+    use crate::partition::split_1d;
+    use crate::sparse::gen;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, kind::DATA, &[1, 2, 3]).unwrap();
+        write_frame(&mut buf, kind::BEAT, &[]).unwrap();
+        let r = &mut &buf[..];
+        assert_eq!(read_frame(r).unwrap(), (kind::DATA, vec![1, 2, 3]));
+        assert_eq!(read_frame(r).unwrap(), (kind::BEAT, vec![]));
+        assert!(r.is_empty());
+        // A zero length word is rejected (kind byte is always counted).
+        let bad = 0u32.to_le_bytes();
+        assert!(read_frame(&mut &bad[..]).is_err());
+    }
+
+    /// Decode-then-re-encode must reproduce the exact bytes; avoids
+    /// needing PartialEq on the executor's private message type.
+    fn msg_roundtrips(m: &Msg) {
+        let mut buf = Vec::new();
+        encode_msg(&mut buf, m).unwrap();
+        let r = &mut &buf[..];
+        let back = decode_msg(r, buf.len() / 4 + 1).unwrap();
+        assert!(r.is_empty());
+        let mut buf2 = Vec::new();
+        encode_msg(&mut buf2, &back).unwrap();
+        assert_eq!(buf, buf2);
+    }
+
+    #[test]
+    fn msg_roundtrip_all_variants() {
+        // NaN and -0.0 payloads must survive bitwise (float bits travel
+        // raw), or the proc backend could not be a bitwise oracle match.
+        let d = Dense::from_vec(2, 2, vec![1.5, f32::NAN, -0.0, 7.25]);
+        msg_roundtrips(&Msg::B { from: 3, origin: 1, rows: vec![0, 5], data: d.clone() });
+        msg_roundtrips(&Msg::X { from: 0, origin: 2, rows: vec![9], data: d.clone() });
+        msg_roundtrips(&Msg::C { from: 7, rows: vec![], data: Dense::zeros(0, 4) });
+        msg_roundtrips(&Msg::CAgg { from: 2, final_dst: 6, rows: vec![1, 2, 3], data: d });
+    }
+
+    #[test]
+    fn phase_table_roundtrips() {
+        for (i, &name) in PHASES.iter().enumerate() {
+            assert_eq!(phase_tag(name).unwrap(), i as u8);
+            assert_eq!(phase_name(i as u8).unwrap(), name);
+        }
+        assert!(phase_name(PHASES.len() as u8).is_err());
+        assert!(phase_tag("no such phase").is_err());
+    }
+
+    #[test]
+    fn done_roundtrip() {
+        let c = Dense::from_fn(3, 2, |i, j| (i + j) as f32 - 1.5);
+        let st = RankStats {
+            intra_bytes_sent: 10,
+            inter_bytes_sent: 20,
+            intra_bytes_recv: 30,
+            inter_bytes_recv: 40,
+            msgs_sent: 5,
+            msgs_recv: 6,
+            sent_to: vec![1, 2, 3],
+            sent_b_to: vec![1, 0, 3],
+            compute_secs: 0.25,
+            idle_secs: 0.125,
+            overlapped_recv_bytes: 7,
+            idle_recv_bytes: 8,
+            phases: Vec::new(),
+        };
+        let buf = encode_done(2, &c, &st).unwrap();
+        let (rank, c2, st2) = decode_done(&buf).unwrap();
+        assert_eq!(rank, 2);
+        assert_eq!(c2, c);
+        assert_eq!(st2.sent_to, st.sent_to);
+        assert_eq!(st2.msgs_recv, 6);
+        assert_eq!(st2.compute_secs, 0.25);
+    }
+
+    #[test]
+    fn hello_and_error_roundtrip() {
+        let (v, rank) = decode_hello(&encode_hello(11).unwrap()).unwrap();
+        assert_eq!((v, rank), (WIRE_VERSION, 11));
+        let (rank, msg) = decode_error(&encode_error(3, "inbox closed").unwrap()).unwrap();
+        assert_eq!((rank, msg.as_str()), (3, "inbox closed"));
+    }
+
+    /// Full job blobs over real plans re-encode byte-identically after a
+    /// decode, for every kernel op and both flat and hierarchical routing
+    /// — the program, plan, schedule, and operand codecs are all exact.
+    #[test]
+    fn job_roundtrips_byte_identical() {
+        let a = gen::rmat(96, 900, (0.55, 0.2, 0.19), false, 11);
+        let ranks = 4;
+        let part = RowPartition::balanced(a.nrows, ranks);
+        let blocks = split_1d(&a, &part);
+        let plan = comm::plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None);
+        let topo = Topology::tsubame4(ranks);
+        let sched = hierarchy::build(&plan, &topo);
+        let xsched = hierarchy::sddmm_fetch(&sched);
+        let mut rng = Rng::new(7);
+        let b_full = Dense::random(a.nrows, 8, &mut rng);
+        let x_full = Dense::random(a.nrows, 8, &mut rng);
+        for op in [KernelOp::Spmm, KernelOp::FusedSddmmSpmm] {
+            for use_sched in [false, true] {
+                for rank in 0..ranks {
+                    let (r0, r1) = part.range(rank);
+                    let n = b_full.ncols;
+                    let b_local =
+                        Dense::from_vec(r1 - r0, n, b_full.data[r0 * n..r1 * n].to_vec());
+                    let x_local = (op != KernelOp::Spmm).then(|| {
+                        Dense::from_vec(r1 - r0, n, x_full.data[r0 * n..r1 * n].to_vec())
+                    });
+                    let (s, xs) = if use_sched {
+                        (
+                            Some(&sched),
+                            (op != KernelOp::Spmm).then_some(&xsched),
+                        )
+                    } else {
+                        (None, None)
+                    };
+                    let bytes = encode_job(
+                        rank,
+                        op,
+                        &ExecOpts::default(),
+                        &part,
+                        &topo,
+                        &plan,
+                        s,
+                        xs,
+                        &blocks[rank],
+                        &b_local,
+                        x_local.as_ref(),
+                    )
+                    .unwrap();
+                    let job = decode_job(&bytes).unwrap();
+                    let again = encode_job_parts(
+                        job.rank,
+                        job.nranks,
+                        job.op,
+                        &job.opts,
+                        &job.part,
+                        &job.topo,
+                        &job.plan,
+                        job.sched.as_ref(),
+                        &job.prog,
+                        &job.blocks,
+                        &job.b_local,
+                        job.x_local.as_ref(),
+                    )
+                    .unwrap();
+                    assert_eq!(bytes, again, "op {op:?} sched {use_sched} rank {rank}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn job_rejects_corruption() {
+        let a = gen::rmat(32, 200, (0.55, 0.2, 0.19), false, 5);
+        let part = RowPartition::balanced(a.nrows, 2);
+        let blocks = split_1d(&a, &part);
+        let plan = comm::plan(&blocks, &part, Strategy::Column, None);
+        let topo = Topology::tsubame4(2);
+        let b = Dense::zeros(part.len(0), 4);
+        let bytes = encode_job(
+            0,
+            KernelOp::Spmm,
+            &ExecOpts::default(),
+            &part,
+            &topo,
+            &plan,
+            None,
+            None,
+            &blocks[0],
+            &b,
+            None,
+        )
+        .unwrap();
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xff;
+        assert!(decode_job(&bad).is_err());
+        // Bad version.
+        let mut bad = bytes.clone();
+        bad[8] ^= 0xff;
+        assert!(decode_job(&bad).is_err());
+        // Truncation anywhere fails cleanly rather than panicking.
+        for cut in [bytes.len() / 4, bytes.len() / 2, bytes.len() - 1] {
+            assert!(decode_job(&bytes[..cut]).is_err());
+        }
+    }
+}

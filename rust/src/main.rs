@@ -14,6 +14,7 @@
 //! --strategy <block|column|row|joint|joint-weighted|joint-greedy|adaptive>
 //! --partitioner <balanced|nnz-balanced|cost-refined> (row-boundary choice)
 //! --overlap <on|off> (overlapped executor pipeline vs phase-ordered)
+//! --backend <thread|proc> (in-process ranks vs one OS process per rank)
 //! --config <file.toml> (CLI overrides config values).
 //! `trace` accepts --exec to emit the executed pipeline's chrome trace
 //! alongside the simulated one (same phase names, comparable in Perfetto).
@@ -24,6 +25,9 @@ use shiro::cover::Solver;
 use shiro::util::cli::Args;
 
 fn main() {
+    // If this process was spawned as a multiproc worker, this runs the
+    // worker loop and never returns; a no-op for ordinary invocations.
+    shiro::runtime::multiproc::maybe_run_worker();
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let cfg = RunConfig::from_args(&args);
@@ -40,7 +44,8 @@ fn main() {
             eprintln!(
                 "usage: shiro <datasets|plan|run|sddmm|sim|gnn|trace|info> \
                  [--dataset D] [--ranks R] [--n N] [--scale S] [--topo T] \
-                 [--strategy S] [--partitioner P] [--overlap on|off] [--config F]"
+                 [--strategy S] [--partitioner P] [--overlap on|off] \
+                 [--backend thread|proc] [--config F]"
             );
             std::process::exit(if cmd == "help" { 0 } else { 2 });
         }
@@ -155,15 +160,27 @@ fn cmd_run(cfg: &RunConfig) {
     );
     let mut rng = Rng::new(1);
     let b = Dense::random(a.nrows, cfg.n_dense, &mut rng);
-    let (c, stats) = d.execute_with(&b, &NativeKernel, &cfg.exec_opts());
+    let (c, stats) = if cfg.backend == "proc" {
+        let popts = shiro::runtime::multiproc::ProcOpts::default();
+        match d.execute_proc(&b, &cfg.exec_opts(), &popts) {
+            Ok(r) => r,
+            Err(f) => {
+                eprintln!("proc backend failed: {f}");
+                std::process::exit(1);
+            }
+        }
+    } else {
+        d.execute_with(&b, &NativeKernel, &cfg.exec_opts())
+    };
     let want = a.spmm(&b);
     let err = want.diff_norm(&c) / (want.max_abs() as f64 + 1e-30);
     let w = stats.overlap_window();
     println!(
-        "executed {} ranks [{}] overlap={}: rel err {err:.2e}, wall {:.1} ms, \
+        "executed {} ranks [{}] backend={} overlap={}: rel err {err:.2e}, wall {:.1} ms, \
          intra {} B, inter {} B",
         cfg.ranks,
         d.plan.strategy.name(),
+        cfg.backend,
         if cfg.overlap { "on" } else { "off" },
         stats.wall_secs * 1e3,
         stats.total_intra_bytes(),

@@ -15,10 +15,12 @@ use crate::partition::{LocalBlocks, RowPartition};
 use crate::plan::{compile, CompiledPlan, PlanParams};
 use crate::sparse::Csr;
 use crate::topology::Topology;
+use crate::util::bin::{r_csr, r_u64, w_csr, w_u64};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 const PLAN_MAGIC: &[u8; 8] = b"SHIROPLN";
 const PLAN_VERSION: u32 = 1;
@@ -95,66 +97,11 @@ pub fn pattern_key(
 }
 
 // --------------------------------------------------------- serialization ----
+//
+// The scalar/CSR primitives live in `util::bin` (shared with the multiproc
+// wire format); this module only owns the plan-file layout around them.
 
-fn w_u64<W: Write>(w: &mut W, v: u64) -> Result<()> {
-    w.write_all(&v.to_le_bytes())?;
-    Ok(())
-}
-
-fn r_u64<R: Read>(r: &mut R) -> Result<u64> {
-    let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
-}
-
-fn w_csr<W: Write>(w: &mut W, m: &Csr) -> Result<()> {
-    w_u64(w, m.nrows as u64)?;
-    w_u64(w, m.ncols as u64)?;
-    w_u64(w, m.nnz() as u64)?;
-    for &v in &m.indptr {
-        w_u64(w, v)?;
-    }
-    for &c in &m.indices {
-        w.write_all(&c.to_le_bytes())?;
-    }
-    for &v in &m.data {
-        w.write_all(&v.to_le_bytes())?;
-    }
-    Ok(())
-}
-
-/// `max_elems` bounds every length field against the file's actual size
-/// (each element occupies ≥ 4 bytes on disk), so a truncated or corrupt
-/// file fails with a clean error instead of attempting a huge allocation.
-fn r_csr<R: Read>(r: &mut R, max_elems: usize) -> Result<Csr> {
-    let nrows = r_u64(r)? as usize;
-    let ncols = r_u64(r)? as usize;
-    let nnz = r_u64(r)? as usize;
-    if nrows > max_elems || nnz > max_elems {
-        bail!("plan cache entry corrupt: csr dims {nrows}x{ncols} nnz {nnz} exceed file size");
-    }
-    let mut indptr = vec![0u64; nrows + 1];
-    for v in indptr.iter_mut() {
-        *v = r_u64(r)?;
-    }
-    let mut indices = vec![0u32; nnz];
-    for v in indices.iter_mut() {
-        let mut b = [0u8; 4];
-        r.read_exact(&mut b)?;
-        *v = u32::from_le_bytes(b);
-    }
-    let mut data = vec![0f32; nnz];
-    for v in data.iter_mut() {
-        let mut b = [0u8; 4];
-        r.read_exact(&mut b)?;
-        *v = f32::from_le_bytes(b);
-    }
-    let m = Csr { nrows, ncols, indptr, indices, data };
-    m.validate()?;
-    Ok(m)
-}
-
-fn encode_strategy(s: Strategy) -> u8 {
+pub(crate) fn encode_strategy(s: Strategy) -> u8 {
     match s {
         Strategy::Block => 0,
         Strategy::Column => 1,
@@ -168,7 +115,7 @@ fn encode_strategy(s: Strategy) -> u8 {
     }
 }
 
-fn decode_strategy(tag: u8) -> Result<Strategy> {
+pub(crate) fn decode_strategy(tag: u8) -> Result<Strategy> {
     Ok(match tag {
         0 => Strategy::Block,
         1 => Strategy::Column,
@@ -188,8 +135,17 @@ fn decode_strategy(tag: u8) -> Result<Strategy> {
 /// index lists are derived on load via [`PairPlan::from_parts`].
 pub fn save_plan(plan: &CommPlan, key: u64, path: &Path) -> Result<()> {
     // Write to a temp file and rename so a killed process never leaves a
-    // half-written entry at the final path.
-    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    // half-written entry at the final path. The suffix carries a
+    // process-wide counter in addition to the pid: two PlanCache
+    // instances (or concurrent sessions) in one process saving the same
+    // key must not share a temp path, or one writer truncates the file
+    // under the other and the rename publishes a torn entry.
+    static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+    let tmp = path.with_extension(format!(
+        "tmp.{}.{}",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
     let f = std::fs::File::create(&tmp)
         .with_context(|| format!("create {}", tmp.display()))?;
     let mut w = BufWriter::new(f);
@@ -384,6 +340,41 @@ mod tests {
         assert_plans_equal(&compiled.plan, &back);
         // Wrong key is rejected.
         assert!(load_plan(&path, Some(key ^ 1)).is_err());
+    }
+
+    #[test]
+    fn concurrent_saves_of_one_key_never_corrupt() {
+        // Satellite regression (PR 6): the temp-file suffix must be unique
+        // per save, not just per process — with a pid-only suffix, two
+        // in-process writers of the same key truncate each other's temp
+        // file and can rename a torn entry into the cache.
+        let (part, blocks, topo) = setup(7);
+        let compiled = compile(&blocks, &part, &topo, &PlanParams::default());
+        let key = pattern_key(&blocks, &part, &topo, &PlanParams::default());
+        let dir = std::env::temp_dir().join("shiro_plan_cache_race_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("raced.bin");
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..4 {
+                        save_plan(&compiled.plan, key, &path).unwrap();
+                        // Rename is atomic, so every concurrent load must
+                        // see a complete, valid entry.
+                        let back = load_plan(&path, Some(key)).unwrap();
+                        assert_plans_equal(&compiled.plan, &back);
+                    }
+                });
+            }
+        });
+        // No temp files left behind.
+        let stray: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path() != path)
+            .collect();
+        assert!(stray.is_empty(), "leftover temp files: {stray:?}");
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! executor) keeps working.
 
 pub mod ell;
+pub mod multiproc;
 
 /// Default artifact location (repo-root/artifacts), overridable with
 /// SHIRO_ARTIFACTS. Shared by the real and stub runtimes.

@@ -1,0 +1,585 @@
+//! Multi-process executor backend: every rank is an OS process, driven by
+//! a socket message queue (DESIGN.md §10).
+//!
+//! The parent is a pure control plane — it never touches the numerics. It
+//! spawns one worker per rank (re-executing its own binary;
+//! [`maybe_run_worker`] intercepts the env-var handshake before CLI
+//! dispatch), serializes each rank's job with [`crate::exec::wire`] — the
+//! *same* frozen step program the thread executor runs — and then routes
+//! DATA frames between workers verbatim. Workers run the identical
+//! `rank_main`; since every scatter-add folds in canonical (origin, row)
+//! order, the proc backend's C is bitwise-identical to the thread
+//! backend's (`tests/multiproc_suite.rs`).
+//!
+//! Failure semantics: workers heartbeat every
+//! [`crate::exec::wire::BEAT_MILLIS`] ms; a worker that panics reports a
+//! structured ERROR frame; one that dies silently is detected by its
+//! socket closing or by heartbeat silence past [`ProcOpts::timeout`].
+//! Every failure path kills and reaps all children and surfaces a
+//! [`RankFailure`] instead of hanging.
+
+use crate::comm::CommPlan;
+use crate::dense::Dense;
+use crate::exec::wire::{self, kind};
+use crate::exec::{ExecOpts, ExecStats, KernelOp, RankStats};
+use crate::hierarchy::{self, HierSchedule};
+use crate::partition::{LocalBlocks, RowPartition};
+use crate::topology::Topology;
+use std::fmt;
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command};
+use std::sync::{mpsc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Control-plane options for one multi-process run.
+#[derive(Clone, Debug)]
+pub struct ProcOpts {
+    /// Declare a rank dead after this long without any frame from it
+    /// (heartbeats arrive every [`wire::BEAT_MILLIS`] ms, so this allows
+    /// hundreds of missed beats). Also bounds worker connect time.
+    pub timeout: Duration,
+    /// Worker binary; defaults to `std::env::current_exe()`. Tests pass
+    /// `env!("CARGO_BIN_EXE_shiro")` because their own executable is the
+    /// test harness, not the CLI.
+    pub worker_exe: Option<PathBuf>,
+    /// Fault injection: this rank aborts right after the handshake,
+    /// standing in for a segfaulted or OOM-killed worker.
+    pub crash_rank: Option<usize>,
+}
+
+impl Default for ProcOpts {
+    fn default() -> ProcOpts {
+        ProcOpts { timeout: Duration::from_secs(30), worker_exe: None, crash_rank: None }
+    }
+}
+
+/// Structured report of the first rank failure the control plane saw.
+#[derive(Debug)]
+pub struct RankFailure {
+    pub rank: usize,
+    pub cause: FailureCause,
+}
+
+#[derive(Debug)]
+pub enum FailureCause {
+    /// The worker process could not be spawned (or the control socket
+    /// could not be set up — reported as rank 0).
+    Spawn(String),
+    /// The worker's socket closed before it reported DONE (crash, abort,
+    /// OOM kill — anything that dies without a word).
+    Disconnected(String),
+    /// No frame of any kind within the timeout: the worker is alive-ish
+    /// but wedged, or the host lost it.
+    HeartbeatTimeout(Duration),
+    /// The worker itself reported an error (panic message or job
+    /// rejection) via an ERROR frame.
+    Worker(String),
+    /// The worker sent something the protocol does not allow.
+    Protocol(String),
+}
+
+impl fmt::Display for RankFailure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.cause {
+            FailureCause::Spawn(e) => {
+                write!(f, "rank {}: failed to spawn worker: {e}", self.rank)
+            }
+            FailureCause::Disconnected(e) => {
+                write!(f, "rank {}: worker disconnected before finishing: {e}", self.rank)
+            }
+            FailureCause::HeartbeatTimeout(d) => write!(
+                f,
+                "rank {}: no heartbeat for {:.1}s — worker presumed dead",
+                self.rank,
+                d.as_secs_f64()
+            ),
+            FailureCause::Worker(m) => write!(f, "rank {}: worker error: {m}", self.rank),
+            FailureCause::Protocol(m) => {
+                write!(f, "rank {}: protocol violation: {m}", self.rank)
+            }
+        }
+    }
+}
+
+impl std::error::Error for RankFailure {}
+
+/// Call first thing in `main()`: if the worker env vars are set, this
+/// process is a spawned rank — run the worker loop and never return.
+/// A no-op in ordinary CLI invocations.
+pub fn maybe_run_worker() {
+    let (Some(port), Some(rank)) =
+        (std::env::var(wire::ENV_PORT).ok(), std::env::var(wire::ENV_RANK).ok())
+    else {
+        return;
+    };
+    let (Ok(port), Ok(rank)) = (port.parse::<u16>(), rank.parse::<usize>()) else {
+        eprintln!(
+            "shiro worker: unparseable {}={port:?} / {}={rank:?}",
+            wire::ENV_PORT,
+            wire::ENV_RANK
+        );
+        std::process::exit(3);
+    };
+    wire::worker_main(port, rank)
+}
+
+/// Distributed SpMM across worker processes: the proc-backend counterpart
+/// of [`crate::exec::run_with`], same plan inputs, same bitwise result.
+#[allow(clippy::too_many_arguments)]
+pub fn run(
+    part: &RowPartition,
+    plan: &CommPlan,
+    blocks: &[LocalBlocks],
+    sched: Option<&HierSchedule>,
+    topo: &Topology,
+    b: &Dense,
+    opts: &ExecOpts,
+    popts: &ProcOpts,
+) -> Result<(Dense, ExecStats), RankFailure> {
+    run_op(KernelOp::Spmm, part, plan, blocks, sched, topo, None, b, opts, popts)
+}
+
+/// Fused SDDMM→SpMM across worker processes: counterpart of
+/// [`crate::exec::run_fused_with`]. Exercises `Msg::X` over the wire.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fused(
+    part: &RowPartition,
+    plan: &CommPlan,
+    blocks: &[LocalBlocks],
+    sched: Option<&HierSchedule>,
+    topo: &Topology,
+    x: &Dense,
+    y: &Dense,
+    opts: &ExecOpts,
+    popts: &ProcOpts,
+) -> Result<(Dense, ExecStats), RankFailure> {
+    run_op(KernelOp::FusedSddmmSpmm, part, plan, blocks, sched, topo, Some(x), y, opts, popts)
+}
+
+/// One event from a worker's reader thread to the collector.
+enum Event {
+    Done(usize, Dense, RankStats),
+    Beat(usize),
+    Fail(usize, FailureCause),
+    /// Stream closed (or read error). Benign after DONE, fatal before.
+    Eof(usize, String),
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_op(
+    op: KernelOp,
+    part: &RowPartition,
+    plan: &CommPlan,
+    blocks: &[LocalBlocks],
+    sched: Option<&HierSchedule>,
+    topo: &Topology,
+    x: Option<&Dense>,
+    b: &Dense,
+    opts: &ExecOpts,
+    popts: &ProcOpts,
+) -> Result<(Dense, ExecStats), RankFailure> {
+    // SDDMM's output is the per-rank sparse values, which DONE does not
+    // carry; the dense-output kernels are the proc backend's surface.
+    assert!(
+        op != KernelOp::Sddmm,
+        "proc backend supports dense-output kernels only (SpMM / fused)"
+    );
+    let nranks = part.nparts;
+    assert_eq!(plan.nranks, nranks);
+    assert_eq!(part.n, b.nrows);
+    let n_dense = b.ncols;
+    let fail = |rank: usize, cause: FailureCause| RankFailure { rank, cause };
+
+    let listener = TcpListener::bind(("127.0.0.1", 0))
+        .map_err(|e| fail(0, FailureCause::Spawn(format!("bind control socket: {e}"))))?;
+    let port = listener
+        .local_addr()
+        .map_err(|e| fail(0, FailureCause::Spawn(format!("control socket addr: {e}"))))?
+        .port();
+    let exe = match &popts.worker_exe {
+        Some(p) => p.clone(),
+        None => std::env::current_exe()
+            .map_err(|e| fail(0, FailureCause::Spawn(format!("current_exe: {e}"))))?,
+    };
+
+    let t0 = Instant::now();
+    let mut children: Vec<Child> = Vec::new();
+    for rank in 0..nranks {
+        let mut cmd = Command::new(&exe);
+        cmd.env(wire::ENV_PORT, port.to_string()).env(wire::ENV_RANK, rank.to_string());
+        if popts.crash_rank == Some(rank) {
+            cmd.env(wire::ENV_CRASH, "1");
+        }
+        match cmd.spawn() {
+            Ok(c) => children.push(c),
+            Err(e) => {
+                kill_all(&mut children);
+                reap(&mut children);
+                return Err(fail(rank, FailureCause::Spawn(e.to_string())));
+            }
+        }
+    }
+
+    // Accept + HELLO with a hard deadline so a worker that dies before
+    // connecting (or never says hello) cannot hang the control plane.
+    // Non-blocking accept + poll keeps one deadline across all workers.
+    let mut streams: Vec<Option<TcpStream>> = (0..nranks).map(|_| None).collect();
+    let mut err = None;
+    listener.set_nonblocking(true).ok();
+    let deadline = Instant::now() + popts.timeout;
+    let mut accepted = 0;
+    while accepted < nranks && err.is_none() {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false).ok();
+                stream.set_nodelay(true).ok();
+                stream.set_read_timeout(Some(popts.timeout)).ok();
+                let hello = wire::read_frame(&mut (&stream)).and_then(|(k, payload)| {
+                    if k != kind::HELLO {
+                        anyhow::bail!("expected HELLO, got frame kind {k}");
+                    }
+                    wire::decode_hello(&payload)
+                });
+                match hello {
+                    Ok((v, rank)) if v != wire::WIRE_VERSION => {
+                        err = Some(fail(
+                            rank.min(nranks.saturating_sub(1)),
+                            FailureCause::Protocol(format!(
+                                "worker wire version {v} != {}",
+                                wire::WIRE_VERSION
+                            )),
+                        ));
+                    }
+                    Ok((_, rank)) if rank >= nranks => {
+                        err = Some(fail(
+                            0,
+                            FailureCause::Protocol(format!("HELLO from unknown rank {rank}")),
+                        ));
+                    }
+                    Ok((_, rank)) if streams[rank].is_some() => {
+                        err = Some(fail(
+                            rank,
+                            FailureCause::Protocol(format!("duplicate HELLO from rank {rank}")),
+                        ));
+                    }
+                    Ok((_, rank)) => {
+                        stream.set_read_timeout(None).ok();
+                        streams[rank] = Some(stream);
+                        accepted += 1;
+                    }
+                    Err(e) => {
+                        err = Some(fail(
+                            0,
+                            FailureCause::Protocol(format!("bad handshake: {e:#}")),
+                        ));
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() > deadline {
+                    let missing = streams.iter().position(Option::is_none).unwrap_or(0);
+                    err = Some(fail(
+                        missing,
+                        FailureCause::Disconnected(format!(
+                            "worker never connected within {:.1}s",
+                            popts.timeout.as_secs_f64()
+                        )),
+                    ));
+                } else {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+            Err(e) => {
+                err = Some(fail(0, FailureCause::Spawn(format!("accept: {e}"))));
+            }
+        }
+    }
+    if let Some(f) = err {
+        kill_all(&mut children);
+        reap(&mut children);
+        return Err(f);
+    }
+
+    // Ship every JOB before any routing starts: a routed DATA frame must
+    // never precede JOB on a worker's stream (per-stream writes are only
+    // serialized once the writer mutexes exist).
+    let xsched_owned =
+        (op != KernelOp::Spmm).then(|| sched.map(hierarchy::sddmm_fetch)).flatten();
+    for rank in 0..nranks {
+        let (r0, r1) = part.range(rank);
+        let b_local =
+            Dense::from_vec(r1 - r0, n_dense, b.data[r0 * n_dense..r1 * n_dense].to_vec());
+        let x_local = x.map(|x| {
+            Dense::from_vec(r1 - r0, n_dense, x.data[r0 * n_dense..r1 * n_dense].to_vec())
+        });
+        let job = match wire::encode_job(
+            rank,
+            op,
+            opts,
+            part,
+            topo,
+            plan,
+            sched,
+            xsched_owned.as_ref(),
+            &blocks[rank],
+            &b_local,
+            x_local.as_ref(),
+        ) {
+            Ok(j) => j,
+            Err(e) => {
+                kill_all(&mut children);
+                reap(&mut children);
+                return Err(fail(rank, FailureCause::Protocol(format!("encode job: {e:#}"))));
+            }
+        };
+        let stream = streams[rank].as_mut().expect("accepted above");
+        if let Err(e) = wire::write_frame(stream, kind::JOB, &job) {
+            kill_all(&mut children);
+            reap(&mut children);
+            return Err(fail(rank, FailureCause::Disconnected(format!("send job: {e:#}"))));
+        }
+    }
+
+    // Split each stream: one cloned read half per reader thread, the
+    // original write half behind a mutex for routed DATA frames.
+    let mut readers = Vec::with_capacity(nranks);
+    for s in &streams {
+        match s.as_ref().expect("accepted above").try_clone() {
+            Ok(c) => readers.push(c),
+            Err(e) => {
+                kill_all(&mut children);
+                reap(&mut children);
+                return Err(fail(0, FailureCause::Spawn(format!("clone stream: {e}"))));
+            }
+        }
+    }
+    let writers: Vec<Mutex<TcpStream>> =
+        streams.into_iter().map(|s| Mutex::new(s.expect("accepted above"))).collect();
+    let writers = &writers;
+
+    let (ev_tx, ev_rx) = mpsc::channel::<Event>();
+    let collected: Result<Vec<(Dense, RankStats)>, RankFailure> = std::thread::scope(|scope| {
+        for (w, rd) in readers.into_iter().enumerate() {
+            let ev_tx = ev_tx.clone();
+            scope.spawn(move || {
+                let mut rd = BufReader::new(rd);
+                loop {
+                    let (k, payload) = match wire::read_frame(&mut rd) {
+                        Ok(f) => f,
+                        Err(e) => {
+                            let _ = ev_tx.send(Event::Eof(w, format!("{e:#}")));
+                            return;
+                        }
+                    };
+                    match k {
+                        kind::DATA => {
+                            if payload.len() < 8 {
+                                let _ = ev_tx.send(Event::Fail(
+                                    w,
+                                    FailureCause::Protocol("short DATA frame".into()),
+                                ));
+                                return;
+                            }
+                            let dst = u64::from_le_bytes(
+                                payload[..8].try_into().expect("8-byte prefix"),
+                            ) as usize;
+                            if dst >= writers.len() {
+                                let _ = ev_tx.send(Event::Fail(
+                                    w,
+                                    FailureCause::Protocol(format!("DATA for bad rank {dst}")),
+                                ));
+                                return;
+                            }
+                            // Routed verbatim. A write failure means *dst*
+                            // died; dst's own reader reports that as EOF,
+                            // so it is not this stream's failure.
+                            let mut ws = writers[dst].lock().unwrap();
+                            let _ = wire::write_frame(&mut *ws, kind::DATA, &payload);
+                        }
+                        kind::DONE => match wire::decode_done(&payload) {
+                            Ok((rank, c, st)) if rank == w => {
+                                let _ = ev_tx.send(Event::Done(w, c, st));
+                            }
+                            Ok((rank, ..)) => {
+                                let _ = ev_tx.send(Event::Fail(
+                                    w,
+                                    FailureCause::Protocol(format!(
+                                        "DONE claims rank {rank} on rank {w}'s stream"
+                                    )),
+                                ));
+                                return;
+                            }
+                            Err(e) => {
+                                let _ = ev_tx.send(Event::Fail(
+                                    w,
+                                    FailureCause::Protocol(format!("bad DONE: {e:#}")),
+                                ));
+                                return;
+                            }
+                        },
+                        kind::BEAT => {
+                            let _ = ev_tx.send(Event::Beat(w));
+                        }
+                        kind::ERROR => {
+                            let cause = match wire::decode_error(&payload) {
+                                Ok((_, msg)) => FailureCause::Worker(msg),
+                                Err(e) => FailureCause::Protocol(format!("bad ERROR: {e:#}")),
+                            };
+                            let _ = ev_tx.send(Event::Fail(w, cause));
+                            return;
+                        }
+                        k => {
+                            let _ = ev_tx.send(Event::Fail(
+                                w,
+                                FailureCause::Protocol(format!("unexpected frame kind {k}")),
+                            ));
+                            return;
+                        }
+                    }
+                }
+            });
+        }
+        drop(ev_tx);
+
+        let mut last_seen = vec![Instant::now(); nranks];
+        let mut results: Vec<Option<(Dense, RankStats)>> = (0..nranks).map(|_| None).collect();
+        let mut n_done = 0;
+        let mut failure: Option<RankFailure> = None;
+        while n_done < nranks {
+            match ev_rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(Event::Done(w, c, st)) => {
+                    last_seen[w] = Instant::now();
+                    if results[w].is_none() {
+                        results[w] = Some((c, st));
+                        n_done += 1;
+                    }
+                }
+                Ok(Event::Beat(w)) => last_seen[w] = Instant::now(),
+                Ok(Event::Fail(w, cause)) => {
+                    failure = Some(RankFailure { rank: w, cause });
+                    break;
+                }
+                Ok(Event::Eof(w, msg)) => {
+                    // EOF after DONE is the worker exiting normally.
+                    if results[w].is_none() {
+                        failure =
+                            Some(RankFailure { rank: w, cause: FailureCause::Disconnected(msg) });
+                        break;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    if let Some(w) = results.iter().position(Option::is_none) {
+                        failure = Some(RankFailure {
+                            rank: w,
+                            cause: FailureCause::Disconnected("all streams closed".into()),
+                        });
+                    }
+                    break;
+                }
+            }
+            if failure.is_none() {
+                if let Some(w) = (0..nranks)
+                    .find(|&w| results[w].is_none() && last_seen[w].elapsed() > popts.timeout)
+                {
+                    failure = Some(RankFailure {
+                        rank: w,
+                        cause: FailureCause::HeartbeatTimeout(popts.timeout),
+                    });
+                    break;
+                }
+            }
+        }
+        // Kill every child before the scope joins its reader threads: the
+        // sockets close, every blocked `read_frame` returns EOF, and the
+        // scope can exit instead of deadlocking. On success the children
+        // have already exited and this is a no-op.
+        kill_all(&mut children);
+        match failure {
+            Some(f) => Err(f),
+            None => Ok(results.into_iter().map(|r| r.expect("counted done")).collect()),
+        }
+    });
+    reap(&mut children);
+    let results = collected?;
+
+    let mut c_global = Dense::zeros(part.n, n_dense);
+    let mut per_rank = Vec::with_capacity(nranks);
+    for (rank, (c_local, stats)) in results.into_iter().enumerate() {
+        let (r0, r1) = part.range(rank);
+        if c_local.nrows != r1 - r0 || c_local.ncols != n_dense {
+            return Err(fail(
+                rank,
+                FailureCause::Protocol(format!(
+                    "C block shape {}x{}, expected {}x{n_dense}",
+                    c_local.nrows,
+                    c_local.ncols,
+                    r1 - r0
+                )),
+            ));
+        }
+        c_global.data[r0 * n_dense..r1 * n_dense].copy_from_slice(&c_local.data);
+        per_rank.push(stats);
+    }
+    Ok((c_global, ExecStats { per_rank, wall_secs: t0.elapsed().as_secs_f64() }))
+}
+
+fn kill_all(children: &mut [Child]) {
+    for c in children.iter_mut() {
+        let _ = c.kill();
+    }
+}
+
+/// Reap with a short grace period, then force-kill: no zombies, bounded
+/// shutdown on every path.
+fn reap(children: &mut Vec<Child>) {
+    let deadline = Instant::now() + Duration::from_secs(2);
+    for c in children.iter_mut() {
+        loop {
+            match c.try_wait() {
+                Ok(Some(_)) => break,
+                Ok(None) if Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(10))
+                }
+                _ => {
+                    let _ = c.kill();
+                    let _ = c.wait();
+                    break;
+                }
+            }
+        }
+    }
+    children.clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_opts() {
+        let o = ProcOpts::default();
+        assert_eq!(o.timeout, Duration::from_secs(30));
+        assert!(o.worker_exe.is_none());
+        assert!(o.crash_rank.is_none());
+    }
+
+    #[test]
+    fn failure_display_is_structured() {
+        let f = RankFailure {
+            rank: 3,
+            cause: FailureCause::HeartbeatTimeout(Duration::from_secs(10)),
+        };
+        let s = f.to_string();
+        assert!(s.contains("rank 3"), "{s}");
+        assert!(s.contains("10.0s"), "{s}");
+        let f = RankFailure { rank: 1, cause: FailureCause::Worker("inbox closed".into()) };
+        assert!(f.to_string().contains("inbox closed"));
+        let f = RankFailure { rank: 0, cause: FailureCause::Disconnected("eof".into()) };
+        assert!(f.to_string().contains("disconnected"));
+        // RankFailure is a std error, so `?` and anyhow interop work.
+        let _: &dyn std::error::Error = &f;
+    }
+}

@@ -259,6 +259,52 @@ impl DistSpmm {
         )
     }
 
+    /// Execute on the multi-process backend (`--backend proc`): one OS
+    /// process per rank, messages over the control plane's socket queue
+    /// ([`crate::runtime::multiproc`]). Runs the same frozen per-rank
+    /// program as [`DistSpmm::execute_with`], so C is bitwise-identical
+    /// to the thread backend's; failures surface as a structured
+    /// [`crate::runtime::multiproc::RankFailure`] instead of hanging.
+    pub fn execute_proc(
+        &self,
+        b: &Dense,
+        opts: &exec::ExecOpts,
+        popts: &crate::runtime::multiproc::ProcOpts,
+    ) -> Result<(Dense, ExecStats), crate::runtime::multiproc::RankFailure> {
+        crate::runtime::multiproc::run(
+            &self.part,
+            &self.plan,
+            &self.blocks,
+            self.sched.as_ref(),
+            &self.topo,
+            b,
+            opts,
+            popts,
+        )
+    }
+
+    /// Fused SDDMM→SpMM on the multi-process backend; proc counterpart of
+    /// [`DistSpmm::execute_fused_with`].
+    pub fn execute_fused_proc(
+        &self,
+        x: &Dense,
+        y: &Dense,
+        opts: &exec::ExecOpts,
+        popts: &crate::runtime::multiproc::ProcOpts,
+    ) -> Result<(Dense, ExecStats), crate::runtime::multiproc::RankFailure> {
+        crate::runtime::multiproc::run_fused(
+            &self.part,
+            &self.plan,
+            &self.blocks,
+            self.sched.as_ref(),
+            &self.topo,
+            x,
+            y,
+            opts,
+            popts,
+        )
+    }
+
     /// Per-rank compute seconds for the pre-communication stage (local
     /// diagonal SpMM + row-based remote partials) and the
     /// post-communication stage (column-based remote SpMM + aggregation).

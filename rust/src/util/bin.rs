@@ -1,0 +1,295 @@
+//! Little-endian binary IO primitives shared by the on-disk plan cache
+//! ([`crate::plan::cache`]) and the multiproc wire format
+//! (`exec::wire`). Both serialize the same objects — CSR sub-blocks,
+//! dense payloads, length-prefixed index lists — so the encoding lives
+//! in one place: every multi-byte integer is little-endian, floats
+//! travel as raw IEEE-754 bits (`to_bits`/`from_bits`, so values
+//! roundtrip bitwise including NaN payloads), and every variable-length
+//! read is bounded by a caller-provided element budget so truncated or
+//! corrupt input fails with a clean error instead of attempting a huge
+//! allocation.
+
+use crate::dense::Dense;
+use crate::sparse::Csr;
+use anyhow::{bail, Result};
+use std::io::{Read, Write};
+
+// ------------------------------------------------------------- scalars ----
+
+pub fn w_u8<W: Write>(w: &mut W, v: u8) -> Result<()> {
+    w.write_all(&[v])?;
+    Ok(())
+}
+
+pub fn r_u8<R: Read>(r: &mut R) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+pub fn w_u32<W: Write>(w: &mut W, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+pub fn r_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub fn w_u64<W: Write>(w: &mut W, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+pub fn r_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+pub fn w_f32<W: Write>(w: &mut W, v: f32) -> Result<()> {
+    w.write_all(&v.to_bits().to_le_bytes())?;
+    Ok(())
+}
+
+pub fn r_f32<R: Read>(r: &mut R) -> Result<f32> {
+    Ok(f32::from_bits(r_u32(r)?))
+}
+
+pub fn w_f64<W: Write>(w: &mut W, v: f64) -> Result<()> {
+    w.write_all(&v.to_bits().to_le_bytes())?;
+    Ok(())
+}
+
+pub fn r_f64<R: Read>(r: &mut R) -> Result<f64> {
+    Ok(f64::from_bits(r_u64(r)?))
+}
+
+// ------------------------------------------- length-prefixed sequences ----
+
+/// Bounds check shared by every length-prefixed read: `len` elements were
+/// claimed, `max_elems` can actually exist (each element occupies ≥ 4
+/// bytes in every on-disk / on-wire encoding, so callers derive the bound
+/// from `bytes / 4`).
+fn check_len(len: u64, max_elems: usize, what: &str) -> Result<usize> {
+    if len > max_elems as u64 {
+        bail!("corrupt input: {what} length {len} exceeds available bytes");
+    }
+    Ok(len as usize)
+}
+
+pub fn w_str<W: Write>(w: &mut W, s: &str) -> Result<()> {
+    w_u64(w, s.len() as u64)?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+pub fn r_str<R: Read>(r: &mut R, max_bytes: usize) -> Result<String> {
+    let len = r_u64(r)?;
+    if len > max_bytes as u64 {
+        bail!("corrupt input: string length {len} exceeds available bytes");
+    }
+    let mut b = vec![0u8; len as usize];
+    r.read_exact(&mut b)?;
+    Ok(String::from_utf8(b)?)
+}
+
+pub fn w_u32s<W: Write>(w: &mut W, xs: &[u32]) -> Result<()> {
+    w_u64(w, xs.len() as u64)?;
+    for &x in xs {
+        w_u32(w, x)?;
+    }
+    Ok(())
+}
+
+pub fn r_u32s<R: Read>(r: &mut R, max_elems: usize) -> Result<Vec<u32>> {
+    let len = check_len(r_u64(r)?, max_elems, "u32 list")?;
+    let mut xs = vec![0u32; len];
+    for x in xs.iter_mut() {
+        *x = r_u32(r)?;
+    }
+    Ok(xs)
+}
+
+pub fn w_u64s<W: Write>(w: &mut W, xs: &[u64]) -> Result<()> {
+    w_u64(w, xs.len() as u64)?;
+    for &x in xs {
+        w_u64(w, x)?;
+    }
+    Ok(())
+}
+
+pub fn r_u64s<R: Read>(r: &mut R, max_elems: usize) -> Result<Vec<u64>> {
+    let len = check_len(r_u64(r)?, max_elems, "u64 list")?;
+    let mut xs = vec![0u64; len];
+    for x in xs.iter_mut() {
+        *x = r_u64(r)?;
+    }
+    Ok(xs)
+}
+
+pub fn w_f32s<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
+    w_u64(w, xs.len() as u64)?;
+    for &x in xs {
+        w_f32(w, x)?;
+    }
+    Ok(())
+}
+
+pub fn r_f32s<R: Read>(r: &mut R, max_elems: usize) -> Result<Vec<f32>> {
+    let len = check_len(r_u64(r)?, max_elems, "f32 list")?;
+    let mut xs = vec![0f32; len];
+    for x in xs.iter_mut() {
+        *x = r_f32(r)?;
+    }
+    Ok(xs)
+}
+
+// ------------------------------------------------------------ matrices ----
+
+/// CSR encoding: `nrows | ncols | nnz | indptr[nrows+1] | indices[nnz] |
+/// data[nnz]`. Kept byte-identical to the original plan-cache layout so
+/// existing cache entries stay readable (PLAN_VERSION unchanged).
+pub fn w_csr<W: Write>(w: &mut W, m: &Csr) -> Result<()> {
+    w_u64(w, m.nrows as u64)?;
+    w_u64(w, m.ncols as u64)?;
+    w_u64(w, m.nnz() as u64)?;
+    for &v in &m.indptr {
+        w_u64(w, v)?;
+    }
+    for &c in &m.indices {
+        w_u32(w, c)?;
+    }
+    for &v in &m.data {
+        w_f32(w, v)?;
+    }
+    Ok(())
+}
+
+/// `max_elems` bounds every length field against the input's actual size
+/// (each element occupies ≥ 4 bytes), so a truncated or corrupt stream
+/// fails with a clean error instead of attempting a huge allocation. The
+/// decoded matrix is structurally validated before being returned.
+pub fn r_csr<R: Read>(r: &mut R, max_elems: usize) -> Result<Csr> {
+    let nrows = r_u64(r)? as usize;
+    let ncols = r_u64(r)? as usize;
+    let nnz = r_u64(r)? as usize;
+    if nrows > max_elems || nnz > max_elems {
+        bail!("corrupt input: csr dims {nrows}x{ncols} nnz {nnz} exceed available bytes");
+    }
+    let mut indptr = vec![0u64; nrows + 1];
+    for v in indptr.iter_mut() {
+        *v = r_u64(r)?;
+    }
+    let mut indices = vec![0u32; nnz];
+    for v in indices.iter_mut() {
+        *v = r_u32(r)?;
+    }
+    let mut data = vec![0f32; nnz];
+    for v in data.iter_mut() {
+        *v = r_f32(r)?;
+    }
+    let m = Csr { nrows, ncols, indptr, indices, data };
+    m.validate()?;
+    Ok(m)
+}
+
+/// Dense encoding: `nrows | ncols | data[nrows*ncols]` (no separate
+/// length word — the shape is the length).
+pub fn w_dense<W: Write>(w: &mut W, d: &Dense) -> Result<()> {
+    w_u64(w, d.nrows as u64)?;
+    w_u64(w, d.ncols as u64)?;
+    for &v in &d.data {
+        w_f32(w, v)?;
+    }
+    Ok(())
+}
+
+pub fn r_dense<R: Read>(r: &mut R, max_elems: usize) -> Result<Dense> {
+    let nrows = r_u64(r)? as usize;
+    let ncols = r_u64(r)? as usize;
+    let elems = nrows
+        .checked_mul(ncols)
+        .ok_or_else(|| anyhow::anyhow!("corrupt input: dense shape {nrows}x{ncols} overflows"))?;
+    if elems > max_elems {
+        bail!("corrupt input: dense shape {nrows}x{ncols} exceeds available bytes");
+    }
+    let mut data = vec![0f32; elems];
+    for v in data.iter_mut() {
+        *v = r_f32(r)?;
+    }
+    Ok(Dense { nrows, ncols, data })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    #[test]
+    fn scalar_roundtrips() {
+        let mut buf = Vec::new();
+        w_u8(&mut buf, 7).unwrap();
+        w_u32(&mut buf, 0xdead_beef).unwrap();
+        w_u64(&mut buf, u64::MAX - 1).unwrap();
+        w_f32(&mut buf, -0.0).unwrap();
+        w_f64(&mut buf, f64::NAN).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(r_u8(&mut r).unwrap(), 7);
+        assert_eq!(r_u32(&mut r).unwrap(), 0xdead_beef);
+        assert_eq!(r_u64(&mut r).unwrap(), u64::MAX - 1);
+        // Bitwise float transport: -0.0 and NaN survive exactly.
+        assert_eq!(r_f32(&mut r).unwrap().to_bits(), (-0.0f32).to_bits());
+        assert!(r_f64(&mut r).unwrap().is_nan());
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn sequence_roundtrips() {
+        let mut buf = Vec::new();
+        w_str(&mut buf, "tsubame4").unwrap();
+        w_u32s(&mut buf, &[3, 1, 4, 1, 5]).unwrap();
+        w_u64s(&mut buf, &[0, u64::MAX]).unwrap();
+        w_f32s(&mut buf, &[1.5, -2.25]).unwrap();
+        let n = buf.len();
+        let mut r = &buf[..];
+        assert_eq!(r_str(&mut r, n).unwrap(), "tsubame4");
+        assert_eq!(r_u32s(&mut r, n / 4).unwrap(), vec![3, 1, 4, 1, 5]);
+        assert_eq!(r_u64s(&mut r, n / 4).unwrap(), vec![0, u64::MAX]);
+        assert_eq!(r_f32s(&mut r, n / 4).unwrap(), vec![1.5, -2.25]);
+    }
+
+    #[test]
+    fn oversized_length_rejected() {
+        let mut buf = Vec::new();
+        w_u64(&mut buf, 1 << 60).unwrap(); // absurd length claim
+        let mut r = &buf[..];
+        assert!(r_u32s(&mut r, buf.len() / 4).is_err());
+        let mut r2 = &buf[..];
+        assert!(r_str(&mut r2, buf.len()).is_err());
+    }
+
+    #[test]
+    fn csr_and_dense_roundtrip() {
+        let mut coo = Coo::new(4, 5);
+        coo.push(0, 1, 1.5);
+        coo.push(2, 4, -3.0);
+        coo.push(3, 0, 0.25);
+        let m = coo.to_csr();
+        let d = Dense::from_fn(3, 4, |i, j| (i * 4 + j) as f32 - 5.5);
+        let mut buf = Vec::new();
+        w_csr(&mut buf, &m).unwrap();
+        w_dense(&mut buf, &d).unwrap();
+        let bound = buf.len() / 4;
+        let mut r = &buf[..];
+        assert_eq!(r_csr(&mut r, bound).unwrap(), m);
+        assert_eq!(r_dense(&mut r, bound).unwrap(), d);
+        assert!(r.is_empty());
+        // Truncated input fails cleanly.
+        let mut short = &buf[..buf.len() / 2];
+        let res = r_csr(&mut short, bound).and_then(|_| r_dense(&mut short, bound));
+        assert!(res.is_err());
+    }
+}

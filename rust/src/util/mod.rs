@@ -4,6 +4,7 @@
 //! These replace crates (rand, criterion, proptest, serde/toml) that are not
 //! available in the offline build image — see DESIGN.md §1.
 
+pub mod bin;
 pub mod cli;
 pub mod proptest;
 pub mod rng;

@@ -132,10 +132,19 @@ impl Config {
 }
 
 fn strip_comment(line: &str) -> &str {
-    // Respect '#' inside quoted strings.
+    // Respect '#' inside quoted strings. A backslash escapes the next
+    // character inside a string, so `\"` does not close it — this scanner
+    // and the string lexer in `parse_string` must agree on that, or a
+    // value like `"say \"hi\" # not a comment"` is truncated mid-string.
     let mut in_str = false;
+    let mut escaped = false;
     for (i, c) in line.char_indices() {
+        if escaped {
+            escaped = false;
+            continue;
+        }
         match c {
+            '\\' if in_str => escaped = true,
             '"' => in_str = !in_str,
             '#' if !in_str => return &line[..i],
             _ => {}
@@ -144,12 +153,36 @@ fn strip_comment(line: &str) -> &str {
     line
 }
 
+/// Lex a double-quoted string with backslash escapes (`\"`, `\\`, `\n`,
+/// `\t`), requiring the closing quote to end the input.
+fn parse_string(s: &str) -> Result<Value, String> {
+    debug_assert!(s.starts_with('"'));
+    let mut out = String::new();
+    let mut chars = s[1..].chars();
+    loop {
+        match chars.next() {
+            None => return Err(format!("unterminated string {s:?}")),
+            Some('"') => break,
+            Some('\\') => match chars.next() {
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some(c) => return Err(format!("unknown escape \\{c} in {s:?}")),
+                None => return Err(format!("unterminated string {s:?}")),
+            },
+            Some(c) => out.push(c),
+        }
+    }
+    if chars.next().is_some() {
+        return Err(format!("trailing characters after string {s:?}"));
+    }
+    Ok(Value::Str(out))
+}
+
 fn parse_value(s: &str) -> Result<Value, String> {
     if s.starts_with('"') {
-        if s.len() < 2 || !s.ends_with('"') {
-            return Err(format!("unterminated string {s:?}"));
-        }
-        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+        return parse_string(s);
     }
     if s == "true" {
         return Ok(Value::Bool(true));
@@ -179,14 +212,21 @@ fn parse_value(s: &str) -> Result<Value, String> {
     Err(format!("cannot parse value {s:?}"))
 }
 
-/// Split a comma-separated list, respecting nested brackets and strings.
+/// Split a comma-separated list, respecting nested brackets and strings
+/// (with the same `\"` escape convention as [`parse_string`]).
 fn split_top_level(s: &str) -> Vec<&str> {
     let mut parts = Vec::new();
     let mut depth = 0usize;
     let mut in_str = false;
+    let mut escaped = false;
     let mut start = 0usize;
     for (i, c) in s.char_indices() {
+        if escaped {
+            escaped = false;
+            continue;
+        }
         match c {
+            '\\' if in_str => escaped = true,
             '"' => in_str = !in_str,
             '[' if !in_str => depth += 1,
             ']' if !in_str => depth = depth.saturating_sub(1),
@@ -246,6 +286,44 @@ mod tests {
     fn hash_inside_string_kept() {
         let c = Config::parse("tag = \"a#b\"\n").unwrap();
         assert_eq!(c.str_or("tag", ""), "a#b");
+    }
+
+    #[test]
+    fn escaped_quote_and_hash_inside_string() {
+        // Satellite regression (PR 6): `\"` must not toggle the comment
+        // stripper's string state, and `#` inside the string must survive.
+        let c = Config::parse(
+            "name = \"say \\\"hi\\\" # not a comment\"  # real comment\n",
+        )
+        .unwrap();
+        assert_eq!(c.str_or("name", ""), "say \"hi\" # not a comment");
+    }
+
+    #[test]
+    fn escape_sequences_unescaped() {
+        let c = Config::parse("path = \"a\\\\b\"\ntab = \"x\\ty\"\nnl = \"p\\nq\"\n")
+            .unwrap();
+        assert_eq!(c.str_or("path", ""), "a\\b");
+        assert_eq!(c.str_or("tab", ""), "x\ty");
+        assert_eq!(c.str_or("nl", ""), "p\nq");
+    }
+
+    #[test]
+    fn escaped_quotes_inside_arrays() {
+        let c = Config::parse("xs = [\"a\\\"b\", \"c,d\"]\n").unwrap();
+        let xs = c.get("xs").unwrap().as_array().unwrap();
+        assert_eq!(xs[0].as_str(), Some("a\"b"));
+        assert_eq!(xs[1].as_str(), Some("c,d"));
+    }
+
+    #[test]
+    fn bad_strings_error() {
+        // An escaped final quote leaves the string unterminated.
+        assert!(Config::parse("s = \"oops\\\"\n").is_err());
+        // Unknown escapes are rejected, not silently passed through.
+        assert!(Config::parse("s = \"a\\qb\"\n").is_err());
+        // Junk after the closing quote is rejected.
+        assert!(Config::parse("s = \"ab\"cd\n").is_err());
     }
 
     #[test]

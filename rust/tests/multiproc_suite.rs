@@ -1,0 +1,154 @@
+//! Differential multiprocess suite: the `--backend proc` control plane
+//! pinned **bitwise** against the in-process thread executor on the same
+//! frozen plans. Both backends run the identical serialized step program
+//! and fold partial C blocks in the canonical (origin, row) order, so C
+//! must match bit for bit — and the measured volume matrices (decoded
+//! from worker `DONE` frames) must agree too. The last test kills a
+//! worker mid-run and asserts the parent reports a structured
+//! [`RankFailure`] within the deadline instead of hanging.
+//!
+//! Worker processes are this crate's own binary (re-entered through
+//! `maybe_run_worker`), located via `CARGO_BIN_EXE_shiro`.
+
+use std::time::{Duration, Instant};
+
+use shiro::bench::int_matrix;
+use shiro::comm::Strategy;
+use shiro::cover::Solver;
+use shiro::dense::Dense;
+use shiro::exec::kernel::NativeKernel;
+use shiro::exec::ExecOpts;
+use shiro::partition::Partitioner;
+use shiro::runtime::multiproc::{FailureCause, ProcOpts};
+use shiro::spmm::DistSpmm;
+use shiro::topology::Topology;
+
+fn popts() -> ProcOpts {
+    ProcOpts {
+        timeout: Duration::from_secs(60),
+        worker_exe: Some(env!("CARGO_BIN_EXE_shiro").into()),
+        crash_rank: None,
+    }
+}
+
+fn int_xy(n: usize, k: usize) -> (Dense, Dense) {
+    let x = Dense::from_fn(n, k, |i, j| ((i * 5 + j * 3) % 7) as f32 - 3.0);
+    let y = Dense::from_fn(n, k, |i, j| ((i * 3 + j * 11) % 7) as f32 - 3.0);
+    (x, y)
+}
+
+#[test]
+fn proc_matches_thread_bitwise_across_strategies() {
+    let a = int_matrix(128, 1500, 42);
+    let b = Dense::from_fn(128, 8, |i, j| ((i * 7 + j * 5) % 9) as f32 - 4.0);
+    let opts = ExecOpts::default();
+    for strategy in
+        [Strategy::Block, Strategy::Column, Strategy::Row, Strategy::Joint(Solver::Koenig)]
+    {
+        // Block mode is defined flat-only in the paper; the rest route
+        // hierarchically so the proc backend carries CAgg flows too.
+        let hier = strategy != Strategy::Block;
+        let d = DistSpmm::plan(&a, strategy, Topology::tsubame4(4), hier);
+        let (c_thread, s_thread) = d.execute_with(&b, &NativeKernel, &opts);
+        let (c_proc, s_proc) = d
+            .execute_proc(&b, &opts, &popts())
+            .unwrap_or_else(|f| panic!("{strategy:?}: proc backend failed: {f}"));
+        assert_eq!(c_thread.data, c_proc.data, "{strategy:?}: C bits differ across backends");
+        assert_eq!(
+            s_thread.measured_volume(),
+            s_proc.measured_volume(),
+            "{strategy:?}: measured volume differs across backends"
+        );
+    }
+}
+
+#[test]
+fn proc_matches_thread_across_partitioners_and_rank_counts() {
+    let a = int_matrix(160, 1800, 7);
+    let b = Dense::from_fn(160, 4, |i, j| ((i * 3 + j * 13) % 11) as f32 - 5.0);
+    for partitioner in Partitioner::ALL {
+        for ranks in [1usize, 2, 4] {
+            let d = DistSpmm::plan_partitioned(
+                &a,
+                Strategy::Joint(Solver::Koenig),
+                Topology::tsubame4(ranks),
+                ranks > 1,
+                &shiro::plan::PlanParams::default(),
+                partitioner,
+            );
+            // Overlap on (pipelined) and off (phase-ordered): arrival order
+            // differs, but the canonical fold keeps both bitwise-stable.
+            for opts in [ExecOpts::default(), ExecOpts::sequential()] {
+                let (c_thread, _) = d.execute_with(&b, &NativeKernel, &opts);
+                let (c_proc, _) =
+                    d.execute_proc(&b, &opts, &popts()).unwrap_or_else(|f| {
+                        panic!("{}/{ranks} ranks: proc failed: {f}", partitioner.name())
+                    });
+                assert_eq!(
+                    c_thread.data,
+                    c_proc.data,
+                    "{}/{ranks} ranks/{opts:?}: C bits differ",
+                    partitioner.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn proc_matches_thread_across_groups() {
+    // Eight ranks on tsubame4 span two groups: inter-group B flows and
+    // hierarchical C aggregation all cross the wire.
+    let a = int_matrix(192, 2200, 19);
+    let b = Dense::from_fn(192, 8, |i, j| ((i * 11 + j * 7) % 9) as f32 - 4.0);
+    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(8), true);
+    let opts = ExecOpts::default();
+    let (c_thread, s_thread) = d.execute_with(&b, &NativeKernel, &opts);
+    let (c_proc, s_proc) = d.execute_proc(&b, &opts, &popts()).expect("proc backend failed");
+    assert_eq!(c_thread.data, c_proc.data, "inter-group C bits differ");
+    assert_eq!(s_thread.measured_volume(), s_proc.measured_volume());
+    assert!(s_proc.measured_volume().total() > 0, "degenerate: nothing crossed the wire");
+}
+
+#[test]
+fn fused_proc_matches_thread_bitwise() {
+    // Fused SDDMM→SpMM ships X replicas as Msg::X frames; pin those too.
+    let a = int_matrix(128, 1400, 77);
+    let (x, y) = int_xy(128, 4);
+    for hier in [false, true] {
+        let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(4), hier);
+        let opts = ExecOpts::default();
+        let (c_thread, _) = d.execute_fused_with(&x, &y, &NativeKernel, &opts);
+        let (c_proc, _) = d
+            .execute_fused_proc(&x, &y, &opts, &popts())
+            .unwrap_or_else(|f| panic!("hier={hier}: fused proc failed: {f}"));
+        assert_eq!(c_thread.data, c_proc.data, "hier={hier}: fused C bits differ");
+    }
+}
+
+#[test]
+fn worker_kill_reports_rank_failure() {
+    // Abort rank 1 right after it decodes its job: the parent must surface
+    // a structured RankFailure for that rank well before the timeout —
+    // never hang, never exit(1) through a panic in a routing thread.
+    let a = int_matrix(128, 1500, 3);
+    let b = Dense::from_fn(128, 4, |i, j| ((i + j) % 5) as f32);
+    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(4), true);
+    let popts = ProcOpts { timeout: Duration::from_secs(10), crash_rank: Some(1), ..popts() };
+    let t0 = Instant::now();
+    let err = d
+        .execute_proc(&b, &ExecOpts::default(), &popts)
+        .expect_err("run with a killed worker must fail");
+    let wall = t0.elapsed();
+    assert_eq!(err.rank, 1, "failure must be attributed to the killed rank: {err}");
+    assert!(
+        matches!(
+            err.cause,
+            FailureCause::Disconnected(_)
+                | FailureCause::HeartbeatTimeout(_)
+                | FailureCause::Worker(_)
+        ),
+        "unexpected cause: {err}"
+    );
+    assert!(wall < Duration::from_secs(30), "failure took {wall:?} — parent nearly hung");
+}
