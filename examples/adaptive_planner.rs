@@ -12,7 +12,7 @@ use shiro::metrics::Table;
 use shiro::partition::{split_1d, RowPartition};
 use shiro::plan::{self, cache::PlanCache, PlanParams, Shape};
 use shiro::sparse::gen;
-use shiro::spmm::DistSpmm;
+use shiro::spmm::{ExecRequest, PlanSpec};
 use shiro::topology::Topology;
 use shiro::util::{cli::Args, human_bytes, human_secs, rng::Rng};
 
@@ -69,10 +69,16 @@ fn main() {
     );
 
     // The mixed plan drops into the existing engine unchanged.
-    let d = DistSpmm::plan(&a, Strategy::Adaptive, topo.clone(), true);
+    let spec = PlanSpec::new(topo.clone())
+        .strategy(Strategy::Adaptive)
+        .params(params.clone());
+    let d = spec.plan(&a);
     let mut rng = Rng::new(5);
     let b = Dense::random(n, n_dense, &mut rng);
-    let (c, stats) = d.execute(&b, &NativeKernel);
+    let (c, stats) = d
+        .execute(&ExecRequest::spmm(&b).kernel(&NativeKernel))
+        .expect("thread-backend SpMM")
+        .into_dense();
     let want = a.spmm(&b);
     let err = want.diff_norm(&c) / want.max_abs() as f64;
     println!(
@@ -87,10 +93,10 @@ fn main() {
     let cache_dir = std::env::temp_dir().join("shiro_plan_cache_example");
     let mut cache = PlanCache::with_dir(&cache_dir);
     let t0 = std::time::Instant::now();
-    let _ = DistSpmm::plan_adaptive_cached(&a, topo.clone(), true, &params, &mut cache);
+    let _ = spec.plan_cached(&a, &mut cache);
     let cold = t0.elapsed().as_secs_f64();
     let t0 = std::time::Instant::now();
-    let _ = DistSpmm::plan_adaptive_cached(&a, topo.clone(), true, &params, &mut cache);
+    let _ = spec.plan_cached(&a, &mut cache);
     let warm = t0.elapsed().as_secs_f64();
     println!(
         "\nplan cache: cold {} → warm {} (hits {}, misses {}, dir {})",

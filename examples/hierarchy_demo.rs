@@ -9,7 +9,7 @@ use shiro::comm::Strategy;
 use shiro::cover::Solver;
 use shiro::metrics::Table;
 use shiro::sparse::gen;
-use shiro::spmm::DistSpmm;
+use shiro::spmm::PlanSpec;
 use shiro::topology::Topology;
 use shiro::util::{cli::Args, human_bytes, human_secs};
 
@@ -27,7 +27,10 @@ fn main() {
     for topo in [Topology::tsubame4(ranks), Topology::aurora(ranks)] {
         let mut flat_time = 0.0;
         for hier in [false, true] {
-            let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), topo.clone(), hier);
+            let d = PlanSpec::new(topo.clone())
+                .strategy(Strategy::Joint(Solver::Koenig))
+                .hierarchical(hier)
+                .plan(&a);
             let rep = d.simulate(n_dense);
             if !hier {
                 flat_time = rep.total;
@@ -51,7 +54,7 @@ fn main() {
 
     // Stage-level breakdown on TSUBAME: the complementary overlap.
     let topo = Topology::tsubame4(ranks);
-    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), topo, true);
+    let d = PlanSpec::new(topo).strategy(Strategy::Joint(Solver::Koenig)).plan(&a);
     let rep = d.simulate(n_dense);
     println!("TSUBAME stage breakdown (Alg. 1 overlap):");
     for (name, secs) in &rep.per_stage {

@@ -12,7 +12,7 @@ use shiro::exec::kernel::NativeKernel;
 use shiro::metrics::{load_imbalance, reduction_pct};
 use shiro::partition::{rank_nnz, Partitioner};
 use shiro::sparse::gen;
-use shiro::spmm::DistSpmm;
+use shiro::spmm::{ExecRequest, PlanSpec};
 use shiro::topology::Topology;
 use shiro::util::{human_bytes, human_secs, rng::Rng};
 
@@ -26,10 +26,12 @@ fn main() {
     let topo = Topology::tsubame4(8);
     let n_dense = 32;
 
-    // Plan under three strategies.
-    let col = DistSpmm::plan(&a, Strategy::Column, topo.clone(), false);
-    let joint = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), topo.clone(), false);
-    let hier = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), topo.clone(), true);
+    // Plan under three strategies: `PlanSpec` is the one planning entry
+    // point (joint + hierarchical are its defaults).
+    let col = PlanSpec::new(topo.clone()).strategy(Strategy::Column).flat().plan(&a);
+    let joint =
+        PlanSpec::new(topo.clone()).strategy(Strategy::Joint(Solver::Koenig)).flat().plan(&a);
+    let hier = PlanSpec::new(topo.clone()).plan(&a);
 
     let vc = col.plan.total_volume(n_dense);
     let vj = joint.plan.total_volume(n_dense);
@@ -53,7 +55,10 @@ fn main() {
     // Execute for real on 8 in-process ranks and verify.
     let mut rng = Rng::new(7);
     let b = Dense::random(n, n_dense, &mut rng);
-    let (c, stats) = hier.execute(&b, &NativeKernel);
+    let (c, stats) = hier
+        .execute(&ExecRequest::spmm(&b).kernel(&NativeKernel))
+        .expect("thread-backend SpMM")
+        .into_dense();
     let want = a.spmm(&b);
     let err = want.diff_norm(&c) / want.max_abs() as f64;
     println!("\nexecuted on 8 in-process ranks: rel err vs serial = {err:.2e}");
@@ -66,14 +71,10 @@ fn main() {
 
     // Load-aware partitioning (`--partitioner nnz-balanced` on the CLI):
     // boundaries follow the nnz prefix sum, shrinking the straggler rank.
-    let nnz_part = DistSpmm::plan_partitioned(
-        &a,
-        Strategy::Joint(Solver::Koenig),
-        topo.clone(),
-        true,
-        &shiro::plan::PlanParams { n_dense, ..Default::default() },
-        Partitioner::NnzBalanced,
-    );
+    let nnz_part = PlanSpec::new(topo.clone())
+        .params(shiro::plan::PlanParams { n_dense, ..Default::default() })
+        .partitioner(Partitioner::NnzBalanced)
+        .plan(&a);
     let bal_loads = rank_nnz(&a, &hier.part);
     let nnz_loads = rank_nnz(&a, &nnz_part.part);
     println!(
@@ -83,12 +84,15 @@ fn main() {
         load_imbalance(&bal_loads),
         load_imbalance(&nnz_loads)
     );
-    let (c2, _) = nnz_part.execute(&b, &NativeKernel);
+    let (c2, _) = nnz_part
+        .execute(&ExecRequest::spmm(&b).kernel(&NativeKernel))
+        .expect("thread-backend SpMM")
+        .into_dense();
     assert!(want.diff_norm(&c2) / want.max_abs() as f64 < 1e-3);
 
     // And simulate the same plan at paper scale (128 GPUs).
     let topo128 = Topology::tsubame4(128);
-    let big = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), topo128, true);
+    let big = PlanSpec::new(topo128).plan(&a);
     let rep = big.simulate(n_dense);
     println!("\nsimulated at 128 GPUs: {} per SpMM", human_secs(rep.total));
     for (name, secs) in &rep.per_stage {

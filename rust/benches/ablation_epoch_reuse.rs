@@ -25,7 +25,7 @@ use shiro::exec::kernel::NativeKernel;
 use shiro::gnn::{Gcn, GcnConfig, NativeDense};
 use shiro::metrics::Table;
 use shiro::sparse::gen;
-use shiro::spmm::DistSpmm;
+use shiro::spmm::{ExecRequest, PlanSpec};
 use shiro::topology::Topology;
 use shiro::util::cli::Args;
 
@@ -139,12 +139,18 @@ fn main() {
         // so different cover splits cannot hide behind rounding).
         let a = int_matrix(256, 256 * 8, 77);
         let b = Dense::from_fn(256, 8, |i, j| ((i * 5 + j * 3) % 7) as f32 - 3.0);
-        let fwd = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), topo.clone(), true);
-        let mirrored = fwd.plan_transpose();
-        let scratch =
-            DistSpmm::plan(&a.transpose(), Strategy::Joint(Solver::Koenig), topo, true);
-        let (got_m, _) = mirrored.execute(&b, &NativeKernel);
-        let (got_s, _) = scratch.execute(&b, &NativeKernel);
+        let spec = PlanSpec::new(topo).strategy(Strategy::Joint(Solver::Koenig));
+        let fwd = spec.plan(&a);
+        let mirrored = fwd.transposed();
+        let scratch = spec.plan(&a.transpose());
+        let (got_m, _) = mirrored
+            .execute(&ExecRequest::spmm(&b).kernel(&NativeKernel))
+            .expect("thread-backend SpMM")
+            .into_dense();
+        let (got_s, _) = scratch
+            .execute(&ExecRequest::spmm(&b).kernel(&NativeKernel))
+            .expect("thread-backend SpMM")
+            .into_dense();
         assert_eq!(got_m.data, got_s.data, "mirrored Aᵀ plan bits differ from scratch plan");
         assert_eq!(got_m.data, a.transpose().spmm(&b).data, "Aᵀ·B oracle mismatch");
 

@@ -29,7 +29,7 @@ use shiro::exec::kernel::NativeKernel;
 use shiro::exec::ExecStats;
 use shiro::metrics::{reduction_pct, Table};
 use shiro::sparse::{gen, Csr};
-use shiro::spmm::DistSpmm;
+use shiro::spmm::{DistSpmm, ExecRequest, PlanSpec};
 use shiro::topology::Topology;
 use shiro::util::cli::Args;
 use shiro::util::rng::Rng;
@@ -81,10 +81,22 @@ fn main() {
         let x = Dense::random(a.nrows, n_dense, &mut rng);
         let y = Dense::random(a.nrows, n_dense, &mut rng);
         for hier in [false, true] {
-            let d = DistSpmm::plan(a, Strategy::Joint(Solver::Koenig), topo.clone(), hier);
-            let (_, fused) = d.execute_fused(&x, &y, &NativeKernel);
-            let (_, sddmm) = d.execute_sddmm(&x, &y, &NativeKernel);
-            let (_, spmm) = d.execute(&y, &NativeKernel);
+            let d = PlanSpec::new(topo.clone())
+                .strategy(Strategy::Joint(Solver::Koenig))
+                .hierarchical(hier)
+                .plan(a);
+            let (_, fused) = d
+                .execute(&ExecRequest::fused(&x, &y).kernel(&NativeKernel))
+                .expect("thread-backend fused kernel")
+                .into_dense();
+            let (_, sddmm) = d
+                .execute(&ExecRequest::sddmm(&x, &y).kernel(&NativeKernel))
+                .expect("thread-backend SDDMM")
+                .into_sparse();
+            let (_, spmm) = d
+                .execute(&ExecRequest::spmm(&y).kernel(&NativeKernel))
+                .expect("thread-backend SpMM")
+                .into_dense();
             let gather = gather_bytes(&d);
             let two_pass = total(&sddmm) + total(&spmm) + gather;
             let b_equal = spmm.measured_b_volume() == sddmm.measured_b_volume();
@@ -141,10 +153,19 @@ fn main() {
         let e_want = a.sddmm(&xi, &yi);
         let c_want = e_want.spmm(&yi);
         for hier in [false, true] {
-            let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), topo.clone(), hier);
-            let (e, _) = d.execute_sddmm(&xi, &yi, &NativeKernel);
+            let d = PlanSpec::new(topo.clone())
+                .strategy(Strategy::Joint(Solver::Koenig))
+                .hierarchical(hier)
+                .plan(&a);
+            let (e, _) = d
+                .execute(&ExecRequest::sddmm(&xi, &yi))
+                .expect("thread-backend SDDMM")
+                .into_sparse();
             assert_eq!(e, e_want, "hier={hier}: SDDMM bits differ from oracle");
-            let (c, _) = d.execute_fused(&xi, &yi, &NativeKernel);
+            let (c, _) = d
+                .execute(&ExecRequest::fused(&xi, &yi))
+                .expect("thread-backend fused kernel")
+                .into_dense();
             assert_eq!(
                 c.data, c_want.data,
                 "hier={hier}: fused bits differ from oracle chain"

@@ -24,7 +24,7 @@ use shiro::sim::trace::{exec_to_chrome_json, to_chrome_json, trace};
 use shiro::sim::{hier_comm_stages, hier_comm_stages_sequential, simulate, SimJob};
 use shiro::sparse::datasets::spmm_datasets;
 use shiro::sparse::gen;
-use shiro::spmm::DistSpmm;
+use shiro::spmm::{ExecRequest, PlanSpec};
 use shiro::topology::Topology;
 use shiro::util::cli::Args;
 use shiro::util::rng::Rng;
@@ -101,22 +101,24 @@ fn main() {
         Preset::Ci => (1 << 12, 8, 32, 1, 5),
     };
     let a = gen::powerlaw(n, n * 10, 1.45, 5);
-    let d = DistSpmm::plan(
-        &a,
-        Strategy::Joint(Solver::Koenig),
-        Topology::tsubame4(exec_ranks),
-        true,
-    );
+    let d = PlanSpec::new(Topology::tsubame4(exec_ranks))
+        .strategy(Strategy::Joint(Solver::Koenig))
+        .plan(&a);
     let mut rng = Rng::new(11);
     let b = Dense::random(a.nrows, exec_n, &mut rng);
     let on = ExecOpts::default();
     let off = ExecOpts::sequential();
-    let (c_on, stats_on) = d.execute_with(&b, &NativeKernel, &on);
-    let (c_off, _) = d.execute_with(&b, &NativeKernel, &off);
+    let run = |opts: &ExecOpts| {
+        d.execute(&ExecRequest::spmm(&b).kernel(&NativeKernel).opts(*opts))
+            .expect("thread-backend SpMM")
+            .into_dense()
+    };
+    let (c_on, stats_on) = run(&on);
+    let (c_off, _) = run(&off);
     assert_eq!(c_on.data, c_off.data, "executed overlap on/off differ");
     write_artifact("ablation_overlap_exec_trace.json", &exec_to_chrome_json(&stats_on));
-    let t_on = benchmark(warmup, runs, || d.execute_with(&b, &NativeKernel, &on));
-    let t_off = benchmark(warmup, runs, || d.execute_with(&b, &NativeKernel, &off));
+    let t_on = benchmark(warmup, runs, || run(&on));
+    let t_off = benchmark(warmup, runs, || run(&off));
     let w = stats_on.overlap_window();
     let mut t2 = Table::new(&[
         "executed scenario", "sequential (ms)", "overlapped (ms)", "speedup", "overlap frac",

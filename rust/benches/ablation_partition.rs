@@ -22,7 +22,7 @@ use shiro::exec::kernel::NativeKernel;
 use shiro::metrics::{load_imbalance, Table};
 use shiro::partition::{max_rank_nnz, rank_nnz, split_1d, Partitioner};
 use shiro::sparse::datasets::dataset_by_name;
-use shiro::spmm::DistSpmm;
+use shiro::spmm::{ExecRequest, PlanSpec};
 use shiro::topology::Topology;
 use shiro::util::cli::Args;
 
@@ -119,15 +119,14 @@ fn main() {
         let b = Dense::from_fn(n, 8, |i, j| ((i * 7 + j * 3) % 9) as f32 - 4.0);
         let want = a.spmm(&b);
         for partitioner in Partitioner::ALL {
-            let d = DistSpmm::plan_partitioned(
-                &a,
-                Strategy::Joint(Solver::Koenig),
-                Topology::tsubame4(ranks),
-                true,
-                &shiro::plan::PlanParams::default(),
-                partitioner,
-            );
-            let (got, _) = d.execute(&b, &NativeKernel);
+            let d = PlanSpec::new(Topology::tsubame4(ranks))
+                .strategy(Strategy::Joint(Solver::Koenig))
+                .partitioner(partitioner)
+                .plan(&a);
+            let (got, _) = d
+                .execute(&ExecRequest::spmm(&b).kernel(&NativeKernel))
+                .expect("thread-backend SpMM")
+                .into_dense();
             assert_eq!(
                 got.data,
                 want.data,

@@ -7,7 +7,7 @@ use shiro::comm::Strategy;
 use shiro::cover::Solver;
 use shiro::metrics::Table;
 use shiro::sparse::datasets::spmm_datasets;
-use shiro::spmm::DistSpmm;
+use shiro::spmm::PlanSpec;
 use shiro::topology::Topology;
 
 fn main() {
@@ -26,34 +26,29 @@ fn main() {
     let mut csv = String::from("dataset,column_ms,joint_ms,hier_ms,adaptive_ms\n");
     for spec in spmm_datasets() {
         let a = spec.generate(BENCH_SCALE);
-        let t_col = DistSpmm::plan(&a, Strategy::Column, Topology::tsubame4(ranks), false)
+        let t_col = PlanSpec::new(Topology::tsubame4(ranks))
+            .strategy(Strategy::Column)
+            .flat()
+            .plan(&a)
             .simulate(n_dense)
             .total;
-        let t_joint = DistSpmm::plan(
-            &a,
-            Strategy::Joint(Solver::Koenig),
-            Topology::tsubame4(ranks),
-            false,
-        )
-        .simulate(n_dense)
-        .total;
-        let t_hier = DistSpmm::plan(
-            &a,
-            Strategy::Joint(Solver::Koenig),
-            Topology::tsubame4(ranks),
-            true,
-        )
-        .simulate(n_dense)
-        .total;
-        let t_adaptive = DistSpmm::plan_with_params(
-            &a,
-            Strategy::Adaptive,
-            Topology::tsubame4(ranks),
-            true,
-            &shiro::plan::PlanParams { n_dense, ..Default::default() },
-        )
-        .simulate(n_dense)
-        .total;
+        let t_joint = PlanSpec::new(Topology::tsubame4(ranks))
+            .strategy(Strategy::Joint(Solver::Koenig))
+            .flat()
+            .plan(&a)
+            .simulate(n_dense)
+            .total;
+        let t_hier = PlanSpec::new(Topology::tsubame4(ranks))
+            .strategy(Strategy::Joint(Solver::Koenig))
+            .plan(&a)
+            .simulate(n_dense)
+            .total;
+        let t_adaptive = PlanSpec::new(Topology::tsubame4(ranks))
+            .strategy(Strategy::Adaptive)
+            .n_dense(n_dense)
+            .plan(&a)
+            .simulate(n_dense)
+            .total;
         table.row(vec![
             spec.name.into(),
             ms(t_col),

@@ -10,7 +10,7 @@ use shiro::comm::Strategy;
 use shiro::cover::Solver;
 use shiro::metrics::Table;
 use shiro::sparse::datasets::spmm_datasets;
-use shiro::spmm::DistSpmm;
+use shiro::spmm::PlanSpec;
 use shiro::topology::Topology;
 
 fn main() {
@@ -30,13 +30,21 @@ fn main() {
     for spec in spmm_datasets() {
         let a = spec.generate(BENCH_SCALE);
         let topo = || Topology::aurora(ranks);
-        let t_col = DistSpmm::plan(&a, Strategy::Column, topo(), false)
+        let t_col = PlanSpec::new(topo())
+            .strategy(Strategy::Column)
+            .flat()
+            .plan(&a)
             .simulate(n_dense)
             .total;
-        let t_joint = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), topo(), false)
+        let t_joint = PlanSpec::new(topo())
+            .strategy(Strategy::Joint(Solver::Koenig))
+            .flat()
+            .plan(&a)
             .simulate(n_dense)
             .total;
-        let t_hier = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), topo(), true)
+        let t_hier = PlanSpec::new(topo())
+            .strategy(Strategy::Joint(Solver::Koenig))
+            .plan(&a)
             .simulate(n_dense)
             .total;
         if t_hier < t_joint {

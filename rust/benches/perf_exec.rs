@@ -19,7 +19,7 @@ use shiro::exec::ExecOpts;
 use shiro::metrics::Table;
 use shiro::sim::trace::exec_to_chrome_json;
 use shiro::sparse::gen;
-use shiro::spmm::DistSpmm;
+use shiro::spmm::{ExecRequest, PlanSpec};
 use shiro::topology::Topology;
 use shiro::util::cli::Args;
 use shiro::util::rng::Rng;
@@ -102,18 +102,20 @@ fn main() {
     let mut trace_written = false;
 
     for sc in scenarios(preset) {
-        let d = DistSpmm::plan(
-            &sc.a,
-            Strategy::Joint(Solver::Koenig),
-            Topology::tsubame4(sc.ranks),
-            true,
-        );
+        let d = PlanSpec::new(Topology::tsubame4(sc.ranks))
+            .strategy(Strategy::Joint(Solver::Koenig))
+            .plan(&sc.a);
         let mut rng = Rng::new(7);
         let b = Dense::random(sc.a.nrows, sc.n_dense, &mut rng);
+        let run = |opts: &ExecOpts| {
+            d.execute(&ExecRequest::spmm(&b).kernel(&NativeKernel).opts(*opts))
+                .expect("thread-backend SpMM")
+                .into_dense()
+        };
 
         // Correctness gate: the two schedules must produce the same bits.
-        let (c_on, stats_on) = d.execute_with(&b, &NativeKernel, &on);
-        let (c_off, _) = d.execute_with(&b, &NativeKernel, &off);
+        let (c_on, stats_on) = run(&on);
+        let (c_off, _) = run(&off);
         assert_eq!(c_on.data, c_off.data, "{}: overlap on/off results differ", sc.name);
         if !trace_written {
             write_artifact("perf_exec_trace.json", &exec_to_chrome_json(&stats_on));
@@ -121,8 +123,8 @@ fn main() {
         }
         let frac = stats_on.overlap_window().overlapped_fraction();
 
-        let t_on = benchmark(warmup, runs, || d.execute_with(&b, &NativeKernel, &on));
-        let t_off = benchmark(warmup, runs, || d.execute_with(&b, &NativeKernel, &off));
+        let t_on = benchmark(warmup, runs, || run(&on));
+        let t_off = benchmark(warmup, runs, || run(&off));
         let speedup = t_off.median / t_on.median;
         table.row(vec![
             sc.name.into(),

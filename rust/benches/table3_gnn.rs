@@ -12,7 +12,7 @@ use shiro::exec::kernel::NativeKernel;
 use shiro::gnn::{Gcn, GcnConfig, NativeDense};
 use shiro::metrics::Table;
 use shiro::sparse::datasets::gnn_datasets;
-use shiro::spmm::DistSpmm;
+use shiro::spmm::PlanSpec;
 use shiro::topology::Topology;
 
 fn main() {
@@ -44,11 +44,16 @@ fn main() {
         let a = spec.generate(BENCH_SCALE);
         let topo = Topology::tsubame4(ranks);
         // (a) per-SpMM times at 128 simulated GPUs.
-        let pyg = DistSpmm::plan(&a, Strategy::Column, topo.clone(), false).simulate(n_dense);
+        let pyg = PlanSpec::new(topo.clone())
+            .strategy(Strategy::Column)
+            .flat()
+            .plan(&a)
+            .simulate(n_dense);
         let bcl = simulate(System::Bcl, &a, n_dense, &topo);
-        let shiro =
-            DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), topo.clone(), true)
-                .simulate(n_dense);
+        let shiro = PlanSpec::new(topo.clone())
+            .strategy(Strategy::Joint(Solver::Koenig))
+            .plan(&a)
+            .simulate(n_dense);
         table.row(vec![
             spec.name.into(),
             n_dense.to_string(),

@@ -16,7 +16,7 @@ use crate::cover::Solver;
 use crate::partition::{split_1d, Grid2D, RowPartition};
 use crate::sim::{SimJob, SimMsg, SimReport, Stage};
 use crate::sparse::Csr;
-use crate::spmm::DistSpmm;
+use crate::spmm::{DistSpmm, PlanSpec};
 use crate::topology::Topology;
 
 /// Which system to model.
@@ -72,18 +72,15 @@ pub fn build_job(system: System, a: &Csr, n_dense: usize, topo: &Topology) -> Si
         System::Spa => spa_job(a, n_dense, topo),
         System::Bcl => bcl_job(a, n_dense, topo),
         System::Cola => cola_job(a, n_dense, topo),
-        System::Shiro => {
-            DistSpmm::plan(a, Strategy::Joint(Solver::Koenig), topo.clone(), true)
-                .sim_job(n_dense)
-        }
-        System::ShiroAdaptive => DistSpmm::plan_with_params(
-            a,
-            Strategy::Adaptive,
-            topo.clone(),
-            true,
-            &crate::plan::PlanParams { n_dense, ..Default::default() },
-        )
-        .sim_job(n_dense),
+        System::Shiro => PlanSpec::new(topo.clone())
+            .strategy(Strategy::Joint(Solver::Koenig))
+            .plan(a)
+            .sim_job(n_dense),
+        System::ShiroAdaptive => PlanSpec::new(topo.clone())
+            .strategy(Strategy::Adaptive)
+            .n_dense(n_dense)
+            .plan(a)
+            .sim_job(n_dense),
     }
 }
 
@@ -294,7 +291,7 @@ fn bcl_job(a: &Csr, n_dense: usize, topo: &Topology) -> SimJob {
 /// CoLa: 1D column-based plan + hierarchical B dedup (no row-based path,
 /// no C aggregation), fine-grained RDMA overlap of compute and both stages.
 fn cola_job(a: &Csr, n_dense: usize, topo: &Topology) -> SimJob {
-    let d = DistSpmm::plan(a, Strategy::Column, topo.clone(), true);
+    let d = PlanSpec::new(topo.clone()).strategy(Strategy::Column).plan(a);
     let (pre, post) = d.compute_profile(n_dense);
     let [mut s1, mut s2] = crate::sim::hier_comm_stages(d.sched.as_ref().unwrap(), n_dense);
     // Fine-grained overlap: local compute hides under stage I, remote

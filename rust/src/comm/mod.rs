@@ -266,7 +266,7 @@ pub fn plan(
         // Without an explicit topology the adaptive compiler assumes a flat
         // network (uniform link costs) and the default planning width.
         // Callers that know the real topology or N should use
-        // `plan::compile` (or `DistSpmm::plan_with_params`) instead; custom
+        // `plan::compile` (or `PlanSpec` with explicit params) instead; custom
         // pair weights only apply to the weighted Dinic solver.
         assert!(
             pair_weights.is_none(),

@@ -1,6 +1,6 @@
 //! Communication-plan validation: structural invariants checked before a
 //! plan is trusted by the executor. Used by tests (failure injection) and
-//! by `DistSpmm::plan` in debug builds.
+//! by `PlanSpec::plan` in debug builds.
 
 use crate::comm::CommPlan;
 use crate::partition::LocalBlocks;

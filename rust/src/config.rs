@@ -30,6 +30,14 @@ pub struct RunConfig {
     /// differential oracle) or "proc" (one OS process per rank over the
     /// socket control plane, [`crate::runtime::multiproc`]).
     pub backend: String,
+    /// `shiro serve` worker threads.
+    pub serve_workers: usize,
+    /// `shiro serve` admission queue bound (back-pressure beyond this).
+    pub serve_queue_cap: usize,
+    /// `shiro serve` session-registry capacity (LRU beyond this).
+    pub serve_registry_cap: usize,
+    /// `shiro serve` micro-batch bound (1 disables coalescing).
+    pub serve_max_batch: usize,
 }
 
 impl Default for RunConfig {
@@ -45,6 +53,10 @@ impl Default for RunConfig {
             partitioner: "balanced".into(),
             overlap: true,
             backend: "thread".into(),
+            serve_workers: 2,
+            serve_queue_cap: 64,
+            serve_registry_cap: 4,
+            serve_max_batch: 8,
         }
     }
 }
@@ -107,6 +119,10 @@ impl RunConfig {
         if let Some(b) = args.get("backend") {
             cfg.backend = parse_backend(b);
         }
+        cfg.serve_workers = args.get_usize("serve-workers", cfg.serve_workers);
+        cfg.serve_queue_cap = args.get_usize("serve-queue", cfg.serve_queue_cap);
+        cfg.serve_registry_cap = args.get_usize("serve-registry", cfg.serve_registry_cap);
+        cfg.serve_max_batch = args.get_usize("serve-batch", cfg.serve_max_batch);
         cfg
     }
 
@@ -140,6 +156,11 @@ impl RunConfig {
                 }
             };
         }
+        self.serve_workers = file.int_or("serve.workers", self.serve_workers as i64) as usize;
+        self.serve_queue_cap = file.int_or("serve.queue", self.serve_queue_cap as i64) as usize;
+        self.serve_registry_cap =
+            file.int_or("serve.registry", self.serve_registry_cap as i64) as usize;
+        self.serve_max_batch = file.int_or("serve.batch", self.serve_max_batch as i64) as usize;
     }
 
     /// Resolve the configured strategy name.
@@ -200,6 +221,27 @@ impl RunConfig {
         } else {
             crate::exec::ExecOpts::sequential()
         }
+    }
+
+    /// The [`crate::spmm::PlanSpec`] implied by this configuration
+    /// (strategy, topology, partitioner, dense width).
+    pub fn plan_spec(&self) -> crate::spmm::PlanSpec {
+        crate::spmm::PlanSpec::new(self.topology())
+            .strategy(self.strategy())
+            .partitioner(self.partitioner())
+            .n_dense(self.n_dense)
+    }
+
+    /// The [`crate::serve::ServeConfig`] implied by this configuration.
+    pub fn serve_config(&self) -> crate::serve::ServeConfig {
+        let mut sc = crate::serve::ServeConfig::new(self.topology());
+        sc.workers = self.serve_workers;
+        sc.queue_cap = self.serve_queue_cap;
+        sc.registry_cap = self.serve_registry_cap;
+        sc.max_batch = self.serve_max_batch;
+        sc.spec = self.plan_spec();
+        sc.opts = self.exec_opts();
+        sc
     }
 }
 
@@ -297,6 +339,59 @@ mod tests {
             "thread",
         ]));
         assert_eq!(cfg.backend, "thread");
+    }
+
+    #[test]
+    fn serve_knobs_flag_and_file() {
+        let cfg = RunConfig::from_args(&args(&["serve"]));
+        assert_eq!(
+            (cfg.serve_workers, cfg.serve_queue_cap, cfg.serve_registry_cap, cfg.serve_max_batch),
+            (2, 64, 4, 8),
+            "serve defaults"
+        );
+        let cfg = RunConfig::from_args(&args(&[
+            "serve",
+            "--serve-workers",
+            "3",
+            "--serve-queue",
+            "16",
+            "--serve-registry",
+            "2",
+            "--serve-batch",
+            "4",
+        ]));
+        let sc = cfg.serve_config();
+        assert_eq!((sc.workers, sc.queue_cap, sc.registry_cap, sc.max_batch), (3, 16, 2, 4));
+
+        let dir = std::env::temp_dir().join("shiro_cfg_serve_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("run.toml");
+        std::fs::write(&p, "[serve]\nworkers = 1\nqueue = 8\nregistry = 3\nbatch = 2\n").unwrap();
+        let cfg = RunConfig::from_args(&args(&["serve", "--config", p.to_str().unwrap()]));
+        assert_eq!(
+            (cfg.serve_workers, cfg.serve_queue_cap, cfg.serve_registry_cap, cfg.serve_max_batch),
+            (1, 8, 3, 2)
+        );
+    }
+
+    #[test]
+    fn plan_spec_reflects_the_config() {
+        let cfg = RunConfig::from_args(&args(&[
+            "run",
+            "--strategy",
+            "adaptive",
+            "--partitioner",
+            "nnz-balanced",
+            "--n",
+            "48",
+            "--ranks",
+            "4",
+        ]));
+        let spec = cfg.plan_spec();
+        assert_eq!(spec.strategy, Strategy::Adaptive);
+        assert_eq!(spec.partitioner, Partitioner::NnzBalanced);
+        assert_eq!(spec.params.n_dense, 48);
+        assert_eq!(spec.topo.nranks, 4);
     }
 
     #[test]

@@ -5,9 +5,10 @@
 //! posted-send payload layouts, exchange buffers — is derived once and
 //! replayed across `execute` calls instead of being rebuilt per call.
 //!
-//! One session now serves **all three kernels** off one frozen plan:
-//! [`SpmmSession::execute`] (SpMM), [`SpmmSession::execute_sddmm`], and
-//! [`SpmmSession::execute_fused`]. Each kernel op owns its program set and
+//! One session now serves **all three kernels** off one frozen plan
+//! through the same entry point the one-shot engine uses:
+//! [`SpmmSession::execute`] takes an [`ExecRequest`] (SpMM / SDDMM /
+//! fused). Each kernel op owns its program set and
 //! its [`Amortization`] record, lazily built on first use (or eagerly via
 //! [`SpmmSession::warm_kernel`]); the exchange-buffer pool, the X fetch
 //! schedule, and the persistent dense blocks are shared. The plan-sharing
@@ -40,7 +41,7 @@ use crate::dense::Dense;
 use crate::hierarchy::{self, HierSchedule};
 use crate::metrics::Amortization;
 use crate::sparse::Csr;
-use crate::spmm::DistSpmm;
+use crate::spmm::{Backend, DistSpmm, ExecError, ExecRequest, ExecResult};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Mutex;
 use std::time::Instant;
@@ -240,25 +241,74 @@ impl SpmmSession {
         }
     }
 
-    /// Execute C = A·B, allocating the assembled global output. The
-    /// exchange path is fully persistent; only the returned matrix is
-    /// fresh. Use [`SpmmSession::execute_into`] to reuse an output buffer.
-    pub fn execute(
-        &mut self,
-        b: &Dense,
-        kernel: &(dyn SpmmKernel + Sync),
-    ) -> (Dense, ExecStats) {
-        let mut out = Dense::zeros(0, 0);
-        let stats = self.execute_into(b, kernel, &mut out);
-        (out, stats)
+    /// Execute one [`ExecRequest`] against the frozen plan — the same
+    /// entry point as [`DistSpmm::execute`], with the same result
+    /// semantics (`dense` for SpMM/fused, `sparse` for SDDMM).
+    ///
+    /// Two session-specific rules: the session's *own* options win over
+    /// `req.opts` (frozen programs depend on them — change via
+    /// [`SpmmSession::set_opts`]), and only [`Backend::Thread`] is
+    /// served (the proc backend re-derives per-rank state in each worker
+    /// process, so there is no session state to reuse — route proc
+    /// requests through [`DistSpmm::execute`] instead).
+    pub fn execute(&mut self, req: &ExecRequest) -> Result<ExecResult, ExecError> {
+        if matches!(req.backend, Backend::Proc(_)) {
+            return Err(ExecError::Unsupported(
+                "sessions run on the thread backend; use DistSpmm::execute for --backend proc"
+                    .into(),
+            ));
+        }
+        match req.op {
+            KernelOp::Spmm => {
+                let mut out = Dense::zeros(0, 0);
+                let stats = self.run_spmm_into(req.b, req.kernel, &mut out);
+                Ok(ExecResult::from_dense(out, stats))
+            }
+            KernelOp::Sddmm => {
+                let x = req.x_operand()?;
+                let (e, stats) = self.run_sddmm(x, req.b, req.kernel);
+                Ok(ExecResult::from_sparse(e, stats))
+            }
+            KernelOp::FusedSddmmSpmm => {
+                let x = req.x_operand()?;
+                let mut out = Dense::zeros(0, 0);
+                let stats = self.run_fused_into(x, req.b, req.kernel, &mut out);
+                Ok(ExecResult::from_dense(out, stats))
+            }
+        }
     }
 
-    /// Execute C = A·B into `out` (reshaped as needed; a caller-held
-    /// buffer of the right capacity makes the whole call allocation-free).
-    /// Bit-identical to [`DistSpmm::execute_with`] on the same plan and
-    /// options — the session changes *when* state is built, never what the
-    /// ranks compute.
+    /// [`SpmmSession::execute`] into a caller-held output buffer
+    /// (reshaped as needed; a buffer of the right capacity makes the whole
+    /// call allocation-free). Dense-output requests only — SDDMM produces
+    /// a sparse matrix and returns [`ExecError::Unsupported`] here.
     pub fn execute_into(
+        &mut self,
+        req: &ExecRequest,
+        out: &mut Dense,
+    ) -> Result<ExecStats, ExecError> {
+        if matches!(req.backend, Backend::Proc(_)) {
+            return Err(ExecError::Unsupported(
+                "sessions run on the thread backend; use DistSpmm::execute for --backend proc"
+                    .into(),
+            ));
+        }
+        match req.op {
+            KernelOp::Spmm => Ok(self.run_spmm_into(req.b, req.kernel, out)),
+            KernelOp::Sddmm => Err(ExecError::Unsupported(
+                "SDDMM produces a sparse matrix; use SpmmSession::execute".into(),
+            )),
+            KernelOp::FusedSddmmSpmm => {
+                let x = req.x_operand()?;
+                Ok(self.run_fused_into(x, req.b, req.kernel, out))
+            }
+        }
+    }
+
+    /// Execute C = A·B into `out`. Bit-identical to the one-shot path on
+    /// the same plan and options — the session changes *when* state is
+    /// built, never what the ranks compute.
+    fn run_spmm_into(
         &mut self,
         b: &Dense,
         kernel: &(dyn SpmmKernel + Sync),
@@ -388,8 +438,8 @@ impl SpmmSession {
     }
 
     /// Execute distributed SDDMM E = A ⊙ (X·Yᵀ) off this session's frozen
-    /// plan: Y rows move along the very B covers [`SpmmSession::execute`]
-    /// uses (identical B-side measured volume), X rows along the C covers
+    /// plan: Y rows move along the very B covers the SpMM path uses
+    /// (identical B-side measured volume), X rows along the C covers
     /// reversed. Bitwise-identical to the serial [`Csr::sddmm`] oracle on
     /// any input. The first call builds this op's programs and seeds its
     /// slice of the shared pool (that call's plan time / alloc events);
@@ -397,7 +447,7 @@ impl SpmmSession {
     /// ([`SpmmSession::amortization_for`]) — only the returned sparse
     /// matrix is fresh: assembly copies the pool-held value buffers into a
     /// newly allocated O(nnz) [`Csr`] each call.
-    pub fn execute_sddmm(
+    fn run_sddmm(
         &mut self,
         x: &Dense,
         y: &Dense,
@@ -412,22 +462,10 @@ impl SpmmSession {
         (out, stats)
     }
 
-    /// Execute the fused SDDMM→SpMM kernel C = (A ⊙ (X·Yᵀ))·Y off this
-    /// session's frozen plan — one exchange, no edge-value materialization
-    /// (GAT-style attention propagation).
-    pub fn execute_fused(
-        &mut self,
-        x: &Dense,
-        y: &Dense,
-        kernel: &(dyn SpmmKernel + Sync),
-    ) -> (Dense, ExecStats) {
-        let mut out = Dense::zeros(0, 0);
-        let stats = self.execute_fused_into(x, y, kernel, &mut out);
-        (out, stats)
-    }
-
-    /// [`SpmmSession::execute_fused`] into a caller-held output buffer.
-    pub fn execute_fused_into(
+    /// Execute the fused SDDMM→SpMM kernel C = (A ⊙ (X·Yᵀ))·Y into `out` —
+    /// one exchange, no edge-value materialization (GAT-style attention
+    /// propagation).
+    fn run_fused_into(
         &mut self,
         x: &Dense,
         y: &Dense,
@@ -447,6 +485,42 @@ impl SpmmSession {
             out.data.extend_from_slice(&cl.data);
         }
         stats
+    }
+
+    /// E = A ⊙ (X·Yᵀ) off the frozen plan.
+    #[deprecated(note = "use SpmmSession::execute(&ExecRequest::sddmm(x, y).kernel(k))")]
+    pub fn execute_sddmm(
+        &mut self,
+        x: &Dense,
+        y: &Dense,
+        kernel: &(dyn SpmmKernel + Sync),
+    ) -> (Csr, ExecStats) {
+        self.run_sddmm(x, y, kernel)
+    }
+
+    /// Fused SDDMM→SpMM off the frozen plan.
+    #[deprecated(note = "use SpmmSession::execute(&ExecRequest::fused(x, y).kernel(k))")]
+    pub fn execute_fused(
+        &mut self,
+        x: &Dense,
+        y: &Dense,
+        kernel: &(dyn SpmmKernel + Sync),
+    ) -> (Dense, ExecStats) {
+        let mut out = Dense::zeros(0, 0);
+        let stats = self.run_fused_into(x, y, kernel, &mut out);
+        (out, stats)
+    }
+
+    /// Fused SDDMM→SpMM into a caller-held output buffer.
+    #[deprecated(note = "use SpmmSession::execute_into(&ExecRequest::fused(x, y).kernel(k), out)")]
+    pub fn execute_fused_into(
+        &mut self,
+        x: &Dense,
+        y: &Dense,
+        kernel: &(dyn SpmmKernel + Sync),
+        out: &mut Dense,
+    ) -> ExecStats {
+        self.run_fused_into(x, y, kernel, out)
     }
 
     /// The shared driver for the SDDMM-family ops: heal/plan lazily,
@@ -831,14 +905,22 @@ mod tests {
     use super::*;
     use crate::comm::Strategy;
     use crate::cover::Solver;
-    use crate::exec::kernel::NativeKernel;
     use crate::sparse::gen;
     use crate::topology::Topology;
     use crate::util::rng::Rng;
 
+    use crate::spmm::PlanSpec;
+
     fn planned(seed: u64, hier: bool) -> DistSpmm {
         let a = gen::rmat(192, 2500, (0.55, 0.2, 0.19), false, seed);
-        DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(8), hier)
+        PlanSpec::new(Topology::tsubame4(8))
+            .strategy(Strategy::Joint(Solver::Koenig))
+            .hierarchical(hier)
+            .plan(&a)
+    }
+
+    fn run_spmm(s: &mut SpmmSession, b: &Dense) -> (Dense, ExecStats) {
+        s.execute(&ExecRequest::spmm(b)).unwrap().into_dense()
     }
 
     #[test]
@@ -848,10 +930,10 @@ mod tests {
             let d_sess = planned(21, hier);
             let mut rng = Rng::new(5);
             let b = Dense::random(192, 16, &mut rng);
-            let (want, _) = d_cold.execute(&b, &NativeKernel);
+            let (want, _) = d_cold.execute(&ExecRequest::spmm(&b)).unwrap().into_dense();
             let mut s = SpmmSession::new(d_sess, ExecOpts::default(), true);
             for _ in 0..3 {
-                let (got, _) = s.execute(&b, &NativeKernel);
+                let (got, _) = run_spmm(&mut s, &b);
                 assert_eq!(got.data, want.data, "hier={hier}");
             }
         }
@@ -864,7 +946,7 @@ mod tests {
         let b = Dense::random(192, 8, &mut rng);
         let mut out = Dense::zeros(0, 0);
         for _ in 0..4 {
-            s.execute_into(&b, &NativeKernel, &mut out);
+            s.execute_into(&ExecRequest::spmm(&b), &mut out).unwrap();
         }
         let a = s.amortization();
         assert_eq!(a.calls(), 4);
@@ -886,7 +968,7 @@ mod tests {
         // Narrower widths than the warmed one stay allocation-free too.
         for n in [16usize, 4] {
             let b = Dense::random(192, n, &mut rng);
-            let (_, _) = s.execute(&b, &NativeKernel);
+            let _ = run_spmm(&mut s, &b);
         }
         let a = s.amortization();
         assert_eq!(a.total_allocs(), 0, "warmed session must never allocate");
@@ -899,14 +981,14 @@ mod tests {
         let mut rng = Rng::new(8);
         let small = Dense::random(192, 4, &mut rng);
         let big = Dense::random(192, 12, &mut rng);
-        s.execute(&small, &NativeKernel);
-        s.execute(&big, &NativeKernel); // grows: re-seeds at the new width
+        run_spmm(&mut s, &small);
+        run_spmm(&mut s, &big); // grows: re-seeds at the new width
         let a = s.amortization();
         assert!(a.alloc_events[1] > 0, "growth call must re-seed");
         assert!(a.plan_secs[1] > 0.0, "growth is planning work");
         for _ in 0..3 {
-            s.execute(&big, &NativeKernel);
-            s.execute(&small, &NativeKernel);
+            run_spmm(&mut s, &big);
+            run_spmm(&mut s, &small);
         }
         // Every call after the growth one is clean, whatever the width mix.
         let a = s.amortization();
@@ -919,7 +1001,7 @@ mod tests {
     fn session_opts_variants_bit_identical() {
         let mut rng = Rng::new(9);
         let b = Dense::random(192, 8, &mut rng);
-        let (want, _) = planned(25, true).execute(&b, &NativeKernel);
+        let (want, _) = planned(25, true).execute(&ExecRequest::spmm(&b)).unwrap().into_dense();
         for opts in [
             ExecOpts::sequential(),
             ExecOpts { workers: 2, ..ExecOpts::default() },
@@ -927,7 +1009,7 @@ mod tests {
         ] {
             let mut s = SpmmSession::new(planned(25, true), ExecOpts::default(), true);
             s.set_opts(opts);
-            let (got, _) = s.execute(&b, &NativeKernel);
+            let (got, _) = run_spmm(&mut s, &b);
             assert_eq!(got.data, want.data, "{opts:?}");
         }
     }
@@ -946,7 +1028,7 @@ mod tests {
             let y = Dense::random(192, 8, &mut rng);
             let want = a_hat.sddmm(&x, &y);
             for _ in 0..3 {
-                let (got, _) = s.execute_sddmm(&x, &y, &NativeKernel);
+                let (got, _) = s.execute(&ExecRequest::sddmm(&x, &y)).unwrap().into_sparse();
                 assert_eq!(got, want, "hier={hier}");
             }
             let am = s.amortization_for(KernelOp::Sddmm);
@@ -965,8 +1047,8 @@ mod tests {
         let mut rng = Rng::new(11);
         let x = Dense::random(192, 8, &mut rng);
         let y = Dense::random(192, 8, &mut rng);
-        let (_, spmm_stats) = s.execute(&y, &NativeKernel);
-        let (_, sddmm_stats) = s.execute_sddmm(&x, &y, &NativeKernel);
+        let (_, spmm_stats) = run_spmm(&mut s, &y);
+        let (_, sddmm_stats) = s.execute(&ExecRequest::sddmm(&x, &y)).unwrap().into_sparse();
         assert!(spmm_stats.measured_b_volume().total() > 0);
         assert_eq!(
             spmm_stats.measured_b_volume(),
@@ -974,8 +1056,8 @@ mod tests {
             "kernels moved different B-side bytes off one plan"
         );
         // Second calls of both kernels are clean.
-        let (_, _) = s.execute(&y, &NativeKernel);
-        let (_, _) = s.execute_sddmm(&x, &y, &NativeKernel);
+        let _ = run_spmm(&mut s, &y);
+        let _ = s.execute(&ExecRequest::sddmm(&x, &y)).unwrap().into_sparse();
         assert_eq!(s.amortization().alloc_events[1], 0);
         assert_eq!(s.amortization().plan_secs[1], 0.0);
         assert_eq!(s.amortization_for(KernelOp::Sddmm).alloc_events[1], 0);
@@ -989,16 +1071,14 @@ mod tests {
         let y = Dense::from_fn(192, 4, |i, j| ((i + j * 5) % 5) as f32 - 2.0);
         let want = a.sddmm(&x, &y).spmm(&y);
         for hier in [false, true] {
-            let d = DistSpmm::plan(
-                &a,
-                Strategy::Joint(Solver::Koenig),
-                Topology::tsubame4(8),
-                hier,
-            );
+            let d = PlanSpec::new(Topology::tsubame4(8))
+                .strategy(Strategy::Joint(Solver::Koenig))
+                .hierarchical(hier)
+                .plan(&a);
             let mut s = d.into_session(ExecOpts::default(), true);
             s.warm_kernel(KernelOp::FusedSddmmSpmm, 4);
             for _ in 0..3 {
-                let (got, _) = s.execute_fused(&x, &y, &NativeKernel);
+                let (got, _) = s.execute(&ExecRequest::fused(&x, &y)).unwrap().into_dense();
                 assert_eq!(got.data, want.data, "hier={hier}");
             }
             let am = s.amortization_for(KernelOp::FusedSddmmSpmm);

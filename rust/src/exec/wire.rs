@@ -44,7 +44,9 @@ use std::time::{Duration, Instant};
 /// layout change: parent and workers are always the same binary, so a
 /// mismatch means a stale `--worker-exe` override, not rolling upgrade.
 pub(crate) const WIRE_MAGIC: &[u8; 8] = b"SHIROWIR";
-pub(crate) const WIRE_VERSION: u32 = 1;
+/// v2: DONE frames carry an op-gated SDDMM edge-value payload (proc
+/// backend SDDMM support).
+pub(crate) const WIRE_VERSION: u32 = 2;
 
 /// Hard ceiling on one frame (1 GiB): no legitimate payload approaches
 /// this; a larger claim means a corrupt or hostile length field.
@@ -73,7 +75,10 @@ pub(crate) mod kind {
     /// Either direction: `dst u64 | encoded Msg` — routed verbatim by the
     /// parent to `dst`'s stream.
     pub const DATA: u8 = 3;
-    /// Worker → parent on success: `rank u64 | C block | RankStats`.
+    /// Worker → parent on success:
+    /// `rank u64 | C block | RankStats | flag u8 [| SddmmVals]` — the
+    /// edge-value payload ships only for SDDMM jobs (flag 1), whose output
+    /// *is* the per-rank sparse values.
     pub const DONE: u8 = 4;
     /// Worker → parent liveness: `rank u64`, every [`super::BEAT_MILLIS`].
     pub const BEAT: u8 = 5;
@@ -755,7 +760,12 @@ pub(crate) fn decode_hello(buf: &[u8]) -> Result<(u32, usize)> {
     Ok((r_u32(r)?, r_u64(r)? as usize))
 }
 
-fn encode_done(rank: usize, c: &Dense, st: &RankStats) -> Result<Vec<u8>> {
+fn encode_done(
+    rank: usize,
+    c: &Dense,
+    vals: Option<&SddmmVals>,
+    st: &RankStats,
+) -> Result<Vec<u8>> {
     let mut out = Vec::new();
     w_u64(&mut out, rank as u64)?;
     w_dense(&mut out, c)?;
@@ -777,10 +787,24 @@ fn encode_done(rank: usize, c: &Dense, st: &RankStats) -> Result<Vec<u8>> {
     w_u64(&mut out, st.idle_recv_bytes)?;
     // Phase spans stay worker-local: their labels are `&'static str`s and
     // the chrome-trace export is a thread-backend diagnostic.
+    match vals {
+        None => w_u8(&mut out, 0)?,
+        Some(v) => {
+            w_u8(&mut out, 1)?;
+            w_dense(&mut out, &v.diag)?;
+            for map in [&v.col, &v.row] {
+                w_u64(&mut out, map.len() as u64)?;
+                for (&peer, d) in map {
+                    w_u64(&mut out, peer as u64)?;
+                    w_dense(&mut out, d)?;
+                }
+            }
+        }
+    }
     Ok(out)
 }
 
-pub(crate) fn decode_done(buf: &[u8]) -> Result<(usize, Dense, RankStats)> {
+pub(crate) fn decode_done(buf: &[u8]) -> Result<(usize, Dense, SddmmVals, RankStats)> {
     let max = buf.len() / 4 + 1;
     let r = &mut &buf[..];
     let rank = r_u64(r)? as usize;
@@ -800,7 +824,26 @@ pub(crate) fn decode_done(buf: &[u8]) -> Result<(usize, Dense, RankStats)> {
         idle_recv_bytes: r_u64(r)?,
         phases: Vec::new(),
     };
-    Ok((rank, c, st))
+    let mut vals = SddmmVals::default();
+    if r_u8(r)? == 1 {
+        vals.diag = r_dense(r, max)?;
+        for map_is_col in [true, false] {
+            let len = r_u64(r)? as usize;
+            if len > max {
+                bail!("SDDMM value map claims {len} entries");
+            }
+            for _ in 0..len {
+                let peer = r_u64(r)? as usize;
+                let d = r_dense(r, max)?;
+                if map_is_col {
+                    vals.col.insert(peer, d);
+                } else {
+                    vals.row.insert(peer, d);
+                }
+            }
+        }
+    }
+    Ok((rank, c, vals, st))
 }
 
 fn encode_error(rank: usize, msg: &str) -> Result<Vec<u8>> {
@@ -962,13 +1005,16 @@ fn worker_run(port: u16, rank: usize) -> Result<()> {
             &mut vals,
             &job.prog,
         );
-        (c_local, ctx.stats)
+        (c_local, vals, ctx.stats)
     }));
     stop.store(true, Ordering::Relaxed);
 
     match result {
-        Ok((c_local, stats)) => {
-            tx.frame(kind::DONE, &encode_done(rank, &c_local, &stats)?)?;
+        Ok((c_local, vals, stats)) => {
+            // The fused kernel also leaves edge values in `vals`, but its
+            // output is the dense C — only SDDMM ships them back.
+            let vals = (job.op == KernelOp::Sddmm).then_some(&vals);
+            tx.frame(kind::DONE, &encode_done(rank, &c_local, vals, &stats)?)?;
             let _ = beat.join();
             // The pump thread is parked in `read_frame`; it dies with the
             // process once `worker_main` exits.
@@ -1059,13 +1105,32 @@ mod tests {
             idle_recv_bytes: 8,
             phases: Vec::new(),
         };
-        let buf = encode_done(2, &c, &st).unwrap();
-        let (rank, c2, st2) = decode_done(&buf).unwrap();
+        let buf = encode_done(2, &c, None, &st).unwrap();
+        let (rank, c2, vals2, st2) = decode_done(&buf).unwrap();
         assert_eq!(rank, 2);
         assert_eq!(c2, c);
+        assert_eq!(vals2.diag.data, Vec::<f32>::new());
+        assert!(vals2.col.is_empty() && vals2.row.is_empty());
         assert_eq!(st2.sent_to, st.sent_to);
         assert_eq!(st2.msgs_recv, 6);
         assert_eq!(st2.compute_secs, 0.25);
+
+        // SDDMM DONE frames carry the edge values bitwise (NaN included).
+        let mut vals = SddmmVals::default();
+        vals.diag = Dense::from_vec(1, 3, vec![1.0, f32::NAN, -0.0]);
+        vals.col.insert(3, Dense::from_vec(1, 2, vec![2.5, -7.0]));
+        vals.row.insert(0, Dense::from_vec(1, 1, vec![0.125]));
+        vals.row.insert(5, Dense::zeros(0, 0));
+        let buf = encode_done(1, &Dense::zeros(2, 0), Some(&vals), &st).unwrap();
+        let (rank, c2, vals2, _) = decode_done(&buf).unwrap();
+        assert_eq!((rank, c2.nrows, c2.ncols), (1, 2, 0));
+        assert_eq!(vals2.diag.data.len(), 3);
+        assert_eq!(vals2.diag.data[0].to_bits(), 1.0f32.to_bits());
+        assert!(vals2.diag.data[1].is_nan());
+        assert_eq!(vals2.diag.data[2].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(vals2.col[&3].data, vec![2.5, -7.0]);
+        assert_eq!(vals2.row[&0].data, vec![0.125]);
+        assert_eq!(vals2.row[&5], Dense::zeros(0, 0));
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! The three Â·(dense) products per epoch run through **epoch-persistent
 //! [`SpmmSession`]s** (DESIGN.md §8): the forward session freezes the Â
 //! plan once, the backward session is derived from it by
-//! [`DistSpmm::plan_transpose`] — a pure mirror of the forward cover, so
+//! [`crate::spmm::DistSpmm::transposed`] — a pure mirror of the forward cover, so
 //! Âᵀ products cost zero extra preprocessing and *asymmetric* adjacencies
 //! (directed graphs) are first-class. From the second epoch onward the
 //! sessions do zero planning work and zero fresh exchange-buffer
@@ -20,7 +20,7 @@ use crate::dense::Dense;
 use crate::exec::kernel::{KernelOp, SpmmKernel};
 use crate::exec::{ExecOpts, ExecStats};
 use crate::sparse::{Coo, Csr};
-use crate::spmm::{DistSpmm, SpmmSession};
+use crate::spmm::{ExecRequest, PlanSpec, SpmmSession};
 use crate::topology::Topology;
 use crate::util::rng::Rng;
 
@@ -334,7 +334,8 @@ fn epoch_products(
 pub struct Gcn {
     /// Epoch-persistent Â session (two products per epoch).
     pub fwd: SpmmSession,
-    /// Epoch-persistent Âᵀ session, mirrored via [`DistSpmm::plan_transpose`].
+    /// Epoch-persistent Âᵀ session, mirrored via
+    /// [`crate::spmm::DistSpmm::transposed`].
     pub bwd: SpmmSession,
     /// The normalized adjacency (kept for the cold-execution ablation and
     /// reference checks).
@@ -367,10 +368,11 @@ impl Gcn {
         cfg: GcnConfig,
     ) -> Gcn {
         let a_hat = normalize_adj(adj);
-        let dist = DistSpmm::plan(&a_hat, strategy, topo, hierarchical);
+        let dist =
+            PlanSpec::new(topo).strategy(strategy).hierarchical(hierarchical).plan(&a_hat);
         // Backward products mirror the forward plan — no re-cover, no
         // re-cost, and correct even when Âᵀ ≠ Â (directed graphs).
-        let dist_t = dist.plan_transpose();
+        let dist_t = dist.transposed();
         let opts = ExecOpts::default();
         let mut fwd = dist.into_session(opts, true);
         let mut bwd = dist_t.into_session(opts, true);
@@ -452,11 +454,15 @@ impl Gcn {
         let mut tally_f = SpmmTally::default();
         let mut tally_b = SpmmTally::default();
         let mut spmm_fwd = |m: &Dense, out: &mut Dense| {
-            let stats = fwd.execute_into(m, kernel, out);
+            let stats = fwd
+                .execute_into(&ExecRequest::spmm(m).kernel(kernel), out)
+                .expect("thread-backend SpMM");
             tally_f.add(&stats);
         };
         let mut spmm_bwd = |m: &Dense, out: &mut Dense| {
-            let stats = bwd.execute_into(m, kernel, out);
+            let stats = bwd
+                .execute_into(&ExecRequest::spmm(m).kernel(kernel), out)
+                .expect("thread-backend SpMM");
             tally_b.add(&stats);
         };
         let (loss, dw0, dw1) =
@@ -515,7 +521,7 @@ impl Gcn {
     }
 
     /// The ablation control for `ablation_epoch_reuse`: every epoch
-    /// re-enters [`DistSpmm`] cold — fresh plan, fresh transpose mirror,
+    /// re-enters [`crate::spmm::DistSpmm`] cold — fresh plan, fresh transpose mirror,
     /// fresh executor state — and `report.prep_secs` accumulates the
     /// repeated planning the sessions amortize away. Results are
     /// bit-identical to [`Gcn::train`]: the executor applies every
@@ -537,25 +543,29 @@ impl Gcn {
         let t_train = std::time::Instant::now();
         for epoch in 0..self.cfg.epochs {
             let t_plan = std::time::Instant::now();
-            let fdist = DistSpmm::plan(
-                &self.a_hat,
-                self.strategy,
-                self.fwd.dist().topo.clone(),
-                self.hierarchical,
-            );
-            let bdist = fdist.plan_transpose();
+            let fdist = PlanSpec::new(self.fwd.dist().topo.clone())
+                .strategy(self.strategy)
+                .hierarchical(self.hierarchical)
+                .plan(&self.a_hat);
+            let bdist = fdist.transposed();
             report.prep_secs += t_plan.elapsed().as_secs_f64();
             let opts = self.opts;
             let Gcn { x, y, w0, w1, p0, p1, dh1, .. } = &mut *self;
             let mut tally = SpmmTally::default();
             let mut tally_b = SpmmTally::default();
             let mut spmm_fwd = |m: &Dense, out: &mut Dense| {
-                let (c, stats) = fdist.execute_with(m, kernel, &opts);
+                let (c, stats) = fdist
+                    .execute(&ExecRequest::spmm(m).kernel(kernel).opts(opts))
+                    .expect("thread-backend SpMM")
+                    .into_dense();
                 *out = c;
                 tally.add(&stats);
             };
             let mut spmm_bwd = |m: &Dense, out: &mut Dense| {
-                let (c, stats) = bdist.execute_with(m, kernel, &opts);
+                let (c, stats) = bdist
+                    .execute(&ExecRequest::spmm(m).kernel(kernel).opts(opts))
+                    .expect("thread-backend SpMM")
+                    .into_dense();
                 *out = c;
                 tally_b.add(&stats);
             };
@@ -582,8 +592,8 @@ impl Gcn {
 /// materializes E first (the path `ablation_fused` charges for the extra
 /// B-side re-shipment plus the edge-value gather).
 pub struct Gat {
-    /// Kernel-generic session over the frozen Â plan (serves
-    /// `execute_sddmm` and `execute_fused`).
+    /// Kernel-generic session over the frozen Â plan (serves SDDMM and
+    /// fused [`ExecRequest`]s through [`SpmmSession::execute`]).
     pub session: SpmmSession,
     /// Normalized adjacency, kept for oracle checks and the two-pass
     /// control's SpMM half.
@@ -608,7 +618,8 @@ impl Gat {
         seed: u64,
     ) -> Gat {
         let a_hat = normalize_adj(adj);
-        let dist = DistSpmm::plan(&a_hat, strategy, topo, hierarchical);
+        let dist =
+            PlanSpec::new(topo).strategy(strategy).hierarchical(hierarchical).plan(&a_hat);
         let mut session = dist.into_session(ExecOpts::default(), true);
         session.warm_kernel(KernelOp::FusedSddmmSpmm, out_dim);
         let scale = (1.0 / feature_dim as f32).sqrt();
@@ -639,7 +650,11 @@ impl Gat {
         kernel: &(dyn SpmmKernel + Sync),
     ) -> (Dense, ExecStats) {
         let z = self.project(x);
-        let (h, stats) = self.session.execute_fused(&z, &z, kernel);
+        let (h, stats) = self
+            .session
+            .execute(&ExecRequest::fused(&z, &z).kernel(kernel))
+            .expect("thread-backend fused kernel")
+            .into_dense();
         (Self::relu(h), stats)
     }
 
@@ -655,7 +670,11 @@ impl Gat {
         kernel: &(dyn SpmmKernel + Sync),
     ) -> (Dense, ExecStats) {
         let z = self.project(x);
-        let (e, stats) = self.session.execute_sddmm(&z, &z, kernel);
+        let (e, stats) = self
+            .session
+            .execute(&ExecRequest::sddmm(&z, &z).kernel(kernel))
+            .expect("thread-backend SDDMM")
+            .into_sparse();
         (Self::relu(e.spmm(&z)), stats)
     }
 

@@ -30,6 +30,7 @@ pub mod partition;
 pub mod hierarchy;
 pub mod plan;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod topology;
 pub mod sparse;

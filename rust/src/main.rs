@@ -8,6 +8,8 @@
 //!                                    shared SpMM plan, verify + byte report
 //!   sim      --dataset D --ranks R   simulate all systems at scale
 //!   gnn      --epochs E --ranks R    GCN training case study
+//!   serve    [--bench --preset P]    multi-tenant serving layer (closed-
+//!                                    loop demo, or the saturation bench)
 //!   info                             runtime/artifact status
 //!
 //! Global flags: --n <dense cols> --scale <dataset scale> --topo <name>
@@ -18,6 +20,9 @@
 //! --config <file.toml> (CLI overrides config values).
 //! `trace` accepts --exec to emit the executed pipeline's chrome trace
 //! alongside the simulated one (same phase names, comparable in Perfetto).
+//! `serve` adds --serve-workers/--serve-queue/--serve-registry/--serve-batch;
+//! with --bench it runs the closed-loop saturation driver (--preset ci|full,
+//! --out <json path>) and prints the latency/throughput curve.
 
 use shiro::comm::Strategy;
 use shiro::config::RunConfig;
@@ -38,14 +43,17 @@ fn main() {
         "sddmm" => cmd_sddmm(&cfg),
         "sim" => cmd_sim(&cfg),
         "gnn" => cmd_gnn(&cfg),
+        "serve" => cmd_serve(&cfg, &args),
         "trace" => cmd_trace(&cfg, &args),
         "info" => cmd_info(),
         _ => {
             eprintln!(
-                "usage: shiro <datasets|plan|run|sddmm|sim|gnn|trace|info> \
+                "usage: shiro <datasets|plan|run|sddmm|sim|gnn|serve|trace|info> \
                  [--dataset D] [--ranks R] [--n N] [--scale S] [--topo T] \
                  [--strategy S] [--partitioner P] [--overlap on|off] \
-                 [--backend thread|proc] [--config F]"
+                 [--backend thread|proc] [--config F] \
+                 [serve: --bench --preset ci|full --out J --serve-workers W \
+                 --serve-queue Q --serve-registry C --serve-batch K]"
             );
             std::process::exit(if cmd == "help" { 0 } else { 2 });
         }
@@ -141,16 +149,21 @@ fn cmd_plan(cfg: &RunConfig) {
     }
 }
 
+/// The [`shiro::spmm::Backend`] named by `--backend`.
+fn backend_of(cfg: &RunConfig) -> shiro::spmm::Backend {
+    if cfg.backend == "proc" {
+        shiro::spmm::Backend::proc()
+    } else {
+        shiro::spmm::Backend::Thread
+    }
+}
+
 fn cmd_run(cfg: &RunConfig) {
     use shiro::dense::Dense;
-    use shiro::exec::kernel::NativeKernel;
-    use shiro::spmm::DistSpmm;
+    use shiro::spmm::ExecRequest;
     use shiro::util::rng::Rng;
     let a = cfg.matrix();
-    let topo = cfg.topology();
-    let params = shiro::plan::PlanParams { n_dense: cfg.n_dense, ..Default::default() };
-    let d =
-        DistSpmm::plan_partitioned(&a, cfg.strategy(), topo, true, &params, cfg.partitioner());
+    let d = cfg.plan_spec().plan(&a);
     let loads = shiro::partition::rank_nnz(&a, &d.part);
     println!(
         "partition [{}]: max-rank nnz {}, load imbalance {:.2}x",
@@ -160,17 +173,13 @@ fn cmd_run(cfg: &RunConfig) {
     );
     let mut rng = Rng::new(1);
     let b = Dense::random(a.nrows, cfg.n_dense, &mut rng);
-    let (c, stats) = if cfg.backend == "proc" {
-        let popts = shiro::runtime::multiproc::ProcOpts::default();
-        match d.execute_proc(&b, &cfg.exec_opts(), &popts) {
-            Ok(r) => r,
-            Err(f) => {
-                eprintln!("proc backend failed: {f}");
-                std::process::exit(1);
-            }
+    let req = ExecRequest::spmm(&b).opts(cfg.exec_opts()).backend(backend_of(cfg));
+    let (c, stats) = match d.execute(&req) {
+        Ok(r) => r.into_dense(),
+        Err(e) => {
+            eprintln!("{} backend failed: {e}", cfg.backend);
+            std::process::exit(1);
         }
-    } else {
-        d.execute_with(&b, &NativeKernel, &cfg.exec_opts())
     };
     let want = a.spmm(&b);
     let err = want.diff_norm(&c) / (want.max_abs() as f64 + 1e-30);
@@ -200,29 +209,34 @@ fn cmd_run(cfg: &RunConfig) {
 
 fn cmd_sddmm(cfg: &RunConfig) {
     use shiro::dense::Dense;
-    use shiro::exec::kernel::NativeKernel;
-    use shiro::spmm::DistSpmm;
+    use shiro::spmm::ExecRequest;
     use shiro::util::rng::Rng;
     let a = cfg.matrix();
-    let topo = cfg.topology();
-    let params = shiro::plan::PlanParams { n_dense: cfg.n_dense, ..Default::default() };
-    let d =
-        DistSpmm::plan_partitioned(&a, cfg.strategy(), topo, true, &params, cfg.partitioner());
+    let d = cfg.plan_spec().plan(&a);
     let mut rng = Rng::new(1);
     let x = Dense::random(a.nrows, cfg.n_dense, &mut rng);
     let y = Dense::random(a.nrows, cfg.n_dense, &mut rng);
     let opts = cfg.exec_opts();
+    let backend = backend_of(cfg);
+    let fail = |e: shiro::spmm::ExecError| -> ! {
+        eprintln!("{} backend failed: {e}", cfg.backend);
+        std::process::exit(1);
+    };
 
     // Standalone SDDMM: bitwise-exact vs the serial oracle (each edge
-    // value has one producer and a fixed dot order — no tolerance needed).
-    let (e, sddmm_stats) = d.execute_sddmm_with(&x, &y, &NativeKernel, &opts);
+    // value has one producer and a fixed dot order — no tolerance needed),
+    // on either backend (--backend proc routes it over the socket control
+    // plane through the same plan).
+    let req = ExecRequest::sddmm(&x, &y).opts(opts).backend(backend.clone());
+    let (e, sddmm_stats) = d.execute(&req).unwrap_or_else(|e| fail(e)).into_sparse();
     let want = a.sddmm(&x, &y);
     assert_eq!(e, want, "distributed SDDMM != serial oracle");
     println!(
-        "sddmm on {} ranks [{}] overlap={}: {} edge values bitwise-exact, \
+        "sddmm on {} ranks [{}] backend={} overlap={}: {} edge values bitwise-exact, \
          wall {:.1} ms, intra {} B, inter {} B",
         cfg.ranks,
         d.plan.strategy.name(),
+        cfg.backend,
         if cfg.overlap { "on" } else { "off" },
         e.nnz(),
         sddmm_stats.wall_secs * 1e3,
@@ -232,7 +246,8 @@ fn cmd_sddmm(cfg: &RunConfig) {
 
     // Plan sharing: the same frozen plan serves SpMM with identical B-side
     // traffic.
-    let (_, spmm_stats) = d.execute_with(&y, &NativeKernel, &opts);
+    let req = ExecRequest::spmm(&y).opts(opts).backend(backend.clone());
+    let (_, spmm_stats) = d.execute(&req).unwrap_or_else(|e| fail(e)).into_dense();
     let (bs, bd) = (
         spmm_stats.measured_b_volume().total(),
         sddmm_stats.measured_b_volume().total(),
@@ -241,7 +256,8 @@ fn cmd_sddmm(cfg: &RunConfig) {
     assert_eq!(bs, bd, "B-side volume differs between kernels on one plan");
 
     // Fused SDDMM→SpMM vs the two-pass alternative, byte-for-byte.
-    let (c, fused_stats) = d.execute_fused_with(&x, &y, &NativeKernel, &opts);
+    let req = ExecRequest::fused(&x, &y).opts(opts).backend(backend);
+    let (c, fused_stats) = d.execute(&req).unwrap_or_else(|e| fail(e)).into_dense();
     let want_c = want.spmm(&y);
     let err = want_c.diff_norm(&c) / (want_c.max_abs() as f64 + 1e-30);
     assert!(err < 1e-3, "fused verification failed: rel err {err}");
@@ -320,21 +336,97 @@ fn cmd_gnn(cfg: &RunConfig) {
     );
 }
 
+fn cmd_serve(cfg: &RunConfig, args: &Args) {
+    use shiro::serve::{bench, ServeError, ServeRequest, Server};
+    if args.has_flag("bench") {
+        let name = args.get("preset").unwrap_or("ci");
+        let Some(p) = bench::preset(name) else {
+            eprintln!("unknown preset {name:?} (ci | full)");
+            std::process::exit(2);
+        };
+        let out = std::path::PathBuf::from(
+            args.get("out").unwrap_or("bench_results/serve_bench.json"),
+        );
+        match bench::run(&p, &out) {
+            Ok(report) => print!("{report}"),
+            Err(e) => {
+                eprintln!("serve bench failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
+        return;
+    }
+    // Closed-loop demo: serve the configured dataset, 2 clients per
+    // worker, `epochs` requests total, then report the latency breakdown.
+    use shiro::dense::Dense;
+    use shiro::util::rng::Rng;
+    let a = cfg.matrix();
+    let mut srv = Server::new(cfg.serve_config());
+    srv.register_graph(&cfg.dataset, a.clone());
+    let clients = cfg.serve_workers.max(1) * 2;
+    let reqs = (cfg.epochs / clients).max(1);
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let (srv, a) = (&srv, &a);
+            s.spawn(move || {
+                let mut rng = Rng::new(c as u64 + 1);
+                for _ in 0..reqs {
+                    let b = Dense::random(a.nrows, cfg.n_dense, &mut rng);
+                    loop {
+                        match srv.submit_wait(ServeRequest::spmm(&cfg.dataset, b.clone())) {
+                            Ok(_) => break,
+                            Err(ServeError::Saturated { .. }) => {
+                                std::thread::sleep(std::time::Duration::from_micros(200));
+                            }
+                            Err(e) => {
+                                eprintln!("serve request failed: {e}");
+                                std::process::exit(1);
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let stats = srv.shutdown();
+    let lat = stats.latency();
+    println!(
+        "served {} requests ({} clients x {}) on {} workers: p50 {:.2} ms, p99 {:.2} ms, \
+         max {:.2} ms",
+        stats.completed,
+        clients,
+        reqs,
+        cfg.serve_workers,
+        lat.p50 * 1e3,
+        lat.p99 * 1e3,
+        lat.max * 1e3
+    );
+    println!(
+        "batching: {} coalesced executes covering {} requests (mean batch {:.2}, max {}); \
+         registry: {} hits / {} misses / {} evictions (hit rate {:.2})",
+        stats.batches,
+        stats.batched_requests,
+        stats.mean_batch(),
+        stats.max_batch_seen,
+        stats.registry_hits,
+        stats.registry_misses,
+        stats.registry_evictions,
+        stats.hit_rate()
+    );
+}
+
 fn cmd_trace(cfg: &RunConfig, args: &Args) {
     use shiro::sim::trace::{exec_to_chrome_json, to_chrome_json, trace};
-    use shiro::spmm::DistSpmm;
+    use shiro::spmm::PlanSpec;
     let a = cfg.matrix();
     // Same partitioner as `shiro run` so the simulated/executed traces
-    // describe the boundaries the configured run actually uses.
-    let params = shiro::plan::PlanParams { n_dense: cfg.n_dense, ..Default::default() };
-    let d = DistSpmm::plan_partitioned(
-        &a,
-        Strategy::Joint(Solver::Koenig),
-        cfg.topology(),
-        true,
-        &params,
-        cfg.partitioner(),
-    );
+    // describe the boundaries the configured run actually uses (strategy
+    // pinned to the paper's joint default).
+    let d = PlanSpec::new(cfg.topology())
+        .strategy(Strategy::Joint(Solver::Koenig))
+        .partitioner(cfg.partitioner())
+        .n_dense(cfg.n_dense)
+        .plan(&a);
     let job = d.sim_job(cfg.n_dense);
     let timings = trace(&job, &d.topo);
     let json = to_chrome_json(&timings, &job);
@@ -348,11 +440,12 @@ fn cmd_trace(cfg: &RunConfig, args: &Args) {
         // The executed pipeline's trace, with the same phase names as the
         // simulated stages, for side-by-side comparison.
         use shiro::dense::Dense;
-        use shiro::exec::kernel::NativeKernel;
+        use shiro::spmm::ExecRequest;
         use shiro::util::rng::Rng;
         let mut rng = Rng::new(1);
         let b = Dense::random(a.nrows, cfg.n_dense, &mut rng);
-        let (_, stats) = d.execute_with(&b, &NativeKernel, &cfg.exec_opts());
+        let req = ExecRequest::spmm(&b).opts(cfg.exec_opts());
+        let (_, stats) = d.execute(&req).expect("thread-backend SpMM").into_dense();
         let path = format!("trace_{}_{}r_exec.json", cfg.dataset, cfg.ranks);
         std::fs::write(&path, exec_to_chrome_json(&stats)).expect("write exec trace");
         println!("wrote {path} (executed pipeline, same phase names)");

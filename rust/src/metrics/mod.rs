@@ -224,6 +224,43 @@ pub fn load_imbalance(loads: &[u64]) -> f64 {
     }
 }
 
+/// Order statistics over a latency sample set (seconds), computed with the
+/// nearest-rank method on a sorted copy. Used by the serve layer to report
+/// per-request queue/plan/exec latencies and the `serve --bench` curve.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LatencyStats {
+    pub count: usize,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+    pub mean: f64,
+}
+
+/// Summarize a latency sample vector. Empty input yields all-zero stats.
+pub fn latency_stats(samples: &[f64]) -> LatencyStats {
+    if samples.is_empty() {
+        return LatencyStats::default();
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("latency samples must not be NaN"));
+    let n = sorted.len();
+    // Nearest-rank: the smallest sample with at least p% of the mass at or
+    // below it, i.e. index ceil(p * n) - 1.
+    let rank = |p: f64| -> f64 {
+        let k = ((p * n as f64).ceil() as usize).clamp(1, n);
+        sorted[k - 1]
+    };
+    LatencyStats {
+        count: n,
+        p50: rank(0.50),
+        p90: rank(0.90),
+        p99: rank(0.99),
+        max: sorted[n - 1],
+        mean: sorted.iter().sum::<f64>() / n as f64,
+    }
+}
+
 /// Percent reduction from `base` to `opt` (Fig. 8 bars).
 pub fn reduction_pct(base: u64, opt: u64) -> f64 {
     if base == 0 {
@@ -346,6 +383,27 @@ mod tests {
         assert_eq!(a.total_allocs(), 17);
         a.record(0.0, 1);
         assert!(!a.steady_state(), "late allocation must break steady state");
+    }
+
+    #[test]
+    fn latency_stats_nearest_rank() {
+        assert_eq!(latency_stats(&[]), LatencyStats::default());
+        let one = latency_stats(&[3.0]);
+        assert_eq!(one.count, 1);
+        assert_eq!(one.p50, 3.0);
+        assert_eq!(one.p99, 3.0);
+        assert_eq!(one.max, 3.0);
+        assert_eq!(one.mean, 3.0);
+        // 1..=100 in shuffled order: nearest-rank pX is exactly X.
+        let mut v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        v.reverse();
+        let s = latency_stats(&v);
+        assert_eq!(s.count, 100);
+        assert_eq!(s.p50, 50.0);
+        assert_eq!(s.p90, 90.0);
+        assert_eq!(s.p99, 99.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.mean - 50.5).abs() < 1e-12);
     }
 
     #[test]

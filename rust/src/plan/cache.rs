@@ -96,6 +96,16 @@ pub fn pattern_key(
     h.0
 }
 
+/// Fingerprint of one global sparse matrix (structure and values, FNV over
+/// the CSR arrays). The serve layer's session-registry key: two registered
+/// graphs with the same fingerprint can share every session and every
+/// cached plan, whatever name the tenants registered them under.
+pub fn csr_fingerprint(a: &Csr) -> u64 {
+    let mut h = Fnv::new();
+    hash_csr(&mut h, a);
+    h.0
+}
+
 // --------------------------------------------------------- serialization ----
 //
 // The scalar/CSR primitives live in `util::bin` (shared with the multiproc

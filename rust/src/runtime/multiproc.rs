@@ -21,9 +21,10 @@
 use crate::comm::CommPlan;
 use crate::dense::Dense;
 use crate::exec::wire::{self, kind};
-use crate::exec::{ExecOpts, ExecStats, KernelOp, RankStats};
+use crate::exec::{assemble_sddmm, ExecOpts, ExecStats, KernelOp, RankStats, SddmmVals};
 use crate::hierarchy::{self, HierSchedule};
 use crate::partition::{LocalBlocks, RowPartition};
+use crate::sparse::Csr;
 use crate::topology::Topology;
 use std::fmt;
 use std::io::BufReader;
@@ -139,6 +140,7 @@ pub fn run(
     popts: &ProcOpts,
 ) -> Result<(Dense, ExecStats), RankFailure> {
     run_op(KernelOp::Spmm, part, plan, blocks, sched, topo, None, b, opts, popts)
+        .map(|(c, _, st)| (c, st))
 }
 
 /// Fused SDDMM→SpMM across worker processes: counterpart of
@@ -156,11 +158,34 @@ pub fn run_fused(
     popts: &ProcOpts,
 ) -> Result<(Dense, ExecStats), RankFailure> {
     run_op(KernelOp::FusedSddmmSpmm, part, plan, blocks, sched, topo, Some(x), y, opts, popts)
+        .map(|(c, _, st)| (c, st))
+}
+
+/// Distributed SDDMM across worker processes: counterpart of
+/// [`crate::exec::run_sddmm_with`]. Each worker's DONE frame carries its
+/// pool of edge-value buffers (the v2 wire payload); the parent assembles
+/// them into the global E exactly as the thread backend does, so the
+/// result is bitwise-identical to [`Csr::sddmm`].
+#[allow(clippy::too_many_arguments)]
+pub fn run_sddmm(
+    part: &RowPartition,
+    plan: &CommPlan,
+    blocks: &[LocalBlocks],
+    sched: Option<&HierSchedule>,
+    topo: &Topology,
+    x: &Dense,
+    y: &Dense,
+    opts: &ExecOpts,
+    popts: &ProcOpts,
+) -> Result<(Csr, ExecStats), RankFailure> {
+    let (_, vals, stats) =
+        run_op(KernelOp::Sddmm, part, plan, blocks, sched, topo, Some(x), y, opts, popts)?;
+    Ok((assemble_sddmm(part, blocks, plan, &vals), stats))
 }
 
 /// One event from a worker's reader thread to the collector.
 enum Event {
-    Done(usize, Dense, RankStats),
+    Done(usize, Dense, SddmmVals, RankStats),
     Beat(usize),
     Fail(usize, FailureCause),
     /// Stream closed (or read error). Benign after DONE, fatal before.
@@ -179,17 +204,14 @@ fn run_op(
     b: &Dense,
     opts: &ExecOpts,
     popts: &ProcOpts,
-) -> Result<(Dense, ExecStats), RankFailure> {
-    // SDDMM's output is the per-rank sparse values, which DONE does not
-    // carry; the dense-output kernels are the proc backend's surface.
-    assert!(
-        op != KernelOp::Sddmm,
-        "proc backend supports dense-output kernels only (SpMM / fused)"
-    );
+) -> Result<(Dense, Vec<SddmmVals>, ExecStats), RankFailure> {
     let nranks = part.nparts;
     assert_eq!(plan.nranks, nranks);
     assert_eq!(part.n, b.nrows);
     let n_dense = b.ncols;
+    // SDDMM workers produce edge values, not a dense block: their C has
+    // width 0 and the payload of interest rides the DONE frame instead.
+    let c_cols = if op == KernelOp::Sddmm { 0 } else { n_dense };
     let fail = |rank: usize, cause: FailureCause| RankFailure { rank, cause };
 
     let listener = TcpListener::bind(("127.0.0.1", 0))
@@ -360,7 +382,8 @@ fn run_op(
     let writers = &writers;
 
     let (ev_tx, ev_rx) = mpsc::channel::<Event>();
-    let collected: Result<Vec<(Dense, RankStats)>, RankFailure> = std::thread::scope(|scope| {
+    type RankResult = (Dense, SddmmVals, RankStats);
+    let collected: Result<Vec<RankResult>, RankFailure> = std::thread::scope(|scope| {
         for (w, rd) in readers.into_iter().enumerate() {
             let ev_tx = ev_tx.clone();
             scope.spawn(move || {
@@ -399,8 +422,8 @@ fn run_op(
                             let _ = wire::write_frame(&mut *ws, kind::DATA, &payload);
                         }
                         kind::DONE => match wire::decode_done(&payload) {
-                            Ok((rank, c, st)) if rank == w => {
-                                let _ = ev_tx.send(Event::Done(w, c, st));
+                            Ok((rank, c, vals, st)) if rank == w => {
+                                let _ = ev_tx.send(Event::Done(w, c, vals, st));
                             }
                             Ok((rank, ..)) => {
                                 let _ = ev_tx.send(Event::Fail(
@@ -444,15 +467,15 @@ fn run_op(
         drop(ev_tx);
 
         let mut last_seen = vec![Instant::now(); nranks];
-        let mut results: Vec<Option<(Dense, RankStats)>> = (0..nranks).map(|_| None).collect();
+        let mut results: Vec<Option<RankResult>> = (0..nranks).map(|_| None).collect();
         let mut n_done = 0;
         let mut failure: Option<RankFailure> = None;
         while n_done < nranks {
             match ev_rx.recv_timeout(Duration::from_millis(100)) {
-                Ok(Event::Done(w, c, st)) => {
+                Ok(Event::Done(w, c, vals, st)) => {
                     last_seen[w] = Instant::now();
                     if results[w].is_none() {
-                        results[w] = Some((c, st));
+                        results[w] = Some((c, vals, st));
                         n_done += 1;
                     }
                 }
@@ -505,25 +528,27 @@ fn run_op(
     reap(&mut children);
     let results = collected?;
 
-    let mut c_global = Dense::zeros(part.n, n_dense);
+    let mut c_global = Dense::zeros(part.n, c_cols);
+    let mut all_vals = Vec::with_capacity(nranks);
     let mut per_rank = Vec::with_capacity(nranks);
-    for (rank, (c_local, stats)) in results.into_iter().enumerate() {
+    for (rank, (c_local, vals, stats)) in results.into_iter().enumerate() {
         let (r0, r1) = part.range(rank);
-        if c_local.nrows != r1 - r0 || c_local.ncols != n_dense {
+        if c_local.nrows != r1 - r0 || c_local.ncols != c_cols {
             return Err(fail(
                 rank,
                 FailureCause::Protocol(format!(
-                    "C block shape {}x{}, expected {}x{n_dense}",
+                    "C block shape {}x{}, expected {}x{c_cols}",
                     c_local.nrows,
                     c_local.ncols,
                     r1 - r0
                 )),
             ));
         }
-        c_global.data[r0 * n_dense..r1 * n_dense].copy_from_slice(&c_local.data);
+        c_global.data[r0 * c_cols..r1 * c_cols].copy_from_slice(&c_local.data);
+        all_vals.push(vals);
         per_rank.push(stats);
     }
-    Ok((c_global, ExecStats { per_rank, wall_secs: t0.elapsed().as_secs_f64() }))
+    Ok((c_global, all_vals, ExecStats { per_rank, wall_secs: t0.elapsed().as_secs_f64() }))
 }
 
 fn kill_all(children: &mut [Child]) {

@@ -1,0 +1,297 @@
+//! Closed-loop saturation driver for `shiro serve --bench`: spawns C
+//! synchronous clients against a live [`Server`], sweeps C over a preset's
+//! levels, and reports the latency/throughput curve (p50/p99/throughput
+//! per level, plus batching and registry hit-rate counters), writing the
+//! same rows as JSON under `bench_results/`.
+//!
+//! Every run starts with the batching gate: a `workers == 0` server
+//! coalesces a mixed-width burst of same-graph SpMM requests into one
+//! execute, and each split-back result must be **bitwise identical** to
+//! direct unbatched execution. A run that prints a curve has re-proven
+//! the micro-batcher's correctness contract first.
+
+use super::{Server, ServeConfig, ServeError, ServeRequest, Ticket};
+use crate::dense::Dense;
+use crate::metrics::{latency_stats, Table};
+use crate::sparse::{gen, Csr};
+use crate::spmm::ExecRequest;
+use crate::topology::Topology;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Context, Result};
+use std::fmt::Write as _;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// One bench configuration. `ci` is sized to finish in seconds inside the
+/// CI smoke job; `full` sweeps enough load levels to show the knee.
+#[derive(Clone, Debug)]
+pub struct BenchPreset {
+    pub name: &'static str,
+    pub graphs: usize,
+    pub nrows: usize,
+    pub nnz: usize,
+    pub n_dense: usize,
+    pub nranks: usize,
+    pub workers: usize,
+    pub client_counts: &'static [usize],
+    pub reqs_per_client: usize,
+}
+
+/// Look up a preset by name (`ci` / `full`).
+pub fn preset(name: &str) -> Option<BenchPreset> {
+    match name {
+        "ci" => Some(BenchPreset {
+            name: "ci",
+            graphs: 2,
+            nrows: 256,
+            nnz: 3_000,
+            n_dense: 8,
+            nranks: 4,
+            workers: 2,
+            client_counts: &[1, 4],
+            reqs_per_client: 8,
+        }),
+        "full" => Some(BenchPreset {
+            name: "full",
+            graphs: 4,
+            nrows: 2_048,
+            nnz: 40_000,
+            n_dense: 32,
+            nranks: 8,
+            workers: 4,
+            client_counts: &[1, 2, 4, 8, 16],
+            reqs_per_client: 32,
+        }),
+        _ => None,
+    }
+}
+
+/// One measured load level of the curve.
+#[derive(Clone, Debug)]
+pub struct LevelRow {
+    pub clients: usize,
+    pub requests: usize,
+    pub throughput_rps: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_batch: f64,
+    pub hit_rate: f64,
+    /// Saturated-and-retried submissions (back-pressure events).
+    pub retries: u64,
+}
+
+fn serve_config(p: &BenchPreset, workers: usize) -> ServeConfig {
+    let mut cfg = ServeConfig::new(Topology::tsubame4(p.nranks));
+    cfg.workers = workers;
+    cfg.spec.params.n_dense = p.n_dense;
+    cfg
+}
+
+fn bench_graphs(p: &BenchPreset) -> Vec<Csr> {
+    (0..p.graphs)
+        .map(|i| gen::rmat(p.nrows, p.nnz, (0.55, 0.2, 0.19), false, 1000 + i as u64))
+        .collect()
+}
+
+/// The batching correctness gate: submit a mixed-width same-graph SpMM
+/// burst to a drain-mode server, force one coalesced execute, and check
+/// every split-back result bitwise against direct execution.
+pub fn verify_batching(p: &BenchPreset) -> Result<()> {
+    let a = &bench_graphs(p)[0];
+    let mut cfg = serve_config(p, 0);
+    cfg.max_batch = 4;
+    let srv = Server::new(cfg.clone());
+    srv.register_graph("gate", a.clone());
+    let mut rng = Rng::new(42);
+    let widths = [p.n_dense, p.n_dense / 2 + 1, p.n_dense, 3];
+    let bs: Vec<Dense> = widths.iter().map(|&w| Dense::random(a.nrows, w, &mut rng)).collect();
+    let tickets: Vec<Ticket> = bs
+        .iter()
+        .map(|b| {
+            srv.try_submit(ServeRequest::spmm("gate", b.clone()))
+                .map_err(|e| anyhow!("gate submission rejected: {e}"))
+        })
+        .collect::<Result<_>>()?;
+    let executes = srv.drain_all();
+    if executes != 1 {
+        bail!("batching gate: expected 1 coalesced execute for 4 requests, got {executes}");
+    }
+    let dist = cfg.spec.plan(a);
+    for (t, b) in tickets.into_iter().zip(&bs) {
+        let got = t.wait().map_err(|e| anyhow!("gate request failed: {e}"))?;
+        if got.batch_size != bs.len() {
+            bail!("batching gate: batch_size {} != {}", got.batch_size, bs.len());
+        }
+        let got = got.into_dense();
+        let (want, _) = dist
+            .execute(&ExecRequest::spmm(b))
+            .map_err(|e| anyhow!("gate oracle failed: {e}"))?
+            .into_dense();
+        let identical = got.nrows == want.nrows
+            && got.ncols == want.ncols
+            && got.data.iter().zip(want.data.iter()).all(|(x, y)| x.to_bits() == y.to_bits());
+        if !identical {
+            bail!("batching gate: batched result differs bitwise from unbatched (ncols {})", b.ncols);
+        }
+    }
+    Ok(())
+}
+
+/// Run one load level: C closed-loop clients, each issuing R synchronous
+/// SpMM requests round-robin over the registered graphs, retrying briefly
+/// on back-pressure.
+fn run_level(p: &BenchPreset, graphs: &[Csr], clients: usize) -> LevelRow {
+    let mut srv = Server::new(serve_config(p, p.workers.max(1)));
+    for (i, a) in graphs.iter().enumerate() {
+        srv.register_graph(&format!("g{i}"), a.clone());
+    }
+    let mut rng = Rng::new(7);
+    let b_pool: Vec<Dense> =
+        graphs.iter().map(|a| Dense::random(a.nrows, p.n_dense, &mut rng)).collect();
+    let retries = AtomicU64::new(0);
+    let t0 = Instant::now();
+    thread::scope(|s| {
+        for c in 0..clients {
+            let srv = &srv;
+            let b_pool = &b_pool;
+            let retries = &retries;
+            s.spawn(move || {
+                for r in 0..p.reqs_per_client {
+                    let gi = (c + r) % b_pool.len();
+                    loop {
+                        let req = ServeRequest::spmm(&format!("g{gi}"), b_pool[gi].clone());
+                        match srv.submit_wait(req) {
+                            Ok(_) => break,
+                            Err(ServeError::Saturated { .. }) => {
+                                retries.fetch_add(1, Ordering::Relaxed);
+                                thread::sleep(Duration::from_micros(200));
+                            }
+                            Err(e) => panic!("bench request failed: {e}"),
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = srv.shutdown();
+    let lat = latency_stats(&stats.total_secs);
+    let requests = clients * p.reqs_per_client;
+    LevelRow {
+        clients,
+        requests,
+        throughput_rps: requests as f64 / wall.max(1e-12),
+        p50_ms: lat.p50 * 1e3,
+        p99_ms: lat.p99 * 1e3,
+        mean_batch: stats.mean_batch(),
+        hit_rate: stats.hit_rate(),
+        retries: retries.load(Ordering::Relaxed),
+    }
+}
+
+fn json_report(p: &BenchPreset, rows: &[LevelRow]) -> String {
+    let mut j = String::new();
+    j.push_str("{\n");
+    let _ = writeln!(j, "  \"preset\": \"{}\",", p.name);
+    let _ = writeln!(j, "  \"nranks\": {},", p.nranks);
+    let _ = writeln!(j, "  \"graphs\": {},", p.graphs);
+    let _ = writeln!(j, "  \"nrows\": {},", p.nrows);
+    let _ = writeln!(j, "  \"n_dense\": {},", p.n_dense);
+    let _ = writeln!(j, "  \"workers\": {},", p.workers);
+    j.push_str("  \"levels\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            j,
+            "    {{\"clients\": {}, \"requests\": {}, \"throughput_rps\": {:.3}, \
+             \"p50_ms\": {:.4}, \"p99_ms\": {:.4}, \"mean_batch\": {:.3}, \
+             \"hit_rate\": {:.4}, \"retries\": {}}}",
+            r.clients,
+            r.requests,
+            r.throughput_rps,
+            r.p50_ms,
+            r.p99_ms,
+            r.mean_batch,
+            r.hit_rate,
+            r.retries
+        );
+        j.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    j.push_str("  ]\n}\n");
+    j
+}
+
+/// Run the full bench — gate, sweep, table, JSON — returning the printable
+/// report. `out` is the JSON path (conventionally
+/// `bench_results/serve_bench.json`).
+pub fn run(p: &BenchPreset, out: &Path) -> Result<String> {
+    verify_batching(p)?;
+    let graphs = bench_graphs(p);
+    let mut table = Table::new(&[
+        "clients", "req/s", "p50 ms", "p99 ms", "mean batch", "hit rate", "retries",
+    ]);
+    let mut rows = Vec::new();
+    for &clients in p.client_counts {
+        let row = run_level(p, &graphs, clients);
+        table.row(vec![
+            row.clients.to_string(),
+            format!("{:.1}", row.throughput_rps),
+            format!("{:.3}", row.p50_ms),
+            format!("{:.3}", row.p99_ms),
+            format!("{:.2}", row.mean_batch),
+            format!("{:.2}", row.hit_rate),
+            row.retries.to_string(),
+        ]);
+        rows.push(row);
+    }
+    if let Some(dir) = out.parent() {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create bench output dir {}", dir.display()))?;
+    }
+    std::fs::write(out, json_report(p, &rows))
+        .with_context(|| format!("write {}", out.display()))?;
+    let mut report = String::new();
+    let _ = writeln!(report, "serve bench (preset {}): batching gate OK (bitwise)", p.name);
+    report.push_str(&table.render());
+    let _ = writeln!(report, "wrote {}", out.display());
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        assert!(preset("ci").is_some());
+        assert!(preset("full").is_some());
+        assert!(preset("nope").is_none());
+        let ci = preset("ci").unwrap();
+        assert!(ci.graphs >= 2 && ci.reqs_per_client >= 4);
+    }
+
+    #[test]
+    fn batching_gate_passes_on_the_ci_preset() {
+        verify_batching(&preset("ci").unwrap()).unwrap();
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let p = preset("ci").unwrap();
+        let rows = vec![LevelRow {
+            clients: 2,
+            requests: 16,
+            throughput_rps: 123.4,
+            p50_ms: 1.5,
+            p99_ms: 4.0,
+            mean_batch: 1.2,
+            hit_rate: 0.9,
+            retries: 0,
+        }];
+        let j = json_report(&p, &rows);
+        assert!(j.contains("\"preset\": \"ci\""));
+        assert!(j.contains("\"clients\": 2"));
+        assert!(j.trim_end().ends_with('}'));
+    }
+}

@@ -1,0 +1,815 @@
+//! Multi-tenant serving layer (DESIGN.md §11): a bounded request queue
+//! feeding a pool of worker threads, an LRU [`SessionRegistry`] of warm
+//! epoch-persistent sessions sharing one on-disk [`PlanCache`], admission
+//! control with structured back-pressure, and a micro-batcher that
+//! coalesces same-graph SpMM requests into one multi-RHS execute.
+//!
+//! Request path: `try_submit` → admission (unknown graph / saturated queue
+//! / shut down are *eager, structured* rejections — a client is never left
+//! hanging) → FIFO queue → a worker pops the head and coalesces up to
+//! `max_batch − 1` queued requests for the same graph (thread-backend SpMM
+//! only) → session lookup in the registry (miss ⇒ plan through the shared
+//! cache + build a session, evicting LRU at capacity) → one `execute` →
+//! per-request results fulfilled through [`Ticket`]s.
+//!
+//! Batching is column concatenation: distributed SpMM is column-independent
+//! bitwise (each output column is a function of the same A blocks and that
+//! B column alone, folded in the same canonical order), so executing the
+//! concatenation and splitting the output columns back per request is
+//! **bitwise identical** to executing each request alone. `serve --bench`
+//! re-proves this on every run; `tests/serve_suite.rs` pins it.
+//!
+//! Servers built with `workers == 0` never spawn threads: tests drive the
+//! queue deterministically with [`Server::drain_one`] / [`Server::drain_all`].
+
+pub mod bench;
+pub mod registry;
+
+pub use registry::{SessionKey, SessionRegistry};
+
+use crate::dense::Dense;
+use crate::exec::kernel::KernelOp;
+use crate::exec::session::SpmmSession;
+use crate::exec::{ExecOpts, ExecStats};
+use crate::metrics::{latency_stats, LatencyStats};
+use crate::plan::cache::{csr_fingerprint, PlanCache};
+use crate::sparse::Csr;
+use crate::spmm::{Backend, ExecError, ExecRequest, ExecResult, PlanSpec};
+use crate::topology::Topology;
+use std::collections::{HashMap, VecDeque};
+use std::fmt;
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::thread::{self, JoinHandle};
+use std::time::Instant;
+
+/// Everything a [`Server`] needs to know up front. All requests plan with
+/// the same [`PlanSpec`] and execute with the same [`ExecOpts`]; per-request
+/// variation is the graph, the kernel op, and the backend.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Worker threads. `0` = no threads; drive with [`Server::drain_one`].
+    pub workers: usize,
+    /// Queue bound: submissions beyond this are rejected
+    /// [`ServeError::Saturated`] (back-pressure, never unbounded growth).
+    pub queue_cap: usize,
+    /// Max live sessions in the LRU registry.
+    pub registry_cap: usize,
+    /// Micro-batch bound: a worker coalesces at most this many same-graph
+    /// SpMM requests into one execute. `1` disables batching.
+    pub max_batch: usize,
+    /// How every tenant's graph is planned (strategy, topology, hierarchy,
+    /// partitioner, planner params).
+    pub spec: PlanSpec,
+    /// Executor scheduling options shared by all sessions.
+    pub opts: ExecOpts,
+    /// Disk-backed plan cache directory (`None` = in-memory only).
+    pub cache_dir: Option<PathBuf>,
+}
+
+impl ServeConfig {
+    pub fn new(topo: Topology) -> ServeConfig {
+        ServeConfig {
+            workers: 2,
+            queue_cap: 64,
+            registry_cap: 4,
+            max_batch: 8,
+            spec: PlanSpec::new(topo),
+            opts: ExecOpts::default(),
+            cache_dir: None,
+        }
+    }
+}
+
+/// One tenant request: which registered graph, which kernel, owned
+/// operands (the client thread hands them off), and where to run.
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    pub graph: String,
+    pub op: KernelOp,
+    /// B operand (SpMM) or Y (SDDMM-family).
+    pub b: Dense,
+    /// X operand (SDDMM-family only).
+    pub x: Option<Dense>,
+    pub backend: Backend,
+}
+
+impl ServeRequest {
+    pub fn spmm(graph: &str, b: Dense) -> ServeRequest {
+        ServeRequest {
+            graph: graph.to_string(),
+            op: KernelOp::Spmm,
+            b,
+            x: None,
+            backend: Backend::Thread,
+        }
+    }
+
+    pub fn sddmm(graph: &str, x: Dense, y: Dense) -> ServeRequest {
+        ServeRequest { op: KernelOp::Sddmm, x: Some(x), ..ServeRequest::spmm(graph, y) }
+    }
+
+    pub fn fused(graph: &str, x: Dense, y: Dense) -> ServeRequest {
+        ServeRequest { op: KernelOp::FusedSddmmSpmm, x: Some(x), ..ServeRequest::spmm(graph, y) }
+    }
+
+    pub fn backend(mut self, backend: Backend) -> ServeRequest {
+        self.backend = backend;
+        self
+    }
+}
+
+/// What a fulfilled request gets back: the result plus its end-to-end
+/// latency breakdown (queue wait, session plan/build time — zero on a
+/// registry hit — and execute wall time) and the batch it rode in.
+#[derive(Clone, Debug)]
+pub struct ServeResponse {
+    pub dense: Option<Dense>,
+    pub sparse: Option<Csr>,
+    pub stats: ExecStats,
+    pub queue_secs: f64,
+    pub plan_secs: f64,
+    pub exec_secs: f64,
+    /// Number of requests coalesced into the execute that produced this
+    /// response (1 = unbatched).
+    pub batch_size: usize,
+}
+
+impl ServeResponse {
+    /// The dense output; panics on an SDDMM response.
+    pub fn into_dense(self) -> Dense {
+        self.dense.expect("request produced a sparse result, not dense")
+    }
+
+    /// The sparse output; panics on a dense-output response.
+    pub fn into_sparse(self) -> Csr {
+        self.sparse.expect("request produced a dense result, not sparse")
+    }
+}
+
+/// Structured rejection / failure. Admission errors (`Saturated`,
+/// `UnknownGraph`, `Shutdown`) return from `try_submit` without queueing;
+/// `Exec` arrives through the ticket when execution itself failed.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeError {
+    /// Back-pressure: the queue is at `queue_cap`. Retry later.
+    Saturated { cap: usize },
+    /// The request names a graph never passed to `register_graph`.
+    UnknownGraph(String),
+    /// The server shut down before (or while) the request was queued.
+    Shutdown,
+    /// Execution failed (rank failure on the proc backend, malformed
+    /// operands, ...).
+    Exec(String),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Saturated { cap } => {
+                write!(f, "request queue saturated (cap {cap}); retry later")
+            }
+            ServeError::UnknownGraph(g) => write!(f, "unknown graph {g:?}; register it first"),
+            ServeError::Shutdown => write!(f, "server shut down before the request executed"),
+            ServeError::Exec(m) => write!(f, "execution failed: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+type TicketSlot = Arc<(Mutex<Option<Result<ServeResponse, ServeError>>>, Condvar)>;
+
+/// A claim on one submitted request's eventual outcome. Every admitted
+/// request is fulfilled exactly once — with its response, an
+/// [`ServeError::Exec`], or [`ServeError::Shutdown`] — so `wait` never
+/// hangs on a live-or-stopping server.
+pub struct Ticket {
+    slot: TicketSlot,
+}
+
+impl Ticket {
+    /// Block until the request is fulfilled.
+    pub fn wait(self) -> Result<ServeResponse, ServeError> {
+        let (lock, cond) = &*self.slot;
+        let mut slot = lock.lock().unwrap();
+        loop {
+            match slot.take() {
+                Some(res) => return res,
+                None => slot = cond.wait(slot).unwrap(),
+            }
+        }
+    }
+
+    /// The outcome if already fulfilled, without blocking.
+    pub fn try_wait(&self) -> Option<Result<ServeResponse, ServeError>> {
+        self.slot.0.lock().unwrap().take()
+    }
+}
+
+fn fulfill(slot: &TicketSlot, res: Result<ServeResponse, ServeError>) {
+    let (lock, cond) = &**slot;
+    *lock.lock().unwrap() = Some(res);
+    cond.notify_all();
+}
+
+/// Counters and per-request latency samples, snapshot via
+/// [`Server::stats`] (registry counters are merged in at snapshot time).
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub completed: u64,
+    /// Admission rejections (saturated / unknown graph / shut down) plus
+    /// requests drained with `Shutdown` errors.
+    pub rejected: u64,
+    /// Requests fulfilled with [`ServeError::Exec`].
+    pub failed: u64,
+    /// Coalesced execute calls (size ≥ 2).
+    pub batches: u64,
+    /// Requests that rode in those coalesced executes.
+    pub batched_requests: u64,
+    pub max_batch_seen: usize,
+    pub registry_hits: u64,
+    pub registry_misses: u64,
+    pub registry_evictions: u64,
+    /// Per-request samples, one entry per completed request.
+    pub queue_secs: Vec<f64>,
+    pub plan_secs: Vec<f64>,
+    pub exec_secs: Vec<f64>,
+    /// Submit-to-fulfill wall time.
+    pub total_secs: Vec<f64>,
+}
+
+impl ServeStats {
+    /// Order statistics over end-to-end request latency.
+    pub fn latency(&self) -> LatencyStats {
+        latency_stats(&self.total_secs)
+    }
+
+    /// Mean size of coalesced executes counting singletons, i.e. requests
+    /// per execute call (1.0 = batching never engaged).
+    pub fn mean_batch(&self) -> f64 {
+        let singles = self.completed.saturating_sub(self.batched_requests);
+        let execs = singles + self.batches;
+        if execs == 0 {
+            0.0
+        } else {
+            self.completed as f64 / execs as f64
+        }
+    }
+
+    /// Registry hit rate over all session lookups (0.0 when none).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.registry_hits + self.registry_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.registry_hits as f64 / total as f64
+        }
+    }
+}
+
+struct Graph {
+    a: Csr,
+    fp: u64,
+}
+
+struct Pending {
+    req: ServeRequest,
+    slot: TicketSlot,
+    enqueued: Instant,
+}
+
+struct Queue {
+    deque: VecDeque<Pending>,
+    open: bool,
+}
+
+struct Inner {
+    cfg: ServeConfig,
+    graphs: RwLock<HashMap<String, Arc<Graph>>>,
+    queue: Mutex<Queue>,
+    ready: Condvar,
+    registry: Mutex<SessionRegistry>,
+    cache: Mutex<PlanCache>,
+    stats: Mutex<ServeStats>,
+}
+
+/// The multi-tenant server. Shared-reference methods (`register_graph`,
+/// `try_submit`, `stats`, `drain_*`) are safe from any thread; `shutdown`
+/// stops admission, joins the workers, and drains stragglers with
+/// structured errors (also run on drop).
+pub struct Server {
+    inner: Arc<Inner>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    pub fn new(cfg: ServeConfig) -> Server {
+        assert!(cfg.queue_cap >= 1, "queue capacity must be >= 1");
+        assert!(cfg.max_batch >= 1, "max_batch must be >= 1");
+        let cache = match &cfg.cache_dir {
+            Some(dir) => PlanCache::with_dir(dir),
+            None => PlanCache::in_memory(),
+        };
+        let inner = Arc::new(Inner {
+            graphs: RwLock::new(HashMap::new()),
+            queue: Mutex::new(Queue { deque: VecDeque::new(), open: true }),
+            ready: Condvar::new(),
+            registry: Mutex::new(SessionRegistry::new(cfg.registry_cap)),
+            cache: Mutex::new(cache),
+            stats: Mutex::new(ServeStats::default()),
+            cfg,
+        });
+        let workers = (0..inner.cfg.workers)
+            .map(|i| {
+                let inner = inner.clone();
+                thread::Builder::new()
+                    .name(format!("serve-worker-{i}"))
+                    .spawn(move || while step(&inner, true) {})
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        Server { inner, workers }
+    }
+
+    /// Register (or replace) a tenant graph under `name`. Fingerprinted
+    /// once here; requests refer to graphs by name only.
+    pub fn register_graph(&self, name: &str, a: Csr) {
+        let fp = csr_fingerprint(&a);
+        self.inner.graphs.write().unwrap().insert(name.to_string(), Arc::new(Graph { a, fp }));
+    }
+
+    /// Admission control: queue the request or reject it *now* with a
+    /// structured error. Never blocks on a full queue.
+    pub fn try_submit(&self, req: ServeRequest) -> Result<Ticket, ServeError> {
+        if !self.inner.graphs.read().unwrap().contains_key(&req.graph) {
+            self.inner.stats.lock().unwrap().rejected += 1;
+            return Err(ServeError::UnknownGraph(req.graph));
+        }
+        let mut q = self.inner.queue.lock().unwrap();
+        if !q.open {
+            drop(q);
+            self.inner.stats.lock().unwrap().rejected += 1;
+            return Err(ServeError::Shutdown);
+        }
+        if q.deque.len() >= self.inner.cfg.queue_cap {
+            let cap = self.inner.cfg.queue_cap;
+            drop(q);
+            self.inner.stats.lock().unwrap().rejected += 1;
+            return Err(ServeError::Saturated { cap });
+        }
+        let slot: TicketSlot = Arc::new((Mutex::new(None), Condvar::new()));
+        q.deque.push_back(Pending { req, slot: slot.clone(), enqueued: Instant::now() });
+        drop(q);
+        self.inner.ready.notify_one();
+        Ok(Ticket { slot })
+    }
+
+    /// Submit and block for the outcome (the closed-loop clients' path).
+    pub fn submit_wait(&self, req: ServeRequest) -> Result<ServeResponse, ServeError> {
+        self.try_submit(req)?.wait()
+    }
+
+    /// Process the next queued request inline (plus whatever coalesces
+    /// with it); `false` when the queue is empty. The deterministic drive
+    /// for `workers == 0` servers.
+    pub fn drain_one(&self) -> bool {
+        step(&self.inner, false)
+    }
+
+    /// [`Server::drain_one`] until empty; returns the number of execute
+    /// calls performed (batches count once).
+    pub fn drain_all(&self) -> usize {
+        let mut n = 0;
+        while self.drain_one() {
+            n += 1;
+        }
+        n
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.inner.queue.lock().unwrap().deque.len()
+    }
+
+    /// Snapshot of the counters and latency samples so far, with the
+    /// registry's hit/miss/eviction counters merged in.
+    pub fn stats(&self) -> ServeStats {
+        let mut s = self.inner.stats.lock().unwrap().clone();
+        let reg = self.inner.registry.lock().unwrap();
+        s.registry_hits = reg.hits;
+        s.registry_misses = reg.misses;
+        s.registry_evictions = reg.evictions;
+        s
+    }
+
+    /// Stop admission, join the workers (they finish in-flight batches),
+    /// fulfill anything still queued with [`ServeError::Shutdown`], and
+    /// return the final stats. Idempotent.
+    pub fn shutdown(&mut self) -> ServeStats {
+        self.inner.queue.lock().unwrap().open = false;
+        self.inner.ready.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        let leftovers: Vec<Pending> = {
+            let mut q = self.inner.queue.lock().unwrap();
+            q.deque.drain(..).collect()
+        };
+        if !leftovers.is_empty() {
+            self.inner.stats.lock().unwrap().rejected += leftovers.len() as u64;
+            for p in &leftovers {
+                fulfill(&p.slot, Err(ServeError::Shutdown));
+            }
+        }
+        self.stats()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Pop one request (blocking on the condvar if `block`), coalesce, and
+/// execute. Returns `false` when there is nothing to do (queue empty and
+/// either non-blocking or closed).
+fn step(inner: &Inner, block: bool) -> bool {
+    let mut q = inner.queue.lock().unwrap();
+    let batch = loop {
+        if let Some(head) = q.deque.pop_front() {
+            break collect_batch(inner, &mut q, head);
+        }
+        if !q.open || !block {
+            return false;
+        }
+        q = inner.ready.wait(q).unwrap();
+    };
+    drop(q);
+    process(inner, batch);
+    true
+}
+
+/// Micro-batcher: starting from `head`, pull queued requests that can ride
+/// the same execute — same graph, thread-backend SpMM, same B row count —
+/// up to `max_batch`. Non-matching requests keep their queue positions.
+fn collect_batch(inner: &Inner, q: &mut Queue, head: Pending) -> Vec<Pending> {
+    let coalescable = head.req.op == KernelOp::Spmm && matches!(head.req.backend, Backend::Thread);
+    let mut batch = vec![head];
+    if !coalescable || inner.cfg.max_batch < 2 {
+        return batch;
+    }
+    let graph = batch[0].req.graph.clone();
+    let nrows = batch[0].req.b.nrows;
+    let mut i = 0;
+    while i < q.deque.len() && batch.len() < inner.cfg.max_batch {
+        let p = &q.deque[i];
+        let rides = p.req.graph == graph
+            && p.req.op == KernelOp::Spmm
+            && matches!(p.req.backend, Backend::Thread)
+            && p.req.b.nrows == nrows;
+        if rides {
+            batch.push(q.deque.remove(i).unwrap());
+        } else {
+            i += 1;
+        }
+    }
+    batch
+}
+
+/// Execute a batch (size 1 = a plain request) end to end: session lookup,
+/// execute, split, fulfill, record.
+fn process(inner: &Inner, batch: Vec<Pending>) {
+    let popped = Instant::now();
+    let graph = inner.graphs.read().unwrap().get(&batch[0].req.graph).cloned();
+    let Some(graph) = graph else {
+        // Unreachable through try_submit (admission checks eagerly and
+        // graphs are never unregistered), but never hang a ticket.
+        for p in batch {
+            let name = p.req.graph.clone();
+            fulfill(&p.slot, Err(ServeError::UnknownGraph(name)));
+        }
+        return;
+    };
+    let key = SessionKey {
+        fp: graph.fp,
+        partitioner: inner.cfg.spec.partitioner,
+        op: batch[0].req.op,
+        backend: batch[0].req.backend.name(),
+    };
+    let t_plan = Instant::now();
+    let (sess, _hit) = inner.registry.lock().unwrap().get_or_build(key, || {
+        let mut cache = inner.cache.lock().unwrap();
+        let dist = inner.cfg.spec.plan_cached(&graph.a, &mut cache);
+        dist.into_session(inner.cfg.opts, true)
+    });
+    let plan_secs = t_plan.elapsed().as_secs_f64();
+
+    if batch.len() == 1 {
+        let p = batch.into_iter().next().unwrap();
+        let queue_secs = popped.duration_since(p.enqueued).as_secs_f64();
+        let t = Instant::now();
+        let res = run_one(inner, &sess, &p.req);
+        let exec_secs = t.elapsed().as_secs_f64();
+        match res {
+            Ok(r) => {
+                let resp = ServeResponse {
+                    dense: r.dense,
+                    sparse: r.sparse,
+                    stats: r.stats,
+                    queue_secs,
+                    plan_secs,
+                    exec_secs,
+                    batch_size: 1,
+                };
+                record_done(inner, &[&p], popped, plan_secs, exec_secs, 1);
+                fulfill(&p.slot, Ok(resp));
+            }
+            Err(e) => {
+                inner.stats.lock().unwrap().failed += 1;
+                fulfill(&p.slot, Err(ServeError::Exec(e.to_string())));
+            }
+        }
+        return;
+    }
+
+    // Coalesced SpMM: concatenate the B columns row-major, execute once,
+    // split the output columns back. Column independence makes this
+    // bitwise-identical to executing each request alone.
+    let n = batch.len();
+    let nrows = batch[0].req.b.nrows;
+    let total: usize = batch.iter().map(|p| p.req.b.ncols).sum();
+    let mut combined = Dense::zeros(nrows, total);
+    for r in 0..nrows {
+        let row = &mut combined.data[r * total..(r + 1) * total];
+        let mut off = 0;
+        for p in &batch {
+            let w = p.req.b.ncols;
+            row[off..off + w].copy_from_slice(&p.req.b.data[r * w..(r + 1) * w]);
+            off += w;
+        }
+    }
+    let t = Instant::now();
+    let res = sess.lock().unwrap().execute(&ExecRequest::spmm(&combined));
+    let exec_secs = t.elapsed().as_secs_f64();
+    match res {
+        Ok(r) => {
+            let (c, stats) = (r.dense.expect("SpMM returns dense"), r.stats);
+            let out_rows = c.nrows;
+            let refs: Vec<&Pending> = batch.iter().collect();
+            record_done(inner, &refs, popped, plan_secs, exec_secs, n);
+            let mut off = 0;
+            for p in &batch {
+                let w = p.req.b.ncols;
+                let mut mine = Dense::zeros(out_rows, w);
+                for r in 0..out_rows {
+                    mine.data[r * w..(r + 1) * w]
+                        .copy_from_slice(&c.data[r * total + off..r * total + off + w]);
+                }
+                off += w;
+                let resp = ServeResponse {
+                    dense: Some(mine),
+                    sparse: None,
+                    stats: stats.clone(),
+                    queue_secs: popped.duration_since(p.enqueued).as_secs_f64(),
+                    plan_secs,
+                    exec_secs,
+                    batch_size: n,
+                };
+                fulfill(&p.slot, Ok(resp));
+            }
+        }
+        Err(e) => {
+            inner.stats.lock().unwrap().failed += n as u64;
+            for p in &batch {
+                fulfill(&p.slot, Err(ServeError::Exec(e.to_string())));
+            }
+        }
+    }
+}
+
+/// Execute one request on its backend: thread requests go through the warm
+/// session; proc requests go through the session's frozen plan via
+/// [`crate::spmm::DistSpmm::execute`] (worker processes re-derive their
+/// own rank state, so there is nothing session-side to reuse).
+fn run_one(
+    inner: &Inner,
+    sess: &Arc<Mutex<SpmmSession>>,
+    req: &ServeRequest,
+) -> Result<ExecResult, ExecError> {
+    let missing_x =
+        || ExecError::Unsupported(format!("{} requires the X operand", req.op.name()));
+    let er = match req.op {
+        KernelOp::Spmm => ExecRequest::spmm(&req.b),
+        KernelOp::Sddmm => ExecRequest::sddmm(req.x.as_ref().ok_or_else(missing_x)?, &req.b),
+        KernelOp::FusedSddmmSpmm => {
+            ExecRequest::fused(req.x.as_ref().ok_or_else(missing_x)?, &req.b)
+        }
+    };
+    match &req.backend {
+        Backend::Thread => sess.lock().unwrap().execute(&er),
+        Backend::Proc(_) => {
+            let er = er.backend(req.backend.clone()).opts(inner.cfg.opts);
+            sess.lock().unwrap().dist().execute(&er)
+        }
+    }
+}
+
+/// Push one latency sample set per fulfilled request and bump the batch
+/// counters.
+fn record_done(
+    inner: &Inner,
+    batch: &[&Pending],
+    popped: Instant,
+    plan_secs: f64,
+    exec_secs: f64,
+    batch_size: usize,
+) {
+    let now = Instant::now();
+    let mut st = inner.stats.lock().unwrap();
+    st.completed += batch.len() as u64;
+    if batch_size >= 2 {
+        st.batches += 1;
+        st.batched_requests += batch.len() as u64;
+        st.max_batch_seen = st.max_batch_seen.max(batch_size);
+    } else {
+        st.max_batch_seen = st.max_batch_seen.max(1);
+    }
+    for p in batch {
+        st.queue_secs.push(popped.duration_since(p.enqueued).as_secs_f64());
+        st.plan_secs.push(plan_secs);
+        st.exec_secs.push(exec_secs);
+        st.total_secs.push(now.duration_since(p.enqueued).as_secs_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::util::rng::Rng;
+
+    fn cfg(nranks: usize) -> ServeConfig {
+        let mut c = ServeConfig::new(Topology::tsubame4(nranks));
+        c.workers = 0;
+        c
+    }
+
+    #[test]
+    fn drain_serves_a_request_bitwise() {
+        let a = gen::rmat(96, 900, (0.55, 0.2, 0.19), false, 21);
+        let srv = Server::new(cfg(4));
+        srv.register_graph("g", a.clone());
+        let mut rng = Rng::new(5);
+        let b = Dense::random(96, 6, &mut rng);
+        let ticket = srv.try_submit(ServeRequest::spmm("g", b.clone())).unwrap();
+        assert_eq!(srv.drain_all(), 1);
+        let resp = ticket.wait().unwrap();
+        assert_eq!(resp.batch_size, 1);
+        let spec = PlanSpec::new(Topology::tsubame4(4));
+        let (want, _) = spec.plan(&a).execute(&ExecRequest::spmm(&b)).unwrap().into_dense();
+        assert_eq!(resp.into_dense(), want);
+    }
+
+    #[test]
+    fn admission_is_eager_and_structured() {
+        let mut c = cfg(2);
+        c.queue_cap = 2;
+        let a = gen::erdos_renyi(32, 32, 150, 9);
+        let mut srv = Server::new(c);
+        srv.register_graph("g", a);
+        let b = Dense::zeros(32, 2);
+        match srv.try_submit(ServeRequest::spmm("nope", b.clone())) {
+            Err(ServeError::UnknownGraph(g)) => assert_eq!(g, "nope"),
+            other => panic!("expected UnknownGraph, got {other:?}"),
+        }
+        let _t1 = srv.try_submit(ServeRequest::spmm("g", b.clone())).unwrap();
+        let _t2 = srv.try_submit(ServeRequest::spmm("g", b.clone())).unwrap();
+        match srv.try_submit(ServeRequest::spmm("g", b.clone())) {
+            Err(ServeError::Saturated { cap }) => assert_eq!(cap, 2),
+            other => panic!("expected Saturated, got {other:?}"),
+        }
+        // Shutdown drains the two queued requests with structured errors.
+        let stats = srv.shutdown();
+        assert_eq!(stats.rejected, 4);
+        match _t1.wait() {
+            Err(ServeError::Shutdown) => {}
+            other => panic!("expected Shutdown for the drained ticket, got {other:?}"),
+        }
+        match srv.try_submit(ServeRequest::spmm("g", b)) {
+            Err(ServeError::Shutdown) => {}
+            other => panic!("expected Shutdown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn batcher_coalesces_same_graph_spmm_only() {
+        let mut c = cfg(4);
+        c.max_batch = 8;
+        let a = gen::rmat(64, 500, (0.55, 0.2, 0.19), false, 22);
+        let a2 = gen::rmat(64, 500, (0.55, 0.2, 0.19), false, 23);
+        let srv = Server::new(c);
+        srv.register_graph("g", a.clone());
+        srv.register_graph("h", a2);
+        let mut rng = Rng::new(6);
+        let b1 = Dense::random(64, 4, &mut rng);
+        let b2 = Dense::random(64, 7, &mut rng);
+        let x = Dense::random(64, 4, &mut rng);
+        let t1 = srv.try_submit(ServeRequest::spmm("g", b1.clone())).unwrap();
+        let th = srv.try_submit(ServeRequest::spmm("h", b1.clone())).unwrap();
+        let ts = srv.try_submit(ServeRequest::sddmm("g", x.clone(), x.clone())).unwrap();
+        let t2 = srv.try_submit(ServeRequest::spmm("g", b2.clone())).unwrap();
+        // 3 executes: {g:b1, g:b2} coalesce; h and the SDDMM run alone.
+        assert_eq!(srv.drain_all(), 3);
+        assert_eq!(t1.wait().unwrap().batch_size, 2);
+        assert_eq!(th.wait().unwrap().batch_size, 1);
+        assert_eq!(ts.wait().unwrap().batch_size, 1);
+        let r2 = t2.wait().unwrap();
+        assert_eq!(r2.batch_size, 2);
+        // Batched result is bitwise-identical to direct execution.
+        let spec = PlanSpec::new(Topology::tsubame4(4));
+        let (want, _) = spec.plan(&a).execute(&ExecRequest::spmm(&b2)).unwrap().into_dense();
+        let got = r2.into_dense();
+        assert_eq!(got.ncols, 7);
+        assert!(got
+            .data
+            .iter()
+            .zip(want.data.iter())
+            .all(|(x, y)| x.to_bits() == y.to_bits()));
+        let stats = srv.stats();
+        assert_eq!(stats.completed, 4);
+        assert_eq!(stats.batches, 1);
+        assert_eq!(stats.batched_requests, 2);
+        assert_eq!(stats.max_batch_seen, 2);
+        assert!((stats.mean_batch() - 4.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn registry_hits_and_lru_eviction_through_the_server() {
+        let mut c = cfg(2);
+        c.registry_cap = 2;
+        let graphs: Vec<Csr> =
+            (0..3).map(|i| gen::erdos_renyi(48, 48, 300, 30 + i as u64)).collect();
+        let srv = Server::new(c);
+        for (i, a) in graphs.iter().enumerate() {
+            srv.register_graph(&format!("g{i}"), a.clone());
+        }
+        let b = Dense::zeros(48, 3);
+        for gi in [0, 0, 1, 2, 0] {
+            let t = srv.try_submit(ServeRequest::spmm(&format!("g{gi}"), b.clone())).unwrap();
+            srv.drain_all();
+            t.wait().unwrap();
+        }
+        let s = srv.stats();
+        // g0 miss, g0 hit, g1 miss, g2 miss (evicts g0), g0 miss again.
+        assert_eq!(s.registry_hits, 1);
+        assert_eq!(s.registry_misses, 4);
+        assert_eq!(s.registry_evictions, 2);
+        assert!(s.hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn sddmm_and_fused_requests_serve_end_to_end() {
+        let a = gen::rmat(72, 600, (0.55, 0.2, 0.19), false, 31);
+        let srv = Server::new(cfg(4));
+        srv.register_graph("g", a.clone());
+        let mut rng = Rng::new(8);
+        let x = Dense::random(72, 5, &mut rng);
+        let y = Dense::random(72, 5, &mut rng);
+        let ts = srv.try_submit(ServeRequest::sddmm("g", x.clone(), y.clone())).unwrap();
+        let tf = srv.try_submit(ServeRequest::fused("g", x.clone(), y.clone())).unwrap();
+        srv.drain_all();
+        assert_eq!(ts.wait().unwrap().into_sparse(), a.sddmm(&x, &y));
+        let spec = PlanSpec::new(Topology::tsubame4(4));
+        let (want, _) =
+            spec.plan(&a).execute(&ExecRequest::fused(&x, &y)).unwrap().into_dense();
+        assert_eq!(tf.wait().unwrap().into_dense(), want);
+    }
+
+    #[test]
+    fn worker_threads_serve_concurrent_clients() {
+        let mut c = cfg(2);
+        c.workers = 2;
+        let a = gen::rmat(80, 700, (0.55, 0.2, 0.19), false, 33);
+        let srv = Server::new(c);
+        srv.register_graph("g", a.clone());
+        let spec = PlanSpec::new(Topology::tsubame4(2));
+        let dist = spec.plan(&a);
+        thread::scope(|s| {
+            for seed in 0..4u64 {
+                let srv = &srv;
+                let dist = &dist;
+                s.spawn(move || {
+                    let mut rng = Rng::new(100 + seed);
+                    let b = Dense::random(80, 4, &mut rng);
+                    let got =
+                        srv.submit_wait(ServeRequest::spmm("g", b.clone())).unwrap().into_dense();
+                    let (want, _) =
+                        dist.execute(&ExecRequest::spmm(&b)).unwrap().into_dense();
+                    assert_eq!(got, want);
+                });
+            }
+        });
+        assert_eq!(srv.stats().completed, 4);
+    }
+}

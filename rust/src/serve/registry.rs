@@ -1,0 +1,140 @@
+//! Capacity-bounded LRU session registry (DESIGN.md §11): the serve
+//! layer's pool of warm [`SpmmSession`]s, keyed by everything that makes a
+//! frozen plan reusable — the sparsity-pattern fingerprint
+//! ([`crate::plan::cache::csr_fingerprint`]), the partitioner that chose
+//! the row boundaries, the kernel op, and the backend tag. Tenants whose
+//! requests map to the same key share one session (and therefore its plan,
+//! programs, and exchange-buffer pool); when the registry is full the
+//! least-recently-used session is dropped, and a later request for it
+//! rebuilds through the shared [`crate::plan::cache::PlanCache`], so even
+//! an evicted tenant only re-pays program derivation, not planning.
+
+use crate::exec::kernel::KernelOp;
+use crate::exec::session::SpmmSession;
+use crate::partition::Partitioner;
+use std::sync::{Arc, Mutex};
+
+/// Identity of a reusable session: same key ⇒ bitwise-identical plan and
+/// programs, so sharing is safe across tenants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SessionKey {
+    /// FNV fingerprint of the graph's sparsity pattern *and* values
+    /// ([`crate::plan::cache::csr_fingerprint`]).
+    pub fp: u64,
+    pub partitioner: Partitioner,
+    pub op: KernelOp,
+    /// [`crate::spmm::Backend::name`] tag ("thread" / "proc").
+    pub backend: &'static str,
+}
+
+/// LRU map from [`SessionKey`] to a shared session, bounded at `cap`
+/// entries. Sessions hand out as `Arc<Mutex<_>>` so an evicted session
+/// that a worker is still executing on stays alive until that call ends.
+pub struct SessionRegistry {
+    cap: usize,
+    /// LRU order: index 0 is the least recently used, the back is the most.
+    entries: Vec<(SessionKey, Arc<Mutex<SpmmSession>>)>,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl SessionRegistry {
+    pub fn new(cap: usize) -> SessionRegistry {
+        assert!(cap >= 1, "session registry capacity must be >= 1");
+        SessionRegistry { cap, entries: Vec::new(), hits: 0, misses: 0, evictions: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, key: &SessionKey) -> bool {
+        self.entries.iter().any(|(k, _)| k == key)
+    }
+
+    /// Fetch the session for `key`, building and inserting it on a miss
+    /// (evicting the least recently used entry at capacity). The bool is
+    /// `true` on a hit. `build` runs with the registry locked by the
+    /// caller, which serializes planning: two workers missing the same key
+    /// never build the same session twice.
+    pub fn get_or_build(
+        &mut self,
+        key: SessionKey,
+        build: impl FnOnce() -> SpmmSession,
+    ) -> (Arc<Mutex<SpmmSession>>, bool) {
+        if let Some(i) = self.entries.iter().position(|(k, _)| *k == key) {
+            let entry = self.entries.remove(i);
+            let sess = entry.1.clone();
+            self.entries.push(entry);
+            self.hits += 1;
+            return (sess, true);
+        }
+        self.misses += 1;
+        let sess = Arc::new(Mutex::new(build()));
+        self.entries.push((key, sess.clone()));
+        if self.entries.len() > self.cap {
+            self.entries.remove(0);
+            self.evictions += 1;
+        }
+        (sess, false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Strategy;
+    use crate::sparse::gen;
+    use crate::spmm::PlanSpec;
+    use crate::topology::Topology;
+
+    fn key(fp: u64) -> SessionKey {
+        SessionKey { fp, partitioner: Partitioner::Balanced, op: KernelOp::Spmm, backend: "thread" }
+    }
+
+    fn session() -> SpmmSession {
+        let a = gen::erdos_renyi(32, 32, 200, 5);
+        PlanSpec::new(Topology::tsubame4(2))
+            .strategy(Strategy::Row)
+            .flat()
+            .plan(&a)
+            .into_session(crate::exec::ExecOpts::default(), true)
+    }
+
+    #[test]
+    fn hit_refreshes_recency_and_eviction_is_lru() {
+        let mut reg = SessionRegistry::new(2);
+        let (_, hit) = reg.get_or_build(key(1), session);
+        assert!(!hit);
+        let (_, hit) = reg.get_or_build(key(2), session);
+        assert!(!hit);
+        // Touch 1 so 2 becomes the LRU entry.
+        let (_, hit) = reg.get_or_build(key(1), session);
+        assert!(hit);
+        // Inserting 3 must evict 2, not 1.
+        reg.get_or_build(key(3), session);
+        assert_eq!(reg.len(), 2);
+        assert!(reg.contains(&key(1)));
+        assert!(!reg.contains(&key(2)));
+        assert!(reg.contains(&key(3)));
+        assert_eq!((reg.hits, reg.misses, reg.evictions), (1, 3, 1));
+    }
+
+    #[test]
+    fn distinct_key_components_do_not_alias() {
+        let mut reg = SessionRegistry::new(8);
+        reg.get_or_build(key(1), session);
+        let other = SessionKey { op: KernelOp::Sddmm, ..key(1) };
+        let (_, hit) = reg.get_or_build(other, session);
+        assert!(!hit, "kernel op is part of the identity");
+        let proc = SessionKey { backend: "proc", ..key(1) };
+        let (_, hit) = reg.get_or_build(proc, session);
+        assert!(!hit, "backend tag is part of the identity");
+        assert_eq!(reg.len(), 3);
+    }
+}

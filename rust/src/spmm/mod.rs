@@ -1,21 +1,29 @@
 //! Distributed SpMM engine: ties partitioning, cover-based planning,
 //! hierarchical scheduling, the executor, and the simulator into one
 //! object — the SHIRO framework's user-facing entry point.
+//!
+//! Plan with [`PlanSpec`], execute with [`DistSpmm::execute`] on an
+//! [`ExecRequest`] — one entry point across kernel (SpMM / SDDMM / fused)
+//! and backend (thread / proc). The pre-redesign `plan_*`/`execute_*`
+//! constellation survives as `#[deprecated]` shims delegating here.
 
 use crate::comm::{self, CommPlan, Strategy};
 use crate::dense::Dense;
 use crate::exec::{self, kernel::SpmmKernel, ExecStats};
 use crate::hierarchy::{self, HierSchedule};
-use crate::partition::{split_1d, LocalBlocks, Partitioner, RowPartition};
+use crate::partition::{LocalBlocks, Partitioner, RowPartition};
 use crate::sim::{self, SimJob, SimReport, Stage};
 use crate::sparse::Csr;
 use crate::topology::Topology;
 
+pub mod request;
+
 pub use crate::exec::kernel::KernelOp;
 pub use crate::exec::session::SpmmSession;
+pub use request::{Backend, ExecError, ExecRequest, ExecResult, PlanSpec};
 
 /// A fully planned distributed SpMM instance. Planning (steps 1–2 of the
-/// §5.1 workflow) happens once in [`DistSpmm::plan`] and is reused across
+/// §5.1 workflow) happens once in [`PlanSpec::plan`] and is reused across
 /// executions with the same sparsity pattern — `prep_secs` records the
 /// one-time MWVC cost reported in Tab. 3.
 pub struct DistSpmm {
@@ -29,79 +37,77 @@ pub struct DistSpmm {
 }
 
 impl DistSpmm {
-    /// Plan a distributed SpMM of `a` over `topo.nranks` ranks.
-    /// `hierarchical` enables the §6 two-stage schedule.
-    /// [`Strategy::Adaptive`] routes through the per-pair plan compiler
-    /// ([`crate::plan`]) with this topology's cost model at the default
-    /// planning width (N = 32); callers that execute/simulate at a
-    /// different N should use [`DistSpmm::plan_with_params`] so the
-    /// adaptive cost trade-off matches the actual run.
-    pub fn plan(a: &Csr, strategy: Strategy, topo: Topology, hierarchical: bool) -> DistSpmm {
-        Self::plan_with_params(
-            a,
-            strategy,
-            topo,
-            hierarchical,
-            &crate::plan::PlanParams::default(),
-        )
-    }
-
-    /// [`DistSpmm::plan`] with explicit planner knobs (adaptive planning
-    /// N, thread cap). `params` only affects [`Strategy::Adaptive`].
-    /// Rows are split with the seed's equal-row-count partitioner; use
-    /// [`DistSpmm::plan_partitioned`] for load-aware boundaries.
-    pub fn plan_with_params(
-        a: &Csr,
-        strategy: Strategy,
-        topo: Topology,
-        hierarchical: bool,
-        params: &crate::plan::PlanParams,
-    ) -> DistSpmm {
-        Self::plan_partitioned(a, strategy, topo, hierarchical, params, Partitioner::Balanced)
-    }
-
-    /// [`DistSpmm::plan_with_params`] with an explicit [`Partitioner`]:
-    /// the partitioner chooses the row boundaries (which nonzeros are
-    /// remote), then the strategy plans how the remote ones are served.
-    /// `prep_secs` covers both steps — partition search is part of the
-    /// one-time offline preprocessing.
-    pub fn plan_partitioned(
-        a: &Csr,
-        strategy: Strategy,
-        topo: Topology,
-        hierarchical: bool,
-        params: &crate::plan::PlanParams,
-        partitioner: Partitioner,
-    ) -> DistSpmm {
-        let t0 = std::time::Instant::now();
-        let part = partitioner.partition(a, topo.nranks, &topo, params.n_dense);
-        let blocks = split_1d(a, &part);
-        let plan = match strategy {
-            Strategy::Adaptive => crate::plan::compile(&blocks, &part, &topo, params).plan,
-            _ => comm::plan(&blocks, &part, strategy, None),
-        };
-        let sched = hierarchical.then(|| hierarchy::build(&plan, &topo));
-        let prep_secs = t0.elapsed().as_secs_f64();
-        DistSpmm { part, blocks, plan, sched, topo, prep_secs }
-    }
-
-    /// Like [`DistSpmm::plan_with_params`] with [`Strategy::Adaptive`], but
-    /// consulting a [`crate::plan::cache::PlanCache`] first so repeated
-    /// layers/epochs with the same sparsity pattern skip re-planning.
-    pub fn plan_adaptive_cached(
-        a: &Csr,
-        topo: Topology,
-        hierarchical: bool,
-        params: &crate::plan::PlanParams,
-        cache: &mut crate::plan::cache::PlanCache,
-    ) -> DistSpmm {
-        let part = RowPartition::balanced(a.nrows, topo.nranks);
-        let blocks = split_1d(a, &part);
-        let t0 = std::time::Instant::now();
-        let (plan, _hit) = cache.get_or_compile(&blocks, &part, &topo, params);
-        let sched = hierarchical.then(|| hierarchy::build(&plan, &topo));
-        let prep_secs = t0.elapsed().as_secs_f64();
-        DistSpmm { part, blocks, plan, sched, topo, prep_secs }
+    /// Execute one [`ExecRequest`] against this plan: the single entry
+    /// point across kernels and backends.
+    ///
+    /// - [`KernelOp::Spmm`]: C = A·B; result in `dense`.
+    /// - [`KernelOp::Sddmm`]: E = A ⊙ (X·Yᵀ) on **this SpMM plan** — the
+    ///   cross-kernel reuse at the heart of DESIGN.md §9: the same B-row
+    ///   covers that feed SpMM carry Y, the C covers reversed carry X, and
+    ///   every edge value is computed exactly once at the rank the plan
+    ///   assigned its nonzero to. Bitwise-identical to [`Csr::sddmm`];
+    ///   result in `sparse`.
+    /// - [`KernelOp::FusedSddmmSpmm`]: C = (A ⊙ (X·Yᵀ))·Y, GAT-style, one
+    ///   exchange — no second B shipment, no edge-value gather (the strict
+    ///   byte saving `ablation_fused` gates); result in `dense`.
+    ///
+    /// [`Backend::Thread`] runs on in-process ranks and is bit-identical
+    /// across every [`exec::ExecOpts`] combination — only the schedule
+    /// changes. [`Backend::Proc`] runs one OS process per rank over the
+    /// socket control plane ([`crate::runtime::multiproc`]) with the same
+    /// frozen per-rank programs, so results are bitwise-identical to the
+    /// thread backend's; worker failures surface as
+    /// [`ExecError::Rank`] instead of hanging.
+    pub fn execute(&self, req: &ExecRequest) -> Result<ExecResult, ExecError> {
+        let (part, plan, blocks) = (&self.part, &self.plan, &self.blocks);
+        let (sched, topo) = (self.sched.as_ref(), &self.topo);
+        match &req.backend {
+            Backend::Thread => match req.op {
+                KernelOp::Spmm => {
+                    let (c, st) =
+                        exec::run_with(part, plan, blocks, sched, topo, req.b, req.kernel, &req.opts);
+                    Ok(ExecResult::from_dense(c, st))
+                }
+                KernelOp::Sddmm => {
+                    let x = req.x_operand()?;
+                    let (e, st) = exec::run_sddmm_with(
+                        part, plan, blocks, sched, topo, x, req.b, req.kernel, &req.opts,
+                    );
+                    Ok(ExecResult::from_sparse(e, st))
+                }
+                KernelOp::FusedSddmmSpmm => {
+                    let x = req.x_operand()?;
+                    let (c, st) = exec::run_fused_with(
+                        part, plan, blocks, sched, topo, x, req.b, req.kernel, &req.opts,
+                    );
+                    Ok(ExecResult::from_dense(c, st))
+                }
+            },
+            Backend::Proc(popts) => {
+                use crate::runtime::multiproc;
+                match req.op {
+                    KernelOp::Spmm => {
+                        let (c, st) =
+                            multiproc::run(part, plan, blocks, sched, topo, req.b, &req.opts, popts)?;
+                        Ok(ExecResult::from_dense(c, st))
+                    }
+                    KernelOp::Sddmm => {
+                        let x = req.x_operand()?;
+                        let (e, st) = multiproc::run_sddmm(
+                            part, plan, blocks, sched, topo, x, req.b, &req.opts, popts,
+                        )?;
+                        Ok(ExecResult::from_sparse(e, st))
+                    }
+                    KernelOp::FusedSddmmSpmm => {
+                        let x = req.x_operand()?;
+                        let (c, st) = multiproc::run_fused(
+                            part, plan, blocks, sched, topo, x, req.b, &req.opts, popts,
+                        )?;
+                        Ok(ExecResult::from_dense(c, st))
+                    }
+                }
+            }
+        }
     }
 
     /// Derive the plan for Aᵀ by **mirroring** this plan — no partition
@@ -121,7 +127,7 @@ impl DistSpmm {
     /// Requires the 1D square-SpMM setting (`split_1d` enforces a square
     /// matrix, so rows and columns share `self.part`). `prep_secs` records
     /// only the mirroring time, which is linear in the plan.
-    pub fn plan_transpose(&self) -> DistSpmm {
+    pub fn transposed(&self) -> DistSpmm {
         let t0 = std::time::Instant::now();
         let n = self.part.nparts;
         let plan = self.plan.transpose();
@@ -160,149 +166,6 @@ impl DistSpmm {
     /// the kernel the session will run with.
     pub fn into_session(self, opts: exec::ExecOpts, prefers_tiles: bool) -> SpmmSession {
         SpmmSession::new(self, opts, prefers_tiles)
-    }
-
-    /// Execute for real on in-process ranks with the default overlapped
-    /// pipeline; returns global C and measured traffic stats.
-    pub fn execute(&self, b: &Dense, kernel: &(dyn SpmmKernel + Sync)) -> (Dense, ExecStats) {
-        self.execute_with(b, kernel, &exec::ExecOpts::default())
-    }
-
-    /// [`DistSpmm::execute`] with explicit executor options (`--overlap
-    /// on|off`, tile height, worker cap). Results are bit-identical across
-    /// every option combination — only the schedule changes.
-    pub fn execute_with(
-        &self,
-        b: &Dense,
-        kernel: &(dyn SpmmKernel + Sync),
-        opts: &exec::ExecOpts,
-    ) -> (Dense, ExecStats) {
-        exec::run_with(
-            &self.part,
-            &self.plan,
-            &self.blocks,
-            self.sched.as_ref(),
-            &self.topo,
-            b,
-            kernel,
-            opts,
-        )
-    }
-
-    /// Execute distributed SDDMM E = A ⊙ (X·Yᵀ) on **this SpMM plan** —
-    /// the cross-kernel reuse at the heart of DESIGN.md §9: the same B-row
-    /// covers that feed SpMM carry the Y operand, the C covers reversed
-    /// carry X, and every edge value is computed exactly once at the rank
-    /// the plan assigned its nonzero to. Bitwise-identical to
-    /// [`Csr::sddmm`] on any input.
-    pub fn execute_sddmm(
-        &self,
-        x: &Dense,
-        y: &Dense,
-        kernel: &(dyn SpmmKernel + Sync),
-    ) -> (Csr, ExecStats) {
-        self.execute_sddmm_with(x, y, kernel, &exec::ExecOpts::default())
-    }
-
-    /// [`DistSpmm::execute_sddmm`] with explicit executor options.
-    pub fn execute_sddmm_with(
-        &self,
-        x: &Dense,
-        y: &Dense,
-        kernel: &(dyn SpmmKernel + Sync),
-        opts: &exec::ExecOpts,
-    ) -> (Csr, ExecStats) {
-        exec::run_sddmm_with(
-            &self.part,
-            &self.plan,
-            &self.blocks,
-            self.sched.as_ref(),
-            &self.topo,
-            x,
-            y,
-            kernel,
-            opts,
-        )
-    }
-
-    /// Execute the fused SDDMM→SpMM kernel C = (A ⊙ (X·Yᵀ))·Y on this
-    /// plan: edge values are computed and immediately consumed as the SpMM
-    /// operand, GAT-style — one exchange, no second B shipment, no
-    /// edge-value gather (the strict byte saving `ablation_fused` gates).
-    pub fn execute_fused(
-        &self,
-        x: &Dense,
-        y: &Dense,
-        kernel: &(dyn SpmmKernel + Sync),
-    ) -> (Dense, ExecStats) {
-        self.execute_fused_with(x, y, kernel, &exec::ExecOpts::default())
-    }
-
-    /// [`DistSpmm::execute_fused`] with explicit executor options.
-    pub fn execute_fused_with(
-        &self,
-        x: &Dense,
-        y: &Dense,
-        kernel: &(dyn SpmmKernel + Sync),
-        opts: &exec::ExecOpts,
-    ) -> (Dense, ExecStats) {
-        exec::run_fused_with(
-            &self.part,
-            &self.plan,
-            &self.blocks,
-            self.sched.as_ref(),
-            &self.topo,
-            x,
-            y,
-            kernel,
-            opts,
-        )
-    }
-
-    /// Execute on the multi-process backend (`--backend proc`): one OS
-    /// process per rank, messages over the control plane's socket queue
-    /// ([`crate::runtime::multiproc`]). Runs the same frozen per-rank
-    /// program as [`DistSpmm::execute_with`], so C is bitwise-identical
-    /// to the thread backend's; failures surface as a structured
-    /// [`crate::runtime::multiproc::RankFailure`] instead of hanging.
-    pub fn execute_proc(
-        &self,
-        b: &Dense,
-        opts: &exec::ExecOpts,
-        popts: &crate::runtime::multiproc::ProcOpts,
-    ) -> Result<(Dense, ExecStats), crate::runtime::multiproc::RankFailure> {
-        crate::runtime::multiproc::run(
-            &self.part,
-            &self.plan,
-            &self.blocks,
-            self.sched.as_ref(),
-            &self.topo,
-            b,
-            opts,
-            popts,
-        )
-    }
-
-    /// Fused SDDMM→SpMM on the multi-process backend; proc counterpart of
-    /// [`DistSpmm::execute_fused_with`].
-    pub fn execute_fused_proc(
-        &self,
-        x: &Dense,
-        y: &Dense,
-        opts: &exec::ExecOpts,
-        popts: &crate::runtime::multiproc::ProcOpts,
-    ) -> Result<(Dense, ExecStats), crate::runtime::multiproc::RankFailure> {
-        crate::runtime::multiproc::run_fused(
-            &self.part,
-            &self.plan,
-            &self.blocks,
-            self.sched.as_ref(),
-            &self.topo,
-            x,
-            y,
-            opts,
-            popts,
-        )
     }
 
     /// Per-rank compute seconds for the pre-communication stage (local
@@ -369,21 +232,184 @@ impl DistSpmm {
     }
 }
 
-/// Distributed SDDMM engine sharing the SpMM plan machinery wholesale: a
-/// thin newtype over [`DistSpmm`] whose primary `execute` is the SDDMM
-/// kernel. Build one from scratch with [`DistSddmm::plan`] or wrap an
-/// existing plan with [`DistSddmm::from_spmm`] — either way the covers,
-/// hierarchy schedule, and session state are the same objects SpMM uses,
-/// so a workload can interleave both kernels (and the fused one) on one
-/// preprocessing pass.
+/// Legacy pre-`ExecRequest` surface, kept as thin shims. Every method
+/// delegates to [`PlanSpec`] / [`DistSpmm::execute`] and is pinned
+/// bitwise-identical to its replacement by `tests/api_compat.rs`.
+impl DistSpmm {
+    /// Plan a distributed SpMM of `a` over `topo.nranks` ranks.
+    #[deprecated(note = "use PlanSpec::new(topo).strategy(..).hierarchical(..).plan(a)")]
+    pub fn plan(a: &Csr, strategy: Strategy, topo: Topology, hierarchical: bool) -> DistSpmm {
+        PlanSpec::new(topo).strategy(strategy).hierarchical(hierarchical).plan(a)
+    }
+
+    /// [`DistSpmm::plan`] with explicit planner knobs.
+    #[deprecated(note = "use PlanSpec::new(topo).params(..).plan(a)")]
+    pub fn plan_with_params(
+        a: &Csr,
+        strategy: Strategy,
+        topo: Topology,
+        hierarchical: bool,
+        params: &crate::plan::PlanParams,
+    ) -> DistSpmm {
+        PlanSpec::new(topo)
+            .strategy(strategy)
+            .hierarchical(hierarchical)
+            .params(params.clone())
+            .plan(a)
+    }
+
+    /// [`DistSpmm::plan_with_params`] with an explicit [`Partitioner`].
+    #[deprecated(note = "use PlanSpec::new(topo).partitioner(..).plan(a)")]
+    pub fn plan_partitioned(
+        a: &Csr,
+        strategy: Strategy,
+        topo: Topology,
+        hierarchical: bool,
+        params: &crate::plan::PlanParams,
+        partitioner: Partitioner,
+    ) -> DistSpmm {
+        PlanSpec::new(topo)
+            .strategy(strategy)
+            .hierarchical(hierarchical)
+            .params(params.clone())
+            .partitioner(partitioner)
+            .plan(a)
+    }
+
+    /// Adaptive planning through a [`crate::plan::cache::PlanCache`].
+    #[deprecated(note = "use PlanSpec::new(topo).strategy(Strategy::Adaptive).plan_cached(a, cache)")]
+    pub fn plan_adaptive_cached(
+        a: &Csr,
+        topo: Topology,
+        hierarchical: bool,
+        params: &crate::plan::PlanParams,
+        cache: &mut crate::plan::cache::PlanCache,
+    ) -> DistSpmm {
+        PlanSpec::new(topo)
+            .strategy(Strategy::Adaptive)
+            .hierarchical(hierarchical)
+            .params(params.clone())
+            .plan_cached(a, cache)
+    }
+
+    /// Mirror this plan for Aᵀ.
+    #[deprecated(note = "renamed to DistSpmm::transposed")]
+    pub fn plan_transpose(&self) -> DistSpmm {
+        self.transposed()
+    }
+
+    /// C = A·B with explicit executor options.
+    #[deprecated(note = "use DistSpmm::execute(&ExecRequest::spmm(b).kernel(k).opts(o))")]
+    pub fn execute_with(
+        &self,
+        b: &Dense,
+        kernel: &(dyn SpmmKernel + Sync),
+        opts: &exec::ExecOpts,
+    ) -> (Dense, ExecStats) {
+        self.execute(&ExecRequest::spmm(b).kernel(kernel).opts(*opts))
+            .expect("thread backend is infallible")
+            .into_dense()
+    }
+
+    /// E = A ⊙ (X·Yᵀ) with default options.
+    #[deprecated(note = "use DistSpmm::execute(&ExecRequest::sddmm(x, y).kernel(k))")]
+    pub fn execute_sddmm(
+        &self,
+        x: &Dense,
+        y: &Dense,
+        kernel: &(dyn SpmmKernel + Sync),
+    ) -> (Csr, ExecStats) {
+        self.execute(&ExecRequest::sddmm(x, y).kernel(kernel))
+            .expect("thread backend is infallible")
+            .into_sparse()
+    }
+
+    /// [`DistSpmm::execute_sddmm`] with explicit executor options.
+    #[deprecated(note = "use DistSpmm::execute(&ExecRequest::sddmm(x, y).kernel(k).opts(o))")]
+    pub fn execute_sddmm_with(
+        &self,
+        x: &Dense,
+        y: &Dense,
+        kernel: &(dyn SpmmKernel + Sync),
+        opts: &exec::ExecOpts,
+    ) -> (Csr, ExecStats) {
+        self.execute(&ExecRequest::sddmm(x, y).kernel(kernel).opts(*opts))
+            .expect("thread backend is infallible")
+            .into_sparse()
+    }
+
+    /// Fused SDDMM→SpMM with default options.
+    #[deprecated(note = "use DistSpmm::execute(&ExecRequest::fused(x, y).kernel(k))")]
+    pub fn execute_fused(
+        &self,
+        x: &Dense,
+        y: &Dense,
+        kernel: &(dyn SpmmKernel + Sync),
+    ) -> (Dense, ExecStats) {
+        self.execute(&ExecRequest::fused(x, y).kernel(kernel))
+            .expect("thread backend is infallible")
+            .into_dense()
+    }
+
+    /// [`DistSpmm::execute_fused`] with explicit executor options.
+    #[deprecated(note = "use DistSpmm::execute(&ExecRequest::fused(x, y).kernel(k).opts(o))")]
+    pub fn execute_fused_with(
+        &self,
+        x: &Dense,
+        y: &Dense,
+        kernel: &(dyn SpmmKernel + Sync),
+        opts: &exec::ExecOpts,
+    ) -> (Dense, ExecStats) {
+        self.execute(&ExecRequest::fused(x, y).kernel(kernel).opts(*opts))
+            .expect("thread backend is infallible")
+            .into_dense()
+    }
+
+    /// C = A·B on the multi-process backend.
+    #[deprecated(note = "use DistSpmm::execute(&ExecRequest::spmm(b).backend(Backend::Proc(..)))")]
+    pub fn execute_proc(
+        &self,
+        b: &Dense,
+        opts: &exec::ExecOpts,
+        popts: &crate::runtime::multiproc::ProcOpts,
+    ) -> Result<(Dense, ExecStats), crate::runtime::multiproc::RankFailure> {
+        let req = ExecRequest::spmm(b).opts(*opts).backend(Backend::Proc(popts.clone()));
+        match self.execute(&req) {
+            Ok(r) => Ok(r.into_dense()),
+            Err(ExecError::Rank(f)) => Err(f),
+            Err(e) => panic!("proc SpMM cannot fail with {e}"),
+        }
+    }
+
+    /// Fused SDDMM→SpMM on the multi-process backend.
+    #[deprecated(note = "use DistSpmm::execute(&ExecRequest::fused(x, y).backend(Backend::Proc(..)))")]
+    pub fn execute_fused_proc(
+        &self,
+        x: &Dense,
+        y: &Dense,
+        opts: &exec::ExecOpts,
+        popts: &crate::runtime::multiproc::ProcOpts,
+    ) -> Result<(Dense, ExecStats), crate::runtime::multiproc::RankFailure> {
+        let req = ExecRequest::fused(x, y).opts(*opts).backend(Backend::Proc(popts.clone()));
+        match self.execute(&req) {
+            Ok(r) => Ok(r.into_dense()),
+            Err(ExecError::Rank(f)) => Err(f),
+            Err(e) => panic!("proc fused cannot fail with {e}"),
+        }
+    }
+}
+
+/// Distributed SDDMM engine as a newtype over [`DistSpmm`]. Superseded by
+/// [`ExecRequest::sddmm`] on [`DistSpmm::execute`] — the plan *is* an SpMM
+/// plan, so the wrapper only renamed methods.
+#[deprecated(note = "use DistSpmm::execute with ExecRequest::sddmm / ExecRequest::fused")]
 pub struct DistSddmm(pub DistSpmm);
 
+#[allow(deprecated)]
 impl DistSddmm {
-    /// Plan a distributed SDDMM of `a`'s pattern over `topo.nranks` ranks
-    /// (identical planning path to [`DistSpmm::plan`] — the plan *is* an
-    /// SpMM plan).
+    /// Plan a distributed SDDMM of `a`'s pattern over `topo.nranks` ranks.
     pub fn plan(a: &Csr, strategy: Strategy, topo: Topology, hierarchical: bool) -> DistSddmm {
-        DistSddmm(DistSpmm::plan(a, strategy, topo, hierarchical))
+        DistSddmm(PlanSpec::new(topo).strategy(strategy).hierarchical(hierarchical).plan(a))
     }
 
     /// Reuse an existing SpMM plan for SDDMM — zero additional
@@ -428,8 +454,7 @@ impl DistSddmm {
         self.0.execute_fused(x, y, kernel)
     }
 
-    /// Freeze into a kernel-generic [`SpmmSession`] (use
-    /// [`SpmmSession::execute_sddmm`] / [`SpmmSession::execute_fused`]).
+    /// Freeze into a kernel-generic [`SpmmSession`].
     pub fn into_session(self, opts: exec::ExecOpts, prefers_tiles: bool) -> SpmmSession {
         self.0.into_session(opts, prefers_tiles)
     }
@@ -448,15 +473,18 @@ mod tests {
     use crate::sparse::gen;
     use crate::util::rng::Rng;
 
+    fn spec(nranks: usize) -> PlanSpec {
+        PlanSpec::new(Topology::tsubame4(nranks))
+    }
+
     #[test]
     fn plan_execute_simulate_roundtrip() {
         let a = gen::rmat(128, 1500, (0.55, 0.2, 0.19), false, 1);
-        let topo = Topology::tsubame4(8);
-        let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), topo, true);
+        let d = spec(8).plan(&a);
         assert!(d.prep_secs >= 0.0);
         let mut rng = Rng::new(1);
         let b = Dense::random(128, 16, &mut rng);
-        let (c, stats) = d.execute(&b, &NativeKernel);
+        let (c, stats) = d.execute(&ExecRequest::spmm(&b)).unwrap().into_dense();
         assert!(serial_reference(&a, &b).diff_norm(&c) < 1e-3);
         assert!(stats.wall_secs > 0.0);
         let rep = d.simulate(16);
@@ -467,7 +495,7 @@ mod tests {
     #[test]
     fn flat_sim_has_three_stages() {
         let a = gen::erdos_renyi(64, 64, 600, 2);
-        let d = DistSpmm::plan(&a, Strategy::Column, Topology::tsubame4(4), false);
+        let d = spec(4).strategy(Strategy::Column).flat().plan(&a);
         let rep = d.simulate(32);
         assert_eq!(rep.per_stage.len(), 3);
     }
@@ -475,9 +503,8 @@ mod tests {
     #[test]
     fn joint_sim_no_slower_than_column_inter_bytes() {
         let a = gen::powerlaw(256, 4000, 1.4, 3);
-        let topo = Topology::tsubame4(16);
-        let joint = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), topo.clone(), true);
-        let col = DistSpmm::plan(&a, Strategy::Column, topo, true);
+        let joint = spec(16).strategy(Strategy::Joint(Solver::Koenig)).plan(&a);
+        let col = spec(16).strategy(Strategy::Column).plan(&a);
         let jr = joint.simulate(32);
         let cr = col.simulate(32);
         assert!(jr.inter_bytes <= cr.inter_bytes);
@@ -486,12 +513,11 @@ mod tests {
     #[test]
     fn adaptive_plan_executes_and_simulates() {
         let a = gen::rmat(128, 1500, (0.55, 0.2, 0.19), false, 9);
-        let topo = Topology::tsubame4(8);
-        let d = DistSpmm::plan(&a, Strategy::Adaptive, topo, true);
+        let d = spec(8).strategy(Strategy::Adaptive).plan(&a);
         assert_eq!(d.plan.strategy, Strategy::Adaptive);
         let mut rng = Rng::new(3);
         let b = Dense::random(128, 16, &mut rng);
-        let (c, _) = d.execute(&b, &NativeKernel);
+        let (c, _) = d.execute(&ExecRequest::spmm(&b)).unwrap().into_dense();
         assert!(serial_reference(&a, &b).diff_norm(&c) < 1e-3);
         assert!(d.simulate(16).total > 0.0);
     }
@@ -500,34 +526,28 @@ mod tests {
     fn adaptive_cached_matches_uncached() {
         let a = gen::rmat(128, 1500, (0.55, 0.2, 0.19), false, 10);
         let mut cache = crate::plan::cache::PlanCache::in_memory();
-        let params = crate::plan::PlanParams::default();
-        let d1 =
-            DistSpmm::plan_adaptive_cached(&a, Topology::tsubame4(8), true, &params, &mut cache);
-        let d2 =
-            DistSpmm::plan_adaptive_cached(&a, Topology::tsubame4(8), true, &params, &mut cache);
+        let d1 = spec(8).strategy(Strategy::Adaptive).plan_cached(&a, &mut cache);
+        let d2 = spec(8).strategy(Strategy::Adaptive).plan_cached(&a, &mut cache);
         assert_eq!(cache.hits, 1);
         assert_eq!(cache.misses, 1);
         assert_eq!(d1.plan.total_volume(32), d2.plan.total_volume(32));
         let mut rng = Rng::new(4);
         let b = Dense::random(128, 8, &mut rng);
-        let (c, _) = d2.execute(&b, &NativeKernel);
+        let (c, _) = d2.execute(&ExecRequest::spmm(&b)).unwrap().into_dense();
         assert!(serial_reference(&a, &b).diff_norm(&c) < 1e-3);
     }
 
     #[test]
     fn execute_with_options_bit_identical() {
         let a = gen::rmat(128, 1500, (0.55, 0.2, 0.19), false, 15);
-        let d = DistSpmm::plan(
-            &a,
-            Strategy::Joint(Solver::Koenig),
-            Topology::tsubame4(8),
-            true,
-        );
+        let d = spec(8).plan(&a);
         let mut rng = Rng::new(7);
         let b = Dense::random(128, 8, &mut rng);
-        let (c_on, _) = d.execute(&b, &NativeKernel);
-        let (c_off, off_stats) =
-            d.execute_with(&b, &NativeKernel, &crate::exec::ExecOpts::sequential());
+        let (c_on, _) = d.execute(&ExecRequest::spmm(&b)).unwrap().into_dense();
+        let (c_off, off_stats) = d
+            .execute(&ExecRequest::spmm(&b).opts(crate::exec::ExecOpts::sequential()))
+            .unwrap()
+            .into_dense();
         assert_eq!(c_on.data, c_off.data, "overlap option changed the bits");
         assert_eq!(off_stats.overlap_window().overlapped_bytes, 0);
     }
@@ -542,16 +562,9 @@ mod tests {
         let b = Dense::random(256, 8, &mut rng);
         let want = serial_reference(&a, &b);
         for partitioner in crate::partition::Partitioner::ALL {
-            let d = DistSpmm::plan_partitioned(
-                &a,
-                Strategy::Joint(Solver::Koenig),
-                Topology::tsubame4(8),
-                true,
-                &crate::plan::PlanParams::default(),
-                partitioner,
-            );
+            let d = spec(8).partitioner(partitioner).plan(&a);
             assert_eq!(d.part.nparts, 8);
-            let (c, _) = d.execute(&b, &NativeKernel);
+            let (c, _) = d.execute(&ExecRequest::spmm(&b)).unwrap().into_dense();
             assert!(
                 want.diff_norm(&c) < 1e-3,
                 "{} produced a wrong result",
@@ -560,22 +573,8 @@ mod tests {
             assert!(d.simulate(8).total > 0.0, "{} sim failed", partitioner.name());
         }
         // The load-aware splits actually change the boundaries here.
-        let bal = DistSpmm::plan_partitioned(
-            &a,
-            Strategy::Joint(Solver::Koenig),
-            Topology::tsubame4(8),
-            false,
-            &crate::plan::PlanParams::default(),
-            crate::partition::Partitioner::Balanced,
-        );
-        let nnz = DistSpmm::plan_partitioned(
-            &a,
-            Strategy::Joint(Solver::Koenig),
-            Topology::tsubame4(8),
-            false,
-            &crate::plan::PlanParams::default(),
-            crate::partition::Partitioner::NnzBalanced,
-        );
+        let bal = spec(8).flat().partitioner(Partitioner::Balanced).plan(&a);
+        let nnz = spec(8).flat().partitioner(Partitioner::NnzBalanced).plan(&a);
         assert_ne!(bal.part.starts, nnz.part.starts);
         assert!(
             crate::partition::max_rank_nnz(&a, &nnz.part)
@@ -584,7 +583,7 @@ mod tests {
     }
 
     #[test]
-    fn plan_transpose_executes_a_transpose_times_b() {
+    fn transposed_executes_a_transpose_times_b() {
         // Asymmetric matrix: the mirrored plan must compute Aᵀ·B (not
         // A·B), through both flat and hierarchical routing, and preserve
         // the forward plan's total volume exactly.
@@ -594,68 +593,58 @@ mod tests {
         let b = Dense::random(128, 16, &mut rng);
         let want = at.spmm(&b);
         for hier in [false, true] {
-            let fwd = DistSpmm::plan(
-                &a,
-                Strategy::Joint(Solver::Koenig),
-                Topology::tsubame4(8),
-                hier,
-            );
-            let bwd = fwd.plan_transpose();
+            let fwd = spec(8).hierarchical(hier).plan(&a);
+            let bwd = fwd.transposed();
             assert_eq!(bwd.plan.total_volume(16), fwd.plan.total_volume(16));
             assert_eq!(bwd.sched.is_some(), hier);
-            let (got, _) = bwd.execute(&b, &NativeKernel);
+            let (got, _) = bwd.execute(&ExecRequest::spmm(&b)).unwrap().into_dense();
             assert!(
                 want.diff_norm(&got) < 1e-3,
                 "hier={hier}: mirrored plan computed the wrong product"
             );
             // And the forward plan still computes A·B.
-            let (fgot, _) = fwd.execute(&b, &NativeKernel);
+            let (fgot, _) = fwd.execute(&ExecRequest::spmm(&b)).unwrap().into_dense();
             assert!(a.spmm(&b).diff_norm(&fgot) < 1e-3);
         }
     }
 
     #[test]
-    fn plan_transpose_simulates_and_sessions() {
+    fn transposed_simulates_and_sessions() {
         let a = gen::powerlaw(256, 4000, 1.4, 32);
-        let fwd = DistSpmm::plan(&a, Strategy::Adaptive, Topology::tsubame4(8), true);
-        let bwd = fwd.plan_transpose();
+        let fwd = spec(8).strategy(Strategy::Adaptive).plan(&a);
+        let bwd = fwd.transposed();
         assert!(bwd.simulate(16).total > 0.0);
         let mut rng = Rng::new(12);
         let b = Dense::random(256, 8, &mut rng);
         let want = a.transpose().spmm(&b);
         let mut session = bwd.into_session(crate::exec::ExecOpts::default(), true);
         for _ in 0..2 {
-            let (got, _) = session.execute(&b, &NativeKernel);
+            let (got, _) = session.execute(&ExecRequest::spmm(&b)).unwrap().into_dense();
             assert!(want.diff_norm(&got) < 1e-3);
         }
         assert!(session.amortization().steady_state());
     }
 
     #[test]
-    fn dist_sddmm_shares_the_plan_end_to_end() {
+    fn one_plan_serves_sddmm_and_fused_end_to_end() {
         let a = gen::powerlaw(256, 3500, 1.4, 41);
         let mut rng = Rng::new(13);
         let x = Dense::random(256, 8, &mut rng);
         let y = Dense::random(256, 8, &mut rng);
         let want = a.sddmm(&x, &y);
         for hier in [false, true] {
-            let d = DistSddmm::plan(
-                &a,
-                Strategy::Joint(Solver::Koenig),
-                Topology::tsubame4(8),
-                hier,
-            );
-            let (e, sddmm_stats) = d.execute(&x, &y, &NativeKernel);
+            let d = spec(8).hierarchical(hier).plan(&a);
+            let (e, sddmm_stats) = d.execute(&ExecRequest::sddmm(&x, &y)).unwrap().into_sparse();
             assert_eq!(e, want, "hier={hier}: distributed SDDMM != oracle");
             // One plan, two kernels, identical B-side traffic.
-            let (_, spmm_stats) = d.dist().execute(&y, &NativeKernel);
+            let (_, spmm_stats) = d.execute(&ExecRequest::spmm(&y)).unwrap().into_dense();
             assert_eq!(
                 spmm_stats.measured_b_volume(),
                 sddmm_stats.measured_b_volume(),
                 "hier={hier}"
             );
             // Fused output equals SDDMM-then-serial-SpMM numerically.
-            let (c, _) = d.execute_fused(&x, &y, &NativeKernel);
+            let (c, _) = d.execute(&ExecRequest::fused(&x, &y)).unwrap().into_dense();
             let ref_c = want.spmm(&y);
             assert!(ref_c.diff_norm(&c) / (ref_c.max_abs() as f64 + 1e-30) < 1e-3);
         }
@@ -666,18 +655,21 @@ mod tests {
         // The kernel abstraction must compose with the per-pair adaptive
         // compiler: whatever shape each pair chose, SDDMM reuses it.
         let a = gen::rmat(128, 1500, (0.55, 0.2, 0.19), false, 43);
-        let d = DistSpmm::plan(&a, Strategy::Adaptive, Topology::tsubame4(8), true);
+        let d = spec(8).strategy(Strategy::Adaptive).plan(&a);
         let mut rng = Rng::new(14);
         let x = Dense::random(128, 8, &mut rng);
         let y = Dense::random(128, 8, &mut rng);
-        let (e, _) = d.execute_sddmm(&x, &y, &NativeKernel);
+        let (e, _) = d
+            .execute(&ExecRequest::sddmm(&x, &y).kernel(&NativeKernel))
+            .unwrap()
+            .into_sparse();
         assert_eq!(e, a.sddmm(&x, &y));
     }
 
     #[test]
     fn compute_profile_nonnegative_and_scaled() {
         let a = gen::rmat(128, 2000, (0.5, 0.2, 0.2), false, 4);
-        let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(8), false);
+        let d = spec(8).flat().plan(&a);
         let (pre32, _) = d.compute_profile(32);
         let (pre64, _) = d.compute_profile(64);
         for (a32, a64) in pre32.iter().zip(&pre64) {

@@ -1,0 +1,367 @@
+//! The unified execution API (DESIGN.md §11): one request type for every
+//! kernel × backend × option combination, and one builder for every way of
+//! planning.
+//!
+//! The legacy surface grew combinatorially — five `plan_*` constructors
+//! and ~10 `execute_*` variants across [`DistSpmm`]/`DistSddmm` — which no
+//! serving front-end can sit on cleanly. [`ExecRequest`] collapses the
+//! execute axis: kernel op ([`KernelOp`]), backend ([`Backend`]), executor
+//! options, operands, and compute kernel travel together, and
+//! [`DistSpmm::execute`] / [`crate::exec::session::SpmmSession::execute`]
+//! are the only entry points. [`PlanSpec`] collapses the plan axis:
+//! strategy, topology, hierarchy, planner params, and partitioner are
+//! builder fields with the same defaults the old constructors hardcoded.
+//! The legacy methods survive as `#[deprecated]` shims delegating here,
+//! pinned bitwise-identical by `tests/api_compat.rs`.
+
+use crate::comm::Strategy;
+use crate::cover::Solver;
+use crate::dense::Dense;
+use crate::exec::kernel::{KernelOp, NativeKernel, SpmmKernel};
+use crate::exec::{ExecOpts, ExecStats};
+use crate::partition::Partitioner;
+use crate::plan::cache::PlanCache;
+use crate::plan::PlanParams;
+use crate::runtime::multiproc::{ProcOpts, RankFailure};
+use crate::sparse::Csr;
+use crate::topology::Topology;
+use std::fmt;
+
+/// Where a request runs: in-process rank threads (the default and the
+/// differential oracle) or one OS process per rank over the socket control
+/// plane ([`crate::runtime::multiproc`]).
+#[derive(Clone, Debug, Default)]
+pub enum Backend {
+    #[default]
+    Thread,
+    Proc(ProcOpts),
+}
+
+impl Backend {
+    /// Default proc backend (30 s failure timeout, `current_exe` workers).
+    pub fn proc() -> Backend {
+        Backend::Proc(ProcOpts::default())
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Thread => "thread",
+            Backend::Proc(_) => "proc",
+        }
+    }
+}
+
+/// One execution request against a planned [`DistSpmm`] or a session:
+/// which kernel, which operands, how to schedule it, and where to run it.
+///
+/// Operand convention: `b` is the SpMM dense operand B — for the
+/// SDDMM-family kernels it carries Y (the operand that moves along the B
+/// covers) and `x` carries X. Construct with [`ExecRequest::spmm`] /
+/// [`ExecRequest::sddmm`] / [`ExecRequest::fused`] and chain the setters.
+///
+/// `opts` applies to one-shot [`DistSpmm::execute`] calls; sessions own
+/// their scheduling options ([`SpmmSession::set_opts`]) because the frozen
+/// programs depend on them. `kernel` applies to the thread backend; proc
+/// workers always run [`NativeKernel`] (trait objects don't cross the
+/// process boundary).
+///
+/// [`DistSpmm::execute`]: crate::spmm::DistSpmm::execute
+/// [`SpmmSession::set_opts`]: crate::exec::session::SpmmSession::set_opts
+pub struct ExecRequest<'a> {
+    pub op: KernelOp,
+    /// X operand (SDDMM-family kernels only).
+    pub x: Option<&'a Dense>,
+    /// B operand (SpMM), or Y (SDDMM-family).
+    pub b: &'a Dense,
+    pub opts: ExecOpts,
+    pub backend: Backend,
+    pub kernel: &'a (dyn SpmmKernel + Sync),
+}
+
+impl<'a> ExecRequest<'a> {
+    /// C = A·B.
+    pub fn spmm(b: &'a Dense) -> ExecRequest<'a> {
+        ExecRequest {
+            op: KernelOp::Spmm,
+            x: None,
+            b,
+            opts: ExecOpts::default(),
+            backend: Backend::Thread,
+            kernel: &NativeKernel,
+        }
+    }
+
+    /// E = A ⊙ (X·Yᵀ).
+    pub fn sddmm(x: &'a Dense, y: &'a Dense) -> ExecRequest<'a> {
+        ExecRequest { op: KernelOp::Sddmm, x: Some(x), ..ExecRequest::spmm(y) }
+    }
+
+    /// C = (A ⊙ (X·Yᵀ))·Y, one exchange.
+    pub fn fused(x: &'a Dense, y: &'a Dense) -> ExecRequest<'a> {
+        ExecRequest { op: KernelOp::FusedSddmmSpmm, x: Some(x), ..ExecRequest::spmm(y) }
+    }
+
+    /// Executor scheduling options (overlap, tile height, worker cap).
+    pub fn opts(mut self, opts: ExecOpts) -> ExecRequest<'a> {
+        self.opts = opts;
+        self
+    }
+
+    /// Execution backend (thread ranks vs worker processes).
+    pub fn backend(mut self, backend: Backend) -> ExecRequest<'a> {
+        self.backend = backend;
+        self
+    }
+
+    /// Compute kernel implementation (thread backend only).
+    pub fn kernel(mut self, kernel: &'a (dyn SpmmKernel + Sync)) -> ExecRequest<'a> {
+        self.kernel = kernel;
+        self
+    }
+
+    /// The X operand, or a structured error for requests that need one but
+    /// were built by hand without it.
+    pub(crate) fn x_operand(&self) -> Result<&'a Dense, ExecError> {
+        self.x.ok_or_else(|| {
+            ExecError::Unsupported(format!("{} requires the X operand", self.op.name()))
+        })
+    }
+}
+
+/// The outcome of one [`ExecRequest`]: exactly one of `dense` (SpMM,
+/// fused) or `sparse` (SDDMM) is set, plus the measured traffic stats.
+#[derive(Debug)]
+pub struct ExecResult {
+    pub dense: Option<Dense>,
+    pub sparse: Option<Csr>,
+    pub stats: ExecStats,
+}
+
+impl ExecResult {
+    pub(crate) fn from_dense(c: Dense, stats: ExecStats) -> ExecResult {
+        ExecResult { dense: Some(c), sparse: None, stats }
+    }
+
+    pub(crate) fn from_sparse(e: Csr, stats: ExecStats) -> ExecResult {
+        ExecResult { dense: None, sparse: Some(e), stats }
+    }
+
+    /// The dense output and stats; panics on an SDDMM result.
+    pub fn into_dense(self) -> (Dense, ExecStats) {
+        (self.dense.expect("request produced a sparse result, not dense"), self.stats)
+    }
+
+    /// The sparse output and stats; panics on a dense-output result.
+    pub fn into_sparse(self) -> (Csr, ExecStats) {
+        (self.sparse.expect("request produced a dense result, not sparse"), self.stats)
+    }
+}
+
+/// Why an [`ExecRequest`] could not produce a result.
+#[derive(Debug)]
+pub enum ExecError {
+    /// A worker process died or misbehaved (proc backend).
+    Rank(RankFailure),
+    /// The request is not executable as specified (missing operand,
+    /// backend the entry point cannot serve).
+    Unsupported(String),
+}
+
+impl fmt::Display for ExecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ExecError::Rank(r) => write!(f, "{r}"),
+            ExecError::Unsupported(m) => write!(f, "unsupported request: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ExecError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ExecError::Rank(r) => Some(r),
+            ExecError::Unsupported(_) => None,
+        }
+    }
+}
+
+impl From<RankFailure> for ExecError {
+    fn from(r: RankFailure) -> ExecError {
+        ExecError::Rank(r)
+    }
+}
+
+/// Builder replacing the five `plan_*` constructors: every planning knob
+/// in one place, with the defaults the CLI uses (MWVC joint covers on the
+/// hierarchical two-stage schedule, equal-row partitioning).
+///
+/// ```ignore
+/// let dist = PlanSpec::new(Topology::tsubame4(8))
+///     .strategy(Strategy::Adaptive)
+///     .partitioner(Partitioner::NnzBalanced)
+///     .n_dense(64)
+///     .plan(&a);
+/// ```
+#[derive(Clone, Debug)]
+pub struct PlanSpec {
+    pub strategy: Strategy,
+    pub topo: Topology,
+    pub hierarchical: bool,
+    pub params: PlanParams,
+    pub partitioner: Partitioner,
+}
+
+impl PlanSpec {
+    pub fn new(topo: Topology) -> PlanSpec {
+        PlanSpec {
+            strategy: Strategy::Joint(Solver::Koenig),
+            topo,
+            hierarchical: true,
+            params: PlanParams::default(),
+            partitioner: Partitioner::Balanced,
+        }
+    }
+
+    /// Communication strategy ([`Strategy::Adaptive`] routes through the
+    /// per-pair plan compiler with this spec's params).
+    pub fn strategy(mut self, strategy: Strategy) -> PlanSpec {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Enable/disable the §6 two-stage hierarchical schedule.
+    pub fn hierarchical(mut self, hierarchical: bool) -> PlanSpec {
+        self.hierarchical = hierarchical;
+        self
+    }
+
+    /// Flat (non-hierarchical) routing; shorthand for
+    /// `.hierarchical(false)`.
+    pub fn flat(self) -> PlanSpec {
+        self.hierarchical(false)
+    }
+
+    /// Planner knobs (adaptive planning width, thread cap).
+    pub fn params(mut self, params: PlanParams) -> PlanSpec {
+        self.params = params;
+        self
+    }
+
+    /// Planning dense width (`params.n_dense`): callers that execute at a
+    /// non-default N should set it so the adaptive cost trade-off matches
+    /// the actual run.
+    pub fn n_dense(mut self, n: usize) -> PlanSpec {
+        self.params.n_dense = n;
+        self
+    }
+
+    /// Row-boundary choice: which nonzeros are remote.
+    pub fn partitioner(mut self, partitioner: Partitioner) -> PlanSpec {
+        self.partitioner = partitioner;
+        self
+    }
+
+    /// Plan a distributed SpMM of `a` over `topo.nranks` ranks:
+    /// partitioner chooses the row boundaries, strategy plans how remote
+    /// nonzeros are served, and `prep_secs` records the whole one-time
+    /// preprocessing cost.
+    pub fn plan(&self, a: &Csr) -> super::DistSpmm {
+        self.build(a, None)
+    }
+
+    /// [`PlanSpec::plan`] consulting a [`PlanCache`] first, so repeated
+    /// layers / epochs / tenants with the same sparsity pattern skip
+    /// re-planning. Only [`Strategy::Adaptive`] plans are cached (the
+    /// cache keys the per-pair compiler's inputs); other strategies plan
+    /// directly.
+    pub fn plan_cached(&self, a: &Csr, cache: &mut PlanCache) -> super::DistSpmm {
+        self.build(a, Some(cache))
+    }
+
+    fn build(&self, a: &Csr, cache: Option<&mut PlanCache>) -> super::DistSpmm {
+        use crate::partition::split_1d;
+        let t0 = std::time::Instant::now();
+        let part = self.partitioner.partition(a, self.topo.nranks, &self.topo, self.params.n_dense);
+        let blocks = split_1d(a, &part);
+        let plan = match (self.strategy, cache) {
+            (Strategy::Adaptive, Some(cache)) => {
+                cache.get_or_compile(&blocks, &part, &self.topo, &self.params).0
+            }
+            (Strategy::Adaptive, None) => {
+                crate::plan::compile(&blocks, &part, &self.topo, &self.params).plan
+            }
+            (s, _) => crate::comm::plan(&blocks, &part, s, None),
+        };
+        let sched = self.hierarchical.then(|| crate::hierarchy::build(&plan, &self.topo));
+        let prep_secs = t0.elapsed().as_secs_f64();
+        super::DistSpmm { part, blocks, plan, sched, topo: self.topo.clone(), prep_secs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::spmm::{serial_reference, DistSpmm};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn plan_spec_defaults_match_legacy_plan() {
+        let a = gen::rmat(128, 1500, (0.55, 0.2, 0.19), false, 77);
+        let d = PlanSpec::new(Topology::tsubame4(8)).plan(&a);
+        #[allow(deprecated)]
+        let legacy = DistSpmm::plan(
+            &a,
+            Strategy::Joint(Solver::Koenig),
+            Topology::tsubame4(8),
+            true,
+        );
+        assert_eq!(d.part.starts, legacy.part.starts);
+        assert_eq!(d.plan.total_volume(32), legacy.plan.total_volume(32));
+        assert_eq!(d.sched.is_some(), legacy.sched.is_some());
+    }
+
+    #[test]
+    fn exec_request_builders_set_the_op() {
+        let b = Dense::zeros(4, 2);
+        let x = Dense::zeros(4, 2);
+        assert_eq!(ExecRequest::spmm(&b).op, KernelOp::Spmm);
+        assert!(ExecRequest::spmm(&b).x.is_none());
+        let r = ExecRequest::sddmm(&x, &b);
+        assert_eq!(r.op, KernelOp::Sddmm);
+        assert!(r.x.is_some());
+        let r = ExecRequest::fused(&x, &b).opts(ExecOpts::sequential()).backend(Backend::proc());
+        assert_eq!(r.op, KernelOp::FusedSddmmSpmm);
+        assert!(!r.opts.overlap);
+        assert_eq!(r.backend.name(), "proc");
+    }
+
+    #[test]
+    fn execute_request_roundtrip_all_kernels() {
+        let a = gen::rmat(128, 1500, (0.55, 0.2, 0.19), false, 78);
+        let d = PlanSpec::new(Topology::tsubame4(8)).plan(&a);
+        let mut rng = Rng::new(3);
+        let b = Dense::random(128, 8, &mut rng);
+        let x = Dense::random(128, 8, &mut rng);
+        let (c, stats) = d.execute(&ExecRequest::spmm(&b)).unwrap().into_dense();
+        assert!(serial_reference(&a, &b).diff_norm(&c) < 1e-3);
+        assert!(stats.wall_secs > 0.0);
+        let (e, _) = d.execute(&ExecRequest::sddmm(&x, &b)).unwrap().into_sparse();
+        assert_eq!(e, a.sddmm(&x, &b));
+        let (cf, _) = d.execute(&ExecRequest::fused(&x, &b)).unwrap().into_dense();
+        let want = a.sddmm(&x, &b).spmm(&b);
+        assert!(want.diff_norm(&cf) / (want.max_abs() as f64 + 1e-30) < 1e-3);
+    }
+
+    #[test]
+    fn handbuilt_request_without_x_is_a_structured_error() {
+        let a = gen::rmat(64, 400, (0.55, 0.2, 0.19), false, 79);
+        let d = PlanSpec::new(Topology::tsubame4(4)).plan(&a);
+        let b = Dense::zeros(64, 4);
+        let req = ExecRequest { op: KernelOp::Sddmm, ..ExecRequest::spmm(&b) };
+        match d.execute(&req) {
+            Err(ExecError::Unsupported(m)) => assert!(m.contains("X operand"), "{m}"),
+            other => panic!("expected Unsupported, got {other:?}"),
+        }
+    }
+}

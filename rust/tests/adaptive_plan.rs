@@ -18,7 +18,7 @@ use shiro::exec::kernel::NativeKernel;
 use shiro::partition::{split_1d, RowPartition};
 use shiro::plan::{self, PlanParams, Shape};
 use shiro::sparse::{Coo, Csr, DATASETS};
-use shiro::spmm::DistSpmm;
+use shiro::spmm::{ExecRequest, PlanSpec};
 use shiro::topology::Topology;
 use shiro::util::proptest::{forall, Gen};
 
@@ -65,8 +65,14 @@ fn prop_all_strategies_bit_identical_to_serial() {
                 if hier && strategy == Strategy::Block {
                     continue; // block mode is defined flat-only in the paper
                 }
-                let d = DistSpmm::plan(&a, strategy, Topology::tsubame4(ranks), hier);
-                let (got, _) = d.execute(&b, &NativeKernel);
+                let d = PlanSpec::new(Topology::tsubame4(ranks))
+                    .strategy(strategy)
+                    .hierarchical(hier)
+                    .plan(&a);
+                let (got, _) = d
+                    .execute(&ExecRequest::spmm(&b).kernel(&NativeKernel))
+                    .expect("thread-backend SpMM")
+                    .into_dense();
                 assert_eq!(
                     got.data, want.data,
                     "{strategy:?} hier={hier} ranks={ranks} not bit-identical"
@@ -173,9 +179,12 @@ fn adaptive_selectable_from_config() {
     // A config-selected adaptive strategy drives the engine end to end.
     let mut g = Gen::new(42);
     let a = int_matrix(&mut g, 96, 700);
-    let d = DistSpmm::plan(&a, cfg.strategy(), Topology::tsubame4(4), true);
+    let d = PlanSpec::new(Topology::tsubame4(4)).strategy(cfg.strategy()).plan(&a);
     let b = int_dense(96, 8);
-    let (got, _) = d.execute(&b, &NativeKernel);
+    let (got, _) = d
+        .execute(&ExecRequest::spmm(&b).kernel(&NativeKernel))
+        .expect("thread-backend SpMM")
+        .into_dense();
     assert_eq!(got.data, a.spmm(&b).data);
 }
 
@@ -186,13 +195,20 @@ fn cached_plan_executes_bit_identically() {
     let topo = Topology::tsubame4(8);
     let mut cache = shiro::plan::cache::PlanCache::in_memory();
     let params = PlanParams::default();
-    let d_cold = DistSpmm::plan_adaptive_cached(&a, topo.clone(), true, &params, &mut cache);
-    let d_warm = DistSpmm::plan_adaptive_cached(&a, topo.clone(), true, &params, &mut cache);
+    let spec = PlanSpec::new(topo.clone()).strategy(Strategy::Adaptive).params(params.clone());
+    let d_cold = spec.plan_cached(&a, &mut cache);
+    let d_warm = spec.plan_cached(&a, &mut cache);
     assert_eq!((cache.hits, cache.misses), (1, 1));
     let b = int_dense(128, 16);
     let want = a.spmm(&b);
-    let (c1, _) = d_cold.execute(&b, &NativeKernel);
-    let (c2, _) = d_warm.execute(&b, &NativeKernel);
+    let (c1, _) = d_cold
+        .execute(&ExecRequest::spmm(&b).kernel(&NativeKernel))
+        .expect("thread-backend SpMM")
+        .into_dense();
+    let (c2, _) = d_warm
+        .execute(&ExecRequest::spmm(&b).kernel(&NativeKernel))
+        .expect("thread-backend SpMM")
+        .into_dense();
     assert_eq!(c1.data, want.data);
     assert_eq!(c2.data, want.data);
 }

@@ -1,0 +1,256 @@
+//! API-compat differential suite (the `ExecRequest` redesign's safety
+//! net): every `#[deprecated]` legacy method must be **bitwise identical**
+//! to its [`ExecRequest`]/[`PlanSpec`] replacement — same plans, same
+//! executed bits, same measured traffic. Inputs are integer-exact so
+//! bitwise equality is meaningful everywhere.
+#![allow(deprecated)]
+
+use std::time::Duration;
+
+use shiro::bench::int_matrix;
+use shiro::comm::Strategy;
+use shiro::cover::Solver;
+use shiro::dense::Dense;
+use shiro::exec::kernel::NativeKernel;
+use shiro::exec::ExecOpts;
+use shiro::partition::Partitioner;
+use shiro::plan::cache::PlanCache;
+use shiro::plan::PlanParams;
+use shiro::runtime::multiproc::ProcOpts;
+use shiro::spmm::{Backend, DistSddmm, DistSpmm, ExecRequest, PlanSpec};
+use shiro::topology::Topology;
+
+fn fixtures() -> (shiro::sparse::Csr, Dense, Dense, Dense) {
+    let a = int_matrix(128, 1500, 42);
+    let b = Dense::from_fn(128, 8, |i, j| ((i * 7 + j * 5) % 9) as f32 - 4.0);
+    let x = Dense::from_fn(128, 8, |i, j| ((i * 5 + j * 3) % 7) as f32 - 3.0);
+    let y = Dense::from_fn(128, 8, |i, j| ((i * 3 + j * 11) % 7) as f32 - 3.0);
+    (a, b, x, y)
+}
+
+/// Two plans are interchangeable if they split rows identically, route the
+/// same volume, agree on hierarchy, and execute to the same bits.
+fn assert_plans_equivalent(old: &DistSpmm, new: &DistSpmm, b: &Dense, label: &str) {
+    assert_eq!(old.part.starts, new.part.starts, "{label}: partition differs");
+    assert_eq!(
+        old.plan.total_volume(b.ncols),
+        new.plan.total_volume(b.ncols),
+        "{label}: plan volume differs"
+    );
+    assert_eq!(old.sched.is_some(), new.sched.is_some(), "{label}: hierarchy differs");
+    let (c_old, _) = old.execute_with(b, &NativeKernel, &ExecOpts::default());
+    let (c_new, _) = new
+        .execute(&ExecRequest::spmm(b))
+        .expect("thread-backend SpMM")
+        .into_dense();
+    assert_eq!(c_old.data, c_new.data, "{label}: executed bits differ");
+}
+
+#[test]
+fn plan_shims_match_plan_spec() {
+    let (a, b, _, _) = fixtures();
+    let old = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(4), true);
+    let new = PlanSpec::new(Topology::tsubame4(4)).plan(&a);
+    assert_plans_equivalent(&old, &new, &b, "plan");
+
+    let params = PlanParams { n_dense: 8, ..Default::default() };
+    let old = DistSpmm::plan_with_params(
+        &a,
+        Strategy::Adaptive,
+        Topology::tsubame4(4),
+        false,
+        &params,
+    );
+    let new = PlanSpec::new(Topology::tsubame4(4))
+        .strategy(Strategy::Adaptive)
+        .flat()
+        .params(params.clone())
+        .plan(&a);
+    assert_plans_equivalent(&old, &new, &b, "plan_with_params");
+
+    for partitioner in Partitioner::ALL {
+        let old = DistSpmm::plan_partitioned(
+            &a,
+            Strategy::Joint(Solver::Koenig),
+            Topology::tsubame4(4),
+            true,
+            &PlanParams::default(),
+            partitioner,
+        );
+        let new = PlanSpec::new(Topology::tsubame4(4)).partitioner(partitioner).plan(&a);
+        assert_plans_equivalent(&old, &new, &b, partitioner.name());
+    }
+}
+
+#[test]
+fn plan_adaptive_cached_matches_plan_spec_cached() {
+    let (a, b, _, _) = fixtures();
+    let params = PlanParams { n_dense: 8, ..Default::default() };
+    let mut cache_old = PlanCache::in_memory();
+    let mut cache_new = PlanCache::in_memory();
+    let old = DistSpmm::plan_adaptive_cached(
+        &a,
+        Topology::tsubame4(4),
+        true,
+        &params,
+        &mut cache_old,
+    );
+    let new = PlanSpec::new(Topology::tsubame4(4))
+        .strategy(Strategy::Adaptive)
+        .params(params.clone())
+        .plan_cached(&a, &mut cache_new);
+    assert_plans_equivalent(&old, &new, &b, "plan_adaptive_cached");
+    // Both routes key the cache identically: each path's second lookup
+    // hits, and they hit on each other's entries too.
+    assert_eq!((cache_old.hits, cache_old.misses), (cache_new.hits, cache_new.misses));
+    DistSpmm::plan_adaptive_cached(&a, Topology::tsubame4(4), true, &params, &mut cache_new);
+    assert_eq!(cache_new.hits, 1, "shim missed the builder-written cache entry");
+}
+
+#[test]
+fn plan_transpose_matches_transposed() {
+    let (a, b, _, _) = fixtures();
+    let d = PlanSpec::new(Topology::tsubame4(4)).plan(&a);
+    let old = d.plan_transpose();
+    let new = d.transposed();
+    assert_plans_equivalent(&old, &new, &b, "plan_transpose");
+}
+
+#[test]
+fn execute_shims_match_exec_requests_bitwise() {
+    let (a, b, x, y) = fixtures();
+    let d = PlanSpec::new(Topology::tsubame4(4)).plan(&a);
+    for opts in [ExecOpts::default(), ExecOpts::sequential()] {
+        let (c_old, s_old) = d.execute_with(&b, &NativeKernel, &opts);
+        let (c_new, s_new) = d
+            .execute(&ExecRequest::spmm(&b).opts(opts))
+            .expect("thread-backend SpMM")
+            .into_dense();
+        assert_eq!(c_old.data, c_new.data, "execute_with({opts:?}): bits differ");
+        assert_eq!(s_old.measured_volume(), s_new.measured_volume());
+
+        let (e_old, _) = d.execute_sddmm_with(&x, &y, &NativeKernel, &opts);
+        let (e_new, _) = d
+            .execute(&ExecRequest::sddmm(&x, &y).opts(opts))
+            .expect("thread-backend SDDMM")
+            .into_sparse();
+        assert_eq!(e_old, e_new, "execute_sddmm_with({opts:?}): bits differ");
+
+        let (f_old, _) = d.execute_fused_with(&x, &y, &NativeKernel, &opts);
+        let (f_new, _) = d
+            .execute(&ExecRequest::fused(&x, &y).opts(opts))
+            .expect("thread-backend fused kernel")
+            .into_dense();
+        assert_eq!(f_old.data, f_new.data, "execute_fused_with({opts:?}): bits differ");
+    }
+    // Default-options shims.
+    let (e_old, _) = d.execute_sddmm(&x, &y, &NativeKernel);
+    let (e_new, _) =
+        d.execute(&ExecRequest::sddmm(&x, &y)).expect("thread-backend SDDMM").into_sparse();
+    assert_eq!(e_old, e_new, "execute_sddmm: bits differ");
+    let (f_old, _) = d.execute_fused(&x, &y, &NativeKernel);
+    let (f_new, _) =
+        d.execute(&ExecRequest::fused(&x, &y)).expect("thread-backend fused").into_dense();
+    assert_eq!(f_old.data, f_new.data, "execute_fused: bits differ");
+}
+
+#[test]
+fn proc_shims_match_proc_backend_requests_bitwise() {
+    let popts = ProcOpts {
+        timeout: Duration::from_secs(60),
+        worker_exe: Some(env!("CARGO_BIN_EXE_shiro").into()),
+        crash_rank: None,
+    };
+    let (a, b, x, y) = fixtures();
+    let d = PlanSpec::new(Topology::tsubame4(2)).plan(&a);
+    let opts = ExecOpts::default();
+    let (c_old, _) = d.execute_proc(&b, &opts, &popts).expect("proc shim failed");
+    let (c_new, _) = d
+        .execute(&ExecRequest::spmm(&b).opts(opts).backend(Backend::Proc(popts.clone())))
+        .expect("proc request failed")
+        .into_dense();
+    assert_eq!(c_old.data, c_new.data, "execute_proc: bits differ");
+
+    let (f_old, _) = d.execute_fused_proc(&x, &y, &opts, &popts).expect("fused proc shim failed");
+    let (f_new, _) = d
+        .execute(&ExecRequest::fused(&x, &y).opts(opts).backend(Backend::Proc(popts)))
+        .expect("fused proc request failed")
+        .into_dense();
+    assert_eq!(f_old.data, f_new.data, "execute_fused_proc: bits differ");
+}
+
+#[test]
+fn dist_sddmm_wrapper_matches_exec_requests_bitwise() {
+    let (a, _, x, y) = fixtures();
+    let topo = Topology::tsubame4(4);
+    let wrapper = DistSddmm::plan(&a, Strategy::Joint(Solver::Koenig), topo.clone(), true);
+    let d = PlanSpec::new(topo).plan(&a);
+
+    let (e_old, _) = wrapper.execute(&x, &y, &NativeKernel);
+    let (e_default, _) =
+        d.execute(&ExecRequest::sddmm(&x, &y)).expect("thread-backend SDDMM").into_sparse();
+    assert_eq!(e_old, e_default, "DistSddmm::execute: bits differ");
+
+    let opts = ExecOpts::sequential();
+    let (e_old, _) = wrapper.execute_with(&x, &y, &NativeKernel, &opts);
+    let (e_seq, _) = d
+        .execute(&ExecRequest::sddmm(&x, &y).opts(opts))
+        .expect("thread-backend SDDMM")
+        .into_sparse();
+    assert_eq!(e_old, e_seq, "DistSddmm::execute_with: bits differ");
+
+    let (f_old, _) = wrapper.execute_fused(&x, &y, &NativeKernel);
+    let (f_new, _) =
+        d.execute(&ExecRequest::fused(&x, &y)).expect("thread-backend fused").into_dense();
+    assert_eq!(f_old.data, f_new.data, "DistSddmm::execute_fused: bits differ");
+
+    // from_spmm shares the plan verbatim; into_session hands the same
+    // frozen programs to the session path.
+    assert_eq!(wrapper.dist().part.starts, d.part.starts);
+    let wrapped = DistSddmm::from_spmm(d);
+    let mut sess = wrapped.into_session(ExecOpts::default(), true);
+    let (e_sess, _) = sess
+        .execute(&ExecRequest::sddmm(&x, &y))
+        .expect("thread-backend SDDMM")
+        .into_sparse();
+    assert_eq!(e_sess, e_default, "DistSddmm::into_session: bits differ");
+}
+
+#[test]
+fn session_shims_match_session_requests_bitwise() {
+    let (a, b, x, y) = fixtures();
+    let mut sess = PlanSpec::new(Topology::tsubame4(4))
+        .plan(&a)
+        .into_session(ExecOpts::default(), true);
+
+    let (e_old, _) = sess.execute_sddmm(&x, &y, &NativeKernel);
+    let (e_new, _) = sess
+        .execute(&ExecRequest::sddmm(&x, &y))
+        .expect("thread-backend SDDMM")
+        .into_sparse();
+    assert_eq!(e_old, e_new, "SpmmSession::execute_sddmm: bits differ");
+
+    let (f_old, _) = sess.execute_fused(&x, &y, &NativeKernel);
+    let (f_new, _) = sess
+        .execute(&ExecRequest::fused(&x, &y))
+        .expect("thread-backend fused kernel")
+        .into_dense();
+    assert_eq!(f_old.data, f_new.data, "SpmmSession::execute_fused: bits differ");
+
+    let mut out_old = Dense::zeros(a.nrows, y.ncols);
+    let _ = sess.execute_fused_into(&x, &y, &NativeKernel, &mut out_old);
+    let mut out_new = Dense::zeros(a.nrows, y.ncols);
+    sess.execute_into(&ExecRequest::fused(&x, &y), &mut out_new)
+        .expect("thread-backend fused kernel");
+    assert_eq!(out_old.data, out_new.data, "SpmmSession::execute_fused_into: bits differ");
+
+    // The request path serves SpMM off the same session too.
+    let (c_sess, _) =
+        sess.execute(&ExecRequest::spmm(&b)).expect("thread-backend SpMM").into_dense();
+    let (c_dist, _) = PlanSpec::new(Topology::tsubame4(4))
+        .plan(&a)
+        .execute(&ExecRequest::spmm(&b))
+        .expect("thread-backend SpMM")
+        .into_dense();
+    assert_eq!(c_sess.data, c_dist.data, "session vs one-shot SpMM: bits differ");
+}

@@ -8,14 +8,21 @@ use shiro::exec::{self, kernel::NativeKernel};
 use shiro::hierarchy;
 use shiro::partition::{split_1d, Partitioner, RowPartition};
 use shiro::sparse::gen;
-use shiro::spmm::DistSpmm;
+use shiro::spmm::{DistSpmm, ExecRequest, PlanSpec};
 use shiro::topology::Topology;
 use shiro::util::rng::Rng;
+
+fn joint_plan(a: &shiro::sparse::Csr, topo: Topology) -> DistSpmm {
+    PlanSpec::new(topo).strategy(Strategy::Joint(Solver::Koenig)).plan(a)
+}
 
 fn verify(d: &DistSpmm, a: &shiro::sparse::Csr, n_dense: usize) {
     let mut rng = Rng::new(5);
     let b = Dense::random(a.nrows, n_dense, &mut rng);
-    let (got, _) = d.execute(&b, &NativeKernel);
+    let (got, _) = d
+        .execute(&ExecRequest::spmm(&b).kernel(&NativeKernel))
+        .expect("thread-backend SpMM")
+        .into_dense();
     let want = a.spmm(&b);
     assert!(want.diff_norm(&got) / (want.max_abs() as f64 + 1e-30) < 1e-3);
 }
@@ -25,7 +32,7 @@ fn single_group_hierarchy_degenerates_to_direct() {
     // 4 ranks on tsubame (one node): hierarchy must produce only direct
     // transfers and still be exact.
     let a = gen::rmat(256, 3000, (0.5, 0.2, 0.2), false, 1);
-    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(4), true);
+    let d = joint_plan(&a, Topology::tsubame4(4));
     let sched = d.sched.as_ref().unwrap();
     assert!(sched.b_flows.is_empty());
     assert!(sched.c_flows.is_empty());
@@ -41,7 +48,7 @@ fn group_size_one_all_inter() {
     let a = gen::powerlaw(256, 3000, 1.4, 2);
     let mut topo = Topology::tsubame4(8);
     topo.group_size = 1;
-    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), topo, true);
+    let d = joint_plan(&a, topo);
     let sched = d.sched.as_ref().unwrap();
     for f in &sched.b_flows {
         assert_eq!(f.consumers.len(), 1);
@@ -57,7 +64,7 @@ fn group_size_one_all_inter() {
 fn huge_rank_count_tiny_matrix() {
     // More ranks than meaningful work: 64 ranks on 128 rows (2 rows each).
     let a = gen::erdos_renyi(128, 128, 700, 3);
-    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(64), true);
+    let d = joint_plan(&a, Topology::tsubame4(64));
     verify(&d, &a, 4);
 }
 
@@ -65,7 +72,7 @@ fn huge_rank_count_tiny_matrix() {
 fn wide_dense_matrix() {
     // N = 256 (wider than any artifact; native path).
     let a = gen::rmat(128, 1200, (0.5, 0.2, 0.2), false, 4);
-    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(8), true);
+    let d = joint_plan(&a, Topology::tsubame4(8));
     verify(&d, &a, 256);
 }
 
@@ -80,7 +87,7 @@ fn fully_dense_block_matrix() {
         }
     }
     let a = coo.to_csr();
-    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(8), true);
+    let d = joint_plan(&a, Topology::tsubame4(8));
     // Joint volume can't beat min(rows, cols) per block here; exactness is
     // the point.
     verify(&d, &a, 8);
@@ -262,13 +269,11 @@ fn coo_duplicate_summing_feeds_sddmm_deterministically() {
     let x = Dense::random(16, 3, &mut rng);
     let y = Dense::random(16, 3, &mut rng);
     let want = a.sddmm(&x, &y);
-    let d = shiro::spmm::DistSddmm::plan(
-        &a,
-        Strategy::Joint(Solver::Koenig),
-        Topology::tsubame4(4),
-        true,
-    );
-    let (got, _) = d.execute(&x, &y, &NativeKernel);
+    let d = joint_plan(&a, Topology::tsubame4(4));
+    let (got, _) = d
+        .execute(&ExecRequest::sddmm(&x, &y).kernel(&NativeKernel))
+        .expect("thread-backend SDDMM")
+        .into_sparse();
     assert_eq!(got, want);
     // A purely-duplicate coordinate really carries the summed value
     // (row 1 col 5 collects only the two pushes from i = 1).
@@ -302,7 +307,7 @@ fn simulate_zero_byte_stage() {
 fn sim_trace_on_real_plan() {
     use shiro::sim::trace::{to_chrome_json, trace};
     let a = gen::rmat(256, 3000, (0.5, 0.2, 0.2), false, 7);
-    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(16), true);
+    let d = joint_plan(&a, Topology::tsubame4(16));
     let job = d.sim_job(32);
     let t = trace(&job, &d.topo);
     assert!(!t.is_empty());

@@ -14,7 +14,7 @@ use shiro::exec::kernel::{NativeKernel, SpmmKernel};
 use shiro::gnn::{DenseOps, NativeDense, PjrtDense};
 use shiro::runtime::{PjrtKernel, Runtime};
 use shiro::sparse::gen;
-use shiro::spmm::DistSpmm;
+use shiro::spmm::{ExecRequest, PlanSpec};
 use shiro::topology::Topology;
 use shiro::util::rng::Rng;
 
@@ -87,10 +87,13 @@ fn distributed_spmm_with_pjrt_kernel() {
     // all executor SpMM calls hit the AOT kernel (rows ≤ 512, K = 512).
     let a = gen::rmat(4096, 40_000, (0.55, 0.2, 0.19), true, 6);
     let topo = Topology::tsubame4(8);
-    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), topo, true);
+    let d = PlanSpec::new(topo).strategy(Strategy::Joint(Solver::Koenig)).plan(&a);
     let mut rng = Rng::new(7);
     let b = Dense::random(4096, 32, &mut rng);
-    let (got, _) = d.execute(&b, &kernel);
+    let (got, _) = d
+        .execute(&ExecRequest::spmm(&b).kernel(&kernel))
+        .expect("thread-backend SpMM")
+        .into_dense();
     let want = a.spmm(&b);
     let err = want.diff_norm(&got) / (want.max_abs() as f64 + 1e-30);
     assert!(err < 1e-3, "rel err {err}");

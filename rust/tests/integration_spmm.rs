@@ -10,15 +10,26 @@ use shiro::dense::Dense;
 use shiro::exec::kernel::NativeKernel;
 use shiro::exec::ExecOpts;
 use shiro::partition::Partitioner;
-use shiro::sparse::{datasets::DATASETS, gen, Coo};
-use shiro::spmm::DistSpmm;
+use shiro::sparse::{datasets::DATASETS, gen, Coo, Csr};
+use shiro::spmm::{DistSpmm, ExecRequest, PlanSpec};
 use shiro::topology::Topology;
 use shiro::util::rng::Rng;
 
-fn check(d: &DistSpmm, a: &shiro::sparse::Csr, n_dense: usize, label: &str) {
+fn plan(a: &Csr, strategy: Strategy, topo: Topology, hier: bool) -> DistSpmm {
+    PlanSpec::new(topo).strategy(strategy).hierarchical(hier).plan(a)
+}
+
+fn spmm(d: &DistSpmm, b: &Dense, opts: &ExecOpts) -> Dense {
+    d.execute(&ExecRequest::spmm(b).kernel(&NativeKernel).opts(*opts))
+        .expect("thread-backend SpMM")
+        .into_dense()
+        .0
+}
+
+fn check(d: &DistSpmm, a: &Csr, n_dense: usize, label: &str) {
     let mut rng = Rng::new(99);
     let b = Dense::random(a.nrows, n_dense, &mut rng);
-    let (got, _) = d.execute(&b, &NativeKernel);
+    let got = spmm(d, &b, &ExecOpts::default());
     let want = a.spmm(&b);
     let err = want.diff_norm(&got) / (want.max_abs() as f64 + 1e-30);
     assert!(err < 1e-3, "{label}: rel err {err}");
@@ -28,12 +39,7 @@ fn check(d: &DistSpmm, a: &shiro::sparse::Csr, n_dense: usize, label: &str) {
 fn all_datasets_joint_hier_exact() {
     for spec in DATASETS {
         let a = spec.generate(0.005);
-        let d = DistSpmm::plan(
-            &a,
-            Strategy::Joint(Solver::Koenig),
-            Topology::tsubame4(8),
-            true,
-        );
+        let d = plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(8), true);
         check(&d, &a, 8, spec.name);
     }
 }
@@ -53,7 +59,7 @@ fn all_strategies_on_web_pattern() {
             if hier && strategy == Strategy::Block {
                 continue; // block mode is defined flat-only in the paper
             }
-            let d = DistSpmm::plan(&a, strategy, Topology::tsubame4(8), hier);
+            let d = plan(&a, strategy, Topology::tsubame4(8), hier);
             check(&d, &a, 16, &format!("{strategy:?} hier={hier}"));
         }
     }
@@ -62,12 +68,7 @@ fn all_strategies_on_web_pattern() {
 #[test]
 fn aurora_topology_exact() {
     let a = gen::rmat(512, 6000, (0.5, 0.22, 0.18), false, 2);
-    let d = DistSpmm::plan(
-        &a,
-        Strategy::Joint(Solver::Koenig),
-        Topology::aurora(24),
-        true,
-    );
+    let d = plan(&a, Strategy::Joint(Solver::Koenig), Topology::aurora(24), true);
     check(&d, &a, 8, "aurora-24");
 }
 
@@ -75,12 +76,7 @@ fn aurora_topology_exact() {
 fn ranks_not_multiple_of_group() {
     // 10 ranks on groups of 4 → ragged last group.
     let a = gen::rmat(512, 5000, (0.5, 0.2, 0.2), false, 3);
-    let d = DistSpmm::plan(
-        &a,
-        Strategy::Joint(Solver::Koenig),
-        Topology::tsubame4(10),
-        true,
-    );
+    let d = plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(10), true);
     check(&d, &a, 4, "ragged-groups");
 }
 
@@ -95,12 +91,7 @@ fn more_ranks_than_nonzero_blocks() {
         }
     }
     let a = coo.to_csr();
-    let d = DistSpmm::plan(
-        &a,
-        Strategy::Joint(Solver::Koenig),
-        Topology::tsubame4(16),
-        true,
-    );
+    let d = plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(16), true);
     check(&d, &a, 8, "tridiagonal");
 }
 
@@ -108,7 +99,7 @@ fn more_ranks_than_nonzero_blocks() {
 fn single_column_b() {
     // N = 1 (SpMV degenerate case).
     let a = gen::erdos_renyi(300, 300, 2000, 5);
-    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(6), true);
+    let d = plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(6), true);
     check(&d, &a, 1, "spmv");
 }
 
@@ -122,7 +113,7 @@ fn hot_row_and_hot_column() {
         coo.push(j, 9, 1.0);
     }
     let a = coo.to_csr();
-    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(8), true);
+    let d = plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(8), true);
     // Joint plan should be tiny: the hot row + hot column form a 2-vertex
     // cover per block.
     let vol = d.plan.total_volume(1) / 4;
@@ -139,16 +130,11 @@ fn pipeline_determinism_across_worker_threads() {
     let b = Dense::from_fn(256, 8, |i, j| ((i * 7 + j * 3) % 9) as f32 - 4.0);
     let want = a.spmm(&b);
     for hier in [true, false] {
-        let d = DistSpmm::plan(
-            &a,
-            Strategy::Joint(Solver::Koenig),
-            Topology::tsubame4(8),
-            hier,
-        );
+        let d = plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(8), hier);
         for workers in [1usize, 2, 4, 8] {
             for rep in 0..2 {
                 let opts = ExecOpts { workers, ..ExecOpts::default() };
-                let (got, _) = d.execute_with(&b, &NativeKernel, &opts);
+                let got = spmm(&d, &b, &opts);
                 assert_eq!(
                     got.data, want.data,
                     "hier={hier} workers={workers} rep={rep}: bits differ from serial"
@@ -164,19 +150,14 @@ fn pipeline_determinism_on_arbitrary_floats() {
     // oracle (different summation order), but the executor must agree with
     // *itself*: any worker count, overlap mode, or tile height — same bits.
     let a = gen::powerlaw(512, 6000, 1.4, 23);
-    let d = DistSpmm::plan(
-        &a,
-        Strategy::Joint(Solver::Koenig),
-        Topology::tsubame4(8),
-        true,
-    );
+    let d = plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(8), true);
     let mut rng = Rng::new(31);
     let b = Dense::random(512, 16, &mut rng);
-    let (reference, _) = d.execute_with(&b, &NativeKernel, &ExecOpts::sequential());
+    let reference = spmm(&d, &b, &ExecOpts::sequential());
     for workers in [1usize, 2, 4, 8] {
         for tile_rows in [0usize, 13] {
             let opts = ExecOpts { overlap: true, workers, tile_rows };
-            let (got, _) = d.execute_with(&b, &NativeKernel, &opts);
+            let got = spmm(&d, &b, &opts);
             assert_eq!(
                 got.data, reference.data,
                 "workers={workers} tile={tile_rows}: nondeterministic bits"
@@ -199,19 +180,15 @@ fn determinism_across_partitioners() {
     let b = Dense::from_fn(256, 8, |i, j| ((i * 5 + j * 11) % 7) as f32 - 3.0);
     let want = a.spmm(&b);
     for partitioner in Partitioner::ALL {
-        let d = DistSpmm::plan_partitioned(
-            &a,
-            Strategy::Joint(Solver::Koenig),
-            Topology::tsubame4(8),
-            true,
-            &shiro::plan::PlanParams::default(),
-            partitioner,
-        );
+        let d = PlanSpec::new(Topology::tsubame4(8))
+            .strategy(Strategy::Joint(Solver::Koenig))
+            .partitioner(partitioner)
+            .plan(&a);
         for overlap in [true, false] {
             for workers in [1usize, 2, 4, 8] {
                 let base = if overlap { ExecOpts::default() } else { ExecOpts::sequential() };
                 let opts = ExecOpts { workers, ..base };
-                let (got, _) = d.execute_with(&b, &NativeKernel, &opts);
+                let got = spmm(&d, &b, &opts);
                 assert_eq!(
                     got.data,
                     want.data,
@@ -226,7 +203,7 @@ fn determinism_across_partitioners() {
 #[test]
 fn prep_time_recorded() {
     let a = gen::rmat(1024, 20_000, (0.55, 0.2, 0.19), false, 6);
-    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(16), true);
+    let d = plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(16), true);
     assert!(d.prep_secs > 0.0);
     assert!(d.sched.is_some());
 }

@@ -3,7 +3,7 @@
 //! frozen plans. Both backends run the identical serialized step program
 //! and fold partial C blocks in the canonical (origin, row) order, so C
 //! must match bit for bit — and the measured volume matrices (decoded
-//! from worker `DONE` frames) must agree too. The last test kills a
+//! from worker `DONE` frames) must agree too. The kill test aborts a
 //! worker mid-run and asserts the parent reports a structured
 //! [`RankFailure`] within the deadline instead of hanging.
 //!
@@ -16,11 +16,11 @@ use shiro::bench::int_matrix;
 use shiro::comm::Strategy;
 use shiro::cover::Solver;
 use shiro::dense::Dense;
-use shiro::exec::kernel::NativeKernel;
 use shiro::exec::ExecOpts;
 use shiro::partition::Partitioner;
 use shiro::runtime::multiproc::{FailureCause, ProcOpts};
-use shiro::spmm::DistSpmm;
+use shiro::sparse::Csr;
+use shiro::spmm::{Backend, DistSpmm, ExecError, ExecRequest, PlanSpec};
 use shiro::topology::Topology;
 
 fn popts() -> ProcOpts {
@@ -29,6 +29,14 @@ fn popts() -> ProcOpts {
         worker_exe: Some(env!("CARGO_BIN_EXE_shiro").into()),
         crash_rank: None,
     }
+}
+
+fn proc_backend() -> Backend {
+    Backend::Proc(popts())
+}
+
+fn plan(a: &Csr, strategy: Strategy, ranks: usize, hier: bool) -> DistSpmm {
+    PlanSpec::new(Topology::tsubame4(ranks)).strategy(strategy).hierarchical(hier).plan(a)
 }
 
 fn int_xy(n: usize, k: usize) -> (Dense, Dense) {
@@ -41,18 +49,19 @@ fn int_xy(n: usize, k: usize) -> (Dense, Dense) {
 fn proc_matches_thread_bitwise_across_strategies() {
     let a = int_matrix(128, 1500, 42);
     let b = Dense::from_fn(128, 8, |i, j| ((i * 7 + j * 5) % 9) as f32 - 4.0);
-    let opts = ExecOpts::default();
     for strategy in
         [Strategy::Block, Strategy::Column, Strategy::Row, Strategy::Joint(Solver::Koenig)]
     {
         // Block mode is defined flat-only in the paper; the rest route
         // hierarchically so the proc backend carries CAgg flows too.
         let hier = strategy != Strategy::Block;
-        let d = DistSpmm::plan(&a, strategy, Topology::tsubame4(4), hier);
-        let (c_thread, s_thread) = d.execute_with(&b, &NativeKernel, &opts);
+        let d = plan(&a, strategy, 4, hier);
+        let (c_thread, s_thread) =
+            d.execute(&ExecRequest::spmm(&b)).expect("thread backend").into_dense();
         let (c_proc, s_proc) = d
-            .execute_proc(&b, &opts, &popts())
-            .unwrap_or_else(|f| panic!("{strategy:?}: proc backend failed: {f}"));
+            .execute(&ExecRequest::spmm(&b).backend(proc_backend()))
+            .unwrap_or_else(|f| panic!("{strategy:?}: proc backend failed: {f}"))
+            .into_dense();
         assert_eq!(c_thread.data, c_proc.data, "{strategy:?}: C bits differ across backends");
         assert_eq!(
             s_thread.measured_volume(),
@@ -68,22 +77,24 @@ fn proc_matches_thread_across_partitioners_and_rank_counts() {
     let b = Dense::from_fn(160, 4, |i, j| ((i * 3 + j * 13) % 11) as f32 - 5.0);
     for partitioner in Partitioner::ALL {
         for ranks in [1usize, 2, 4] {
-            let d = DistSpmm::plan_partitioned(
-                &a,
-                Strategy::Joint(Solver::Koenig),
-                Topology::tsubame4(ranks),
-                ranks > 1,
-                &shiro::plan::PlanParams::default(),
-                partitioner,
-            );
+            let d = PlanSpec::new(Topology::tsubame4(ranks))
+                .strategy(Strategy::Joint(Solver::Koenig))
+                .hierarchical(ranks > 1)
+                .partitioner(partitioner)
+                .plan(&a);
             // Overlap on (pipelined) and off (phase-ordered): arrival order
             // differs, but the canonical fold keeps both bitwise-stable.
             for opts in [ExecOpts::default(), ExecOpts::sequential()] {
-                let (c_thread, _) = d.execute_with(&b, &NativeKernel, &opts);
-                let (c_proc, _) =
-                    d.execute_proc(&b, &opts, &popts()).unwrap_or_else(|f| {
+                let (c_thread, _) = d
+                    .execute(&ExecRequest::spmm(&b).opts(opts))
+                    .expect("thread backend")
+                    .into_dense();
+                let (c_proc, _) = d
+                    .execute(&ExecRequest::spmm(&b).opts(opts).backend(proc_backend()))
+                    .unwrap_or_else(|f| {
                         panic!("{}/{ranks} ranks: proc failed: {f}", partitioner.name())
-                    });
+                    })
+                    .into_dense();
                 assert_eq!(
                     c_thread.data,
                     c_proc.data,
@@ -101,10 +112,13 @@ fn proc_matches_thread_across_groups() {
     // hierarchical C aggregation all cross the wire.
     let a = int_matrix(192, 2200, 19);
     let b = Dense::from_fn(192, 8, |i, j| ((i * 11 + j * 7) % 9) as f32 - 4.0);
-    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(8), true);
-    let opts = ExecOpts::default();
-    let (c_thread, s_thread) = d.execute_with(&b, &NativeKernel, &opts);
-    let (c_proc, s_proc) = d.execute_proc(&b, &opts, &popts()).expect("proc backend failed");
+    let d = plan(&a, Strategy::Joint(Solver::Koenig), 8, true);
+    let (c_thread, s_thread) =
+        d.execute(&ExecRequest::spmm(&b)).expect("thread backend").into_dense();
+    let (c_proc, s_proc) = d
+        .execute(&ExecRequest::spmm(&b).backend(proc_backend()))
+        .expect("proc backend failed")
+        .into_dense();
     assert_eq!(c_thread.data, c_proc.data, "inter-group C bits differ");
     assert_eq!(s_thread.measured_volume(), s_proc.measured_volume());
     assert!(s_proc.measured_volume().total() > 0, "degenerate: nothing crossed the wire");
@@ -116,13 +130,40 @@ fn fused_proc_matches_thread_bitwise() {
     let a = int_matrix(128, 1400, 77);
     let (x, y) = int_xy(128, 4);
     for hier in [false, true] {
-        let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(4), hier);
-        let opts = ExecOpts::default();
-        let (c_thread, _) = d.execute_fused_with(&x, &y, &NativeKernel, &opts);
+        let d = plan(&a, Strategy::Joint(Solver::Koenig), 4, hier);
+        let (c_thread, _) =
+            d.execute(&ExecRequest::fused(&x, &y)).expect("thread backend").into_dense();
         let (c_proc, _) = d
-            .execute_fused_proc(&x, &y, &opts, &popts())
-            .unwrap_or_else(|f| panic!("hier={hier}: fused proc failed: {f}"));
+            .execute(&ExecRequest::fused(&x, &y).backend(proc_backend()))
+            .unwrap_or_else(|f| panic!("hier={hier}: fused proc failed: {f}"))
+            .into_dense();
         assert_eq!(c_thread.data, c_proc.data, "hier={hier}: fused C bits differ");
+    }
+}
+
+#[test]
+fn sddmm_proc_matches_thread_bitwise() {
+    // SDDMM over the proc backend ships edge values home in the op-gated
+    // `SddmmVals` DONE payload; pin pattern, values, and measured volume
+    // bitwise against the thread executor across routing modes and rank
+    // counts (4 ranks = one group, 8 = two groups on tsubame4).
+    let a = int_matrix(128, 1400, 55);
+    let (x, y) = int_xy(128, 4);
+    for (ranks, hier) in [(4usize, false), (4, true), (8, true)] {
+        let d = plan(&a, Strategy::Joint(Solver::Koenig), ranks, hier);
+        let (e_thread, s_thread) =
+            d.execute(&ExecRequest::sddmm(&x, &y)).expect("thread backend").into_sparse();
+        let (e_proc, s_proc) = d
+            .execute(&ExecRequest::sddmm(&x, &y).backend(proc_backend()))
+            .unwrap_or_else(|f| panic!("{ranks} ranks hier={hier}: SDDMM proc failed: {f}"))
+            .into_sparse();
+        assert_eq!(e_thread, e_proc, "{ranks} ranks hier={hier}: SDDMM bits differ");
+        assert_eq!(e_proc, a.sddmm(&x, &y), "{ranks} ranks hier={hier}: oracle mismatch");
+        assert_eq!(
+            s_thread.measured_volume(),
+            s_proc.measured_volume(),
+            "{ranks} ranks hier={hier}: measured volume differs across backends"
+        );
     }
 }
 
@@ -133,13 +174,17 @@ fn worker_kill_reports_rank_failure() {
     // never hang, never exit(1) through a panic in a routing thread.
     let a = int_matrix(128, 1500, 3);
     let b = Dense::from_fn(128, 4, |i, j| ((i + j) % 5) as f32);
-    let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(4), true);
+    let d = plan(&a, Strategy::Joint(Solver::Koenig), 4, true);
     let popts = ProcOpts { timeout: Duration::from_secs(10), crash_rank: Some(1), ..popts() };
     let t0 = Instant::now();
     let err = d
-        .execute_proc(&b, &ExecOpts::default(), &popts)
+        .execute(&ExecRequest::spmm(&b).backend(Backend::Proc(popts)))
         .expect_err("run with a killed worker must fail");
     let wall = t0.elapsed();
+    let err = match err {
+        ExecError::Rank(f) => f,
+        other => panic!("expected a structured RankFailure, got {other}"),
+    };
     assert_eq!(err.rank, 1, "failure must be attributed to the killed rank: {err}");
     assert!(
         matches!(

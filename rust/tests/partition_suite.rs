@@ -14,7 +14,7 @@ use shiro::partition::{
     max_rank_nnz, rank_nnz, refine_objective, split_1d, Partitioner, RowPartition,
 };
 use shiro::sparse::gen;
-use shiro::spmm::DistSpmm;
+use shiro::spmm::{ExecRequest, PlanSpec};
 use shiro::topology::Topology;
 use shiro::util::rng::Rng;
 
@@ -76,15 +76,14 @@ fn every_partitioner_every_strategy_exact() {
             Strategy::Joint(Solver::Koenig),
             Strategy::Adaptive,
         ] {
-            let d = DistSpmm::plan_partitioned(
-                &a,
-                strategy,
-                Topology::tsubame4(8),
-                true,
-                &shiro::plan::PlanParams::default(),
-                partitioner,
-            );
-            let (got, _) = d.execute(&b, &NativeKernel);
+            let d = PlanSpec::new(Topology::tsubame4(8))
+                .strategy(strategy)
+                .partitioner(partitioner)
+                .plan(&a);
+            let (got, _) = d
+                .execute(&ExecRequest::spmm(&b).kernel(&NativeKernel))
+                .expect("thread-backend SpMM")
+                .into_dense();
             let err = want.diff_norm(&got) / (want.max_abs() as f64 + 1e-30);
             assert!(
                 err < 1e-3,
@@ -160,26 +159,19 @@ fn byte_accounting_agrees_on_nonuniform_partition() {
 fn simulation_consumes_nonuniform_partitions() {
     let a = skewed(8);
     for partitioner in Partitioner::ALL {
-        let d = DistSpmm::plan_partitioned(
-            &a,
-            Strategy::Joint(Solver::Koenig),
-            Topology::tsubame4(8),
-            true,
-            &shiro::plan::PlanParams::default(),
-            partitioner,
-        );
+        let d = PlanSpec::new(Topology::tsubame4(8))
+            .strategy(Strategy::Joint(Solver::Koenig))
+            .partitioner(partitioner)
+            .plan(&a);
         let rep = d.simulate(16);
         assert!(rep.total > 0.0, "{}", partitioner.name());
         assert_eq!(rep.per_stage.len(), 4);
         // Flat sim path too.
-        let flat = DistSpmm::plan_partitioned(
-            &a,
-            Strategy::Joint(Solver::Koenig),
-            Topology::tsubame4(8),
-            false,
-            &shiro::plan::PlanParams::default(),
-            partitioner,
-        );
+        let flat = PlanSpec::new(Topology::tsubame4(8))
+            .strategy(Strategy::Joint(Solver::Koenig))
+            .partitioner(partitioner)
+            .flat()
+            .plan(&a);
         assert_eq!(flat.simulate(16).per_stage.len(), 3);
     }
 }

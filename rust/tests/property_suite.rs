@@ -10,7 +10,7 @@ use shiro::exec::{self, kernel::NativeKernel};
 use shiro::hierarchy;
 use shiro::partition::{rank_nnz, split_1d, Partitioner, RowPartition};
 use shiro::sparse::{gen, Csr};
-use shiro::spmm::DistSpmm;
+use shiro::spmm::{ExecRequest, PlanSpec};
 use shiro::topology::Topology;
 use shiro::util::proptest::{forall, Gen};
 
@@ -225,19 +225,22 @@ fn prop_shared_plan_session_b_side_and_amortization() {
             _ => Strategy::Joint(Solver::Koenig),
         };
         let hier = g.bool();
-        let d = DistSpmm::plan_partitioned(
-            &a,
-            strategy,
-            Topology::tsubame4(ranks),
-            hier,
-            &shiro::plan::PlanParams::default(),
-            partitioner,
-        );
+        let d = PlanSpec::new(Topology::tsubame4(ranks))
+            .strategy(strategy)
+            .hierarchical(hier)
+            .partitioner(partitioner)
+            .plan(&a);
         let mut s = d.into_session(shiro::exec::ExecOpts::default(), true);
         let x = Dense::from_vec(a.nrows, n_dense, g.vec_f32(a.nrows * n_dense));
         let y = Dense::from_vec(a.nrows, n_dense, g.vec_f32(a.nrows * n_dense));
-        let (_, spmm_stats) = s.execute(&y, &NativeKernel);
-        let (e1, sddmm_stats) = s.execute_sddmm(&x, &y, &NativeKernel);
+        let (_, spmm_stats) = s
+            .execute(&ExecRequest::spmm(&y).kernel(&NativeKernel))
+            .expect("thread-backend SpMM")
+            .into_dense();
+        let (e1, sddmm_stats) = s
+            .execute(&ExecRequest::sddmm(&x, &y).kernel(&NativeKernel))
+            .expect("thread-backend SDDMM")
+            .into_sparse();
         assert_eq!(
             spmm_stats.measured_b_volume(),
             sddmm_stats.measured_b_volume(),
@@ -245,8 +248,13 @@ fn prop_shared_plan_session_b_side_and_amortization() {
         );
         assert_eq!(e1, a.sddmm(&x, &y));
         // Second calls of both kernels: zero plan, zero fresh allocations.
-        let (_, _) = s.execute(&y, &NativeKernel);
-        let (e2, sddmm2_stats) = s.execute_sddmm(&x, &y, &NativeKernel);
+        let _ = s
+            .execute(&ExecRequest::spmm(&y).kernel(&NativeKernel))
+            .expect("thread-backend SpMM");
+        let (e2, sddmm2_stats) = s
+            .execute(&ExecRequest::sddmm(&x, &y).kernel(&NativeKernel))
+            .expect("thread-backend SDDMM")
+            .into_sparse();
         assert_eq!(e1, e2, "session SDDMM unstable across calls");
         assert_eq!(
             sddmm_stats.measured_b_volume(),
@@ -438,7 +446,7 @@ fn prop_executor_exact_for_random_configs() {
 
 #[test]
 fn prop_plan_transpose_mirror_valid_and_bitwise() {
-    // `plan_transpose` must produce a *validated* plan whose executed
+    // `transposed` must produce a *validated* plan whose executed
     // output is bit-identical to planning Aᵀ from scratch, across
     // strategies × partitioners × random sparsity patterns. Inputs are
     // integer-exact (shiro::bench::int_matrix's argument), so float
@@ -462,9 +470,13 @@ fn prop_plan_transpose_mirror_valid_and_bitwise() {
         let hier = g.bool();
         let topo = Topology::tsubame4(ranks);
         let params = shiro::plan::PlanParams::default();
-        let fwd =
-            DistSpmm::plan_partitioned(&a, strategy, topo.clone(), hier, &params, partitioner);
-        let bwd = fwd.plan_transpose();
+        let spec = PlanSpec::new(topo)
+            .strategy(strategy)
+            .hierarchical(hier)
+            .partitioner(partitioner)
+            .params(params);
+        let fwd = spec.plan(&a);
+        let bwd = fwd.transposed();
         // Structurally valid against the transposed blocks, role-swapped,
         // and volume-preserving (the cover is reused, not re-solved).
         assert_eq!(
@@ -488,12 +500,17 @@ fn prop_plan_transpose_mirror_valid_and_bitwise() {
         // Executed output: mirrored plan == from-scratch plan of Aᵀ ==
         // serial oracle, bit for bit.
         let at = a.transpose();
-        let scratch =
-            DistSpmm::plan_partitioned(&at, strategy, topo, hier, &params, partitioner);
+        let scratch = spec.plan(&at);
         let b = Dense::from_fn(n, n_dense, |i, j| ((i * 7 + j * 5) % 9) as f32 - 4.0);
         let want = at.spmm(&b);
-        let (got_mirror, _) = bwd.execute(&b, &NativeKernel);
-        let (got_scratch, _) = scratch.execute(&b, &NativeKernel);
+        let (got_mirror, _) = bwd
+            .execute(&ExecRequest::spmm(&b).kernel(&NativeKernel))
+            .expect("thread-backend SpMM")
+            .into_dense();
+        let (got_scratch, _) = scratch
+            .execute(&ExecRequest::spmm(&b).kernel(&NativeKernel))
+            .expect("thread-backend SpMM")
+            .into_dense();
         assert_eq!(
             got_mirror.data, want.data,
             "{strategy:?}/{}/hier={hier}: mirrored bits",

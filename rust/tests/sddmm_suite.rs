@@ -17,7 +17,7 @@ use shiro::exec::kernel::{KernelOp, NativeKernel};
 use shiro::exec::ExecOpts;
 use shiro::partition::Partitioner;
 use shiro::sparse::gen;
-use shiro::spmm::{DistSddmm, DistSpmm};
+use shiro::spmm::{ExecRequest, PlanSpec};
 use shiro::topology::Topology;
 use shiro::util::rng::Rng;
 
@@ -60,16 +60,16 @@ fn sddmm_bitwise_full_configuration_matrix() {
                 if hier && strategy == Strategy::Block {
                     continue; // block mode is defined flat-only in the paper
                 }
-                let d = DistSpmm::plan_partitioned(
-                    &a,
-                    strategy,
-                    Topology::tsubame4(8),
-                    hier,
-                    &shiro::plan::PlanParams::default(),
-                    partitioner,
-                );
+                let d = PlanSpec::new(Topology::tsubame4(8))
+                    .strategy(strategy)
+                    .hierarchical(hier)
+                    .partitioner(partitioner)
+                    .plan(&a);
                 for opts in opts_matrix() {
-                    let (got, _) = d.execute_sddmm_with(&x, &y, &NativeKernel, &opts);
+                    let (got, _) = d
+                        .execute(&ExecRequest::sddmm(&x, &y).kernel(&NativeKernel).opts(opts))
+                        .expect("thread-backend SDDMM")
+                        .into_sparse();
                     assert_eq!(
                         got,
                         want,
@@ -92,9 +92,15 @@ fn sddmm_bitwise_even_on_arbitrary_floats() {
     let y = Dense::random(512, 16, &mut rng);
     let want = a.sddmm(&x, &y);
     for hier in [false, true] {
-        let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(8), hier);
+        let d = PlanSpec::new(Topology::tsubame4(8))
+            .strategy(Strategy::Joint(Solver::Koenig))
+            .hierarchical(hier)
+            .plan(&a);
         for opts in [ExecOpts::default(), ExecOpts::sequential()] {
-            let (got, _) = d.execute_sddmm_with(&x, &y, &NativeKernel, &opts);
+            let (got, _) = d
+                .execute(&ExecRequest::sddmm(&x, &y).kernel(&NativeKernel).opts(opts))
+                .expect("thread-backend SDDMM")
+                .into_sparse();
             assert_eq!(got, want, "hier={hier}/{opts:?}");
         }
     }
@@ -107,16 +113,16 @@ fn fused_bitwise_across_partitioners_overlap_workers() {
     let want = a.sddmm(&x, &y).spmm(&y);
     for partitioner in Partitioner::ALL {
         for hier in [false, true] {
-            let d = DistSpmm::plan_partitioned(
-                &a,
-                Strategy::Joint(Solver::Koenig),
-                Topology::tsubame4(8),
-                hier,
-                &shiro::plan::PlanParams::default(),
-                partitioner,
-            );
+            let d = PlanSpec::new(Topology::tsubame4(8))
+                .strategy(Strategy::Joint(Solver::Koenig))
+                .hierarchical(hier)
+                .partitioner(partitioner)
+                .plan(&a);
             for opts in opts_matrix() {
-                let (got, _) = d.execute_fused_with(&x, &y, &NativeKernel, &opts);
+                let (got, _) = d
+                    .execute(&ExecRequest::fused(&x, &y).kernel(&NativeKernel).opts(opts))
+                    .expect("thread-backend fused kernel")
+                    .into_dense();
                 assert_eq!(
                     got.data,
                     want.data,
@@ -135,18 +141,22 @@ fn sddmm_across_rank_counts_and_tile_heights() {
     let want = a.sddmm(&x, &y);
     let want_fused = want.spmm(&y);
     for ranks in [1usize, 2, 3, 5, 8, 16] {
-        let d = DistSddmm::plan(
-            &a,
-            Strategy::Joint(Solver::Koenig),
-            Topology::tsubame4(ranks),
-            ranks > 2,
-        );
+        let d = PlanSpec::new(Topology::tsubame4(ranks))
+            .strategy(Strategy::Joint(Solver::Koenig))
+            .hierarchical(ranks > 2)
+            .plan(&a);
         for tile_rows in [0usize, 7] {
             let opts = ExecOpts { tile_rows, ..ExecOpts::default() };
-            let (got, _) = d.execute_with(&x, &y, &NativeKernel, &opts);
+            let (got, _) = d
+                .execute(&ExecRequest::sddmm(&x, &y).kernel(&NativeKernel).opts(opts))
+                .expect("thread-backend SDDMM")
+                .into_sparse();
             assert_eq!(got, want, "ranks={ranks} tile={tile_rows}");
         }
-        let (c, _) = d.0.execute_fused(&x, &y, &NativeKernel);
+        let (c, _) = d
+            .execute(&ExecRequest::fused(&x, &y).kernel(&NativeKernel))
+            .expect("thread-backend fused kernel")
+            .into_dense();
         assert_eq!(c.data, want_fused.data, "ranks={ranks} fused");
     }
 }
@@ -162,15 +172,27 @@ fn shared_plan_session_serves_all_three_kernels() {
     let c_want = a.spmm(&y);
     let f_want = e_want.spmm(&y);
     for hier in [false, true] {
-        let d = DistSpmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(8), hier);
+        let d = PlanSpec::new(Topology::tsubame4(8))
+            .strategy(Strategy::Joint(Solver::Koenig))
+            .hierarchical(hier)
+            .plan(&a);
         let mut s = d.into_session(ExecOpts::default(), true);
         let mut b_volumes = Vec::new();
         for _ in 0..2 {
-            let (c, spmm_stats) = s.execute(&y, &NativeKernel);
+            let (c, spmm_stats) = s
+                .execute(&ExecRequest::spmm(&y).kernel(&NativeKernel))
+                .expect("thread-backend SpMM")
+                .into_dense();
             assert_eq!(c.data, c_want.data, "hier={hier}");
-            let (e, sddmm_stats) = s.execute_sddmm(&x, &y, &NativeKernel);
+            let (e, sddmm_stats) = s
+                .execute(&ExecRequest::sddmm(&x, &y).kernel(&NativeKernel))
+                .expect("thread-backend SDDMM")
+                .into_sparse();
             assert_eq!(e, e_want, "hier={hier}");
-            let (f, _) = s.execute_fused(&x, &y, &NativeKernel);
+            let (f, _) = s
+                .execute(&ExecRequest::fused(&x, &y).kernel(&NativeKernel))
+                .expect("thread-backend fused kernel")
+                .into_dense();
             assert_eq!(f.data, f_want.data, "hier={hier}");
             b_volumes.push((spmm_stats.measured_b_volume(), sddmm_stats.measured_b_volume()));
         }
@@ -200,8 +222,13 @@ fn sddmm_respects_pattern_values_and_structure() {
     let a = coo.to_csr();
     let (x, y) = int_xy(64, 4);
     let want = a.sddmm(&x, &y);
-    let d = DistSddmm::plan(&a, Strategy::Joint(Solver::Koenig), Topology::tsubame4(4), true);
-    let (got, _) = d.execute(&x, &y, &NativeKernel);
+    let d = PlanSpec::new(Topology::tsubame4(4))
+        .strategy(Strategy::Joint(Solver::Koenig))
+        .plan(&a);
+    let (got, _) = d
+        .execute(&ExecRequest::sddmm(&x, &y).kernel(&NativeKernel))
+        .expect("thread-backend SDDMM")
+        .into_sparse();
     assert_eq!(got, want);
     assert_eq!(got.nnz(), a.nnz(), "structure must be preserved exactly");
 }

@@ -1,0 +1,253 @@
+//! Serving-layer integration suite (DESIGN.md §11): the multi-tenant
+//! [`Server`] pinned against direct `ExecRequest` execution. Everything
+//! runs on integer-exact inputs so "same answer" means **bitwise equal**:
+//! whatever the queue, the micro-batcher, or the session registry do to a
+//! request, the tenant must get exactly the bits a standalone
+//! `PlanSpec::plan(..).execute(..)` would have produced.
+
+use std::thread;
+use std::time::Duration;
+
+use shiro::bench::int_matrix;
+use shiro::dense::Dense;
+use shiro::runtime::multiproc::ProcOpts;
+use shiro::serve::{Server, ServeConfig, ServeError, ServeRequest};
+use shiro::sparse::Csr;
+use shiro::spmm::{Backend, DistSpmm, ExecRequest, PlanSpec};
+use shiro::topology::Topology;
+
+const N: usize = 96;
+
+fn graphs(m: usize) -> Vec<Csr> {
+    (0..m).map(|i| int_matrix(N, 900 + 40 * i, 11 + i as u64)).collect()
+}
+
+fn int_b(ncols: usize, seed: usize) -> Dense {
+    Dense::from_fn(N, ncols, |i, j| ((i * (3 + seed) + j * 7 + seed) % 9) as f32 - 4.0)
+}
+
+fn cfg(nranks: usize) -> ServeConfig {
+    let mut c = ServeConfig::new(Topology::tsubame4(nranks));
+    c.workers = 0; // deterministic drain_* driving unless a test opts in
+    c
+}
+
+fn direct(a: &Csr, nranks: usize) -> DistSpmm {
+    PlanSpec::new(Topology::tsubame4(nranks)).plan(a)
+}
+
+#[test]
+fn concurrent_clients_over_multiple_graphs_bitwise() {
+    // 6 client threads × 3 tenant graphs, every response compared bitwise
+    // against a standalone plan of the same graph. Worker threads, the
+    // shared registry, and any coalescing that happens under contention
+    // must all be invisible in the bits.
+    let graphs = graphs(3);
+    let mut c = cfg(4);
+    c.workers = 2;
+    c.registry_cap = 3;
+    let mut srv = Server::new(c);
+    for (i, a) in graphs.iter().enumerate() {
+        srv.register_graph(&format!("g{i}"), a.clone());
+    }
+    let plans: Vec<DistSpmm> = graphs.iter().map(|a| direct(a, 4)).collect();
+    thread::scope(|s| {
+        for client in 0..6usize {
+            let srv = &srv;
+            let plans = &plans;
+            s.spawn(move || {
+                for round in 0..4usize {
+                    let gi = (client + round) % plans.len();
+                    let b = int_b(3 + (client + round) % 4, client * 10 + round);
+                    let got = srv
+                        .submit_wait(ServeRequest::spmm(&format!("g{gi}"), b.clone()))
+                        .unwrap_or_else(|e| panic!("client {client} round {round}: {e}"))
+                        .into_dense();
+                    let (want, _) = plans[gi]
+                        .execute(&ExecRequest::spmm(&b))
+                        .expect("thread-backend SpMM")
+                        .into_dense();
+                    assert_eq!(
+                        got.data, want.data,
+                        "client {client} round {round} graph g{gi}: bits differ from direct"
+                    );
+                }
+            });
+        }
+    });
+    let stats = srv.shutdown();
+    assert_eq!(stats.completed, 24);
+    assert_eq!(stats.failed, 0);
+    // 3 graphs under a capacity-3 registry: one build per graph, no
+    // evictions, every later lookup a hit. (Lookups are per *execute*, so
+    // opportunistic coalescing under contention only lowers their total.)
+    assert_eq!(stats.registry_misses, 3);
+    assert_eq!(stats.registry_evictions, 0);
+    assert_eq!(stats.latency().count, 24, "one latency sample per request");
+}
+
+#[test]
+fn microbatch_is_bitwise_identical_across_mixed_widths() {
+    // Five same-graph SpMM requests with five different B widths coalesce
+    // into one execute; each split response must match its own standalone
+    // execute bit for bit, and the batch counters must account for all of
+    // them.
+    let a = int_matrix(N, 1100, 5);
+    let mut c = cfg(4);
+    c.max_batch = 8;
+    let srv = Server::new(c);
+    srv.register_graph("g", a.clone());
+    let d = direct(&a, 4);
+    let bs: Vec<Dense> = (0..5).map(|i| int_b(1 + i, 40 + i)).collect();
+    let tickets: Vec<_> = bs
+        .iter()
+        .map(|b| srv.try_submit(ServeRequest::spmm("g", b.clone())).unwrap())
+        .collect();
+    assert_eq!(srv.drain_all(), 1, "five coalescable requests must run as one execute");
+    for (i, (t, b)) in tickets.into_iter().zip(&bs).enumerate() {
+        let resp = t.wait().unwrap();
+        assert_eq!(resp.batch_size, 5, "request {i} rode the wrong batch");
+        let (want, _) =
+            d.execute(&ExecRequest::spmm(b)).expect("thread-backend SpMM").into_dense();
+        let got = resp.into_dense();
+        assert_eq!(got.ncols, b.ncols);
+        assert_eq!(got.data, want.data, "request {i}: batched bits differ from unbatched");
+    }
+    let stats = srv.stats();
+    assert_eq!(stats.completed, 5);
+    assert_eq!(stats.batches, 1);
+    assert_eq!(stats.batched_requests, 5);
+    assert_eq!(stats.max_batch_seen, 5);
+    assert_eq!(stats.mean_batch(), 5.0);
+}
+
+#[test]
+fn batch_cap_and_cross_graph_isolation() {
+    // max_batch = 2 splits four same-graph requests into two executes, and
+    // a different tenant's request never rides another graph's batch.
+    let a = int_matrix(N, 900, 6);
+    let h = int_matrix(N, 950, 7);
+    let mut c = cfg(2);
+    c.max_batch = 2;
+    let srv = Server::new(c);
+    srv.register_graph("g", a.clone());
+    srv.register_graph("h", h.clone());
+    let b = int_b(4, 3);
+    let tg: Vec<_> = (0..4)
+        .map(|_| srv.try_submit(ServeRequest::spmm("g", b.clone())).unwrap())
+        .collect();
+    let th = srv.try_submit(ServeRequest::spmm("h", b.clone())).unwrap();
+    // Executes: {g,g}, {g,g}, {h} — the h request keeps its queue slot but
+    // never coalesces across graphs.
+    assert_eq!(srv.drain_all(), 3);
+    for t in tg {
+        assert_eq!(t.wait().unwrap().batch_size, 2);
+    }
+    let rh = th.wait().unwrap();
+    assert_eq!(rh.batch_size, 1);
+    let (want_h, _) =
+        direct(&h, 2).execute(&ExecRequest::spmm(&b)).expect("thread-backend SpMM").into_dense();
+    assert_eq!(rh.into_dense().data, want_h.data, "cross-graph isolation broke the bits");
+}
+
+#[test]
+fn registry_capacity_evicts_lru_and_rebuilds() {
+    // Capacity 2, three graphs, then a revisit: g0 must be evicted by g2
+    // and rebuilt on return — and the rebuilt session still serves the
+    // same bits.
+    let graphs = graphs(3);
+    let mut c = cfg(2);
+    c.registry_cap = 2;
+    let srv = Server::new(c);
+    for (i, a) in graphs.iter().enumerate() {
+        srv.register_graph(&format!("g{i}"), a.clone());
+    }
+    let b = int_b(3, 9);
+    let mut serve = |gi: usize| {
+        let t = srv.try_submit(ServeRequest::spmm(&format!("g{gi}"), b.clone())).unwrap();
+        srv.drain_all();
+        t.wait().unwrap().into_dense()
+    };
+    let first = serve(0); // miss: build g0
+    serve(1); // miss: build g1
+    serve(2); // miss: build g2, evict g0 (LRU)
+    serve(1); // hit: g1 stayed warm
+    let again = serve(0); // miss: g0 rebuilt, evicting g2
+    let s = srv.stats();
+    assert_eq!(s.registry_misses, 4, "expected g0,g1,g2,g0-again to miss");
+    assert_eq!(s.registry_hits, 1, "expected only the g1 revisit to hit");
+    assert_eq!(s.registry_evictions, 2, "expected g0 then g2 evicted at capacity");
+    assert_eq!(first.data, again.data, "rebuilt session served different bits");
+}
+
+#[test]
+fn admission_rejections_are_eager_and_structured() {
+    let a = int_matrix(N, 800, 8);
+    let mut c = cfg(2);
+    c.queue_cap = 3;
+    let mut srv = Server::new(c);
+    srv.register_graph("g", a);
+    let b = int_b(2, 1);
+
+    match srv.try_submit(ServeRequest::spmm("ghost", b.clone())) {
+        Err(ServeError::UnknownGraph(name)) => assert_eq!(name, "ghost"),
+        other => panic!("expected UnknownGraph, got {other:?}"),
+    }
+
+    let queued: Vec<_> = (0..3)
+        .map(|_| srv.try_submit(ServeRequest::spmm("g", b.clone())).unwrap())
+        .collect();
+    match srv.try_submit(ServeRequest::spmm("g", b.clone())) {
+        Err(ServeError::Saturated { cap }) => assert_eq!(cap, 3),
+        other => panic!("expected Saturated at queue_cap, got {other:?}"),
+    }
+    assert_eq!(srv.queue_len(), 3, "rejected request must not occupy a slot");
+
+    // Shutdown fulfills every queued ticket with a structured error —
+    // no client is left blocked on wait().
+    let stats = srv.shutdown();
+    for t in queued {
+        match t.wait() {
+            Err(ServeError::Shutdown) => {}
+            other => panic!("expected Shutdown for drained ticket, got {other:?}"),
+        }
+    }
+    // 1 unknown graph + 1 saturated + 3 drained at shutdown.
+    assert_eq!(stats.rejected, 5);
+    assert_eq!(stats.completed, 0);
+    match srv.try_submit(ServeRequest::spmm("g", b)) {
+        Err(ServeError::Shutdown) => {}
+        other => panic!("expected Shutdown after shutdown, got {other:?}"),
+    }
+}
+
+#[test]
+fn proc_backend_requests_match_thread_through_the_server() {
+    // A tenant may ask for the multiprocess backend; the server routes it
+    // through the session's frozen plan and the bits must match the
+    // thread-backend response for the same graph and operand.
+    let a = int_matrix(N, 1000, 13);
+    let srv = Server::new(cfg(2));
+    srv.register_graph("g", a);
+    let b = int_b(4, 17);
+    let popts = ProcOpts {
+        timeout: Duration::from_secs(60),
+        worker_exe: Some(env!("CARGO_BIN_EXE_shiro").into()),
+        crash_rank: None,
+    };
+    let tt = srv.try_submit(ServeRequest::spmm("g", b.clone())).unwrap();
+    let tp = srv
+        .try_submit(ServeRequest::spmm("g", b).backend(Backend::Proc(popts)))
+        .unwrap();
+    // Thread + proc on the same graph: one session, two executes (the proc
+    // request is not coalescable).
+    assert_eq!(srv.drain_all(), 2);
+    let c_thread = tt.wait().unwrap().into_dense();
+    let c_proc = tp.wait().unwrap().into_dense();
+    assert_eq!(c_thread.data, c_proc.data, "proc-backend bits differ through the server");
+    let s = srv.stats();
+    assert_eq!(s.completed, 2);
+    // Sessions are keyed by backend too — thread and proc requests on the
+    // same graph build separate registry entries.
+    assert_eq!((s.registry_hits, s.registry_misses), (0, 2));
+}
