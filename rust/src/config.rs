@@ -30,6 +30,12 @@ pub struct RunConfig {
     /// differential oracle) or "proc" (one OS process per rank over the
     /// socket control plane, [`crate::runtime::multiproc`]).
     pub backend: String,
+    /// Proc-backend crash handling (see
+    /// [`crate::runtime::multiproc::FaultPolicy`]): "fail" surfaces a
+    /// structured failure (the default); "recover" or "recover:N" replans
+    /// over the survivors, tolerating up to N lost workers (bare
+    /// "recover" = 1).
+    pub fault_policy: String,
     /// `shiro serve` worker threads.
     pub serve_workers: usize,
     /// `shiro serve` admission queue bound (back-pressure beyond this).
@@ -53,6 +59,7 @@ impl Default for RunConfig {
             partitioner: "balanced".into(),
             overlap: true,
             backend: "thread".into(),
+            fault_policy: "fail".into(),
             serve_workers: 2,
             serve_queue_cap: 64,
             serve_registry_cap: 4,
@@ -82,6 +89,18 @@ fn parse_backend(v: &str) -> String {
             std::process::exit(2);
         }
     }
+}
+
+/// Parse a `--fault-policy` value: fail|recover|recover:N.
+fn parse_fault_policy(v: &str) -> String {
+    let valid = v == "fail"
+        || v == "recover"
+        || v.strip_prefix("recover:").is_some_and(|n| n.parse::<usize>().is_ok());
+    if !valid {
+        eprintln!("--fault-policy expects fail|recover|recover:N, got {v:?}");
+        std::process::exit(2);
+    }
+    v.to_string()
 }
 
 impl RunConfig {
@@ -118,6 +137,9 @@ impl RunConfig {
         }
         if let Some(b) = args.get("backend") {
             cfg.backend = parse_backend(b);
+        }
+        if let Some(fp) = args.get("fault-policy") {
+            cfg.fault_policy = parse_fault_policy(fp);
         }
         cfg.serve_workers = args.get_usize("serve-workers", cfg.serve_workers);
         cfg.serve_queue_cap = args.get_usize("serve-queue", cfg.serve_queue_cap);
@@ -156,6 +178,15 @@ impl RunConfig {
                 }
             };
         }
+        if let Some(v) = file.get("run.fault_policy") {
+            self.fault_policy = match v.as_str() {
+                Some(s) => parse_fault_policy(s),
+                None => {
+                    eprintln!("run.fault_policy expects \"fail\", \"recover\", or \"recover:N\"");
+                    std::process::exit(2);
+                }
+            };
+        }
         self.serve_workers = file.int_or("serve.workers", self.serve_workers as i64) as usize;
         self.serve_queue_cap = file.int_or("serve.queue", self.serve_queue_cap as i64) as usize;
         self.serve_registry_cap =
@@ -173,6 +204,26 @@ impl RunConfig {
             );
             std::process::exit(2);
         })
+    }
+
+    /// Resolve the configured fault-policy string (validated at parse
+    /// time; bare "recover" tolerates one lost worker).
+    pub fn fault_policy(&self) -> crate::spmm::FaultPolicy {
+        use crate::spmm::FaultPolicy;
+        match self.fault_policy.as_str() {
+            "fail" => FaultPolicy::Fail,
+            "recover" => FaultPolicy::Recover { max_retries: 1 },
+            other => match other.strip_prefix("recover:").and_then(|n| n.parse().ok()) {
+                Some(max_retries) => FaultPolicy::Recover { max_retries },
+                None => {
+                    eprintln!(
+                        "unknown fault policy {:?} (fail | recover | recover:N)",
+                        self.fault_policy
+                    );
+                    std::process::exit(2);
+                }
+            },
+        }
     }
 
     /// Resolve the configured partitioner name.
@@ -241,6 +292,7 @@ impl RunConfig {
         sc.max_batch = self.serve_max_batch;
         sc.spec = self.plan_spec();
         sc.opts = self.exec_opts();
+        sc.fault_policy = self.fault_policy();
         sc
     }
 }
@@ -339,6 +391,35 @@ mod tests {
             "thread",
         ]));
         assert_eq!(cfg.backend, "thread");
+    }
+
+    #[test]
+    fn fault_policy_flag_and_file() {
+        use crate::spmm::FaultPolicy;
+        let cfg = RunConfig::from_args(&args(&["run"]));
+        assert_eq!(cfg.fault_policy, "fail", "fail is the default");
+        assert_eq!(cfg.fault_policy(), FaultPolicy::Fail);
+        let cfg = RunConfig::from_args(&args(&["run", "--fault-policy", "recover"]));
+        assert_eq!(cfg.fault_policy(), FaultPolicy::Recover { max_retries: 1 });
+        let cfg = RunConfig::from_args(&args(&["run", "--fault-policy", "recover:3"]));
+        assert_eq!(cfg.fault_policy(), FaultPolicy::Recover { max_retries: 3 });
+
+        let dir = std::env::temp_dir().join("shiro_cfg_fault_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("run.toml");
+        std::fs::write(&p, "[run]\nfault_policy = \"recover:2\"\n").unwrap();
+        let cfg = RunConfig::from_args(&args(&["run", "--config", p.to_str().unwrap()]));
+        assert_eq!(cfg.fault_policy(), FaultPolicy::Recover { max_retries: 2 });
+        assert_eq!(cfg.serve_config().fault_policy, FaultPolicy::Recover { max_retries: 2 });
+        // CLI wins over the file.
+        let cfg = RunConfig::from_args(&args(&[
+            "run",
+            "--config",
+            p.to_str().unwrap(),
+            "--fault-policy",
+            "fail",
+        ]));
+        assert_eq!(cfg.fault_policy(), FaultPolicy::Fail);
     }
 
     #[test]

@@ -232,7 +232,9 @@ pub enum Mode {
 /// executor a bitwise differential oracle for the proc backend.
 pub(crate) enum Outbox<'a> {
     Local(&'a [Sender<Msg>]),
-    Socket(&'a wire::SocketTx),
+    /// Epoch-stamped socket sender, so an aborted step's in-flight frames
+    /// are distinguishable from the replanned epoch's (wire v3).
+    Socket(&'a wire::EpochTx),
 }
 
 impl Outbox<'_> {

@@ -27,6 +27,7 @@ use crate::dense::Dense;
 use crate::hierarchy::{self, phase, BFlow, CFlow, HierSchedule};
 use crate::partition::{LocalBlocks, RowPartition};
 use crate::plan::cache::{decode_strategy, encode_strategy};
+use crate::runtime::multiproc::CrashPhase;
 use crate::topology::Topology;
 use crate::util::bin::{
     r_csr, r_dense, r_f64, r_str, r_u32, r_u32s, r_u64, r_u64s, r_u8, w_csr, w_dense, w_f64,
@@ -44,9 +45,11 @@ use std::time::{Duration, Instant};
 /// layout change: parent and workers are always the same binary, so a
 /// mismatch means a stale `--worker-exe` override, not rolling upgrade.
 pub(crate) const WIRE_MAGIC: &[u8; 8] = b"SHIROWIR";
-/// v2: DONE frames carry an op-gated SDDMM edge-value payload (proc
-/// backend SDDMM support).
-pub(crate) const WIRE_VERSION: u32 = 2;
+/// v3: JOB/DATA/DONE/ERROR frames are epoch-tagged and ABORT lets the
+/// control plane cancel an in-flight step on surviving workers — the
+/// crash-recovery protocol (DESIGN.md §12). v2 added the op-gated SDDMM
+/// edge-value DONE payload.
+pub(crate) const WIRE_VERSION: u32 = 3;
 
 /// Hard ceiling on one frame (1 GiB): no legitimate payload approaches
 /// this; a larger claim means a corrupt or hostile length field.
@@ -61,8 +64,9 @@ pub(crate) const BEAT_MILLIS: u64 = 100;
 /// [`crate::runtime::multiproc::maybe_run_worker`] keys on.
 pub(crate) const ENV_PORT: &str = "SHIRO_WORKER_PORT";
 pub(crate) const ENV_RANK: &str = "SHIRO_WORKER_RANK";
-/// Fault-injection hook: a worker with this set aborts instead of running
-/// its job, standing in for a segfaulted or OOM-killed rank.
+/// Fault-injection hook ([`crate::runtime::multiproc::FaultPlan`]): the
+/// value names the [`CrashPhase`] at which the worker aborts, standing in
+/// for a segfaulted or OOM-killed rank at that point in the step.
 pub(crate) const ENV_CRASH: &str = "SHIRO_WORKER_CRASH";
 
 /// Frame kinds. Namespaced so they cannot be confused with the fold-key
@@ -70,20 +74,29 @@ pub(crate) const ENV_CRASH: &str = "SHIRO_WORKER_CRASH";
 pub(crate) mod kind {
     /// Worker → parent, first frame: `version u32 | rank u64`.
     pub const HELLO: u8 = 1;
-    /// Parent → worker, second frame: the serialized job blob.
+    /// Parent → worker: `epoch u64 | serialized job blob`. Re-sent with a
+    /// fresh epoch after every recovery replan; the job's own `rank`
+    /// field (not the worker's spawn-time identity) is authoritative for
+    /// that epoch.
     pub const JOB: u8 = 2;
-    /// Either direction: `dst u64 | encoded Msg` — routed verbatim by the
-    /// parent to `dst`'s stream.
+    /// Either direction: `dst u64 | epoch u64 | encoded Msg` — routed by
+    /// the parent to `dst`'s stream for the *current* epoch; stale-epoch
+    /// frames are dropped by both parent and workers.
     pub const DATA: u8 = 3;
     /// Worker → parent on success:
-    /// `rank u64 | C block | RankStats | flag u8 [| SddmmVals]` — the
-    /// edge-value payload ships only for SDDMM jobs (flag 1), whose output
-    /// *is* the per-rank sparse values.
+    /// `epoch u64 | rank u64 | C block | RankStats | flag u8 [| SddmmVals]`
+    /// — the edge-value payload ships only for SDDMM jobs (flag 1), whose
+    /// output *is* the per-rank sparse values.
     pub const DONE: u8 = 4;
     /// Worker → parent liveness: `rank u64`, every [`super::BEAT_MILLIS`].
     pub const BEAT: u8 = 5;
-    /// Worker → parent on failure: `rank u64 | message`.
+    /// Worker → parent on failure: `epoch u64 | rank u64 | message`. An
+    /// aborted job's "inbox closed" panic also lands here, tagged with
+    /// its stale epoch, which the parent discards.
     pub const ERROR: u8 = 6;
+    /// Parent → worker: `epoch u64` — cancel the in-flight job for that
+    /// epoch (a peer died; a replanned JOB follows under a new epoch).
+    pub const ABORT: u8 = 7;
 }
 
 // ------------------------------------------------------------- framing ----
@@ -130,6 +143,26 @@ impl SocketTx {
         let mut s = self.stream.lock().unwrap();
         write_frame(&mut *s, kind, payload)
     }
+}
+
+/// Per-epoch send handle the pipeline writes through
+/// ([`Outbox::Socket`]): every outgoing DATA frame is stamped with the
+/// epoch it belongs to, so after a recovery replan the control plane and
+/// surviving workers can discard traffic from the aborted step. Wraps the
+/// process-wide [`SocketTx`] — one write lock per frame, shared with the
+/// heartbeat thread and any not-yet-dead previous job thread.
+pub(crate) struct EpochTx {
+    tx: Arc<SocketTx>,
+    epoch: u64,
+    /// [`CrashPhase::MidExchange`] fault injection: abort the process
+    /// right after the first DATA frame hits the socket.
+    crash_mid: bool,
+}
+
+impl EpochTx {
+    pub(crate) fn new(tx: Arc<SocketTx>, epoch: u64, crash_mid: bool) -> EpochTx {
+        EpochTx { tx, epoch, crash_mid }
+    }
 
     /// Encode and send one rank→rank message. Panics on socket failure:
     /// the parent is gone, no progress is possible, and the pipeline's
@@ -138,10 +171,36 @@ impl SocketTx {
     pub(crate) fn send(&self, dst: usize, msg: &Msg) {
         let mut payload = Vec::new();
         w_u64(&mut payload, dst as u64).expect("vec write");
+        w_u64(&mut payload, self.epoch).expect("vec write");
         encode_msg(&mut payload, msg).expect("vec write");
-        self.frame(kind::DATA, &payload)
+        self.tx
+            .frame(kind::DATA, &payload)
             .expect("control-plane socket write failed — parent gone");
+        if self.crash_mid {
+            std::process::abort();
+        }
     }
+}
+
+/// Routing header of a v3 DATA payload: `dst u64 | epoch u64 | Msg`. The
+/// parent reads only this much to route; workers read it to drop frames
+/// from an aborted epoch before decoding the message body.
+pub(crate) const DATA_HEADER: usize = 16;
+
+pub(crate) fn decode_data_header(payload: &[u8]) -> Result<(usize, u64)> {
+    let r = &mut &payload[..];
+    let dst = r_u64(r)? as usize;
+    let epoch = r_u64(r)?;
+    Ok((dst, epoch))
+}
+
+/// Payload of ABORT frames and the prefix of JOB frames: one `epoch u64`.
+pub(crate) fn epoch_payload(epoch: u64) -> Vec<u8> {
+    epoch.to_le_bytes().to_vec()
+}
+
+pub(crate) fn decode_epoch(buf: &[u8]) -> Result<u64> {
+    r_u64(&mut &buf[..])
 }
 
 // ------------------------------------------------------ message codec ----
@@ -761,12 +820,14 @@ pub(crate) fn decode_hello(buf: &[u8]) -> Result<(u32, usize)> {
 }
 
 fn encode_done(
+    epoch: u64,
     rank: usize,
     c: &Dense,
     vals: Option<&SddmmVals>,
     st: &RankStats,
 ) -> Result<Vec<u8>> {
     let mut out = Vec::new();
+    w_u64(&mut out, epoch)?;
     w_u64(&mut out, rank as u64)?;
     w_dense(&mut out, c)?;
     for v in [
@@ -804,9 +865,10 @@ fn encode_done(
     Ok(out)
 }
 
-pub(crate) fn decode_done(buf: &[u8]) -> Result<(usize, Dense, SddmmVals, RankStats)> {
+pub(crate) fn decode_done(buf: &[u8]) -> Result<(u64, usize, Dense, SddmmVals, RankStats)> {
     let max = buf.len() / 4 + 1;
     let r = &mut &buf[..];
+    let epoch = r_u64(r)?;
     let rank = r_u64(r)? as usize;
     let c = r_dense(r, max)?;
     let st = RankStats {
@@ -843,21 +905,23 @@ pub(crate) fn decode_done(buf: &[u8]) -> Result<(usize, Dense, SddmmVals, RankSt
             }
         }
     }
-    Ok((rank, c, vals, st))
+    Ok((epoch, rank, c, vals, st))
 }
 
-fn encode_error(rank: usize, msg: &str) -> Result<Vec<u8>> {
+fn encode_error(epoch: u64, rank: usize, msg: &str) -> Result<Vec<u8>> {
     let mut out = Vec::new();
+    w_u64(&mut out, epoch)?;
     w_u64(&mut out, rank as u64)?;
     w_str(&mut out, msg)?;
     Ok(out)
 }
 
-pub(crate) fn decode_error(buf: &[u8]) -> Result<(usize, String)> {
+pub(crate) fn decode_error(buf: &[u8]) -> Result<(u64, usize, String)> {
     let r = &mut &buf[..];
+    let epoch = r_u64(r)?;
     let rank = r_u64(r)? as usize;
     let msg = r_str(r, buf.len())?;
-    Ok((rank, msg))
+    Ok((epoch, rank, msg))
 }
 
 // --------------------------------------------------------- worker side ----
@@ -872,8 +936,8 @@ fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
-/// Worker-process entry point: connect, HELLO, receive the job, run the
-/// shared `rank_main`, report DONE or ERROR, exit. Never returns.
+/// Worker-process entry point: connect, HELLO, then serve epoch-tagged
+/// JOB frames until the control plane closes the socket. Never returns.
 pub(crate) fn worker_main(port: u16, rank: usize) -> ! {
     let code = match worker_run(port, rank) {
         Ok(()) => 0,
@@ -885,6 +949,22 @@ pub(crate) fn worker_main(port: u16, rank: usize) -> ! {
     std::process::exit(code);
 }
 
+/// The worker's main loop owns the socket's read half and multiplexes
+/// three frame kinds across epochs:
+///
+/// - JOB(epoch): spawn a job thread running the shared `rank_main` with a
+///   fresh inbox; the job's own `rank` field is authoritative (after a
+///   recovery replan the parent renumbers survivors).
+/// - DATA: forwarded into the inbox iff its epoch matches the in-flight
+///   job; stale frames from an aborted step are dropped.
+/// - ABORT(epoch): drop the matching job's inbox sender — a `recv`
+///   blocked in `rank_main` panics ("inbox closed"), the job thread
+///   catches it and reports an ERROR tagged with its stale epoch, which
+///   the parent discards.
+///
+/// Socket EOF is the clean shutdown signal. One buffered reader serves
+/// every frame — a second reader over the raw stream would lose whatever
+/// bytes this BufReader has already pulled past a frame boundary.
 fn worker_run(port: u16, rank: usize) -> Result<()> {
     let stream =
         TcpStream::connect(("127.0.0.1", port)).context("connect to control plane")?;
@@ -892,64 +972,13 @@ fn worker_run(port: u16, rank: usize) -> Result<()> {
     let tx = Arc::new(SocketTx::new(stream.try_clone().context("clone control socket")?));
     tx.frame(kind::HELLO, &encode_hello(rank)?)?;
 
-    // One buffered reader serves both the JOB read and the data pump —
-    // a second reader over the raw stream would lose whatever bytes this
-    // BufReader has already pulled past the JOB frame.
-    let mut reader = BufReader::new(stream);
-    let (k, payload) = read_frame(&mut reader)?;
-    if k != kind::JOB {
-        bail!("expected JOB frame, got kind {k}");
-    }
-    let job = match decode_job(&payload) {
-        Ok(j) => j,
-        Err(e) => {
-            let _ = tx.frame(kind::ERROR, &encode_error(rank, &format!("bad job: {e:#}"))?);
-            return Err(e);
-        }
-    };
-    if job.rank != rank {
-        let msg = format!("job addressed to rank {}, I am {rank}", job.rank);
-        let _ = tx.frame(kind::ERROR, &encode_error(rank, &msg)?);
-        bail!("{msg}");
-    }
+    // Fault injection (`ProcOpts::fault`): the env value names the phase
+    // at which this worker abort()s, standing in for a segfaulted or
+    // OOM-killed rank at that point in the step.
+    let crash = std::env::var(ENV_CRASH).ok().and_then(|v| CrashPhase::by_name(&v));
 
-    // Fault injection (`ProcOpts::crash_rank`): die silently after the
-    // handshake, standing in for a segfaulted or OOM-killed rank. The
-    // suite asserts the control plane reports this as a structured
-    // failure instead of hanging.
-    if std::env::var_os(ENV_CRASH).is_some() {
-        std::process::abort();
-    }
-
-    // Data pump: routed DATA frames → the pipeline's inbox. On socket
-    // error or EOF the sender is dropped, so a `recv` blocked in
-    // `rank_main` panics ("inbox closed") instead of hanging forever —
-    // the panic is caught below and reported as ERROR.
-    let (msg_tx, msg_rx) = mpsc::channel::<Msg>();
-    std::thread::spawn(move || {
-        loop {
-            let (k, payload) = match read_frame(&mut reader) {
-                Ok(f) => f,
-                Err(_) => break,
-            };
-            if k != kind::DATA {
-                continue;
-            }
-            let r = &mut &payload[..];
-            if r_u64(r).is_err() {
-                break; // dst prefix, consumed by routing
-            }
-            match decode_msg(r, payload.len() / 4 + 1) {
-                Ok(m) => {
-                    if msg_tx.send(m).is_err() {
-                        break;
-                    }
-                }
-                Err(_) => break,
-            }
-        }
-    });
-
+    // Liveness is a property of the worker process, not of any one
+    // epoch's job: one heartbeat thread spans the whole lifetime.
     let stop = Arc::new(AtomicBool::new(false));
     let beat = {
         let tx = Arc::clone(&tx);
@@ -965,7 +994,96 @@ fn worker_run(port: u16, rank: usize) -> Result<()> {
         })
     };
 
+    let mut reader = BufReader::new(stream);
+    // The in-flight job: its epoch and the sender feeding its inbox.
+    let mut current: Option<(u64, mpsc::Sender<Msg>)> = None;
+    loop {
+        let (k, payload) = match read_frame(&mut reader) {
+            Ok(f) => f,
+            Err(_) => break, // parent closed the socket: clean shutdown
+        };
+        match k {
+            kind::JOB => {
+                if payload.len() < 8 {
+                    bail!("JOB frame too short for epoch prefix");
+                }
+                let epoch = decode_epoch(&payload)?;
+                let job = match decode_job(&payload[8..]) {
+                    Ok(j) => j,
+                    Err(e) => {
+                        let msg = format!("bad job: {e:#}");
+                        let _ = tx.frame(kind::ERROR, &encode_error(epoch, rank, &msg)?);
+                        continue;
+                    }
+                };
+                if crash == Some(CrashPhase::PostDecode) {
+                    std::process::abort();
+                }
+                // A JOB while one is in flight shouldn't happen (the
+                // parent aborts first), but dropping the old sender makes
+                // it converge to the same aborted state either way.
+                drop(current.take());
+                let (msg_tx, msg_rx) = mpsc::channel::<Msg>();
+                current = Some((epoch, msg_tx));
+                let jtx = Arc::clone(&tx);
+                std::thread::spawn(move || run_job(epoch, job, jtx, msg_rx, crash));
+            }
+            kind::DATA => {
+                if payload.len() < DATA_HEADER {
+                    bail!("DATA frame too short for routing header");
+                }
+                let (_dst, epoch) = decode_data_header(&payload)?;
+                let intact = match &current {
+                    // Stale frames from an aborted step are dropped; a
+                    // send error just means the job thread already
+                    // finished.
+                    Some((cur, msg_tx)) if *cur == epoch => {
+                        let r = &mut &payload[DATA_HEADER..];
+                        match decode_msg(r, payload.len() / 4 + 1) {
+                            Ok(m) => {
+                                let _ = msg_tx.send(m);
+                                true
+                            }
+                            Err(_) => false,
+                        }
+                    }
+                    _ => true,
+                };
+                if !intact {
+                    // Corrupt message: poison the in-flight job so its
+                    // blocked recv panics and surfaces a current-epoch
+                    // ERROR instead of hanging on a frame that never
+                    // arrives.
+                    drop(current.take());
+                }
+            }
+            kind::ABORT => {
+                let epoch = decode_epoch(&payload)?;
+                if matches!(&current, Some((cur, _)) if *cur == epoch) {
+                    drop(current.take());
+                }
+            }
+            _ => {} // unknown kinds are ignored (same binary: can't happen)
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    let _ = beat.join();
+    // Job threads are detached; they die with the process.
+    Ok(())
+}
+
+/// One epoch's job, on its own thread so the main loop keeps draining
+/// frames (DATA for this job, ABORT against it, the next epoch's JOB).
+fn run_job(
+    epoch: u64,
+    job: Job,
+    tx: Arc<SocketTx>,
+    inbox: mpsc::Receiver<Msg>,
+    crash: Option<CrashPhase>,
+) {
+    let rank = job.rank;
     let nranks = job.nranks;
+    let etx = EpochTx::new(Arc::clone(&tx), epoch, crash == Some(CrashPhase::MidExchange));
     let result = catch_unwind(AssertUnwindSafe(|| {
         // Re-derive the X fetch schedule exactly as `run_kernel_with`
         // does — it is a pure function of the shipped schedule.
@@ -981,8 +1099,8 @@ fn worker_run(port: u16, rank: usize) -> Result<()> {
             xsched: xsched.as_ref(),
             topo: &job.topo,
             kernel: &kernel,
-            outbox: Outbox::Socket(tx.as_ref()),
-            inbox: msg_rx,
+            outbox: Outbox::Socket(&etx),
+            inbox,
             stats: RankStats {
                 sent_to: vec![0; nranks],
                 sent_b_to: vec![0; nranks],
@@ -1007,23 +1125,28 @@ fn worker_run(port: u16, rank: usize) -> Result<()> {
         );
         (c_local, vals, ctx.stats)
     }));
-    stop.store(true, Ordering::Relaxed);
 
     match result {
         Ok((c_local, vals, stats)) => {
+            // A still-armed crash fires here: PreDone by definition, or
+            // MidExchange when the program had nothing to send.
+            if crash.is_some() {
+                std::process::abort();
+            }
             // The fused kernel also leaves edge values in `vals`, but its
             // output is the dense C — only SDDMM ships them back.
             let vals = (job.op == KernelOp::Sddmm).then_some(&vals);
-            tx.frame(kind::DONE, &encode_done(rank, &c_local, vals, &stats)?)?;
-            let _ = beat.join();
-            // The pump thread is parked in `read_frame`; it dies with the
-            // process once `worker_main` exits.
-            Ok(())
+            let payload = encode_done(epoch, rank, &c_local, vals, &stats)
+                .expect("vec write");
+            // Write failure means the parent is gone; the main loop's EOF
+            // will end the process.
+            let _ = tx.frame(kind::DONE, &payload);
         }
         Err(p) => {
             let msg = panic_message(p.as_ref());
-            let _ = tx.frame(kind::ERROR, &encode_error(rank, &msg)?);
-            bail!("rank panicked: {msg}");
+            if let Ok(payload) = encode_error(epoch, rank, &msg) {
+                let _ = tx.frame(kind::ERROR, &payload);
+            }
         }
     }
 }
@@ -1105,9 +1228,9 @@ mod tests {
             idle_recv_bytes: 8,
             phases: Vec::new(),
         };
-        let buf = encode_done(2, &c, None, &st).unwrap();
-        let (rank, c2, vals2, st2) = decode_done(&buf).unwrap();
-        assert_eq!(rank, 2);
+        let buf = encode_done(9, 2, &c, None, &st).unwrap();
+        let (epoch, rank, c2, vals2, st2) = decode_done(&buf).unwrap();
+        assert_eq!((epoch, rank), (9, 2));
         assert_eq!(c2, c);
         assert_eq!(vals2.diag.data, Vec::<f32>::new());
         assert!(vals2.col.is_empty() && vals2.row.is_empty());
@@ -1121,9 +1244,9 @@ mod tests {
         vals.col.insert(3, Dense::from_vec(1, 2, vec![2.5, -7.0]));
         vals.row.insert(0, Dense::from_vec(1, 1, vec![0.125]));
         vals.row.insert(5, Dense::zeros(0, 0));
-        let buf = encode_done(1, &Dense::zeros(2, 0), Some(&vals), &st).unwrap();
-        let (rank, c2, vals2, _) = decode_done(&buf).unwrap();
-        assert_eq!((rank, c2.nrows, c2.ncols), (1, 2, 0));
+        let buf = encode_done(0, 1, &Dense::zeros(2, 0), Some(&vals), &st).unwrap();
+        let (epoch, rank, c2, vals2, _) = decode_done(&buf).unwrap();
+        assert_eq!((epoch, rank, c2.nrows, c2.ncols), (0, 1, 2, 0));
         assert_eq!(vals2.diag.data.len(), 3);
         assert_eq!(vals2.diag.data[0].to_bits(), 1.0f32.to_bits());
         assert!(vals2.diag.data[1].is_nan());
@@ -1137,8 +1260,36 @@ mod tests {
     fn hello_and_error_roundtrip() {
         let (v, rank) = decode_hello(&encode_hello(11).unwrap()).unwrap();
         assert_eq!((v, rank), (WIRE_VERSION, 11));
-        let (rank, msg) = decode_error(&encode_error(3, "inbox closed").unwrap()).unwrap();
-        assert_eq!((rank, msg.as_str()), (3, "inbox closed"));
+        let (epoch, rank, msg) =
+            decode_error(&encode_error(4, 3, "inbox closed").unwrap()).unwrap();
+        assert_eq!((epoch, rank, msg.as_str()), (4, 3, "inbox closed"));
+    }
+
+    #[test]
+    fn epoch_and_data_header_roundtrip() {
+        // ABORT / JOB-prefix payloads.
+        assert_eq!(decode_epoch(&epoch_payload(0)).unwrap(), 0);
+        assert_eq!(decode_epoch(&epoch_payload(u64::MAX)).unwrap(), u64::MAX);
+        assert!(decode_epoch(&[1, 2, 3]).is_err());
+        // DATA routing headers: what EpochTx::send writes is what
+        // decode_data_header reads, and the Msg body follows intact.
+        let tx_payload = {
+            let mut p = Vec::new();
+            w_u64(&mut p, 5).unwrap();
+            w_u64(&mut p, 7).unwrap();
+            encode_msg(
+                &mut p,
+                &Msg::C { from: 2, rows: vec![4], data: Dense::from_vec(1, 1, vec![2.5]) },
+            )
+            .unwrap();
+            p
+        };
+        let (dst, epoch) = decode_data_header(&tx_payload).unwrap();
+        assert_eq!((dst, epoch), (5, 7));
+        let body = &mut &tx_payload[DATA_HEADER..];
+        let m = decode_msg(body, tx_payload.len() / 4 + 1).unwrap();
+        assert!(matches!(m, Msg::C { from: 2, .. }));
+        assert!(decode_data_header(&tx_payload[..12]).is_err());
     }
 
     /// Full job blobs over real plans re-encode byte-identically after a

@@ -17,6 +17,8 @@
 //! --partitioner <balanced|nnz-balanced|cost-refined> (row-boundary choice)
 //! --overlap <on|off> (overlapped executor pipeline vs phase-ordered)
 //! --backend <thread|proc> (in-process ranks vs one OS process per rank)
+//! --fault-policy <fail|recover|recover:N> (proc-backend crash handling:
+//! surface a structured failure, or replan over the survivors and replay)
 //! --config <file.toml> (CLI overrides config values).
 //! `trace` accepts --exec to emit the executed pipeline's chrome trace
 //! alongside the simulated one (same phase names, comparable in Perfetto).
@@ -51,7 +53,8 @@ fn main() {
                 "usage: shiro <datasets|plan|run|sddmm|sim|gnn|serve|trace|info> \
                  [--dataset D] [--ranks R] [--n N] [--scale S] [--topo T] \
                  [--strategy S] [--partitioner P] [--overlap on|off] \
-                 [--backend thread|proc] [--config F] \
+                 [--backend thread|proc] [--fault-policy fail|recover|recover:N] \
+                 [--config F] \
                  [serve: --bench --preset ci|full --out J --serve-workers W \
                  --serve-queue Q --serve-registry C --serve-batch K]"
             );
@@ -173,14 +176,34 @@ fn cmd_run(cfg: &RunConfig) {
     );
     let mut rng = Rng::new(1);
     let b = Dense::random(a.nrows, cfg.n_dense, &mut rng);
-    let req = ExecRequest::spmm(&b).opts(cfg.exec_opts()).backend(backend_of(cfg));
-    let (c, stats) = match d.execute(&req) {
-        Ok(r) => r.into_dense(),
+    let req = ExecRequest::spmm(&b)
+        .opts(cfg.exec_opts())
+        .backend(backend_of(cfg))
+        .fault_policy(cfg.fault_policy());
+    let (recovery, c, stats) = match d.execute(&req) {
+        Ok(r) => {
+            let rec = r.recovery.clone();
+            let (c, stats) = r.into_dense();
+            (rec, c, stats)
+        }
         Err(e) => {
             eprintln!("{} backend failed: {e}", cfg.backend);
             std::process::exit(1);
         }
     };
+    if let Some(rec) = &recovery {
+        let (lat, total) = rec.latency();
+        println!(
+            "recovered from {} lost rank(s) {:?} in {} replan(s): {:.1} ms total replan \
+             (max {:.1} ms), final partition {} ranks",
+            rec.lost_ranks.len(),
+            rec.lost_ranks,
+            rec.replans,
+            total * 1e3,
+            lat.max * 1e3,
+            rec.final_starts.len() - 1
+        );
+    }
     let want = a.spmm(&b);
     let err = want.diff_norm(&c) / (want.max_abs() as f64 + 1e-30);
     let w = stats.overlap_window();

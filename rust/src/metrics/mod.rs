@@ -261,6 +261,14 @@ pub fn latency_stats(samples: &[f64]) -> LatencyStats {
     }
 }
 
+/// Summarize crash-recovery replan latencies: order statistics plus the
+/// *total* seconds spent replanning. Recovery rounds are few (bounded by
+/// `max_retries`), so the aggregate downtime matters as much as the
+/// percentiles — a serve operator budgets total stall, not p99.
+pub fn recovery_latency(samples: &[f64]) -> (LatencyStats, f64) {
+    (latency_stats(samples), samples.iter().sum())
+}
+
 /// Percent reduction from `base` to `opt` (Fig. 8 bars).
 pub fn reduction_pct(base: u64, opt: u64) -> f64 {
     if base == 0 {
@@ -404,6 +412,17 @@ mod tests {
         assert_eq!(s.p99, 99.0);
         assert_eq!(s.max, 100.0);
         assert!((s.mean - 50.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recovery_latency_totals_and_orders() {
+        let (s, total) = recovery_latency(&[]);
+        assert_eq!(s, LatencyStats::default());
+        assert_eq!(total, 0.0);
+        let (s, total) = recovery_latency(&[0.5, 0.25, 0.25]);
+        assert_eq!(s.count, 3);
+        assert_eq!(s.max, 0.5);
+        assert_eq!(total, 1.0);
     }
 
     #[test]

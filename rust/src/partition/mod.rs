@@ -295,6 +295,61 @@ pub fn split_1d(a: &Csr, part: &RowPartition) -> Vec<LocalBlocks> {
         .collect()
 }
 
+/// Reassemble the full matrix from per-process local blocks — the exact
+/// inverse of [`split_1d`]. Within a row, the diag/off-diag blocks are
+/// column-range slices in rank order, so concatenating each block's row
+/// segment (column indices re-based from q-local back to global through
+/// `starts[q]`) reproduces the original CSR byte for byte: same indptr,
+/// same sorted indices, same value bits. Crash recovery leans on this:
+/// the control plane reassembles A once and re-splits it under the
+/// surviving-rank partition, so the recovered run is indistinguishable
+/// from a cold start on that partition.
+pub fn assemble_1d(blocks: &[LocalBlocks], part: &RowPartition) -> Csr {
+    assert_eq!(blocks.len(), part.nparts);
+    let n = part.n;
+    let nnz: usize = blocks
+        .iter()
+        .map(|b| b.diag.nnz() + b.off_diag.iter().map(|m| m.nnz()).sum::<usize>())
+        .sum();
+    let mut indptr = Vec::with_capacity(n + 1);
+    let mut indices = Vec::with_capacity(nnz);
+    let mut data = Vec::with_capacity(nnz);
+    indptr.push(0u64);
+    for (p, blk) in blocks.iter().enumerate() {
+        assert_eq!(blk.rank, p, "blocks must be in rank order");
+        for i in 0..part.len(p) {
+            for q in 0..part.nparts {
+                let m = if q == p { &blk.diag } else { &blk.off_diag[q] };
+                let base = part.starts[q] as u32;
+                indices.extend(m.row_indices(i).iter().map(|&c| c + base));
+                data.extend_from_slice(m.row_values(i));
+            }
+            indptr.push(indices.len() as u64);
+        }
+    }
+    Csr { nrows: n, ncols: n, indptr, indices, data }
+}
+
+/// Derive the (n−1)-rank partition after losing rank `lost`: every
+/// surviving rank keeps its exact row range except the one adjacent
+/// neighbor that absorbs the lost rows (the next rank down, or the
+/// previous one when the last rank dies). Preserving the surviving
+/// boundaries keeps the recovered split maximally local — only covers
+/// touching the absorbed block change — and makes the result a pure
+/// function of `(starts, lost)`, which is what lets a recovered run be
+/// replayed bitwise as a cold start.
+pub fn recover_partition(part: &RowPartition, lost: usize) -> RowPartition {
+    assert!(lost < part.nparts, "lost rank {lost} out of range");
+    assert!(part.nparts >= 2, "cannot recover a 1-rank partition");
+    let mut starts = part.starts.clone();
+    // Dropping boundary lost+1 merges `lost` into its successor; for the
+    // last rank there is no successor, so drop boundary `lost` and let
+    // the predecessor absorb it.
+    let drop_at = if lost + 1 < part.nparts { lost + 1 } else { lost };
+    starts.remove(drop_at);
+    RowPartition::from_starts(starts)
+}
+
 /// 2D process grid used by the BCL baseline (stationary C): processes are
 /// arranged pr × pc; A is tiled into pr × pc blocks.
 #[derive(Clone, Copy, Debug)]
@@ -403,6 +458,55 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn assemble_1d_is_exact_inverse_of_split_1d() {
+        // Byte-exact roundtrip, including NaN/-0.0 value bits, on uneven
+        // boundaries with an empty rank.
+        let mut a = gen::rmat(64, 700, (0.5, 0.2, 0.2), false, 9);
+        if a.nnz() >= 2 {
+            a.data[0] = f32::NAN;
+            a.data[1] = -0.0;
+        }
+        for starts in [vec![0usize, 16, 32, 48, 64], vec![0, 5, 5, 40, 64], vec![0, 64]] {
+            let part = RowPartition::from_starts(starts);
+            let blocks = split_1d(&a, &part);
+            let back = assemble_1d(&blocks, &part);
+            assert_eq!(back.indptr, a.indptr);
+            assert_eq!(back.indices, a.indices);
+            assert_eq!(
+                back.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                a.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "value bits must survive the roundtrip"
+            );
+        }
+    }
+
+    #[test]
+    fn recover_partition_preserves_surviving_boundaries() {
+        let part = RowPartition::from_starts(vec![0, 10, 25, 40, 64]);
+        // Interior loss: successor absorbs.
+        let r1 = recover_partition(&part, 1);
+        assert_eq!(r1.starts, vec![0, 10, 40, 64]);
+        // First rank: successor absorbs.
+        let r0 = recover_partition(&part, 0);
+        assert_eq!(r0.starts, vec![0, 25, 40, 64]);
+        // Last rank has no successor: predecessor absorbs.
+        let r3 = recover_partition(&part, 3);
+        assert_eq!(r3.starts, vec![0, 10, 25, 64]);
+        for (lost, rec) in [(1, &r1), (0, &r0), (3, &r3)] {
+            assert_eq!(rec.nparts, 3);
+            assert_eq!(rec.n, part.n);
+            assert!(
+                rec.starts.iter().all(|s| part.starts.contains(s)),
+                "lost={lost}: recovery must not invent boundaries"
+            );
+        }
+        // Down to one rank: everything merges.
+        let two = RowPartition::from_starts(vec![0, 3, 8]);
+        assert_eq!(recover_partition(&two, 0).starts, vec![0, 8]);
+        assert_eq!(recover_partition(&two, 1).starts, vec![0, 8]);
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Multi-process executor backend: every rank is an OS process, driven by
-//! a socket message queue (DESIGN.md §10).
+//! a socket message queue (DESIGN.md §10), with crash recovery by
+//! replanning over the survivors (DESIGN.md §12).
 //!
 //! The parent is a pure control plane — it never touches the numerics. It
 //! spawns one worker per rank (re-executing its own binary;
@@ -15,17 +16,29 @@
 //! [`crate::exec::wire::BEAT_MILLIS`] ms; a worker that panics reports a
 //! structured ERROR frame; one that dies silently is detected by its
 //! socket closing or by heartbeat silence past [`ProcOpts::timeout`].
-//! Every failure path kills and reaps all children and surfaces a
-//! [`RankFailure`] instead of hanging.
+//! Under [`FaultPolicy::Fail`] (the default) every failure path kills and
+//! reaps all children and surfaces a [`RankFailure`] instead of hanging.
+//! Under [`FaultPolicy::Recover`] a mid-step failure triggers recovery
+//! instead: the dead worker is quarantined, its row block is merged into
+//! an adjacent survivor ([`crate::partition::recover_partition`]), the
+//! comm plan and hierarchical schedule are recompiled for the shrunken
+//! topology, survivors get an ABORT for the in-flight epoch followed by
+//! replanned JOBs under a new epoch, and the step replays from scratch.
+//! The parent holds the full `Csr` and dense operands, so no worker state
+//! survives into the retry — which is exactly why the recovered C is
+//! bitwise-identical to a cold run on the post-recovery partition
+//! (`tests/fault_suite.rs`).
 
 use crate::comm::CommPlan;
 use crate::dense::Dense;
 use crate::exec::wire::{self, kind};
 use crate::exec::{assemble_sddmm, ExecOpts, ExecStats, KernelOp, RankStats, SddmmVals};
 use crate::hierarchy::{self, HierSchedule};
-use crate::partition::{LocalBlocks, RowPartition};
+use crate::metrics::{recovery_latency, LatencyStats};
+use crate::partition::{assemble_1d, recover_partition, split_1d, LocalBlocks, RowPartition};
 use crate::sparse::Csr;
 use crate::topology::Topology;
+use crate::util::rng::Rng;
 use std::fmt;
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
@@ -33,6 +46,121 @@ use std::path::PathBuf;
 use std::process::{Child, Command};
 use std::sync::{mpsc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Where in the step a [`FaultPlan`] kills its worker. The three phases
+/// cover the distinct in-flight states the recovery protocol must handle:
+/// before any traffic, mid-exchange with partial data already folded into
+/// peers, and after compute with the result one frame from home.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CrashPhase {
+    /// Right after the worker decodes its job — no traffic yet (the old
+    /// `crash_rank` behavior).
+    PostDecode,
+    /// Right after the worker's first outgoing DATA frame hits the wire,
+    /// so peers hold partial state from the dead rank. Degenerates to
+    /// [`CrashPhase::PreDone`] when the program has nothing to send.
+    MidExchange,
+    /// After compute completes, right before the DONE frame — peers may
+    /// have finished already.
+    PreDone,
+}
+
+impl CrashPhase {
+    pub const ALL: [CrashPhase; 3] =
+        [CrashPhase::PostDecode, CrashPhase::MidExchange, CrashPhase::PreDone];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CrashPhase::PostDecode => "post-decode",
+            CrashPhase::MidExchange => "mid-exchange",
+            CrashPhase::PreDone => "pre-done",
+        }
+    }
+
+    /// Inverse of [`CrashPhase::name`]; how the worker decodes the
+    /// [`wire::ENV_CRASH`] value the parent set.
+    pub fn by_name(name: &str) -> Option<CrashPhase> {
+        CrashPhase::ALL.iter().copied().find(|p| p.name() == name)
+    }
+}
+
+/// Deterministic fault injection: kill rank `rank` at `phase`. Shipped to
+/// the worker through its spawn environment, so the crash is reproducible
+/// run over run — the property the fault suite's differential assertions
+/// stand on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Spawn-time identity (epoch-0 rank) of the worker to kill.
+    pub rank: usize,
+    pub phase: CrashPhase,
+}
+
+impl FaultPlan {
+    pub fn new(rank: usize, phase: CrashPhase) -> FaultPlan {
+        FaultPlan { rank, phase }
+    }
+
+    /// The old `crash_rank` behavior: abort right after decoding the job.
+    pub fn post_decode(rank: usize) -> FaultPlan {
+        FaultPlan { rank, phase: CrashPhase::PostDecode }
+    }
+
+    /// Seeded (rank, phase) choice over `nranks` workers — what the chaos
+    /// soak uses to vary its kills reproducibly.
+    pub fn seeded(seed: u64, nranks: usize) -> FaultPlan {
+        assert!(nranks > 0);
+        let mut rng = Rng::new(seed);
+        FaultPlan {
+            rank: rng.below(nranks),
+            phase: CrashPhase::ALL[rng.below(CrashPhase::ALL.len())],
+        }
+    }
+}
+
+/// What the control plane does when a rank dies mid-step.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FaultPolicy {
+    /// Surface the structured [`RankFailure`] — bitwise the pre-recovery
+    /// behavior, and the default.
+    #[default]
+    Fail,
+    /// Repartition the lost rank's rows over the survivors, replan, and
+    /// replay the step. At most `max_retries` workers may be lost across
+    /// one run; the next failure (or losing the last worker) surfaces the
+    /// [`RankFailure`] like [`FaultPolicy::Fail`] does.
+    Recover {
+        max_retries: usize,
+    },
+}
+
+/// What recovery did, returned alongside the result when at least one
+/// replan happened. `final_starts` pins the post-recovery partition, so a
+/// differential test can replay the recovered run as a cold start on the
+/// surviving ranks and demand bitwise equality.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RecoveryReport {
+    /// Spawn-time identities (epoch-0 ranks) of the lost workers, in
+    /// failure order.
+    pub lost_ranks: Vec<usize>,
+    /// Replan rounds performed (== `lost_ranks.len()`).
+    pub replans: usize,
+    /// The run completed after recovery. (Exhausted retries surface the
+    /// final [`RankFailure`] as an error instead of a report.)
+    pub recovered: bool,
+    /// Row boundaries of the final partition.
+    pub final_starts: Vec<usize>,
+    /// Seconds per replan round: failure detected → survivor jobs
+    /// re-shipped.
+    pub replan_secs: Vec<f64>,
+}
+
+impl RecoveryReport {
+    /// Order statistics plus total over the replan latency samples
+    /// ([`crate::metrics::recovery_latency`]).
+    pub fn latency(&self) -> (LatencyStats, f64) {
+        recovery_latency(&self.replan_secs)
+    }
+}
 
 /// Control-plane options for one multi-process run.
 #[derive(Clone, Debug)]
@@ -45,18 +173,19 @@ pub struct ProcOpts {
     /// `env!("CARGO_BIN_EXE_shiro")` because their own executable is the
     /// test harness, not the CLI.
     pub worker_exe: Option<PathBuf>,
-    /// Fault injection: this rank aborts right after the handshake,
-    /// standing in for a segfaulted or OOM-killed worker.
-    pub crash_rank: Option<usize>,
+    /// Deterministic fault injection: kill one rank at a chosen phase of
+    /// its first step, standing in for a segfaulted or OOM-killed worker.
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for ProcOpts {
     fn default() -> ProcOpts {
-        ProcOpts { timeout: Duration::from_secs(30), worker_exe: None, crash_rank: None }
+        ProcOpts { timeout: Duration::from_secs(30), worker_exe: None, fault: None }
     }
 }
 
-/// Structured report of the first rank failure the control plane saw.
+/// Structured report of the first unrecovered rank failure the control
+/// plane saw.
 #[derive(Debug)]
 pub struct RankFailure {
     pub rank: usize,
@@ -138,9 +267,10 @@ pub fn run(
     b: &Dense,
     opts: &ExecOpts,
     popts: &ProcOpts,
-) -> Result<(Dense, ExecStats), RankFailure> {
-    run_op(KernelOp::Spmm, part, plan, blocks, sched, topo, None, b, opts, popts)
-        .map(|(c, _, st)| (c, st))
+    policy: FaultPolicy,
+) -> Result<(Dense, ExecStats, Option<RecoveryReport>), RankFailure> {
+    run_op(KernelOp::Spmm, part, plan, blocks, sched, topo, None, b, opts, popts, policy)
+        .map(|(c, _, st, rec)| (c, st, rec))
 }
 
 /// Fused SDDMM→SpMM across worker processes: counterpart of
@@ -156,16 +286,30 @@ pub fn run_fused(
     y: &Dense,
     opts: &ExecOpts,
     popts: &ProcOpts,
-) -> Result<(Dense, ExecStats), RankFailure> {
-    run_op(KernelOp::FusedSddmmSpmm, part, plan, blocks, sched, topo, Some(x), y, opts, popts)
-        .map(|(c, _, st)| (c, st))
+    policy: FaultPolicy,
+) -> Result<(Dense, ExecStats, Option<RecoveryReport>), RankFailure> {
+    run_op(
+        KernelOp::FusedSddmmSpmm,
+        part,
+        plan,
+        blocks,
+        sched,
+        topo,
+        Some(x),
+        y,
+        opts,
+        popts,
+        policy,
+    )
+    .map(|(c, _, st, rec)| (c, st, rec))
 }
 
 /// Distributed SDDMM across worker processes: counterpart of
 /// [`crate::exec::run_sddmm_with`]. Each worker's DONE frame carries its
 /// pool of edge-value buffers (the v2 wire payload); the parent assembles
-/// them into the global E exactly as the thread backend does, so the
-/// result is bitwise-identical to [`Csr::sddmm`].
+/// them into the global E — under the *final* (possibly post-recovery)
+/// partition — exactly as the thread backend does, so the result is
+/// bitwise-identical to [`Csr::sddmm`].
 #[allow(clippy::too_many_arguments)]
 pub fn run_sddmm(
     part: &RowPartition,
@@ -177,19 +321,56 @@ pub fn run_sddmm(
     y: &Dense,
     opts: &ExecOpts,
     popts: &ProcOpts,
-) -> Result<(Csr, ExecStats), RankFailure> {
-    let (_, vals, stats) =
-        run_op(KernelOp::Sddmm, part, plan, blocks, sched, topo, Some(x), y, opts, popts)?;
-    Ok((assemble_sddmm(part, blocks, plan, &vals), stats))
+    policy: FaultPolicy,
+) -> Result<(Csr, ExecStats, Option<RecoveryReport>), RankFailure> {
+    let (_, e, stats, rec) = run_op(
+        KernelOp::Sddmm,
+        part,
+        plan,
+        blocks,
+        sched,
+        topo,
+        Some(x),
+        y,
+        opts,
+        popts,
+        policy,
+    )?;
+    Ok((e.expect("SDDMM always assembles E"), stats, rec))
 }
 
-/// One event from a worker's reader thread to the collector.
+/// One event from a worker's reader thread to the collector. Workers are
+/// identified by their stream index (spawn-time identity), not by any
+/// epoch-relative rank a payload claims.
 enum Event {
-    Done(usize, Dense, SddmmVals, RankStats),
+    /// DONE frame: (worker, epoch, claimed rank, C block, vals, stats).
+    Done(usize, u64, usize, Dense, SddmmVals, RankStats),
     Beat(usize),
+    /// Unrecoverable protocol-level problem on this worker's stream.
     Fail(usize, FailureCause),
+    /// ERROR frame: (worker, epoch, message). Stale epochs are the normal
+    /// "inbox closed" wake-up of an aborted job and are discarded.
+    WorkerErr(usize, u64, String),
     /// Stream closed (or read error). Benign after DONE, fatal before.
     Eof(usize, String),
+}
+
+/// Plan state for the current epoch, owned by the collector once the
+/// first recovery replan replaces the caller's borrowed epoch-0 state.
+struct Live {
+    part: RowPartition,
+    plan: CommPlan,
+    blocks: Vec<LocalBlocks>,
+    sched: Option<HierSchedule>,
+    topo: Topology,
+}
+
+/// Routing table shared with the per-worker reader threads: DATA frames
+/// carry an epoch-relative `dst` rank, so the rank→worker map must swap
+/// atomically with the epoch bump.
+struct Route {
+    epoch: u64,
+    worker_of_rank: Vec<usize>,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -204,7 +385,8 @@ fn run_op(
     b: &Dense,
     opts: &ExecOpts,
     popts: &ProcOpts,
-) -> Result<(Dense, Vec<SddmmVals>, ExecStats), RankFailure> {
+    policy: FaultPolicy,
+) -> Result<(Dense, Option<Csr>, ExecStats, Option<RecoveryReport>), RankFailure> {
     let nranks = part.nparts;
     assert_eq!(plan.nranks, nranks);
     assert_eq!(part.n, b.nrows);
@@ -231,8 +413,10 @@ fn run_op(
     for rank in 0..nranks {
         let mut cmd = Command::new(&exe);
         cmd.env(wire::ENV_PORT, port.to_string()).env(wire::ENV_RANK, rank.to_string());
-        if popts.crash_rank == Some(rank) {
-            cmd.env(wire::ENV_CRASH, "1");
+        if let Some(fp) = popts.fault {
+            if fp.rank == rank {
+                cmd.env(wire::ENV_CRASH, fp.phase.name());
+            }
         }
         match cmd.spawn() {
             Ok(c) => children.push(c),
@@ -247,6 +431,8 @@ fn run_op(
     // Accept + HELLO with a hard deadline so a worker that dies before
     // connecting (or never says hello) cannot hang the control plane.
     // Non-blocking accept + poll keeps one deadline across all workers.
+    // Handshake failures are not recoverable — FaultPolicy governs
+    // mid-step deaths, not a fleet that never formed.
     let mut streams: Vec<Option<TcpStream>> = (0..nranks).map(|_| None).collect();
     let mut err = None;
     listener.set_nonblocking(true).ok();
@@ -324,18 +510,12 @@ fn run_op(
         return Err(f);
     }
 
-    // Ship every JOB before any routing starts: a routed DATA frame must
-    // never precede JOB on a worker's stream (per-stream writes are only
-    // serialized once the writer mutexes exist).
+    // Ship every epoch-0 JOB before any routing starts: a routed DATA
+    // frame must never precede JOB on a worker's stream (per-stream
+    // writes are only serialized once the writer mutexes exist).
     let xsched_owned =
         (op != KernelOp::Spmm).then(|| sched.map(hierarchy::sddmm_fetch)).flatten();
     for rank in 0..nranks {
-        let (r0, r1) = part.range(rank);
-        let b_local =
-            Dense::from_vec(r1 - r0, n_dense, b.data[r0 * n_dense..r1 * n_dense].to_vec());
-        let x_local = x.map(|x| {
-            Dense::from_vec(r1 - r0, n_dense, x.data[r0 * n_dense..r1 * n_dense].to_vec())
-        });
         let job = match wire::encode_job(
             rank,
             op,
@@ -346,8 +526,8 @@ fn run_op(
             sched,
             xsched_owned.as_ref(),
             &blocks[rank],
-            &b_local,
-            x_local.as_ref(),
+            &slice_rows(b, part, rank),
+            x.map(|x| slice_rows(x, part, rank)).as_ref(),
         ) {
             Ok(j) => j,
             Err(e) => {
@@ -356,8 +536,10 @@ fn run_op(
                 return Err(fail(rank, FailureCause::Protocol(format!("encode job: {e:#}"))));
             }
         };
+        let mut payload = wire::epoch_payload(0);
+        payload.extend_from_slice(&job);
         let stream = streams[rank].as_mut().expect("accepted above");
-        if let Err(e) = wire::write_frame(stream, kind::JOB, &job) {
+        if let Err(e) = wire::write_frame(stream, kind::JOB, &payload) {
             kill_all(&mut children);
             reap(&mut children);
             return Err(fail(rank, FailureCause::Disconnected(format!("send job: {e:#}"))));
@@ -365,7 +547,8 @@ fn run_op(
     }
 
     // Split each stream: one cloned read half per reader thread, the
-    // original write half behind a mutex for routed DATA frames.
+    // original write half behind a mutex for routed DATA frames and
+    // recovery-control (ABORT / replanned JOB) frames.
     let mut readers = Vec::with_capacity(nranks);
     for s in &streams {
         match s.as_ref().expect("accepted above").try_clone() {
@@ -380,10 +563,13 @@ fn run_op(
     let writers: Vec<Mutex<TcpStream>> =
         streams.into_iter().map(|s| Mutex::new(s.expect("accepted above"))).collect();
     let writers = &writers;
+    let route = Mutex::new(Route { epoch: 0, worker_of_rank: (0..nranks).collect() });
+    let route = &route;
 
     let (ev_tx, ev_rx) = mpsc::channel::<Event>();
     type RankResult = (Dense, SddmmVals, RankStats);
-    let collected: Result<Vec<RankResult>, RankFailure> = std::thread::scope(|scope| {
+    type Collected = (Vec<RankResult>, Option<Live>, RecoveryReport);
+    let collected: Result<Collected, RankFailure> = std::thread::scope(|scope| {
         for (w, rd) in readers.into_iter().enumerate() {
             let ev_tx = ev_tx.clone();
             scope.spawn(move || {
@@ -398,41 +584,50 @@ fn run_op(
                     };
                     match k {
                         kind::DATA => {
-                            if payload.len() < 8 {
-                                let _ = ev_tx.send(Event::Fail(
-                                    w,
-                                    FailureCause::Protocol("short DATA frame".into()),
-                                ));
-                                return;
+                            let (dst, epoch) = match wire::decode_data_header(&payload) {
+                                Ok(h) => h,
+                                Err(e) => {
+                                    let _ = ev_tx.send(Event::Fail(
+                                        w,
+                                        FailureCause::Protocol(format!("bad DATA: {e:#}")),
+                                    ));
+                                    return;
+                                }
+                            };
+                            // Route by the *current* epoch's rank→worker
+                            // map; frames from an aborted epoch are
+                            // dropped here, before they can reach a
+                            // replanned job.
+                            let target = {
+                                let rt = route.lock().unwrap();
+                                if epoch != rt.epoch {
+                                    continue;
+                                }
+                                rt.worker_of_rank.get(dst).copied()
+                            };
+                            match target {
+                                Some(t) => {
+                                    // Routed verbatim. A write failure
+                                    // means *dst* died; dst's own reader
+                                    // reports that as EOF, so it is not
+                                    // this stream's failure.
+                                    let mut ws = writers[t].lock().unwrap();
+                                    let _ = wire::write_frame(&mut *ws, kind::DATA, &payload);
+                                }
+                                None => {
+                                    let _ = ev_tx.send(Event::Fail(
+                                        w,
+                                        FailureCause::Protocol(format!(
+                                            "DATA for bad rank {dst}"
+                                        )),
+                                    ));
+                                    return;
+                                }
                             }
-                            let dst = u64::from_le_bytes(
-                                payload[..8].try_into().expect("8-byte prefix"),
-                            ) as usize;
-                            if dst >= writers.len() {
-                                let _ = ev_tx.send(Event::Fail(
-                                    w,
-                                    FailureCause::Protocol(format!("DATA for bad rank {dst}")),
-                                ));
-                                return;
-                            }
-                            // Routed verbatim. A write failure means *dst*
-                            // died; dst's own reader reports that as EOF,
-                            // so it is not this stream's failure.
-                            let mut ws = writers[dst].lock().unwrap();
-                            let _ = wire::write_frame(&mut *ws, kind::DATA, &payload);
                         }
                         kind::DONE => match wire::decode_done(&payload) {
-                            Ok((rank, c, vals, st)) if rank == w => {
-                                let _ = ev_tx.send(Event::Done(w, c, vals, st));
-                            }
-                            Ok((rank, ..)) => {
-                                let _ = ev_tx.send(Event::Fail(
-                                    w,
-                                    FailureCause::Protocol(format!(
-                                        "DONE claims rank {rank} on rank {w}'s stream"
-                                    )),
-                                ));
-                                return;
+                            Ok((epoch, rank, c, vals, st)) => {
+                                let _ = ev_tx.send(Event::Done(w, epoch, rank, c, vals, st));
                             }
                             Err(e) => {
                                 let _ = ev_tx.send(Event::Fail(
@@ -445,14 +640,21 @@ fn run_op(
                         kind::BEAT => {
                             let _ = ev_tx.send(Event::Beat(w));
                         }
-                        kind::ERROR => {
-                            let cause = match wire::decode_error(&payload) {
-                                Ok((_, msg)) => FailureCause::Worker(msg),
-                                Err(e) => FailureCause::Protocol(format!("bad ERROR: {e:#}")),
-                            };
-                            let _ = ev_tx.send(Event::Fail(w, cause));
-                            return;
-                        }
+                        kind::ERROR => match wire::decode_error(&payload) {
+                            // Keep reading: a stale-epoch ERROR is an
+                            // aborted job winding down, and this worker
+                            // may still serve later epochs.
+                            Ok((epoch, _, msg)) => {
+                                let _ = ev_tx.send(Event::WorkerErr(w, epoch, msg));
+                            }
+                            Err(e) => {
+                                let _ = ev_tx.send(Event::Fail(
+                                    w,
+                                    FailureCause::Protocol(format!("bad ERROR: {e:#}")),
+                                ));
+                                return;
+                            }
+                        },
                         k => {
                             let _ = ev_tx.send(Event::Fail(
                                 w,
@@ -466,73 +668,244 @@ fn run_op(
         }
         drop(ev_tx);
 
+        // Collector state. Workers are tracked by spawn index; the
+        // current epoch's rank of each live worker lives in
+        // `rank_of_worker`, and `results` is indexed by epoch-relative
+        // rank.
+        let mut alive = vec![true; nranks];
+        let mut rank_of_worker: Vec<Option<usize>> = (0..nranks).map(Some).collect();
+        let mut n_alive = nranks;
+        let mut epoch: u64 = 0;
         let mut last_seen = vec![Instant::now(); nranks];
         let mut results: Vec<Option<RankResult>> = (0..nranks).map(|_| None).collect();
         let mut n_done = 0;
+        let mut live: Option<Live> = None;
+        let mut a_full: Option<Csr> = None;
+        let mut retries_left = match policy {
+            FaultPolicy::Fail => 0,
+            FaultPolicy::Recover { max_retries } => max_retries,
+        };
+        let mut report = RecoveryReport::default();
         let mut failure: Option<RankFailure> = None;
-        while n_done < nranks {
-            match ev_rx.recv_timeout(Duration::from_millis(100)) {
-                Ok(Event::Done(w, c, vals, st)) => {
-                    last_seen[w] = Instant::now();
-                    if results[w].is_none() {
-                        results[w] = Some((c, vals, st));
-                        n_done += 1;
+
+        'collect: while n_done < n_alive {
+            let missing = |rank_of_worker: &[Option<usize>],
+                           results: &[Option<RankResult>],
+                           w: usize| {
+                rank_of_worker[w].is_some_and(|r| results[r].is_none())
+            };
+            let mut fail_ev: Option<(usize, FailureCause)> =
+                match ev_rx.recv_timeout(Duration::from_millis(100)) {
+                    Ok(Event::Done(w, e, rank, c, vals, st)) => {
+                        last_seen[w] = Instant::now();
+                        if !alive[w] || e != epoch {
+                            None // stale epoch or quarantined worker
+                        } else if rank_of_worker[w] == Some(rank) {
+                            if results[rank].is_none() {
+                                results[rank] = Some((c, vals, st));
+                                n_done += 1;
+                            }
+                            None
+                        } else {
+                            Some((
+                                w,
+                                FailureCause::Protocol(format!(
+                                    "DONE claims rank {rank} on worker {w}'s stream"
+                                )),
+                            ))
+                        }
                     }
+                    Ok(Event::Beat(w)) => {
+                        last_seen[w] = Instant::now();
+                        None
+                    }
+                    Ok(Event::WorkerErr(w, e, msg)) => {
+                        last_seen[w] = Instant::now();
+                        (alive[w] && e == epoch).then(|| (w, FailureCause::Worker(msg)))
+                    }
+                    Ok(Event::Fail(w, cause)) => alive[w].then_some((w, cause)),
+                    Ok(Event::Eof(w, msg)) => (alive[w]
+                        && missing(&rank_of_worker, &results, w))
+                    .then(|| (w, FailureCause::Disconnected(msg))),
+                    Err(mpsc::RecvTimeoutError::Timeout) => None,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        // Every reader thread exited with work missing:
+                        // attribute to the first live worker still owed a
+                        // result (the loop guard guarantees one exists).
+                        let w = (0..nranks)
+                            .find(|&w| alive[w] && missing(&rank_of_worker, &results, w));
+                        match w {
+                            Some(w) => Some((
+                                w,
+                                FailureCause::Disconnected("all streams closed".into()),
+                            )),
+                            None => break 'collect,
+                        }
+                    }
+                };
+            if fail_ev.is_none() {
+                fail_ev = (0..nranks)
+                    .find(|&w| {
+                        alive[w]
+                            && missing(&rank_of_worker, &results, w)
+                            && last_seen[w].elapsed() > popts.timeout
+                    })
+                    .map(|w| (w, FailureCause::HeartbeatTimeout(popts.timeout)));
+            }
+
+            // Failure handling. A replan that fails mid-ship (another
+            // worker died under us) loops back through with the new
+            // victim rather than recursing.
+            let mut pending = fail_ev;
+            while let Some((fw, fc)) = pending.take() {
+                alive[fw] = false;
+                let lost_rank = rank_of_worker[fw].take().expect("live worker had a rank");
+                n_alive -= 1;
+                if retries_left == 0 || n_alive == 0 {
+                    failure = Some(RankFailure { rank: fw, cause: fc });
+                    break 'collect;
                 }
-                Ok(Event::Beat(w)) => last_seen[w] = Instant::now(),
-                Ok(Event::Fail(w, cause)) => {
-                    failure = Some(RankFailure { rank: w, cause });
-                    break;
+                retries_left -= 1;
+                let t_rec = Instant::now();
+                report.lost_ranks.push(fw);
+                report.replans += 1;
+
+                // Cancel the in-flight step on every survivor before the
+                // replanned JOB lands on the same stream (TCP order
+                // guarantees ABORT is seen first).
+                let abort = wire::epoch_payload(epoch);
+                for w2 in (0..nranks).filter(|&w2| alive[w2]) {
+                    let mut ws = writers[w2].lock().unwrap();
+                    let _ = wire::write_frame(&mut *ws, kind::ABORT, &abort);
                 }
-                Ok(Event::Eof(w, msg)) => {
-                    // EOF after DONE is the worker exiting normally.
-                    if results[w].is_none() {
-                        failure =
-                            Some(RankFailure { rank: w, cause: FailureCause::Disconnected(msg) });
+
+                // Rebuild the plan state on the surviving partition. The
+                // replan is the same pure function of (A, partition,
+                // strategy, topology) a cold start runs — that purity is
+                // the bitwise-replay guarantee the fault suite pins.
+                let (new_part, strategy, had_sched, new_topo);
+                {
+                    let (cpart, cblocks): (&RowPartition, &[LocalBlocks]) = match &live {
+                        None => (part, blocks),
+                        Some(l) => (&l.part, l.blocks.as_slice()),
+                    };
+                    if a_full.is_none() {
+                        a_full = Some(assemble_1d(cblocks, cpart));
+                    }
+                    new_part = recover_partition(cpart, lost_rank);
+                    let (cplan, csched, ctopo) = match &live {
+                        None => (plan, sched, topo),
+                        Some(l) => (&l.plan, l.sched.as_ref(), &l.topo),
+                    };
+                    strategy = cplan.strategy;
+                    had_sched = csched.is_some();
+                    new_topo = Topology { nranks: n_alive, ..ctopo.clone() };
+                }
+                let a = a_full.as_ref().expect("assembled above");
+                let new_blocks = split_1d(a, &new_part);
+                let new_plan = crate::comm::plan(&new_blocks, &new_part, strategy, None);
+                let new_sched = had_sched.then(|| hierarchy::build(&new_plan, &new_topo));
+                live = Some(Live {
+                    part: new_part,
+                    plan: new_plan,
+                    blocks: new_blocks,
+                    sched: new_sched,
+                    topo: new_topo,
+                });
+
+                // Renumber survivors 0..n_alive in spawn order and
+                // publish the new routing epoch before any survivor can
+                // learn of it from its JOB frame.
+                epoch += 1;
+                let survivors: Vec<usize> = (0..nranks).filter(|&w2| alive[w2]).collect();
+                for (r, &w2) in survivors.iter().enumerate() {
+                    rank_of_worker[w2] = Some(r);
+                }
+                {
+                    let mut rt = route.lock().unwrap();
+                    rt.epoch = epoch;
+                    rt.worker_of_rank = survivors.clone();
+                }
+                results = (0..n_alive).map(|_| None).collect();
+                n_done = 0;
+
+                let l = live.as_ref().expect("just replanned");
+                let xsched_owned = (op != KernelOp::Spmm)
+                    .then(|| l.sched.as_ref().map(hierarchy::sddmm_fetch))
+                    .flatten();
+                for (r, &w2) in survivors.iter().enumerate() {
+                    let job = match wire::encode_job(
+                        r,
+                        op,
+                        opts,
+                        &l.part,
+                        &l.topo,
+                        &l.plan,
+                        l.sched.as_ref(),
+                        xsched_owned.as_ref(),
+                        &l.blocks[r],
+                        &slice_rows(b, &l.part, r),
+                        x.map(|x| slice_rows(x, &l.part, r)).as_ref(),
+                    ) {
+                        Ok(j) => j,
+                        Err(e) => {
+                            pending = Some((
+                                w2,
+                                FailureCause::Protocol(format!("encode job: {e:#}")),
+                            ));
+                            break;
+                        }
+                    };
+                    let mut payload = wire::epoch_payload(epoch);
+                    payload.extend_from_slice(&job);
+                    let sent = {
+                        let mut ws = writers[w2].lock().unwrap();
+                        wire::write_frame(&mut *ws, kind::JOB, &payload)
+                    };
+                    if let Err(e) = sent {
+                        pending = Some((
+                            w2,
+                            FailureCause::Disconnected(format!("send job: {e:#}")),
+                        ));
                         break;
                     }
                 }
-                Err(mpsc::RecvTimeoutError::Timeout) => {}
-                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    if let Some(w) = results.iter().position(Option::is_none) {
-                        failure = Some(RankFailure {
-                            rank: w,
-                            cause: FailureCause::Disconnected("all streams closed".into()),
-                        });
-                    }
-                    break;
-                }
-            }
-            if failure.is_none() {
-                if let Some(w) = (0..nranks)
-                    .find(|&w| results[w].is_none() && last_seen[w].elapsed() > popts.timeout)
-                {
-                    failure = Some(RankFailure {
-                        rank: w,
-                        cause: FailureCause::HeartbeatTimeout(popts.timeout),
-                    });
-                    break;
+                report.replan_secs.push(t_rec.elapsed().as_secs_f64());
+                // Replanning can outlast the heartbeat budget on big
+                // inputs; restart every survivor's liveness clock.
+                for &w2 in &survivors {
+                    last_seen[w2] = Instant::now();
                 }
             }
         }
         // Kill every child before the scope joins its reader threads: the
         // sockets close, every blocked `read_frame` returns EOF, and the
         // scope can exit instead of deadlocking. On success the children
-        // have already exited and this is a no-op.
+        // are idle and die here.
         kill_all(&mut children);
         match failure {
             Some(f) => Err(f),
-            None => Ok(results.into_iter().map(|r| r.expect("counted done")).collect()),
+            None => Ok((
+                results.into_iter().map(|r| r.expect("counted done")).collect(),
+                live,
+                report,
+            )),
         }
     });
     reap(&mut children);
-    let results = collected?;
+    let (results, live, report) = collected?;
 
-    let mut c_global = Dense::zeros(part.n, c_cols);
-    let mut all_vals = Vec::with_capacity(nranks);
-    let mut per_rank = Vec::with_capacity(nranks);
+    // Assemble under the *final* partition — post-recovery it differs
+    // from the caller's.
+    let (fpart, fblocks, fplan): (&RowPartition, &[LocalBlocks], &CommPlan) = match &live {
+        None => (part, blocks, plan),
+        Some(l) => (&l.part, l.blocks.as_slice(), &l.plan),
+    };
+    let mut c_global = Dense::zeros(fpart.n, c_cols);
+    let mut all_vals = Vec::with_capacity(results.len());
+    let mut per_rank = Vec::with_capacity(results.len());
     for (rank, (c_local, vals, stats)) in results.into_iter().enumerate() {
-        let (r0, r1) = part.range(rank);
+        let (r0, r1) = fpart.range(rank);
         if c_local.nrows != r1 - r0 || c_local.ncols != c_cols {
             return Err(fail(
                 rank,
@@ -548,7 +921,21 @@ fn run_op(
         all_vals.push(vals);
         per_rank.push(stats);
     }
-    Ok((c_global, all_vals, ExecStats { per_rank, wall_secs: t0.elapsed().as_secs_f64() }))
+    let e = (op == KernelOp::Sddmm).then(|| assemble_sddmm(fpart, fblocks, fplan, &all_vals));
+    let report = (report.replans > 0).then(|| RecoveryReport {
+        recovered: true,
+        final_starts: fpart.starts.clone(),
+        ..report
+    });
+    let stats = ExecStats { per_rank, wall_secs: t0.elapsed().as_secs_f64() };
+    Ok((c_global, e, stats, report))
+}
+
+/// One rank's slice of a row-partitioned dense operand.
+fn slice_rows(d: &Dense, part: &RowPartition, rank: usize) -> Dense {
+    let (r0, r1) = part.range(rank);
+    let n = d.ncols;
+    Dense::from_vec(r1 - r0, n, d.data[r0 * n..r1 * n].to_vec())
 }
 
 fn kill_all(children: &mut [Child]) {
@@ -588,7 +975,52 @@ mod tests {
         let o = ProcOpts::default();
         assert_eq!(o.timeout, Duration::from_secs(30));
         assert!(o.worker_exe.is_none());
-        assert!(o.crash_rank.is_none());
+        assert!(o.fault.is_none());
+        assert_eq!(FaultPolicy::default(), FaultPolicy::Fail);
+    }
+
+    #[test]
+    fn crash_phase_names_roundtrip() {
+        for p in CrashPhase::ALL {
+            assert_eq!(CrashPhase::by_name(p.name()), Some(p));
+        }
+        assert_eq!(CrashPhase::by_name("nope"), None);
+        assert_eq!(FaultPlan::post_decode(2).phase, CrashPhase::PostDecode);
+    }
+
+    #[test]
+    fn seeded_fault_plans_are_deterministic_and_in_range() {
+        for seed in 0..64u64 {
+            for nranks in [1usize, 2, 4, 8] {
+                let a = FaultPlan::seeded(seed, nranks);
+                let b = FaultPlan::seeded(seed, nranks);
+                assert_eq!(a, b, "seed {seed} must be reproducible");
+                assert!(a.rank < nranks);
+            }
+        }
+        // Distinct seeds actually vary the choice.
+        let plans: std::collections::BTreeSet<_> = (0..64u64)
+            .map(|s| {
+                let p = FaultPlan::seeded(s, 8);
+                (p.rank, p.phase.name())
+            })
+            .collect();
+        assert!(plans.len() > 4, "seeded plans barely vary: {plans:?}");
+    }
+
+    #[test]
+    fn recovery_report_latency_uses_metrics_samples() {
+        let rep = RecoveryReport {
+            lost_ranks: vec![1, 3],
+            replans: 2,
+            recovered: true,
+            final_starts: vec![0, 4, 8],
+            replan_secs: vec![0.25, 0.75],
+        };
+        let (stats, total) = rep.latency();
+        assert_eq!(stats.count, 2);
+        assert_eq!(total, 1.0);
+        assert_eq!(stats.max, 0.75);
     }
 
     #[test]

@@ -34,7 +34,7 @@ use crate::exec::{ExecOpts, ExecStats};
 use crate::metrics::{latency_stats, LatencyStats};
 use crate::plan::cache::{csr_fingerprint, PlanCache};
 use crate::sparse::Csr;
-use crate::spmm::{Backend, ExecError, ExecRequest, ExecResult, PlanSpec};
+use crate::spmm::{Backend, ExecError, ExecRequest, ExecResult, FaultPolicy, PlanSpec, RecoveryReport};
 use crate::topology::Topology;
 use std::collections::{HashMap, VecDeque};
 use std::fmt;
@@ -65,6 +65,11 @@ pub struct ServeConfig {
     pub opts: ExecOpts,
     /// Disk-backed plan cache directory (`None` = in-memory only).
     pub cache_dir: Option<PathBuf>,
+    /// Crash handling for proc-backend requests: [`FaultPolicy::Fail`]
+    /// surfaces worker deaths as [`ServeError::Exec`];
+    /// [`FaultPolicy::Recover`] replans over the survivors so a tenant
+    /// request outlives a dead worker (DESIGN.md §12).
+    pub fault_policy: FaultPolicy,
 }
 
 impl ServeConfig {
@@ -77,6 +82,7 @@ impl ServeConfig {
             spec: PlanSpec::new(topo),
             opts: ExecOpts::default(),
             cache_dir: None,
+            fault_policy: FaultPolicy::Fail,
         }
     }
 }
@@ -133,6 +139,9 @@ pub struct ServeResponse {
     /// Number of requests coalesced into the execute that produced this
     /// response (1 = unbatched).
     pub batch_size: usize,
+    /// Crash-recovery report when this request's proc-backend execute lost
+    /// and recovered workers; `None` on clean runs and thread requests.
+    pub recovery: Option<RecoveryReport>,
 }
 
 impl ServeResponse {
@@ -237,12 +246,22 @@ pub struct ServeStats {
     pub exec_secs: Vec<f64>,
     /// Submit-to-fulfill wall time.
     pub total_secs: Vec<f64>,
+    /// Replan rounds performed by proc-backend crash recovery.
+    pub recoveries: u64,
+    /// One sample per replan round: failure detected → jobs re-shipped.
+    pub recovery_secs: Vec<f64>,
 }
 
 impl ServeStats {
     /// Order statistics over end-to-end request latency.
     pub fn latency(&self) -> LatencyStats {
         latency_stats(&self.total_secs)
+    }
+
+    /// Order statistics plus total over the replan latency samples
+    /// ([`crate::metrics::recovery_latency`]).
+    pub fn recovery_latency(&self) -> (LatencyStats, f64) {
+        crate::metrics::recovery_latency(&self.recovery_secs)
     }
 
     /// Mean size of coalesced executes counting singletons, i.e. requests
@@ -513,6 +532,11 @@ fn process(inner: &Inner, batch: Vec<Pending>) {
         let exec_secs = t.elapsed().as_secs_f64();
         match res {
             Ok(r) => {
+                if let Some(rec) = &r.recovery {
+                    let mut st = inner.stats.lock().unwrap();
+                    st.recoveries += rec.replans as u64;
+                    st.recovery_secs.extend_from_slice(&rec.replan_secs);
+                }
                 let resp = ServeResponse {
                     dense: r.dense,
                     sparse: r.sparse,
@@ -521,6 +545,7 @@ fn process(inner: &Inner, batch: Vec<Pending>) {
                     plan_secs,
                     exec_secs,
                     batch_size: 1,
+                    recovery: r.recovery,
                 };
                 record_done(inner, &[&p], popped, plan_secs, exec_secs, 1);
                 fulfill(&p.slot, Ok(resp));
@@ -575,6 +600,9 @@ fn process(inner: &Inner, batch: Vec<Pending>) {
                     plan_secs,
                     exec_secs,
                     batch_size: n,
+                    // Batches are thread-backend only; recovery is a proc
+                    // backend concern.
+                    recovery: None,
                 };
                 fulfill(&p.slot, Ok(resp));
             }
@@ -609,7 +637,10 @@ fn run_one(
     match &req.backend {
         Backend::Thread => sess.lock().unwrap().execute(&er),
         Backend::Proc(_) => {
-            let er = er.backend(req.backend.clone()).opts(inner.cfg.opts);
+            let er = er
+                .backend(req.backend.clone())
+                .opts(inner.cfg.opts)
+                .fault_policy(inner.cfg.fault_policy);
             sess.lock().unwrap().dist().execute(&er)
         }
     }

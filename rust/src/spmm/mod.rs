@@ -20,6 +20,7 @@ pub mod request;
 
 pub use crate::exec::kernel::KernelOp;
 pub use crate::exec::session::SpmmSession;
+pub use crate::runtime::multiproc::{FaultPlan, FaultPolicy, RecoveryReport};
 pub use request::{Backend, ExecError, ExecRequest, ExecResult, PlanSpec};
 
 /// A fully planned distributed SpMM instance. Planning (steps 1–2 of the
@@ -85,25 +86,27 @@ impl DistSpmm {
             },
             Backend::Proc(popts) => {
                 use crate::runtime::multiproc;
+                let policy = req.fault_policy;
                 match req.op {
                     KernelOp::Spmm => {
-                        let (c, st) =
-                            multiproc::run(part, plan, blocks, sched, topo, req.b, &req.opts, popts)?;
-                        Ok(ExecResult::from_dense(c, st))
+                        let (c, st, rec) = multiproc::run(
+                            part, plan, blocks, sched, topo, req.b, &req.opts, popts, policy,
+                        )?;
+                        Ok(ExecResult::from_dense(c, st).with_recovery(rec))
                     }
                     KernelOp::Sddmm => {
                         let x = req.x_operand()?;
-                        let (e, st) = multiproc::run_sddmm(
-                            part, plan, blocks, sched, topo, x, req.b, &req.opts, popts,
+                        let (e, st, rec) = multiproc::run_sddmm(
+                            part, plan, blocks, sched, topo, x, req.b, &req.opts, popts, policy,
                         )?;
-                        Ok(ExecResult::from_sparse(e, st))
+                        Ok(ExecResult::from_sparse(e, st).with_recovery(rec))
                     }
                     KernelOp::FusedSddmmSpmm => {
                         let x = req.x_operand()?;
-                        let (c, st) = multiproc::run_fused(
-                            part, plan, blocks, sched, topo, x, req.b, &req.opts, popts,
+                        let (c, st, rec) = multiproc::run_fused(
+                            part, plan, blocks, sched, topo, x, req.b, &req.opts, popts, policy,
                         )?;
-                        Ok(ExecResult::from_dense(c, st))
+                        Ok(ExecResult::from_dense(c, st).with_recovery(rec))
                     }
                 }
             }

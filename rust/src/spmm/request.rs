@@ -22,7 +22,7 @@ use crate::exec::{ExecOpts, ExecStats};
 use crate::partition::Partitioner;
 use crate::plan::cache::PlanCache;
 use crate::plan::PlanParams;
-use crate::runtime::multiproc::{ProcOpts, RankFailure};
+use crate::runtime::multiproc::{FaultPolicy, ProcOpts, RankFailure, RecoveryReport};
 use crate::sparse::Csr;
 use crate::topology::Topology;
 use std::fmt;
@@ -76,6 +76,9 @@ pub struct ExecRequest<'a> {
     pub opts: ExecOpts,
     pub backend: Backend,
     pub kernel: &'a (dyn SpmmKernel + Sync),
+    /// What to do when a worker process dies mid-step (proc backend only;
+    /// thread ranks share an address space and cannot fail independently).
+    pub fault_policy: FaultPolicy,
 }
 
 impl<'a> ExecRequest<'a> {
@@ -88,6 +91,7 @@ impl<'a> ExecRequest<'a> {
             opts: ExecOpts::default(),
             backend: Backend::Thread,
             kernel: &NativeKernel,
+            fault_policy: FaultPolicy::Fail,
         }
     }
 
@@ -119,6 +123,14 @@ impl<'a> ExecRequest<'a> {
         self
     }
 
+    /// Crash handling on the proc backend: [`FaultPolicy::Fail`] (default)
+    /// surfaces a [`RankFailure`]; [`FaultPolicy::Recover`] replans over
+    /// the survivors and replays the step (DESIGN.md §12).
+    pub fn fault_policy(mut self, policy: FaultPolicy) -> ExecRequest<'a> {
+        self.fault_policy = policy;
+        self
+    }
+
     /// The X operand, or a structured error for requests that need one but
     /// were built by hand without it.
     pub(crate) fn x_operand(&self) -> Result<&'a Dense, ExecError> {
@@ -135,15 +147,23 @@ pub struct ExecResult {
     pub dense: Option<Dense>,
     pub sparse: Option<Csr>,
     pub stats: ExecStats,
+    /// Set iff the proc backend lost at least one worker and recovered
+    /// under [`FaultPolicy::Recover`]; `None` on every clean run.
+    pub recovery: Option<RecoveryReport>,
 }
 
 impl ExecResult {
     pub(crate) fn from_dense(c: Dense, stats: ExecStats) -> ExecResult {
-        ExecResult { dense: Some(c), sparse: None, stats }
+        ExecResult { dense: Some(c), sparse: None, stats, recovery: None }
     }
 
     pub(crate) fn from_sparse(e: Csr, stats: ExecStats) -> ExecResult {
-        ExecResult { dense: None, sparse: Some(e), stats }
+        ExecResult { dense: None, sparse: Some(e), stats, recovery: None }
+    }
+
+    pub(crate) fn with_recovery(mut self, recovery: Option<RecoveryReport>) -> ExecResult {
+        self.recovery = recovery;
+        self
     }
 
     /// The dense output and stats; panics on an SDDMM result.

@@ -159,7 +159,7 @@ fn proc_shims_match_proc_backend_requests_bitwise() {
     let popts = ProcOpts {
         timeout: Duration::from_secs(60),
         worker_exe: Some(env!("CARGO_BIN_EXE_shiro").into()),
-        crash_rank: None,
+        fault: None,
     };
     let (a, b, x, y) = fixtures();
     let d = PlanSpec::new(Topology::tsubame4(2)).plan(&a);

@@ -1,0 +1,359 @@
+//! Crash-recovery differential suite (DESIGN.md §12): deterministic fault
+//! injection against the proc backend's replan-over-survivors recovery.
+//!
+//! The load-bearing assertion everywhere: after losing a rank mid-step,
+//! the recovered C must be **bitwise identical** to a cold run on the
+//! post-recovery partition (pinned by `RecoveryReport::final_starts`) —
+//! recovery replays the same pure `partition → plan → hierarchy → execute`
+//! pipeline a cold start runs, and the canonical (origin, row) fold makes
+//! proc and thread backends interchangeable oracles. Inputs are
+//! integer-exact, so the serial `Csr::spmm`/`Csr::sddmm` oracle matches
+//! bit for bit too, regardless of how the partition shifted.
+//!
+//! Worker processes are this crate's own binary (re-entered through
+//! `maybe_run_worker`), located via `CARGO_BIN_EXE_shiro`.
+
+use std::time::{Duration, Instant};
+
+use shiro::bench::int_matrix;
+use shiro::comm::{self, Strategy};
+use shiro::cover::Solver;
+use shiro::dense::Dense;
+use shiro::hierarchy;
+use shiro::partition::{split_1d, Partitioner, RowPartition};
+use shiro::runtime::multiproc::{
+    CrashPhase, FailureCause, FaultPlan, FaultPolicy, ProcOpts, RecoveryReport,
+};
+use shiro::serve::{Server, ServeConfig, ServeRequest};
+use shiro::sparse::Csr;
+use shiro::spmm::{Backend, DistSpmm, ExecError, ExecRequest, PlanSpec};
+use shiro::topology::Topology;
+
+fn popts(fault: Option<FaultPlan>) -> ProcOpts {
+    ProcOpts {
+        timeout: Duration::from_secs(60),
+        worker_exe: Some(env!("CARGO_BIN_EXE_shiro").into()),
+        fault,
+    }
+}
+
+fn plan(a: &Csr, strategy: Strategy, ranks: usize, hier: bool) -> DistSpmm {
+    PlanSpec::new(Topology::tsubame4(ranks)).strategy(strategy).hierarchical(hier).plan(a)
+}
+
+fn int_b(n: usize, k: usize) -> Dense {
+    Dense::from_fn(n, k, |i, j| ((i * 7 + j * 5) % 9) as f32 - 4.0)
+}
+
+fn int_xy(n: usize, k: usize) -> (Dense, Dense) {
+    let x = Dense::from_fn(n, k, |i, j| ((i * 5 + j * 3) % 7) as f32 - 3.0);
+    let y = Dense::from_fn(n, k, |i, j| ((i * 3 + j * 11) % 7) as f32 - 3.0);
+    (x, y)
+}
+
+/// Rebuild the exact plan state recovery compiled, as a cold start: the
+/// same pure function of (A, partition, strategy, topology) the collector
+/// runs after a loss. Executing this on the thread backend is the bitwise
+/// oracle for the recovered proc run.
+fn cold_dist(a: &Csr, starts: &[usize], strategy: Strategy, hier: bool) -> DistSpmm {
+    let part = RowPartition::from_starts(starts.to_vec());
+    let blocks = split_1d(a, &part);
+    let plan = comm::plan(&blocks, &part, strategy, None);
+    let topo = Topology::tsubame4(part.nparts);
+    let sched = hier.then(|| hierarchy::build(&plan, &topo));
+    DistSpmm { part, blocks, plan, sched, topo, prep_secs: 0.0 }
+}
+
+/// One recovered SpMM run: returns (C, report), asserting the report's
+/// internal consistency on the way out.
+fn run_recovered(
+    d: &DistSpmm,
+    b: &Dense,
+    fault: FaultPlan,
+    max_retries: usize,
+    label: &str,
+) -> (Dense, RecoveryReport) {
+    let r = d
+        .execute(
+            &ExecRequest::spmm(b)
+                .backend(Backend::Proc(popts(Some(fault))))
+                .fault_policy(FaultPolicy::Recover { max_retries }),
+        )
+        .unwrap_or_else(|f| panic!("{label}: recovery failed: {f}"));
+    let rec = r.recovery.clone().unwrap_or_else(|| panic!("{label}: no recovery report"));
+    assert!(rec.recovered, "{label}: report not marked recovered");
+    assert_eq!(rec.replans, rec.lost_ranks.len(), "{label}: replans != losses");
+    assert_eq!(rec.replan_secs.len(), rec.replans, "{label}: missing latency samples");
+    assert!(rec.latency().1 > 0.0, "{label}: zero total replan time");
+    let (c, _) = r.into_dense();
+    (c, rec)
+}
+
+#[test]
+fn recovery_matrix_strategies_by_phase() {
+    // Every strategy × every crash phase, 4 ranks, killing rank 1 under
+    // Recover{1}: the run must converge in exactly one replan, and the
+    // result must be bitwise both the cold-start oracle on the surviving
+    // partition and the serial oracle.
+    let a = int_matrix(128, 1500, 42);
+    let b = int_b(128, 6);
+    let want = a.spmm(&b);
+    for strategy in
+        [Strategy::Block, Strategy::Column, Strategy::Row, Strategy::Joint(Solver::Koenig)]
+    {
+        let hier = strategy != Strategy::Block;
+        let d = plan(&a, strategy, 4, hier);
+        for phase in CrashPhase::ALL {
+            let label = format!("{strategy:?}/{}", phase.name());
+            let (c, rec) = run_recovered(&d, &b, FaultPlan::new(1, phase), 1, &label);
+            assert_eq!(rec.lost_ranks, vec![1], "{label}: wrong loss attribution");
+            assert_eq!(rec.final_starts.len(), 4, "{label}: expected 3 surviving ranks");
+            assert_eq!(c.data, want.data, "{label}: bits differ from serial oracle");
+            let cold = cold_dist(&a, &rec.final_starts, strategy, hier);
+            let (c_cold, _) = cold
+                .execute(&ExecRequest::spmm(&b))
+                .expect("thread backend")
+                .into_dense();
+            assert_eq!(c.data, c_cold.data, "{label}: bits differ from cold post-recovery run");
+        }
+    }
+}
+
+#[test]
+fn recovery_across_partitioners_and_rank_counts() {
+    // Partitioner × rank-count sweep with the crash phase cycled. Includes
+    // the 2-rank edge (recovery leaves a single survivor running the whole
+    // matrix with an empty comm plan) and the 8-rank two-group case where
+    // the shrunken topology re-draws the group boundary.
+    let a = int_matrix(160, 1800, 7);
+    let b = int_b(160, 4);
+    let want = a.spmm(&b);
+    for (pi, partitioner) in Partitioner::ALL.into_iter().enumerate() {
+        for (ri, ranks) in [2usize, 4, 8].into_iter().enumerate() {
+            let phase = CrashPhase::ALL[(pi + ri) % CrashPhase::ALL.len()];
+            let d = PlanSpec::new(Topology::tsubame4(ranks))
+                .strategy(Strategy::Joint(Solver::Koenig))
+                .hierarchical(true)
+                .partitioner(partitioner)
+                .plan(&a);
+            let label = format!("{}/{ranks} ranks/{}", partitioner.name(), phase.name());
+            let (c, rec) =
+                run_recovered(&d, &b, FaultPlan::new(ranks / 2, phase), 1, &label);
+            assert_eq!(rec.lost_ranks, vec![ranks / 2], "{label}: wrong loss attribution");
+            assert_eq!(rec.final_starts.len(), ranks, "{label}: expected ranks-1 survivors");
+            assert_eq!(c.data, want.data, "{label}: bits differ from serial oracle");
+            let cold = cold_dist(&a, &rec.final_starts, Strategy::Joint(Solver::Koenig), true);
+            let (c_cold, _) = cold
+                .execute(&ExecRequest::spmm(&b))
+                .expect("thread backend")
+                .into_dense();
+            assert_eq!(c.data, c_cold.data, "{label}: bits differ from cold post-recovery run");
+        }
+    }
+}
+
+#[test]
+fn recovery_on_flat_plans() {
+    // No hierarchical schedule anywhere: the replan must stay flat too
+    // (`had_sched` is preserved, not re-decided).
+    let a = int_matrix(128, 1400, 11);
+    let b = int_b(128, 5);
+    let want = a.spmm(&b);
+    let d = plan(&a, Strategy::Joint(Solver::Koenig), 4, false);
+    for phase in CrashPhase::ALL {
+        let label = format!("flat/{}", phase.name());
+        let (c, rec) = run_recovered(&d, &b, FaultPlan::new(2, phase), 1, &label);
+        assert_eq!(c.data, want.data, "{label}: bits differ from serial oracle");
+        let cold = cold_dist(&a, &rec.final_starts, Strategy::Joint(Solver::Koenig), false);
+        let (c_cold, _) =
+            cold.execute(&ExecRequest::spmm(&b)).expect("thread backend").into_dense();
+        assert_eq!(c.data, c_cold.data, "{label}: bits differ from cold post-recovery run");
+    }
+}
+
+#[test]
+fn sddmm_recovery_matches_serial_and_cold_oracles() {
+    let a = int_matrix(128, 1400, 55);
+    let (x, y) = int_xy(128, 4);
+    let d = plan(&a, Strategy::Joint(Solver::Koenig), 4, true);
+    let r = d
+        .execute(
+            &ExecRequest::sddmm(&x, &y)
+                .backend(Backend::Proc(popts(Some(FaultPlan::new(2, CrashPhase::PreDone)))))
+                .fault_policy(FaultPolicy::Recover { max_retries: 1 }),
+        )
+        .expect("SDDMM recovery failed");
+    let rec = r.recovery.clone().expect("no recovery report");
+    let (e, _) = r.into_sparse();
+    assert_eq!(e, a.sddmm(&x, &y), "recovered SDDMM differs from serial oracle");
+    // E is assembled under the *final* partition; a cold run there must
+    // agree frame for frame.
+    let cold = cold_dist(&a, &rec.final_starts, Strategy::Joint(Solver::Koenig), true);
+    let (e_cold, _) =
+        cold.execute(&ExecRequest::sddmm(&x, &y)).expect("thread backend").into_sparse();
+    assert_eq!(e, e_cold, "recovered SDDMM differs from cold post-recovery run");
+}
+
+#[test]
+fn fused_recovery_matches_thread_and_cold_oracles() {
+    let a = int_matrix(128, 1400, 77);
+    let (x, y) = int_xy(128, 4);
+    let d = plan(&a, Strategy::Joint(Solver::Koenig), 4, true);
+    let (c_thread, _) =
+        d.execute(&ExecRequest::fused(&x, &y)).expect("thread backend").into_dense();
+    let r = d
+        .execute(
+            &ExecRequest::fused(&x, &y)
+                .backend(Backend::Proc(popts(Some(FaultPlan::new(1, CrashPhase::MidExchange)))))
+                .fault_policy(FaultPolicy::Recover { max_retries: 1 }),
+        )
+        .expect("fused recovery failed");
+    let rec = r.recovery.clone().expect("no recovery report");
+    let (c, _) = r.into_dense();
+    // Integer-exact inputs make the fused output partition-independent, so
+    // the pre-loss thread run is also a bitwise oracle.
+    assert_eq!(c.data, c_thread.data, "recovered fused bits differ from thread run");
+    let cold = cold_dist(&a, &rec.final_starts, Strategy::Joint(Solver::Koenig), true);
+    let (c_cold, _) =
+        cold.execute(&ExecRequest::fused(&x, &y)).expect("thread backend").into_dense();
+    assert_eq!(c.data, c_cold.data, "recovered fused bits differ from cold run");
+}
+
+/// Assert `err` is the structured kill-report `multiproc_suite.rs` pins:
+/// right rank, a death-shaped cause, and well inside the deadline.
+fn assert_kill_failure(err: ExecError, rank: usize, wall: Duration) {
+    let err = match err {
+        ExecError::Rank(f) => f,
+        other => panic!("expected a structured RankFailure, got {other}"),
+    };
+    assert_eq!(err.rank, rank, "failure must be attributed to the killed rank: {err}");
+    assert!(
+        matches!(
+            err.cause,
+            FailureCause::Disconnected(_)
+                | FailureCause::HeartbeatTimeout(_)
+                | FailureCause::Worker(_)
+        ),
+        "unexpected cause: {err}"
+    );
+    assert!(wall < Duration::from_secs(30), "failure took {wall:?} — parent nearly hung");
+}
+
+#[test]
+fn fault_policy_fail_surfaces_rank_failure() {
+    // The default policy must stay bitwise the pre-recovery behavior: a
+    // mid-exchange death surfaces the exact structured RankFailure the
+    // multiproc suite pins, with no replan attempt.
+    let a = int_matrix(128, 1500, 3);
+    let b = int_b(128, 4);
+    let d = plan(&a, Strategy::Joint(Solver::Koenig), 4, true);
+    let popts = ProcOpts {
+        timeout: Duration::from_secs(10),
+        ..popts(Some(FaultPlan::new(1, CrashPhase::MidExchange)))
+    };
+    let t0 = Instant::now();
+    let err = d
+        .execute(&ExecRequest::spmm(&b).backend(Backend::Proc(popts)))
+        .expect_err("run with a killed worker must fail under FaultPolicy::Fail");
+    assert_kill_failure(err, 1, t0.elapsed());
+}
+
+#[test]
+fn recover_with_zero_retries_behaves_like_fail() {
+    let a = int_matrix(128, 1500, 3);
+    let b = int_b(128, 4);
+    let d = plan(&a, Strategy::Joint(Solver::Koenig), 4, true);
+    let popts = ProcOpts {
+        timeout: Duration::from_secs(10),
+        ..popts(Some(FaultPlan::post_decode(1)))
+    };
+    let t0 = Instant::now();
+    let err = d
+        .execute(
+            &ExecRequest::spmm(&b)
+                .backend(Backend::Proc(popts))
+                .fault_policy(FaultPolicy::Recover { max_retries: 0 }),
+        )
+        .expect_err("zero retries must surface the failure");
+    assert_kill_failure(err, 1, t0.elapsed());
+}
+
+#[test]
+fn losing_every_worker_returns_structured_failure() {
+    // One rank, and it dies: recovery has no survivors to replan over, so
+    // even a generous retry budget must surface a structured failure —
+    // never hang, never panic the control plane.
+    let a = int_matrix(96, 900, 9);
+    let b = int_b(96, 3);
+    let d = plan(&a, Strategy::Joint(Solver::Koenig), 1, false);
+    let popts = ProcOpts {
+        timeout: Duration::from_secs(10),
+        ..popts(Some(FaultPlan::post_decode(0)))
+    };
+    let t0 = Instant::now();
+    let err = d
+        .execute(
+            &ExecRequest::spmm(&b)
+                .backend(Backend::Proc(popts))
+                .fault_policy(FaultPolicy::Recover { max_retries: 3 }),
+        )
+        .expect_err("losing the last worker must fail");
+    assert_kill_failure(err, 0, t0.elapsed());
+}
+
+#[test]
+#[ignore = "chaos soak — run with --ignored in CI's perf-smoke lane"]
+fn chaos_soak_serve_session_with_seeded_worker_kills() {
+    // A serve session under tenant churn where every k-th request runs on
+    // the proc backend with a seeded worker kill. With the server's
+    // FaultPolicy::Recover, no request may be dropped, double-fulfilled,
+    // or answered with different bits than a clean direct execute.
+    const RANKS: usize = 4;
+    const REQUESTS: usize = 24;
+    const KILL_EVERY: usize = 4;
+    let graphs: Vec<Csr> = (0..3).map(|i| int_matrix(96, 900 + 50 * i, 21 + i as u64)).collect();
+    let mut cfg = ServeConfig::new(Topology::tsubame4(RANKS));
+    cfg.workers = 0; // drive deterministically with drain_all
+    cfg.fault_policy = FaultPolicy::Recover { max_retries: 2 };
+    let mut srv = Server::new(cfg);
+    for (i, a) in graphs.iter().enumerate() {
+        srv.register_graph(&format!("g{i}"), a.clone());
+    }
+    let plans: Vec<DistSpmm> =
+        graphs.iter().map(|a| PlanSpec::new(Topology::tsubame4(RANKS)).plan(a)).collect();
+
+    let mut kills = 0;
+    for i in 0..REQUESTS {
+        let gi = i % graphs.len();
+        let b = int_b(96, 2 + i % 4);
+        let mut req = ServeRequest::spmm(&format!("g{gi}"), b.clone());
+        if i % KILL_EVERY == 0 {
+            req = req.backend(Backend::Proc(popts(Some(FaultPlan::seeded(i as u64, RANKS)))));
+            kills += 1;
+        }
+        let t = srv.try_submit(req).unwrap_or_else(|e| panic!("request {i} rejected: {e}"));
+        srv.drain_all();
+        let resp = t.wait().unwrap_or_else(|e| panic!("request {i} dropped: {e}"));
+        if i % KILL_EVERY == 0 {
+            let rec = resp.recovery.clone().unwrap_or_else(|| panic!("request {i}: no report"));
+            assert!(rec.recovered && rec.replans >= 1, "request {i}: kill did not recover");
+        }
+        let (want, _) = plans[gi]
+            .execute(&ExecRequest::spmm(&b))
+            .expect("thread-backend SpMM")
+            .into_dense();
+        assert_eq!(resp.into_dense().data, want.data, "request {i}: bits differ under chaos");
+    }
+
+    let stats = srv.shutdown();
+    // Conservation: every submission is fulfilled exactly once.
+    assert_eq!(stats.completed, REQUESTS as u64, "requests dropped or double-fulfilled");
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.rejected, 0);
+    assert_eq!(stats.latency().count, REQUESTS, "one latency sample per request");
+    assert_eq!(stats.recoveries, kills as u64, "each seeded kill is one replan round");
+    assert_eq!(stats.recovery_secs.len(), kills, "one recovery sample per replan");
+    let (lat, total) = stats.recovery_latency();
+    assert_eq!(lat.count, kills);
+    assert!(total > 0.0 && lat.max <= total, "degenerate recovery latency stats");
+}

@@ -18,7 +18,7 @@ use shiro::cover::Solver;
 use shiro::dense::Dense;
 use shiro::exec::ExecOpts;
 use shiro::partition::Partitioner;
-use shiro::runtime::multiproc::{FailureCause, ProcOpts};
+use shiro::runtime::multiproc::{FailureCause, FaultPlan, ProcOpts};
 use shiro::sparse::Csr;
 use shiro::spmm::{Backend, DistSpmm, ExecError, ExecRequest, PlanSpec};
 use shiro::topology::Topology;
@@ -27,7 +27,7 @@ fn popts() -> ProcOpts {
     ProcOpts {
         timeout: Duration::from_secs(60),
         worker_exe: Some(env!("CARGO_BIN_EXE_shiro").into()),
-        crash_rank: None,
+        fault: None,
     }
 }
 
@@ -175,7 +175,11 @@ fn worker_kill_reports_rank_failure() {
     let a = int_matrix(128, 1500, 3);
     let b = Dense::from_fn(128, 4, |i, j| ((i + j) % 5) as f32);
     let d = plan(&a, Strategy::Joint(Solver::Koenig), 4, true);
-    let popts = ProcOpts { timeout: Duration::from_secs(10), crash_rank: Some(1), ..popts() };
+    let popts = ProcOpts {
+        timeout: Duration::from_secs(10),
+        fault: Some(FaultPlan::post_decode(1)),
+        ..popts()
+    };
     let t0 = Instant::now();
     let err = d
         .execute(&ExecRequest::spmm(&b).backend(Backend::Proc(popts)))

@@ -8,7 +8,10 @@ use shiro::cover::{self, Solver, Weights};
 use shiro::dense::Dense;
 use shiro::exec::{self, kernel::NativeKernel};
 use shiro::hierarchy;
-use shiro::partition::{rank_nnz, split_1d, Partitioner, RowPartition};
+use shiro::partition::{
+    assemble_1d, rank_nnz, recover_partition, refine_objective, split_1d, Partitioner,
+    RowPartition,
+};
 use shiro::sparse::{gen, Csr};
 use shiro::spmm::{ExecRequest, PlanSpec};
 use shiro::topology::Topology;
@@ -565,6 +568,62 @@ fn prop_volume_matrix_consistency() {
         assert_eq!(plan.total_volume(n2), 2 * plan.total_volume(n1));
         let m = plan.volume_matrix(n1);
         assert_eq!(m.total(), plan.total_volume(n1));
+    });
+}
+
+#[test]
+fn prop_recovery_replan_is_valid_and_cost_bounded() {
+    // The crash-recovery replan (DESIGN.md §12) is `recover_partition`
+    // followed by the ordinary plan pipeline. Over random matrices,
+    // partitions, and crash ranks: the recovered partition is a
+    // neighbor-absorption of the original, the parent's assemble/split
+    // state rebuild is lossless, the replanned comm plan validates, and
+    // its modeled α-β volume stays within the CostRefined objective
+    // evaluated at the recovered partition for n-1 ranks (objective =
+    // modeled joint cost + nonnegative straggler term).
+    forall("recovery-replan", 20, |g| {
+        let a = random_matrix(g);
+        let ranks = g.usize_in(2, 9);
+        let part = random_partition(g, &a, ranks);
+        let lost = g.usize_in(0, ranks);
+        let rec = recover_partition(&part, lost);
+        assert_eq!(rec.nparts, ranks - 1, "lost {lost} of starts {:?}", part.starts);
+        assert_eq!(rec.n, part.n);
+        assert_eq!(rec.starts[0], 0);
+        assert_eq!(*rec.starts.last().unwrap(), a.nrows);
+        assert!(
+            rec.starts.iter().all(|s| part.starts.contains(s)),
+            "recovery invented a boundary: {:?} from {:?} (lost {lost})",
+            rec.starts,
+            part.starts
+        );
+        // The parent rebuilds worker state by assembling blocks back into
+        // the full matrix; split→assemble must be the identity.
+        let blocks = split_1d(&a, &rec);
+        assert_eq!(assemble_1d(&blocks, &rec), a, "split/assemble roundtrip lost nonzeros");
+        let strategy = match g.usize_in(0, 3) {
+            0 => Strategy::Column,
+            1 => Strategy::Row,
+            _ => Strategy::Joint(Solver::Koenig),
+        };
+        let plan = comm::plan(&blocks, &rec, strategy, None);
+        assert_eq!(
+            comm::validate::validate(&plan, &blocks),
+            Ok(()),
+            "{strategy:?} replan invalid on recovered starts {:?}",
+            rec.starts
+        );
+        let topo = Topology::tsubame4(rec.nparts);
+        let n_dense = 1 + g.usize_in(0, 8);
+        let joint = comm::plan(&blocks, &rec, Strategy::Joint(Solver::Koenig), None);
+        let bound = refine_objective(&a, &rec, &topo, n_dense);
+        let cost = shiro::plan::modeled_cost(&joint, &topo, n_dense);
+        assert!(
+            cost <= bound,
+            "recovered joint plan cost {cost} exceeds CostRefined objective {bound} \
+             at starts {:?}",
+            rec.starts
+        );
     });
 }
 

@@ -233,7 +233,7 @@ fn proc_backend_requests_match_thread_through_the_server() {
     let popts = ProcOpts {
         timeout: Duration::from_secs(60),
         worker_exe: Some(env!("CARGO_BIN_EXE_shiro").into()),
-        crash_rank: None,
+        fault: None,
     };
     let tt = srv.try_submit(ServeRequest::spmm("g", b.clone())).unwrap();
     let tp = srv
