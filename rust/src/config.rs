@@ -28,7 +28,9 @@ pub struct RunConfig {
     pub overlap: bool,
     /// Executor backend: "thread" (in-process ranks, the default and the
     /// differential oracle) or "proc" (one OS process per rank over the
-    /// socket control plane, [`crate::runtime::multiproc`]).
+    /// socket control plane, [`crate::runtime::multiproc`]). Proc rank
+    /// processes are pooled: spawned and handshaken once, then reused
+    /// across requests ([`crate::runtime::multiproc::WorkerPool`]).
     pub backend: String,
     /// Proc-backend crash handling (see
     /// [`crate::runtime::multiproc::FaultPolicy`]): "fail" surfaces a

@@ -245,18 +245,16 @@ impl SpmmSession {
     /// entry point as [`DistSpmm::execute`], with the same result
     /// semantics (`dense` for SpMM/fused, `sparse` for SDDMM).
     ///
-    /// Two session-specific rules: the session's *own* options win over
-    /// `req.opts` (frozen programs depend on them — change via
-    /// [`SpmmSession::set_opts`]), and only [`Backend::Thread`] is
-    /// served (the proc backend re-derives per-rank state in each worker
-    /// process, so there is no session state to reuse — route proc
-    /// requests through [`DistSpmm::execute`] instead).
+    /// Two session-specific rules: on the thread backend the session's
+    /// *own* options win over `req.opts` (frozen programs depend on them
+    /// — change via [`SpmmSession::set_opts`]), and [`Backend::Proc`]
+    /// requests delegate to [`DistSpmm::execute`] over the frozen plan —
+    /// per-rank state lives in the worker processes (warm across requests
+    /// when [`crate::runtime::multiproc::ProcOpts::pool`] is set), so the
+    /// request's own options and fault policy apply.
     pub fn execute(&mut self, req: &ExecRequest) -> Result<ExecResult, ExecError> {
         if matches!(req.backend, Backend::Proc(_)) {
-            return Err(ExecError::Unsupported(
-                "sessions run on the thread backend; use DistSpmm::execute for --backend proc"
-                    .into(),
-            ));
+            return self.dist.execute(req);
         }
         match req.op {
             KernelOp::Spmm => {
@@ -288,10 +286,17 @@ impl SpmmSession {
         out: &mut Dense,
     ) -> Result<ExecStats, ExecError> {
         if matches!(req.backend, Backend::Proc(_)) {
-            return Err(ExecError::Unsupported(
-                "sessions run on the thread backend; use DistSpmm::execute for --backend proc"
-                    .into(),
-            ));
+            if req.op == KernelOp::Sddmm {
+                return Err(ExecError::Unsupported(
+                    "SDDMM produces a sparse matrix; use SpmmSession::execute".into(),
+                ));
+            }
+            // Delegate to the one-shot proc path over the frozen plan; the
+            // parent assembles a fresh C, which replaces the caller's
+            // buffer wholesale.
+            let res = self.dist.execute(req)?;
+            *out = res.dense.expect("dense-output op");
+            return Ok(res.stats);
         }
         match req.op {
             KernelOp::Spmm => Ok(self.run_spmm_into(req.b, req.kernel, out)),

@@ -45,11 +45,16 @@ use std::time::{Duration, Instant};
 /// layout change: parent and workers are always the same binary, so a
 /// mismatch means a stale `--worker-exe` override, not rolling upgrade.
 pub(crate) const WIRE_MAGIC: &[u8; 8] = b"SHIROWIR";
-/// v3: JOB/DATA/DONE/ERROR frames are epoch-tagged and ABORT lets the
-/// control plane cancel an in-flight step on surviving workers — the
-/// crash-recovery protocol (DESIGN.md §12). v2 added the op-gated SDDMM
-/// edge-value DONE payload.
-pub(crate) const WIRE_VERSION: u32 = 3;
+/// v4: the multi-*job* pool protocol (DESIGN.md §10/§12). Every JOB frame
+/// carries a fixed `generation | epoch | mode | crash | fingerprint`
+/// header so one live worker serves many requests: `mode` distinguishes a
+/// full job blob from a delta (operands only, against the plan body the
+/// worker cached under its fingerprint), and deterministic fault
+/// injection rides the per-JOB crash byte instead of a spawn-time env
+/// var. v3 epoch-tagged JOB/DATA/DONE/ERROR and added ABORT — the
+/// crash-recovery protocol. v2 added the op-gated SDDMM edge-value DONE
+/// payload.
+pub(crate) const WIRE_VERSION: u32 = 4;
 
 /// Hard ceiling on one frame (1 GiB): no legitimate payload approaches
 /// this; a larger claim means a corrupt or hostile length field.
@@ -64,20 +69,18 @@ pub(crate) const BEAT_MILLIS: u64 = 100;
 /// [`crate::runtime::multiproc::maybe_run_worker`] keys on.
 pub(crate) const ENV_PORT: &str = "SHIRO_WORKER_PORT";
 pub(crate) const ENV_RANK: &str = "SHIRO_WORKER_RANK";
-/// Fault-injection hook ([`crate::runtime::multiproc::FaultPlan`]): the
-/// value names the [`CrashPhase`] at which the worker aborts, standing in
-/// for a segfaulted or OOM-killed rank at that point in the step.
-pub(crate) const ENV_CRASH: &str = "SHIRO_WORKER_CRASH";
 
 /// Frame kinds. Namespaced so they cannot be confused with the fold-key
 /// kinds in [`super::pipeline`].
 pub(crate) mod kind {
     /// Worker → parent, first frame: `version u32 | rank u64`.
     pub const HELLO: u8 = 1;
-    /// Parent → worker: `epoch u64 | serialized job blob`. Re-sent with a
-    /// fresh epoch after every recovery replan; the job's own `rank`
-    /// field (not the worker's spawn-time identity) is authoritative for
-    /// that epoch.
+    /// Parent → worker: a [`super::JobHeader`] (`generation u64 | epoch
+    /// u64 | mode u8 | crash u8 | fingerprint u64`) followed by a full
+    /// job blob or an operand-only delta. Re-sent with a fresh epoch
+    /// after every recovery replan and with a fresh generation for every
+    /// pooled request; the job's own `rank` field (not the worker's
+    /// spawn-time identity) is authoritative for that epoch.
     pub const JOB: u8 = 2;
     /// Either direction: `dst u64 | epoch u64 | encoded Msg` — routed by
     /// the parent to `dst`'s stream for the *current* epoch; stale-epoch
@@ -101,12 +104,28 @@ pub(crate) mod kind {
 
 // ------------------------------------------------------------- framing ----
 
-pub(crate) fn write_frame<W: Write>(w: &mut W, kind: u8, payload: &[u8]) -> Result<()> {
-    let len = payload.len() + 1;
-    if len > MAX_FRAME {
-        bail!("frame payload of {} bytes exceeds MAX_FRAME", payload.len());
+/// Length prefix for a frame with `payload_len` payload bytes, rejecting
+/// anything the `u32` word could misrepresent. `MAX_FRAME < u32::MAX`, so
+/// a payload that passes here can never wrap the prefix and desync the
+/// stream; one that doesn't gets a structured error instead of a silent
+/// truncation. Factored out of [`write_frame`] so the boundary is unit
+/// testable without allocating gigabyte payloads.
+pub(crate) fn frame_len(payload_len: usize) -> Result<u32> {
+    // len counts the kind byte too: len = payload_len + 1 > MAX_FRAME,
+    // phrased without the `+ 1` so `usize::MAX` cannot overflow.
+    if payload_len >= MAX_FRAME {
+        bail!(
+            "frame payload of {payload_len} bytes exceeds MAX_FRAME \
+             ({MAX_FRAME} bytes incl. kind byte): refusing to emit a frame \
+             the length prefix cannot represent"
+        );
     }
-    w.write_all(&(len as u32).to_le_bytes())?;
+    Ok((payload_len + 1) as u32)
+}
+
+pub(crate) fn write_frame<W: Write>(w: &mut W, kind: u8, payload: &[u8]) -> Result<()> {
+    let len = frame_len(payload.len())?;
+    w.write_all(&len.to_le_bytes())?;
     w.write_all(&[kind])?;
     w.write_all(payload)?;
     w.flush()?;
@@ -194,13 +213,96 @@ pub(crate) fn decode_data_header(payload: &[u8]) -> Result<(usize, u64)> {
     Ok((dst, epoch))
 }
 
-/// Payload of ABORT frames and the prefix of JOB frames: one `epoch u64`.
+/// Payload of ABORT frames: one `epoch u64`.
 pub(crate) fn epoch_payload(epoch: u64) -> Vec<u8> {
     epoch.to_le_bytes().to_vec()
 }
 
 pub(crate) fn decode_epoch(buf: &[u8]) -> Result<u64> {
     r_u64(&mut &buf[..])
+}
+
+// -------------------------------------------------------- job header ----
+
+/// JOB payload mode: the body is a complete job blob ([`encode_job`]).
+pub(crate) const JOB_MODE_FULL: u8 = 1;
+/// JOB payload mode: the body is an operand-only delta
+/// ([`encode_job_delta`]) against the plan body the worker cached under
+/// the header's fingerprint.
+pub(crate) const JOB_MODE_DELTA: u8 = 2;
+/// Bytes of the fixed v4 JOB header:
+/// `generation u64 | epoch u64 | mode u8 | crash u8 | fingerprint u64`.
+pub(crate) const JOB_HEADER: usize = 26;
+
+/// Fixed header of every v4 JOB payload.
+pub(crate) struct JobHeader {
+    /// Pool generation: bumped once per request a
+    /// [`crate::runtime::multiproc::WorkerPool`] serves, monotone over a
+    /// connection's lifetime. A regression means a corrupt or replayed
+    /// frame.
+    pub generation: u64,
+    /// Exchange epoch. Bumped by recovery replans *within* a request and
+    /// kept monotone across pooled requests, so stale DATA from any
+    /// earlier step can never alias a live one.
+    pub epoch: u64,
+    /// [`JOB_MODE_FULL`] or [`JOB_MODE_DELTA`].
+    pub mode: u8,
+    /// Deterministic fault injection
+    /// ([`crate::runtime::multiproc::FaultPlan`]): the phase at which the
+    /// receiving worker abort()s. Rides the JOB frame rather than the
+    /// spawn environment so a pooled worker can be crash-armed per
+    /// request — and disarmed on the next one.
+    pub crash: Option<CrashPhase>,
+    /// [`job_fingerprint`] of the job's plan body. A delta body is valid
+    /// only against a cached full body with this fingerprint.
+    pub fp: u64,
+}
+
+fn crash_byte(crash: Option<CrashPhase>) -> u8 {
+    match crash {
+        None => 0,
+        Some(p) => {
+            let i = CrashPhase::ALL.iter().position(|&q| q == p).expect("ALL is total");
+            i as u8 + 1
+        }
+    }
+}
+
+fn crash_from_byte(b: u8) -> Result<Option<CrashPhase>> {
+    if b == 0 {
+        return Ok(None);
+    }
+    CrashPhase::ALL
+        .get(b as usize - 1)
+        .copied()
+        .map(Some)
+        .ok_or_else(|| anyhow!("unknown crash-phase byte {b}"))
+}
+
+pub(crate) fn encode_job_header(h: &JobHeader) -> Vec<u8> {
+    let mut out = Vec::with_capacity(JOB_HEADER);
+    w_u64(&mut out, h.generation).expect("vec write");
+    w_u64(&mut out, h.epoch).expect("vec write");
+    w_u8(&mut out, h.mode).expect("vec write");
+    w_u8(&mut out, crash_byte(h.crash)).expect("vec write");
+    w_u64(&mut out, h.fp).expect("vec write");
+    out
+}
+
+pub(crate) fn decode_job_header(buf: &[u8]) -> Result<JobHeader> {
+    if buf.len() < JOB_HEADER {
+        bail!("JOB frame too short for v4 header ({} < {JOB_HEADER} bytes)", buf.len());
+    }
+    let r = &mut &buf[..];
+    let generation = r_u64(r)?;
+    let epoch = r_u64(r)?;
+    let mode = r_u8(r)?;
+    if mode != JOB_MODE_FULL && mode != JOB_MODE_DELTA {
+        bail!("unknown JOB mode {mode}");
+    }
+    let crash = crash_from_byte(r_u8(r)?)?;
+    let fp = r_u64(r)?;
+    Ok(JobHeader { generation, epoch, mode, crash, fp })
 }
 
 // ------------------------------------------------------ message codec ----
@@ -324,6 +426,19 @@ fn r_usizes<R: Read>(r: &mut R, max: usize) -> Result<Vec<usize>> {
     Ok(r_u64s(r, max)?.into_iter().map(|x| x as usize).collect())
 }
 
+/// Preallocation guard for count-prefixed containers: the element-count
+/// bound (`max = buf.len()/4 + 1`) caps how many items a frame can claim,
+/// but `Vec::with_capacity(n)` of a multi-word element type can still
+/// demand many times the frame's size up front. Cap the *reserved*
+/// capacity by the bytes actually remaining in the frame — a corrupt
+/// count then costs at most amortized regrowth before the decode errors
+/// out, never an outsized allocation. (Honest inputs whose wire encoding
+/// is smaller than the in-memory element just regrow a few times.)
+fn bounded_vec<T>(n: usize, remaining_bytes: usize) -> Vec<T> {
+    let elem = std::mem::size_of::<T>().max(1);
+    Vec::with_capacity(n.min(remaining_bytes / elem + 1))
+}
+
 fn encode_posts(out: &mut Vec<u8>, posts: &[BPost]) -> Result<()> {
     w_u64(out, posts.len() as u64)?;
     for p in posts {
@@ -334,12 +449,12 @@ fn encode_posts(out: &mut Vec<u8>, posts: &[BPost]) -> Result<()> {
     Ok(())
 }
 
-fn decode_posts<R: Read>(r: &mut R, max: usize) -> Result<Vec<BPost>> {
+fn decode_posts(r: &mut &[u8], max: usize) -> Result<Vec<BPost>> {
     let n = r_u64(r)? as usize;
     if n > max {
         bail!("corrupt program: {n} posts exceed available bytes");
     }
-    let mut posts = Vec::with_capacity(n);
+    let mut posts = bounded_vec::<BPost>(n, r.len());
     for _ in 0..n {
         let dst = r_u64(r)? as usize;
         let phase = phase_name(r_u8(r)?)?;
@@ -414,7 +529,7 @@ fn encode_program(out: &mut Vec<u8>, p: &Program) -> Result<()> {
     Ok(())
 }
 
-fn decode_program<R: Read>(r: &mut R, max: usize) -> Result<Program> {
+fn decode_program(r: &mut &[u8], max: usize) -> Result<Program> {
     let op = op_from_tag(r_u8(r)?)?;
     let b_posts = decode_posts(r, max)?;
     let x_posts = decode_posts(r, max)?;
@@ -422,7 +537,7 @@ fn decode_program<R: Read>(r: &mut R, max: usize) -> Result<Program> {
     if n_items > max {
         bail!("corrupt program: {n_items} items exceed available bytes");
     }
-    let mut items = Vec::with_capacity(n_items);
+    let mut items = bounded_vec::<Item>(n_items, r.len());
     for _ in 0..n_items {
         items.push(match r_u8(r)? {
             0 => Item::ProduceDirectC { dst: r_u64(r)? as usize },
@@ -513,7 +628,7 @@ fn encode_plan(out: &mut Vec<u8>, plan: &CommPlan) -> Result<()> {
     Ok(())
 }
 
-fn decode_plan<R: Read>(r: &mut R, max: usize) -> Result<CommPlan> {
+fn decode_plan(r: &mut &[u8], max: usize) -> Result<CommPlan> {
     let nranks = r_u64(r)? as usize;
     if nranks > max {
         bail!("corrupt plan: nranks {nranks} exceeds available bytes");
@@ -523,9 +638,9 @@ fn decode_plan<R: Read>(r: &mut R, max: usize) -> Result<CommPlan> {
     if block_rows.len() != nranks {
         bail!("corrupt plan: {} block heights for {nranks} ranks", block_rows.len());
     }
-    let mut pairs = Vec::with_capacity(nranks);
+    let mut pairs = bounded_vec::<Vec<PairPlan>>(nranks, r.len());
     for p in 0..nranks {
-        let mut row = Vec::with_capacity(nranks);
+        let mut row = bounded_vec::<PairPlan>(nranks, r.len());
         for q in 0..nranks {
             if p == q {
                 row.push(PairPlan::default());
@@ -550,12 +665,12 @@ fn encode_rowsets(out: &mut Vec<u8>, sets: &[(usize, Vec<u32>)]) -> Result<()> {
     Ok(())
 }
 
-fn decode_rowsets<R: Read>(r: &mut R, max: usize) -> Result<Vec<(usize, Vec<u32>)>> {
+fn decode_rowsets(r: &mut &[u8], max: usize) -> Result<Vec<(usize, Vec<u32>)>> {
     let n = r_u64(r)? as usize;
     if n > max {
         bail!("corrupt schedule: {n} row sets exceed available bytes");
     }
-    let mut sets = Vec::with_capacity(n);
+    let mut sets = bounded_vec::<(usize, Vec<u32>)>(n, r.len());
     for _ in 0..n {
         let rank = r_u64(r)? as usize;
         sets.push((rank, r_u32s(r, max)?));
@@ -573,12 +688,12 @@ fn encode_directs(out: &mut Vec<u8>, ds: &[(usize, usize, Vec<u32>)]) -> Result<
     Ok(())
 }
 
-fn decode_directs<R: Read>(r: &mut R, max: usize) -> Result<Vec<(usize, usize, Vec<u32>)>> {
+fn decode_directs(r: &mut &[u8], max: usize) -> Result<Vec<(usize, usize, Vec<u32>)>> {
     let n = r_u64(r)? as usize;
     if n > max {
         bail!("corrupt schedule: {n} direct transfers exceed available bytes");
     }
-    let mut ds = Vec::with_capacity(n);
+    let mut ds = bounded_vec::<(usize, usize, Vec<u32>)>(n, r.len());
     for _ in 0..n {
         let a = r_u64(r)? as usize;
         let b = r_u64(r)? as usize;
@@ -610,13 +725,13 @@ fn encode_sched(out: &mut Vec<u8>, s: &HierSchedule) -> Result<()> {
     Ok(())
 }
 
-fn decode_sched<R: Read>(r: &mut R, max: usize) -> Result<HierSchedule> {
+fn decode_sched(r: &mut &[u8], max: usize) -> Result<HierSchedule> {
     let nranks = r_u64(r)? as usize;
     let nb = r_u64(r)? as usize;
     if nb > max {
         bail!("corrupt schedule: {nb} B flows exceed available bytes");
     }
-    let mut b_flows = Vec::with_capacity(nb);
+    let mut b_flows = bounded_vec::<BFlow>(nb, r.len());
     for _ in 0..nb {
         b_flows.push(BFlow {
             src: r_u64(r)? as usize,
@@ -630,7 +745,7 @@ fn decode_sched<R: Read>(r: &mut R, max: usize) -> Result<HierSchedule> {
     if nc > max {
         bail!("corrupt schedule: {nc} C flows exceed available bytes");
     }
-    let mut c_flows = Vec::with_capacity(nc);
+    let mut c_flows = bounded_vec::<CFlow>(nc, r.len());
     for _ in 0..nc {
         c_flows.push(CFlow {
             dst: r_u64(r)? as usize,
@@ -647,18 +762,27 @@ fn decode_sched<R: Read>(r: &mut R, max: usize) -> Result<HierSchedule> {
 
 // ----------------------------------------------------------- job codec ----
 
-/// One worker's fully decoded assignment.
-struct Job {
-    rank: usize,
+/// The request-invariant part of a worker's assignment: everything a
+/// pooled worker caches between requests so that a repeat request against
+/// the same planned `DistSpmm` ships only a [`JOB_MODE_DELTA`] payload.
+/// Shared via `Arc` between the worker's cache slot and the in-flight
+/// job.
+struct JobBody {
     nranks: usize,
-    op: KernelOp,
-    opts: ExecOpts,
     part: RowPartition,
     topo: Topology,
     plan: CommPlan,
     sched: Option<HierSchedule>,
-    prog: Program,
     blocks: LocalBlocks,
+}
+
+/// One worker's fully decoded assignment.
+struct Job {
+    rank: usize,
+    op: KernelOp,
+    opts: ExecOpts,
+    body: Arc<JobBody>,
+    prog: Program,
     b_local: Dense,
     x_local: Option<Dense>,
 }
@@ -782,7 +906,7 @@ fn decode_job(buf: &[u8]) -> Result<Job> {
     if n_off > max {
         bail!("corrupt job: {n_off} off-diagonal blocks exceed available bytes");
     }
-    let mut off_diag = Vec::with_capacity(n_off);
+    let mut off_diag = bounded_vec::<crate::sparse::Csr>(n_off, r.len());
     for _ in 0..n_off {
         off_diag.push(r_csr(r, max)?);
     }
@@ -796,7 +920,159 @@ fn decode_job(buf: &[u8]) -> Result<Job> {
     if rank >= nranks || part.nparts != nranks || plan.nranks != nranks || blocks_rank != rank {
         bail!("inconsistent job: rank {rank}, nranks {nranks}, part {}", part.nparts);
     }
-    Ok(Job { rank, nranks, op, opts, part, topo, plan, sched, prog, blocks, b_local, x_local })
+    Ok(Job {
+        rank,
+        op,
+        opts,
+        body: Arc::new(JobBody { nranks, part, topo, plan, sched, blocks }),
+        prog,
+        b_local,
+        x_local,
+    })
+}
+
+// ---------------------------------------------- delta JOBs (wire v4) ----
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Canonical encoding of the request-invariant job core — hashed, never
+/// shipped. Must cover everything a [`JobBody`] caches (the A blocks
+/// included: two graphs can share partition starts), and nothing the
+/// delta re-ships.
+fn encode_job_core(
+    rank: usize,
+    part: &RowPartition,
+    topo: &Topology,
+    plan: &CommPlan,
+    sched: Option<&HierSchedule>,
+    blocks: &LocalBlocks,
+) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    w_u64(&mut out, rank as u64)?;
+    w_usizes(&mut out, &part.starts)?;
+    encode_topo(&mut out, topo)?;
+    encode_plan(&mut out, plan)?;
+    match sched {
+        None => w_u8(&mut out, 0)?,
+        Some(s) => {
+            w_u8(&mut out, 1)?;
+            encode_sched(&mut out, s)?;
+        }
+    }
+    w_u64(&mut out, blocks.rank as u64)?;
+    w_csr(&mut out, &blocks.diag)?;
+    w_u64(&mut out, blocks.off_diag.len() as u64)?;
+    for m in &blocks.off_diag {
+        w_csr(&mut out, m)?;
+    }
+    Ok(out)
+}
+
+/// Fingerprint of rank `rank`'s plan body: what the pool compares to
+/// decide full-ship vs delta, and what a worker validates a delta
+/// against. Includes the rank, so one fingerprint names exactly one
+/// worker's body.
+pub(crate) fn job_fingerprint(
+    rank: usize,
+    part: &RowPartition,
+    topo: &Topology,
+    plan: &CommPlan,
+    sched: Option<&HierSchedule>,
+    blocks: &LocalBlocks,
+) -> u64 {
+    fnv1a(&encode_job_core(rank, part, topo, plan, sched, blocks).expect("vec write"))
+}
+
+/// Serialize the per-request part of rank `rank`'s job: kernel op,
+/// scheduling options, operands. Everything else is the cached body the
+/// header's fingerprint names; the worker re-derives the frozen program
+/// with the same pure `build_program` call the parent's full-ship path
+/// makes, so a delta-shipped job runs a bitwise-identical step list.
+pub(crate) fn encode_job_delta(
+    rank: usize,
+    op: KernelOp,
+    opts: &ExecOpts,
+    b_local: &Dense,
+    x_local: Option<&Dense>,
+) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    out.extend_from_slice(WIRE_MAGIC);
+    w_u32(&mut out, WIRE_VERSION)?;
+    w_u64(&mut out, rank as u64)?;
+    w_u8(&mut out, op_tag(op))?;
+    w_u8(&mut out, u8::from(opts.overlap))?;
+    w_u64(&mut out, opts.tile_rows as u64)?;
+    w_u64(&mut out, opts.workers as u64)?;
+    w_dense(&mut out, b_local)?;
+    match x_local {
+        None => w_u8(&mut out, 0)?,
+        Some(x) => {
+            w_u8(&mut out, 1)?;
+            w_dense(&mut out, x)?;
+        }
+    }
+    Ok(out)
+}
+
+fn decode_job_delta(buf: &[u8]) -> Result<(usize, KernelOp, ExecOpts, Dense, Option<Dense>)> {
+    let max = buf.len() / 4 + 1;
+    let r = &mut &buf[..];
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != WIRE_MAGIC {
+        bail!("bad job magic");
+    }
+    let version = r_u32(r)?;
+    if version != WIRE_VERSION {
+        bail!("wire version {version} != {WIRE_VERSION} (mismatched worker binary?)");
+    }
+    let rank = r_u64(r)? as usize;
+    let op = op_from_tag(r_u8(r)?)?;
+    let opts = ExecOpts {
+        overlap: r_u8(r)? != 0,
+        tile_rows: r_u64(r)? as usize,
+        workers: r_u64(r)? as usize,
+    };
+    let b_local = r_dense(r, max)?;
+    let x_local = match r_u8(r)? {
+        0 => None,
+        1 => Some(r_dense(r, max)?),
+        t => bail!("bad X option tag {t}"),
+    };
+    Ok((rank, op, opts, b_local, x_local))
+}
+
+/// Materialize a delta JOB against the cached body. The X fetch schedule
+/// and the frozen program are re-derived exactly as [`encode_job`] does
+/// for a full ship — both are pure functions of the body and the delta's
+/// (op, opts) — so parent-shipped and worker-rebuilt programs are
+/// identical.
+fn apply_job_delta(body: &Arc<JobBody>, buf: &[u8]) -> Result<Job> {
+    let (rank, op, opts, b_local, x_local) = decode_job_delta(buf)?;
+    if rank != body.blocks.rank {
+        bail!("delta JOB for rank {rank} against a cached body for rank {}", body.blocks.rank);
+    }
+    let xsched = (op != KernelOp::Spmm)
+        .then(|| body.sched.as_ref().map(hierarchy::sddmm_fetch))
+        .flatten();
+    let prog = super::build_program(
+        rank,
+        &body.part,
+        &body.plan,
+        body.sched.as_ref(),
+        xsched.as_ref(),
+        &opts,
+        true,
+        op,
+    );
+    Ok(Job { rank, op, opts, body: Arc::clone(body), prog, b_local, x_local })
 }
 
 // --------------------------------------------------- control messages ----
@@ -950,11 +1226,18 @@ pub(crate) fn worker_main(port: u16, rank: usize) -> ! {
 }
 
 /// The worker's main loop owns the socket's read half and multiplexes
-/// three frame kinds across epochs:
+/// three frame kinds across jobs (and, pooled, across whole requests):
 ///
-/// - JOB(epoch): spawn a job thread running the shared `rank_main` with a
-///   fresh inbox; the job's own `rank` field is authoritative (after a
-///   recovery replan the parent renumbers survivors).
+/// - JOB: the v4 header names a pool generation, an epoch, a full or
+///   delta body, the plan-body fingerprint, and an optional crash phase.
+///   A full body replaces the worker's cached [`JobBody`]; a delta is
+///   applied against the cache iff the fingerprints match (else the
+///   worker answers with an ERROR and stays alive — the parent falls
+///   back to a full ship). Each accepted JOB spawns a job thread running
+///   the shared `rank_main` with a fresh inbox; the job's own `rank`
+///   field is authoritative (after a recovery replan the parent
+///   renumbers survivors, and a re-admitted pool slot may serve a
+///   different rank than it was spawned with).
 /// - DATA: forwarded into the inbox iff its epoch matches the in-flight
 ///   job; stale frames from an aborted step are dropped.
 /// - ABORT(epoch): drop the matching job's inbox sender — a `recv`
@@ -971,11 +1254,6 @@ fn worker_run(port: u16, rank: usize) -> Result<()> {
     stream.set_nodelay(true).ok();
     let tx = Arc::new(SocketTx::new(stream.try_clone().context("clone control socket")?));
     tx.frame(kind::HELLO, &encode_hello(rank)?)?;
-
-    // Fault injection (`ProcOpts::fault`): the env value names the phase
-    // at which this worker abort()s, standing in for a segfaulted or
-    // OOM-killed rank at that point in the step.
-    let crash = std::env::var(ENV_CRASH).ok().and_then(|v| CrashPhase::by_name(&v));
 
     // Liveness is a property of the worker process, not of any one
     // epoch's job: one heartbeat thread spans the whole lifetime.
@@ -997,6 +1275,11 @@ fn worker_run(port: u16, rank: usize) -> Result<()> {
     let mut reader = BufReader::new(stream);
     // The in-flight job: its epoch and the sender feeding its inbox.
     let mut current: Option<(u64, mpsc::Sender<Msg>)> = None;
+    // Pool protocol state: the highest generation seen, and the cached
+    // request-invariant body (with its fingerprint) a delta JOB can be
+    // applied to.
+    let mut generation: u64 = 0;
+    let mut cached: Option<(u64, Arc<JobBody>)> = None;
     loop {
         let (k, payload) = match read_frame(&mut reader) {
             Ok(f) => f,
@@ -1004,18 +1287,45 @@ fn worker_run(port: u16, rank: usize) -> Result<()> {
         };
         match k {
             kind::JOB => {
-                if payload.len() < 8 {
-                    bail!("JOB frame too short for epoch prefix");
+                let h = decode_job_header(&payload)?;
+                if h.generation < generation {
+                    // Cannot happen over one ordered stream; treat as
+                    // corruption, report, and stay alive.
+                    let msg = format!(
+                        "JOB generation {} regressed below {generation}",
+                        h.generation
+                    );
+                    let _ = tx.frame(kind::ERROR, &encode_error(h.epoch, rank, &msg)?);
+                    continue;
                 }
-                let epoch = decode_epoch(&payload)?;
-                let job = match decode_job(&payload[8..]) {
+                generation = h.generation;
+                let body_buf = &payload[JOB_HEADER..];
+                let decoded = if h.mode == JOB_MODE_FULL {
+                    decode_job(body_buf).map(|job| {
+                        cached = Some((h.fp, Arc::clone(&job.body)));
+                        job
+                    })
+                } else {
+                    match &cached {
+                        Some((fp, body)) if *fp == h.fp => apply_job_delta(body, body_buf),
+                        _ => Err(anyhow!(
+                            "delta JOB against unknown plan fingerprint {:#018x}",
+                            h.fp
+                        )),
+                    }
+                };
+                let job = match decoded {
                     Ok(j) => j,
                     Err(e) => {
                         let msg = format!("bad job: {e:#}");
-                        let _ = tx.frame(kind::ERROR, &encode_error(epoch, rank, &msg)?);
+                        let _ = tx.frame(kind::ERROR, &encode_error(h.epoch, rank, &msg)?);
                         continue;
                     }
                 };
+                // Per-JOB fault injection: arm (or disarm) the crash for
+                // exactly this job — a pooled worker must not stay armed
+                // into the next request.
+                let crash = h.crash;
                 if crash == Some(CrashPhase::PostDecode) {
                     std::process::abort();
                 }
@@ -1024,9 +1334,9 @@ fn worker_run(port: u16, rank: usize) -> Result<()> {
                 // it converge to the same aborted state either way.
                 drop(current.take());
                 let (msg_tx, msg_rx) = mpsc::channel::<Msg>();
-                current = Some((epoch, msg_tx));
+                current = Some((h.epoch, msg_tx));
                 let jtx = Arc::clone(&tx);
-                std::thread::spawn(move || run_job(epoch, job, jtx, msg_rx, crash));
+                std::thread::spawn(move || run_job(h.epoch, job, jtx, msg_rx, crash));
             }
             kind::DATA => {
                 if payload.len() < DATA_HEADER {
@@ -1082,22 +1392,22 @@ fn run_job(
     crash: Option<CrashPhase>,
 ) {
     let rank = job.rank;
-    let nranks = job.nranks;
+    let nranks = job.body.nranks;
     let etx = EpochTx::new(Arc::clone(&tx), epoch, crash == Some(CrashPhase::MidExchange));
     let result = catch_unwind(AssertUnwindSafe(|| {
         // Re-derive the X fetch schedule exactly as `run_kernel_with`
         // does — it is a pure function of the shipped schedule.
         let xsched = (job.op != KernelOp::Spmm)
-            .then(|| job.sched.as_ref().map(hierarchy::sddmm_fetch))
+            .then(|| job.body.sched.as_ref().map(hierarchy::sddmm_fetch))
             .flatten();
         let kernel = NativeKernel;
         let mut ctx = Ctx {
             rank,
-            part: &job.part,
-            plan: &job.plan,
-            sched: job.sched.as_ref(),
+            part: &job.body.part,
+            plan: &job.body.plan,
+            sched: job.body.sched.as_ref(),
             xsched: xsched.as_ref(),
-            topo: &job.topo,
+            topo: &job.body.topo,
             kernel: &kernel,
             outbox: Outbox::Socket(&etx),
             inbox,
@@ -1112,11 +1422,11 @@ fn run_job(
             pool: PoolRef::Own(BufferPool::new()),
         };
         let c_width = if job.op == KernelOp::Sddmm { 0 } else { job.b_local.ncols };
-        let mut c_local = Dense::zeros(job.part.len(rank), c_width);
+        let mut c_local = Dense::zeros(job.body.part.len(rank), c_width);
         let mut vals = SddmmVals::default();
         rank_main(
             &mut ctx,
-            &job.blocks,
+            &job.body.blocks,
             job.x_local.as_ref(),
             &job.b_local,
             &mut c_local,
@@ -1343,15 +1653,15 @@ mod tests {
                     let job = decode_job(&bytes).unwrap();
                     let again = encode_job_parts(
                         job.rank,
-                        job.nranks,
+                        job.body.nranks,
                         job.op,
                         &job.opts,
-                        &job.part,
-                        &job.topo,
-                        &job.plan,
-                        job.sched.as_ref(),
+                        &job.body.part,
+                        &job.body.topo,
+                        &job.body.plan,
+                        job.body.sched.as_ref(),
                         &job.prog,
-                        &job.blocks,
+                        &job.body.blocks,
                         &job.b_local,
                         job.x_local.as_ref(),
                     )
@@ -1360,6 +1670,185 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Satellite of the pool protocol: the frame-length prefix is checked
+    /// structurally at the boundary, without allocating gigabyte buffers.
+    #[test]
+    fn frame_length_boundary() {
+        // Largest representable payload: len = payload + kind byte hits
+        // MAX_FRAME exactly.
+        assert_eq!(frame_len(0).unwrap(), 1);
+        assert_eq!(frame_len(MAX_FRAME - 1).unwrap(), MAX_FRAME as u32);
+        // One byte over (and the usize extremes) are structured errors,
+        // not wrapped prefixes.
+        for n in [MAX_FRAME, MAX_FRAME + 1, u32::MAX as usize, usize::MAX] {
+            let err = frame_len(n).unwrap_err().to_string();
+            assert!(err.contains("exceeds MAX_FRAME"), "{err}");
+        }
+    }
+
+    /// A corrupt count can pass the element-count bound yet demand a
+    /// multi-word allocation far beyond the frame; the reserved capacity
+    /// is clamped by the bytes that are actually left.
+    #[test]
+    fn decode_preallocation_is_clamped() {
+        let v = bounded_vec::<u64>(1 << 30, 64);
+        assert!(v.capacity() <= 9, "capacity {} not clamped", v.capacity());
+        let v = bounded_vec::<[u8; 64]>(1000, 128);
+        assert!(v.capacity() <= 3, "capacity {} not clamped", v.capacity());
+        // Zero-remaining still admits a probe element, never panics.
+        assert!(bounded_vec::<u64>(5, 0).capacity() <= 1);
+
+        // End-to-end: a posts buffer claiming a huge-but-in-bound count
+        // over a tiny body fails cleanly in decode.
+        let mut buf = Vec::new();
+        w_u64(&mut buf, 40).unwrap(); // claims 40 posts...
+        w_u64(&mut buf, 0).unwrap(); // ...but bytes for ~one
+        w_u8(&mut buf, 0).unwrap();
+        let max = buf.len() / 4 + 1;
+        assert!(decode_posts(&mut &buf[..], max).is_err());
+    }
+
+    #[test]
+    fn job_header_roundtrip() {
+        let mut crashes = vec![None];
+        crashes.extend(CrashPhase::ALL.map(Some));
+        for (i, crash) in crashes.into_iter().enumerate() {
+            let h = JobHeader {
+                generation: 7 + i as u64,
+                epoch: 40 + i as u64,
+                mode: if i % 2 == 0 { JOB_MODE_FULL } else { JOB_MODE_DELTA },
+                crash,
+                fp: 0xdead_beef_0bad_f00d ^ i as u64,
+            };
+            let buf = encode_job_header(&h);
+            assert_eq!(buf.len(), JOB_HEADER);
+            let back = decode_job_header(&buf).unwrap();
+            assert_eq!(back.generation, h.generation);
+            assert_eq!(back.epoch, h.epoch);
+            assert_eq!(back.mode, h.mode);
+            assert_eq!(back.crash, h.crash);
+            assert_eq!(back.fp, h.fp);
+        }
+        // Truncated header / unknown mode / unknown crash byte all fail
+        // structurally.
+        let good = encode_job_header(&JobHeader {
+            generation: 1,
+            epoch: 2,
+            mode: JOB_MODE_FULL,
+            crash: None,
+            fp: 3,
+        });
+        assert!(decode_job_header(&good[..JOB_HEADER - 1]).is_err());
+        let mut bad = good.clone();
+        bad[16] = 9; // mode byte
+        assert!(decode_job_header(&bad).is_err());
+        let mut bad = good.clone();
+        bad[17] = CrashPhase::ALL.len() as u8 + 1; // crash byte
+        assert!(decode_job_header(&bad).is_err());
+    }
+
+    /// The pool's delta path must reconstruct byte-for-byte what a full
+    /// ship would have sent: same decoded body, and a worker-rebuilt
+    /// program identical to the parent-shipped one.
+    #[test]
+    fn delta_job_rebuilds_the_full_program() {
+        let a = gen::rmat(64, 500, (0.55, 0.2, 0.19), false, 21);
+        let ranks = 4;
+        let part = RowPartition::balanced(a.nrows, ranks);
+        let blocks = split_1d(&a, &part);
+        let plan = comm::plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None);
+        let topo = Topology::tsubame4(ranks);
+        let sched = hierarchy::build(&plan, &topo);
+        let xsched = hierarchy::sddmm_fetch(&sched);
+        let mut rng = Rng::new(17);
+        let b_full = Dense::random(a.nrows, 6, &mut rng);
+        let x_full = Dense::random(a.nrows, 6, &mut rng);
+        for op in [KernelOp::Spmm, KernelOp::Sddmm, KernelOp::FusedSddmmSpmm] {
+            for rank in 0..ranks {
+                let (r0, r1) = part.range(rank);
+                let n = b_full.ncols;
+                let b_local =
+                    Dense::from_vec(r1 - r0, n, b_full.data[r0 * n..r1 * n].to_vec());
+                let x_local = (op != KernelOp::Spmm).then(|| {
+                    Dense::from_vec(r1 - r0, n, x_full.data[r0 * n..r1 * n].to_vec())
+                });
+                let xs = (op != KernelOp::Spmm).then_some(&xsched);
+                // Full ship establishes the cached body.
+                let full = encode_job(
+                    rank,
+                    op,
+                    &ExecOpts::default(),
+                    &part,
+                    &topo,
+                    &plan,
+                    Some(&sched),
+                    xs,
+                    &blocks[rank],
+                    &b_local,
+                    x_local.as_ref(),
+                )
+                .unwrap();
+                let full_job = decode_job(&full).unwrap();
+                // Delta against it, as a warm pool would send.
+                let delta = encode_job_delta(
+                    rank,
+                    op,
+                    &ExecOpts::default(),
+                    &b_local,
+                    x_local.as_ref(),
+                )
+                .unwrap();
+                let delta_job = apply_job_delta(&full_job.body, &delta).unwrap();
+                let enc = |p: &Program| {
+                    let mut out = Vec::new();
+                    encode_program(&mut out, p).unwrap();
+                    out
+                };
+                assert_eq!(
+                    enc(&full_job.prog),
+                    enc(&delta_job.prog),
+                    "op {op:?} rank {rank}: delta-rebuilt program differs"
+                );
+                assert_eq!(delta_job.b_local, full_job.b_local);
+                assert_eq!(delta_job.x_local, full_job.x_local);
+                // Wrong rank against the cached body is rejected.
+                let other = encode_job_delta(
+                    (rank + 1) % ranks,
+                    op,
+                    &ExecOpts::default(),
+                    &b_local,
+                    x_local.as_ref(),
+                )
+                .unwrap();
+                assert!(apply_job_delta(&full_job.body, &other).is_err());
+            }
+        }
+    }
+
+    /// The fingerprint keys the delta decision: stable for an identical
+    /// body, different per rank and per graph (the A blocks are hashed,
+    /// not just the partition shape).
+    #[test]
+    fn job_fingerprint_separates_bodies() {
+        let a = gen::rmat(64, 500, (0.55, 0.2, 0.19), false, 21);
+        let a2 = gen::rmat(64, 500, (0.55, 0.2, 0.19), false, 22);
+        let ranks = 4;
+        let part = RowPartition::balanced(a.nrows, ranks);
+        let (blocks, blocks2) = (split_1d(&a, &part), split_1d(&a2, &part));
+        let plan = comm::plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None);
+        let plan2 = comm::plan(&blocks2, &part, Strategy::Joint(Solver::Koenig), None);
+        let topo = Topology::tsubame4(ranks);
+        let fp = |r: usize| job_fingerprint(r, &part, &topo, &plan, None, &blocks[r]);
+        assert_eq!(fp(0), fp(0), "fingerprint must be deterministic");
+        assert_ne!(fp(0), fp(1), "distinct ranks must fingerprint apart");
+        // Same partition starts, different graph content.
+        assert_ne!(
+            fp(0),
+            job_fingerprint(0, &part, &topo, &plan2, None, &blocks2[0]),
+            "different A under identical starts must fingerprint apart"
+        );
     }
 
     #[test]

@@ -24,7 +24,9 @@
 //! alongside the simulated one (same phase names, comparable in Perfetto).
 //! `serve` adds --serve-workers/--serve-queue/--serve-registry/--serve-batch;
 //! with --bench it runs the closed-loop saturation driver (--preset ci|full,
-//! --out <json path>) and prints the latency/throughput curve.
+//! --out <json path>) and prints the latency/throughput curve; add
+//! --backend proc to run the sweep over the server's persistent worker
+//! pools (the run fails if pool reuse never engages).
 
 use shiro::comm::Strategy;
 use shiro::config::RunConfig;
@@ -176,9 +178,16 @@ fn cmd_run(cfg: &RunConfig) {
     );
     let mut rng = Rng::new(1);
     let b = Dense::random(a.nrows, cfg.n_dense, &mut rng);
+    // Attach a pool handle so a proc run reports worker-pool stats (and
+    // any future request on the same handle reuses the warm fleet).
+    let pool = shiro::runtime::multiproc::PoolHandle::new();
+    let mut backend = backend_of(cfg);
+    if let shiro::spmm::Backend::Proc(popts) = &mut backend {
+        popts.pool = Some(pool.clone());
+    }
     let req = ExecRequest::spmm(&b)
         .opts(cfg.exec_opts())
-        .backend(backend_of(cfg))
+        .backend(backend)
         .fault_policy(cfg.fault_policy());
     let (recovery, c, stats) = match d.execute(&req) {
         Ok(r) => {
@@ -227,6 +236,13 @@ fn cmd_run(cfg: &RunConfig) {
         w.idle_secs * 1e3,
         w.compute_secs * 1e3
     );
+    if cfg.backend == "proc" {
+        let ps = pool.stats();
+        println!(
+            "proc pool: {} spawns, {} reuses, {} readmissions",
+            ps.spawns, ps.reuses, ps.readmissions
+        );
+    }
     assert!(err < 1e-3, "verification failed");
 }
 
@@ -370,7 +386,7 @@ fn cmd_serve(cfg: &RunConfig, args: &Args) {
         let out = std::path::PathBuf::from(
             args.get("out").unwrap_or("bench_results/serve_bench.json"),
         );
-        match bench::run(&p, &out) {
+        match bench::run(&p, &out, cfg.backend == "proc") {
             Ok(report) => print!("{report}"),
             Err(e) => {
                 eprintln!("serve bench failed: {e:#}");

@@ -235,15 +235,22 @@ pub struct LatencyStats {
     pub p99: f64,
     pub max: f64,
     pub mean: f64,
+    /// Non-finite samples (NaN/±inf) excluded from the order statistics.
+    /// A nonzero value flags a timing bug upstream without poisoning the
+    /// percentiles or panicking the reporting path.
+    pub dropped: usize,
 }
 
 /// Summarize a latency sample vector. Empty input yields all-zero stats.
+/// Non-finite samples are dropped (and counted in [`LatencyStats::dropped`])
+/// rather than panicking the sort or propagating NaN into every percentile.
 pub fn latency_stats(samples: &[f64]) -> LatencyStats {
-    if samples.is_empty() {
-        return LatencyStats::default();
+    let mut sorted: Vec<f64> = samples.iter().copied().filter(|s| s.is_finite()).collect();
+    let dropped = samples.len() - sorted.len();
+    if sorted.is_empty() {
+        return LatencyStats { dropped, ..LatencyStats::default() };
     }
-    let mut sorted = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).expect("latency samples must not be NaN"));
+    sorted.sort_by(f64::total_cmp);
     let n = sorted.len();
     // Nearest-rank: the smallest sample with at least p% of the mass at or
     // below it, i.e. index ceil(p * n) - 1.
@@ -258,6 +265,7 @@ pub fn latency_stats(samples: &[f64]) -> LatencyStats {
         p99: rank(0.99),
         max: sorted[n - 1],
         mean: sorted.iter().sum::<f64>() / n as f64,
+        dropped,
     }
 }
 
@@ -412,6 +420,22 @@ mod tests {
         assert_eq!(s.p99, 99.0);
         assert_eq!(s.max, 100.0);
         assert!((s.mean - 50.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_stats_drops_non_finite_samples() {
+        // A NaN sample must not panic the sort or poison the percentiles.
+        let s = latency_stats(&[1.0, f64::NAN, 3.0, f64::INFINITY, 2.0, f64::NEG_INFINITY]);
+        assert_eq!(s.count, 3);
+        assert_eq!(s.dropped, 3);
+        assert_eq!(s.p50, 2.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.mean, 2.0);
+        // All-non-finite input degrades to empty stats with the drop count.
+        let s = latency_stats(&[f64::NAN, f64::NAN]);
+        assert_eq!(s, LatencyStats { dropped: 2, ..LatencyStats::default() });
+        // Finite inputs are unaffected.
+        assert_eq!(latency_stats(&[1.0, 2.0]).dropped, 0);
     }
 
     #[test]

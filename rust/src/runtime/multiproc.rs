@@ -12,6 +12,18 @@
 //! order, the proc backend's C is bitwise-identical to the thread
 //! backend's (`tests/multiproc_suite.rs`).
 //!
+//! Every request runs on a [`WorkerPool`]: spawn + HELLO handshake happen
+//! once, then the live connections serve request after request (wire v4's
+//! generation-stamped multi-job protocol), shipping operand-only delta
+//! JOBs when the plan-body fingerprint is unchanged. Set
+//! [`ProcOpts::pool`] to share one fleet across requests; leave it `None`
+//! and the request gets an ephemeral pool torn down on return — the
+//! classic spawn-per-request behavior, running the exact same code path,
+//! which is why pooled and cold results are bitwise-identical by
+//! construction. A worker lost mid-request is quarantined and the pool
+//! *re-admits* a respawned replacement between requests, replanning back
+//! to the original rank count.
+//!
 //! Failure semantics: workers heartbeat every
 //! [`crate::exec::wire::BEAT_MILLIS`] ms; a worker that panics reports a
 //! structured ERROR frame; one that dies silently is detected by its
@@ -39,12 +51,13 @@ use crate::partition::{assemble_1d, recover_partition, split_1d, LocalBlocks, Ro
 use crate::sparse::Csr;
 use crate::topology::Topology;
 use crate::util::rng::Rng;
+use std::collections::BTreeSet;
 use std::fmt;
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::process::{Child, Command};
-use std::sync::{mpsc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 /// Where in the step a [`FaultPlan`] kills its worker. The three phases
@@ -77,17 +90,18 @@ impl CrashPhase {
         }
     }
 
-    /// Inverse of [`CrashPhase::name`]; how the worker decodes the
-    /// [`wire::ENV_CRASH`] value the parent set.
+    /// Inverse of [`CrashPhase::name`] — for parsing phase names from
+    /// CLI/config surfaces.
     pub fn by_name(name: &str) -> Option<CrashPhase> {
         CrashPhase::ALL.iter().copied().find(|p| p.name() == name)
     }
 }
 
-/// Deterministic fault injection: kill rank `rank` at `phase`. Shipped to
-/// the worker through its spawn environment, so the crash is reproducible
-/// run over run — the property the fault suite's differential assertions
-/// stand on.
+/// Deterministic fault injection: kill rank `rank` at `phase`. Shipped in
+/// the targeted rank's JOB header (the wire-v4 crash byte), so the crash
+/// is reproducible run over run — the property the fault suite's
+/// differential assertions stand on — and a pooled worker is armed for
+/// exactly one request, then disarmed by the next JOB.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct FaultPlan {
     /// Spawn-time identity (epoch-0 rank) of the worker to kill.
@@ -176,11 +190,17 @@ pub struct ProcOpts {
     /// Deterministic fault injection: kill one rank at a chosen phase of
     /// its first step, standing in for a segfaulted or OOM-killed worker.
     pub fault: Option<FaultPlan>,
+    /// Persistent worker pool: when set, the request reuses (lazily
+    /// creating) the shared [`WorkerPool`] behind the handle instead of
+    /// spawning rank processes per request. `None` keeps the classic
+    /// spawn-per-request behavior — an ephemeral pool torn down with the
+    /// request, on the very same code path.
+    pub pool: Option<PoolHandle>,
 }
 
 impl Default for ProcOpts {
     fn default() -> ProcOpts {
-        ProcOpts { timeout: Duration::from_secs(30), worker_exe: None, fault: None }
+        ProcOpts { timeout: Duration::from_secs(30), worker_exe: None, fault: None, pool: None }
     }
 }
 
@@ -340,23 +360,26 @@ pub fn run_sddmm(
 }
 
 /// One event from a worker's reader thread to the collector. Workers are
-/// identified by their stream index (spawn-time identity), not by any
-/// epoch-relative rank a payload claims.
+/// identified by their pool slot (spawn-time identity) plus the id of the
+/// connection the event arrived on — a re-admitted slot's old reader can
+/// race its replacement, and the collector tells their events apart by
+/// the connection id, never by any epoch-relative rank a payload claims.
 enum Event {
-    /// DONE frame: (worker, epoch, claimed rank, C block, vals, stats).
-    Done(usize, u64, usize, Dense, SddmmVals, RankStats),
-    Beat(usize),
+    /// DONE frame: (slot, conn, epoch, claimed rank, C block, vals, stats).
+    Done(usize, u64, u64, usize, Dense, SddmmVals, RankStats),
+    Beat(usize, u64),
     /// Unrecoverable protocol-level problem on this worker's stream.
-    Fail(usize, FailureCause),
-    /// ERROR frame: (worker, epoch, message). Stale epochs are the normal
-    /// "inbox closed" wake-up of an aborted job and are discarded.
-    WorkerErr(usize, u64, String),
-    /// Stream closed (or read error). Benign after DONE, fatal before.
-    Eof(usize, String),
+    Fail(usize, u64, FailureCause),
+    /// ERROR frame: (slot, conn, epoch, message). Stale epochs are the
+    /// normal "inbox closed" wake-up of an aborted job and are discarded.
+    WorkerErr(usize, u64, u64, String),
+    /// Stream closed (or read error). Benign after DONE, fatal before —
+    /// and between pooled requests, the death notice re-admission keys on.
+    Eof(usize, u64, String),
 }
 
 /// Plan state for the current epoch, owned by the collector once the
-/// first recovery replan replaces the caller's borrowed epoch-0 state.
+/// first recovery replan replaces the caller's borrowed base-epoch state.
 struct Live {
     part: RowPartition,
     plan: CommPlan,
@@ -365,12 +388,119 @@ struct Live {
     topo: Topology,
 }
 
-/// Routing table shared with the per-worker reader threads: DATA frames
-/// carry an epoch-relative `dst` rank, so the rank→worker map must swap
-/// atomically with the epoch bump.
-struct Route {
+/// Routing + liveness table shared with the detached per-connection
+/// reader threads. DATA frames carry an epoch-relative `dst` rank, so the
+/// rank→slot map must swap atomically with the epoch bump; `active` gates
+/// event forwarding so the idle heartbeats workers keep sending between
+/// pooled requests cannot grow the collector's queue without bound.
+struct RouteState {
     epoch: u64,
+    /// A request is in flight. Inactive readers still report EOF (worker
+    /// death) and terminal protocol failures; routine traffic is dropped.
+    active: bool,
+    /// Slot serving each epoch-relative rank.
     worker_of_rank: Vec<usize>,
+    /// Write half of each slot's control socket, shared between the
+    /// parent (JOB/ABORT) and the readers (routed DATA).
+    writers: Vec<Arc<Mutex<TcpStream>>>,
+}
+
+/// What one rank's DONE frame carries.
+type RankResult = (Dense, SddmmVals, RankStats);
+
+/// Counters a [`PoolHandle`] exposes. A warm pool serving N requests at a
+/// fixed shape shows `spawns == nranks` and `reuses == N - 1` — the
+/// "zero spawns after the first request" property the suites assert.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Worker processes spawned over the pool's lifetime (cold start plus
+    /// re-admissions).
+    pub spawns: u64,
+    /// Requests served over already-established connections.
+    pub reuses: u64,
+    /// Workers respawned and re-admitted after being lost mid-request.
+    pub readmissions: u64,
+}
+
+/// Shared, lazily filled slot for a [`WorkerPool`]: clone one handle into
+/// [`ProcOpts::pool`] on every request and they all reuse the same
+/// spawned workers. The pool is created on first use and rebuilt (counters
+/// reset) if a request arrives for a different rank count or worker
+/// binary, so key long-lived handles by (topology, nranks) as the serve
+/// layer does. Dropping the last clone kills the workers.
+#[derive(Clone, Default)]
+pub struct PoolHandle(Arc<Mutex<Option<WorkerPool>>>);
+
+impl PoolHandle {
+    pub fn new() -> PoolHandle {
+        PoolHandle::default()
+    }
+
+    /// Spawn/reuse counters; zeros before the first request.
+    pub fn stats(&self) -> PoolStats {
+        self.lock().as_ref().map(|p| p.stats).unwrap_or_default()
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Option<WorkerPool>> {
+        // A panicked request (a caller assertion in a serve worker) must
+        // not wedge every later request on lock poisoning: the pool
+        // revalidates its children on entry anyway, so recover the guard.
+        self.0.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+impl fmt::Debug for PoolHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let st = self.stats();
+        write!(
+            f,
+            "PoolHandle(spawns {}, reuses {}, readmissions {})",
+            st.spawns, st.reuses, st.readmissions
+        )
+    }
+}
+
+/// A persistent fleet of rank processes: spawned and HELLO-handshaked
+/// once, then reused request after request over the same control-plane
+/// connections (the wire-v4 multi-job protocol). The parent keeps its
+/// listener open for the pool's whole lifetime so a worker lost
+/// mid-request can be respawned and *re-admitted* between requests,
+/// replanning back to the original rank count.
+pub struct WorkerPool {
+    nranks: usize,
+    exe: PathBuf,
+    listener: TcpListener,
+    port: u16,
+    children: Vec<Option<Child>>,
+    /// Liveness per slot; a dead slot is respawned at next request start.
+    alive: Vec<bool>,
+    /// Monotone id of each slot's current connection: events from a
+    /// replaced reader carry a stale id and are ignored.
+    conn_id: Vec<u64>,
+    /// Fingerprint of the last plan body shipped to each slot — the
+    /// delta-vs-full JOB decision. Cleared on re-admission.
+    last_fp: Vec<Option<u64>>,
+    route: Arc<Mutex<RouteState>>,
+    ev_tx: mpsc::Sender<Event>,
+    ev_rx: mpsc::Receiver<Event>,
+    /// Next request's base exchange epoch — strictly above every epoch
+    /// any earlier request used, so stale frames can never alias.
+    epoch: u64,
+    /// Pool generation, bumped once per request (the JOB header field).
+    generation: u64,
+    /// Last request's failure-detection timeout; sizes the teardown grace.
+    timeout: Duration,
+    served: bool,
+    stats: PoolStats,
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Killing the children closes their sockets, which unblocks every
+        // detached reader thread; each exits on EOF.
+        kill_all(&mut self.children);
+        reap(&mut self.children, reap_grace(self.timeout));
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -390,292 +520,332 @@ fn run_op(
     let nranks = part.nparts;
     assert_eq!(plan.nranks, nranks);
     assert_eq!(part.n, b.nrows);
-    let n_dense = b.ncols;
-    // SDDMM workers produce edge values, not a dense block: their C has
-    // width 0 and the payload of interest rides the DONE frame instead.
-    let c_cols = if op == KernelOp::Sddmm { 0 } else { n_dense };
-    let fail = |rank: usize, cause: FailureCause| RankFailure { rank, cause };
-
-    let listener = TcpListener::bind(("127.0.0.1", 0))
-        .map_err(|e| fail(0, FailureCause::Spawn(format!("bind control socket: {e}"))))?;
-    let port = listener
-        .local_addr()
-        .map_err(|e| fail(0, FailureCause::Spawn(format!("control socket addr: {e}"))))?
-        .port();
     let exe = match &popts.worker_exe {
         Some(p) => p.clone(),
         None => std::env::current_exe()
-            .map_err(|e| fail(0, FailureCause::Spawn(format!("current_exe: {e}"))))?,
+            .map_err(|e| RankFailure {
+                rank: 0,
+                cause: FailureCause::Spawn(format!("current_exe: {e}")),
+            })?,
     };
-
-    let t0 = Instant::now();
-    let mut children: Vec<Child> = Vec::new();
-    for rank in 0..nranks {
-        let mut cmd = Command::new(&exe);
-        cmd.env(wire::ENV_PORT, port.to_string()).env(wire::ENV_RANK, rank.to_string());
-        if let Some(fp) = popts.fault {
-            if fp.rank == rank {
-                cmd.env(wire::ENV_CRASH, fp.phase.name());
+    match &popts.pool {
+        Some(handle) => {
+            let mut slot = handle.lock();
+            // Rebuild on shape/binary mismatch. Handles are keyed by the
+            // caller (one per (topology, nranks) in the serve layer), so
+            // this is a cold-start path, not churn.
+            let rebuild = !matches!(&*slot, Some(p) if p.nranks == nranks && p.exe == exe);
+            if rebuild {
+                *slot = None; // kill any stale fleet before spawning anew
+                *slot = Some(WorkerPool::new(nranks, exe, popts.timeout)?);
             }
+            let pool = slot.as_mut().expect("pool ensured above");
+            pool.run_request(op, part, plan, blocks, sched, topo, x, b, opts, popts, policy)
         }
-        match cmd.spawn() {
-            Ok(c) => children.push(c),
-            Err(e) => {
-                kill_all(&mut children);
-                reap(&mut children);
-                return Err(fail(rank, FailureCause::Spawn(e.to_string())));
-            }
+        None => {
+            // Ephemeral pool: spawn, serve one request, tear down — the
+            // classic spawn-per-request behavior, routed through the very
+            // same code as warm pools, which keeps the two bitwise
+            // identical by construction.
+            let mut pool = WorkerPool::new(nranks, exe, popts.timeout)?;
+            pool.run_request(op, part, plan, blocks, sched, topo, x, b, opts, popts, policy)
         }
     }
+}
 
-    // Accept + HELLO with a hard deadline so a worker that dies before
-    // connecting (or never says hello) cannot hang the control plane.
-    // Non-blocking accept + poll keeps one deadline across all workers.
-    // Handshake failures are not recoverable — FaultPolicy governs
-    // mid-step deaths, not a fleet that never formed.
-    let mut streams: Vec<Option<TcpStream>> = (0..nranks).map(|_| None).collect();
-    let mut err = None;
-    listener.set_nonblocking(true).ok();
-    let deadline = Instant::now() + popts.timeout;
-    let mut accepted = 0;
-    while accepted < nranks && err.is_none() {
-        match listener.accept() {
-            Ok((stream, _)) => {
-                stream.set_nonblocking(false).ok();
-                stream.set_nodelay(true).ok();
-                stream.set_read_timeout(Some(popts.timeout)).ok();
-                let hello = wire::read_frame(&mut (&stream)).and_then(|(k, payload)| {
-                    if k != kind::HELLO {
-                        anyhow::bail!("expected HELLO, got frame kind {k}");
-                    }
-                    wire::decode_hello(&payload)
-                });
-                match hello {
-                    Ok((v, rank)) if v != wire::WIRE_VERSION => {
-                        err = Some(fail(
-                            rank.min(nranks.saturating_sub(1)),
-                            FailureCause::Protocol(format!(
-                                "worker wire version {v} != {}",
-                                wire::WIRE_VERSION
-                            )),
-                        ));
-                    }
-                    Ok((_, rank)) if rank >= nranks => {
-                        err = Some(fail(
-                            0,
-                            FailureCause::Protocol(format!("HELLO from unknown rank {rank}")),
-                        ));
-                    }
-                    Ok((_, rank)) if streams[rank].is_some() => {
-                        err = Some(fail(
-                            rank,
-                            FailureCause::Protocol(format!("duplicate HELLO from rank {rank}")),
-                        ));
-                    }
-                    Ok((_, rank)) => {
-                        stream.set_read_timeout(None).ok();
-                        streams[rank] = Some(stream);
-                        accepted += 1;
-                    }
-                    Err(e) => {
-                        err = Some(fail(
-                            0,
-                            FailureCause::Protocol(format!("bad handshake: {e:#}")),
-                        ));
-                    }
+impl WorkerPool {
+    /// Spawn `nranks` workers, handshake them all, and start their
+    /// detached reader threads. Everything here happens exactly once per
+    /// fleet — the per-request path only ships JOBs over these
+    /// connections.
+    fn new(nranks: usize, exe: PathBuf, timeout: Duration) -> Result<WorkerPool, RankFailure> {
+        let fail = |rank: usize, cause: FailureCause| RankFailure { rank, cause };
+        let listener = TcpListener::bind(("127.0.0.1", 0))
+            .map_err(|e| fail(0, FailureCause::Spawn(format!("bind control socket: {e}"))))?;
+        let port = listener
+            .local_addr()
+            .map_err(|e| fail(0, FailureCause::Spawn(format!("control socket addr: {e}"))))?
+            .port();
+        listener.set_nonblocking(true).ok();
+
+        let mut children: Vec<Option<Child>> = Vec::with_capacity(nranks);
+        for rank in 0..nranks {
+            match spawn_worker(&exe, port, rank) {
+                Ok(c) => children.push(Some(c)),
+                Err(e) => {
+                    kill_all(&mut children);
+                    reap(&mut children, reap_grace(timeout));
+                    return Err(fail(rank, FailureCause::Spawn(e.to_string())));
                 }
             }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                if Instant::now() > deadline {
-                    let missing = streams.iter().position(Option::is_none).unwrap_or(0);
-                    err = Some(fail(
-                        missing,
-                        FailureCause::Disconnected(format!(
-                            "worker never connected within {:.1}s",
-                            popts.timeout.as_secs_f64()
-                        )),
-                    ));
-                } else {
-                    std::thread::sleep(Duration::from_millis(10));
-                }
-            }
-            Err(e) => {
-                err = Some(fail(0, FailureCause::Spawn(format!("accept: {e}"))));
-            }
         }
-    }
-    if let Some(f) = err {
-        kill_all(&mut children);
-        reap(&mut children);
-        return Err(f);
-    }
-
-    // Ship every epoch-0 JOB before any routing starts: a routed DATA
-    // frame must never precede JOB on a worker's stream (per-stream
-    // writes are only serialized once the writer mutexes exist).
-    let xsched_owned =
-        (op != KernelOp::Spmm).then(|| sched.map(hierarchy::sddmm_fetch)).flatten();
-    for rank in 0..nranks {
-        let job = match wire::encode_job(
-            rank,
-            op,
-            opts,
-            part,
-            topo,
-            plan,
-            sched,
-            xsched_owned.as_ref(),
-            &blocks[rank],
-            &slice_rows(b, part, rank),
-            x.map(|x| slice_rows(x, part, rank)).as_ref(),
-        ) {
-            Ok(j) => j,
-            Err(e) => {
+        let mut expect: BTreeSet<usize> = (0..nranks).collect();
+        let streams = match accept_hellos(&listener, &mut expect, timeout) {
+            Ok(s) => s,
+            Err(f) => {
                 kill_all(&mut children);
-                reap(&mut children);
-                return Err(fail(rank, FailureCause::Protocol(format!("encode job: {e:#}"))));
+                reap(&mut children, reap_grace(timeout));
+                return Err(f);
             }
         };
-        let mut payload = wire::epoch_payload(0);
-        payload.extend_from_slice(&job);
-        let stream = streams[rank].as_mut().expect("accepted above");
-        if let Err(e) = wire::write_frame(stream, kind::JOB, &payload) {
-            kill_all(&mut children);
-            reap(&mut children);
-            return Err(fail(rank, FailureCause::Disconnected(format!("send job: {e:#}"))));
+
+        // Split each stream: a cloned read half per reader thread, the
+        // original write half behind a shared mutex for routed DATA and
+        // control (JOB / ABORT) frames.
+        let mut writers: Vec<Option<Arc<Mutex<TcpStream>>>> = (0..nranks).map(|_| None).collect();
+        let mut read_halves: Vec<Option<TcpStream>> = (0..nranks).map(|_| None).collect();
+        for (rank, stream) in streams {
+            match stream.try_clone() {
+                Ok(rd) => read_halves[rank] = Some(rd),
+                Err(e) => {
+                    kill_all(&mut children);
+                    reap(&mut children, reap_grace(timeout));
+                    return Err(fail(rank, FailureCause::Spawn(format!("clone stream: {e}"))));
+                }
+            }
+            writers[rank] = Some(Arc::new(Mutex::new(stream)));
         }
+        let writers: Vec<Arc<Mutex<TcpStream>>> =
+            writers.into_iter().map(|w| w.expect("handshaked above")).collect();
+        let route = Arc::new(Mutex::new(RouteState {
+            epoch: 0,
+            active: false,
+            worker_of_rank: Vec::new(),
+            writers,
+        }));
+        let (ev_tx, ev_rx) = mpsc::channel::<Event>();
+        for (slot, rd) in read_halves.into_iter().enumerate() {
+            let rd = rd.expect("handshaked above");
+            let route = Arc::clone(&route);
+            let tx = ev_tx.clone();
+            std::thread::spawn(move || reader_loop(slot, 1, rd, route, tx));
+        }
+        Ok(WorkerPool {
+            nranks,
+            exe,
+            listener,
+            port,
+            children,
+            alive: vec![true; nranks],
+            conn_id: vec![1; nranks],
+            last_fp: vec![None; nranks],
+            route,
+            ev_tx,
+            ev_rx,
+            epoch: 0,
+            generation: 0,
+            timeout,
+            served: false,
+            stats: PoolStats { spawns: nranks as u64, ..PoolStats::default() },
+        })
     }
 
-    // Split each stream: one cloned read half per reader thread, the
-    // original write half behind a mutex for routed DATA frames and
-    // recovery-control (ABORT / replanned JOB) frames.
-    let mut readers = Vec::with_capacity(nranks);
-    for s in &streams {
-        match s.as_ref().expect("accepted above").try_clone() {
-            Ok(c) => readers.push(c),
-            Err(e) => {
-                kill_all(&mut children);
-                reap(&mut children);
-                return Err(fail(0, FailureCause::Spawn(format!("clone stream: {e}"))));
+    /// Between requests: collect queued death notices, reap dead workers,
+    /// and re-admit respawned replacements so the next request replans
+    /// back to the full rank count — the recovery-on-*growth* half of the
+    /// protocol (a mid-request loss only ever shrinks the fleet).
+    fn readmit(&mut self, timeout: Duration) -> Result<(), RankFailure> {
+        // Death notices queued while no request was active. Everything
+        // else in the queue is stale request traffic; epochs are globally
+        // monotone, so none of it can alias later work.
+        while let Ok(ev) = self.ev_rx.try_recv() {
+            if let Event::Eof(slot, conn, _) = ev {
+                if conn == self.conn_id[slot] {
+                    self.alive[slot] = false;
+                }
             }
         }
-    }
-    let writers: Vec<Mutex<TcpStream>> =
-        streams.into_iter().map(|s| Mutex::new(s.expect("accepted above"))).collect();
-    let writers = &writers;
-    let route = Mutex::new(Route { epoch: 0, worker_of_rank: (0..nranks).collect() });
-    let route = &route;
-
-    let (ev_tx, ev_rx) = mpsc::channel::<Event>();
-    type RankResult = (Dense, SddmmVals, RankStats);
-    type Collected = (Vec<RankResult>, Option<Live>, RecoveryReport);
-    let collected: Result<Collected, RankFailure> = std::thread::scope(|scope| {
-        for (w, rd) in readers.into_iter().enumerate() {
-            let ev_tx = ev_tx.clone();
-            scope.spawn(move || {
-                let mut rd = BufReader::new(rd);
-                loop {
-                    let (k, payload) = match wire::read_frame(&mut rd) {
-                        Ok(f) => f,
-                        Err(e) => {
-                            let _ = ev_tx.send(Event::Eof(w, format!("{e:#}")));
-                            return;
-                        }
-                    };
-                    match k {
-                        kind::DATA => {
-                            let (dst, epoch) = match wire::decode_data_header(&payload) {
-                                Ok(h) => h,
-                                Err(e) => {
-                                    let _ = ev_tx.send(Event::Fail(
-                                        w,
-                                        FailureCause::Protocol(format!("bad DATA: {e:#}")),
-                                    ));
-                                    return;
-                                }
-                            };
-                            // Route by the *current* epoch's rank→worker
-                            // map; frames from an aborted epoch are
-                            // dropped here, before they can reach a
-                            // replanned job.
-                            let target = {
-                                let rt = route.lock().unwrap();
-                                if epoch != rt.epoch {
-                                    continue;
-                                }
-                                rt.worker_of_rank.get(dst).copied()
-                            };
-                            match target {
-                                Some(t) => {
-                                    // Routed verbatim. A write failure
-                                    // means *dst* died; dst's own reader
-                                    // reports that as EOF, so it is not
-                                    // this stream's failure.
-                                    let mut ws = writers[t].lock().unwrap();
-                                    let _ = wire::write_frame(&mut *ws, kind::DATA, &payload);
-                                }
-                                None => {
-                                    let _ = ev_tx.send(Event::Fail(
-                                        w,
-                                        FailureCause::Protocol(format!(
-                                            "DATA for bad rank {dst}"
-                                        )),
-                                    ));
-                                    return;
-                                }
-                            }
-                        }
-                        kind::DONE => match wire::decode_done(&payload) {
-                            Ok((epoch, rank, c, vals, st)) => {
-                                let _ = ev_tx.send(Event::Done(w, epoch, rank, c, vals, st));
-                            }
-                            Err(e) => {
-                                let _ = ev_tx.send(Event::Fail(
-                                    w,
-                                    FailureCause::Protocol(format!("bad DONE: {e:#}")),
-                                ));
-                                return;
-                            }
-                        },
-                        kind::BEAT => {
-                            let _ = ev_tx.send(Event::Beat(w));
-                        }
-                        kind::ERROR => match wire::decode_error(&payload) {
-                            // Keep reading: a stale-epoch ERROR is an
-                            // aborted job winding down, and this worker
-                            // may still serve later epochs.
-                            Ok((epoch, _, msg)) => {
-                                let _ = ev_tx.send(Event::WorkerErr(w, epoch, msg));
-                            }
-                            Err(e) => {
-                                let _ = ev_tx.send(Event::Fail(
-                                    w,
-                                    FailureCause::Protocol(format!("bad ERROR: {e:#}")),
-                                ));
-                                return;
-                            }
-                        },
-                        k => {
-                            let _ = ev_tx.send(Event::Fail(
-                                w,
-                                FailureCause::Protocol(format!("unexpected frame kind {k}")),
-                            ));
-                            return;
-                        }
+        // A worker can be dead without its EOF having surfaced yet (the
+        // OS buffered the reset): ask the OS directly.
+        for slot in 0..self.nranks {
+            if self.alive[slot] {
+                if let Some(c) = self.children[slot].as_mut() {
+                    if matches!(c.try_wait(), Ok(Some(_))) {
+                        self.alive[slot] = false;
                     }
                 }
-            });
+            }
         }
-        drop(ev_tx);
+        let dead: Vec<usize> = (0..self.nranks).filter(|&s| !self.alive[s]).collect();
+        if dead.is_empty() {
+            return Ok(());
+        }
+        for &slot in &dead {
+            // A quarantined worker may still be running (heartbeat
+            // timeouts and reported panics leave the process up); kill it
+            // before its replacement takes the slot.
+            if let Some(c) = self.children[slot].take() {
+                let mut one = [Some(c)];
+                kill_all(&mut one);
+                reap(&mut one, reap_grace(timeout));
+            }
+            self.last_fp[slot] = None;
+        }
+        for &slot in &dead {
+            match spawn_worker(&self.exe, self.port, slot) {
+                Ok(c) => {
+                    self.children[slot] = Some(c);
+                    self.stats.spawns += 1;
+                    self.stats.readmissions += 1;
+                }
+                Err(e) => {
+                    return Err(RankFailure {
+                        rank: slot,
+                        cause: FailureCause::Spawn(e.to_string()),
+                    })
+                }
+            }
+        }
+        let mut expect: BTreeSet<usize> = dead.iter().copied().collect();
+        let streams = accept_hellos(&self.listener, &mut expect, timeout)?;
+        for (slot, stream) in streams {
+            let rd = stream.try_clone().map_err(|e| RankFailure {
+                rank: slot,
+                cause: FailureCause::Spawn(format!("clone stream: {e}")),
+            })?;
+            self.conn_id[slot] += 1;
+            self.route.lock().unwrap().writers[slot] = Arc::new(Mutex::new(stream));
+            let route = Arc::clone(&self.route);
+            let tx = self.ev_tx.clone();
+            let conn = self.conn_id[slot];
+            std::thread::spawn(move || reader_loop(slot, conn, rd, route, tx));
+            self.alive[slot] = true;
+        }
+        Ok(())
+    }
 
-        // Collector state. Workers are tracked by spawn index; the
-        // current epoch's rank of each live worker lives in
-        // `rank_of_worker`, and `results` is indexed by epoch-relative
-        // rank.
-        let mut alive = vec![true; nranks];
+    /// Serve one request over the pool: re-admit dead workers, ship JOBs
+    /// (operand-only deltas when a slot's plan-body fingerprint is
+    /// unchanged), collect DONEs with the same quarantine-and-replan
+    /// recovery the spawn-per-request path always had, and leave the
+    /// fleet idle for the next request. The workers decode into the same
+    /// frozen step programs either way, which is what keeps warm-pool
+    /// results bitwise-identical to a cold run.
+    #[allow(clippy::too_many_arguments)]
+    fn run_request(
+        &mut self,
+        op: KernelOp,
+        part: &RowPartition,
+        plan: &CommPlan,
+        blocks: &[LocalBlocks],
+        sched: Option<&HierSchedule>,
+        topo: &Topology,
+        x: Option<&Dense>,
+        b: &Dense,
+        opts: &ExecOpts,
+        popts: &ProcOpts,
+        policy: FaultPolicy,
+    ) -> Result<(Dense, Option<Csr>, ExecStats, Option<RecoveryReport>), RankFailure> {
+        let nranks = self.nranks;
+        debug_assert_eq!(part.nparts, nranks);
+        let n_dense = b.ncols;
+        // SDDMM workers produce edge values, not a dense block: their C
+        // has width 0 and the payload of interest rides the DONE frame.
+        let c_cols = if op == KernelOp::Sddmm { 0 } else { n_dense };
+        self.timeout = popts.timeout;
+
+        let t0 = Instant::now();
+        self.readmit(popts.timeout)?;
+        if self.served {
+            self.stats.reuses += 1;
+        }
+        self.served = true;
+        self.generation += 1;
+        let base_epoch = self.epoch;
+
+        // Publish the request's routing epoch before the first JOB ships
+        // (a worker may start sending DATA the moment it decodes), and
+        // grab the writer handles while the lock is held.
+        let writers: Vec<Arc<Mutex<TcpStream>>> = {
+            let mut rt = self.route.lock().unwrap();
+            rt.epoch = base_epoch;
+            rt.active = true;
+            rt.worker_of_rank = (0..nranks).collect();
+            rt.writers.iter().map(Arc::clone).collect()
+        };
+
+        // Encode every JOB for the base epoch before any frame ships. A
+        // ship failure is carried into the collector as this request's
+        // first failure event so it goes through the same quarantine/
+        // replan path as a mid-step death (survivors that never saw the
+        // base epoch just ABORT a no-op and pick up the replanned JOB).
+        let xsched_owned =
+            (op != KernelOp::Spmm).then(|| sched.map(hierarchy::sddmm_fetch)).flatten();
+        let mut carried: Option<(usize, FailureCause)> = None;
+        let mut payloads: Vec<(u64, Vec<u8>)> = Vec::with_capacity(nranks);
+        for rank in 0..nranks {
+            let fp = wire::job_fingerprint(rank, part, topo, plan, sched, &blocks[rank]);
+            let warm = self.last_fp[rank] == Some(fp);
+            let blob = if warm {
+                wire::encode_job_delta(
+                    rank,
+                    op,
+                    opts,
+                    &slice_rows(b, part, rank),
+                    x.map(|x| slice_rows(x, part, rank)).as_ref(),
+                )
+            } else {
+                wire::encode_job(
+                    rank,
+                    op,
+                    opts,
+                    part,
+                    topo,
+                    plan,
+                    sched,
+                    xsched_owned.as_ref(),
+                    &blocks[rank],
+                    &slice_rows(b, part, rank),
+                    x.map(|x| slice_rows(x, part, rank)).as_ref(),
+                )
+            };
+            let blob = match blob {
+                Ok(j) => j,
+                Err(e) => {
+                    carried = Some((rank, FailureCause::Protocol(format!("encode job: {e:#}"))));
+                    break;
+                }
+            };
+            // Fault injection rides the JOB frame: armed for exactly the
+            // targeted slot, exactly this request.
+            let crash = popts.fault.and_then(|fpl| (fpl.rank == rank).then_some(fpl.phase));
+            let mut payload = wire::encode_job_header(&wire::JobHeader {
+                generation: self.generation,
+                epoch: base_epoch,
+                mode: if warm { wire::JOB_MODE_DELTA } else { wire::JOB_MODE_FULL },
+                crash,
+                fp,
+            });
+            payload.extend_from_slice(&blob);
+            payloads.push((fp, payload));
+        }
+        // Write every JOB while holding *all* writer locks: a reader
+        // routing an early worker's DATA blocks on the destination's
+        // writer lock, so no routed frame can land on a stream before
+        // that stream's own JOB — the worker would drop it as stale and
+        // the exchange would hang. (Workers always drain their socket,
+        // so these writes cannot deadlock against blocked readers.)
+        if carried.is_none() {
+            let mut guards: Vec<_> = writers.iter().map(|w| w.lock().unwrap()).collect();
+            for (rank, (fp, payload)) in payloads.iter().enumerate() {
+                match wire::write_frame(&mut *guards[rank], kind::JOB, payload) {
+                    Ok(()) => self.last_fp[rank] = Some(*fp),
+                    Err(e) => {
+                        carried =
+                            Some((rank, FailureCause::Disconnected(format!("send job: {e:#}"))));
+                        break;
+                    }
+                }
+            }
+        }
+        drop(payloads);
+
+        // Collector state. Workers are tracked by pool slot; the current
+        // epoch's rank of each live worker lives in `rank_of_worker`, and
+        // `results` is indexed by epoch-relative rank.
         let mut rank_of_worker: Vec<Option<usize>> = (0..nranks).map(Some).collect();
         let mut n_alive = nranks;
-        let mut epoch: u64 = 0;
+        let mut epoch: u64 = base_epoch;
         let mut last_seen = vec![Instant::now(); nranks];
         let mut results: Vec<Option<RankResult>> = (0..nranks).map(|_| None).collect();
         let mut n_done = 0;
@@ -694,59 +864,66 @@ fn run_op(
                            w: usize| {
                 rank_of_worker[w].is_some_and(|r| results[r].is_none())
             };
-            let mut fail_ev: Option<(usize, FailureCause)> =
-                match ev_rx.recv_timeout(Duration::from_millis(100)) {
-                    Ok(Event::Done(w, e, rank, c, vals, st)) => {
-                        last_seen[w] = Instant::now();
-                        if !alive[w] || e != epoch {
-                            None // stale epoch or quarantined worker
-                        } else if rank_of_worker[w] == Some(rank) {
-                            if results[rank].is_none() {
-                                results[rank] = Some((c, vals, st));
-                                n_done += 1;
-                            }
-                            None
+            let mut fail_ev: Option<(usize, FailureCause)> = if carried.is_some() {
+                carried.take()
+            } else {
+                match self.ev_rx.recv_timeout(Duration::from_millis(100)) {
+                    Ok(Event::Done(w, conn, e, rank, c, vals, st)) => {
+                        if conn != self.conn_id[w] {
+                            None // ghost of a replaced connection
                         } else {
-                            Some((
-                                w,
-                                FailureCause::Protocol(format!(
-                                    "DONE claims rank {rank} on worker {w}'s stream"
-                                )),
-                            ))
+                            last_seen[w] = Instant::now();
+                            if !self.alive[w] || e != epoch {
+                                None // stale epoch or quarantined worker
+                            } else if rank_of_worker[w] == Some(rank) {
+                                if results[rank].is_none() {
+                                    results[rank] = Some((c, vals, st));
+                                    n_done += 1;
+                                }
+                                None
+                            } else {
+                                Some((
+                                    w,
+                                    FailureCause::Protocol(format!(
+                                        "DONE claims rank {rank} on worker {w}'s stream"
+                                    )),
+                                ))
+                            }
                         }
                     }
-                    Ok(Event::Beat(w)) => {
-                        last_seen[w] = Instant::now();
+                    Ok(Event::Beat(w, conn)) => {
+                        if conn == self.conn_id[w] {
+                            last_seen[w] = Instant::now();
+                        }
                         None
                     }
-                    Ok(Event::WorkerErr(w, e, msg)) => {
-                        last_seen[w] = Instant::now();
-                        (alive[w] && e == epoch).then(|| (w, FailureCause::Worker(msg)))
-                    }
-                    Ok(Event::Fail(w, cause)) => alive[w].then_some((w, cause)),
-                    Ok(Event::Eof(w, msg)) => (alive[w]
-                        && missing(&rank_of_worker, &results, w))
-                    .then(|| (w, FailureCause::Disconnected(msg))),
-                    Err(mpsc::RecvTimeoutError::Timeout) => None,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => {
-                        // Every reader thread exited with work missing:
-                        // attribute to the first live worker still owed a
-                        // result (the loop guard guarantees one exists).
-                        let w = (0..nranks)
-                            .find(|&w| alive[w] && missing(&rank_of_worker, &results, w));
-                        match w {
-                            Some(w) => Some((
-                                w,
-                                FailureCause::Disconnected("all streams closed".into()),
-                            )),
-                            None => break 'collect,
+                    Ok(Event::WorkerErr(w, conn, e, msg)) => {
+                        if conn != self.conn_id[w] {
+                            None
+                        } else {
+                            last_seen[w] = Instant::now();
+                            (self.alive[w] && e == epoch)
+                                .then(|| (w, FailureCause::Worker(msg)))
                         }
                     }
-                };
+                    Ok(Event::Fail(w, conn, cause)) => {
+                        (conn == self.conn_id[w] && self.alive[w]).then_some((w, cause))
+                    }
+                    Ok(Event::Eof(w, conn, msg)) => (conn == self.conn_id[w]
+                        && self.alive[w]
+                        && missing(&rank_of_worker, &results, w))
+                    .then(|| (w, FailureCause::Disconnected(msg))),
+                    // Timeout tick. (The pool holds its own sender, so
+                    // the channel can never disconnect; a fleet-wide
+                    // wipeout surfaces through EOFs and the heartbeat
+                    // scan below instead.)
+                    Err(_) => None,
+                }
+            };
             if fail_ev.is_none() {
                 fail_ev = (0..nranks)
                     .find(|&w| {
-                        alive[w]
+                        self.alive[w]
                             && missing(&rank_of_worker, &results, w)
                             && last_seen[w].elapsed() > popts.timeout
                     })
@@ -758,7 +935,7 @@ fn run_op(
             // victim rather than recursing.
             let mut pending = fail_ev;
             while let Some((fw, fc)) = pending.take() {
-                alive[fw] = false;
+                self.alive[fw] = false;
                 let lost_rank = rank_of_worker[fw].take().expect("live worker had a rank");
                 n_alive -= 1;
                 if retries_left == 0 || n_alive == 0 {
@@ -774,7 +951,7 @@ fn run_op(
                 // replanned JOB lands on the same stream (TCP order
                 // guarantees ABORT is seen first).
                 let abort = wire::epoch_payload(epoch);
-                for w2 in (0..nranks).filter(|&w2| alive[w2]) {
+                for w2 in (0..nranks).filter(|&w2| self.alive[w2]) {
                     let mut ws = writers[w2].lock().unwrap();
                     let _ = wire::write_frame(&mut *ws, kind::ABORT, &abort);
                 }
@@ -817,12 +994,13 @@ fn run_op(
                 // publish the new routing epoch before any survivor can
                 // learn of it from its JOB frame.
                 epoch += 1;
-                let survivors: Vec<usize> = (0..nranks).filter(|&w2| alive[w2]).collect();
+                let survivors: Vec<usize> =
+                    (0..nranks).filter(|&w2| self.alive[w2]).collect();
                 for (r, &w2) in survivors.iter().enumerate() {
                     rank_of_worker[w2] = Some(r);
                 }
                 {
-                    let mut rt = route.lock().unwrap();
+                    let mut rt = self.route.lock().unwrap();
                     rt.epoch = epoch;
                     rt.worker_of_rank = survivors.clone();
                 }
@@ -833,7 +1011,20 @@ fn run_op(
                 let xsched_owned = (op != KernelOp::Spmm)
                     .then(|| l.sched.as_ref().map(hierarchy::sddmm_fetch))
                     .flatten();
+                let mut reship: Vec<(usize, u64, Vec<u8>)> =
+                    Vec::with_capacity(survivors.len());
                 for (r, &w2) in survivors.iter().enumerate() {
+                    // Replanned bodies always ship full — the fingerprint
+                    // just changed with the partition — and re-arm
+                    // nothing: a fault plan fires at most once.
+                    let fp2 = wire::job_fingerprint(
+                        r,
+                        &l.part,
+                        &l.topo,
+                        &l.plan,
+                        l.sched.as_ref(),
+                        &l.blocks[r],
+                    );
                     let job = match wire::encode_job(
                         r,
                         op,
@@ -856,18 +1047,33 @@ fn run_op(
                             break;
                         }
                     };
-                    let mut payload = wire::epoch_payload(epoch);
+                    let mut payload = wire::encode_job_header(&wire::JobHeader {
+                        generation: self.generation,
+                        epoch,
+                        mode: wire::JOB_MODE_FULL,
+                        crash: None,
+                        fp: fp2,
+                    });
                     payload.extend_from_slice(&job);
-                    let sent = {
-                        let mut ws = writers[w2].lock().unwrap();
-                        wire::write_frame(&mut *ws, kind::JOB, &payload)
-                    };
-                    if let Err(e) = sent {
-                        pending = Some((
-                            w2,
-                            FailureCause::Disconnected(format!("send job: {e:#}")),
-                        ));
-                        break;
+                    reship.push((w2, fp2, payload));
+                }
+                // Same all-locks write as the base ship: no survivor may
+                // see another survivor's routed DATA before its own
+                // replanned JOB on the new epoch.
+                if pending.is_none() {
+                    let mut guards: Vec<_> =
+                        survivors.iter().map(|&w2| writers[w2].lock().unwrap()).collect();
+                    for (i, (w2, fp2, payload)) in reship.iter().enumerate() {
+                        match wire::write_frame(&mut *guards[i], kind::JOB, payload) {
+                            Ok(()) => self.last_fp[*w2] = Some(*fp2),
+                            Err(e) => {
+                                pending = Some((
+                                    *w2,
+                                    FailureCause::Disconnected(format!("send job: {e:#}")),
+                                ));
+                                break;
+                            }
+                        }
                     }
                 }
                 report.replan_secs.push(t_rec.elapsed().as_secs_f64());
@@ -878,57 +1084,264 @@ fn run_op(
                 }
             }
         }
-        // Kill every child before the scope joins its reader threads: the
-        // sockets close, every blocked `read_frame` returns EOF, and the
-        // scope can exit instead of deadlocking. On success the children
-        // are idle and die here.
-        kill_all(&mut children);
-        match failure {
-            Some(f) => Err(f),
-            None => Ok((
-                results.into_iter().map(|r| r.expect("counted done")).collect(),
-                live,
-                report,
-            )),
-        }
-    });
-    reap(&mut children);
-    let (results, live, report) = collected?;
 
-    // Assemble under the *final* partition — post-recovery it differs
-    // from the caller's.
-    let (fpart, fblocks, fplan): (&RowPartition, &[LocalBlocks], &CommPlan) = match &live {
-        None => (part, blocks, plan),
-        Some(l) => (&l.part, l.blocks.as_slice(), &l.plan),
-    };
-    let mut c_global = Dense::zeros(fpart.n, c_cols);
-    let mut all_vals = Vec::with_capacity(results.len());
-    let mut per_rank = Vec::with_capacity(results.len());
-    for (rank, (c_local, vals, stats)) in results.into_iter().enumerate() {
-        let (r0, r1) = fpart.range(rank);
-        if c_local.nrows != r1 - r0 || c_local.ncols != c_cols {
-            return Err(fail(
-                rank,
-                FailureCause::Protocol(format!(
-                    "C block shape {}x{}, expected {}x{c_cols}",
-                    c_local.nrows,
-                    c_local.ncols,
-                    r1 - r0
-                )),
-            ));
+        // Request teardown: the fleet stays alive, the route goes idle,
+        // and the next request's base epoch clears every epoch this one
+        // used. On failure, ABORT the in-flight epoch on the survivors so
+        // their job threads wind down instead of blocking on an exchange
+        // that will never complete; dead slots heal by re-admission at
+        // the next request.
+        self.epoch = epoch + 1;
+        if failure.is_some() {
+            let abort = wire::epoch_payload(epoch);
+            for w2 in (0..nranks).filter(|&w2| self.alive[w2]) {
+                let mut ws = writers[w2].lock().unwrap();
+                let _ = wire::write_frame(&mut *ws, kind::ABORT, &abort);
+            }
         }
-        c_global.data[r0 * c_cols..r1 * c_cols].copy_from_slice(&c_local.data);
-        all_vals.push(vals);
-        per_rank.push(stats);
+        self.route.lock().unwrap().active = false;
+        if let Some(f) = failure {
+            return Err(f);
+        }
+        let results: Vec<RankResult> =
+            results.into_iter().map(|r| r.expect("counted done")).collect();
+
+        // Assemble under the *final* partition — post-recovery it differs
+        // from the caller's.
+        let (fpart, fblocks, fplan): (&RowPartition, &[LocalBlocks], &CommPlan) = match &live {
+            None => (part, blocks, plan),
+            Some(l) => (&l.part, l.blocks.as_slice(), &l.plan),
+        };
+        let mut c_global = Dense::zeros(fpart.n, c_cols);
+        let mut all_vals = Vec::with_capacity(results.len());
+        let mut per_rank = Vec::with_capacity(results.len());
+        for (rank, (c_local, vals, stats)) in results.into_iter().enumerate() {
+            let (r0, r1) = fpart.range(rank);
+            if c_local.nrows != r1 - r0 || c_local.ncols != c_cols {
+                return Err(RankFailure {
+                    rank,
+                    cause: FailureCause::Protocol(format!(
+                        "C block shape {}x{}, expected {}x{c_cols}",
+                        c_local.nrows,
+                        c_local.ncols,
+                        r1 - r0
+                    )),
+                });
+            }
+            c_global.data[r0 * c_cols..r1 * c_cols].copy_from_slice(&c_local.data);
+            all_vals.push(vals);
+            per_rank.push(stats);
+        }
+        let e =
+            (op == KernelOp::Sddmm).then(|| assemble_sddmm(fpart, fblocks, fplan, &all_vals));
+        let report = (report.replans > 0).then(|| RecoveryReport {
+            recovered: true,
+            final_starts: fpart.starts.clone(),
+            ..report
+        });
+        let stats = ExecStats { per_rank, wall_secs: t0.elapsed().as_secs_f64() };
+        Ok((c_global, e, stats, report))
     }
-    let e = (op == KernelOp::Sddmm).then(|| assemble_sddmm(fpart, fblocks, fplan, &all_vals));
-    let report = (report.replans > 0).then(|| RecoveryReport {
-        recovered: true,
-        final_starts: fpart.starts.clone(),
-        ..report
-    });
-    let stats = ExecStats { per_rank, wall_secs: t0.elapsed().as_secs_f64() };
-    Ok((c_global, e, stats, report))
+}
+
+/// Spawn one rank process pointed at the pool's control port. The crash
+/// plan deliberately does *not* ride the environment anymore: fault
+/// injection is per-JOB (wire v4), so a pooled worker can be armed for
+/// one request and clean for the next without respawning.
+fn spawn_worker(exe: &PathBuf, port: u16, rank: usize) -> std::io::Result<Child> {
+    let mut cmd = Command::new(exe);
+    cmd.env(wire::ENV_PORT, port.to_string()).env(wire::ENV_RANK, rank.to_string());
+    cmd.spawn()
+}
+
+/// Accept + HELLO every rank in `expect` under one hard deadline, so a
+/// worker that dies before connecting (or never says hello) cannot hang
+/// the control plane. The listener stays nonblocking for the pool's whole
+/// lifetime. Handshake failures are not recoverable — [`FaultPolicy`]
+/// governs mid-step deaths, not a fleet (or a re-admission) that never
+/// formed.
+fn accept_hellos(
+    listener: &TcpListener,
+    expect: &mut BTreeSet<usize>,
+    timeout: Duration,
+) -> Result<Vec<(usize, TcpStream)>, RankFailure> {
+    let fail = |rank: usize, cause: FailureCause| RankFailure { rank, cause };
+    let mut got = Vec::new();
+    let deadline = Instant::now() + timeout;
+    while !expect.is_empty() {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false).ok();
+                stream.set_nodelay(true).ok();
+                stream.set_read_timeout(Some(timeout)).ok();
+                let hello = wire::read_frame(&mut (&stream)).and_then(|(k, payload)| {
+                    if k != kind::HELLO {
+                        anyhow::bail!("expected HELLO, got frame kind {k}");
+                    }
+                    wire::decode_hello(&payload)
+                });
+                match hello {
+                    Ok((v, rank)) if v != wire::WIRE_VERSION => {
+                        return Err(fail(
+                            rank,
+                            FailureCause::Protocol(format!(
+                                "worker wire version {v} != {}",
+                                wire::WIRE_VERSION
+                            )),
+                        ));
+                    }
+                    Ok((_, rank)) if !expect.contains(&rank) => {
+                        return Err(fail(
+                            0,
+                            FailureCause::Protocol(format!(
+                                "unexpected HELLO from rank {rank}"
+                            )),
+                        ));
+                    }
+                    Ok((_, rank)) => {
+                        stream.set_read_timeout(None).ok();
+                        expect.remove(&rank);
+                        got.push((rank, stream));
+                    }
+                    Err(e) => {
+                        return Err(fail(
+                            0,
+                            FailureCause::Protocol(format!("bad handshake: {e:#}")),
+                        ));
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() > deadline {
+                    let missing = expect.iter().next().copied().unwrap_or(0);
+                    return Err(fail(
+                        missing,
+                        FailureCause::Disconnected(format!(
+                            "worker never connected within {:.1}s",
+                            timeout.as_secs_f64()
+                        )),
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                return Err(fail(0, FailureCause::Spawn(format!("accept: {e}"))));
+            }
+        }
+    }
+    Ok(got)
+}
+
+/// Detached reader for one worker connection. Outlives individual
+/// requests; exits on socket EOF (worker death or pool teardown). EOF and
+/// terminal protocol failures are reported unconditionally — routine
+/// events are gated on an active request so the idle heartbeats workers
+/// keep sending between requests cannot grow the event queue.
+fn reader_loop(
+    slot: usize,
+    conn: u64,
+    stream: TcpStream,
+    route: Arc<Mutex<RouteState>>,
+    ev_tx: mpsc::Sender<Event>,
+) {
+    let mut rd = BufReader::new(stream);
+    loop {
+        let (k, payload) = match wire::read_frame(&mut rd) {
+            Ok(f) => f,
+            Err(e) => {
+                let _ = ev_tx.send(Event::Eof(slot, conn, format!("{e:#}")));
+                return;
+            }
+        };
+        match k {
+            kind::DATA => {
+                let (dst, epoch) = match wire::decode_data_header(&payload) {
+                    Ok(h) => h,
+                    Err(e) => {
+                        let _ = ev_tx.send(Event::Fail(
+                            slot,
+                            conn,
+                            FailureCause::Protocol(format!("bad DATA: {e:#}")),
+                        ));
+                        return;
+                    }
+                };
+                // Route by the *current* epoch's rank→slot map; frames
+                // from an aborted (or already-finished) epoch are dropped
+                // here, before they can reach a replanned job.
+                let target = {
+                    let rt = route.lock().unwrap();
+                    if !rt.active || epoch != rt.epoch {
+                        continue;
+                    }
+                    rt.worker_of_rank.get(dst).map(|&t| Arc::clone(&rt.writers[t]))
+                };
+                match target {
+                    Some(w) => {
+                        // Routed verbatim. A write failure means *dst*
+                        // died; dst's own reader reports that as EOF, so
+                        // it is not this stream's failure.
+                        let mut ws = w.lock().unwrap();
+                        let _ = wire::write_frame(&mut *ws, kind::DATA, &payload);
+                    }
+                    None => {
+                        let _ = ev_tx.send(Event::Fail(
+                            slot,
+                            conn,
+                            FailureCause::Protocol(format!("DATA for bad rank {dst}")),
+                        ));
+                        return;
+                    }
+                }
+            }
+            kind::DONE => match wire::decode_done(&payload) {
+                Ok((epoch, rank, c, vals, st)) => {
+                    if route.lock().unwrap().active {
+                        let _ = ev_tx.send(Event::Done(slot, conn, epoch, rank, c, vals, st));
+                    }
+                }
+                Err(e) => {
+                    let _ = ev_tx.send(Event::Fail(
+                        slot,
+                        conn,
+                        FailureCause::Protocol(format!("bad DONE: {e:#}")),
+                    ));
+                    return;
+                }
+            },
+            kind::BEAT => {
+                if route.lock().unwrap().active {
+                    let _ = ev_tx.send(Event::Beat(slot, conn));
+                }
+            }
+            kind::ERROR => match wire::decode_error(&payload) {
+                // Keep reading: a stale-epoch ERROR is an aborted job
+                // winding down, and this worker may still serve later
+                // epochs.
+                Ok((epoch, _, msg)) => {
+                    if route.lock().unwrap().active {
+                        let _ = ev_tx.send(Event::WorkerErr(slot, conn, epoch, msg));
+                    }
+                }
+                Err(e) => {
+                    let _ = ev_tx.send(Event::Fail(
+                        slot,
+                        conn,
+                        FailureCause::Protocol(format!("bad ERROR: {e:#}")),
+                    ));
+                    return;
+                }
+            },
+            k => {
+                let _ = ev_tx.send(Event::Fail(
+                    slot,
+                    conn,
+                    FailureCause::Protocol(format!("unexpected frame kind {k}")),
+                ));
+                return;
+            }
+        }
+    }
 }
 
 /// One rank's slice of a row-partitioned dense operand.
@@ -938,32 +1351,42 @@ fn slice_rows(d: &Dense, part: &RowPartition, rank: usize) -> Dense {
     Dense::from_vec(r1 - r0, n, d.data[r0 * n..r1 * n].to_vec())
 }
 
-fn kill_all(children: &mut [Child]) {
-    for c in children.iter_mut() {
+/// Teardown grace derived from the configured failure timeout (~10%,
+/// clamped): the 30 s default allows children 3 s to exit, a
+/// short-timeout test tears down in a few hundred ms, and a long-haul
+/// run never stalls shutdown more than 10 s.
+fn reap_grace(timeout: Duration) -> Duration {
+    (timeout / 10).clamp(Duration::from_millis(100), Duration::from_secs(10))
+}
+
+fn kill_all(children: &mut [Option<Child>]) {
+    for c in children.iter_mut().flatten() {
         let _ = c.kill();
     }
 }
 
-/// Reap with a short grace period, then force-kill: no zombies, bounded
+/// Reap with a bounded grace period, then force-kill: no zombies, bounded
 /// shutdown on every path.
-fn reap(children: &mut Vec<Child>) {
-    let deadline = Instant::now() + Duration::from_secs(2);
-    for c in children.iter_mut() {
-        loop {
-            match c.try_wait() {
-                Ok(Some(_)) => break,
-                Ok(None) if Instant::now() < deadline => {
-                    std::thread::sleep(Duration::from_millis(10))
-                }
-                _ => {
-                    let _ = c.kill();
-                    let _ = c.wait();
-                    break;
+fn reap(children: &mut [Option<Child>], grace: Duration) {
+    let deadline = Instant::now() + grace;
+    for slot in children.iter_mut() {
+        if let Some(c) = slot.as_mut() {
+            loop {
+                match c.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(10))
+                    }
+                    _ => {
+                        let _ = c.kill();
+                        let _ = c.wait();
+                        break;
+                    }
                 }
             }
         }
+        *slot = None;
     }
-    children.clear();
 }
 
 #[cfg(test)]
@@ -976,7 +1399,27 @@ mod tests {
         assert_eq!(o.timeout, Duration::from_secs(30));
         assert!(o.worker_exe.is_none());
         assert!(o.fault.is_none());
+        assert!(o.pool.is_none());
         assert_eq!(FaultPolicy::default(), FaultPolicy::Fail);
+    }
+
+    #[test]
+    fn fresh_pool_handle_reports_zero_stats() {
+        let h = PoolHandle::new();
+        assert_eq!(h.stats(), PoolStats::default());
+        // Clones observe the same pool slot.
+        let h2 = h.clone();
+        assert_eq!(h2.stats(), h.stats());
+        assert!(format!("{h:?}").contains("spawns 0"));
+    }
+
+    #[test]
+    fn reap_grace_tracks_the_configured_timeout() {
+        // ~10% of the timeout, clamped to [100ms, 10s].
+        assert_eq!(reap_grace(Duration::from_secs(30)), Duration::from_secs(3));
+        assert_eq!(reap_grace(Duration::from_secs(10)), Duration::from_secs(1));
+        assert_eq!(reap_grace(Duration::from_millis(200)), Duration::from_millis(100));
+        assert_eq!(reap_grace(Duration::from_secs(600)), Duration::from_secs(10));
     }
 
     #[test]

@@ -14,7 +14,7 @@ use super::{Server, ServeConfig, ServeError, ServeRequest, Ticket};
 use crate::dense::Dense;
 use crate::metrics::{latency_stats, Table};
 use crate::sparse::{gen, Csr};
-use crate::spmm::ExecRequest;
+use crate::spmm::{Backend, ExecRequest};
 use crate::topology::Topology;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, bail, Context, Result};
@@ -80,6 +80,10 @@ pub struct LevelRow {
     pub hit_rate: f64,
     /// Saturated-and-retried submissions (back-pressure events).
     pub retries: u64,
+    /// Proc-pool worker spawns at this level (0 on the thread backend).
+    pub pool_spawns: u64,
+    /// Proc requests served over already-live pool connections.
+    pub pool_reuses: u64,
 }
 
 fn serve_config(p: &BenchPreset, workers: usize) -> ServeConfig {
@@ -141,8 +145,9 @@ pub fn verify_batching(p: &BenchPreset) -> Result<()> {
 
 /// Run one load level: C closed-loop clients, each issuing R synchronous
 /// SpMM requests round-robin over the registered graphs, retrying briefly
-/// on back-pressure.
-fn run_level(p: &BenchPreset, graphs: &[Csr], clients: usize) -> LevelRow {
+/// on back-pressure. With `proc` set, every request runs on the proc
+/// backend over the server's shared worker pool.
+fn run_level(p: &BenchPreset, graphs: &[Csr], clients: usize, proc: bool) -> LevelRow {
     let mut srv = Server::new(serve_config(p, p.workers.max(1)));
     for (i, a) in graphs.iter().enumerate() {
         srv.register_graph(&format!("g{i}"), a.clone());
@@ -161,7 +166,11 @@ fn run_level(p: &BenchPreset, graphs: &[Csr], clients: usize) -> LevelRow {
                 for r in 0..p.reqs_per_client {
                     let gi = (c + r) % b_pool.len();
                     loop {
-                        let req = ServeRequest::spmm(&format!("g{gi}"), b_pool[gi].clone());
+                        let mut req =
+                            ServeRequest::spmm(&format!("g{gi}"), b_pool[gi].clone());
+                        if proc {
+                            req = req.backend(Backend::proc());
+                        }
                         match srv.submit_wait(req) {
                             Ok(_) => break,
                             Err(ServeError::Saturated { .. }) => {
@@ -188,6 +197,8 @@ fn run_level(p: &BenchPreset, graphs: &[Csr], clients: usize) -> LevelRow {
         mean_batch: stats.mean_batch(),
         hit_rate: stats.hit_rate(),
         retries: retries.load(Ordering::Relaxed),
+        pool_spawns: stats.pool_spawns,
+        pool_reuses: stats.pool_reuses,
     }
 }
 
@@ -206,7 +217,8 @@ fn json_report(p: &BenchPreset, rows: &[LevelRow]) -> String {
             j,
             "    {{\"clients\": {}, \"requests\": {}, \"throughput_rps\": {:.3}, \
              \"p50_ms\": {:.4}, \"p99_ms\": {:.4}, \"mean_batch\": {:.3}, \
-             \"hit_rate\": {:.4}, \"retries\": {}}}",
+             \"hit_rate\": {:.4}, \"retries\": {}, \"pool_spawns\": {}, \
+             \"pool_reuses\": {}}}",
             r.clients,
             r.requests,
             r.throughput_rps,
@@ -214,7 +226,9 @@ fn json_report(p: &BenchPreset, rows: &[LevelRow]) -> String {
             r.p99_ms,
             r.mean_batch,
             r.hit_rate,
-            r.retries
+            r.retries,
+            r.pool_spawns,
+            r.pool_reuses
         );
         j.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
     }
@@ -224,16 +238,19 @@ fn json_report(p: &BenchPreset, rows: &[LevelRow]) -> String {
 
 /// Run the full bench — gate, sweep, table, JSON — returning the printable
 /// report. `out` is the JSON path (conventionally
-/// `bench_results/serve_bench.json`).
-pub fn run(p: &BenchPreset, out: &Path) -> Result<String> {
+/// `bench_results/serve_bench.json`). With `proc` set, the sweep runs on
+/// the proc backend over the server's persistent worker pools, and the
+/// run fails unless pool reuse actually engaged — the CI gate against
+/// silently regressing back to respawn-per-request.
+pub fn run(p: &BenchPreset, out: &Path, proc: bool) -> Result<String> {
     verify_batching(p)?;
     let graphs = bench_graphs(p);
     let mut table = Table::new(&[
-        "clients", "req/s", "p50 ms", "p99 ms", "mean batch", "hit rate", "retries",
+        "clients", "req/s", "p50 ms", "p99 ms", "mean batch", "hit rate", "retries", "pool s/r",
     ]);
     let mut rows = Vec::new();
     for &clients in p.client_counts {
-        let row = run_level(p, &graphs, clients);
+        let row = run_level(p, &graphs, clients, proc);
         table.row(vec![
             row.clients.to_string(),
             format!("{:.1}", row.throughput_rps),
@@ -242,8 +259,16 @@ pub fn run(p: &BenchPreset, out: &Path) -> Result<String> {
             format!("{:.2}", row.mean_batch),
             format!("{:.2}", row.hit_rate),
             row.retries.to_string(),
+            format!("{}/{}", row.pool_spawns, row.pool_reuses),
         ]);
         rows.push(row);
+    }
+    if proc {
+        let reuses: u64 = rows.iter().map(|r| r.pool_reuses).sum();
+        let spawns: u64 = rows.iter().map(|r| r.pool_spawns).sum();
+        if reuses == 0 {
+            bail!("proc bench: pool reuse never engaged ({spawns} spawns, 0 reuses)");
+        }
     }
     if let Some(dir) = out.parent() {
         std::fs::create_dir_all(dir)
@@ -252,7 +277,12 @@ pub fn run(p: &BenchPreset, out: &Path) -> Result<String> {
     std::fs::write(out, json_report(p, &rows))
         .with_context(|| format!("write {}", out.display()))?;
     let mut report = String::new();
-    let _ = writeln!(report, "serve bench (preset {}): batching gate OK (bitwise)", p.name);
+    let _ = writeln!(
+        report,
+        "serve bench (preset {}, backend {}): batching gate OK (bitwise)",
+        p.name,
+        if proc { "proc" } else { "thread" }
+    );
     report.push_str(&table.render());
     let _ = writeln!(report, "wrote {}", out.display());
     Ok(report)
@@ -288,10 +318,13 @@ mod tests {
             mean_batch: 1.2,
             hit_rate: 0.9,
             retries: 0,
+            pool_spawns: 4,
+            pool_reuses: 12,
         }];
         let j = json_report(&p, &rows);
         assert!(j.contains("\"preset\": \"ci\""));
         assert!(j.contains("\"clients\": 2"));
+        assert!(j.contains("\"pool_reuses\": 12"));
         assert!(j.trim_end().ends_with('}'));
     }
 }

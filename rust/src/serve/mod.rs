@@ -33,6 +33,7 @@ use crate::exec::session::SpmmSession;
 use crate::exec::{ExecOpts, ExecStats};
 use crate::metrics::{latency_stats, LatencyStats};
 use crate::plan::cache::{csr_fingerprint, PlanCache};
+use crate::runtime::multiproc::PoolHandle;
 use crate::sparse::Csr;
 use crate::spmm::{Backend, ExecError, ExecRequest, ExecResult, FaultPolicy, PlanSpec, RecoveryReport};
 use crate::topology::Topology;
@@ -250,6 +251,14 @@ pub struct ServeStats {
     pub recoveries: u64,
     /// One sample per replan round: failure detected → jobs re-shipped.
     pub recovery_secs: Vec<f64>,
+    /// Worker processes spawned by the server's proc-backend pools
+    /// (cold starts plus re-admissions), summed over every pool.
+    pub pool_spawns: u64,
+    /// Proc requests served over already-live pool connections — nonzero
+    /// means the respawn-per-request overhead is actually amortized.
+    pub pool_reuses: u64,
+    /// Workers respawned and re-admitted after a mid-request loss.
+    pub pool_readmissions: u64,
 }
 
 impl ServeStats {
@@ -311,6 +320,11 @@ struct Inner {
     registry: Mutex<SessionRegistry>,
     cache: Mutex<PlanCache>,
     stats: Mutex<ServeStats>,
+    /// One persistent proc worker pool per (topology, nranks): every
+    /// proc-backend tenant on the same fleet shape shares warm workers
+    /// instead of respawning rank processes per request. Fleets live
+    /// until the server itself drops.
+    pools: Mutex<HashMap<(String, usize), PoolHandle>>,
 }
 
 /// The multi-tenant server. Shared-reference methods (`register_graph`,
@@ -337,6 +351,7 @@ impl Server {
             registry: Mutex::new(SessionRegistry::new(cfg.registry_cap)),
             cache: Mutex::new(cache),
             stats: Mutex::new(ServeStats::default()),
+            pools: Mutex::new(HashMap::new()),
             cfg,
         });
         let workers = (0..inner.cfg.workers)
@@ -414,10 +429,18 @@ impl Server {
     /// registry's hit/miss/eviction counters merged in.
     pub fn stats(&self) -> ServeStats {
         let mut s = self.inner.stats.lock().unwrap().clone();
-        let reg = self.inner.registry.lock().unwrap();
-        s.registry_hits = reg.hits;
-        s.registry_misses = reg.misses;
-        s.registry_evictions = reg.evictions;
+        {
+            let reg = self.inner.registry.lock().unwrap();
+            s.registry_hits = reg.hits;
+            s.registry_misses = reg.misses;
+            s.registry_evictions = reg.evictions;
+        }
+        for h in self.inner.pools.lock().unwrap().values() {
+            let p = h.stats();
+            s.pool_spawns += p.spawns;
+            s.pool_reuses += p.reuses;
+            s.pool_readmissions += p.readmissions;
+        }
         s
     }
 
@@ -618,8 +641,9 @@ fn process(inner: &Inner, batch: Vec<Pending>) {
 
 /// Execute one request on its backend: thread requests go through the warm
 /// session; proc requests go through the session's frozen plan via
-/// [`crate::spmm::DistSpmm::execute`] (worker processes re-derive their
-/// own rank state, so there is nothing session-side to reuse).
+/// [`crate::spmm::DistSpmm::execute`], on the server's shared worker pool
+/// for this fleet shape (injected unless the request brought its own), so
+/// rank processes persist across requests instead of respawning.
 fn run_one(
     inner: &Inner,
     sess: &Arc<Mutex<SpmmSession>>,
@@ -636,9 +660,16 @@ fn run_one(
     };
     match &req.backend {
         Backend::Thread => sess.lock().unwrap().execute(&er),
-        Backend::Proc(_) => {
+        Backend::Proc(popts) => {
+            let mut popts = popts.clone();
+            if popts.pool.is_none() {
+                let topo = &inner.cfg.spec.topo;
+                let key = (topo.name.clone(), topo.nranks);
+                popts.pool =
+                    Some(inner.pools.lock().unwrap().entry(key).or_default().clone());
+            }
             let er = er
-                .backend(req.backend.clone())
+                .backend(Backend::Proc(popts))
                 .opts(inner.cfg.opts)
                 .fault_policy(inner.cfg.fault_policy);
             sess.lock().unwrap().dist().execute(&er)

@@ -8,6 +8,13 @@
 //! least-recently-used session is dropped, and a later request for it
 //! rebuilds through the shared [`crate::plan::cache::PlanCache`], so even
 //! an evicted tenant only re-pays program derivation, not planning.
+//!
+//! Sessions are per-plan state only. Proc-backend rank *processes* are a
+//! separate resource pooled one level up: the server keeps one
+//! [`crate::runtime::multiproc::PoolHandle`] per (topology, nranks) and
+//! injects it into every proc request, so evicting a session never tears
+//! down a warm worker fleet — the next request on any session with the
+//! same shape reuses the live connections.
 
 use crate::exec::kernel::KernelOp;
 use crate::exec::session::SpmmSession;

@@ -160,6 +160,7 @@ fn proc_shims_match_proc_backend_requests_bitwise() {
         timeout: Duration::from_secs(60),
         worker_exe: Some(env!("CARGO_BIN_EXE_shiro").into()),
         fault: None,
+        pool: None,
     };
     let (a, b, x, y) = fixtures();
     let d = PlanSpec::new(Topology::tsubame4(2)).plan(&a);

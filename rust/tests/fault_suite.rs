@@ -22,7 +22,7 @@ use shiro::dense::Dense;
 use shiro::hierarchy;
 use shiro::partition::{split_1d, Partitioner, RowPartition};
 use shiro::runtime::multiproc::{
-    CrashPhase, FailureCause, FaultPlan, FaultPolicy, ProcOpts, RecoveryReport,
+    CrashPhase, FailureCause, FaultPlan, FaultPolicy, PoolHandle, ProcOpts, RecoveryReport,
 };
 use shiro::serve::{Server, ServeConfig, ServeRequest};
 use shiro::sparse::Csr;
@@ -34,6 +34,7 @@ fn popts(fault: Option<FaultPlan>) -> ProcOpts {
         timeout: Duration::from_secs(60),
         worker_exe: Some(env!("CARGO_BIN_EXE_shiro").into()),
         fault,
+        pool: None,
     }
 }
 
@@ -217,6 +218,55 @@ fn fused_recovery_matches_thread_and_cold_oracles() {
     let (c_cold, _) =
         cold.execute(&ExecRequest::fused(&x, &y)).expect("thread backend").into_dense();
     assert_eq!(c.data, c_cold.data, "recovered fused bits differ from cold run");
+}
+
+#[test]
+fn killed_worker_is_readmitted_between_requests() {
+    // Recovery composes with the persistent pool: a worker lost mid-request
+    // is quarantined and the request replans over the survivors; at the
+    // *next* request on the same handle the pool respawns the dead slot,
+    // re-admits it through a fresh HELLO, and serves the full original
+    // rank count again — bitwise, with exactly one extra spawn.
+    let a = int_matrix(128, 1500, 42);
+    let b = int_b(128, 4);
+    let d = plan(&a, Strategy::Joint(Solver::Koenig), 4, true);
+    let (c_thread, _) =
+        d.execute(&ExecRequest::spmm(&b)).expect("thread backend").into_dense();
+
+    let pool = PoolHandle::new();
+    let pooled = |fault: Option<FaultPlan>| {
+        Backend::Proc(ProcOpts { pool: Some(pool.clone()), ..popts(fault) })
+    };
+
+    // Request 1: rank 1 dies post-decode; replan over the 3 survivors.
+    let r = d
+        .execute(
+            &ExecRequest::spmm(&b)
+                .backend(pooled(Some(FaultPlan::post_decode(1))))
+                .fault_policy(FaultPolicy::Recover { max_retries: 1 }),
+        )
+        .expect("recovery over survivors failed");
+    let rec = r.recovery.clone().expect("no recovery report");
+    assert_eq!(rec.lost_ranks, vec![1], "wrong loss attribution");
+    assert_eq!(rec.final_starts.len(), 4, "expected 3 surviving ranks");
+    let (c1, _) = r.into_dense();
+    assert_eq!(c1.data, c_thread.data, "recovered request: bits differ from thread oracle");
+    let s = pool.stats();
+    assert_eq!(s.spawns, 4, "the kill itself must not trigger a mid-request respawn");
+    assert_eq!(s.readmissions, 0, "re-admission happens between requests, not during");
+
+    // Request 2: clean. The pool heals to 4 live workers and the request
+    // plans at the original rank count as if nothing happened.
+    let r2 = d
+        .execute(&ExecRequest::spmm(&b).backend(pooled(None)))
+        .expect("post-readmission request failed");
+    assert!(r2.recovery.is_none(), "healed fleet must not report recovery");
+    let (c2, _) = r2.into_dense();
+    assert_eq!(c2.data, c_thread.data, "healed request: bits differ from thread oracle");
+    let s = pool.stats();
+    assert_eq!(s.spawns, 5, "exactly one respawn for the killed rank");
+    assert_eq!(s.readmissions, 1, "one dead slot re-admitted");
+    assert_eq!(s.reuses, 1, "survivors' live connections are reused");
 }
 
 /// Assert `err` is the structured kill-report `multiproc_suite.rs` pins:

@@ -18,7 +18,7 @@ use shiro::cover::Solver;
 use shiro::dense::Dense;
 use shiro::exec::ExecOpts;
 use shiro::partition::Partitioner;
-use shiro::runtime::multiproc::{FailureCause, FaultPlan, ProcOpts};
+use shiro::runtime::multiproc::{FailureCause, FaultPlan, PoolHandle, ProcOpts};
 use shiro::sparse::Csr;
 use shiro::spmm::{Backend, DistSpmm, ExecError, ExecRequest, PlanSpec};
 use shiro::topology::Topology;
@@ -28,6 +28,7 @@ fn popts() -> ProcOpts {
         timeout: Duration::from_secs(60),
         worker_exe: Some(env!("CARGO_BIN_EXE_shiro").into()),
         fault: None,
+        pool: None,
     }
 }
 
@@ -164,6 +165,117 @@ fn sddmm_proc_matches_thread_bitwise() {
             s_proc.measured_volume(),
             "{ranks} ranks hier={hier}: measured volume differs across backends"
         );
+    }
+}
+
+fn pooled_backend(pool: &PoolHandle) -> Backend {
+    Backend::Proc(ProcOpts { pool: Some(pool.clone()), ..popts() })
+}
+
+#[test]
+fn warm_pool_matches_cold_bitwise_and_never_respawns() {
+    // The tentpole contract: request 1 spawns the fleet, every later
+    // request reuses the live connections (zero new spawns), and warm
+    // results stay bitwise identical to both the cold pooled run and the
+    // spawn-per-request (ephemeral pool) path.
+    let a = int_matrix(128, 1500, 42);
+    let b = Dense::from_fn(128, 8, |i, j| ((i * 7 + j * 5) % 9) as f32 - 4.0);
+    let d = plan(&a, Strategy::Joint(Solver::Koenig), 4, true);
+    let (c_ephemeral, _) = d
+        .execute(&ExecRequest::spmm(&b).backend(proc_backend()))
+        .expect("ephemeral proc backend")
+        .into_dense();
+
+    let pool = PoolHandle::new();
+    let (c_cold, _) = d
+        .execute(&ExecRequest::spmm(&b).backend(pooled_backend(&pool)))
+        .expect("cold pooled run")
+        .into_dense();
+    assert_eq!(c_cold.data, c_ephemeral.data, "pooled C bits differ from ephemeral");
+    let s = pool.stats();
+    assert_eq!(s.spawns, 4, "cold request must spawn exactly nranks workers");
+    assert_eq!(s.reuses, 0);
+
+    const WARM: usize = 3;
+    for i in 0..WARM {
+        let (c_warm, _) = d
+            .execute(&ExecRequest::spmm(&b).backend(pooled_backend(&pool)))
+            .unwrap_or_else(|f| panic!("warm request {i} failed: {f}"))
+            .into_dense();
+        assert_eq!(c_warm.data, c_cold.data, "warm request {i}: C bits differ from cold");
+    }
+    let s = pool.stats();
+    assert_eq!(s.spawns, 4, "warm requests must not spawn: fleet is persistent");
+    assert_eq!(s.reuses, WARM as u64, "every warm request is one reuse");
+    assert_eq!(s.readmissions, 0, "nothing died, nothing to re-admit");
+}
+
+#[test]
+fn warm_pool_survives_op_and_plan_changes() {
+    // Delta-vs-full shipping is correctness-invariant: changing the kernel
+    // op and then the frozen plan on one warm fleet forces fingerprint
+    // misses (full JOB reships), while repeats hit the worker-side plan
+    // cache — all on the same live connections, all bitwise vs thread.
+    let a = int_matrix(128, 1400, 77);
+    let b = Dense::from_fn(128, 4, |i, j| ((i * 3 + j * 13) % 11) as f32 - 5.0);
+    let (x, y) = int_xy(128, 4);
+    let pool = PoolHandle::new();
+
+    let d = plan(&a, Strategy::Joint(Solver::Koenig), 4, true);
+    for _round in 0..2 {
+        let (c_thread, _) =
+            d.execute(&ExecRequest::spmm(&b)).expect("thread backend").into_dense();
+        let (c_proc, _) = d
+            .execute(&ExecRequest::spmm(&b).backend(pooled_backend(&pool)))
+            .expect("pooled spmm")
+            .into_dense();
+        assert_eq!(c_proc.data, c_thread.data, "pooled spmm bits differ");
+
+        let (e_thread, _) =
+            d.execute(&ExecRequest::sddmm(&x, &y)).expect("thread backend").into_sparse();
+        let (e_proc, _) = d
+            .execute(&ExecRequest::sddmm(&x, &y).backend(pooled_backend(&pool)))
+            .expect("pooled sddmm")
+            .into_sparse();
+        assert_eq!(e_proc, e_thread, "pooled sddmm bits differ");
+    }
+
+    // A different frozen plan (new strategy) on the same warm fleet.
+    let d2 = plan(&a, Strategy::Column, 4, true);
+    let (c_thread, _) = d2.execute(&ExecRequest::spmm(&b)).expect("thread backend").into_dense();
+    let (c_proc, _) = d2
+        .execute(&ExecRequest::spmm(&b).backend(pooled_backend(&pool)))
+        .expect("pooled spmm on new plan")
+        .into_dense();
+    assert_eq!(c_proc.data, c_thread.data, "pooled spmm on a new plan: bits differ");
+
+    let s = pool.stats();
+    assert_eq!(s.spawns, 4, "op/plan changes must never respawn the fleet");
+    assert_eq!(s.reuses, 5, "five warm requests after the cold one");
+}
+
+#[test]
+fn pool_rebuilds_when_the_rank_count_changes() {
+    // A handle carries one fleet shape; asking for a different nranks
+    // tears the old fleet down and spawns the new shape (counted as
+    // fresh spawns), still bitwise against the thread oracle.
+    let a = int_matrix(160, 1800, 7);
+    let b = Dense::from_fn(160, 4, |i, j| ((i + 2 * j) % 7) as f32 - 3.0);
+    let pool = PoolHandle::new();
+    for ranks in [2usize, 4] {
+        let d = plan(&a, Strategy::Joint(Solver::Koenig), ranks, ranks > 2);
+        let (c_thread, _) =
+            d.execute(&ExecRequest::spmm(&b)).expect("thread backend").into_dense();
+        let (c_proc, _) = d
+            .execute(&ExecRequest::spmm(&b).backend(pooled_backend(&pool)))
+            .unwrap_or_else(|f| panic!("{ranks} ranks: pooled run failed: {f}"))
+            .into_dense();
+        assert_eq!(c_proc.data, c_thread.data, "{ranks} ranks: bits differ");
+        // A rebuild replaces the fleet (and its counters): each shape's
+        // first request reads as a fresh cold start on the handle.
+        let s = pool.stats();
+        assert_eq!(s.spawns, ranks as u64, "{ranks} ranks: fleet shape mismatch");
+        assert_eq!(s.reuses, 0, "{ranks} ranks: cold start after rebuild");
     }
 }
 

@@ -234,6 +234,7 @@ fn proc_backend_requests_match_thread_through_the_server() {
         timeout: Duration::from_secs(60),
         worker_exe: Some(env!("CARGO_BIN_EXE_shiro").into()),
         fault: None,
+        pool: None,
     };
     let tt = srv.try_submit(ServeRequest::spmm("g", b.clone())).unwrap();
     let tp = srv
@@ -250,4 +251,40 @@ fn proc_backend_requests_match_thread_through_the_server() {
     // Sessions are keyed by backend too — thread and proc requests on the
     // same graph build separate registry entries.
     assert_eq!((s.registry_hits, s.registry_misses), (0, 2));
+}
+
+#[test]
+fn server_pools_proc_workers_across_requests() {
+    // Proc requests that arrive without a pool get the server's shared
+    // per-(topology, nranks) pool injected: the fleet spawns once, every
+    // later request reuses the live connections, and the aggregate
+    // counters surface in ServeStats — while staying bitwise against the
+    // thread backend.
+    let a = int_matrix(N, 1000, 13);
+    let mut srv = Server::new(cfg(2));
+    srv.register_graph("g", a.clone());
+    let d = direct(&a, 2);
+    let popts = || ProcOpts {
+        timeout: Duration::from_secs(60),
+        worker_exe: Some(env!("CARGO_BIN_EXE_shiro").into()),
+        fault: None,
+        pool: None, // the server injects its shared pool
+    };
+    for round in 0..3usize {
+        let b = int_b(3, round);
+        let t = srv
+            .try_submit(ServeRequest::spmm("g", b.clone()).backend(Backend::Proc(popts())))
+            .unwrap();
+        srv.drain_all();
+        let got = t.wait().unwrap().into_dense();
+        let (want, _) =
+            d.execute(&ExecRequest::spmm(&b)).expect("thread-backend SpMM").into_dense();
+        assert_eq!(got.data, want.data, "round {round}: pooled proc bits differ");
+    }
+    let s = srv.stats();
+    assert_eq!(s.pool_spawns, 2, "one spawn per rank across all requests");
+    assert_eq!(s.pool_reuses, 2, "rounds after the first reuse the warm fleet");
+    assert_eq!(s.pool_readmissions, 0);
+    let s = srv.shutdown();
+    assert_eq!(s.pool_spawns, 2, "pool counters stay readable at shutdown");
 }
