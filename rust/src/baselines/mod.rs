@@ -216,6 +216,7 @@ fn spa_job(a: &Csr, n_dense: usize, topo: &Topology) -> SimJob {
         blocks,
         plan,
         sched: None,
+        rep: None,
         topo: topo.clone(),
         prep_secs: 0.0,
     };

@@ -38,6 +38,11 @@ pub struct RunConfig {
     /// over the survivors, tolerating up to N lost workers (bare
     /// "recover" = 1).
     pub fault_policy: String,
+    /// 1.5D replication factor (see [`crate::spmm::Replicate`], DESIGN.md
+    /// §13): "1" is the flat engine (the default), a larger integer must
+    /// divide the rank count, and "auto" searches the candidate factors
+    /// with the α-β cost model.
+    pub replicate: String,
     /// `shiro serve` worker threads.
     pub serve_workers: usize,
     /// `shiro serve` admission queue bound (back-pressure beyond this).
@@ -62,6 +67,7 @@ impl Default for RunConfig {
             overlap: true,
             backend: "thread".into(),
             fault_policy: "fail".into(),
+            replicate: "1".into(),
             serve_workers: 2,
             serve_queue_cap: 64,
             serve_registry_cap: 4,
@@ -91,6 +97,16 @@ fn parse_backend(v: &str) -> String {
             std::process::exit(2);
         }
     }
+}
+
+/// Parse a `--replicate` value: auto|c (a positive integer).
+fn parse_replicate(v: &str) -> String {
+    let valid = v == "auto" || v.parse::<usize>().is_ok_and(|c| c > 0);
+    if !valid {
+        eprintln!("--replicate expects auto or a positive integer factor, got {v:?}");
+        std::process::exit(2);
+    }
+    v.to_string()
 }
 
 /// Parse a `--fault-policy` value: fail|recover|recover:N.
@@ -143,6 +159,9 @@ impl RunConfig {
         if let Some(fp) = args.get("fault-policy") {
             cfg.fault_policy = parse_fault_policy(fp);
         }
+        if let Some(r) = args.get("replicate") {
+            cfg.replicate = parse_replicate(r);
+        }
         cfg.serve_workers = args.get_usize("serve-workers", cfg.serve_workers);
         cfg.serve_queue_cap = args.get_usize("serve-queue", cfg.serve_queue_cap);
         cfg.serve_registry_cap = args.get_usize("serve-registry", cfg.serve_registry_cap);
@@ -176,6 +195,18 @@ impl RunConfig {
                 Some(s) => parse_backend(s),
                 None => {
                     eprintln!("run.backend expects \"thread\" or \"proc\"");
+                    std::process::exit(2);
+                }
+            };
+        }
+        // `run.replicate` accepts both a TOML integer and the CLI's
+        // "auto"/"c" string form.
+        if let Some(v) = file.get("run.replicate") {
+            self.replicate = match (v.as_int(), v.as_str()) {
+                (Some(c), _) => parse_replicate(&c.to_string()),
+                (None, Some(s)) => parse_replicate(s),
+                (None, None) => {
+                    eprintln!("run.replicate expects an integer or \"auto\"");
                     std::process::exit(2);
                 }
             };
@@ -222,6 +253,22 @@ impl RunConfig {
                         "unknown fault policy {:?} (fail | recover | recover:N)",
                         self.fault_policy
                     );
+                    std::process::exit(2);
+                }
+            },
+        }
+    }
+
+    /// Resolve the configured replication factor (validated at parse
+    /// time; "auto" defers to the planner's cost-model search).
+    pub fn replicate(&self) -> crate::spmm::Replicate {
+        use crate::spmm::Replicate;
+        match self.replicate.as_str() {
+            "auto" => Replicate::Auto,
+            c => match c.parse::<usize>() {
+                Ok(c) if c > 0 => Replicate::Factor(c),
+                _ => {
+                    eprintln!("unknown replication factor {:?} (auto | c)", self.replicate);
                     std::process::exit(2);
                 }
             },
@@ -283,6 +330,7 @@ impl RunConfig {
             .strategy(self.strategy())
             .partitioner(self.partitioner())
             .n_dense(self.n_dense)
+            .replicate(self.replicate())
     }
 
     /// The [`crate::serve::ServeConfig`] implied by this configuration.
@@ -422,6 +470,43 @@ mod tests {
             "fail",
         ]));
         assert_eq!(cfg.fault_policy(), FaultPolicy::Fail);
+    }
+
+    #[test]
+    fn replicate_flag_and_file() {
+        use crate::spmm::Replicate;
+        let cfg = RunConfig::from_args(&args(&["run"]));
+        assert_eq!(cfg.replicate, "1", "flat engine is the default");
+        assert_eq!(cfg.replicate(), Replicate::Factor(1));
+        assert_eq!(cfg.plan_spec().replicate, Replicate::Factor(1));
+        let cfg = RunConfig::from_args(&args(&["run", "--replicate", "2"]));
+        assert_eq!(cfg.replicate(), Replicate::Factor(2));
+        assert_eq!(cfg.plan_spec().replicate, Replicate::Factor(2));
+        let cfg = RunConfig::from_args(&args(&["run", "--replicate", "auto"]));
+        assert_eq!(cfg.replicate(), Replicate::Auto);
+
+        let dir = std::env::temp_dir().join("shiro_cfg_replicate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("run.toml");
+        // Both the idiomatic TOML integer and the string form parse.
+        for (contents, want) in [
+            ("[run]\nreplicate = 4\n", Replicate::Factor(4)),
+            ("[run]\nreplicate = \"auto\"\n", Replicate::Auto),
+        ] {
+            std::fs::write(&p, contents).unwrap();
+            let cfg = RunConfig::from_args(&args(&["run", "--config", p.to_str().unwrap()]));
+            assert_eq!(cfg.replicate(), want, "{contents:?}");
+        }
+        // CLI wins over the file.
+        std::fs::write(&p, "[run]\nreplicate = 4\n").unwrap();
+        let cfg = RunConfig::from_args(&args(&[
+            "run",
+            "--config",
+            p.to_str().unwrap(),
+            "--replicate",
+            "1",
+        ]));
+        assert_eq!(cfg.replicate(), Replicate::Factor(1));
     }
 
     #[test]

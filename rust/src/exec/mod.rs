@@ -32,6 +32,7 @@
 
 pub mod kernel;
 pub mod pipeline;
+pub(crate) mod replicate;
 pub mod session;
 pub(crate) mod wire;
 
@@ -91,6 +92,14 @@ pub(crate) enum Msg {
         rows: Vec<u32>,
         data: Dense,
     },
+    /// Replica member → group home: the member accumulator's touched rows,
+    /// the reduce-scatter leg of the 1.5D decomposition ([`replicate`]).
+    /// `rows` are group-local C rows.
+    CRed {
+        from: usize,
+        rows: Vec<u32>,
+        data: Dense,
+    },
 }
 
 impl Msg {
@@ -100,6 +109,7 @@ impl Msg {
             Msg::X { rows, data, .. } => (rows, data),
             Msg::C { rows, data, .. } => (rows, data),
             Msg::CAgg { rows, data, .. } => (rows, data),
+            Msg::CRed { rows, data, .. } => (rows, data),
         };
         (rows.len() * 4 + data.size_bytes()) as u64
     }
@@ -109,7 +119,8 @@ impl Msg {
             Msg::B { from, .. }
             | Msg::X { from, .. }
             | Msg::C { from, .. }
-            | Msg::CAgg { from, .. } => *from,
+            | Msg::CAgg { from, .. }
+            | Msg::CRed { from, .. } => *from,
         }
     }
 }
@@ -1675,6 +1686,9 @@ fn on_msg(
             if agg.offer(from, rows, data, &mut ctx.pool) {
                 complete_agg(ctx, aggs, final_dst);
             }
+        }
+        Msg::CRed { .. } => {
+            unreachable!("reduce-scatter messages only occur in replicated runs")
         }
     }
 }

@@ -200,10 +200,12 @@ impl PoolRef<'_> {
 
 /// Canonical contribution key: `DIAG_KEY` sorts first (the diagonal block
 /// is every element's base value), then column-based (B) contributions by
-/// origin, then row-based (C) contributions by sending peer.
+/// origin, then row-based (C) contributions by sending peer, then — in
+/// replicated (1.5D) runs — member-accumulator reductions by member rank.
 pub(crate) const DIAG_KEY: u64 = 0;
 pub(crate) const KIND_B: u8 = 0;
 pub(crate) const KIND_C: u8 = 1;
+pub(crate) const KIND_RED: u8 = 2;
 
 pub(crate) fn ckey(kind: u8, peer: usize) -> u64 {
     ((kind as u64 + 1) << 32) | peer as u64
@@ -437,6 +439,7 @@ mod tests {
     fn diag_key_sorts_before_contributions() {
         assert!(DIAG_KEY < ckey(KIND_B, 0));
         assert!(ckey(KIND_B, usize::MAX as u32 as usize) < ckey(KIND_C, 0));
+        assert!(ckey(KIND_C, usize::MAX as u32 as usize) < ckey(KIND_RED, 0));
         assert!(ckey(KIND_B, 3) < ckey(KIND_B, 4));
     }
 

@@ -1,0 +1,526 @@
+//! 1.5D replicated executor (ROADMAP item 3, SpComm3D's replication
+//! axis): `nranks` physical ranks form `nranks/c` replication groups of
+//! `c` consecutive ranks each. The group's **home** (rank `g·c`) owns the
+//! group's A blocks, B rows, and final C rows; the other members hold
+//! replicas of the group A block and serve a round-robin share of the
+//! group's inter-group flows, so a group's inbound traffic lands on `c`
+//! NICs instead of one.
+//!
+//! Traffic shape per dealt group-pair flow `(g, h)`:
+//!
+//! - **Sparsity-aware allgather**: `h`'s home ships only the cover-named B
+//!   rows (`pair.b_rows`) of the *group plan* — a [`CommPlan`] over the
+//!   coarsened `nranks/c`-way partition — to the member of `g` dealt the
+//!   pair, which multiplies them against the replicated `a_col_compact`.
+//! - **Row-based leg**: `h`'s home computes `a_row_compact · B_home` and
+//!   ships exactly the partial `c_rows` to the same member.
+//! - **Sparsity-aware reduce-scatter**: each member folds its dealt flows
+//!   into a private group-height accumulator in canonical order
+//!   ([`OrderedFold`]), then ships only the accumulator's `touched` rows
+//!   home ([`Msg::CRed`]); the home folds member reductions — its own
+//!   accumulator included — after the diagonal block, again in canonical
+//!   order, so results are bit-stable across thread interleavings.
+//!
+//! The deal-out and reduce wiring live in
+//! [`crate::hierarchy::RepSchedule`]; this module only executes it. On
+//! integer-exact inputs the result is bitwise-identical to the serial
+//! reference and to every other replication factor — the property suite's
+//! equivalence gate for `--replicate`.
+
+use super::kernel::SpmmKernel;
+use super::pipeline::{
+    ckey, gated, BufferPool, ComputeGate, ExecOpts, OrderedFold, PoolRef, DIAG_KEY, KIND_B,
+    KIND_C, KIND_RED,
+};
+use super::{
+    apply_contribution, col_contribution_is_compact, Contribution, Ctx, ExecStats, Msg, Outbox,
+    RankStats,
+};
+use crate::comm::CommPlan;
+use crate::dense::Dense;
+use crate::hierarchy::{phase, RepAssign, RepSchedule};
+use crate::partition::{LocalBlocks, RowPartition};
+use crate::topology::Topology;
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+/// Execute distributed SpMM under a 1.5D replicated decomposition:
+/// `gpart`/`gplan`/`gblocks` describe the *group-level* problem (one part
+/// per replication group), `rsched` deals its inter-group flows out to the
+/// `rsched.map.nranks` physical ranks. Returns the assembled global C and
+/// per-physical-rank stats (tier accounting against `topo`, which spans
+/// the physical ranks).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_replicated(
+    gpart: &RowPartition,
+    gplan: &CommPlan,
+    gblocks: &[LocalBlocks],
+    rsched: &RepSchedule,
+    topo: &Topology,
+    b: &Dense,
+    kernel: &(dyn SpmmKernel + Sync),
+    opts: &ExecOpts,
+) -> (Dense, ExecStats) {
+    let map = rsched.map;
+    assert_eq!(gpart.n, b.nrows);
+    assert_eq!(gplan.nranks, map.ngroups(), "group plan / replica map mismatch");
+    assert_eq!(gpart.nparts, map.ngroups(), "group partition / replica map mismatch");
+    assert_eq!(gblocks.len(), map.ngroups());
+    assert_eq!(rsched.assigns.len(), map.nranks);
+    assert_eq!(
+        topo.nranks, map.nranks,
+        "replica map spans {} ranks but topology has {}",
+        map.nranks, topo.nranks
+    );
+    let nranks = map.nranks;
+    let n_dense = b.ncols;
+
+    let mut senders = Vec::with_capacity(nranks);
+    let mut inboxes = Vec::with_capacity(nranks);
+    for _ in 0..nranks {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        inboxes.push(Some(rx));
+    }
+    let gate = (opts.workers > 0).then(|| ComputeGate::new(opts.workers));
+
+    let t0 = Instant::now();
+    let mut results: Vec<Option<(Dense, RankStats)>> = (0..nranks).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (rank, inbox) in inboxes.iter_mut().enumerate() {
+            let senders = &senders;
+            let gate = gate.as_ref();
+            let inbox = inbox.take().unwrap();
+            let g = map.group_of(rank);
+            let (r0, r1) = gpart.range(g);
+            let is_home = map.member_of(rank) == 0;
+            // Only homes hold B (and C) rows; replica members operate
+            // purely on fetched payloads and their private accumulator.
+            let b_local = if is_home {
+                Dense::from_vec(r1 - r0, n_dense, b.data[r0 * n_dense..r1 * n_dense].to_vec())
+            } else {
+                Dense::zeros(0, n_dense)
+            };
+            handles.push(scope.spawn(move || {
+                let mut ctx = Ctx {
+                    rank,
+                    part: gpart,
+                    plan: gplan,
+                    sched: None,
+                    xsched: None,
+                    topo,
+                    kernel,
+                    outbox: Outbox::Local(senders),
+                    inbox,
+                    stats: RankStats {
+                        sent_to: vec![0; nranks],
+                        sent_b_to: vec![0; nranks],
+                        ..RankStats::default()
+                    },
+                    opts: *opts,
+                    gate,
+                    t0,
+                    pool: PoolRef::Own(BufferPool::new()),
+                };
+                let mut c_local = Dense::zeros(if is_home { r1 - r0 } else { 0 }, n_dense);
+                rank_main_rep(&mut ctx, rsched, &gblocks[g], &b_local, &mut c_local);
+                (rank, c_local, ctx.stats)
+            }));
+        }
+        for h in handles {
+            let (rank, c, stats) = h.join().expect("rank thread panicked");
+            results[rank] = Some((c, stats));
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut c_global = Dense::zeros(gpart.n, n_dense);
+    let mut per_rank = Vec::with_capacity(nranks);
+    for (rank, slot) in results.into_iter().enumerate() {
+        let (c_local, stats) = slot.unwrap();
+        if map.member_of(rank) == 0 {
+            let (r0, r1) = gpart.range(map.group_of(rank));
+            assert_eq!(c_local.nrows, r1 - r0);
+            c_global.data[r0 * n_dense..r1 * n_dense].copy_from_slice(&c_local.data);
+        }
+        per_rank.push(stats);
+    }
+    (c_global, ExecStats { per_rank, wall_secs: wall })
+}
+
+/// One physical rank's replicated program. Homes additionally run the
+/// diagonal block, ship the group's outgoing payloads (both legs are pure
+/// functions of `b_local`, so every send precedes every receive — no
+/// cyclic waits), and fold member reductions; members only consume dealt
+/// flows and reduce-scatter the result home.
+pub(crate) fn rank_main_rep(
+    ctx: &mut Ctx,
+    rsched: &RepSchedule,
+    blocks: &LocalBlocks,
+    b_local: &Dense,
+    c_local: &mut Dense,
+) {
+    let plan = ctx.plan;
+    let kernel = ctx.kernel;
+    let gate = ctx.gate;
+    let rank = ctx.rank;
+    let map = &rsched.map;
+    let g = map.group_of(rank);
+    let asg = &rsched.assigns[rank];
+    let is_home = asg.member == 0;
+    let n_dense = b_local.ncols;
+    let glen = ctx.part.len(g);
+    debug_assert_eq!(blocks.diag.nrows, glen);
+    debug_assert_eq!(c_local.nrows, if is_home { glen } else { 0 });
+
+    // Inner fold: the flows dealt to this member, keyed by source group,
+    // applied to a private group-height accumulator in canonical order.
+    let inner_keys: Vec<u64> = asg
+        .col_fetch
+        .iter()
+        .map(|&h| ckey(KIND_B, h))
+        .chain(asg.row_recv.iter().map(|&h| ckey(KIND_C, h)))
+        .collect();
+    let mut acc = (!inner_keys.is_empty()).then(|| ctx.pool.acquire(glen, n_dense));
+    let mut inner: OrderedFold<Contribution> = OrderedFold::new(inner_keys);
+    let mut shipped = false;
+
+    // Top fold (home only): the diagonal base, then each contributing
+    // member's reduction by ascending rank — the home's own accumulator
+    // (smallest rank in the group) folds first, locally, without a
+    // message.
+    let mut top_keys = Vec::new();
+    if is_home {
+        top_keys.push(DIAG_KEY);
+        for m in map.members(g) {
+            if !rsched.assigns[m].touched.is_empty() {
+                top_keys.push(ckey(KIND_RED, m));
+            }
+        }
+    }
+    let mut top: OrderedFold<Contribution> = OrderedFold::new(top_keys);
+
+    let expect = asg.col_fetch.len() + asg.row_recv.len() + asg.red_from.len();
+
+    // Sparsity-aware allgather sends: only the cover-named B rows cross
+    // the inter-group link. (`b_rows` is populated for full-block pairs
+    // too — it spans the whole source block there.)
+    for &(dst, dg) in &asg.b_sends {
+        let pair = &plan.pairs[dg][g];
+        let t = ctx.now();
+        let mut data = ctx.pool.acquire(pair.b_rows.len(), n_dense);
+        b_local.gather_rows_into(&pair.b_rows, &mut data);
+        ctx.send(dst, Msg::B { from: rank, origin: g, rows: pair.b_rows.clone(), data });
+        ctx.span(phase::S1_INTER_B, t);
+    }
+    // Row-based leg: partials this home computes for other groups' dealt
+    // members.
+    for &(dst, dg) in &asg.c_sends {
+        let pair = &plan.pairs[dg][g];
+        let t = ctx.now();
+        let mut data = ctx.pool.acquire(pair.a_row_compact.nrows, n_dense);
+        let dt = gated(gate, || {
+            let t0 = Instant::now();
+            kernel.spmm_acc(&pair.a_row_compact, b_local, &mut data);
+            t0.elapsed().as_secs_f64()
+        });
+        ctx.stats.compute_secs += dt;
+        ctx.span(phase::S1_INTRA_C, t);
+        let t = ctx.now();
+        ctx.send(dst, Msg::C { from: rank, rows: pair.c_rows.clone(), data });
+        ctx.span(phase::S2_INTER_C, t);
+    }
+
+    // Diagonal tiles (home only), interleaved with inbox drains when
+    // overlapping.
+    let mut got = 0usize;
+    let tile = if kernel.prefers_tiles() { ctx.opts.tile() } else { usize::MAX };
+    let mut tiles = Vec::new();
+    if is_home {
+        let mut r0 = 0;
+        while r0 < glen {
+            let r1 = r0.saturating_add(tile).min(glen);
+            tiles.push((r0, r1));
+            r0 = r1;
+        }
+    }
+    if is_home && tiles.is_empty() {
+        top.offer(DIAG_KEY, Contribution::DiagDone, |c| {
+            apply_contribution(c_local, &mut ctx.pool, c)
+        });
+    }
+    let mut diag_left = tiles.len();
+    for &(r0, r1) in &tiles {
+        if ctx.opts.overlap {
+            while let Ok(msg) = ctx.inbox.try_recv() {
+                got += 1;
+                on_msg_rep(ctx, rsched, &mut inner, &mut acc, &mut top, c_local, msg, true);
+                finish_inner(ctx, asg, &inner, &mut acc, &mut top, c_local, &mut shipped);
+            }
+        }
+        let t = ctx.now();
+        let dt = gated(gate, || {
+            let t0 = Instant::now();
+            if r0 == 0 && r1 == glen {
+                kernel.spmm_acc(&blocks.diag, b_local, c_local);
+            } else {
+                kernel.spmm_rows(&blocks.diag, b_local, c_local, r0, r1);
+            }
+            t0.elapsed().as_secs_f64()
+        });
+        ctx.stats.compute_secs += dt;
+        ctx.span(phase::COMPUTE_LOCAL, t);
+        diag_left -= 1;
+        if diag_left == 0 {
+            top.offer(DIAG_KEY, Contribution::DiagDone, |c| {
+                apply_contribution(c_local, &mut ctx.pool, c)
+            });
+        }
+    }
+
+    // A member dealt nothing (or a home with no inbound flows) completes
+    // its inner fold without receiving.
+    finish_inner(ctx, asg, &inner, &mut acc, &mut top, c_local, &mut shipped);
+
+    // Idle drain: block for whatever is still in flight.
+    while got < expect {
+        let t_idle = ctx.now();
+        let msg = ctx.inbox.recv().expect("inbox closed — peer rank panicked");
+        ctx.stats.idle_secs += ctx.now() - t_idle;
+        ctx.span(phase::IDLE, t_idle);
+        got += 1;
+        on_msg_rep(ctx, rsched, &mut inner, &mut acc, &mut top, c_local, msg, false);
+        finish_inner(ctx, asg, &inner, &mut acc, &mut top, c_local, &mut shipped);
+    }
+    debug_assert!(inner.is_done(), "rank {rank}: inner fold incomplete");
+    debug_assert!(top.is_done(), "rank {rank}: reduce fold incomplete");
+    debug_assert!(shipped, "rank {rank}: accumulator never reduced");
+}
+
+/// Handle one arrived message: account it, then fold it into the member
+/// accumulator (B/C payloads of dealt flows) or the home's C block (member
+/// reductions) in canonical order.
+#[allow(clippy::too_many_arguments)]
+fn on_msg_rep(
+    ctx: &mut Ctx,
+    rsched: &RepSchedule,
+    inner: &mut OrderedFold<Contribution>,
+    acc: &mut Option<Dense>,
+    top: &mut OrderedFold<Contribution>,
+    c_local: &mut Dense,
+    msg: Msg,
+    overlapped: bool,
+) {
+    ctx.recv_account(&msg, overlapped);
+    let plan = ctx.plan;
+    let kernel = ctx.kernel;
+    let gate = ctx.gate;
+    let g = rsched.map.group_of(ctx.rank);
+    let glen = ctx.part.len(g);
+    match msg {
+        Msg::B { origin: h, rows, data, .. } => {
+            // Column-shaped payload of dealt flow (g, h): multiply the
+            // packed rows against the replicated compact operand.
+            let pair = &plan.pairs[g][h];
+            let contrib = if pair.a_col_compact.nnz() == 0 {
+                ctx.pool.release(data);
+                Contribution::Empty
+            } else {
+                debug_assert_eq!(rows.len(), pair.a_col_compact.ncols);
+                let t = ctx.now();
+                let mut partial = ctx.pool.acquire(glen, data.ncols);
+                let dt = gated(gate, || {
+                    let t0 = Instant::now();
+                    kernel.spmm_acc(&pair.a_col_compact, &data, &mut partial);
+                    t0.elapsed().as_secs_f64()
+                });
+                ctx.stats.compute_secs += dt;
+                ctx.span(phase::COMPUTE_REMOTE, t);
+                ctx.pool.release(data);
+                let touched = pair.a_col_compact.nonempty_rows();
+                if col_contribution_is_compact(touched.len(), glen) {
+                    let mut compact = ctx.pool.acquire(touched.len(), partial.ncols);
+                    partial.gather_rows_into(&touched, &mut compact);
+                    ctx.pool.release(partial);
+                    Contribution::AddRows(touched, compact)
+                } else {
+                    Contribution::AddFull(partial)
+                }
+            };
+            let acc = acc.as_mut().expect("B arrival without an accumulator");
+            inner.offer(ckey(KIND_B, h), contrib, |c| {
+                apply_contribution(acc, &mut ctx.pool, c)
+            });
+        }
+        Msg::C { from, rows, data } => {
+            // Row-shaped payload: partial C rows computed at the source
+            // group's home, keyed by that group.
+            let h = rsched.map.group_of(from);
+            let acc = acc.as_mut().expect("C arrival without an accumulator");
+            inner.offer(ckey(KIND_C, h), Contribution::AddRows(rows, data), |c| {
+                apply_contribution(acc, &mut ctx.pool, c)
+            });
+        }
+        Msg::CRed { from, rows, data } => {
+            top.offer(ckey(KIND_RED, from), Contribution::AddRows(rows, data), |c| {
+                apply_contribution(c_local, &mut ctx.pool, c)
+            });
+        }
+        Msg::X { .. } | Msg::CAgg { .. } => {
+            unreachable!("replicated SpMM exchanges no X/CAgg messages")
+        }
+    }
+}
+
+/// Once the inner fold completes, reduce-scatter the accumulator's touched
+/// rows: members ship them home ([`Msg::CRed`]); the home offers its own
+/// accumulator into the top fold locally.
+fn finish_inner(
+    ctx: &mut Ctx,
+    asg: &RepAssign,
+    inner: &OrderedFold<Contribution>,
+    acc: &mut Option<Dense>,
+    top: &mut OrderedFold<Contribution>,
+    c_local: &mut Dense,
+    shipped: &mut bool,
+) {
+    if *shipped || !inner.is_done() {
+        return;
+    }
+    *shipped = true;
+    let Some(a) = acc.take() else { return };
+    if asg.touched.is_empty() {
+        ctx.pool.release(a);
+        return;
+    }
+    let t = ctx.now();
+    let mut compact = ctx.pool.acquire(asg.touched.len(), a.ncols);
+    a.gather_rows_into(&asg.touched, &mut compact);
+    ctx.pool.release(a);
+    match asg.red_to {
+        Some(home) => {
+            ctx.send(home, Msg::CRed { from: ctx.rank, rows: asg.touched.clone(), data: compact });
+        }
+        None => {
+            let rank = ctx.rank;
+            top.offer(
+                ckey(KIND_RED, rank),
+                Contribution::AddRows(asg.touched.clone(), compact),
+                |c| apply_contribution(c_local, &mut ctx.pool, c),
+            );
+        }
+    }
+    ctx.span(phase::RED_INTRA, t);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{self, Strategy};
+    use crate::cover::Solver;
+    use crate::exec::kernel::NativeKernel;
+    use crate::hierarchy::build_replicated;
+    use crate::partition::split_1d;
+    use crate::sparse::gen;
+    use crate::topology::ReplicaMap;
+    use crate::util::rng::Rng;
+
+    /// Integer-exact inputs: small-integer values keep every intermediate
+    /// sum exactly representable in f32, so any fold order yields the same
+    /// bits and replicated results must equal the serial reference
+    /// *bitwise*.
+    fn int_inputs(n: usize, nnz: usize, seed: u64) -> (crate::sparse::Csr, Dense) {
+        let mut a = gen::rmat(n, nnz, (0.55, 0.2, 0.19), false, seed);
+        for (i, v) in a.data.iter_mut().enumerate() {
+            *v = 1.0 + (i % 3) as f32;
+        }
+        let mut rng = Rng::new(seed ^ 0x5eed);
+        let data: Vec<f32> = (0..n * 16).map(|_| (rng.next_u64() % 5) as f32).collect();
+        (a, Dense::from_vec(n, 16, data))
+    }
+
+    fn run_factor(
+        a: &crate::sparse::Csr,
+        b: &Dense,
+        nranks: usize,
+        c: usize,
+        strategy: Strategy,
+        opts: &ExecOpts,
+    ) -> (Dense, ExecStats, u64, u64) {
+        let part = crate::partition::RowPartition::balanced(a.nrows, nranks);
+        let gpart = part.coarsen(c);
+        let gblocks = split_1d(a, &gpart);
+        let gplan = comm::plan(&gblocks, &gpart, strategy, None);
+        let map = ReplicaMap::new(nranks, c);
+        let rsched = build_replicated(&gplan, &map);
+        rsched.validate(&gplan).expect("schedule must validate");
+        // A topology whose physical groups *are* the replication groups
+        // makes the executor's tier accounting line up exactly with the
+        // schedule's modeled wire bytes.
+        let mut topo = Topology::tsubame4(nranks);
+        topo.group_size = c;
+        let (got, stats) =
+            run_replicated(&gpart, &gplan, &gblocks, &rsched, &topo, b, &NativeKernel, opts);
+        let n_dense = b.ncols;
+        (got, stats, rsched.inter_wire_bytes(&gplan, n_dense), rsched.intra_wire_bytes(n_dense))
+    }
+
+    #[test]
+    fn replicated_bitwise_matches_serial_across_factors() {
+        let (a, b) = int_inputs(128, 1300, 7);
+        let want = a.spmm(&b);
+        for strategy in [
+            Strategy::Block,
+            Strategy::Column,
+            Strategy::Row,
+            Strategy::Joint(Solver::Koenig),
+        ] {
+            for c in [1, 2, 4, 8] {
+                let (got, _, _, _) =
+                    run_factor(&a, &b, 8, c, strategy, &ExecOpts::default());
+                assert_eq!(got.data, want.data, "{strategy:?} c={c} not bitwise-exact");
+            }
+        }
+    }
+
+    #[test]
+    fn replicated_modes_and_worker_caps_agree() {
+        let (a, b) = int_inputs(96, 900, 11);
+        let want = a.spmm(&b);
+        for opts in [
+            ExecOpts::default(),
+            ExecOpts::sequential(),
+            ExecOpts { workers: 2, ..ExecOpts::default() },
+            ExecOpts { tile_rows: 8, ..ExecOpts::default() },
+        ] {
+            let (got, _, _, _) =
+                run_factor(&a, &b, 8, 4, Strategy::Joint(Solver::Koenig), &opts);
+            assert_eq!(got.data, want.data, "{opts:?} diverged");
+        }
+    }
+
+    #[test]
+    fn measured_traffic_matches_schedule_model_exactly() {
+        let (a, b) = int_inputs(160, 2200, 3);
+        for c in [1, 2, 4] {
+            let (_, stats, inter_model, intra_model) =
+                run_factor(&a, &b, 8, c, Strategy::Joint(Solver::Koenig), &ExecOpts::default());
+            assert_eq!(
+                stats.total_inter_bytes(),
+                inter_model,
+                "c={c}: measured inter-group bytes drifted from the model"
+            );
+            assert_eq!(
+                stats.total_intra_bytes(),
+                intra_model,
+                "c={c}: measured reduce-scatter bytes drifted from the model"
+            );
+            assert_eq!(stats.total_inter_bytes(), stats.total_inter_recv_bytes());
+            assert_eq!(stats.total_intra_bytes(), stats.total_intra_recv_bytes());
+            if c == 1 {
+                assert_eq!(intra_model, 0, "c=1 has no reduce-scatter leg");
+            }
+        }
+    }
+}

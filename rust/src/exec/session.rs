@@ -98,6 +98,11 @@ impl SpmmSession {
     /// mismatched kernel at execute time retargets the programs and the
     /// retargeting cost shows up in that call's amortization record.
     pub fn new(dist: DistSpmm, opts: ExecOpts, prefers_tiles: bool) -> SpmmSession {
+        assert!(
+            dist.rep.is_none(),
+            "replicated (c>1) plans are not session-capable; \
+             execute them directly via DistSpmm::execute or replan at c=1"
+        );
         let t0 = Instant::now();
         let programs = build_all(&dist, &opts, prefers_tiles);
         let nranks = dist.part.nparts;

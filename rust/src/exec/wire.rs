@@ -24,11 +24,11 @@ use super::{
 };
 use crate::comm::{CommPlan, PairPlan};
 use crate::dense::Dense;
-use crate::hierarchy::{self, phase, BFlow, CFlow, HierSchedule};
+use crate::hierarchy::{self, phase, BFlow, CFlow, HierSchedule, RepAssign, RepSchedule};
 use crate::partition::{LocalBlocks, RowPartition};
 use crate::plan::cache::{decode_strategy, encode_strategy};
 use crate::runtime::multiproc::CrashPhase;
-use crate::topology::Topology;
+use crate::topology::{ReplicaMap, Topology};
 use crate::util::bin::{
     r_csr, r_dense, r_f64, r_str, r_u32, r_u32s, r_u64, r_u64s, r_u8, w_csr, w_dense, w_f64,
     w_str, w_u32, w_u32s, w_u64, w_u64s, w_u8,
@@ -45,16 +45,21 @@ use std::time::{Duration, Instant};
 /// layout change: parent and workers are always the same binary, so a
 /// mismatch means a stale `--worker-exe` override, not rolling upgrade.
 pub(crate) const WIRE_MAGIC: &[u8; 8] = b"SHIROWIR";
-/// v4: the multi-*job* pool protocol (DESIGN.md §10/§12). Every JOB frame
-/// carries a fixed `generation | epoch | mode | crash | fingerprint`
-/// header so one live worker serves many requests: `mode` distinguishes a
-/// full job blob from a delta (operands only, against the plan body the
-/// worker cached under its fingerprint), and deterministic fault
-/// injection rides the per-JOB crash byte instead of a spawn-time env
-/// var. v3 epoch-tagged JOB/DATA/DONE/ERROR and added ABORT — the
-/// crash-recovery protocol. v2 added the op-gated SDDMM edge-value DONE
-/// payload.
-pub(crate) const WIRE_VERSION: u32 = 4;
+/// v5: the job blob carries an optional 1.5D replication schedule
+/// ([`RepSchedule`], DESIGN.md §13) — for replicated jobs the partition /
+/// plan / blocks describe the *group-level* problem while `nranks` stays
+/// physical, the shipped program is an unused placeholder, and workers
+/// run `rank_main_rep` instead of `rank_main`; the partial-C
+/// reduce-scatter rides DATA frames as `Msg::CRed`. v4 was the
+/// multi-*job* pool protocol (DESIGN.md §10/§12): every JOB frame carries
+/// a fixed `generation | epoch | mode | crash | fingerprint` header so
+/// one live worker serves many requests — `mode` distinguishes a full job
+/// blob from a delta (operands only, against the plan body the worker
+/// cached under its fingerprint), and deterministic fault injection rides
+/// the per-JOB crash byte instead of a spawn-time env var. v3
+/// epoch-tagged JOB/DATA/DONE/ERROR and added ABORT — the crash-recovery
+/// protocol. v2 added the op-gated SDDMM edge-value DONE payload.
+pub(crate) const WIRE_VERSION: u32 = 5;
 
 /// Hard ceiling on one frame (1 GiB): no legitimate payload approaches
 /// this; a larger claim means a corrupt or hostile length field.
@@ -336,6 +341,12 @@ fn encode_msg(out: &mut Vec<u8>, msg: &Msg) -> Result<()> {
             w_u32s(out, rows)?;
             w_dense(out, data)?;
         }
+        Msg::CRed { from, rows, data } => {
+            w_u8(out, 4)?;
+            w_u64(out, *from as u64)?;
+            w_u32s(out, rows)?;
+            w_dense(out, data)?;
+        }
     }
     Ok(())
 }
@@ -359,6 +370,7 @@ fn decode_msg<R: Read>(r: &mut R, max: usize) -> Result<Msg> {
             let final_dst = r_u64(r)? as usize;
             Msg::CAgg { from, final_dst, rows: r_u32s(r, max)?, data: r_dense(r, max)? }
         }
+        4 => Msg::CRed { from, rows: r_u32s(r, max)?, data: r_dense(r, max)? },
         t => bail!("unknown message tag {t}"),
     })
 }
@@ -369,7 +381,7 @@ fn decode_msg<R: Read>(r: &mut R, max: usize) -> Result<Msg> {
 /// the table index. Unknown labels are an encode-time error, so adding a
 /// phase without extending this table fails loudly in tests, not silently
 /// on a worker.
-const PHASES: [&str; 10] = [
+const PHASES: [&str; 11] = [
     crate::sim::FLAT_STAGE,
     phase::S1_INTER_B,
     phase::S1_INTRA_C,
@@ -380,6 +392,7 @@ const PHASES: [&str; 10] = [
     phase::IDLE,
     phase::S1_FETCH_X,
     phase::S2_INTRA_X,
+    phase::RED_INTRA,
 ];
 
 fn phase_tag(name: &str) -> Result<u8> {
@@ -760,6 +773,96 @@ fn decode_sched(r: &mut &[u8], max: usize) -> Result<HierSchedule> {
     Ok(HierSchedule { nranks, b_flows, c_flows, direct_b, direct_c })
 }
 
+fn encode_rank_pairs(out: &mut Vec<u8>, ps: &[(usize, usize)]) -> Result<()> {
+    w_u64(out, ps.len() as u64)?;
+    for &(a, b) in ps {
+        w_u64(out, a as u64)?;
+        w_u64(out, b as u64)?;
+    }
+    Ok(())
+}
+
+fn decode_rank_pairs(r: &mut &[u8], max: usize) -> Result<Vec<(usize, usize)>> {
+    let n = r_u64(r)? as usize;
+    if n > max {
+        bail!("corrupt replicated schedule: {n} sends exceed available bytes");
+    }
+    let mut ps = bounded_vec::<(usize, usize)>(n, r.len());
+    for _ in 0..n {
+        let a = r_u64(r)? as usize;
+        let b = r_u64(r)? as usize;
+        ps.push((a, b));
+    }
+    Ok(ps)
+}
+
+/// Wire form of the 1.5D replication schedule (v5): the replica map as two
+/// words, then one [`RepAssign`] per physical rank in rank order.
+fn encode_rep(out: &mut Vec<u8>, rs: &RepSchedule) -> Result<()> {
+    w_u64(out, rs.map.nranks as u64)?;
+    w_u64(out, rs.map.c as u64)?;
+    w_u64(out, rs.assigns.len() as u64)?;
+    for a in &rs.assigns {
+        w_u64(out, a.group as u64)?;
+        w_u64(out, a.member as u64)?;
+        w_usizes(out, &a.col_fetch)?;
+        w_usizes(out, &a.row_recv)?;
+        w_u32s(out, &a.touched)?;
+        encode_rank_pairs(out, &a.b_sends)?;
+        encode_rank_pairs(out, &a.c_sends)?;
+        w_usizes(out, &a.red_from)?;
+        match a.red_to {
+            None => w_u8(out, 0)?,
+            Some(home) => {
+                w_u8(out, 1)?;
+                w_u64(out, home as u64)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn decode_rep(r: &mut &[u8], max: usize) -> Result<RepSchedule> {
+    let nranks = r_u64(r)? as usize;
+    let c = r_u64(r)? as usize;
+    if nranks == 0 || c == 0 || nranks % c != 0 || nranks > max {
+        bail!("corrupt replica map: {nranks} ranks with factor {c}");
+    }
+    let map = ReplicaMap::new(nranks, c);
+    let n = r_u64(r)? as usize;
+    if n != nranks {
+        bail!("corrupt replicated schedule: {n} assigns for {nranks} ranks");
+    }
+    let mut assigns = bounded_vec::<RepAssign>(n, r.len());
+    for _ in 0..n {
+        let group = r_u64(r)? as usize;
+        let member = r_u64(r)? as usize;
+        let col_fetch = r_usizes(r, max)?;
+        let row_recv = r_usizes(r, max)?;
+        let touched = r_u32s(r, max)?;
+        let b_sends = decode_rank_pairs(r, max)?;
+        let c_sends = decode_rank_pairs(r, max)?;
+        let red_from = r_usizes(r, max)?;
+        let red_to = match r_u8(r)? {
+            0 => None,
+            1 => Some(r_u64(r)? as usize),
+            t => bail!("bad red_to option tag {t}"),
+        };
+        assigns.push(RepAssign {
+            group,
+            member,
+            col_fetch,
+            row_recv,
+            touched,
+            b_sends,
+            c_sends,
+            red_from,
+            red_to,
+        });
+    }
+    Ok(RepSchedule { map, assigns })
+}
+
 // ----------------------------------------------------------- job codec ----
 
 /// The request-invariant part of a worker's assignment: everything a
@@ -768,11 +871,18 @@ fn decode_sched(r: &mut &[u8], max: usize) -> Result<HierSchedule> {
 /// Shared via `Arc` between the worker's cache slot and the in-flight
 /// job.
 struct JobBody {
+    /// Physical rank count: for a replicated job this is `rep.map.nranks`
+    /// while `part`/`plan`/`blocks` describe the group-level problem.
     nranks: usize,
     part: RowPartition,
     topo: Topology,
     plan: CommPlan,
     sched: Option<HierSchedule>,
+    /// 1.5D replication schedule (v5). When present the worker runs
+    /// `rank_main_rep` and the shipped [`Program`] is an unused
+    /// placeholder — the replicated executor derives its steps from this
+    /// schedule directly.
+    rep: Option<RepSchedule>,
     blocks: LocalBlocks,
 }
 
@@ -787,11 +897,34 @@ struct Job {
     x_local: Option<Dense>,
 }
 
+/// Placeholder program for replicated jobs: `rank_main_rep` takes its
+/// step list from the [`RepSchedule`], never from a [`Program`], and
+/// `build_program` cannot even be called there (the physical rank indexes
+/// past the group-level plan). Shipping an empty one keeps the blob
+/// layout uniform across flat and replicated jobs.
+fn empty_program(op: KernelOp) -> Program {
+    Program {
+        op,
+        b_posts: Vec::new(),
+        x_posts: Vec::new(),
+        items: Vec::new(),
+        expect_msgs: 0,
+        fold_keys: Vec::new(),
+        agg_flows: Vec::new(),
+        rep_b: Default::default(),
+        rep_x: Default::default(),
+        row_route: Default::default(),
+    }
+}
+
 /// Serialize rank `rank`'s job. The program is derived here with the
 /// *same* `build_program` call the thread executor makes (NativeKernel
 /// prefers tiles), so both backends run literally the same step list.
 /// `xsched` must be [`hierarchy::sddmm_fetch`] of `sched` exactly as in
 /// [`super::run_kernel_with`] — present iff `sched` is and `op` needs X.
+/// For a replicated job (`rep` present) `part`/`plan`/`blocks` are the
+/// group-level problem, the blob's `nranks` is the physical count, and
+/// the program is the unused [`empty_program`] placeholder.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn encode_job(
     rank: usize,
@@ -802,13 +935,18 @@ pub(crate) fn encode_job(
     plan: &CommPlan,
     sched: Option<&HierSchedule>,
     xsched: Option<&HierSchedule>,
+    rep: Option<&RepSchedule>,
     blocks: &LocalBlocks,
     b_local: &Dense,
     x_local: Option<&Dense>,
 ) -> Result<Vec<u8>> {
-    let prog = super::build_program(rank, part, plan, sched, xsched, opts, true, op);
+    let nranks = rep.map_or(plan.nranks, |rs| rs.map.nranks);
+    let prog = match rep {
+        Some(_) => empty_program(op),
+        None => super::build_program(rank, part, plan, sched, xsched, opts, true, op),
+    };
     encode_job_parts(
-        rank, plan.nranks, op, opts, part, topo, plan, sched, &prog, blocks, b_local, x_local,
+        rank, nranks, op, opts, part, topo, plan, sched, rep, &prog, blocks, b_local, x_local,
     )
 }
 
@@ -822,6 +960,7 @@ fn encode_job_parts(
     topo: &Topology,
     plan: &CommPlan,
     sched: Option<&HierSchedule>,
+    rep: Option<&RepSchedule>,
     prog: &Program,
     blocks: &LocalBlocks,
     b_local: &Dense,
@@ -844,6 +983,13 @@ fn encode_job_parts(
         Some(s) => {
             w_u8(&mut out, 1)?;
             encode_sched(&mut out, s)?;
+        }
+    }
+    match rep {
+        None => w_u8(&mut out, 0)?,
+        Some(rs) => {
+            w_u8(&mut out, 1)?;
+            encode_rep(&mut out, rs)?;
         }
     }
     encode_program(&mut out, prog)?;
@@ -899,6 +1045,11 @@ fn decode_job(buf: &[u8]) -> Result<Job> {
         1 => Some(decode_sched(r, max)?),
         t => bail!("bad schedule option tag {t}"),
     };
+    let rep = match r_u8(r)? {
+        0 => None,
+        1 => Some(decode_rep(r, max)?),
+        t => bail!("bad replication option tag {t}"),
+    };
     let prog = decode_program(r, max)?;
     let blocks_rank = r_u64(r)? as usize;
     let diag = r_csr(r, max)?;
@@ -917,14 +1068,42 @@ fn decode_job(buf: &[u8]) -> Result<Job> {
         1 => Some(r_dense(r, max)?),
         t => bail!("bad X option tag {t}"),
     };
-    if rank >= nranks || part.nparts != nranks || plan.nranks != nranks || blocks_rank != rank {
-        bail!("inconsistent job: rank {rank}, nranks {nranks}, part {}", part.nparts);
+    match &rep {
+        None => {
+            if rank >= nranks
+                || part.nparts != nranks
+                || plan.nranks != nranks
+                || blocks_rank != rank
+            {
+                bail!("inconsistent job: rank {rank}, nranks {nranks}, part {}", part.nparts);
+            }
+        }
+        Some(rs) => {
+            // Replicated job: the partition / plan / blocks are
+            // group-level, the rank and nranks physical.
+            if op != KernelOp::Spmm {
+                bail!("replicated jobs are SpMM-only (got {op:?})");
+            }
+            if rank >= nranks
+                || nranks != rs.map.nranks
+                || part.nparts != rs.map.ngroups()
+                || plan.nranks != rs.map.ngroups()
+                || blocks_rank != rs.map.group_of(rank)
+            {
+                bail!(
+                    "inconsistent replicated job: rank {rank}, nranks {nranks}, \
+                     part {}, c {}",
+                    part.nparts,
+                    rs.map.c
+                );
+            }
+        }
     }
     Ok(Job {
         rank,
         op,
         opts,
-        body: Arc::new(JobBody { nranks, part, topo, plan, sched, blocks }),
+        body: Arc::new(JobBody { nranks, part, topo, plan, sched, rep, blocks }),
         prog,
         b_local,
         x_local,
@@ -952,6 +1131,7 @@ fn encode_job_core(
     topo: &Topology,
     plan: &CommPlan,
     sched: Option<&HierSchedule>,
+    rep: Option<&RepSchedule>,
     blocks: &LocalBlocks,
 ) -> Result<Vec<u8>> {
     let mut out = Vec::new();
@@ -964,6 +1144,13 @@ fn encode_job_core(
         Some(s) => {
             w_u8(&mut out, 1)?;
             encode_sched(&mut out, s)?;
+        }
+    }
+    match rep {
+        None => w_u8(&mut out, 0)?,
+        Some(rs) => {
+            w_u8(&mut out, 1)?;
+            encode_rep(&mut out, rs)?;
         }
     }
     w_u64(&mut out, blocks.rank as u64)?;
@@ -985,9 +1172,10 @@ pub(crate) fn job_fingerprint(
     topo: &Topology,
     plan: &CommPlan,
     sched: Option<&HierSchedule>,
+    rep: Option<&RepSchedule>,
     blocks: &LocalBlocks,
 ) -> u64 {
-    fnv1a(&encode_job_core(rank, part, topo, plan, sched, blocks).expect("vec write"))
+    fnv1a(&encode_job_core(rank, part, topo, plan, sched, rep, blocks).expect("vec write"))
 }
 
 /// Serialize the per-request part of rank `rank`'s job: kernel op,
@@ -1056,6 +1244,21 @@ fn decode_job_delta(buf: &[u8]) -> Result<(usize, KernelOp, ExecOpts, Dense, Opt
 /// identical.
 fn apply_job_delta(body: &Arc<JobBody>, buf: &[u8]) -> Result<Job> {
     let (rank, op, opts, b_local, x_local) = decode_job_delta(buf)?;
+    if let Some(rs) = &body.rep {
+        // Replicated body: the cached blocks belong to the whole group, so
+        // the identity check is group membership, not blocks.rank.
+        if op != KernelOp::Spmm {
+            bail!("replicated jobs are SpMM-only (got {op:?})");
+        }
+        if rank >= rs.map.nranks || rs.map.group_of(rank) != body.blocks.rank {
+            bail!(
+                "delta JOB for rank {rank} against a cached replicated body for group {}",
+                body.blocks.rank
+            );
+        }
+        let prog = empty_program(op);
+        return Ok(Job { rank, op, opts, body: Arc::clone(body), prog, b_local, x_local });
+    }
     if rank != body.blocks.rank {
         bail!("delta JOB for rank {rank} against a cached body for rank {}", body.blocks.rank);
     }
@@ -1421,6 +1624,24 @@ fn run_job(
             t0: Instant::now(),
             pool: PoolRef::Own(BufferPool::new()),
         };
+        if let Some(rsched) = &job.body.rep {
+            // Replicated job (v5): the schedule drives the step list, the
+            // shipped program is a placeholder. decode_job already pinned
+            // op == Spmm and blocks.rank == this rank's group.
+            let map = rsched.map;
+            let is_home = map.member_of(rank) == 0;
+            let glen = job.body.part.len(map.group_of(rank));
+            let mut c_local =
+                Dense::zeros(if is_home { glen } else { 0 }, job.b_local.ncols);
+            super::replicate::rank_main_rep(
+                &mut ctx,
+                rsched,
+                &job.body.blocks,
+                &job.b_local,
+                &mut c_local,
+            );
+            return (c_local, SddmmVals::default(), ctx.stats);
+        }
         let c_width = if job.op == KernelOp::Sddmm { 0 } else { job.b_local.ncols };
         let mut c_local = Dense::zeros(job.body.part.len(rank), c_width);
         let mut vals = SddmmVals::default();
@@ -1507,7 +1728,8 @@ mod tests {
         msg_roundtrips(&Msg::B { from: 3, origin: 1, rows: vec![0, 5], data: d.clone() });
         msg_roundtrips(&Msg::X { from: 0, origin: 2, rows: vec![9], data: d.clone() });
         msg_roundtrips(&Msg::C { from: 7, rows: vec![], data: Dense::zeros(0, 4) });
-        msg_roundtrips(&Msg::CAgg { from: 2, final_dst: 6, rows: vec![1, 2, 3], data: d });
+        msg_roundtrips(&Msg::CAgg { from: 2, final_dst: 6, rows: vec![1, 2, 3], data: d.clone() });
+        msg_roundtrips(&Msg::CRed { from: 5, rows: vec![0, 2, 7], data: d });
     }
 
     #[test]
@@ -1645,6 +1867,7 @@ mod tests {
                         &plan,
                         s,
                         xs,
+                        None,
                         &blocks[rank],
                         &b_local,
                         x_local.as_ref(),
@@ -1660,6 +1883,7 @@ mod tests {
                         &job.body.topo,
                         &job.body.plan,
                         job.body.sched.as_ref(),
+                        job.body.rep.as_ref(),
                         &job.prog,
                         &job.body.blocks,
                         &job.b_local,
@@ -1785,6 +2009,7 @@ mod tests {
                     &plan,
                     Some(&sched),
                     xs,
+                    None,
                     &blocks[rank],
                     &b_local,
                     x_local.as_ref(),
@@ -1840,15 +2065,102 @@ mod tests {
         let plan = comm::plan(&blocks, &part, Strategy::Joint(Solver::Koenig), None);
         let plan2 = comm::plan(&blocks2, &part, Strategy::Joint(Solver::Koenig), None);
         let topo = Topology::tsubame4(ranks);
-        let fp = |r: usize| job_fingerprint(r, &part, &topo, &plan, None, &blocks[r]);
+        let fp = |r: usize| job_fingerprint(r, &part, &topo, &plan, None, None, &blocks[r]);
         assert_eq!(fp(0), fp(0), "fingerprint must be deterministic");
         assert_ne!(fp(0), fp(1), "distinct ranks must fingerprint apart");
         // Same partition starts, different graph content.
         assert_ne!(
             fp(0),
-            job_fingerprint(0, &part, &topo, &plan2, None, &blocks2[0]),
+            job_fingerprint(0, &part, &topo, &plan2, None, None, &blocks2[0]),
             "different A under identical starts must fingerprint apart"
         );
+    }
+
+    /// Replicated (v5) jobs roundtrip byte-identically: the rep section,
+    /// the group-level plan body, and the physical rank/nranks split all
+    /// survive a decode; deltas apply against the cached replicated body;
+    /// and the fingerprint separates replicated from flat bodies.
+    #[test]
+    fn replicated_job_roundtrips_byte_identical() {
+        let a = gen::rmat(64, 500, (0.55, 0.2, 0.19), false, 9);
+        let (nranks, c) = (4, 2);
+        let part = RowPartition::balanced(a.nrows, nranks);
+        let gpart = part.coarsen(c);
+        let gblocks = split_1d(&a, &gpart);
+        let gplan = comm::plan(&gblocks, &gpart, Strategy::Joint(Solver::Koenig), None);
+        let map = crate::topology::ReplicaMap::new(nranks, c);
+        let rsched = hierarchy::build_replicated(&gplan, &map);
+        let topo = Topology::tsubame4(nranks);
+        let mut rng = Rng::new(13);
+        let b_full = Dense::random(a.nrows, 8, &mut rng);
+        let n = b_full.ncols;
+        for rank in 0..nranks {
+            let g = map.group_of(rank);
+            let (r0, r1) = gpart.range(g);
+            // Only homes carry B rows, exactly as the thread path slices.
+            let b_local = if map.member_of(rank) == 0 {
+                Dense::from_vec(r1 - r0, n, b_full.data[r0 * n..r1 * n].to_vec())
+            } else {
+                Dense::zeros(0, n)
+            };
+            let bytes = encode_job(
+                rank,
+                KernelOp::Spmm,
+                &ExecOpts::default(),
+                &gpart,
+                &topo,
+                &gplan,
+                None,
+                None,
+                Some(&rsched),
+                &gblocks[g],
+                &b_local,
+                None,
+            )
+            .unwrap();
+            let job = decode_job(&bytes).unwrap();
+            assert_eq!(job.body.nranks, nranks, "nranks must stay physical");
+            assert_eq!(job.body.rep.as_ref(), Some(&rsched));
+            assert_eq!(job.body.blocks.rank, g);
+            let again = encode_job_parts(
+                job.rank,
+                job.body.nranks,
+                job.op,
+                &job.opts,
+                &job.body.part,
+                &job.body.topo,
+                &job.body.plan,
+                job.body.sched.as_ref(),
+                job.body.rep.as_ref(),
+                &job.prog,
+                &job.body.blocks,
+                &job.b_local,
+                job.x_local.as_ref(),
+            )
+            .unwrap();
+            assert_eq!(bytes, again, "rank {rank}");
+
+            // Deltas apply against the cached replicated body and keep
+            // the placeholder program empty.
+            let delta =
+                encode_job_delta(rank, KernelOp::Spmm, &ExecOpts::default(), &b_local, None)
+                    .unwrap();
+            let dj = apply_job_delta(&job.body, &delta).unwrap();
+            assert!(dj.prog.items.is_empty() && dj.prog.expect_msgs == 0);
+            assert_eq!(dj.b_local, job.b_local);
+            // An SDDMM delta against a replicated body is rejected.
+            let bad =
+                encode_job_delta(rank, KernelOp::Sddmm, &ExecOpts::default(), &b_local, None)
+                    .unwrap();
+            assert!(apply_job_delta(&job.body, &bad).is_err());
+
+            // The schedule is part of the fingerprinted core.
+            assert_ne!(
+                job_fingerprint(rank, &gpart, &topo, &gplan, None, Some(&rsched), &gblocks[g]),
+                job_fingerprint(rank, &gpart, &topo, &gplan, None, None, &gblocks[g]),
+                "replicated and flat bodies must fingerprint apart"
+            );
+        }
     }
 
     #[test]
@@ -1866,6 +2178,7 @@ mod tests {
             &part,
             &topo,
             &plan,
+            None,
             None,
             None,
             &blocks[0],

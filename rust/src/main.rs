@@ -17,6 +17,9 @@
 //! --partitioner <balanced|nnz-balanced|cost-refined> (row-boundary choice)
 //! --overlap <on|off> (overlapped executor pipeline vs phase-ordered)
 //! --backend <thread|proc> (in-process ranks vs one OS process per rank)
+//! --replicate <c|auto> (1.5D replication factor: ranks in groups of c
+//! replicate A and split the group's inter-group traffic; "auto" picks by
+//! modeled cost; 1 = the flat engine, the default)
 //! --fault-policy <fail|recover|recover:N> (proc-backend crash handling:
 //! surface a structured failure, or replan over the survivors and replay)
 //! --config <file.toml> (CLI overrides config values).
@@ -55,7 +58,8 @@ fn main() {
                 "usage: shiro <datasets|plan|run|sddmm|sim|gnn|serve|trace|info> \
                  [--dataset D] [--ranks R] [--n N] [--scale S] [--topo T] \
                  [--strategy S] [--partitioner P] [--overlap on|off] \
-                 [--backend thread|proc] [--fault-policy fail|recover|recover:N] \
+                 [--backend thread|proc] [--replicate c|auto] \
+                 [--fault-policy fail|recover|recover:N] \
                  [--config F] \
                  [serve: --bench --preset ci|full --out J --serve-workers W \
                  --serve-queue Q --serve-registry C --serve-batch K]"
@@ -176,6 +180,17 @@ fn cmd_run(cfg: &RunConfig) {
         loads.iter().copied().max().unwrap_or(0),
         shiro::metrics::load_imbalance(&loads)
     );
+    if let Some(rep) = &d.rep {
+        println!(
+            "replication: c={} ({} groups of {}), modeled inter-group wire {} B \
+             (intra-group {} B)",
+            rep.map.c,
+            rep.map.ngroups(),
+            rep.map.c,
+            rep.inter_wire_bytes(&d.plan, cfg.n_dense),
+            rep.intra_wire_bytes(cfg.n_dense)
+        );
+    }
     let mut rng = Rng::new(1);
     let b = Dense::random(a.nrows, cfg.n_dense, &mut rng);
     // Attach a pool handle so a proc run reports worker-pool stats (and

@@ -55,6 +55,9 @@ impl VolumeMatrix {
     }
 
     /// Load imbalance: max over ranks of (sent+received) divided by mean.
+    /// Empty or all-zero traffic reports 0.0 — "no load" must not be
+    /// conflated with "perfectly balanced" (1.0), or a plan that moves
+    /// nothing would score as ideally balanced in the ablation tables.
     pub fn imbalance(&self) -> f64 {
         let mut per_rank = vec![0u64; self.n];
         for s in 0..self.n {
@@ -66,7 +69,7 @@ impl VolumeMatrix {
         let max = per_rank.iter().copied().max().unwrap_or(0) as f64;
         let mean = per_rank.iter().sum::<u64>() as f64 / self.n.max(1) as f64;
         if mean == 0.0 {
-            1.0
+            0.0
         } else {
             max / mean
         }
@@ -90,9 +93,12 @@ impl VolumeMatrix {
     }
 
     /// CSV export (one row per source rank), volumes normalized by the
-    /// matrix max when `normalize` (the Fig. 9 convention).
+    /// matrix max when `normalize` (the Fig. 9 convention). A zero-max
+    /// (all-zero traffic) matrix normalizes to all zeros rather than
+    /// dividing by a fabricated max of 1 — same digits, but the guard is
+    /// explicit instead of hiding behind `max(1)` on a u64.
     pub fn to_csv(&self, normalize: bool) -> String {
-        let max = self.max().max(1) as f64;
+        let max = self.max();
         let mut out = String::new();
         for s in 0..self.n {
             for d in 0..self.n {
@@ -100,7 +106,9 @@ impl VolumeMatrix {
                     out.push(',');
                 }
                 if normalize {
-                    let _ = write!(out, "{:.4}", self.get(s, d) as f64 / max);
+                    let frac =
+                        if max == 0 { 0.0 } else { self.get(s, d) as f64 / max as f64 };
+                    let _ = write!(out, "{:.4}", frac);
                 } else {
                     let _ = write!(out, "{}", self.get(s, d));
                 }
@@ -110,14 +118,20 @@ impl VolumeMatrix {
         out
     }
 
-    /// ASCII heatmap (for terminal inspection of Fig. 9).
+    /// ASCII heatmap (for terminal inspection of Fig. 9). A zero-max
+    /// matrix renders as all-blank shades; the shade index is computed
+    /// against the true max, never a fabricated `max(1)` floor.
     pub fn to_ascii(&self) -> String {
         const SHADES: &[u8] = b" .:-=+*#%@";
-        let max = self.max().max(1) as f64;
+        let max = self.max();
         let mut out = String::new();
         for s in 0..self.n {
             for d in 0..self.n {
-                let v = self.get(s, d) as f64 / max;
+                let v = if max == 0 {
+                    0.0
+                } else {
+                    self.get(s, d) as f64 / max as f64
+                };
                 let idx = ((v * (SHADES.len() - 1) as f64).round() as usize)
                     .min(SHADES.len() - 1);
                 out.push(SHADES[idx] as char);
@@ -211,14 +225,17 @@ impl Amortization {
 /// perfectly balanced). Used with [`crate::partition::rank_nnz`] to score
 /// partitioners — the overlapped executor's wall clock tracks the max,
 /// throughput the mean, so this factor is the straggler overhead.
+/// Empty or all-zero loads report 0.0: "nothing to balance" is not the
+/// same as "perfectly balanced", and the old 1.0 answer let an all-empty
+/// partition masquerade as ideal in the partitioner ablation.
 pub fn load_imbalance(loads: &[u64]) -> f64 {
     if loads.is_empty() {
-        return 1.0;
+        return 0.0;
     }
     let max = loads.iter().copied().max().unwrap_or(0) as f64;
     let mean = loads.iter().sum::<u64>() as f64 / loads.len() as f64;
     if mean == 0.0 {
-        1.0
+        0.0
     } else {
         max / mean
     }
@@ -370,6 +387,28 @@ mod tests {
     }
 
     #[test]
+    fn imbalance_zero_when_no_traffic() {
+        // All-zero traffic must report 0.0, not "perfectly balanced" 1.0.
+        assert_eq!(VolumeMatrix::zeros(4).imbalance(), 0.0);
+        assert_eq!(VolumeMatrix::zeros(0).imbalance(), 0.0);
+    }
+
+    #[test]
+    fn zero_max_heatmap_renders_blank_without_fabricated_max() {
+        let m = VolumeMatrix::zeros(3);
+        let a = m.to_ascii();
+        assert!(a.lines().all(|l| l == "   "), "all-zero matrix must be blank: {a:?}");
+        let csv = m.to_csv(true);
+        for line in csv.lines() {
+            assert_eq!(line, "0.0000,0.0000,0.0000");
+        }
+        // Non-zero max still saturates to the darkest shade.
+        let mut m = VolumeMatrix::zeros(2);
+        m.set(0, 1, 8);
+        assert!(m.to_ascii().contains('@'));
+    }
+
+    #[test]
     fn overlap_window_fraction() {
         let w = OverlapWindow { overlapped_bytes: 75, idle_bytes: 25, ..Default::default() };
         assert_eq!(w.total_bytes(), 100);
@@ -379,8 +418,9 @@ mod tests {
 
     #[test]
     fn load_imbalance_factor() {
-        assert_eq!(load_imbalance(&[]), 1.0);
-        assert_eq!(load_imbalance(&[0, 0, 0]), 1.0);
+        // Degenerate inputs: no load is 0.0, not "balanced" 1.0.
+        assert_eq!(load_imbalance(&[]), 0.0);
+        assert_eq!(load_imbalance(&[0, 0, 0]), 0.0);
         assert!((load_imbalance(&[5, 5, 5, 5]) - 1.0).abs() < 1e-12);
         // One rank with everything over 4 ranks: max/mean = 4.
         assert!((load_imbalance(&[12, 0, 0, 0]) - 4.0).abs() < 1e-12);

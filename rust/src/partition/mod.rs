@@ -54,9 +54,11 @@ impl RowPartition {
     /// Load-aware contiguous partition: split on the prefix sum of row
     /// nonzero counts (`a.indptr`) so every rank owns ≈ nnz/nparts
     /// nonzeros, whatever the row-count skew. Each boundary is the row
-    /// whose prefix is closest to the ideal target `p·nnz/nparts`
-    /// (never crossing the previous boundary), so a single huge row ends
-    /// up alone on a rank and the tail ranks may be empty. Falls back to
+    /// whose prefix is closest to the ideal target `p·nnz/nparts`,
+    /// clamped so boundaries strictly advance while rows remain — a hub
+    /// row whose prefix swallows several targets must not repeat a
+    /// boundary and leave an *interior* rank empty (only tail ranks may
+    /// be empty, once rows run out). Falls back to
     /// [`RowPartition::balanced`] on an all-zero matrix.
     pub fn nnz_balanced(a: &Csr, nparts: usize) -> RowPartition {
         assert!(nparts > 0);
@@ -81,9 +83,50 @@ impl RowPartition {
             } else {
                 hi
             };
-            starts.push(pick.max(prev));
+            let floor = if prev < n { prev + 1 } else { n };
+            starts.push(pick.clamp(floor, n));
         }
         starts.push(n);
+        RowPartition::from_starts(starts)
+    }
+
+    /// Coarsen a rank-level partition into a group-level one by merging
+    /// every `c` consecutive parts (`nparts` must be divisible by `c`).
+    /// The group boundaries are a **subset** of the rank boundaries —
+    /// this nesting is what makes per-pair cover volume non-increasing
+    /// in the replication factor (a merged pair's cover is contained in
+    /// the union of the fine pairs' covers), so the 1.5D planner builds
+    /// its group plan on `coarsen(c)` of the configured partitioner's
+    /// rank split rather than re-partitioning at `nparts/c`.
+    pub fn coarsen(&self, c: usize) -> RowPartition {
+        assert!(c > 0, "replication factor must be positive");
+        assert_eq!(
+            self.nparts % c,
+            0,
+            "replication factor {c} must divide nparts {}",
+            self.nparts
+        );
+        let ngroups = self.nparts / c;
+        let starts = (0..=ngroups).map(|g| self.starts[g * c]).collect();
+        RowPartition::from_starts(starts)
+    }
+
+    /// Expand a group-level partition (this) back to `ngroups·c` ranks:
+    /// each group's home rank (`g·c`) owns the whole group range and the
+    /// other `c-1` members own zero rows. Used when a replicated run must
+    /// degrade to the flat c=1 machinery (e.g. proc crash recovery) —
+    /// zero-row ranks flow through the whole stack since PR 3.
+    pub fn expand_replicated(&self, c: usize) -> RowPartition {
+        assert!(c > 0, "replication factor must be positive");
+        let mut starts = Vec::with_capacity(self.nparts * c + 1);
+        for g in 0..self.nparts {
+            starts.push(self.starts[g]);
+            // Members g·c+1 .. g·c+c start where the group ends: 0 rows.
+            for _ in 1..c {
+                starts.push(self.starts[g + 1]);
+            }
+        }
+        starts.push(self.n);
         RowPartition::from_starts(starts)
     }
 
@@ -578,6 +621,74 @@ mod tests {
         assert_eq!(p.nparts, 9);
         assert_eq!(*p.starts.last().unwrap(), 4);
         assert_eq!(rank_nnz(&small, &p).iter().sum::<u64>(), small.nnz() as u64);
+    }
+
+    #[test]
+    fn nnz_balanced_hub_row_keeps_interior_ranks_nonempty() {
+        // A hub row whose nnz swallows several per-rank targets used to
+        // make nearest-boundary rounding repeat a start, silently leaving
+        // *interior* ranks with zero rows (and zero nnz), which skewed
+        // CostRefined's straggler term. Boundaries must strictly advance
+        // while rows remain; only tail ranks may be empty.
+        let mut coo = crate::sparse::Coo::new(32, 32);
+        for c in 0..32 {
+            coo.push(5, c, 1.0); // hub: row 5 owns every nonzero
+        }
+        let a = coo.to_csr();
+        for nparts in [2usize, 4, 8] {
+            let p = RowPartition::nnz_balanced(&a, nparts);
+            for q in 0..nparts {
+                let tail_empty = (q + 1..nparts).all(|r| p.len(r) == 0);
+                assert!(
+                    p.len(q) > 0 || tail_empty,
+                    "nparts={nparts}: interior rank {q} empty in {:?}",
+                    p.starts
+                );
+            }
+            assert_eq!(rank_nnz(&a, &p).iter().sum::<u64>(), 32);
+        }
+        // Hub off-center plus trailing light rows: every rank must still
+        // get at least one row (32 rows ≥ 8 parts, so none may be empty).
+        let mut coo = crate::sparse::Coo::new(32, 32);
+        for c in 0..32 {
+            coo.push(9, c, 1.0);
+        }
+        for r in 20..32 {
+            coo.push(r, 0, 1.0);
+        }
+        let a = coo.to_csr();
+        let p = RowPartition::nnz_balanced(&a, 8);
+        for q in 0..8 {
+            assert!(p.len(q) > 0, "rank {q} empty in {:?}", p.starts);
+        }
+        assert_eq!(rank_nnz(&a, &p).iter().sum::<u64>(), a.nnz() as u64);
+    }
+
+    #[test]
+    fn coarsen_nests_and_expand_replicated_inverts() {
+        let part = RowPartition::from_starts(vec![0, 10, 25, 40, 64]);
+        let g = part.coarsen(2);
+        assert_eq!(g.starts, vec![0, 25, 64]);
+        // Group boundaries are a subset of rank boundaries (nesting).
+        assert!(g.starts.iter().all(|s| part.starts.contains(s)));
+        assert_eq!(part.coarsen(1).starts, part.starts);
+        assert_eq!(part.coarsen(4).starts, vec![0, 64]);
+        // Expansion puts each group's rows on its home rank and zero rows
+        // on the members.
+        let e = g.expand_replicated(2);
+        assert_eq!(e.nparts, 4);
+        assert_eq!(e.starts, vec![0, 25, 25, 64, 64]);
+        assert_eq!(e.len(0), 25);
+        assert_eq!(e.len(1), 0);
+        assert_eq!(e.len(2), 39);
+        assert_eq!(e.len(3), 0);
+        assert_eq!(g.expand_replicated(1).starts, g.starts);
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn coarsen_rejects_nondivisor() {
+        let _ = RowPartition::from_starts(vec![0, 10, 25, 64]).coarsen(2);
     }
 
     #[test]

@@ -60,12 +60,18 @@ fn hash_csr(h: &mut Fnv, m: &Csr) {
 
 /// Fingerprint of everything the adaptive compiler reads: the partitioned
 /// off-diagonal blocks, the partition boundaries, the topology's cost
-/// parameters, and the planning N. The boundaries (`part.starts`) are
-/// hashed explicitly: two partitioners can induce structurally similar
-/// blocks over different row ranges, and a plan compiled for one set of
+/// parameters (including its rank count and group size — for a replicated
+/// lookup these are the *coarsened* group topology), the planning N, and
+/// the replication factor. The boundaries (`part.starts`) are hashed
+/// explicitly: two partitioners can induce structurally similar blocks
+/// over different row ranges, and a plan compiled for one set of
 /// boundaries embeds block heights the executor trusts — returning it for
 /// another partition would be stale (regression-tested in
-/// `partition_boundaries_key_the_cache`).
+/// `partition_boundaries_key_the_cache`). The replication factor is
+/// hashed for the same reason (same bug class): a `c=2` group plan and a
+/// `c=1` flat plan can share boundaries on small inputs, but they embed
+/// different flow structure — regression-tested in
+/// `replication_factor_keys_the_cache`.
 pub fn pattern_key(
     blocks: &[LocalBlocks],
     part: &RowPartition,
@@ -77,6 +83,8 @@ pub fn pattern_key(
     for &s in &part.starts {
         h.u64(s as u64);
     }
+    h.u64(params.replicate as u64);
+    h.u64(topo.nranks as u64);
     h.u64(topo.group_size as u64);
     h.u64(topo.intra_bw.to_bits());
     h.u64(topo.inter_bw.to_bits());
@@ -473,6 +481,42 @@ mod tests {
         let rows = |p: &RowPartition| (0..p.nparts).map(|i| p.len(i)).collect::<Vec<_>>();
         assert_eq!(bal_plan.block_rows, rows(&bal));
         assert_eq!(nnz_plan.block_rows, rows(&nnz));
+    }
+
+    #[test]
+    fn replication_factor_keys_the_cache() {
+        // Satellite regression: a c=2 group plan must never be served for
+        // a c=1 lookup. Degenerate worst case: 2 ranks at c=2 collapse to
+        // one group whose "partition" has the same boundary set as a
+        // 1-rank c=1 run — only the replication factor (and the coarsened
+        // topology) distinguishes the lookups.
+        let a = gen::rmat(128, 1200, (0.55, 0.2, 0.19), false, 8);
+        let rank_part = RowPartition::balanced(128, 8);
+        let topo = Topology::tsubame4(8);
+        let flat = PlanParams::default();
+        assert_eq!(flat.replicate, 1);
+        let rep2 = PlanParams { replicate: 2, ..Default::default() };
+        // Same blocks/partition/topology, different factor: keys differ.
+        let blocks = split_1d(&a, &rank_part);
+        assert_ne!(
+            pattern_key(&blocks, &rank_part, &topo, &flat),
+            pattern_key(&blocks, &rank_part, &topo, &rep2),
+            "replication factor must change the fingerprint"
+        );
+        // The real replicated lookup shape: coarsened partition + topology.
+        let gpart = rank_part.coarsen(2);
+        let gblocks = split_1d(&a, &gpart);
+        let gtopo = topo.coarsen(2);
+        let mut cache = PlanCache::in_memory();
+        let (_, hit) = cache.get_or_compile(&blocks, &rank_part, &topo, &flat);
+        assert!(!hit);
+        let (gplan, hit) = cache.get_or_compile(&gblocks, &gpart, &gtopo, &rep2);
+        assert!(!hit, "c=2 lookup must miss a c=1-keyed cache");
+        let (gplan2, hit) = cache.get_or_compile(&gblocks, &gpart, &gtopo, &rep2);
+        assert!(hit, "repeat c=2 lookup must hit its own entry");
+        assert_plans_equal(&gplan, &gplan2);
+        assert_eq!(gplan.nranks, 4, "group plan spans nranks/c groups");
+        assert_eq!((cache.hits, cache.misses), (1, 2));
     }
 
     #[test]

@@ -73,11 +73,16 @@ pub struct PlanParams {
     pub n_dense: usize,
     /// Planner thread cap; 0 = one thread per available core.
     pub threads: usize,
+    /// Replication factor the plan is compiled for (1 = flat 1D). For
+    /// `c > 1` the plan is a *group* plan over `nranks/c` coarsened parts;
+    /// the factor participates in the cache fingerprint so a `c=2` group
+    /// plan can never be served for a `c=1` lookup (or vice versa).
+    pub replicate: usize,
 }
 
 impl Default for PlanParams {
     fn default() -> Self {
-        PlanParams { n_dense: 32, threads: 0 }
+        PlanParams { n_dense: 32, threads: 0, replicate: 1 }
     }
 }
 
@@ -152,6 +157,75 @@ pub fn modeled_cost(plan: &CommPlan, topo: &Topology, n_dense: usize) -> f64 {
         }
     }
     total
+}
+
+/// Replication factors `--replicate auto` searches over (filtered to the
+/// divisors of the rank count). Powers of two up to 8 cover the paper's
+/// memory-rich regimes without an exhaustive divisor sweep.
+pub const REPLICATION_CANDIDATES: [usize; 4] = [1, 2, 4, 8];
+
+/// Modeled cost (seconds) of running the 1.5D decomposition at replication
+/// factor `c` on the rank partition `part`: the group plan's α-β cost on
+/// the coarsened topology (all group-pair traffic is inter-group by
+/// construction), plus the intra-group partial-C reduce-scatter
+/// (member → home, sparsity-aware: only touched rows move, each carrying
+/// its u32 row index), plus the heaviest group home's diagonal-block
+/// compute — the straggler term that keeps `auto` from collapsing to
+/// `c = nranks` (zero communication, zero parallelism).
+pub fn replicated_cost(
+    a: &Csr,
+    part: &RowPartition,
+    c: usize,
+    strategy: Strategy,
+    topo: &Topology,
+    params: &PlanParams,
+) -> f64 {
+    let gpart = part.coarsen(c);
+    let gblocks = crate::partition::split_1d(a, &gpart);
+    let gtopo = topo.coarsen(c);
+    let gplan = match strategy {
+        Strategy::Adaptive => compile(&gblocks, &gpart, &gtopo, params).plan,
+        s => comm::plan(&gblocks, &gpart, s, None),
+    };
+    let map = crate::topology::ReplicaMap::new(part.nparts, c);
+    let rsched = crate::hierarchy::build_replicated(&gplan, &map);
+    let inter = modeled_cost(&gplan, &gtopo, params.n_dense);
+    let mut intra = 0.0;
+    for asg in &rsched.assigns {
+        if asg.red_to.is_some() && !asg.touched.is_empty() {
+            let bytes = asg.touched.len() * (params.n_dense * comm::SZ_DT as usize + 4);
+            intra += topo.intra_lat + bytes as f64 / topo.intra_bw;
+        }
+    }
+    let max_diag = gblocks.iter().map(|b| b.diag.nnz()).max().unwrap_or(0);
+    let straggler = 2.0 * max_diag as f64 * params.n_dense as f64 / topo.compute_rate;
+    inter + intra + straggler
+}
+
+/// Pick the replication factor with the lowest [`replicated_cost`] among
+/// [`REPLICATION_CANDIDATES`] that divide the rank count. Deterministic;
+/// ties break toward the smaller factor (less memory), so `auto` only
+/// replicates when the model says it strictly pays.
+pub fn choose_replication(
+    a: &Csr,
+    part: &RowPartition,
+    strategy: Strategy,
+    topo: &Topology,
+    params: &PlanParams,
+) -> usize {
+    let mut best_c = 1;
+    let mut best = f64::INFINITY;
+    for c in REPLICATION_CANDIDATES {
+        if c > part.nparts || part.nparts % c != 0 {
+            continue;
+        }
+        let cost = replicated_cost(a, part, c, strategy, topo, params);
+        if cost < best {
+            best = cost;
+            best_c = c;
+        }
+    }
+    best_c
 }
 
 /// Candidate evaluation order; earlier entries win cost ties. Crossing the

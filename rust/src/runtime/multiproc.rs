@@ -45,7 +45,7 @@ use crate::comm::CommPlan;
 use crate::dense::Dense;
 use crate::exec::wire::{self, kind};
 use crate::exec::{assemble_sddmm, ExecOpts, ExecStats, KernelOp, RankStats, SddmmVals};
-use crate::hierarchy::{self, HierSchedule};
+use crate::hierarchy::{self, HierSchedule, RepSchedule};
 use crate::metrics::{recovery_latency, LatencyStats};
 use crate::partition::{assemble_1d, recover_partition, split_1d, LocalBlocks, RowPartition};
 use crate::sparse::Csr;
@@ -289,8 +289,44 @@ pub fn run(
     popts: &ProcOpts,
     policy: FaultPolicy,
 ) -> Result<(Dense, ExecStats, Option<RecoveryReport>), RankFailure> {
-    run_op(KernelOp::Spmm, part, plan, blocks, sched, topo, None, b, opts, popts, policy)
+    run_op(KernelOp::Spmm, part, plan, blocks, sched, None, topo, None, b, opts, popts, policy)
         .map(|(c, _, st, rec)| (c, st, rec))
+}
+
+/// Distributed SpMM under a 1.5D replicated decomposition across worker
+/// processes: the proc-backend counterpart of the thread executor's
+/// replicated path — `part`/`plan`/`blocks` describe the *group-level*
+/// problem, `rep` deals its flows out to the physical ranks, and the
+/// result is bitwise-identical to the thread backend's by the same
+/// canonical-fold argument. Crash recovery is not available on replicated
+/// runs: any lost worker surfaces as a [`RankFailure`] (replan at c=1 for
+/// recovery semantics).
+#[allow(clippy::too_many_arguments)]
+pub fn run_replicated(
+    part: &RowPartition,
+    plan: &CommPlan,
+    blocks: &[LocalBlocks],
+    rep: &RepSchedule,
+    topo: &Topology,
+    b: &Dense,
+    opts: &ExecOpts,
+    popts: &ProcOpts,
+) -> Result<(Dense, ExecStats), RankFailure> {
+    run_op(
+        KernelOp::Spmm,
+        part,
+        plan,
+        blocks,
+        None,
+        Some(rep),
+        topo,
+        None,
+        b,
+        opts,
+        popts,
+        FaultPolicy::Fail,
+    )
+    .map(|(c, _, st, _)| (c, st))
 }
 
 /// Fused SDDMM→SpMM across worker processes: counterpart of
@@ -314,6 +350,7 @@ pub fn run_fused(
         plan,
         blocks,
         sched,
+        None,
         topo,
         Some(x),
         y,
@@ -349,6 +386,7 @@ pub fn run_sddmm(
         plan,
         blocks,
         sched,
+        None,
         topo,
         Some(x),
         y,
@@ -510,6 +548,7 @@ fn run_op(
     plan: &CommPlan,
     blocks: &[LocalBlocks],
     sched: Option<&HierSchedule>,
+    rep: Option<&RepSchedule>,
     topo: &Topology,
     x: Option<&Dense>,
     b: &Dense,
@@ -517,8 +556,20 @@ fn run_op(
     popts: &ProcOpts,
     policy: FaultPolicy,
 ) -> Result<(Dense, Option<Csr>, ExecStats, Option<RecoveryReport>), RankFailure> {
-    let nranks = part.nparts;
-    assert_eq!(plan.nranks, nranks);
+    // For a replicated run the partition / plan / blocks are group-level
+    // while the fleet spans the physical ranks.
+    let nranks = match rep {
+        None => {
+            assert_eq!(plan.nranks, part.nparts);
+            part.nparts
+        }
+        Some(rs) => {
+            assert_eq!(op, KernelOp::Spmm, "replicated proc runs are SpMM-only");
+            assert_eq!(plan.nranks, rs.map.ngroups());
+            assert_eq!(part.nparts, rs.map.ngroups());
+            rs.map.nranks
+        }
+    };
     assert_eq!(part.n, b.nrows);
     let exe = match &popts.worker_exe {
         Some(p) => p.clone(),
@@ -540,7 +591,7 @@ fn run_op(
                 *slot = Some(WorkerPool::new(nranks, exe, popts.timeout)?);
             }
             let pool = slot.as_mut().expect("pool ensured above");
-            pool.run_request(op, part, plan, blocks, sched, topo, x, b, opts, popts, policy)
+            pool.run_request(op, part, plan, blocks, sched, rep, topo, x, b, opts, popts, policy)
         }
         None => {
             // Ephemeral pool: spawn, serve one request, tear down — the
@@ -548,7 +599,7 @@ fn run_op(
             // same code as warm pools, which keeps the two bitwise
             // identical by construction.
             let mut pool = WorkerPool::new(nranks, exe, popts.timeout)?;
-            pool.run_request(op, part, plan, blocks, sched, topo, x, b, opts, popts, policy)
+            pool.run_request(op, part, plan, blocks, sched, rep, topo, x, b, opts, popts, policy)
         }
     }
 }
@@ -729,6 +780,7 @@ impl WorkerPool {
         plan: &CommPlan,
         blocks: &[LocalBlocks],
         sched: Option<&HierSchedule>,
+        rep: Option<&RepSchedule>,
         topo: &Topology,
         x: Option<&Dense>,
         b: &Dense,
@@ -737,7 +789,7 @@ impl WorkerPool {
         policy: FaultPolicy,
     ) -> Result<(Dense, Option<Csr>, ExecStats, Option<RecoveryReport>), RankFailure> {
         let nranks = self.nranks;
-        debug_assert_eq!(part.nparts, nranks);
+        debug_assert_eq!(part.nparts, rep.map_or(nranks, |rs| rs.map.ngroups()));
         let n_dense = b.ncols;
         // SDDMM workers produce edge values, not a dense block: their C
         // has width 0 and the payload of interest rides the DONE frame.
@@ -774,14 +826,28 @@ impl WorkerPool {
         let mut carried: Option<(usize, FailureCause)> = None;
         let mut payloads: Vec<(u64, Vec<u8>)> = Vec::with_capacity(nranks);
         for rank in 0..nranks {
-            let fp = wire::job_fingerprint(rank, part, topo, plan, sched, &blocks[rank]);
+            // Replicated requests ship the group's blocks to every member
+            // and B rows only to the home — exactly how the thread path
+            // slices its operands.
+            let blk = match rep {
+                None => &blocks[rank],
+                Some(rs) => &blocks[rs.map.group_of(rank)],
+            };
+            let b_slice = match rep {
+                None => slice_rows(b, part, rank),
+                Some(rs) if rs.map.member_of(rank) == 0 => {
+                    slice_rows(b, part, rs.map.group_of(rank))
+                }
+                Some(_) => Dense::zeros(0, b.ncols),
+            };
+            let fp = wire::job_fingerprint(rank, part, topo, plan, sched, rep, blk);
             let warm = self.last_fp[rank] == Some(fp);
             let blob = if warm {
                 wire::encode_job_delta(
                     rank,
                     op,
                     opts,
-                    &slice_rows(b, part, rank),
+                    &b_slice,
                     x.map(|x| slice_rows(x, part, rank)).as_ref(),
                 )
             } else {
@@ -794,8 +860,9 @@ impl WorkerPool {
                     plan,
                     sched,
                     xsched_owned.as_ref(),
-                    &blocks[rank],
-                    &slice_rows(b, part, rank),
+                    rep,
+                    blk,
+                    &b_slice,
                     x.map(|x| slice_rows(x, part, rank)).as_ref(),
                 )
             };
@@ -855,6 +922,11 @@ impl WorkerPool {
             FaultPolicy::Fail => 0,
             FaultPolicy::Recover { max_retries } => max_retries,
         };
+        if rep.is_some() {
+            // The recovery replan machinery is flat-only: a replicated run
+            // fails fast and surfaces the RankFailure instead.
+            retries_left = 0;
+        }
         let mut report = RecoveryReport::default();
         let mut failure: Option<RankFailure> = None;
 
@@ -1023,6 +1095,7 @@ impl WorkerPool {
                         &l.topo,
                         &l.plan,
                         l.sched.as_ref(),
+                        None,
                         &l.blocks[r],
                     );
                     let job = match wire::encode_job(
@@ -1034,6 +1107,7 @@ impl WorkerPool {
                         &l.plan,
                         l.sched.as_ref(),
                         xsched_owned.as_ref(),
+                        None,
                         &l.blocks[r],
                         &slice_rows(b, &l.part, r),
                         x.map(|x| slice_rows(x, &l.part, r)).as_ref(),
@@ -1116,7 +1190,15 @@ impl WorkerPool {
         let mut all_vals = Vec::with_capacity(results.len());
         let mut per_rank = Vec::with_capacity(results.len());
         for (rank, (c_local, vals, stats)) in results.into_iter().enumerate() {
-            let (r0, r1) = fpart.range(rank);
+            // Under replication only group homes return C rows; members
+            // report an empty block.
+            let (r0, r1) = match rep {
+                None => fpart.range(rank),
+                Some(rs) if rs.map.member_of(rank) == 0 => {
+                    fpart.range(rs.map.group_of(rank))
+                }
+                Some(_) => (0, 0),
+            };
             if c_local.nrows != r1 - r0 || c_local.ncols != c_cols {
                 return Err(RankFailure {
                     rank,

@@ -10,7 +10,7 @@
 use crate::comm::{self, CommPlan, Strategy};
 use crate::dense::Dense;
 use crate::exec::{self, kernel::SpmmKernel, ExecStats};
-use crate::hierarchy::{self, HierSchedule};
+use crate::hierarchy::{self, HierSchedule, RepSchedule};
 use crate::partition::{LocalBlocks, Partitioner, RowPartition};
 use crate::sim::{self, SimJob, SimReport, Stage};
 use crate::sparse::Csr;
@@ -21,17 +21,24 @@ pub mod request;
 pub use crate::exec::kernel::KernelOp;
 pub use crate::exec::session::SpmmSession;
 pub use crate::runtime::multiproc::{FaultPlan, FaultPolicy, RecoveryReport};
-pub use request::{Backend, ExecError, ExecRequest, ExecResult, PlanSpec};
+pub use request::{Backend, ExecError, ExecRequest, ExecResult, PlanSpec, Replicate};
 
 /// A fully planned distributed SpMM instance. Planning (steps 1–2 of the
 /// §5.1 workflow) happens once in [`PlanSpec::plan`] and is reused across
 /// executions with the same sparsity pattern — `prep_secs` records the
 /// one-time MWVC cost reported in Tab. 3.
 pub struct DistSpmm {
+    /// Row partition. For a replicated plan (`rep.is_some()`) this is the
+    /// *group-level* partition: one part per replication group, matching
+    /// `blocks` and `plan`; `topo` still spans the physical ranks.
     pub part: RowPartition,
     pub blocks: Vec<LocalBlocks>,
     pub plan: CommPlan,
     pub sched: Option<HierSchedule>,
+    /// 1.5D replication wiring (DESIGN.md §13), `None` for the flat c=1
+    /// engine. Set by [`PlanSpec::replicate`]; mutually exclusive with
+    /// `sched` — the replicated executor owns its own two-level fold.
+    pub rep: Option<RepSchedule>,
     pub topo: Topology,
     /// One-time preprocessing (cover solve + schedule build) seconds.
     pub prep_secs: f64,
@@ -62,6 +69,29 @@ impl DistSpmm {
     pub fn execute(&self, req: &ExecRequest) -> Result<ExecResult, ExecError> {
         let (part, plan, blocks) = (&self.part, &self.plan, &self.blocks);
         let (sched, topo) = (self.sched.as_ref(), &self.topo);
+        if let Some(rep) = &self.rep {
+            // Replicated (c>1) plans run the dedicated two-level executor.
+            // Only SpMM has replication wiring; the SDDMM family keeps the
+            // flat engine (replan at c=1 to use it).
+            return match (&req.backend, req.op) {
+                (Backend::Thread, KernelOp::Spmm) => {
+                    let (c, st) = exec::replicate::run_replicated(
+                        part, plan, blocks, rep, topo, req.b, req.kernel, &req.opts,
+                    );
+                    Ok(ExecResult::from_dense(c, st))
+                }
+                (Backend::Proc(popts), KernelOp::Spmm) => {
+                    let (c, st) = crate::runtime::multiproc::run_replicated(
+                        part, plan, blocks, rep, topo, req.b, &req.opts, popts,
+                    )?;
+                    Ok(ExecResult::from_dense(c, st))
+                }
+                (_, op) => Err(ExecError::Unsupported(format!(
+                    "{} is not available on a replicated (c>1) plan; replan with Replicate::Factor(1)",
+                    op.name()
+                ))),
+            };
+        }
         match &req.backend {
             Backend::Thread => match req.op {
                 KernelOp::Spmm => {
@@ -152,12 +182,16 @@ impl DistSpmm {
             .collect();
         debug_assert_eq!(comm::validate::validate(&plan, &blocks), Ok(()));
         let sched = self.sched.as_ref().map(hierarchy::mirror);
+        // The replica deal-out is rebuilt (not mirrored): it is a cheap
+        // deterministic function of the transposed group plan.
+        let rep = self.rep.as_ref().map(|r| hierarchy::build_replicated(&plan, &r.map));
         let prep_secs = t0.elapsed().as_secs_f64();
         DistSpmm {
             part: self.part.clone(),
             blocks,
             plan,
             sched,
+            rep,
             topo: self.topo.clone(),
             prep_secs,
         }

@@ -211,6 +211,25 @@ impl From<RankFailure> for ExecError {
     }
 }
 
+/// Replication factor for the 1.5D decomposition (DESIGN.md §13): ranks
+/// are grouped into `nranks/c` replication groups of `c` consecutive
+/// ranks, A is replicated within each group, and the group's inter-group
+/// traffic is dealt out across the members. `Factor(1)` is the flat 1D
+/// engine — the default, and bitwise-identical to the pre-replication
+/// planner. `Auto` searches [`crate::plan::REPLICATION_CANDIDATES`] with
+/// the α-β model ([`crate::plan::choose_replication`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Replicate {
+    Factor(usize),
+    Auto,
+}
+
+impl Default for Replicate {
+    fn default() -> Replicate {
+        Replicate::Factor(1)
+    }
+}
+
 /// Builder replacing the five `plan_*` constructors: every planning knob
 /// in one place, with the defaults the CLI uses (MWVC joint covers on the
 /// hierarchical two-stage schedule, equal-row partitioning).
@@ -229,6 +248,7 @@ pub struct PlanSpec {
     pub hierarchical: bool,
     pub params: PlanParams,
     pub partitioner: Partitioner,
+    pub replicate: Replicate,
 }
 
 impl PlanSpec {
@@ -239,6 +259,7 @@ impl PlanSpec {
             hierarchical: true,
             params: PlanParams::default(),
             partitioner: Partitioner::Balanced,
+            replicate: Replicate::default(),
         }
     }
 
@@ -281,6 +302,16 @@ impl PlanSpec {
         self
     }
 
+    /// 1.5D replication factor ([`Replicate::Factor`] must divide the
+    /// rank count; [`Replicate::Auto`] picks by modeled cost). The group
+    /// boundaries are the partitioner's rank boundaries coarsened, never
+    /// a fresh split — the nesting is what guarantees inter-group volume
+    /// is non-increasing in `c`.
+    pub fn replicate(mut self, replicate: Replicate) -> PlanSpec {
+        self.replicate = replicate;
+        self
+    }
+
     /// Plan a distributed SpMM of `a` over `topo.nranks` ranks:
     /// partitioner chooses the row boundaries, strategy plans how remote
     /// nonzeros are served, and `prep_secs` records the whole one-time
@@ -302,6 +333,50 @@ impl PlanSpec {
         use crate::partition::split_1d;
         let t0 = std::time::Instant::now();
         let part = self.partitioner.partition(a, self.topo.nranks, &self.topo, self.params.n_dense);
+        let c = match self.replicate {
+            Replicate::Factor(c) => c,
+            Replicate::Auto => {
+                crate::plan::choose_replication(a, &part, self.strategy, &self.topo, &self.params)
+            }
+        };
+        assert!(
+            c > 0 && self.topo.nranks % c == 0,
+            "replication factor {c} must divide the rank count {}",
+            self.topo.nranks
+        );
+        if c > 1 {
+            // 1.5D path: plan at group granularity on the coarsened
+            // topology. The group boundaries are the rank boundaries
+            // coarsened, so per-pair covers nest inside the c=1 covers.
+            let gpart = part.coarsen(c);
+            let gblocks = split_1d(a, &gpart);
+            let gtopo = self.topo.coarsen(c);
+            let mut gparams = self.params.clone();
+            gparams.replicate = c;
+            let gplan = match (self.strategy, cache) {
+                (Strategy::Adaptive, Some(cache)) => {
+                    cache.get_or_compile(&gblocks, &gpart, &gtopo, &gparams).0
+                }
+                (Strategy::Adaptive, None) => {
+                    crate::plan::compile(&gblocks, &gpart, &gtopo, &gparams).plan
+                }
+                (s, _) => crate::comm::plan(&gblocks, &gpart, s, None),
+            };
+            let map = crate::topology::ReplicaMap::new(self.topo.nranks, c);
+            let rep = crate::hierarchy::build_replicated(&gplan, &map);
+            let prep_secs = t0.elapsed().as_secs_f64();
+            // No two-stage hierarchy: the replicated executor owns its
+            // allgather/reduce-scatter wiring (DESIGN.md §13).
+            return super::DistSpmm {
+                part: gpart,
+                blocks: gblocks,
+                plan: gplan,
+                sched: None,
+                rep: Some(rep),
+                topo: self.topo.clone(),
+                prep_secs,
+            };
+        }
         let blocks = split_1d(a, &part);
         let plan = match (self.strategy, cache) {
             (Strategy::Adaptive, Some(cache)) => {
@@ -314,7 +389,7 @@ impl PlanSpec {
         };
         let sched = self.hierarchical.then(|| crate::hierarchy::build(&plan, &self.topo));
         let prep_secs = t0.elapsed().as_secs_f64();
-        super::DistSpmm { part, blocks, plan, sched, topo: self.topo.clone(), prep_secs }
+        super::DistSpmm { part, blocks, plan, sched, rep: None, topo: self.topo.clone(), prep_secs }
     }
 }
 

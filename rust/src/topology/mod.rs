@@ -146,6 +146,87 @@ impl Topology {
         let len = members.len();
         members.start + src % len
     }
+
+    /// Group-level view of this topology under replication factor `c`
+    /// (`c` must divide `nranks`): one logical rank per replication group,
+    /// with the physical `group_size` shrunk by the same factor so the
+    /// cost model keeps pricing a flow between two replication groups at
+    /// the tier their home ranks actually use. Replication groups are
+    /// `c` *consecutive* ranks, so when `c` divides `group_size` they
+    /// nest inside nodes and a coarsened group pair is Inter exactly when
+    /// the underlying home pair is.
+    pub fn coarsen(&self, c: usize) -> Topology {
+        assert!(c > 0, "replication factor must be positive");
+        assert_eq!(
+            self.nranks % c,
+            0,
+            "replication factor {c} must divide nranks {}",
+            self.nranks
+        );
+        Topology {
+            name: self.name.clone(),
+            nranks: self.nranks / c,
+            group_size: (self.group_size / c).max(1),
+            ..self.clone()
+        }
+    }
+}
+
+/// Rank ↔ replication-group addressing for the 1.5D decomposition
+/// (ROADMAP item 3, SpComm3D's replication axis): `nranks` physical ranks
+/// are grouped into `nranks/c` groups of `c` *consecutive* ranks. Rank
+/// `g·c` is the group's **home** — it owns the group's A rows and B/C row
+/// ranges — and the other `c-1` members hold replicas of the group's A
+/// block and serve a share of the group's inter-group flows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReplicaMap {
+    pub nranks: usize,
+    /// Replication factor (`c ≥ 1`, divides `nranks`).
+    pub c: usize,
+}
+
+impl ReplicaMap {
+    pub fn new(nranks: usize, c: usize) -> ReplicaMap {
+        assert!(c > 0, "replication factor must be positive");
+        assert!(nranks > 0, "need at least one rank");
+        assert_eq!(nranks % c, 0, "replication factor {c} must divide nranks {nranks}");
+        ReplicaMap { nranks, c }
+    }
+
+    #[inline]
+    pub fn ngroups(&self) -> usize {
+        self.nranks / self.c
+    }
+
+    /// Replication group of rank `r`.
+    #[inline]
+    pub fn group_of(&self, r: usize) -> usize {
+        r / self.c
+    }
+
+    /// Member index of rank `r` inside its group (0 = home).
+    #[inline]
+    pub fn member_of(&self, r: usize) -> usize {
+        r % self.c
+    }
+
+    /// The home rank of group `g`.
+    #[inline]
+    pub fn home(&self, g: usize) -> usize {
+        g * self.c
+    }
+
+    /// Physical rank of member `t` of group `g`.
+    #[inline]
+    pub fn rank(&self, g: usize, t: usize) -> usize {
+        debug_assert!(t < self.c);
+        g * self.c + t
+    }
+
+    /// Ranks in group `g`.
+    pub fn members(&self, g: usize) -> std::ops::Range<usize> {
+        g * self.c..(g + 1) * self.c
+    }
 }
 
 #[cfg(test)]
@@ -193,6 +274,58 @@ mod tests {
         let reps: std::collections::HashSet<usize> =
             (0..4).map(|src| t.representative(1, src)).collect();
         assert_eq!(reps.len(), 4, "all members should serve as reps");
+    }
+
+    #[test]
+    fn replica_map_addressing() {
+        let m = ReplicaMap::new(8, 2);
+        assert_eq!(m.ngroups(), 4);
+        assert_eq!(m.group_of(5), 2);
+        assert_eq!(m.member_of(5), 1);
+        assert_eq!(m.home(2), 4);
+        assert_eq!(m.rank(3, 1), 7);
+        assert_eq!(m.members(1), 2..4);
+        for r in 0..8 {
+            assert_eq!(m.rank(m.group_of(r), m.member_of(r)), r);
+        }
+        let id = ReplicaMap::new(4, 1);
+        assert_eq!(id.ngroups(), 4);
+        for r in 0..4 {
+            assert_eq!(id.home(r), r);
+            assert_eq!(id.member_of(r), 0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn replica_map_rejects_nondivisor() {
+        let _ = ReplicaMap::new(6, 4);
+    }
+
+    #[test]
+    fn coarsened_topology_preserves_tiering() {
+        // c=2 on tsubame4 (group_size 4): replication groups nest inside
+        // nodes, so two coarse ranks are Inter exactly when their home
+        // ranks live on different nodes.
+        let t = Topology::tsubame4(16);
+        let ct = t.coarsen(2);
+        assert_eq!(ct.nranks, 8);
+        assert_eq!(ct.group_size, 2);
+        let m = ReplicaMap::new(16, 2);
+        for ga in 0..8 {
+            for gb in 0..8 {
+                assert_eq!(
+                    ct.tier(ga, gb),
+                    t.tier(m.home(ga), m.home(gb)),
+                    "coarse pair ({ga},{gb})"
+                );
+            }
+        }
+        // c larger than group_size degrades to one coarse rank per node
+        // bucket (group_size floor of 1) without panicking.
+        let big = t.coarsen(8);
+        assert_eq!(big.nranks, 2);
+        assert_eq!(big.group_size, 1);
     }
 
     #[test]

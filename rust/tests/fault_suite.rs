@@ -62,7 +62,7 @@ fn cold_dist(a: &Csr, starts: &[usize], strategy: Strategy, hier: bool) -> DistS
     let plan = comm::plan(&blocks, &part, strategy, None);
     let topo = Topology::tsubame4(part.nparts);
     let sched = hier.then(|| hierarchy::build(&plan, &topo));
-    DistSpmm { part, blocks, plan, sched, topo, prep_secs: 0.0 }
+    DistSpmm { part, blocks, plan, sched, rep: None, topo, prep_secs: 0.0 }
 }
 
 /// One recovered SpMM run: returns (C, report), asserting the report's

@@ -11,7 +11,7 @@ use shiro::exec::kernel::NativeKernel;
 use shiro::exec::ExecOpts;
 use shiro::partition::Partitioner;
 use shiro::sparse::{datasets::DATASETS, gen, Coo, Csr};
-use shiro::spmm::{DistSpmm, ExecRequest, PlanSpec};
+use shiro::spmm::{DistSpmm, ExecRequest, PlanSpec, Replicate};
 use shiro::topology::Topology;
 use shiro::util::rng::Rng;
 
@@ -196,6 +196,103 @@ fn determinism_across_partitioners() {
                     partitioner.name()
                 );
             }
+        }
+    }
+}
+
+#[test]
+fn replicated_bitwise_to_serial_across_strategies() {
+    // The 1.5D engine (DESIGN.md §13) on integer-exact inputs: every
+    // replication factor × strategy (Adaptive runs the per-pair compiler
+    // at group granularity) × overlap mode must reproduce the serial
+    // reference bit for bit — which also pins c>1 to the flat c=1 engine,
+    // since `determinism_across_partitioners` pins that to serial.
+    let a = int_matrix(256, 2048, 91);
+    let b = Dense::from_fn(256, 8, |i, j| ((i * 5 + j * 7) % 9) as f32 - 4.0);
+    let want = a.spmm(&b);
+    for strategy in [
+        Strategy::Column,
+        Strategy::Row,
+        Strategy::Joint(Solver::Koenig),
+        Strategy::Adaptive,
+    ] {
+        for c in [2usize, 4] {
+            let d = PlanSpec::new(Topology::tsubame4(8))
+                .strategy(strategy)
+                .n_dense(8)
+                .replicate(Replicate::Factor(c))
+                .plan(&a);
+            let rep = d.rep.as_ref().expect("c>1 plan must carry a RepSchedule");
+            assert_eq!(rep.map.c, c);
+            assert_eq!(rep.validate(&d.plan), Ok(()), "{strategy:?} c={c}");
+            assert!(d.sched.is_none(), "replicated plans own their two-level fold");
+            for overlap in [true, false] {
+                let opts = if overlap { ExecOpts::default() } else { ExecOpts::sequential() };
+                let got = spmm(&d, &b, &opts);
+                assert_eq!(
+                    got.data, want.data,
+                    "{strategy:?} c={c} overlap={overlap}: bits differ from serial"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn replicated_proc_matches_thread_bitwise() {
+    // The proc backend ships the group-level problem plus the RepSchedule
+    // over the wire (v5 blobs) and runs the same two-level fold per
+    // worker process, so C and the measured volume matrix must match the
+    // thread backend exactly.
+    use shiro::runtime::multiproc::ProcOpts;
+    use shiro::spmm::Backend;
+    use std::time::Duration;
+    let a = int_matrix(192, 1800, 17);
+    let b = Dense::from_fn(192, 6, |i, j| ((i * 3 + j * 11) % 7) as f32 - 3.0);
+    let want = a.spmm(&b);
+    for c in [2usize, 4] {
+        let d = PlanSpec::new(Topology::tsubame4(8))
+            .strategy(Strategy::Joint(Solver::Koenig))
+            .partitioner(Partitioner::NnzBalanced)
+            .n_dense(6)
+            .replicate(Replicate::Factor(c))
+            .plan(&a);
+        let (c_thread, s_thread) =
+            d.execute(&ExecRequest::spmm(&b)).expect("thread backend").into_dense();
+        let popts = ProcOpts {
+            timeout: Duration::from_secs(60),
+            worker_exe: Some(env!("CARGO_BIN_EXE_shiro").into()),
+            fault: None,
+            pool: None,
+        };
+        let (c_proc, s_proc) = d
+            .execute(&ExecRequest::spmm(&b).backend(Backend::Proc(popts)))
+            .unwrap_or_else(|f| panic!("c={c}: proc backend failed: {f}"))
+            .into_dense();
+        assert_eq!(c_thread.data, want.data, "c={c}: thread bits differ from serial");
+        assert_eq!(c_proc.data, c_thread.data, "c={c}: proc bits differ from thread");
+        assert_eq!(
+            s_thread.measured_volume(),
+            s_proc.measured_volume(),
+            "c={c}: measured volume differs across backends"
+        );
+    }
+}
+
+#[test]
+fn replicated_rejects_sddmm_family() {
+    // Replication wiring exists for SpMM only; the SDDMM family must
+    // surface a structured Unsupported error, not a wrong answer.
+    let a = int_matrix(128, 1200, 5);
+    let d = PlanSpec::new(Topology::tsubame4(8))
+        .replicate(Replicate::Factor(2))
+        .plan(&a);
+    let x = Dense::from_fn(128, 4, |i, j| ((i + j) % 5) as f32);
+    let y = Dense::from_fn(128, 4, |i, j| ((i * 2 + j) % 5) as f32);
+    for req in [ExecRequest::sddmm(&x, &y), ExecRequest::fused(&x, &y)] {
+        match d.execute(&req) {
+            Err(shiro::spmm::ExecError::Unsupported(_)) => {}
+            other => panic!("expected Unsupported, got {:?}", other.is_ok()),
         }
     }
 }

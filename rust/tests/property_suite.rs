@@ -13,7 +13,7 @@ use shiro::partition::{
     RowPartition,
 };
 use shiro::sparse::{gen, Csr};
-use shiro::spmm::{ExecRequest, PlanSpec};
+use shiro::spmm::{ExecRequest, PlanSpec, Replicate};
 use shiro::topology::Topology;
 use shiro::util::proptest::{forall, Gen};
 
@@ -624,6 +624,86 @@ fn prop_recovery_replan_is_valid_and_cost_bounded() {
              at starts {:?}",
             rec.starts
         );
+    });
+}
+
+#[test]
+fn prop_replicated_bitwise_and_volume_monotone() {
+    // The 1.5D contract (DESIGN.md §13), over random integer-exact inputs
+    // × partitioners × cover strategies: for every factor c dividing the
+    // rank count the replicated engine's bits equal the serial oracle's
+    // (integer inputs make f32 addition exact, so the canonical fold
+    // order turns the comparison into a bitwise pin rather than a
+    // tolerance) — and hence the flat c=1 engine's; the deal-out schedule
+    // validates against the group plan; and the modeled inter-group
+    // volume never increases with c, because the group partitions nest
+    // (coarsened boundaries), so per-pair covers merge and dedup.
+    forall("replicated-exec", 6, |g| {
+        let n = 1 << g.usize_in(5, 8); // 32..128
+        let a = shiro::bench::int_matrix(n, n * (3 + g.usize_in(0, 5)), g.rng().next_u64());
+        let ranks = 4 * (1 + g.usize_in(0, 3)); // 4..12, every c below divides
+        let n_dense = 1 + g.usize_in(0, 6);
+        let strategy = match g.usize_in(0, 3) {
+            0 => Strategy::Column,
+            1 => Strategy::Row,
+            _ => Strategy::Joint(Solver::Koenig),
+        };
+        let partitioner = Partitioner::ALL[g.usize_in(0, Partitioner::ALL.len())];
+        let b = Dense::from_fn(n, n_dense, |i, j| ((i * 7 + j * 3) % 9) as f32 - 4.0);
+        let want = a.spmm(&b);
+        let mut last_vol = None;
+        for c in [1usize, 2, 4] {
+            let d = PlanSpec::new(Topology::tsubame4(ranks))
+                .strategy(strategy)
+                .partitioner(partitioner)
+                .n_dense(n_dense)
+                .replicate(Replicate::Factor(c))
+                .plan(&a);
+            assert_eq!(d.rep.is_some(), c > 1);
+            if let Some(rep) = &d.rep {
+                assert_eq!(d.part.nparts, ranks / c);
+                assert_eq!(
+                    rep.validate(&d.plan),
+                    Ok(()),
+                    "c={c} {strategy:?}/{}",
+                    partitioner.name()
+                );
+            }
+            let (got, _) = d
+                .execute(&ExecRequest::spmm(&b).kernel(&NativeKernel))
+                .expect("thread-backend SpMM")
+                .into_dense();
+            assert_eq!(
+                got.data, want.data,
+                "c={c} {strategy:?}/{} ranks={ranks}: bits differ from serial",
+                partitioner.name()
+            );
+            let vol = d.plan.total_volume(n_dense);
+            if let Some(prev) = last_vol {
+                assert!(
+                    vol <= prev,
+                    "c={c} {strategy:?}/{}: inter-group volume grew {prev} -> {vol}",
+                    partitioner.name()
+                );
+            }
+            last_vol = Some(vol);
+        }
+        // `auto` must land on a divisor and still produce the same bits.
+        let d = PlanSpec::new(Topology::tsubame4(ranks))
+            .strategy(strategy)
+            .partitioner(partitioner)
+            .n_dense(n_dense)
+            .replicate(Replicate::Auto)
+            .plan(&a);
+        if let Some(rep) = &d.rep {
+            assert_eq!(ranks % rep.map.c, 0, "auto picked a non-divisor");
+            assert_eq!(rep.validate(&d.plan), Ok(()));
+        }
+        let (got, _) = d
+            .execute(&ExecRequest::spmm(&b).kernel(&NativeKernel))
+            .expect("thread-backend SpMM")
+            .into_dense();
+        assert_eq!(got.data, want.data, "auto: bits differ from serial");
     });
 }
 
